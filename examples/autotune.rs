@@ -1,0 +1,69 @@
+//! Per-layer algorithm exploration — the `cudnnFind` story of §2.1/§4.1.
+//!
+//! Ranks every algorithm on the paper's profiled configurations two
+//! ways: with the calibrated V100 model (what the paper's testbed would
+//! pick) and with real wall-clock of the Rust CPU substrate
+//! implementations (what this host picks). Then prints the per-layer
+//! plan for GoogleNet at batch 1 — the network where cuConv wins most.
+//!
+//! Run: `cargo run --release --example autotune`
+
+use cuconv::algo::{autotune, TimingSource};
+use cuconv::conv::ConvSpec;
+use cuconv::coordinator::plan_network;
+use cuconv::report::{fmt_speedup, fmt_us, Table};
+use cuconv::zoo::Network;
+
+fn main() {
+    let labels = ["7-1-1-256-832", "14-1-1-1024-256", "7-1-3-384-192", "7-1-5-128-48"];
+    for label in labels {
+        let spec = ConvSpec::from_table_label(label).unwrap();
+        let mut t = Table::new(
+            format!("autotune {label}"),
+            &["rank", "V100 model", "model us", "rank ", "CPU measured", "cpu us"],
+        );
+        let model = autotune(&spec, TimingSource::GpuModel, 1);
+        let cpu = autotune(&spec, TimingSource::CpuMeasured, 3);
+        let n = model.entries.len().max(cpu.entries.len());
+        for i in 0..n {
+            let (m_name, m_us) = model
+                .entries
+                .get(i)
+                .map(|e| (e.algo.name().to_string(), fmt_us(e.score_us)))
+                .unwrap_or_default();
+            let (c_name, c_us) = cpu
+                .entries
+                .get(i)
+                .map(|e| (e.algo.name().to_string(), fmt_us(e.score_us)))
+                .unwrap_or_default();
+            t.row(vec![(i + 1).to_string(), m_name, m_us, (i + 1).to_string(), c_name, c_us]);
+        }
+        print!("{}\n", t.render());
+    }
+
+    // The deployment story: per-layer plan for GoogleNet at batch 1.
+    let plan = plan_network(Network::GoogleNet, 1, TimingSource::GpuModel);
+    println!(
+        "GoogleNet @ batch 1: cuconv auto-selected on {}/{} conv layers; \
+         network-level conv speedup {}",
+        plan.cuconv_layers(),
+        plan.layers.len(),
+        fmt_speedup(plan.network_speedup())
+    );
+    let mut examples: Vec<_> = plan
+        .layers
+        .iter()
+        .filter(|l| l.chosen == cuconv::algo::Algorithm::CuConv)
+        .take(5)
+        .collect();
+    examples.sort_by(|a, b| b.speedup().partial_cmp(&a.speedup()).unwrap());
+    for l in examples {
+        println!(
+            "  {}  {}  {} -> {}",
+            l.layer,
+            l.spec.fig_label(),
+            fmt_us(l.baseline_us),
+            fmt_speedup(l.speedup())
+        );
+    }
+}

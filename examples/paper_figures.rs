@@ -1,0 +1,67 @@
+//! Regenerate every table and figure of the paper's evaluation in one
+//! run, writing text + CSV to `results/`.
+//!
+//! Run: `cargo run --release --example paper_figures [-- --measure]`
+//! (`--measure` additionally times our own AOT kernels through PJRT for
+//! Tables 3–5's "ours measured" column; needs `make artifacts`.)
+
+use cuconv::conv::FilterSize;
+use cuconv::report::{figures, tables, write_file};
+use cuconv::runtime::{default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let measure = std::env::args().any(|a| a == "--measure");
+    let out_dir = "results";
+    let mut all = String::new();
+
+    // Table 1 + Table 2.
+    for t in [tables::table1(), tables::table2()] {
+        println!("{}", t.render());
+        all.push_str(&t.render());
+        all.push('\n');
+    }
+    tables::table1().write_csv(format!("{out_dir}/table1.csv"))?;
+    tables::table2().write_csv(format!("{out_dir}/table2.csv"))?;
+
+    // Tables 3-5 (optionally with measured column).
+    let mut engine = if measure {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Engine::from_dir(&dir)?)
+        } else {
+            eprintln!("--measure requested but artifacts missing; model-only");
+            None
+        }
+    } else {
+        None
+    };
+    for no in [3u8, 4, 5] {
+        let t = tables::table_kernels(no, engine.as_mut(), 5);
+        println!("{}", t.render());
+        all.push_str(&t.render());
+        all.push('\n');
+        t.write_csv(format!("{out_dir}/table{no}.csv"))?;
+    }
+
+    // Figures 5-7.
+    for filter in [FilterSize::F1x1, FilterSize::F3x3, FilterSize::F5x5] {
+        let t = figures::figure_speedups(filter);
+        println!("{}", t.render());
+        all.push_str(&t.render());
+        all.push('\n');
+        t.write_csv(format!(
+            "{out_dir}/figure{}.csv",
+            figures::figure_number(filter)
+        ))?;
+    }
+
+    // §4.1 aggregates.
+    let agg = figures::aggregates_table();
+    println!("{}", agg.render());
+    all.push_str(&agg.render());
+    agg.write_csv(format!("{out_dir}/aggregates.csv"))?;
+
+    write_file(format!("{out_dir}/all_tables_and_figures.txt"), &all)?;
+    println!("wrote {out_dir}/ (CSV per table/figure + combined text)");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: one convolution through the whole stack.
+//!
+//! Loads the AOT-compiled cuConv Pallas kernel for the paper's headline
+//! configuration (7-32-832, the 2.29× speedup case), executes it via
+//! PJRT from Rust, and verifies the numerics against the pure-Rust
+//! oracle. Falls back to the CPU substrate when artifacts are missing.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use cuconv::algo::Algorithm;
+use cuconv::conv::ConvSpec;
+use cuconv::cpuref::{naive::conv_naive, CpuImpl};
+use cuconv::gpumodel;
+use cuconv::runtime::{default_artifact_dir, Engine};
+use cuconv::tensor::Tensor;
+use cuconv::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's maximum-speedup configuration: GoogleNet inception5a's
+    // 5x5-reduce, batch 1 (1x1 filters, 32 of them, depth 832).
+    let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+    println!("config {} ({})", spec.table_label(), spec);
+    println!("  direct FLOPs: {:.1} MFLOP", spec.flops() as f64 / 1e6);
+
+    // Random inputs; the Rust clear-loop oracle is our ground truth.
+    let mut rng = Rng::new(42);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let oracle = conv_naive(&spec, &input, &filters);
+
+    // 1) The AOT path: Pallas cuconv kernel -> HLO text -> PJRT.
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::from_dir(&dir)?;
+        if let Some(artifact) =
+            engine.manifest().find_conv("conv_7-1-1-32-832_cuconv").cloned()
+        {
+            let (out, timing) = engine.run_conv(&artifact, &input, &filters)?;
+            println!(
+                "PJRT cuconv kernel: rel_l2 vs oracle = {:.2e}, exec {:.2} ms",
+                out.rel_l2_error(&oracle),
+                timing.exec_seconds * 1e3
+            );
+            assert!(out.rel_l2_error(&oracle) < 5e-4);
+        } else {
+            println!("(headline artifact not in manifest; skipping PJRT run)");
+        }
+    } else {
+        println!("(artifacts not built; run `make artifacts` for the PJRT path)");
+    }
+
+    // 2) The CPU substrate: the same two-stage algorithm in Rust.
+    let out = CpuImpl::CuConvTwoStage.run(&spec, &input, &filters);
+    println!(
+        "CPU two-stage cuconv: rel_l2 vs oracle = {:.2e}",
+        out.rel_l2_error(&oracle)
+    );
+    assert!(out.rel_l2_error(&oracle) < 1e-5);
+
+    // 3) The analytical V100 model: what the paper's testbed would show.
+    let cu = gpumodel::predict(&spec, Algorithm::CuConv).unwrap();
+    let best = gpumodel::best_baseline(&spec).unwrap();
+    println!(
+        "V100 model: cuconv {:.1} us vs best baseline {} {:.1} us -> speedup {:.2}x \
+         (paper: 2.29x)",
+        cu.total_us(),
+        best.algo.name(),
+        best.total_us(),
+        gpumodel::speedup(&spec).unwrap()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end serving driver (the repository's flagship example).
+//!
+//! Boots the full stack on a real small workload and proves every layer
+//! composes: the AOT MiniSqueezeNet (Pallas cuConv kernels, weights
+//! baked at compile time) is loaded by the Rust coordinator and serves
+//! batched inference requests from concurrent clients. Reports
+//! latency/throughput at several offered loads — the numbers recorded
+//! in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_cnn`
+
+use std::time::{Duration, Instant};
+
+use cuconv::coordinator::{BatchPolicy, Server, ServerConfig};
+use cuconv::runtime::Manifest;
+use cuconv::util::rng::Rng;
+
+const CLIENT_THREADS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let dir = cuconv::runtime::default_artifact_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built; run `make artifacts`"
+    );
+    let manifest = Manifest::load(&dir)?;
+    let n_family = {
+        let family = manifest.model_family("minisqueezenet");
+        println!("model executables:");
+        for m in &family {
+            println!(
+                "  {} (batch {}, in {:?}, out {:?})",
+                m.name, m.batch, m.input_shape, m.output_shape
+            );
+        }
+        family.len()
+    };
+
+    let config = ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(4),
+            queue_capacity: 512,
+        },
+        ..ServerConfig::default()
+    };
+    let t0 = Instant::now();
+    let server = Server::start(manifest, config)?;
+    println!(
+        "server up in {:.2}s (compiled + validated {} executables)\n",
+        t0.elapsed().as_secs_f64(),
+        n_family
+    );
+
+    // Closed-loop load test at increasing request counts.
+    for &total in &[32usize, 128, 256] {
+        let h = server.handle();
+        let elems = h.image_elems();
+        let started = Instant::now();
+        let mut class_histogram = vec![0usize; h.classes()];
+        let counts = std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for t in 0..CLIENT_THREADS {
+                let h = h.clone();
+                let n = total / CLIENT_THREADS;
+                joins.push(s.spawn(move || {
+                    let mut rng = Rng::new(0xD00D + t as u64);
+                    let mut classes = vec![0usize; h.classes()];
+                    for _ in 0..n {
+                        let mut img = vec![0.0f32; elems];
+                        rng.fill_uniform(&mut img, -1.0, 1.0);
+                        let resp = h.infer(img).expect("infer");
+                        classes[resp.predicted_class()] += 1;
+                    }
+                    classes
+                }));
+            }
+            joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+        });
+        for c in counts {
+            for (i, v) in c.into_iter().enumerate() {
+                class_histogram[i] += v;
+            }
+        }
+        let wall = started.elapsed().as_secs_f64();
+        let m = server.metrics();
+        println!("== load: {total} requests, {CLIENT_THREADS} client threads ==");
+        println!(
+            "  wall {:.2}s  throughput {:.1} req/s  mean batch {:.2}",
+            wall,
+            total as f64 / wall,
+            m.mean_batch_size
+        );
+        println!(
+            "  latency mean {:.2} ms  p50<= {:.2} ms  p99<= {:.2} ms  max {:.2} ms",
+            m.total_mean * 1e3,
+            m.total_p50 * 1e3,
+            m.total_p99 * 1e3,
+            m.total_max * 1e3
+        );
+        println!("  predicted-class histogram: {class_histogram:?}\n");
+    }
+
+    let m = server.metrics();
+    println!(
+        "totals: {} requests in {} batches, {} rejected",
+        m.requests, m.batches, m.rejected
+    );
+    println!("serve_cnn OK");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""L1 kernel benchmark: every algorithm family on the paper's profiled
+configurations, timed under jit on this host's CPU backend, with the
+XLA-native convolution as the reference.
+
+This is the build-time profiling companion to the Rust-side measured
+columns (EXPERIMENTS.md §Perf L1). Interpret-mode Pallas wall-clock is
+not a TPU proxy; the orderings and the cuconv-vs-reference ratios are
+what matter.
+
+Run from python/:  python bench_kernels.py [--iters N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from compile import model as M
+from compile.kernels import cuconv, ref
+
+CONFIGS = [
+    "7-1-1-256-832",
+    "14-1-1-1024-256",
+    "27-1-1-256-64",
+    "7-1-3-384-192",
+    "13-1-3-384-384",
+    "7-1-5-128-48",
+    "7-8-5-128-48",
+]
+
+
+def parse(label):
+    hw, n, k, m, c = (int(p) for p in label.split("-"))
+    return hw, n, k, m, c
+
+
+def bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    for label in CONFIGS:
+        hw, n, k, m, c = parse(label)
+        x, f = ref.random_case(key, n, c, hw, hw, m, k, k)
+        rows = []
+        for name, fn in sorted(M.ALGORITHMS.items()):
+            if not M.algo_supports(name, k, k):
+                continue
+            jitted = jax.jit(lambda x, f, fn=fn: fn(x, f))
+            try:
+                t = bench(jitted, x, f, iters=args.iters)
+            except Exception as e:  # pragma: no cover - report and move on
+                print(f"  {name:22s} FAILED: {e}")
+                continue
+            rows.append((t, name))
+        rows.sort()
+        t_ref = next(t for t, name in rows if name == "reference")
+        print(f"\n== {label} ({2*n*hw*hw*m*c*k*k/1e6:.1f} MFLOP) ==")
+        for t, name in rows:
+            marker = " <- ours" if name == "cuconv" else ""
+            print(f"  {name:22s} {t*1e3:9.2f} ms   {t/t_ref:6.2f}x ref{marker}")
+        # VMEM schedule summary for the cuconv kernel.
+        est = cuconv.vmem_estimate_bytes(n, c, hw, hw, m, k, k)
+        print(f"  cuconv VMEM slabs: {est['total']/2**20:.2f} MiB "
+              f"(x {est['x_block']/2**20:.2f}, w {est['w_block']/2**20:.2f}, "
+              f"o {est['o_block']/2**20:.2f})")
+
+
+if __name__ == "__main__":
+    main()

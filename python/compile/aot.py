@@ -1,0 +1,204 @@
+"""AOT compilation: lower Layer-2 graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+serving path. For every artifact we emit:
+
+* ``artifacts/<name>.hlo.txt`` — HLO **text** (the interchange format:
+  jax ≥ 0.5 serialized HloModuleProtos carry 64-bit instruction ids that
+  xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+  /opt/xla-example/README.md and gen_hlo.py).
+* ``artifacts/manifest.json`` — machine-readable index the Rust runtime
+  loads: conv executables (spec + algorithm), model executables (batch,
+  shapes) and sample input/output pairs for end-to-end validation.
+
+Artifact inventory:
+
+* Per-config conv executables for the paper's profiled configurations
+  (Tables 3–5 A/B/C), the headline 7-32-832 config, and a small sanity
+  config — each lowered for every applicable algorithm. These are what
+  the Rust bench harness times to produce the "measured (ours)" columns
+  in EXPERIMENTS.md.
+* ``minisqueezenet_b{1,2,4,8}`` — the end-to-end serving model with
+  baked (deterministic) weights, one executable per supported batch size
+  (the coordinator's dynamic batcher picks among them).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned, 32-bit ok)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides constants as `constant({...})`, which the xla_extension
+    # 0.5.1 text parser silently fills with garbage — Winograd's
+    # transform matrices and the models' baked weights would be lost.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# The paper's profiled configurations (tables 3, 4 and 5), the headline
+# speedup config of Figure 5, and one small sanity config for fast tests.
+# Label format: [input HW]-[batch]-[filter K]-[#filters M]-[depth C].
+CONV_CONFIGS = [
+    "7-1-1-256-832",    # Table 3 A
+    "14-1-1-1024-256",  # Table 3 B
+    "27-1-1-256-64",    # Table 3 C
+    "7-1-3-384-192",    # Table 4 A
+    "13-1-3-384-384",   # Table 4 B
+    "7-1-5-128-48",     # Table 5 A
+    "7-8-5-128-48",     # Table 5 B
+    "7-1-1-32-832",     # Figure 5 headline (2.29x)
+    "8-2-3-16-32",      # sanity: small, fast, exercises 3x3 two-stage
+]
+
+# Algorithms lowered per config (winograd only for 3x3, per its
+# parameter limitation). "reference" is included for A/B validation.
+CONV_ALGOS = [
+    "cuconv",
+    "direct",
+    "gemm_explicit",
+    "gemm_implicit",
+    "gemm_implicit_precomp",
+    "winograd",
+    "winograd_nonfused",
+    "fft",
+    "fft_tiled",
+    "reference",
+]
+
+MODEL_BATCHES = [1, 2, 4, 8]
+WEIGHT_SEED = 20260710
+
+
+def parse_label(label: str):
+    hw, n, k, m, c = (int(p) for p in label.split("-"))
+    return hw, n, k, m, c
+
+
+def lower_conv(label: str, algo: str):
+    """Lower one (config, algorithm) pair; returns (hlo_text, meta)."""
+    hw, n, k, m, c = parse_label(label)
+    pad = (k - 1) // 2
+    x_spec = jax.ShapeDtypeStruct((n, c, hw, hw), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((m, c, k, k), jnp.float32)
+
+    def fn(x, w):
+        return (model_lib.conv_same(x, w, algo=algo),)
+
+    lowered = jax.jit(fn).lower(x_spec, w_spec)
+    meta = {
+        "name": f"conv_{label}_{algo}",
+        "file": f"conv_{label}_{algo}.hlo.txt",
+        "kind": "conv",
+        "algo": algo,
+        "label": label,
+        "spec": {
+            "n": n, "c": c, "h": hw, "w": hw, "m": m,
+            "kh": k, "kw": k, "stride": 1, "pad_h": pad, "pad_w": pad,
+        },
+        "input_shapes": [[n, c, hw, hw], [m, c, k, k]],
+        "output_shape": [n, m, hw, hw],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_model(batch: int, params: dict, out_dir: str):
+    """Lower MiniSqueezeNet with baked weights; emit sample I/O pair."""
+    hw = model_lib.MiniSqueezeNet.INPUT_HW
+    x_spec = jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32)
+
+    def fn(x):
+        return (model_lib.MiniSqueezeNet.forward(params, x, algo="cuconv"),)
+
+    lowered = jax.jit(fn).lower(x_spec)
+    hlo = to_hlo_text(lowered)
+
+    # Sample input/output for Rust-side end-to-end validation. Computed
+    # with the reference algorithm — an independent path from the lowered
+    # cuconv kernels.
+    key = jax.random.PRNGKey(1234 + batch)
+    sample_x = jax.random.uniform(key, (batch, 3, hw, hw), jnp.float32, -1.0, 1.0)
+    sample_y = model_lib.MiniSqueezeNet.forward(params, sample_x, algo="reference")
+    io_dir = os.path.join(out_dir, "io")
+    os.makedirs(io_dir, exist_ok=True)
+    xin = np.asarray(sample_x, np.float32)
+    yout = np.asarray(sample_y, np.float32)
+    xin.tofile(os.path.join(io_dir, f"minisqueezenet_b{batch}_input.bin"))
+    yout.tofile(os.path.join(io_dir, f"minisqueezenet_b{batch}_output.bin"))
+
+    meta = {
+        "name": f"minisqueezenet_b{batch}",
+        "file": f"minisqueezenet_b{batch}.hlo.txt",
+        "kind": "model",
+        "model": "minisqueezenet",
+        "batch": batch,
+        "input_shape": [batch, 3, hw, hw],
+        "output_shape": [batch, model_lib.MiniSqueezeNet.NUM_CLASSES],
+        "sample_input": f"io/minisqueezenet_b{batch}_input.bin",
+        "sample_output": f"io/minisqueezenet_b{batch}_output.bin",
+        "param_count": model_lib.MiniSqueezeNet.param_count(),
+    }
+    return hlo, meta
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--quick", action="store_true",
+        help="only the sanity config + batch-1 model (fast CI path)",
+    )
+    args = parser.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "convs": [], "models": []}
+    t0 = time.time()
+
+    configs = ["8-2-3-16-32"] if args.quick else CONV_CONFIGS
+    for label in configs:
+        _, _, k, _, _ = parse_label(label)
+        for algo in CONV_ALGOS:
+            if not model_lib.algo_supports(algo, k, k):
+                continue
+            hlo, meta = lower_conv(label, algo)
+            with open(os.path.join(out_dir, meta["file"]), "w") as f:
+                f.write(hlo)
+            manifest["convs"].append(meta)
+            print(f"[aot] {meta['name']:44s} {len(hlo)/1e3:8.1f} kB")
+
+    params = model_lib.MiniSqueezeNet.init_params(jax.random.PRNGKey(WEIGHT_SEED))
+    batches = [1] if args.quick else MODEL_BATCHES
+    for batch in batches:
+        hlo, meta = lower_model(batch, params, out_dir)
+        with open(os.path.join(out_dir, meta["file"]), "w") as f:
+            f.write(hlo)
+        manifest["models"].append(meta)
+        print(f"[aot] {meta['name']:44s} {len(hlo)/1e3:8.1f} kB")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(
+        f"[aot] wrote {len(manifest['convs'])} conv + "
+        f"{len(manifest['models'])} model artifacts in {time.time()-t0:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""The paper's two-stage convolution as Pallas kernels (Layer 1).
+
+Stage 1 (``scalar_prods_kernel``) computes, for every filter tap (ky,kx)
+— a "filter row" in the paper's §3 terminology, the depth-C vector of a
+filter at one spatial position — the channel dot-product of that row with
+the input row at every output position, producing the paper's
+``Kh·Kw`` partial-result planes of shape ``[N, M, OH, OW]``.
+
+Stage 2 (``sum_kernel``) reduces the ``Kh·Kw`` planes into the output.
+
+For 1×1 filters a fused single-stage kernel writes final outputs
+directly, exactly as the paper's 1×1 fast path skips ``sum_kernel``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernel stages a
+filter row in shared memory per thread block; here the BlockSpec pins the
+per-tap filter block ``[Mb, Cb]`` in VMEM while the grid walks the batch,
+and the per-tap channel contraction is expressed as a ``[Mb,Cb]×[Cb,OH·OW]``
+matmul that maps onto the MXU. Grid order places the batch axis innermost
+so the filter block is reused across all inputs — the paper's layer-level
+reuse. The channel axis is blocked (``cb`` grid axis) with revisited
+output blocks and a ``@pl.when(cb == 0)`` initialization, keeping the
+VMEM footprint bounded for depths up to 2048.
+
+All ``pallas_call``s use ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred block sizes. Blocks are multiples of the MXU's 128 lanes;
+# the *budgets* below are what actually bind: each VMEM-resident slab
+# (input Cb·Hp·Wp, weights Mb·Cb, output Mb·OH·OW, f32) must fit its
+# sub-budget of the ~16 MB/core VMEM. Perf note (EXPERIMENTS.md §Perf):
+# larger blocks mean fewer grid steps; raising the preferred caps from
+# (128, 256) to (512, 1024) cut the 13-1-3-384-384 kernel from 92.9 ms
+# to 28.6 ms on CPU-PJRT (3.2×) while keeping every slab within budget.
+M_BLOCK = 512
+C_BLOCK = 1024
+_X_BUDGET = 4 << 20  # bytes of VMEM for the input slab
+_W_BUDGET = 4 << 20  # bytes of VMEM for the filter-row slab
+_O_BUDGET = 4 << 20  # bytes of VMEM for the output slab
+
+
+def choose_blocks(m: int, c: int, hp: int, wp: int, oh: int, ow: int):
+    """Pick (Mb, Cb) so every VMEM-resident block fits its budget."""
+    cb = min(C_BLOCK, c, max(1, _X_BUDGET // (hp * wp * 4)))
+    mb = min(M_BLOCK, m, max(1, _O_BUDGET // (oh * ow * 4)))
+    # Weight slab couples the two: shrink Mb if Mb*Cb would blow it.
+    while mb > 1 and mb * cb * 4 > _W_BUDGET:
+        mb //= 2
+    return mb, cb
+
+
+def choose_blocks_batched(n: int, m: int, c: int, hp: int, wp: int,
+                          oh: int, ow: int):
+    """Block choice for the batch-fused stage 1: the input/output slabs
+    hold all N batch elements, so the budgets divide by N."""
+    cb = min(C_BLOCK, c, max(1, _X_BUDGET // (n * hp * wp * 4)))
+    mb = min(M_BLOCK, m, max(1, _O_BUDGET // (n * oh * ow * 4)))
+    while mb > 1 and mb * cb * 4 > _W_BUDGET:
+        mb //= 2
+    return mb, cb
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _scalar_prods_kernel(x_ref, w_ref, o_ref, *, kw: int, oh: int, ow: int):
+    """Stage-1 kernel body (batch-fused).
+
+    Grid: (tap, m_block, c_block); refs:
+      x_ref: [N, Cb, Hp, Wp]    padded input slab, whole batch
+      w_ref: [1, Mb, Cb]        filter rows for this tap / M- / C-block
+      o_ref: [1, N, Mb, OH, OW] partial planes (revisited across c_block)
+
+    The whole batch is contracted in one grid step — the "work-fusion
+    optimization" the paper's §6 proposes for configurations whose
+    per-(tap, m) work is small: it divides the number of grid steps by N
+    and turns the per-tap contraction into one large MXU matmul
+    [Mb,Cb] × [Cb, N·OH·OW].
+    """
+    tap = pl.program_id(0)
+    cb = pl.program_id(2)
+    ky = tap // kw
+    kx = tap % kw
+
+    x = x_ref[...]  # [N, Cb, Hp, Wp]
+    n, c_blk = x.shape[0], x.shape[1]
+    # The input rows that reuse this filter row: a shifted OHxOW window
+    # of every batch element.
+    patch = jax.lax.dynamic_slice(
+        x, (0, 0, ky, kx), (n, c_blk, oh, ow)
+    )  # [N, Cb, OH, OW]
+    patch = patch.transpose(1, 0, 2, 3).reshape(c_blk, n * oh * ow)
+    w = w_ref[0]  # [Mb, Cb]
+    # Channel contraction == matmul on the MXU.
+    prod = jnp.dot(w, patch)  # [Mb, N*OH*OW]
+    prod = prod.reshape(w.shape[0], n, oh, ow).transpose(1, 0, 2, 3)
+
+    @pl.when(cb == 0)
+    def _init():
+        o_ref[0] = prod
+
+    @pl.when(cb > 0)
+    def _accum():
+        o_ref[0] += prod
+
+
+def scalar_prods(x, w, *, pad_h: int, pad_w: int):
+    """Stage 1: per-tap channel contractions.
+
+    Args:
+      x: ``[N, C, H, W]`` input.
+      w: ``[M, C, Kh, Kw]`` filters.
+
+    Returns:
+      ``[Kh*Kw, N, M, OH, OW]`` partial-result planes (stride 1).
+    """
+    n, c, h, width = x.shape
+    m, c2, kh, kw = w.shape
+    assert c == c2
+    oh = h + 2 * pad_h - kh + 1
+    ow = width + 2 * pad_w - kw + 1
+    taps = kh * kw
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad_h, pad_h), (pad_w, pad_w)))
+    hp, wp = h + 2 * pad_h, width + 2 * pad_w
+
+    mb, cb = choose_blocks_batched(n, m, c, hp, wp, oh, ow)
+    m_blocks = _ceil_div(m, mb)
+    c_blocks = _ceil_div(c, cb)
+    # Pad M/C up to block multiples so the grid tiles exactly.
+    m_pad = m_blocks * mb - m
+    c_pad = c_blocks * cb - c
+    if c_pad:
+        xp = jnp.pad(xp, ((0, 0), (0, c_pad), (0, 0), (0, 0)))
+    wt = w.transpose(2, 3, 0, 1).reshape(taps, m, c)  # [T, M, C]
+    if m_pad or c_pad:
+        wt = jnp.pad(wt, ((0, 0), (0, m_pad), (0, c_pad)))
+
+    kernel = functools.partial(_scalar_prods_kernel, kw=kw, oh=oh, ow=ow)
+    temp = pl.pallas_call(
+        kernel,
+        grid=(taps, m_blocks, c_blocks),
+        in_specs=[
+            # Whole padded batch, one C-block (batch-fused; §6 work
+            # fusion — see _scalar_prods_kernel).
+            pl.BlockSpec((n, cb, hp, wp), lambda t, mi, ci: (0, ci, 0, 0)),
+            # One tap's filter rows for this (M, C) block — staged once
+            # and reused by every input, the paper's layer-level reuse.
+            pl.BlockSpec((1, mb, cb), lambda t, mi, ci: (t, mi, ci)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, n, mb, oh, ow), lambda t, mi, ci: (t, 0, mi, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((taps, n, m_blocks * mb, oh, ow), x.dtype),
+        interpret=True,
+    )(xp, wt)
+    return temp[:, :, :m]
+
+
+def _sum_kernel(t_ref, o_ref):
+    """Stage-2 kernel body: reduce the tap axis.
+
+    Grid: (n, m_block); refs:
+      t_ref: [T, 1, Mb, OH, OW]
+      o_ref: [1, Mb, OH, OW]
+    """
+    o_ref[0] = jnp.sum(t_ref[:, 0], axis=0)
+
+
+def sum_taps(temp):
+    """Stage 2: ``[T, N, M, OH, OW]`` → ``[N, M, OH, OW]``."""
+    taps, n, m, oh, ow = temp.shape
+    mb = min(M_BLOCK, m)
+    m_blocks = _ceil_div(m, mb)
+    m_pad = m_blocks * mb - m
+    if m_pad:
+        temp = jnp.pad(temp, ((0, 0), (0, 0), (0, m_pad), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _sum_kernel,
+        grid=(n, m_blocks),
+        in_specs=[
+            pl.BlockSpec((taps, 1, mb, oh, ow), lambda ni, mi: (0, ni, mi, 0, 0))
+        ],
+        out_specs=pl.BlockSpec((1, mb, oh, ow), lambda ni, mi: (ni, mi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m_blocks * mb, oh, ow), temp.dtype),
+        interpret=True,
+    )(temp)
+    return out[:, :m]
+
+
+def _conv1x1_kernel(x_ref, w_ref, o_ref):
+    """Fused 1×1 kernel body (no stage 2, as in the paper's fast path;
+    batch-fused like stage 1).
+
+    Grid: (m_block, c_block); refs:
+      x_ref: [N, Cb, H, W]
+      w_ref: [Mb, Cb]
+      o_ref: [N, Mb, H, W]  (revisited across c_block)
+    """
+    cb = pl.program_id(1)
+    x = x_ref[...]
+    n, c_blk, h, wd = x.shape
+    patch = x.transpose(1, 0, 2, 3).reshape(c_blk, n * h * wd)
+    prod = jnp.dot(w_ref[...], patch)
+    prod = prod.reshape(w_ref.shape[0], n, h, wd).transpose(1, 0, 2, 3)
+
+    @pl.when(cb == 0)
+    def _init():
+        o_ref[...] = prod
+
+    @pl.when(cb > 0)
+    def _accum():
+        o_ref[...] += prod
+
+
+def conv1x1(x, w):
+    """Fused 1×1 convolution: stage 1 writes final outputs directly."""
+    n, c, h, width = x.shape
+    m, c2, kh, kw = w.shape
+    assert (kh, kw) == (1, 1) and c == c2
+    mb, cb = choose_blocks_batched(n, m, c, h, width, h, width)
+    m_blocks = _ceil_div(m, mb)
+    c_blocks = _ceil_div(c, cb)
+    m_pad = m_blocks * mb - m
+    c_pad = c_blocks * cb - c
+    xp = jnp.pad(x, ((0, 0), (0, c_pad), (0, 0), (0, 0))) if c_pad else x
+    wm = w.reshape(m, c)
+    if m_pad or c_pad:
+        wm = jnp.pad(wm, ((0, m_pad), (0, c_pad)))
+    out = pl.pallas_call(
+        _conv1x1_kernel,
+        grid=(m_blocks, c_blocks),
+        in_specs=[
+            pl.BlockSpec((n, cb, h, width), lambda mi, ci: (0, ci, 0, 0)),
+            pl.BlockSpec((mb, cb), lambda mi, ci: (mi, ci)),
+        ],
+        out_specs=pl.BlockSpec((n, mb, h, width), lambda mi, ci: (0, mi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m_blocks * mb, h, width), x.dtype),
+        interpret=True,
+    )(xp, wm)
+    return out[:, :m]
+
+
+def conv_cuconv(x, w, *, pad_h: int | None = None, pad_w: int | None = None):
+    """The full cuConv algorithm (stride 1).
+
+    Padding defaults to the paper's "same" convention ``(K-1)/2``.
+    """
+    _, _, kh, kw = w.shape
+    if pad_h is None:
+        pad_h = (kh - 1) // 2
+    if pad_w is None:
+        pad_w = (kw - 1) // 2
+    if (kh, kw) == (1, 1):
+        assert pad_h == 0 and pad_w == 0, "1x1 same-conv has no padding"
+        return conv1x1(x, w)
+    temp = scalar_prods(x, w, pad_h=pad_h, pad_w=pad_w)
+    return sum_taps(temp)
+
+
+def vmem_estimate_bytes(n, c, h, w, m, kh, kw, pad_h=None, pad_w=None):
+    """Static VMEM footprint estimate of the stage-1 kernel blocks.
+
+    Used by the perf analysis (EXPERIMENTS.md §Perf) — interpret-mode
+    wallclock is not a TPU proxy, so kernels are judged on their memory
+    schedule instead.
+    """
+    del n
+    if pad_h is None:
+        pad_h = (kh - 1) // 2
+    if pad_w is None:
+        pad_w = (kw - 1) // 2
+    hp, wp = h + 2 * pad_h, w + 2 * pad_w
+    oh, ow = hp - kh + 1, wp - kw + 1
+    mb, cb = choose_blocks(m, c, hp, wp, oh, ow)
+    x_block = cb * hp * wp * 4
+    w_block = mb * cb * 4
+    o_block = mb * oh * ow * 4
+    return {
+        "x_block": x_block,
+        "w_block": w_block,
+        "o_block": o_block,
+        "total": x_block + w_block + o_block,
+    }

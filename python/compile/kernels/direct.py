@@ -1,0 +1,71 @@
+"""Naive direct-convolution Pallas kernel — the "apply the formula"
+baseline of the paper's §2.3.
+
+One grid step per (batch element, M-block); the kernel walks the filter
+taps in a static Python loop, accumulating the full channel contraction
+per tap. No staging/blocking finesse — this is the baseline the two-stage
+cuConv kernel is measured against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_BLOCK = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _direct_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, oh: int, ow: int):
+    """Grid: (n, m_block). Refs:
+    x_ref: [1, C, Hp, Wp]; w_ref: [Mb, C, Kh, Kw]; o_ref: [1, Mb, OH, OW].
+    """
+    x = x_ref[0]  # [C, Hp, Wp]
+    c = x.shape[0]
+    mb = w_ref.shape[0]
+    acc = jnp.zeros((mb, oh * ow), x.dtype)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + oh, kx : kx + ow].reshape(c, oh * ow)
+            acc = acc + jnp.dot(w_ref[:, :, ky, kx], patch)
+    o_ref[0] = acc.reshape(mb, oh, ow)
+
+
+def conv_direct(x, w, *, pad_h: int | None = None, pad_w: int | None = None):
+    """Direct convolution (stride 1), padding defaults to "same"."""
+    n, c, h, width = x.shape
+    m, c2, kh, kw = w.shape
+    assert c == c2
+    if pad_h is None:
+        pad_h = (kh - 1) // 2
+    if pad_w is None:
+        pad_w = (kw - 1) // 2
+    oh = h + 2 * pad_h - kh + 1
+    ow = width + 2 * pad_w - kw + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad_h, pad_h), (pad_w, pad_w)))
+    hp, wp = h + 2 * pad_h, width + 2 * pad_w
+
+    mb = min(M_BLOCK, m)
+    m_blocks = _ceil_div(m, mb)
+    m_pad = m_blocks * mb - m
+    wf = jnp.pad(w, ((0, m_pad), (0, 0), (0, 0), (0, 0))) if m_pad else w
+
+    kernel = functools.partial(_direct_kernel, kh=kh, kw=kw, oh=oh, ow=ow)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, m_blocks),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda ni, mi: (ni, 0, 0, 0)),
+            pl.BlockSpec((mb, c, kh, kw), lambda ni, mi: (mi, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, mb, oh, ow), lambda ni, mi: (ni, mi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m_blocks * mb, oh, ow), x.dtype),
+        interpret=True,
+    )(xp, wf)
+    return out[:, :m]

@@ -1,0 +1,65 @@
+"""FFT-based convolution (the cuDNN "FFT" variants of Table 2).
+
+Convolution in the spatial domain is point-wise multiplication in the
+frequency domain; CNN convolution is cross-correlation, so the filter
+spectrum is conjugated. Transform costs are amortized across the layer:
+each input plane's FFT is reused by all M filters, each filter plane's by
+all N inputs (§2.3.3) — which is why this family only wins for large N·M.
+
+FFT primitives do not exist in Pallas; this algorithm lives at Layer 2
+(jnp.fft), and its pointwise-multiply-accumulate stage is a plain einsum
+that XLA fuses. Two variants:
+
+* :func:`conv_fft` — whole-plane transforms.
+* :func:`conv_fft_tiled` — processes the batch in tiles to bound the
+  spectral workspace, mirroring cuDNN's FFT-tiled variant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _fft_size(v: int) -> int:
+    return 1 << (v - 1).bit_length()
+
+
+def conv_fft(x, w, *, pad_h: int | None = None, pad_w: int | None = None):
+    """FFT convolution (stride 1, any filter size)."""
+    n, c, h, width = x.shape
+    m, c2, kh, kw = w.shape
+    assert c == c2
+    if pad_h is None:
+        pad_h = (kh - 1) // 2
+    if pad_w is None:
+        pad_w = (kw - 1) // 2
+    oh = h + 2 * pad_h - kh + 1
+    ow = width + 2 * pad_w - kw + 1
+    sh = _fft_size(h + kh - 1)
+    sw = _fft_size(width + kw - 1)
+
+    xf = jnp.fft.rfft2(x, s=(sh, sw))  # [N, C, sh, sw//2+1]
+    wf = jnp.fft.rfft2(w, s=(sh, sw))  # [M, C, sh, sw//2+1]
+    # Cross-correlation: multiply by conj of the filter spectrum and
+    # reduce channels — the amortized pointwise stage.
+    of = jnp.einsum("nchw,mchw->nmhw", xf, jnp.conj(wf))
+    out_full = jnp.fft.irfft2(of, s=(sh, sw))  # [N, M, sh, sw]
+    # out(oy,ox) = corr(oy - pad_h, ox - pad_w), circular indexing.
+    ys = (jnp.arange(oh) - pad_h) % sh
+    xs = (jnp.arange(ow) - pad_w) % sw
+    return out_full[:, :, ys][:, :, :, xs]
+
+
+def conv_fft_tiled(x, w, *, pad_h: int | None = None, pad_w: int | None = None,
+                   batch_tile: int = 4):
+    """FFT convolution processing the batch in tiles of ``batch_tile``.
+
+    Bounds the temporary spectral storage to
+    ``batch_tile·(C+M)·S²`` complex values per tile, the same trade the
+    cuDNN FFT-tiled variant makes against the baseline FFT.
+    """
+    n = x.shape[0]
+    outs = []
+    for i in range(0, n, batch_tile):
+        outs.append(conv_fft(x[i : i + batch_tile], w, pad_h=pad_h, pad_w=pad_w))
+    return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]

@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for every convolution kernel.
+
+Two independent references:
+
+* :func:`conv_ref` — ``jax.lax.conv_general_dilated`` with NCHW dimension
+  numbers (XLA's own convolution; the primary oracle).
+* :func:`conv_direct_jnp` — a from-scratch jnp implementation of the
+  convolution formula, used to cross-check the oracle itself.
+
+All kernels in this package are validated against these in
+``python/tests/``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_ref(x, w, *, stride: int = 1, pad_h: int = 0, pad_w: int = 0):
+    """Forward convolution oracle.
+
+    Args:
+      x: input tensor ``[N, C, H, W]``.
+      w: filters ``[M, C, Kh, Kw]``.
+      stride: spatial stride (same in both dims, as in the paper).
+      pad_h / pad_w: zero padding per side.
+
+    Returns:
+      ``[N, M, OH, OW]``.
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad_h, pad_h), (pad_w, pad_w)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv_direct_jnp(x, w, *, stride: int = 1, pad_h: int = 0, pad_w: int = 0):
+    """Independent direct implementation (no lax.conv): explicit tap sum.
+
+    out[n,m,oy,ox] = sum_{c,ky,kx} x_pad[n,c,oy*s+ky,ox*s+kx] * w[m,c,ky,kx]
+    """
+    n, c, h, width = x.shape
+    m, c2, kh, kw = w.shape
+    assert c == c2, f"depth mismatch {c} vs {c2}"
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad_h, pad_h), (pad_w, pad_w)))
+    oh = (h + 2 * pad_h - kh) // stride + 1
+    ow = (width + 2 * pad_w - kw) // stride + 1
+    out = jnp.zeros((n, m, oh, ow), x.dtype)
+    for ky in range(kh):
+        for kx in range(kw):
+            # Strided patch of shape [N, C, OH, OW] for this tap.
+            patch = xp[
+                :, :, ky : ky + (oh - 1) * stride + 1 : stride,
+                kx : kx + (ow - 1) * stride + 1 : stride,
+            ]
+            # Contract channels against the tap's filter row [M, C].
+            out = out + jnp.einsum("nchw,mc->nmhw", patch, w[:, :, ky, kx])
+    return out
+
+
+def out_hw(h: int, w: int, kh: int, kw: int, stride: int, pad_h: int, pad_w: int):
+    """Output spatial dims (mirrors rust ConvSpec::out_h/out_w)."""
+    return (
+        (h + 2 * pad_h - kh) // stride + 1,
+        (w + 2 * pad_w - kw) // stride + 1,
+    )
+
+
+def same_padding(kh: int, kw: int):
+    """The paper's padding convention: (Wf-1)/2 per side."""
+    return (kh - 1) // 2, (kw - 1) // 2
+
+
+def random_case(key, n, c, h, w, m, kh, kw):
+    """Deterministic random (input, filters) pair for tests."""
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (n, c, h, w), jnp.float32, -1.0, 1.0)
+    f = jax.random.uniform(k2, (m, c, kh, kw), jnp.float32, -1.0, 1.0)
+    return x, f

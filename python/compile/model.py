@@ -1,0 +1,163 @@
+"""Layer 2: JAX compute graphs calling the Layer-1 kernels.
+
+* :data:`ALGORITHMS` — the algorithm registry on the Python side (the
+  Rust side mirrors it in ``rust/src/algo``); every entry is a drop-in
+  ``conv(x, w) -> y`` for stride-1 same-padded convolution.
+* :func:`conv_layer` — conv + bias + ReLU, the unit the five CNNs of the
+  paper's Table 1 are built from.
+* :class:`MiniSqueezeNet` — a small SqueezeNet-style CNN classifier (fire
+  modules with 1×1 squeeze / 1×1+3×3 expand — the exact layer mix the
+  paper's evaluation says cuConv is best at). This is the end-to-end
+  serving model: AOT-lowered with baked weights, loaded by the Rust
+  coordinator, and driven by ``examples/serve_cnn.rs``.
+
+Everything here is build-time only; nothing imports this at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import cuconv, direct, fft_conv, gemm_conv, ref, winograd
+
+# Algorithm registry: name -> conv(x, w) (stride-1, same padding).
+ALGORITHMS: dict[str, Callable] = {
+    "cuconv": cuconv.conv_cuconv,
+    "direct": direct.conv_direct,
+    "gemm_explicit": gemm_conv.conv_gemm_explicit,
+    "gemm_implicit": gemm_conv.conv_gemm_implicit,
+    "gemm_implicit_precomp": gemm_conv.conv_gemm_implicit_precomp,
+    "winograd": winograd.conv_winograd,
+    "winograd_nonfused": winograd.conv_winograd_nonfused,
+    "fft": fft_conv.conv_fft,
+    "fft_tiled": fft_conv.conv_fft_tiled,
+    # The oracle, also exposed as the "reference" algorithm so model
+    # artifacts can be produced with XLA's own convolution for A/B tests.
+    "reference": lambda x, w: ref.conv_ref(
+        x, w, pad_h=(w.shape[2] - 1) // 2, pad_w=(w.shape[3] - 1) // 2
+    ),
+}
+
+
+def algo_supports(name: str, kh: int, kw: int) -> bool:
+    """Parameter limitations per algorithm (cf. the cuDNN limitations the
+    paper works around by running all variants)."""
+    if name.startswith("winograd"):
+        return (kh, kw) == (3, 3)
+    return True
+
+
+def conv_layer(x, w, b, *, algo: str = "cuconv"):
+    """Convolution + bias + ReLU (stride 1, same padding)."""
+    y = ALGORITHMS[algo](x, w)
+    return jax.nn.relu(y + b[None, :, None, None])
+
+
+def max_pool_2x2(x):
+    """2×2 max pooling, stride 2 (NCHW)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def global_avg_pool(x):
+    """Global average pool over H and W: ``[N,C,H,W]`` → ``[N,C]``."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+# ------------------------------------------------------------- the model
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """One conv layer's weight geometry."""
+
+    name: str
+    m: int
+    c: int
+    k: int
+
+
+class MiniSqueezeNet:
+    """SqueezeNet-style classifier for 32×32 RGB inputs, 10 classes.
+
+    Architecture (all convs stride 1, same padded):
+
+    ```
+    conv1   3×3×16   → relu → maxpool2   (32→16)
+    fire1:  squeeze 1×1×8 → expand 1×1×16 ‖ 3×3×16 (concat 32)
+            → maxpool2                     (16→8)
+    fire2:  squeeze 1×1×16 → expand 1×1×32 ‖ 3×3×32 (concat 64)
+    conv10  1×1×10  → global average pool → logits
+    ```
+
+    ~8.3k parameters — deliberately small so interpret-mode Pallas
+    artifacts serve batched requests at interactive latency on CPU while
+    still exercising every kernel path (1×1 fused, 3×3 two-stage).
+    """
+
+    NUM_CLASSES = 10
+    INPUT_HW = 32
+
+    SHAPES = [
+        ConvShape("conv1", 16, 3, 3),
+        ConvShape("fire1_squeeze", 8, 16, 1),
+        ConvShape("fire1_expand1", 16, 8, 1),
+        ConvShape("fire1_expand3", 16, 8, 3),
+        ConvShape("fire2_squeeze", 16, 32, 1),
+        ConvShape("fire2_expand1", 32, 16, 1),
+        ConvShape("fire2_expand3", 32, 16, 3),
+        ConvShape("conv10", 10, 64, 1),
+    ]
+
+    @classmethod
+    def init_params(cls, key) -> dict:
+        """He-initialized weights, deterministic in ``key``."""
+        params = {}
+        for shape in cls.SHAPES:
+            key, k1 = jax.random.split(key)
+            fan_in = shape.c * shape.k * shape.k
+            std = (2.0 / fan_in) ** 0.5
+            params[shape.name + "_w"] = (
+                jax.random.normal(k1, (shape.m, shape.c, shape.k, shape.k)) * std
+            ).astype(jnp.float32)
+            params[shape.name + "_b"] = jnp.zeros((shape.m,), jnp.float32)
+        return params
+
+    @classmethod
+    def forward(cls, params: dict, x, *, algo: str = "cuconv"):
+        """``[N,3,32,32]`` → ``[N,10]`` logits."""
+
+        def conv(name, x, a=algo):
+            if not algo_supports(a, *params[name + "_w"].shape[2:]):
+                a = "cuconv"
+            return conv_layer(x, params[name + "_w"], params[name + "_b"], algo=a)
+
+        x = conv("conv1", x)
+        x = max_pool_2x2(x)  # 16x16x16
+        s = conv("fire1_squeeze", x)
+        x = jnp.concatenate([conv("fire1_expand1", s), conv("fire1_expand3", s)], axis=1)
+        x = max_pool_2x2(x)  # 8x8x32
+        s = conv("fire2_squeeze", x)
+        x = jnp.concatenate([conv("fire2_expand1", s), conv("fire2_expand3", s)], axis=1)
+        # conv10 + global average pooling (logits, no ReLU on the head).
+        y = ALGORITHMS["cuconv" if algo.startswith("winograd") else algo](
+            x, params["conv10_w"]
+        )
+        y = y + params["conv10_b"][None, :, None, None]
+        return global_avg_pool(y)
+
+    @classmethod
+    def param_count(cls) -> int:
+        return sum(s.m * s.c * s.k * s.k + s.m for s in cls.SHAPES)
+
+
+def conv_same(x, w, *, algo: str):
+    """Bare stride-1 same-padded convolution by algorithm name (the
+    function AOT-lowered for every per-config artifact)."""
+    return ALGORITHMS[algo](x, w)

@@ -1,0 +1,77 @@
+"""AOT pipeline tests: HLO-text emission and the manifest contract the
+Rust runtime depends on."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model as M
+
+
+def test_parse_label_roundtrip():
+    assert aot.parse_label("7-1-1-256-832") == (7, 1, 1, 256, 832)
+
+
+def test_lower_conv_emits_parseable_hlo_text():
+    hlo, meta = aot.lower_conv("8-2-3-16-32", "cuconv")
+    # HLO text, not proto bytes.
+    assert hlo.startswith("HloModule"), hlo[:60]
+    assert "ENTRY" in hlo
+    assert meta["input_shapes"] == [[2, 32, 8, 8], [16, 32, 3, 3]]
+    assert meta["output_shape"] == [2, 16, 8, 8]
+
+
+def test_lower_conv_reference_is_single_convolution():
+    hlo, _ = aot.lower_conv("8-2-3-16-32", "reference")
+    assert "convolution" in hlo
+
+
+def test_winograd_excluded_for_non_3x3():
+    assert not M.algo_supports("winograd", 1, 1)
+    assert not M.algo_supports("winograd", 5, 5)
+    # aot's loop must therefore never produce winograd 1x1 artifacts.
+    labels_1x1 = [l for l in aot.CONV_CONFIGS if l.split("-")[2] == "1"]
+    assert labels_1x1, "config list must contain 1x1 configs"
+
+
+def test_lower_model_meta_contract():
+    params = M.MiniSqueezeNet.init_params(jax.random.PRNGKey(aot.WEIGHT_SEED))
+    hlo, meta = aot.lower_model(1, params, out_dir="/tmp/aot_test_out")
+    assert hlo.startswith("HloModule")
+    assert meta["input_shape"] == [1, 3, 32, 32]
+    assert meta["output_shape"] == [1, 10]
+    assert os.path.exists(
+        os.path.join("/tmp/aot_test_out", meta["sample_input"])
+    )
+    assert os.path.exists(
+        os.path.join("/tmp/aot_test_out", meta["sample_output"])
+    )
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    for conv in manifest["convs"]:
+        assert os.path.exists(os.path.join(root, conv["file"])), conv["name"]
+        spec = conv["spec"]
+        assert spec["h"] == spec["w"]
+        assert spec["stride"] == 1
+    names = [c["name"] for c in manifest["convs"]]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for model in manifest["models"]:
+        assert os.path.exists(os.path.join(root, model["file"]))
+        assert os.path.exists(os.path.join(root, model["sample_input"]))
+        assert os.path.exists(os.path.join(root, model["sample_output"]))
+        n_in = 1
+        for d in model["input_shape"]:
+            n_in *= d
+        size = os.path.getsize(os.path.join(root, model["sample_input"]))
+        assert size == 4 * n_in, "sample input must be raw f32"

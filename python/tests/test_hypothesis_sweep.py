@@ -1,0 +1,111 @@
+"""Property-based shape/dtype sweeps of the Pallas kernels (hypothesis).
+
+The paper's evaluation spans H ∈ [7, 224], C ∈ [3, 2048], M ∈ [16, 2048],
+K ∈ {1, 3, 5}. Hypothesis explores a scaled-down version of that space
+(interpret-mode Pallas is CPU-bound) plus the adversarial corners:
+non-square inputs, dims straddling the kernel block sizes, batch > 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cuconv, direct, gemm_conv, ref, winograd
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+def run_case(n, c, h, w, m, k, fn, seed):
+    key = jax.random.PRNGKey(seed)
+    x, f = ref.random_case(key, n, c, h, w, m, k, k)
+    ph, pw = ref.same_padding(k, k)
+    want = ref.conv_ref(x, f, pad_h=ph, pad_w=pw)
+    got = fn(x, f)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4
+    )
+
+
+@settings(**COMMON)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 40),
+    h=st.integers(3, 14),
+    w=st.integers(3, 14),
+    m=st.integers(1, 40),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cuconv_shape_sweep(n, c, h, w, m, k, seed):
+    if h < k or w < k:
+        h, w = max(h, k), max(w, k)
+    run_case(n, c, h, w, m, k, cuconv.conv_cuconv, seed)
+
+
+@settings(**COMMON)
+@given(
+    c=st.integers(1, 24),
+    hw=st.integers(5, 12),
+    m=st.integers(1, 24),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_direct_shape_sweep(c, hw, m, k, seed):
+    run_case(1, c, hw, hw, m, k, direct.conv_direct, seed)
+
+
+@settings(**COMMON)
+@given(
+    c=st.integers(1, 24),
+    hw=st.integers(5, 12),
+    m=st.integers(1, 24),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_implicit_shape_sweep(c, hw, m, k, seed):
+    run_case(1, c, hw, hw, m, k, gemm_conv.conv_gemm_implicit, seed)
+
+
+@settings(**COMMON)
+@given(
+    c=st.integers(1, 16),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_winograd_shape_sweep(c, h, w, m, seed):
+    run_case(1, c, h, w, m, 3, winograd.conv_winograd, seed)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    c=st.integers(120, 280),
+    m=st.integers(120, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cuconv_block_boundaries(c, m, seed):
+    """Depths/filter-counts straddling C_BLOCK/M_BLOCK multiples."""
+    run_case(1, c, 7, 7, m, 1, cuconv.conv_cuconv, seed)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cuconv_dtype_sweep(dtype, k, seed):
+    """bfloat16 inputs (the MXU-native dtype) keep shape and tolerance."""
+    key = jax.random.PRNGKey(seed)
+    x, f = ref.random_case(key, 1, 8, 8, 8, 6, k, k)
+    x, f = x.astype(dtype), f.astype(dtype)
+    ph, pw = ref.same_padding(k, k)
+    want = ref.conv_ref(
+        x.astype(jnp.float32), f.astype(jnp.float32), pad_h=ph, pad_w=pw
+    )
+    got = cuconv.conv_cuconv(x, f).astype(jnp.float32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)

@@ -1,0 +1,145 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas/JAX kernel is checked against the lax.conv oracle across the
+filter sizes, depths and batch sizes the paper's evaluation sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import cuconv, direct, fft_conv, gemm_conv, ref, winograd
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+ALGOS = {
+    "cuconv": cuconv.conv_cuconv,
+    "direct": direct.conv_direct,
+    "gemm_explicit": gemm_conv.conv_gemm_explicit,
+    "gemm_implicit": gemm_conv.conv_gemm_implicit,
+    "gemm_implicit_precomp": gemm_conv.conv_gemm_implicit_precomp,
+    "fft": fft_conv.conv_fft,
+    "fft_tiled": fft_conv.conv_fft_tiled,
+}
+WINO = {
+    "winograd": winograd.conv_winograd,
+    "winograd_nonfused": winograd.conv_winograd_nonfused,
+}
+
+# (n, c, h, w, m, k): the paper's three filter sizes, odd/even spatial
+# dims, depths around the block boundaries (C_BLOCK=256, M_BLOCK=128).
+CASES = [
+    (1, 3, 8, 8, 4, 1),
+    (2, 16, 7, 7, 32, 1),
+    (1, 300, 7, 7, 130, 1),   # crosses both block boundaries
+    (1, 3, 9, 9, 4, 3),
+    (2, 8, 13, 13, 16, 3),
+    (1, 5, 8, 6, 3, 3),       # non-square input
+    (1, 4, 7, 7, 6, 5),
+    (2, 6, 11, 11, 4, 5),
+]
+
+
+def _case(n, c, h, w, m, k, seed=0):
+    key = jax.random.PRNGKey(seed + n * 1000 + c * 100 + h * 10 + k)
+    x, f = ref.random_case(key, n, c, h, w, m, k, k)
+    ph, pw = ref.same_padding(k, k)
+    want = ref.conv_ref(x, f, pad_h=ph, pad_w=pw)
+    return x, f, want
+
+
+@pytest.mark.parametrize("algo", sorted(ALGOS))
+@pytest.mark.parametrize("case", CASES, ids=lambda c: "-".join(map(str, c)))
+def test_kernel_matches_oracle(algo, case):
+    x, f, want = _case(*case)
+    got = ALGOS[algo](x, f)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("algo", sorted(WINO))
+@pytest.mark.parametrize(
+    "case", [c for c in CASES if c[5] == 3], ids=lambda c: "-".join(map(str, c))
+)
+def test_winograd_matches_oracle(algo, case):
+    x, f, want = _case(*case)
+    got = WINO[algo](x, f)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_oracles_agree_with_each_other():
+    """lax.conv vs the independent jnp direct implementation."""
+    for case in CASES[:4]:
+        n, c, h, w, m, k = case
+        x, f, want = _case(*case)
+        ph, pw = ref.same_padding(k, k)
+        got = ref.conv_direct_jnp(x, f, pad_h=ph, pad_w=pw)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_cuconv_stage1_shape_is_paper_temp():
+    """Stage 1 emits Kh·Kw partial planes of [N, M, OH, OW] (§3)."""
+    x, f, _ = _case(2, 4, 9, 9, 6, 3)
+    temp = cuconv.scalar_prods(x, f, pad_h=1, pad_w=1)
+    assert temp.shape == (9, 2, 6, 9, 9)
+
+
+def test_cuconv_stage2_sums_taps():
+    x, f, want = _case(1, 3, 7, 7, 2, 3)
+    temp = cuconv.scalar_prods(x, f, pad_h=1, pad_w=1)
+    out = cuconv.sum_taps(temp)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+    # stage 2 really is the tap sum:
+    np.testing.assert_allclose(out, jnp.sum(temp, axis=0), rtol=1e-6, atol=1e-6)
+
+
+def test_cuconv_1x1_skips_stage2():
+    """The 1×1 fast path produces the final output directly."""
+    x, f, want = _case(2, 16, 7, 7, 32, 1)
+    got = cuconv.conv1x1(x, f)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_cuconv_valid_padding():
+    """pad=0 (valid) convolution also works through the two stages."""
+    key = jax.random.PRNGKey(7)
+    x, f = ref.random_case(key, 1, 4, 8, 8, 3, 3, 3)
+    want = ref.conv_ref(x, f, pad_h=0, pad_w=0)
+    got = cuconv.conv_cuconv(x, f, pad_h=0, pad_w=0)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_vmem_estimate_under_budget():
+    """Stage-1 VMEM footprint stays under the 16MB/core budget for every
+    zoo-scale config (the largest depth is 2048, input 56)."""
+    for (c, hw, k) in [(2048, 7, 1), (832, 7, 5), (512, 28, 3), (64, 224, 3)]:
+        est = cuconv.vmem_estimate_bytes(1, c, hw, hw, 128, k, k)
+        assert est["total"] < 16 * 2**20, (c, hw, k, est)
+
+
+def test_matmul_kernel_standalone():
+    """The explicit-GEMM Pallas matmul on odd sizes (padding paths)."""
+    key = jax.random.PRNGKey(11)
+    a = jax.random.uniform(key, (130, 300), jnp.float32, -1, 1)
+    b = jax.random.uniform(key, (300, 257), jnp.float32, -1, 1)
+    got = gemm_conv.matmul(a, b)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-3, atol=1e-3)
+
+
+def test_winograd_transform_identities():
+    """Winograd filter transform of a center impulse equals G[:,1]·G[:,1]ᵀ."""
+    g = np.zeros((1, 1, 3, 3), np.float32)
+    g[0, 0, 1, 1] = 1.0
+    u = winograd.transform_filters(jnp.asarray(g))
+    col = np.array([0.0, 0.5, -0.5, 0.0], np.float32)
+    np.testing.assert_allclose(
+        np.asarray(u).reshape(4, 4), np.outer(col, col), atol=1e-6
+    )
+
+
+def test_fft_tiled_equals_untiled():
+    x, f, _ = _case(5, 3, 8, 8, 4, 3)
+    a = fft_conv.conv_fft(x, f)
+    b = fft_conv.conv_fft_tiled(x, f, batch_tile=2)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

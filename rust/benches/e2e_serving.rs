@@ -1,0 +1,133 @@
+//! Bench: end-to-end serving throughput/latency of the coordinator over
+//! the AOT MiniSqueezeNet (the numbers in EXPERIMENTS.md §End-to-end).
+//!
+//! Sweeps batching policies to show the dynamic batcher's effect:
+//! batch-1-only vs batched-with-window.
+
+use std::time::{Duration, Instant};
+
+use cuconv::coordinator::{run_open_loop, BatchPolicy, LoadSpec, Server, ServerConfig};
+use cuconv::runtime::Manifest;
+use cuconv::util::rng::Rng;
+
+fn drive(server: &Server, total: usize, threads: usize) -> (f64, f64, f64, f64) {
+    let h = server.handle();
+    let elems = h.image_elems();
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let h = h.clone();
+            let n = total / threads;
+            s.spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                for _ in 0..n {
+                    let mut img = vec![0.0f32; elems];
+                    rng.fill_uniform(&mut img, -1.0, 1.0);
+                    h.infer(img).expect("infer");
+                }
+            });
+        }
+    });
+    let wall = started.elapsed().as_secs_f64();
+    let m = server.metrics();
+    (total as f64 / wall, m.total_mean * 1e3, m.total_p99 * 1e3, m.mean_batch_size)
+}
+
+fn main() {
+    let dir = cuconv::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping e2e_serving bench");
+        return;
+    }
+    let total = std::env::var("CUCONV_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128);
+
+    println!("policy                          rps     mean ms  p99<= ms  mean batch");
+    println!("-------------------------------------------------------------------");
+    for (name, policy, threads, adaptive) in [
+        (
+            "batch1-only, 1 client",
+            BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100), queue_capacity: 512 },
+            1,
+            false,
+        ),
+        (
+            "batch1-only, 8 clients",
+            BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100), queue_capacity: 512 },
+            8,
+            false,
+        ),
+        (
+            "dynamic b<=8/4ms, 8 clients",
+            BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(4), queue_capacity: 512 },
+            8,
+            false,
+        ),
+        (
+            "dynamic b<=8/1ms, 8 clients",
+            BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1), queue_capacity: 512 },
+            8,
+            false,
+        ),
+        (
+            "adaptive b<=8/1ms, 8 clients",
+            BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1), queue_capacity: 512 },
+            8,
+            true,
+        ),
+    ] {
+        let manifest = Manifest::load(&dir).unwrap();
+        let config = ServerConfig {
+            policy,
+            validate_on_start: false,
+            adaptive_sizes: adaptive,
+            ..Default::default()
+        };
+        let server = Server::start(manifest, config).expect("server");
+        // warmup
+        drive(&server, 16, threads.min(4));
+        let (rps, mean_ms, p99_ms, mean_batch) = drive(&server, total, threads);
+        println!("{name:30}  {rps:7.1}  {mean_ms:7.2}  {p99_ms:8.2}  {mean_batch:10.2}");
+    }
+
+    // Open-loop Poisson sweep: latency vs offered load (the serving
+    // paper's load/latency curve).
+    println!("\nopen-loop Poisson arrivals (dynamic batching b<=8/4ms):");
+    println!("offered rps  achieved  completed  rejected  p50 ms   p99 ms");
+    println!("------------------------------------------------------------");
+    let manifest = Manifest::load(&dir).unwrap();
+    let config = ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(4),
+            queue_capacity: 256,
+        },
+        validate_on_start: false,
+        ..Default::default()
+    };
+    let server = Server::start(manifest, config).expect("server");
+    drive(&server, 32, 4); // warmup
+    for rate in [50.0f64, 150.0, 300.0, 600.0] {
+        let report = run_open_loop(
+            &server.handle(),
+            LoadSpec { rate_rps: rate, requests: total.min(96), seed: 0xAB },
+        );
+        let (p50, p99) = report
+            .latency
+            .map(|l| (l.p50 * 1e3, l.p99 * 1e3))
+            .unwrap_or((f64::NAN, f64::NAN));
+        println!(
+            "{:11.0}  {:8.1}  {:9}  {:8}  {:6.2}  {:7.2}",
+            report.offered_rps,
+            report.achieved_rps,
+            report.completed,
+            report.rejected,
+            p50,
+            p99
+        );
+    }
+
+    println!("\ne2e_serving bench OK ({total} requests per policy)");
+}

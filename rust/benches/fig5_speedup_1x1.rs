@@ -1,0 +1,8 @@
+//! Bench: Figure 5 — cuConv speedup over the best baseline for every
+//! 1×1 configuration, batch sizes up to 64.
+
+mod fig_speedup_common;
+
+fn main() {
+    fig_speedup_common::run(cuconv::conv::FilterSize::F1x1);
+}

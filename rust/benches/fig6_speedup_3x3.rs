@@ -1,0 +1,8 @@
+//! Bench: Figure 6 — cuConv speedup over the best baseline for every
+//! 3×3 configuration, batch sizes up to 16.
+
+mod fig_speedup_common;
+
+fn main() {
+    fig_speedup_common::run(cuconv::conv::FilterSize::F3x3);
+}

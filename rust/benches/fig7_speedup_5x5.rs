@@ -1,0 +1,10 @@
+//! Bench: Figure 7 — cuConv speedup over the best baseline for every
+//! 5×5 configuration, batch sizes up to 256. Also prints the §4.1
+//! aggregate table (this is the last figure bench to run).
+
+mod fig_speedup_common;
+
+fn main() {
+    fig_speedup_common::run(cuconv::conv::FilterSize::F5x5);
+    print!("\n{}", cuconv::report::figures::aggregates_table().render());
+}

@@ -1,0 +1,26 @@
+//! Shared driver for the Figure 5/6/7 speedup-sweep benches.
+
+use cuconv::conv::FilterSize;
+use cuconv::report::figures;
+
+/// Regenerate one speedup figure and its per-batch geomean summary.
+pub fn run(filter: FilterSize) {
+    let t = figures::figure_speedups(filter);
+    print!("{}", t.render());
+
+    // Per-batch geomean across the figure's configs (trend summary).
+    let batches = figures::figure_batches(filter);
+    println!("\nper-batch geomean speedup:");
+    for (bi, &b) in batches.iter().enumerate() {
+        let vals: Vec<f64> = t
+            .rows
+            .iter()
+            .filter_map(|r| r[bi + 1].strip_suffix('x').and_then(|v| v.parse().ok()))
+            .collect();
+        if !vals.is_empty() {
+            let g = cuconv::util::stats::geomean(&vals);
+            println!("  batch {b:>3}: {g:.2}x over {} configs", vals.len());
+        }
+    }
+    println!("\nfigure{} bench OK", figures::figure_number(filter));
+}

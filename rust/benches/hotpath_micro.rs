@@ -1,0 +1,74 @@
+//! Bench: microbenchmarks of the Layer-3 hot path pieces (the §Perf
+//! iteration log in EXPERIMENTS.md tracks these before/after).
+//!
+//! * CPU substrate conv implementations on a profiled config
+//! * tensor→literal staging for the serving input shape
+//! * batch gather (request pixels → batch buffer)
+//! * JSON manifest parse
+//! * batch decomposition
+
+use cuconv::conv::ConvSpec;
+use cuconv::coordinator::decompose_batches;
+use cuconv::cpuref::CpuImpl;
+use cuconv::tensor::Tensor;
+use cuconv::util::rng::Rng;
+use cuconv::util::stats::fmt_seconds;
+use cuconv::util::timer::{bench_fn, black_box, BenchOpts};
+
+fn main() {
+    let opts = BenchOpts { warmup_iters: 2, iters: 12 };
+
+    // --- CPU substrate implementations on Table-5 config A ---
+    let spec = ConvSpec::from_table_label("7-1-5-128-48").unwrap();
+    let mut rng = Rng::new(1);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    println!("cpu substrate on {} ({:.1} MFLOP):", spec.table_label(), spec.flops() as f64 / 1e6);
+    for imp in CpuImpl::ALL {
+        if !imp.supports(&spec) {
+            continue;
+        }
+        let s = bench_fn(opts, || {
+            black_box(imp.run(&spec, &input, &filters));
+        });
+        println!(
+            "  {:10}  p50 {}  (min {}, p99 {})",
+            imp.name(),
+            fmt_seconds(s.p50),
+            fmt_seconds(s.min),
+            fmt_seconds(s.p99)
+        );
+    }
+
+    // --- serving-input staging ---
+    let image: Vec<f32> = (0..3 * 32 * 32).map(|i| i as f32).collect();
+    let s = bench_fn(BenchOpts { warmup_iters: 5, iters: 50 }, || {
+        // batch gather of 8 images, as the router does per batch
+        let mut batch = Vec::with_capacity(8 * image.len());
+        for _ in 0..8 {
+            batch.extend_from_slice(&image);
+        }
+        black_box(batch);
+    });
+    println!("\nbatch gather (8 x 3x32x32): p50 {}", fmt_seconds(s.p50));
+
+    // --- manifest parse ---
+    let dir = cuconv::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let s = bench_fn(BenchOpts { warmup_iters: 3, iters: 30 }, || {
+            black_box(cuconv::util::json::parse(&text).unwrap());
+        });
+        println!("manifest.json parse ({} B): p50 {}", text.len(), fmt_seconds(s.p50));
+    }
+
+    // --- batch decomposition ---
+    let s = bench_fn(BenchOpts { warmup_iters: 10, iters: 100 }, || {
+        for n in 0..64 {
+            black_box(decompose_batches(n, &[1, 2, 4, 8]));
+        }
+    });
+    println!("decompose_batches x64: p50 {}", fmt_seconds(s.p50));
+
+    println!("\nhotpath_micro OK");
+}

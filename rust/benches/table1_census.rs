@@ -1,0 +1,24 @@
+//! Bench: regenerate Table 1 (the conv-config census of the five CNNs)
+//! and verify the counts against the published row values.
+
+use cuconv::report::tables;
+use cuconv::zoo::{census, Network};
+
+fn main() {
+    let t = tables::table1();
+    print!("{}", t.render());
+
+    // Assert the published counts (the bench doubles as a check).
+    let expect = [
+        (Network::GoogleNet, 42),
+        (Network::SqueezeNet, 21),
+        (Network::AlexNet, 4),
+        (Network::ResNet50, 12),
+        (Network::Vgg19, 9),
+    ];
+    for (net, count) in expect {
+        let row = census().into_iter().find(|r| r.network == net).unwrap();
+        assert_eq!(row.distinct, count, "{}", net.name());
+    }
+    println!("\ntable1_census OK (counts match the paper)");
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Table 2 (algorithm variants) and print each
+//! variant's availability/workspace over the paper's profiled configs.
+
+use cuconv::algo::Algorithm;
+use cuconv::conv::ConvSpec;
+use cuconv::report::{tables, Table};
+
+fn main() {
+    print!("{}", tables::table2().render());
+
+    let labels = ["7-1-1-256-832", "13-1-3-384-384", "7-8-5-128-48", "224-256-3-64-64"];
+    let mut t = Table::new(
+        "availability / workspace (MB) on sample configs (cap = 1024 MB)",
+        &["algorithm", labels[0], labels[1], labels[2], labels[3]],
+    );
+    for algo in Algorithm::ALL {
+        let mut row = vec![algo.name().to_string()];
+        for label in labels {
+            let spec = ConvSpec::from_table_label(label).unwrap();
+            row.push(if !algo.supports(&spec) {
+                "unsupported".into()
+            } else if !algo.available(&spec) {
+                format!("capped ({:.0})", algo.workspace_bytes(&spec) as f64 / 1e6)
+            } else {
+                format!("{:.1}", algo.workspace_bytes(&spec) as f64 / 1e6)
+            });
+        }
+        t.row(row);
+    }
+    print!("\n{}", t.render());
+    println!("\ntable2_registry OK");
+}

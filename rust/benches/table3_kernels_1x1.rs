@@ -1,0 +1,9 @@
+//! Bench: Table 3 — kernel execution times for the selected 1×1
+//! configurations (paper's V100 µs vs model µs vs our kernels measured
+//! through PJRT).
+
+mod table_kernels_common;
+
+fn main() {
+    table_kernels_common::run(3);
+}

@@ -1,0 +1,8 @@
+//! Bench: Table 4 — kernel execution times for the selected 3×3
+//! configurations.
+
+mod table_kernels_common;
+
+fn main() {
+    table_kernels_common::run(4);
+}

@@ -1,0 +1,8 @@
+//! Bench: Table 5 — kernel execution times for the selected 5×5
+//! configurations.
+
+mod table_kernels_common;
+
+fn main() {
+    table_kernels_common::run(5);
+}

@@ -1,0 +1,30 @@
+//! Shared driver for the Table 3/4/5 kernel-time benches.
+
+use cuconv::report::tables;
+use cuconv::runtime::{default_artifact_dir, Engine};
+
+/// Regenerate one kernel-time table: paper vs model, plus the measured
+/// column from real PJRT executions of our AOT kernels when artifacts
+/// are present.
+pub fn run(table_no: u8) {
+    let dir = default_artifact_dir();
+    let mut engine = if dir.join("manifest.json").exists() {
+        match Engine::from_dir(&dir) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("engine unavailable ({e:#}); model-only");
+                None
+            }
+        }
+    } else {
+        eprintln!("artifacts not built; printing paper-vs-model only");
+        None
+    };
+    let iters = std::env::var("CUCONV_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let t = tables::table_kernels(table_no, engine.as_mut(), iters);
+    print!("{}", t.render());
+    println!("\ntable{table_no} bench OK");
+}

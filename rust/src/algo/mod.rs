@@ -1,0 +1,14 @@
+//! The convolution-algorithm registry (the paper's Table 2, plus ours).
+//!
+//! Mirrors cuDNN's algorithm enumeration: three GEMM variants, two FFT
+//! variants, two Winograd variants — plus the paper's cuConv and the
+//! naive direct baseline. Each algorithm carries its parameter
+//! limitations and workspace-size model; the paper caps temporary
+//! workspace at 1 GB and drops algorithm/configuration cases beyond it
+//! (§4: "This only affects around 4% of algorithm/configuration cases").
+
+mod registry;
+mod select;
+
+pub use registry::{Algorithm, WORKSPACE_CAP_BYTES};
+pub use select::{autotune, select_heuristic, AutotuneEntry, AutotuneResult, TimingSource};

@@ -1,0 +1,289 @@
+//! [`Algorithm`]: every convolution algorithm in the system, with
+//! availability rules and workspace accounting.
+
+use std::fmt;
+
+use crate::conv::{ConvSpec, F32_BYTES};
+
+/// The paper's 1 GB workspace cap (§4).
+pub const WORKSPACE_CAP_BYTES: usize = 1 << 30;
+
+/// Convolution algorithms: Table 2 of the paper plus cuConv itself and
+/// the naive direct baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Algorithm {
+    /// The paper's two-stage algorithm (this system's contribution).
+    CuConv,
+    /// Direct per-output convolution, no staging (the §2.3 baseline).
+    Direct,
+    /// Explicit im2col + GEMM ("GEMM" in Table 2).
+    GemmExplicit,
+    /// On-the-fly transform inside the GEMM kernel ("Implicit").
+    GemmImplicit,
+    /// Implicit with a separate offsets kernel ("Implicit precomp.").
+    GemmImplicitPrecomp,
+    /// Single-kernel Winograd ("Winograd").
+    Winograd,
+    /// Separate transform kernels + sgemm ("Winograd non-fused").
+    WinogradNonfused,
+    /// Baseline FFT convolution ("FFT").
+    Fft,
+    /// Tiled FFT ("FFT tiled").
+    FftTiled,
+}
+
+impl Algorithm {
+    /// All algorithms, cuConv first.
+    pub const ALL: [Algorithm; 9] = [
+        Algorithm::CuConv,
+        Algorithm::Direct,
+        Algorithm::GemmExplicit,
+        Algorithm::GemmImplicit,
+        Algorithm::GemmImplicitPrecomp,
+        Algorithm::Winograd,
+        Algorithm::WinogradNonfused,
+        Algorithm::Fft,
+        Algorithm::FftTiled,
+    ];
+
+    /// The cuDNN-side algorithms the paper compares against (everything
+    /// except cuConv and the naive direct baseline).
+    pub const BASELINES: [Algorithm; 7] = [
+        Algorithm::GemmExplicit,
+        Algorithm::GemmImplicit,
+        Algorithm::GemmImplicitPrecomp,
+        Algorithm::Winograd,
+        Algorithm::WinogradNonfused,
+        Algorithm::Fft,
+        Algorithm::FftTiled,
+    ];
+
+    /// Stable name, matching the Python registry / artifact names.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::CuConv => "cuconv",
+            Algorithm::Direct => "direct",
+            Algorithm::GemmExplicit => "gemm_explicit",
+            Algorithm::GemmImplicit => "gemm_implicit",
+            Algorithm::GemmImplicitPrecomp => "gemm_implicit_precomp",
+            Algorithm::Winograd => "winograd",
+            Algorithm::WinogradNonfused => "winograd_nonfused",
+            Algorithm::Fft => "fft",
+            Algorithm::FftTiled => "fft_tiled",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Algorithm> {
+        Algorithm::ALL.iter().copied().find(|a| a.name() == name)
+    }
+
+    /// Table 2's human description.
+    pub fn description(&self) -> &'static str {
+        match self {
+            Algorithm::CuConv => {
+                "two-stage scalar-products + sum (this paper); 1x1 skips stage 2"
+            }
+            Algorithm::Direct => "direct application of the convolution formula",
+            Algorithm::GemmExplicit => {
+                "transformed input matrix explicitly generated before the GEMM kernel"
+            }
+            Algorithm::GemmImplicit => {
+                "input transformation performed on-the-fly by the GEMM kernel"
+            }
+            Algorithm::GemmImplicitPrecomp => {
+                "implicit GEMM with offsets precomputed by a separate kernel"
+            }
+            Algorithm::Winograd => {
+                "single kernel performs the Winograd transforms and multiplication"
+            }
+            Algorithm::WinogradNonfused => {
+                "Winograd transforms of inputs, filters and outputs in separate kernels"
+            }
+            Algorithm::Fft => "baseline FFT-based convolution",
+            Algorithm::FftTiled => {
+                "inputs processed in tiles to reduce the temporary storage required"
+            }
+        }
+    }
+
+    /// Parameter limitations, mirroring cuDNN's (fused Winograd is
+    /// 3×3-stride-1 only; non-fused also handles 5×5; FFT needs stride 1).
+    pub fn supports(&self, spec: &ConvSpec) -> bool {
+        let square = spec.kh == spec.kw;
+        match self {
+            Algorithm::Winograd => square && spec.kh == 3 && spec.stride == 1,
+            Algorithm::WinogradNonfused => {
+                square && (spec.kh == 3 || spec.kh == 5) && spec.stride == 1
+            }
+            Algorithm::Fft | Algorithm::FftTiled => spec.stride == 1,
+            _ => true,
+        }
+    }
+
+    /// Workspace bytes this algorithm needs for `spec` (the temporary
+    /// buffer the paper caps at 1 GB).
+    pub fn workspace_bytes(&self, spec: &ConvSpec) -> usize {
+        match self {
+            Algorithm::CuConv => spec.cuconv_temp_bytes(),
+            Algorithm::Direct => 0,
+            Algorithm::GemmExplicit => spec.im2col_bytes(),
+            Algorithm::GemmImplicit => 0,
+            // Offsets table: one entry per (c, kh, kw) tap.
+            Algorithm::GemmImplicitPrecomp => spec.c * spec.kh * spec.kw * 4,
+            // Winograd-domain U/V/M tiles (F(2x2,3x3): 16 freqs).
+            Algorithm::Winograd | Algorithm::WinogradNonfused => {
+                let freqs = if spec.kh == 3 { 16 } else { 64 };
+                let tiles = spec.n * spec.out_h().div_ceil(2) * spec.out_w().div_ceil(2);
+                freqs * (spec.m * spec.c + spec.c * tiles + spec.m * tiles) * F32_BYTES
+            }
+            // Complex spectra of inputs, filters and outputs.
+            Algorithm::Fft => {
+                let s = fft_size(spec);
+                (spec.n * spec.c + spec.m * spec.c + spec.n * spec.m)
+                    * s * s * 2 * F32_BYTES
+            }
+            // Tiling bounds the input/output spectra to a fixed batch tile.
+            Algorithm::FftTiled => {
+                let s = fft_size(spec);
+                let tile_n = spec.n.min(4);
+                (tile_n * spec.c + spec.m * spec.c + tile_n * spec.m)
+                    * s * s * 2 * F32_BYTES
+            }
+        }
+    }
+
+    /// Availability = parameter support + workspace under the 1 GB cap.
+    pub fn available(&self, spec: &ConvSpec) -> bool {
+        self.supports(spec) && self.workspace_bytes(spec) <= WORKSPACE_CAP_BYTES
+    }
+
+    /// Number of GPU kernels this algorithm launches for `spec`
+    /// (the paper's tables 3–5 decompose timings per kernel).
+    pub fn kernel_count(&self, spec: &ConvSpec) -> usize {
+        match self {
+            Algorithm::CuConv => {
+                if spec.kh == 1 && spec.kw == 1 {
+                    1 // §3: 1x1 skips the second stage
+                } else {
+                    2
+                }
+            }
+            Algorithm::Direct | Algorithm::GemmImplicit => 1,
+            // Table 4 profiles the fused variant as tile-generation +
+            // main kernel.
+            Algorithm::Winograd => 2,
+            Algorithm::GemmExplicit | Algorithm::GemmImplicitPrecomp => 2,
+            Algorithm::WinogradNonfused => 4,
+            Algorithm::Fft | Algorithm::FftTiled => 3,
+        }
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// FFT plane size: next power of two fitting the linear correlation.
+pub(crate) fn fft_size(spec: &ConvSpec) -> usize {
+    ((spec.h + spec.kh - 1).max(spec.w + spec.kw - 1)).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::from_name("nope"), None);
+    }
+
+    #[test]
+    fn table2_census() {
+        // 3 GEMM + 2 FFT + 2 Winograd variants = the 7 cuDNN baselines.
+        assert_eq!(Algorithm::BASELINES.len(), 7);
+        let gemm = Algorithm::BASELINES
+            .iter()
+            .filter(|a| a.name().starts_with("gemm"))
+            .count();
+        let fft = Algorithm::BASELINES
+            .iter()
+            .filter(|a| a.name().starts_with("fft"))
+            .count();
+        let wino = Algorithm::BASELINES
+            .iter()
+            .filter(|a| a.name().starts_with("winograd"))
+            .count();
+        assert_eq!((gemm, fft, wino), (3, 2, 2));
+    }
+
+    #[test]
+    fn winograd_limitations() {
+        let s3 = ConvSpec::paper(14, 1, 3, 64, 64);
+        let s5 = ConvSpec::paper(14, 1, 5, 64, 64);
+        let s1 = ConvSpec::paper(14, 1, 1, 64, 64);
+        assert!(Algorithm::Winograd.supports(&s3));
+        assert!(!Algorithm::Winograd.supports(&s5));
+        assert!(!Algorithm::Winograd.supports(&s1));
+        assert!(Algorithm::WinogradNonfused.supports(&s5));
+        assert!(!Algorithm::WinogradNonfused.supports(&s1));
+    }
+
+    #[test]
+    fn cuconv_kernel_count_matches_paper() {
+        // Tables 3 vs 4/5: one kernel for 1x1, two otherwise.
+        assert_eq!(Algorithm::CuConv.kernel_count(&ConvSpec::paper(7, 1, 1, 256, 832)), 1);
+        assert_eq!(Algorithm::CuConv.kernel_count(&ConvSpec::paper(7, 1, 3, 384, 192)), 2);
+        assert_eq!(Algorithm::WinogradNonfused.kernel_count(&ConvSpec::paper(7, 1, 3, 1, 1)), 4);
+    }
+
+    #[test]
+    fn workspace_cap_excludes_huge_fft() {
+        // A VGG-scale conv at batch 256: FFT spectra blow the 1 GB cap.
+        let spec = ConvSpec::paper(224, 256, 3, 64, 64);
+        assert!(Algorithm::Fft.workspace_bytes(&spec) > WORKSPACE_CAP_BYTES);
+        assert!(!Algorithm::Fft.available(&spec));
+        // The tiled variant survives longer (bounded input spectra)…
+        assert!(
+            Algorithm::FftTiled.workspace_bytes(&spec)
+                < Algorithm::Fft.workspace_bytes(&spec)
+        );
+        // …and cuConv needs no workspace at all for 1x1.
+        let one = ConvSpec::paper(7, 1, 1, 32, 832);
+        assert_eq!(Algorithm::CuConv.workspace_bytes(&one), 0);
+    }
+
+    #[test]
+    fn workspace_fraction_capped_is_small_on_zoo() {
+        // Paper: the 1 GB cap affects ~4% of algorithm/config cases.
+        let mut total = 0usize;
+        let mut capped = 0usize;
+        for (entry, batch) in crate::zoo::all_cases() {
+            let spec = entry.spec.with_batch(batch);
+            for a in Algorithm::ALL {
+                if !a.supports(&spec) {
+                    continue;
+                }
+                total += 1;
+                if a.workspace_bytes(&spec) > WORKSPACE_CAP_BYTES {
+                    capped += 1;
+                }
+            }
+        }
+        let frac = capped as f64 / total as f64;
+        assert!(frac > 0.005 && frac < 0.12, "capped fraction {frac}");
+    }
+
+    #[test]
+    fn cuconv_temp_matches_spec_accounting() {
+        let spec = ConvSpec::paper(13, 2, 3, 16, 8);
+        assert_eq!(
+            Algorithm::CuConv.workspace_bytes(&spec),
+            spec.cuconv_temp_bytes()
+        );
+    }
+}

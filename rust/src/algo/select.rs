@@ -1,0 +1,203 @@
+//! Algorithm selection: the heuristic pick and the exhaustive autotuner.
+//!
+//! §2.1 of the paper: "several frameworks perform an initial exploration
+//! to choose the best-performing implementation of convolution for each
+//! convolutional layer", and cuDNN ships a heuristic `Get` plus an
+//! exhaustive `Find`. Both are reproduced here:
+//!
+//! * [`select_heuristic`] — a closed-form rule-of-thumb (no timing).
+//! * [`autotune`] — run/score every available algorithm and rank them,
+//!   either from the analytical V100 model or from real wall-clock of
+//!   the CPU substrate implementations.
+
+use crate::algo::Algorithm;
+use crate::conv::ConvSpec;
+use crate::cpuref::CpuImpl;
+use crate::gpumodel;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::timer;
+
+/// Where autotune timings come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimingSource {
+    /// The calibrated V100 analytical model (instant).
+    GpuModel,
+    /// Wall-clock of the Rust CPU implementations (measures this host).
+    CpuMeasured,
+}
+
+/// One ranked autotune entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutotuneEntry {
+    pub algo: Algorithm,
+    /// Time in µs (model) or seconds×1e6 (measured) — comparable within
+    /// one result, not across sources.
+    pub score_us: f64,
+    pub workspace_bytes: usize,
+}
+
+/// Ranked autotune outcome (fastest first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutotuneResult {
+    pub spec: ConvSpec,
+    pub source: TimingSource,
+    pub entries: Vec<AutotuneEntry>,
+}
+
+impl AutotuneResult {
+    pub fn best(&self) -> Option<&AutotuneEntry> {
+        self.entries.first()
+    }
+
+    /// Speedup of cuConv over the best non-cuConv entry (>1 ⇒ cuConv
+    /// would be auto-selected, the paper's deployment story).
+    pub fn cuconv_speedup(&self) -> Option<f64> {
+        let cu = self.entries.iter().find(|e| e.algo == Algorithm::CuConv)?;
+        let best_other = self
+            .entries
+            .iter()
+            .filter(|e| e.algo != Algorithm::CuConv)
+            .map(|e| e.score_us)
+            .fold(f64::INFINITY, f64::min);
+        if best_other.is_finite() {
+            Some(best_other / cu.score_us)
+        } else {
+            None
+        }
+    }
+}
+
+/// Heuristic selection without timing (the `cudnnGet` analogue),
+/// following the paper's observed structure: Winograd for 3×3, cuConv
+/// for batch-1 small-input configs, implicit GEMM otherwise.
+pub fn select_heuristic(spec: &ConvSpec) -> Algorithm {
+    if Algorithm::Winograd.available(spec) && spec.n > 1 {
+        return Algorithm::Winograd;
+    }
+    if spec.n == 1 && spec.h <= 14 && Algorithm::CuConv.available(spec) {
+        // The region Figures 5–7 show cuConv winning: batch 1, small
+        // spatial dims.
+        if spec.kh != 3 || spec.h <= 7 {
+            return Algorithm::CuConv;
+        }
+    }
+    if Algorithm::Winograd.available(spec) {
+        return Algorithm::Winograd;
+    }
+    Algorithm::GemmImplicitPrecomp
+}
+
+/// Exhaustively score every available algorithm (the `cudnnFind`
+/// analogue). With [`TimingSource::CpuMeasured`] the CPU substrate
+/// implementations are actually run `iters` times on random data.
+pub fn autotune(spec: &ConvSpec, source: TimingSource, iters: usize) -> AutotuneResult {
+    let mut entries = Vec::new();
+    match source {
+        TimingSource::GpuModel => {
+            for algo in Algorithm::ALL {
+                if let Some(t) = gpumodel::predict(spec, algo) {
+                    entries.push(AutotuneEntry {
+                        algo,
+                        score_us: t.total_us(),
+                        workspace_bytes: algo.workspace_bytes(spec),
+                    });
+                }
+            }
+        }
+        TimingSource::CpuMeasured => {
+            let mut rng = Rng::new(0x7E57);
+            let input =
+                Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+            let filters =
+                Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+            for (algo, imp) in cpu_pairs() {
+                if !algo.available(spec) || !imp.supports(spec) {
+                    continue;
+                }
+                let opts = timer::BenchOpts { warmup_iters: 1, iters: iters.max(1) };
+                let summary =
+                    timer::bench_fn(opts, || {
+                        timer::black_box(imp.run(spec, &input, &filters));
+                    });
+                entries.push(AutotuneEntry {
+                    algo,
+                    score_us: summary.p50 * 1e6,
+                    workspace_bytes: algo.workspace_bytes(spec),
+                });
+            }
+        }
+    }
+    entries.sort_by(|a, b| a.score_us.partial_cmp(&b.score_us).unwrap());
+    AutotuneResult { spec: *spec, source, entries }
+}
+
+/// Mapping from registry algorithms to the CPU substrate paths that
+/// implement the same family.
+fn cpu_pairs() -> Vec<(Algorithm, CpuImpl)> {
+    vec![
+        (Algorithm::CuConv, CpuImpl::CuConvTwoStage),
+        (Algorithm::Direct, CpuImpl::Blocked),
+        (Algorithm::GemmExplicit, CpuImpl::Im2colGemm),
+        (Algorithm::Winograd, CpuImpl::Winograd),
+        (Algorithm::Fft, CpuImpl::Fft),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_autotune_ranks_all_available() {
+        let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+        let r = autotune(&spec, TimingSource::GpuModel, 1);
+        // 1x1: winograd variants unavailable -> 7 algorithms remain.
+        assert_eq!(r.entries.len(), 7);
+        // Sorted ascending.
+        for w in r.entries.windows(2) {
+            assert!(w[0].score_us <= w[1].score_us);
+        }
+        // Headline config: cuConv is auto-selected.
+        assert_eq!(r.best().unwrap().algo, Algorithm::CuConv);
+        assert!(r.cuconv_speedup().unwrap() > 1.5);
+    }
+
+    #[test]
+    fn model_autotune_picks_winograd_for_large_3x3() {
+        let spec = ConvSpec::paper(13, 1, 3, 384, 384);
+        let r = autotune(&spec, TimingSource::GpuModel, 1);
+        assert!(matches!(
+            r.best().unwrap().algo,
+            Algorithm::Winograd | Algorithm::WinogradNonfused
+        ));
+        assert!(r.cuconv_speedup().unwrap() < 1.0);
+    }
+
+    #[test]
+    fn measured_autotune_runs_real_cpu_impls() {
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        let r = autotune(&spec, TimingSource::CpuMeasured, 2);
+        assert!(r.entries.len() >= 4);
+        assert!(r.entries.iter().all(|e| e.score_us > 0.0));
+    }
+
+    #[test]
+    fn heuristic_matches_paper_regions() {
+        // Batch-1 small 1x1: cuConv.
+        assert_eq!(
+            select_heuristic(&ConvSpec::paper(7, 1, 1, 32, 832)),
+            Algorithm::CuConv
+        );
+        // Batched 3x3: Winograd.
+        assert_eq!(
+            select_heuristic(&ConvSpec::paper(14, 8, 3, 64, 64)),
+            Algorithm::Winograd
+        );
+        // Large-batch 1x1: a GEMM variant.
+        assert_eq!(
+            select_heuristic(&ConvSpec::paper(28, 64, 1, 128, 256)),
+            Algorithm::GemmImplicitPrecomp
+        );
+    }
+}

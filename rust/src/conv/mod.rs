@@ -1,0 +1,9 @@
+//! Convolution problem descriptions: geometry, cost accounting and the
+//! paper's labelling conventions.
+
+mod spec;
+
+pub use spec::{ConvSpec, FilterSize};
+
+/// Number of bytes in one f32.
+pub const F32_BYTES: usize = 4;

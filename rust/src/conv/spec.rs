@@ -1,0 +1,301 @@
+//! [`ConvSpec`]: the five convolution parameters of the paper (input
+//! size, depth, number of filters, filter size, batch) plus stride/padding,
+//! with all derived geometry in one place.
+
+use std::fmt;
+
+use crate::conv::F32_BYTES;
+
+/// Filter spatial size class used throughout the paper's evaluation
+/// (§4 only contains 1×1, 3×3 and 5×5 stride-1 configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FilterSize {
+    F1x1,
+    F3x3,
+    F5x5,
+    /// Anything else (e.g. 7×7 stem convs, 11×11 AlexNet conv1 — excluded
+    /// by the paper's stride-1 census but supported by the library).
+    Other(u8, u8),
+}
+
+impl FilterSize {
+    pub fn of(kh: usize, kw: usize) -> FilterSize {
+        match (kh, kw) {
+            (1, 1) => FilterSize::F1x1,
+            (3, 3) => FilterSize::F3x3,
+            (5, 5) => FilterSize::F5x5,
+            (h, w) => FilterSize::Other(h as u8, w as u8),
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match *self {
+            FilterSize::F1x1 => (1, 1),
+            FilterSize::F3x3 => (3, 3),
+            FilterSize::F5x5 => (5, 5),
+            FilterSize::Other(h, w) => (h as usize, w as usize),
+        }
+    }
+}
+
+impl fmt::Display for FilterSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (h, w) = self.dims();
+        write!(f, "{h}x{w}")
+    }
+}
+
+/// A complete forward-convolution problem description.
+///
+/// Field names follow the paper: inputs are `N × C × H × W` (NCHW),
+/// filters are `M × C × Kh × Kw`, outputs are `N × M × OH × OW`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvSpec {
+    /// Batch size (number of input volumes).
+    pub n: usize,
+    /// Input depth / channels.
+    pub c: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Number of filters (output depth).
+    pub m: usize,
+    /// Filter height.
+    pub kh: usize,
+    /// Filter width.
+    pub kw: usize,
+    /// Stride (same in X and Y; the paper's census is all stride 1).
+    pub stride: usize,
+    /// Padding rows/cols per side in Y.
+    pub pad_h: usize,
+    /// Padding per side in X.
+    pub pad_w: usize,
+}
+
+impl ConvSpec {
+    /// A paper-style configuration: square input `hw×hw`, depth `c`,
+    /// `m` filters of `k×k`, stride 1, "same" padding `(k-1)/2`.
+    pub fn paper(hw: usize, n: usize, k: usize, m: usize, c: usize) -> ConvSpec {
+        ConvSpec {
+            n,
+            c,
+            h: hw,
+            w: hw,
+            m,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad_h: (k - 1) / 2,
+            pad_w: (k - 1) / 2,
+        }
+    }
+
+    /// Change only the batch size.
+    pub fn with_batch(mut self, n: usize) -> ConvSpec {
+        self.n = n;
+        self
+    }
+
+    pub fn filter_size(&self) -> FilterSize {
+        FilterSize::of(self.kh, self.kw)
+    }
+
+    /// Output height.
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad_h - self.kh) / self.stride + 1
+    }
+
+    /// Output width.
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad_w - self.kw) / self.stride + 1
+    }
+
+    /// Validity: filter must fit in the padded input, all dims nonzero.
+    pub fn is_valid(&self) -> bool {
+        self.n > 0
+            && self.c > 0
+            && self.h > 0
+            && self.w > 0
+            && self.m > 0
+            && self.kh > 0
+            && self.kw > 0
+            && self.stride > 0
+            && self.h + 2 * self.pad_h >= self.kh
+            && self.w + 2 * self.pad_w >= self.kw
+    }
+
+    /// Input tensor shape `[n, c, h, w]`.
+    pub fn input_shape(&self) -> [usize; 4] {
+        [self.n, self.c, self.h, self.w]
+    }
+
+    /// Filter tensor shape `[m, c, kh, kw]`.
+    pub fn filter_shape(&self) -> [usize; 4] {
+        [self.m, self.c, self.kh, self.kw]
+    }
+
+    /// Output tensor shape `[n, m, oh, ow]`.
+    pub fn output_shape(&self) -> [usize; 4] {
+        [self.n, self.m, self.out_h(), self.out_w()]
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.n * self.c * self.h * self.w
+    }
+
+    pub fn filter_elems(&self) -> usize {
+        self.m * self.c * self.kh * self.kw
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.n * self.m * self.out_h() * self.out_w()
+    }
+
+    /// Multiply–accumulate count of the direct algorithm.
+    pub fn macs(&self) -> u64 {
+        self.output_elems() as u64 * (self.c * self.kh * self.kw) as u64
+    }
+
+    /// FLOPs (2 per MAC), the conventional figure of merit.
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Bytes of the cuConv stage-1 temporary: `Kh·Kw` partial planes of
+    /// `N·M·OH·OW` f32 each (§3: "a set of Hf·Wf·N·M temporary matrices").
+    /// Zero for 1×1 filters, where stage 2 is skipped and stage 1 writes
+    /// the output directly.
+    pub fn cuconv_temp_bytes(&self) -> usize {
+        if self.kh == 1 && self.kw == 1 {
+            0
+        } else {
+            self.kh * self.kw * self.output_elems() * F32_BYTES
+        }
+    }
+
+    /// Bytes of the explicit-GEMM im2col matrix:
+    /// `[N·OH·OW, C·Kh·Kw]` f32 (§2.3.1's duplicated-elements cost).
+    pub fn im2col_bytes(&self) -> usize {
+        self.n * self.out_h() * self.out_w() * self.c * self.kh * self.kw * F32_BYTES
+    }
+
+    /// Arithmetic intensity of the direct algorithm in FLOPs/byte,
+    /// counting compulsory traffic only (inputs + filters + outputs once).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes =
+            (self.input_elems() + self.filter_elems() + self.output_elems()) * F32_BYTES;
+        self.flops() as f64 / bytes as f64
+    }
+
+    /// Figure label: `[input X&Y size]-[number of filters]-[depth]`,
+    /// e.g. `7-32-832` (figures 5–7).
+    pub fn fig_label(&self) -> String {
+        format!("{}-{}-{}", self.h, self.m, self.c)
+    }
+
+    /// Table label: `[input]-[batch]-[filter]-[#filters]-[depth]`,
+    /// e.g. `7-1-1-256-832` (tables 3–5).
+    pub fn table_label(&self) -> String {
+        format!("{}-{}-{}-{}-{}", self.h, self.n, self.kh, self.m, self.c)
+    }
+
+    /// Parse a table label (the inverse of [`ConvSpec::table_label`]).
+    pub fn from_table_label(label: &str) -> Option<ConvSpec> {
+        let parts: Vec<usize> =
+            label.split('-').map(|p| p.parse().ok()).collect::<Option<_>>()?;
+        if parts.len() != 5 {
+            return None;
+        }
+        let (hw, n, k, m, c) = (parts[0], parts[1], parts[2], parts[3], parts[4]);
+        if n == 0 || k == 0 {
+            return None;
+        }
+        Some(ConvSpec::paper(hw, n, k, m, c))
+    }
+}
+
+impl fmt::Display for ConvSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "conv[n={} c={} h={} w={} m={} k={}x{} s={} p={}x{}]",
+            self.n, self.c, self.h, self.w, self.m, self.kh, self.kw, self.stride,
+            self.pad_h, self.pad_w
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_preserves_spatial_size() {
+        for k in [1, 3, 5] {
+            let s = ConvSpec::paper(14, 8, k, 64, 32);
+            assert_eq!(s.out_h(), 14, "k={k}");
+            assert_eq!(s.out_w(), 14, "k={k}");
+            assert!(s.is_valid());
+        }
+    }
+
+    #[test]
+    fn valid_rejects_oversized_filter() {
+        let mut s = ConvSpec::paper(3, 1, 5, 4, 4);
+        s.pad_h = 0;
+        s.pad_w = 0;
+        assert!(!s.is_valid());
+    }
+
+    #[test]
+    fn stride_two_halves_output() {
+        let s = ConvSpec { stride: 2, ..ConvSpec::paper(224, 1, 3, 64, 3) };
+        assert_eq!(s.out_h(), 112);
+    }
+
+    #[test]
+    fn macs_match_hand_computation() {
+        // 1 output of 4x4x2 from 3x3x3 filters: 16*2 outputs * 27 macs.
+        let s = ConvSpec::paper(4, 1, 3, 2, 3);
+        assert_eq!(s.output_elems(), 32);
+        assert_eq!(s.macs(), 32 * 27);
+        assert_eq!(s.flops(), 2 * 32 * 27);
+    }
+
+    #[test]
+    fn temp_bytes_zero_for_1x1() {
+        let s1 = ConvSpec::paper(7, 1, 1, 256, 832);
+        assert_eq!(s1.cuconv_temp_bytes(), 0);
+        let s3 = ConvSpec::paper(7, 1, 3, 384, 192);
+        assert_eq!(
+            s3.cuconv_temp_bytes(),
+            9 * s3.output_elems() * F32_BYTES
+        );
+    }
+
+    #[test]
+    fn im2col_is_k2_times_input_for_same_conv() {
+        let s = ConvSpec::paper(28, 1, 3, 64, 32);
+        // Same-padded stride-1: OH*OW == H*W, so im2col = 9x input plane bytes.
+        assert_eq!(s.im2col_bytes(), 9 * s.input_elems() * F32_BYTES);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let s = ConvSpec::paper(7, 1, 1, 256, 832);
+        assert_eq!(s.table_label(), "7-1-1-256-832");
+        assert_eq!(s.fig_label(), "7-256-832");
+        assert_eq!(ConvSpec::from_table_label("7-1-1-256-832"), Some(s));
+        assert_eq!(ConvSpec::from_table_label("bogus"), None);
+        assert_eq!(ConvSpec::from_table_label("7-1-1-256"), None);
+    }
+
+    #[test]
+    fn paper_headline_config_geometry() {
+        // 7-32-832: the 2.29x speedup config (GoogleNet inception 5a 1x1).
+        let s = ConvSpec::paper(7, 1, 1, 32, 832);
+        assert_eq!(s.output_shape(), [1, 32, 7, 7]);
+        assert_eq!(s.macs(), (7 * 7 * 32 * 832) as u64);
+    }
+}

@@ -1,0 +1,113 @@
+//! Dynamic batching policy.
+//!
+//! The server drains its bounded queue in windows: a batch closes when
+//! either `max_batch` requests are pending or the oldest request has
+//! waited `max_delay`. The drained window is then decomposed greedily
+//! onto the AOT executable batch sizes (largest-first), so a window of
+//! 7 requests runs as 4 + 2 + 1 with zero padding waste.
+
+use std::time::Duration;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Close a window at this many pending requests.
+    pub max_batch: usize,
+    /// …or when the oldest pending request has waited this long.
+    pub max_delay: Duration,
+    /// Bounded queue depth; submissions beyond this are rejected
+    /// (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            queue_capacity: 256,
+        }
+    }
+}
+
+/// Greedily decompose `pending` requests onto the available executable
+/// batch sizes (sorted ascending, must contain 1). Returns the batch
+/// sizes to run, largest-first.
+pub fn decompose_batches(pending: usize, sizes: &[usize]) -> Vec<usize> {
+    assert!(!sizes.is_empty(), "no executable batch sizes");
+    assert!(sizes.contains(&1), "batch-1 executable is required");
+    let mut sorted: Vec<usize> = sizes.to_vec();
+    sorted.sort_unstable();
+    let mut out = Vec::new();
+    let mut left = pending;
+    while left > 0 {
+        let pick = sorted
+            .iter()
+            .rev()
+            .find(|&&s| s <= left)
+            .copied()
+            .expect("sizes contains 1");
+        out.push(pick);
+        left -= pick;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_prop, Config, PairOf, UsizeIn};
+
+    #[test]
+    fn exact_decomposition() {
+        assert_eq!(decompose_batches(7, &[1, 2, 4, 8]), vec![4, 2, 1]);
+        assert_eq!(decompose_batches(8, &[1, 2, 4, 8]), vec![8]);
+        assert_eq!(decompose_batches(1, &[1, 2, 4, 8]), vec![1]);
+        assert_eq!(decompose_batches(0, &[1, 2, 4, 8]), Vec::<usize>::new());
+        assert_eq!(decompose_batches(13, &[1, 2, 4, 8]), vec![8, 4, 1]);
+    }
+
+    #[test]
+    fn works_with_batch1_only() {
+        assert_eq!(decompose_batches(3, &[1]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn prop_decomposition_sums_and_is_valid() {
+        let gen = PairOf(UsizeIn { lo: 0, hi: 500 }, UsizeIn { lo: 0, hi: 2 });
+        assert_prop(Config::default(), &gen, |&(pending, sizes_idx)| {
+            let sizes: &[usize] = match sizes_idx {
+                0 => &[1],
+                1 => &[1, 2, 4, 8],
+                _ => &[1, 3, 16],
+            };
+            let parts = decompose_batches(pending, sizes);
+            if parts.iter().sum::<usize>() != pending {
+                return Err(format!("sum {} != {pending}", parts.iter().sum::<usize>()));
+            }
+            if !parts.iter().all(|p| sizes.contains(p)) {
+                return Err("part not an executable size".into());
+            }
+            // Largest-first (monotone non-increasing).
+            if parts.windows(2).any(|w| w[0] < w[1]) {
+                return Err("not largest-first".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_greedy_is_minimal_for_pow2_sizes() {
+        // For power-of-two size sets, greedy = popcount decomposition,
+        // which is optimal (fewest executions).
+        let gen = UsizeIn { lo: 0, hi: 1000 };
+        assert_prop(Config::default(), &gen, |&pending| {
+            let parts = decompose_batches(pending, &[1, 2, 4, 8]);
+            let optimal = (pending / 8) + (pending % 8).count_ones() as usize;
+            if parts.len() != optimal {
+                return Err(format!("{} parts, optimal {optimal}", parts.len()));
+            }
+            Ok(())
+        });
+    }
+}

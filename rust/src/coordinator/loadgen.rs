@@ -1,0 +1,137 @@
+//! Open-loop load generation for serving experiments.
+//!
+//! The closed-loop drivers in the examples measure peak throughput; an
+//! inference service is evaluated under an *open-loop* arrival process
+//! (requests arrive whether or not the server keeps up). This module
+//! generates Poisson arrivals at a target rate, fires them at a
+//! [`ServerHandle`](crate::coordinator::ServerHandle), and reports the
+//! latency distribution plus the rejected (backpressured) count — the
+//! methodology behind EXPERIMENTS.md §End-to-end's load/latency curve.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::ServerHandle;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Open-loop run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Target offered load, requests/second.
+    pub rate_rps: f64,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// PRNG seed (arrivals + payloads).
+    pub seed: u64,
+}
+
+/// Outcome of an open-loop run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub completed: usize,
+    pub rejected: usize,
+    /// End-to-end latency summary over completed requests (seconds).
+    pub latency: Option<Summary>,
+    pub wall_seconds: f64,
+}
+
+/// Exponential inter-arrival sample for a Poisson process at `rate`.
+fn exp_interarrival(rng: &mut Rng, rate: f64) -> Duration {
+    let u = rng.next_f64().max(1e-12);
+    Duration::from_secs_f64(-u.ln() / rate)
+}
+
+/// Run an open-loop Poisson load test against a server handle.
+///
+/// The generator thread paces submissions; completions are collected on
+/// a channel so a slow server cannot slow the arrival process down
+/// (that is the point of open-loop testing).
+pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
+    let mut rng = Rng::new(spec.seed);
+    let elems = handle.image_elems();
+    let (done_tx, done_rx) = mpsc::channel::<Result<f64, ()>>();
+
+    let started = Instant::now();
+    let mut next_arrival = started;
+    let mut rejected = 0usize;
+    let mut inflight = 0usize;
+
+    for _ in 0..spec.requests {
+        next_arrival += exp_interarrival(&mut rng, spec.rate_rps);
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        let mut img = vec![0.0f32; elems];
+        rng.fill_uniform(&mut img, -1.0, 1.0);
+        match handle.submit(img) {
+            Ok(rx) => {
+                inflight += 1;
+                let tx = done_tx.clone();
+                // A tiny waiter thread per in-flight request keeps the
+                // generator unblocked. Serving batch sizes bound the
+                // number alive at once.
+                std::thread::spawn(move || {
+                    let r = match rx.recv() {
+                        Ok(Ok(resp)) => Ok(resp.total_seconds),
+                        _ => Err(()),
+                    };
+                    let _ = tx.send(r);
+                });
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    drop(done_tx);
+
+    let mut latencies = Vec::with_capacity(inflight);
+    let mut failed = 0usize;
+    for _ in 0..inflight {
+        match done_rx.recv() {
+            Ok(Ok(secs)) => latencies.push(secs),
+            _ => failed += 1,
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    LoadReport {
+        offered_rps: spec.rate_rps,
+        achieved_rps: latencies.len() as f64 / wall,
+        completed: latencies.len(),
+        rejected: rejected + failed,
+        latency: Summary::of(&latencies),
+        wall_seconds: wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interarrival_mean_matches_rate() {
+        let mut rng = Rng::new(7);
+        let rate = 200.0;
+        let n = 20_000;
+        let total: f64 =
+            (0..n).map(|_| exp_interarrival(&mut rng, rate).as_secs_f64()).sum();
+        let mean = total / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.1 / rate, "mean {mean}");
+    }
+
+    #[test]
+    fn interarrival_is_memoryless_ish() {
+        // CV of an exponential is 1.
+        let mut rng = Rng::new(8);
+        let rate = 100.0;
+        let xs: Vec<f64> =
+            (0..20_000).map(|_| exp_interarrival(&mut rng, rate).as_secs_f64()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.05, "cv {cv}");
+    }
+}

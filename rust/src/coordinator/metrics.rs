@@ -1,0 +1,142 @@
+//! Serving metrics: latency histograms, batch distribution, throughput.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Shared, thread-safe metrics sink.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    started: Instant,
+    queue: LatencyHistogram,
+    exec: LatencyHistogram,
+    total: LatencyHistogram,
+    requests: u64,
+    batches: u64,
+    rejected: u64,
+    batch_size_sum: u64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub uptime_seconds: f64,
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_batch_size: f64,
+    pub throughput_rps: f64,
+    pub queue_p50: f64,
+    pub queue_p99: f64,
+    pub exec_p50: f64,
+    pub exec_p99: f64,
+    pub total_mean: f64,
+    pub total_p50: f64,
+    pub total_p99: f64,
+    pub total_max: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                started: Instant::now(),
+                queue: LatencyHistogram::standard(),
+                exec: LatencyHistogram::standard(),
+                total: LatencyHistogram::standard(),
+                requests: 0,
+                batches: 0,
+                rejected: 0,
+                batch_size_sum: 0,
+            }),
+        }
+    }
+
+    /// Record one served request.
+    pub fn record_request(&self, queue_s: f64, exec_s: f64, total_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.queue.record(queue_s);
+        m.exec.record(exec_s);
+        m.total.record(total_s);
+        m.requests += 1;
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&self, size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_size_sum += size as u64;
+    }
+
+    /// Record a rejected (backpressured) submission.
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let uptime = m.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            uptime_seconds: uptime,
+            requests: m.requests,
+            batches: m.batches,
+            rejected: m.rejected,
+            mean_batch_size: if m.batches > 0 {
+                m.batch_size_sum as f64 / m.batches as f64
+            } else {
+                0.0
+            },
+            throughput_rps: if uptime > 0.0 { m.requests as f64 / uptime } else { 0.0 },
+            queue_p50: m.queue.quantile_upper_bound(0.50),
+            queue_p99: m.queue.quantile_upper_bound(0.99),
+            exec_p50: m.exec.quantile_upper_bound(0.50),
+            exec_p99: m.exec.quantile_upper_bound(0.99),
+            total_mean: m.total.mean(),
+            total_p50: m.total.quantile_upper_bound(0.50),
+            total_p99: m.total.quantile_upper_bound(0.99),
+            total_max: m.total.max(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(2);
+        for _ in 0..6 {
+            m.record_request(1e-4, 2e-3, 2.2e-3);
+        }
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        assert!(s.total_mean > 2e-3 && s.total_mean < 3e-3);
+        assert!(s.exec_p50 >= 2e-3);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.total_max, 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! The serving coordinator — Layer 3's system contribution.
+//!
+//! The paper positions cuConv for **CNN inference serving** ("short
+//! response times", batch-1 latency, framework auto-selection of the
+//! fastest convolution). This module is the serving runtime around the
+//! AOT-compiled models:
+//!
+//! * [`request`] — typed inference requests/responses with timestamps.
+//! * [`batcher`] — the dynamic batching policy: a bounded submission
+//!   queue (backpressure), a size/deadline window, and greedy
+//!   decomposition of the pending queue onto the AOT batch sizes
+//!   (`minisqueezenet_b{1,2,4,8}`).
+//! * [`metrics`] — latency histograms (queue / execute / total),
+//!   batch-size distribution, throughput counters.
+//! * [`server`] — the router thread tying it together: drain queue →
+//!   form batches → submit to the PJRT executor → scatter replies.
+//!
+//! The per-layer algorithm choice (the paper's §4.1 deployment story:
+//! "frameworks automatically select the best-performing convolution
+//! algorithm for each layer") lives in [`plan`], which autotunes a
+//! layer stack and records the winning algorithm per layer.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod plan;
+pub mod request;
+pub mod server;
+
+pub use batcher::{decompose_batches, BatchPolicy};
+pub use loadgen::{run_open_loop, LoadReport, LoadSpec};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use plan::{plan_network, LayerPlan, NetworkPlan};
+pub use request::{InferRequest, InferResponse, RequestId};
+pub use server::{Server, ServerConfig, ServerHandle};

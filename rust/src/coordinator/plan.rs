@@ -1,0 +1,153 @@
+//! Per-layer algorithm planning — the deployment story of §4.1.
+//!
+//! "Given that most of the machine learning frameworks automatically
+//! select the best-performing convolution algorithm for each
+//! convolutional layer, our implementation will improve the performance
+//! of layers with such configurations, without affecting the performance
+//! of the rest." [`plan_network`] is that selector: autotune every conv
+//! layer of a network and record the winner, so the improvement can be
+//! attributed layer by layer.
+
+use crate::algo::{autotune, Algorithm, AutotuneResult, TimingSource};
+use crate::conv::ConvSpec;
+use crate::zoo::{network_configs, Network};
+
+/// The chosen algorithm for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub layer: &'static str,
+    pub spec: ConvSpec,
+    pub chosen: Algorithm,
+    /// Modeled/measured time of the chosen algorithm (µs).
+    pub best_us: f64,
+    /// Time of the best non-cuConv baseline (µs), for attribution.
+    pub baseline_us: f64,
+}
+
+impl LayerPlan {
+    /// Layer-level speedup the plan attributes to cuConv (1.0 when a
+    /// baseline was chosen — the "without affecting the rest" half).
+    pub fn speedup(&self) -> f64 {
+        if self.chosen == Algorithm::CuConv {
+            self.baseline_us / self.best_us
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A planned network.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub network: Network,
+    pub batch: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl NetworkPlan {
+    /// Total modeled conv time with the plan's per-layer choices (µs).
+    pub fn total_us(&self) -> f64 {
+        self.layers.iter().map(|l| l.best_us).sum()
+    }
+
+    /// Total modeled time if cuConv did not exist (µs).
+    pub fn baseline_total_us(&self) -> f64 {
+        self.layers.iter().map(|l| l.baseline_us).sum()
+    }
+
+    /// Network-level improvement from adding cuConv to the algorithm
+    /// pool (the paper's bottom-line deployment claim).
+    pub fn network_speedup(&self) -> f64 {
+        self.baseline_total_us() / self.total_us()
+    }
+
+    /// Layers where cuConv was auto-selected.
+    pub fn cuconv_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.chosen == Algorithm::CuConv).count()
+    }
+}
+
+/// Autotune every distinct conv layer of `network` at `batch`.
+pub fn plan_network(network: Network, batch: usize, source: TimingSource) -> NetworkPlan {
+    let mut layers = Vec::new();
+    for entry in network_configs(network) {
+        let spec = entry.spec.with_batch(batch);
+        let result: AutotuneResult = autotune(&spec, source, 3);
+        let best = result.best().expect("at least one algorithm available");
+        let baseline_us = result
+            .entries
+            .iter()
+            .filter(|e| e.algo != Algorithm::CuConv && e.algo != Algorithm::Direct)
+            .map(|e| e.score_us)
+            .fold(f64::INFINITY, f64::min);
+        layers.push(LayerPlan {
+            layer: entry.layer,
+            spec,
+            chosen: best.algo,
+            best_us: best.score_us,
+            baseline_us,
+        });
+    }
+    NetworkPlan { network, batch, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn googlenet_batch1_selects_cuconv_somewhere() {
+        // Figure 5's winning region is GoogleNet's small-input 1x1
+        // layers at batch 1; the planner must pick cuConv there.
+        let plan = plan_network(Network::GoogleNet, 1, TimingSource::GpuModel);
+        assert_eq!(plan.layers.len(), 42);
+        assert!(plan.cuconv_layers() > 0, "cuConv never selected");
+        assert!(
+            plan.network_speedup() >= 1.0,
+            "adding an algorithm can only help: {}",
+            plan.network_speedup()
+        );
+    }
+
+    #[test]
+    fn large_batch_mostly_baselines() {
+        let plan = plan_network(Network::GoogleNet, 64, TimingSource::GpuModel);
+        // §4.1: "Almost all of them have a batch size of 1" — at batch
+        // 64 cuConv should rarely (if ever) win.
+        assert!(
+            plan.cuconv_layers() <= plan.layers.len() / 4,
+            "cuconv won {} of {} layers at batch 64",
+            plan.cuconv_layers(),
+            plan.layers.len()
+        );
+    }
+
+    #[test]
+    fn vgg_3x3_prefers_winograd() {
+        let plan = plan_network(Network::Vgg19, 8, TimingSource::GpuModel);
+        let wino = plan
+            .layers
+            .iter()
+            .filter(|l| {
+                matches!(l.chosen, Algorithm::Winograd | Algorithm::WinogradNonfused)
+            })
+            .count();
+        assert!(
+            wino >= plan.layers.len() / 2,
+            "winograd won only {wino}/{} VGG layers",
+            plan.layers.len()
+        );
+    }
+
+    #[test]
+    fn speedup_attribution_is_consistent() {
+        let plan = plan_network(Network::SqueezeNet, 1, TimingSource::GpuModel);
+        for l in &plan.layers {
+            assert!(l.best_us > 0.0);
+            assert!(l.speedup() >= 1.0 - 1e-9, "{:?}", l);
+            if l.chosen != Algorithm::CuConv {
+                assert_eq!(l.speedup(), 1.0);
+            }
+        }
+    }
+}

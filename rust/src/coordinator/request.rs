@@ -1,0 +1,61 @@
+//! Inference request/response types.
+
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// One inference request: a single image in NCHW layout (C=3, H=W=32
+/// for MiniSqueezeNet), flattened.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: RequestId,
+    pub pixels: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// The served reply.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// Class logits.
+    pub logits: Vec<f32>,
+    /// Seconds spent waiting in the queue before batching.
+    pub queue_seconds: f64,
+    /// Seconds of PJRT execution (shared by the whole batch).
+    pub exec_seconds: f64,
+    /// End-to-end seconds from enqueue to reply.
+    pub total_seconds: f64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}
+
+impl InferResponse {
+    /// Argmax class.
+    pub fn predicted_class(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicted_class_is_argmax() {
+        let r = InferResponse {
+            id: 1,
+            logits: vec![0.1, 2.0, -1.0, 1.5],
+            queue_seconds: 0.0,
+            exec_seconds: 0.0,
+            total_seconds: 0.0,
+            batch_size: 1,
+        };
+        assert_eq!(r.predicted_class(), 1);
+    }
+}

@@ -1,0 +1,315 @@
+//! The serving router: bounded queue → dynamic batches → PJRT → replies.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::batcher::{decompose_batches, BatchPolicy};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::runtime::{spawn_executor, ExecutorHandle, Manifest};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Model family to serve (e.g. `minisqueezenet`).
+    pub model: String,
+    pub policy: BatchPolicy,
+    /// Validate every model executable against its AOT sample I/O pair
+    /// before serving (slower startup, catches artifact skew).
+    pub validate_on_start: bool,
+    /// Cost-aware batching: time every executable variant at startup
+    /// and only batch onto sizes whose per-image cost is within
+    /// [`ADAPTIVE_SLACK`] of the best. On accelerators large batches
+    /// amortize weight traffic and all sizes survive; on this CPU-PJRT
+    /// testbed interpret-mode execution grows superlinearly with batch,
+    /// and pruning the inefficient sizes recovers the batch-1-grade
+    /// throughput while keeping multi-size batching available
+    /// (EXPERIMENTS.md §Perf, L3 iteration 2).
+    pub adaptive_sizes: bool,
+}
+
+/// Per-image cost slack for adaptive size pruning (1.0 = best only).
+pub const ADAPTIVE_SLACK: f64 = 1.25;
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            model: "minisqueezenet".to_string(),
+            policy: BatchPolicy::default(),
+            validate_on_start: true,
+            adaptive_sizes: true,
+        }
+    }
+}
+
+struct QueuedRequest {
+    req: InferRequest,
+    resp: mpsc::Sender<Result<InferResponse>>,
+}
+
+/// The running server. Dropping it shuts the router down.
+pub struct Server {
+    handle: ServerHandle,
+    router: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    // Keeps the executor thread alive for the server's lifetime.
+    _executor_guard: crate::runtime::executor::ExecutorThread,
+}
+
+/// Cheap cloneable client handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<QueuedRequest>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    image_elems: usize,
+    classes: usize,
+}
+
+impl Server {
+    /// Start serving `config.model` from the artifact manifest.
+    pub fn start(manifest: Manifest, config: ServerConfig) -> Result<Server> {
+        let family = manifest.model_family(&config.model);
+        if family.is_empty() {
+            bail!("no '{}' model artifacts in manifest", config.model);
+        }
+        let batch_sizes: Vec<usize> = family.iter().map(|m| m.batch).collect();
+        if !batch_sizes.contains(&1) {
+            bail!("model family must include a batch-1 executable");
+        }
+        // name + per-image input size per batch variant.
+        let mut variants: Vec<(usize, String)> =
+            family.iter().map(|m| (m.batch, m.name.clone())).collect();
+        let image_elems: usize = family[0].input_shape.iter().skip(1).product();
+        let classes: usize = family[0].output_shape[1];
+        let names: Vec<String> = variants.iter().map(|(_, n)| n.clone()).collect();
+
+        let (_executor_guard, exec) = spawn_executor(manifest)?;
+        exec.warmup(&names).context("compiling model executables")?;
+        if config.validate_on_start {
+            for name in &names {
+                let err = exec.validate_model(name)?;
+                if err > 5e-4 {
+                    bail!("artifact {name} fails sample-I/O validation (err {err})");
+                }
+            }
+        }
+        if config.adaptive_sizes && variants.len() > 1 {
+            variants = prune_inefficient_sizes(&exec, variants, image_elems)?;
+        }
+
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(config.policy.queue_capacity);
+
+        let router = {
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let policy = config.policy;
+            std::thread::Builder::new().name("cuconv-router".into()).spawn(move || {
+                router_loop(rx, exec, variants, image_elems, classes, policy, metrics, shutdown)
+            })?
+        };
+
+        let handle = ServerHandle {
+            tx,
+            metrics,
+            next_id: Arc::new(AtomicU64::new(1)),
+            image_elems,
+            classes,
+        };
+        Ok(Server { handle, router: Some(router), shutdown, _executor_guard })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.handle.metrics.snapshot()
+    }
+
+    /// Stop the router (pending queue is drained with errors).
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl ServerHandle {
+    /// Submit one image; returns a receiver for the reply. Errors
+    /// immediately when the queue is full (backpressure) or the image
+    /// has the wrong size.
+    pub fn submit(&self, pixels: Vec<f32>) -> Result<Receiver<Result<InferResponse>>> {
+        if pixels.len() != self.image_elems {
+            bail!("image has {} elems, expected {}", pixels.len(), self.image_elems);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let queued = QueuedRequest {
+            req: InferRequest { id, pixels, enqueued: Instant::now() },
+            resp: resp_tx,
+        };
+        match self.tx.try_send(queued) {
+            Ok(()) => Ok(resp_rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(anyhow!("queue full ({} pending)", self.queue_capacity()))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server is shut down")),
+        }
+    }
+
+    /// Blocking inference.
+    pub fn infer(&self, pixels: Vec<f32>) -> Result<InferResponse> {
+        let rx = self.submit(pixels)?;
+        rx.recv().map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn queue_capacity(&self) -> usize {
+        // sync_channel has no capacity getter; report a static hint.
+        0
+    }
+}
+
+/// Time each executable variant and keep only the sizes whose per-image
+/// cost is within [`ADAPTIVE_SLACK`] of the best (batch 1 always kept).
+fn prune_inefficient_sizes(
+    exec: &ExecutorHandle,
+    variants: Vec<(usize, String)>,
+    image_elems: usize,
+) -> Result<Vec<(usize, String)>> {
+    let mut costs = Vec::with_capacity(variants.len());
+    for (batch, name) in &variants {
+        let input = vec![0.0f32; batch * image_elems];
+        // Warm + two timed runs; take the min (steady-state estimate).
+        exec.run_model(name, input.clone())?;
+        let mut best = f64::INFINITY;
+        for _ in 0..2 {
+            let (_, t) = exec.run_model(name, input.clone())?;
+            best = best.min(t.exec_seconds);
+        }
+        costs.push(best / *batch as f64);
+    }
+    let min_cost = costs.iter().copied().fold(f64::INFINITY, f64::min);
+    let kept: Vec<(usize, String)> = variants
+        .into_iter()
+        .zip(costs)
+        .filter(|((batch, _), cost)| *batch == 1 || *cost <= min_cost * ADAPTIVE_SLACK)
+        .map(|(v, _)| v)
+        .collect();
+    Ok(kept)
+}
+
+/// The router thread body: window the queue, batch, execute, scatter.
+#[allow(clippy::too_many_arguments)]
+fn router_loop(
+    rx: Receiver<QueuedRequest>,
+    exec: ExecutorHandle,
+    variants: Vec<(usize, String)>,
+    image_elems: usize,
+    classes: usize,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let sizes: Vec<usize> = variants.iter().map(|(b, _)| *b).collect();
+    let name_for = |batch: usize| -> &str {
+        &variants.iter().find(|(b, _)| *b == batch).expect("known size").1
+    };
+
+    let mut window: Vec<QueuedRequest> = Vec::new();
+    loop {
+        // Fill the window: block briefly for the first request, then
+        // keep draining until the policy closes the window.
+        if window.is_empty() {
+            match rx.recv_timeout(policy.max_delay) {
+                Ok(q) => window.push(q),
+                Err(RecvTimeoutError::Timeout) => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        let window_open = window[0].req.enqueued;
+        while window.len() < policy.max_batch {
+            let elapsed = window_open.elapsed();
+            if elapsed >= policy.max_delay {
+                break;
+            }
+            match rx.recv_timeout(policy.max_delay - elapsed) {
+                Ok(q) => window.push(q),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Execute the window as greedy sub-batches, largest first.
+        let batch_started = Instant::now();
+        for chunk_size in decompose_batches(window.len(), &sizes) {
+            let chunk: Vec<QueuedRequest> = window.drain(..chunk_size).collect();
+            metrics.record_batch(chunk_size);
+            // Gather pixels into one NCHW batch buffer.
+            let mut batch_input = Vec::with_capacity(chunk_size * image_elems);
+            for q in &chunk {
+                batch_input.extend_from_slice(&q.req.pixels);
+            }
+            match exec.run_model(name_for(chunk_size), batch_input) {
+                Ok((logits, timing)) => {
+                    for (i, q) in chunk.into_iter().enumerate() {
+                        let total = q.req.enqueued.elapsed().as_secs_f64();
+                        let queue_s =
+                            (batch_started - q.req.enqueued).as_secs_f64().max(0.0);
+                        let resp = InferResponse {
+                            id: q.req.id,
+                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                            queue_seconds: queue_s,
+                            exec_seconds: timing.exec_seconds,
+                            total_seconds: total,
+                            batch_size: chunk_size,
+                        };
+                        metrics.record_request(queue_s, timing.exec_seconds, total);
+                        let _ = q.resp.send(Ok(resp));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("execution failed: {e}");
+                    for q in chunk {
+                        let _ = q.resp.send(Err(anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+
+        if shutdown.load(Ordering::SeqCst) && window.is_empty() {
+            return;
+        }
+    }
+}

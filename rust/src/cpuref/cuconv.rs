@@ -1,0 +1,165 @@
+//! CPU mirror of the paper's two-stage cuConv algorithm (§3).
+//!
+//! Stage 1 (`scalar_prods`): for every filter tap (ky,kx) — a "filter
+//! row" in the paper's terminology, the depth-C vector at a fixed filter
+//! position — compute its dot product with the input row at every output
+//! position, for every (input n, filter m) pair. The result is the
+//! paper's set of `Kh·Kw·N·M` temporary matrices of size `OH×OW`.
+//!
+//! Stage 2 (`sum_taps`): sum the `Kh·Kw` temporaries of each (n,m) pair
+//! into the final output plane.
+//!
+//! For 1×1 filters stage 2 is skipped: stage 1 writes final outputs
+//! directly, exactly as the paper's `scalar_prods_kernel` does.
+//!
+//! This mirror exists so the decomposition itself is testable in Rust
+//! (shape algebra, tap indexing, the 1×1 fast path) independent of the
+//! Pallas kernels, and to serve as a CPU baseline of the same algorithm.
+
+use crate::conv::ConvSpec;
+use crate::cpuref::check_shapes;
+use crate::tensor::Tensor;
+
+/// Stage-1 output: `Kh·Kw` partial planes, each `[N, M, OH, OW]`,
+/// flattened tap-major to match the Pallas kernel's temp layout.
+pub struct ScalarProds {
+    pub taps: usize,
+    pub plane_elems: usize,
+    pub data: Vec<f32>,
+}
+
+/// Stage 1: per-tap channel contraction.
+pub fn scalar_prods(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> ScalarProds {
+    check_shapes(spec, input, filters);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let taps = spec.kh * spec.kw;
+    let plane_elems = spec.n * spec.m * oh * ow;
+    let mut data = vec![0.0f32; taps * plane_elems];
+    for ky in 0..spec.kh {
+        for kx in 0..spec.kw {
+            let tap = ky * spec.kw + kx;
+            let plane = &mut data[tap * plane_elems..(tap + 1) * plane_elems];
+            for n in 0..spec.n {
+                for m in 0..spec.m {
+                    for oy in 0..oh {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
+                        for ox in 0..ow {
+                            let ix =
+                                (ox * spec.stride + kx) as isize - spec.pad_w as isize;
+                            let mut acc = 0.0f32;
+                            if iy >= 0
+                                && iy < spec.h as isize
+                                && ix >= 0
+                                && ix < spec.w as isize
+                            {
+                                // The channel dot product: this is the
+                                // "filter row × input row" scalar product
+                                // the paper's first kernel performs.
+                                for c in 0..spec.c {
+                                    acc += input.at(n, c, iy as usize, ix as usize)
+                                        * filters.at(m, c, ky, kx);
+                                }
+                            }
+                            plane[((n * spec.m + m) * oh + oy) * ow + ox] = acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ScalarProds { taps, plane_elems, data }
+}
+
+/// Stage 2: sum the per-tap partial planes into the output tensor.
+pub fn sum_taps(spec: &ConvSpec, prods: &ScalarProds) -> Tensor {
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    assert_eq!(prods.plane_elems, spec.n * spec.m * oh * ow);
+    let mut out = vec![0.0f32; prods.plane_elems];
+    for tap in 0..prods.taps {
+        let plane = &prods.data[tap * prods.plane_elems..(tap + 1) * prods.plane_elems];
+        for (o, p) in out.iter_mut().zip(plane.iter()) {
+            *o += p;
+        }
+    }
+    Tensor::from_vec(spec.n, spec.m, oh, ow, out)
+}
+
+/// The full two-stage algorithm with the paper's 1×1 fast path.
+pub fn conv_two_stage(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    let prods = scalar_prods(spec, input, filters);
+    if spec.kh == 1 && spec.kw == 1 {
+        // §3: "For convolutions which involve filters of size 1×1, the
+        // second kernel is not necessary" — the single tap plane IS the
+        // output.
+        let (oh, ow) = (spec.out_h(), spec.out_w());
+        Tensor::from_vec(spec.n, spec.m, oh, ow, prods.data)
+    } else {
+        sum_taps(spec, &prods)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpuref::naive::conv_naive;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stage1_produces_khkw_planes() {
+        let spec = ConvSpec::paper(5, 1, 3, 2, 4);
+        let mut rng = Rng::new(1);
+        let input = Tensor::random(1, 4, 5, 5, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(2, 4, 3, 3, &mut rng, -1.0, 1.0);
+        let prods = scalar_prods(&spec, &input, &filters);
+        assert_eq!(prods.taps, 9);
+        assert_eq!(prods.plane_elems, 1 * 2 * 5 * 5);
+        assert_eq!(prods.data.len(), 9 * 50);
+    }
+
+    #[test]
+    fn two_stage_matches_oracle_3x3() {
+        let spec = ConvSpec::paper(8, 2, 3, 3, 5);
+        let mut rng = Rng::new(2);
+        let input = Tensor::random(2, 5, 8, 8, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(3, 5, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_two_stage(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+
+    #[test]
+    fn one_by_one_fast_path_matches_oracle() {
+        let spec = ConvSpec::paper(7, 1, 1, 32, 16);
+        let mut rng = Rng::new(3);
+        let input = Tensor::random(1, 16, 7, 7, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(32, 16, 1, 1, &mut rng, -1.0, 1.0);
+        let got = conv_two_stage(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-5);
+        // And the temp buffer is exactly one plane (no stage-2 temp).
+        assert_eq!(spec.cuconv_temp_bytes(), 0);
+    }
+
+    #[test]
+    fn stage2_is_plain_sum() {
+        let spec = ConvSpec::paper(2, 1, 3, 1, 1);
+        let prods = ScalarProds {
+            taps: 9,
+            plane_elems: 4,
+            data: (0..36).map(|_| 1.0).collect(),
+        };
+        let out = sum_taps(&spec, &prods);
+        assert!(out.data().iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn stride_and_padding_handled() {
+        let spec = ConvSpec { stride: 2, ..ConvSpec::paper(9, 1, 3, 2, 3) };
+        let mut rng = Rng::new(4);
+        let input = Tensor::random(1, 3, 9, 9, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(2, 3, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_two_stage(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+}

@@ -1,0 +1,238 @@
+//! FFT-based convolution (§2.3.3) on a hand-rolled radix-2 FFT.
+//!
+//! Convolution in the spatial domain is point-wise multiplication in the
+//! frequency domain. CNN "convolution" is cross-correlation, so we
+//! multiply by the conjugate of the filter spectrum. The transforms are
+//! amortized exactly as the paper describes: each input plane is
+//! transformed once and reused across all M filters; each filter plane is
+//! transformed once and reused across all N inputs — the reuse that makes
+//! FFT competitive only for large N·M.
+//!
+//! Supports stride-1 convolutions of any filter size/padding.
+
+use crate::conv::ConvSpec;
+use crate::cpuref::check_shapes;
+use crate::tensor::Tensor;
+
+/// Complex number as (re, im) pairs in flat arrays for cache friendliness.
+type C = (f32, f32);
+
+#[inline]
+fn cmul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+#[inline]
+fn cmul_conj(a: C, b: C) -> C {
+    // a * conj(b)
+    (a.0 * b.0 + a.1 * b.1, a.1 * b.0 - a.0 * b.1)
+}
+
+/// In-place iterative radix-2 FFT over a buffer of length `n` (power of
+/// two). `inverse` applies the conjugate transform *without* the 1/n
+/// scaling (callers scale once at the end).
+pub fn fft_inplace(buf: &mut [C], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0f64 } else { -1.0f64 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * std::f64::consts::TAU / len as f64;
+        let (wr, wi) = (ang.cos() as f32, ang.sin() as f32);
+        for start in (0..n).step_by(len) {
+            let mut w: C = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = buf[start + k];
+                let v = cmul(buf[start + k + len / 2], w);
+                buf[start + k] = (u.0 + v.0, u.1 + v.1);
+                buf[start + k + len / 2] = (u.0 - v.0, u.1 - v.1);
+                w = cmul(w, (wr, wi));
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// 2D FFT of an `s×s` complex plane (rows then columns).
+pub fn fft2_inplace(plane: &mut [C], s: usize, inverse: bool) {
+    assert_eq!(plane.len(), s * s);
+    // Rows.
+    for r in 0..s {
+        fft_inplace(&mut plane[r * s..(r + 1) * s], inverse);
+    }
+    // Columns via transpose-free strided gather (s is small; simple copy).
+    let mut col = vec![(0.0f32, 0.0f32); s];
+    for c in 0..s {
+        for r in 0..s {
+            col[r] = plane[r * s + c];
+        }
+        fft_inplace(&mut col, inverse);
+        for r in 0..s {
+            plane[r * s + c] = col[r];
+        }
+    }
+}
+
+fn next_pow2(v: usize) -> usize {
+    v.next_power_of_two()
+}
+
+/// FFT convolution. Transforms each input and filter plane once, forms
+/// the per-(n,m) spectral accumulation over channels, and inverse
+/// transforms per output plane.
+pub fn conv_fft(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    check_shapes(spec, input, filters);
+    assert_eq!(spec.stride, 1, "fft conv is stride-1 only");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    // Linear-correlation support needs S >= dim + k - 1 in each axis.
+    let s = next_pow2((spec.h + spec.kh - 1).max(spec.w + spec.kw - 1));
+    let plane = s * s;
+
+    // FFT of every input plane: N*C transforms, reused across M filters.
+    let mut in_f = vec![(0.0f32, 0.0f32); spec.n * spec.c * plane];
+    for n in 0..spec.n {
+        for c in 0..spec.c {
+            let dst = &mut in_f[(n * spec.c + c) * plane..(n * spec.c + c + 1) * plane];
+            for y in 0..spec.h {
+                for x in 0..spec.w {
+                    dst[y * s + x] = (input.at(n, c, y, x), 0.0);
+                }
+            }
+            fft2_inplace(dst, s, false);
+        }
+    }
+    // FFT of every filter plane: M*C transforms, reused across N inputs.
+    let mut fl_f = vec![(0.0f32, 0.0f32); spec.m * spec.c * plane];
+    for m in 0..spec.m {
+        for c in 0..spec.c {
+            let dst = &mut fl_f[(m * spec.c + c) * plane..(m * spec.c + c + 1) * plane];
+            for y in 0..spec.kh {
+                for x in 0..spec.kw {
+                    dst[y * s + x] = (filters.at(m, c, y, x), 0.0);
+                }
+            }
+            fft2_inplace(dst, s, false);
+        }
+    }
+
+    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
+    let scale = 1.0 / plane as f32;
+    let mut acc = vec![(0.0f32, 0.0f32); plane];
+    for n in 0..spec.n {
+        for m in 0..spec.m {
+            acc.fill((0.0, 0.0));
+            for c in 0..spec.c {
+                let a = &in_f[(n * spec.c + c) * plane..(n * spec.c + c + 1) * plane];
+                let b = &fl_f[(m * spec.c + c) * plane..(m * spec.c + c + 1) * plane];
+                for i in 0..plane {
+                    // Cross-correlation: input × conj(filter).
+                    let p = cmul_conj(a[i], b[i]);
+                    acc[i].0 += p.0;
+                    acc[i].1 += p.1;
+                }
+            }
+            fft2_inplace(&mut acc, s, true);
+            // out(oy,ox) = corr(oy - pad_h, ox - pad_w), circular indices.
+            for oy in 0..oh {
+                let cy = (oy as isize - spec.pad_h as isize).rem_euclid(s as isize) as usize;
+                for ox in 0..ow {
+                    let cx =
+                        (ox as isize - spec.pad_w as isize).rem_euclid(s as isize) as usize;
+                    *out.at_mut(n, m, oy, ox) = acc[cy * s + cx].0 * scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpuref::naive::conv_naive;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_roundtrip_identity() {
+        let mut rng = Rng::new(61);
+        let mut buf: Vec<C> = (0..64).map(|_| (rng.next_f32(), rng.next_f32())).collect();
+        let orig = buf.clone();
+        fft_inplace(&mut buf, false);
+        fft_inplace(&mut buf, true);
+        for (a, b) in buf.iter().zip(orig.iter()) {
+            assert!((a.0 / 64.0 - b.0).abs() < 1e-4);
+            assert!((a.1 / 64.0 - b.1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut buf = vec![(0.0f32, 0.0f32); 16];
+        buf[0] = (1.0, 0.0);
+        fft_inplace(&mut buf, false);
+        for v in buf {
+            assert!((v.0 - 1.0).abs() < 1e-5 && v.1.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matches_oracle_3x3_same() {
+        let spec = ConvSpec::paper(8, 1, 3, 2, 3);
+        let mut rng = Rng::new(62);
+        let input = Tensor::random(1, 3, 8, 8, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(2, 3, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_fft(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matches_oracle_5x5_batched() {
+        let spec = ConvSpec::paper(7, 2, 5, 3, 2);
+        let mut rng = Rng::new(63);
+        let input = Tensor::random(2, 2, 7, 7, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(3, 2, 5, 5, &mut rng, -1.0, 1.0);
+        let got = conv_fft(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matches_oracle_1x1() {
+        let spec = ConvSpec::paper(4, 1, 1, 4, 3);
+        let mut rng = Rng::new(64);
+        let input = Tensor::random(1, 3, 4, 4, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(4, 3, 1, 1, &mut rng, -1.0, 1.0);
+        let got = conv_fft(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-4);
+    }
+
+    #[test]
+    fn no_padding_valid_conv() {
+        let spec = ConvSpec {
+            n: 1, c: 2, h: 6, w: 6, m: 2, kh: 3, kw: 3,
+            stride: 1, pad_h: 0, pad_w: 0,
+        };
+        let mut rng = Rng::new(65);
+        let input = Tensor::random(1, 2, 6, 6, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(2, 2, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_fft(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-4);
+    }
+}

@@ -1,0 +1,182 @@
+//! Blocked, multithreaded SGEMM.
+//!
+//! The GEMM substrate backing [`crate::cpuref::im2col`] and the Winograd
+//! non-fused path. Row-major `C[mxn] = A[mxk] · B[kxn]`, cache-blocked
+//! with a small register-tiled microkernel, parallelized over row panels
+//! with scoped threads.
+
+/// Tuning parameters (fit L1/L2 on typical x86).
+const MC: usize = 64; // rows of A per panel
+const KC: usize = 256; // depth per panel
+const NR: usize = 8; // microkernel columns
+
+/// `c += a · b`, row-major, single-threaded.
+pub fn sgemm_st(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            block_panel(i0, i1, p0, p1, k, n, a, b, c);
+        }
+    }
+}
+
+#[inline]
+fn block_panel(
+    i0: usize,
+    i1: usize,
+    p0: usize,
+    p1: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in p0..p1 {
+            let av = arow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            // Vectorizable inner loop over N in NR-wide chunks.
+            let mut j = 0;
+            while j + NR <= n {
+                for u in 0..NR {
+                    crow[j + u] += av * brow[j + u];
+                }
+                j += NR;
+            }
+            while j < n {
+                crow[j] += av * brow[j];
+                j += 1;
+            }
+        }
+    }
+}
+
+/// `c += a · b`, parallel over row panels. `threads == 1` falls back to
+/// the single-threaded path (no spawn overhead).
+pub fn sgemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 || m < 2 * MC {
+        sgemm_st(m, k, n, a, b, c);
+        return;
+    }
+    // Split C into row bands, one per thread; each band only touches its
+    // own rows of A and C so the split is embarrassingly parallel.
+    let rows_per = m.div_ceil(threads);
+    let mut bands: Vec<&mut [f32]> = Vec::with_capacity(threads);
+    let mut rest = c;
+    for t in 0..threads {
+        let lo = t * rows_per;
+        let hi = ((t + 1) * rows_per).min(m);
+        if lo >= hi {
+            break;
+        }
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        bands.push(band);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (t, band) in bands.into_iter().enumerate() {
+            let lo = t * rows_per;
+            let hi = (lo + rows_per).min(m);
+            let a_band = &a[lo * k..hi * k];
+            s.spawn(move || {
+                sgemm_st(hi - lo, k, n, a_band, b, band);
+            });
+        }
+    });
+}
+
+/// Default thread count for CPU substrate work.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (16, 16, 16), (33, 65, 17)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let want = naive_gemm(m, k, n, &a, &b);
+            let mut got = vec![0.0; m * n];
+            sgemm_st(m, k, n, &a, &b, &mut got);
+            let err: f32 = want
+                .iter()
+                .zip(got.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max);
+            assert!(err < 1e-4, "({m},{k},{n}): {err}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_single_threaded() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (200, 64, 48);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c4 = vec![0.0; m * n];
+        sgemm_st(m, k, n, &a, &b, &mut c1);
+        sgemm(m, k, n, &a, &b, &mut c4, 4);
+        let err: f32 = c1
+            .iter()
+            .zip(c4.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-4);
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = vec![1.0, 0.0, 0.0, 1.0]; // I2
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![1.0; 4];
+        sgemm_st(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+}

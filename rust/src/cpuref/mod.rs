@@ -1,0 +1,140 @@
+//! CPU convolution substrate.
+//!
+//! Pure-Rust implementations of every algorithm family the paper
+//! evaluates (Table 2), used three ways:
+//!
+//! 1. **Oracle** — [`naive::conv_naive`] is the clear-loop reference that
+//!    every other implementation (Rust and PJRT-executed Pallas) is
+//!    tested against.
+//! 2. **Baselines** — the paper compares cuConv against cuDNN's GEMM,
+//!    Winograd and FFT families; cuDNN is closed-source, so we implement
+//!    each family ourselves ([`im2col`], [`winograd`], [`fft`]) and the
+//!    paper's own two-stage algorithm ([`cuconv`]).
+//! 3. **Fallback executor** — the coordinator can serve requests without
+//!    AOT artifacts using [`blocked`]'s parallel implementation.
+//!
+//! All functions take NCHW inputs `[N,C,H,W]`, filters `[M,C,Kh,Kw]` and
+//! produce `[N,M,OH,OW]`.
+
+pub mod blocked;
+pub mod cuconv;
+pub mod fft;
+pub mod gemm;
+pub mod im2col;
+pub mod naive;
+pub mod winograd;
+
+use crate::conv::ConvSpec;
+use crate::tensor::Tensor;
+
+/// The CPU execution paths available for a convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CpuImpl {
+    Naive,
+    Blocked,
+    CuConvTwoStage,
+    Im2colGemm,
+    Winograd,
+    Fft,
+}
+
+impl CpuImpl {
+    pub const ALL: [CpuImpl; 6] = [
+        CpuImpl::Naive,
+        CpuImpl::Blocked,
+        CpuImpl::CuConvTwoStage,
+        CpuImpl::Im2colGemm,
+        CpuImpl::Winograd,
+        CpuImpl::Fft,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CpuImpl::Naive => "naive",
+            CpuImpl::Blocked => "blocked",
+            CpuImpl::CuConvTwoStage => "cuconv",
+            CpuImpl::Im2colGemm => "im2col",
+            CpuImpl::Winograd => "winograd",
+            CpuImpl::Fft => "fft",
+        }
+    }
+
+    /// Whether this implementation supports the given spec (mirrors the
+    /// paper's observation that cuDNN variants have parameter
+    /// limitations; e.g. our Winograd is 3×3-stride-1 only).
+    pub fn supports(&self, spec: &ConvSpec) -> bool {
+        match self {
+            CpuImpl::Winograd => spec.kh == 3 && spec.kw == 3 && spec.stride == 1,
+            CpuImpl::Fft => spec.stride == 1,
+            _ => true,
+        }
+    }
+
+    /// Run the convolution with this implementation.
+    pub fn run(&self, spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+        assert!(self.supports(spec), "{} does not support {}", self.name(), spec);
+        match self {
+            CpuImpl::Naive => naive::conv_naive(spec, input, filters),
+            CpuImpl::Blocked => blocked::conv_blocked(spec, input, filters),
+            CpuImpl::CuConvTwoStage => cuconv::conv_two_stage(spec, input, filters),
+            CpuImpl::Im2colGemm => im2col::conv_im2col(spec, input, filters),
+            CpuImpl::Winograd => winograd::conv_winograd_3x3(spec, input, filters),
+            CpuImpl::Fft => fft::conv_fft(spec, input, filters),
+        }
+    }
+}
+
+/// Shape-check helper shared by the implementations.
+pub(crate) fn check_shapes(spec: &ConvSpec, input: &Tensor, filters: &Tensor) {
+    assert!(spec.is_valid(), "invalid spec {spec}");
+    assert_eq!(input.shape(), spec.input_shape(), "input shape mismatch for {spec}");
+    assert_eq!(filters.shape(), spec.filter_shape(), "filter shape mismatch for {spec}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every implementation must agree with the naive oracle on a set of
+    /// shapes that exercises 1x1/3x3/5x5, padding, stride and batching.
+    #[test]
+    fn all_impls_match_oracle() {
+        let specs = [
+            ConvSpec::paper(7, 2, 1, 8, 16),
+            ConvSpec::paper(9, 1, 3, 4, 3),
+            ConvSpec::paper(7, 2, 5, 6, 5),
+            ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 4, 2) },
+            ConvSpec { pad_h: 2, pad_w: 1, ..ConvSpec::paper(6, 1, 3, 2, 2) },
+        ];
+        let mut rng = Rng::new(0xABCD);
+        for spec in specs {
+            let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+            let filters =
+                Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+            let oracle = naive::conv_naive(&spec, &input, &filters);
+            for imp in CpuImpl::ALL {
+                if imp == CpuImpl::Naive || !imp.supports(&spec) {
+                    continue;
+                }
+                let got = imp.run(&spec, &input, &filters);
+                let err = got.rel_l2_error(&oracle);
+                assert!(
+                    err < 2e-5,
+                    "{} vs oracle: rel_l2={} on {}",
+                    imp.name(),
+                    err,
+                    spec
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn winograd_support_is_3x3_stride1_only() {
+        assert!(CpuImpl::Winograd.supports(&ConvSpec::paper(8, 1, 3, 4, 4)));
+        assert!(!CpuImpl::Winograd.supports(&ConvSpec::paper(8, 1, 5, 4, 4)));
+        assert!(!CpuImpl::Winograd
+            .supports(&ConvSpec { stride: 2, ..ConvSpec::paper(8, 1, 3, 4, 4) }));
+    }
+}

@@ -1,0 +1,128 @@
+//! The clear-loop reference convolution (the oracle).
+//!
+//! Directly applies the convolution formula of §2.1: each output element
+//! is the dot product of a filter with the input subvolume at its
+//! position. Written for clarity, not speed — every other implementation
+//! is validated against this one.
+
+use crate::conv::ConvSpec;
+use crate::cpuref::check_shapes;
+use crate::tensor::Tensor;
+
+/// Direct convolution, NCHW, arbitrary stride/padding.
+pub fn conv_naive(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    check_shapes(spec, input, filters);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
+    for n in 0..spec.n {
+        for m in 0..spec.m {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for c in 0..spec.c {
+                        for ky in 0..spec.kh {
+                            let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
+                            if iy < 0 || iy >= spec.h as isize {
+                                continue;
+                            }
+                            for kx in 0..spec.kw {
+                                let ix =
+                                    (ox * spec.stride + kx) as isize - spec.pad_w as isize;
+                                if ix < 0 || ix >= spec.w as isize {
+                                    continue;
+                                }
+                                acc += input.at(n, c, iy as usize, ix as usize)
+                                    * filters.at(m, c, ky, kx);
+                            }
+                        }
+                    }
+                    *out.at_mut(n, m, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1x1 convolution with identity-like filters is a channel mix.
+    #[test]
+    fn conv_1x1_is_channel_mix() {
+        let spec = ConvSpec::paper(2, 1, 1, 2, 3);
+        let mut input = Tensor::zeros(1, 3, 2, 2);
+        for c in 0..3 {
+            for i in 0..4 {
+                *input.at_mut(0, c, i / 2, i % 2) = (c * 4 + i) as f32;
+            }
+        }
+        // filter 0 sums channels, filter 1 picks channel 2.
+        let mut filters = Tensor::zeros(2, 3, 1, 1);
+        for c in 0..3 {
+            *filters.at_mut(0, c, 0, 0) = 1.0;
+        }
+        *filters.at_mut(1, 2, 0, 0) = 1.0;
+        let out = conv_naive(&spec, &input, &filters);
+        assert_eq!(out.at(0, 0, 0, 0), 0.0 + 4.0 + 8.0);
+        assert_eq!(out.at(0, 1, 1, 1), input.at(0, 2, 1, 1));
+    }
+
+    /// Hand-computed 3x3 valid convolution (no padding).
+    #[test]
+    fn conv_3x3_valid_hand_checked() {
+        let spec = ConvSpec {
+            n: 1, c: 1, h: 3, w: 3, m: 1, kh: 3, kw: 3,
+            stride: 1, pad_h: 0, pad_w: 0,
+        };
+        let input = Tensor::from_vec(1, 1, 3, 3, (1..=9).map(|v| v as f32).collect());
+        let filters = Tensor::full(1, 1, 3, 3, 1.0);
+        let out = conv_naive(&spec, &input, &filters);
+        assert_eq!(out.shape(), [1, 1, 1, 1]);
+        assert_eq!(out.at(0, 0, 0, 0), 45.0);
+    }
+
+    /// Same-padding keeps spatial dims; border sums are smaller.
+    #[test]
+    fn conv_3x3_same_padding_borders() {
+        let spec = ConvSpec::paper(3, 1, 3, 1, 1);
+        let input = Tensor::full(1, 1, 3, 3, 1.0);
+        let filters = Tensor::full(1, 1, 3, 3, 1.0);
+        let out = conv_naive(&spec, &input, &filters);
+        assert_eq!(out.shape(), [1, 1, 3, 3]);
+        assert_eq!(out.at(0, 0, 1, 1), 9.0); // full overlap at center
+        assert_eq!(out.at(0, 0, 0, 0), 4.0); // corner sees 2x2
+        assert_eq!(out.at(0, 0, 0, 1), 6.0); // edge sees 2x3
+    }
+
+    /// Stride-2 subsamples output positions.
+    #[test]
+    fn conv_stride2() {
+        let spec = ConvSpec {
+            n: 1, c: 1, h: 4, w: 4, m: 1, kh: 2, kw: 2,
+            stride: 2, pad_h: 0, pad_w: 0,
+        };
+        let input = Tensor::from_vec(1, 1, 4, 4, (0..16).map(|v| v as f32).collect());
+        let filters = Tensor::full(1, 1, 2, 2, 1.0);
+        let out = conv_naive(&spec, &input, &filters);
+        assert_eq!(out.shape(), [1, 1, 2, 2]);
+        // top-left 2x2 block: 0+1+4+5
+        assert_eq!(out.at(0, 0, 0, 0), 10.0);
+        // bottom-right 2x2 block: 10+11+14+15
+        assert_eq!(out.at(0, 0, 1, 1), 50.0);
+    }
+
+    /// Batch elements are independent.
+    #[test]
+    fn batches_independent() {
+        let spec = ConvSpec::paper(2, 2, 1, 1, 1);
+        let mut input = Tensor::zeros(2, 1, 2, 2);
+        *input.at_mut(0, 0, 0, 0) = 1.0;
+        *input.at_mut(1, 0, 0, 0) = 5.0;
+        let filters = Tensor::full(1, 1, 1, 1, 2.0);
+        let out = conv_naive(&spec, &input, &filters);
+        assert_eq!(out.at(0, 0, 0, 0), 2.0);
+        assert_eq!(out.at(1, 0, 0, 0), 10.0);
+    }
+}

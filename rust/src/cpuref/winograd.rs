@@ -1,0 +1,226 @@
+//! Winograd minimal-filtering convolution F(2×2, 3×3) (§2.3.2).
+//!
+//! Implements Lavin's formulation: the input is split into overlapping
+//! 4×4 tiles (p=4, overlap p−2=2), each transformed with `Bᵀ·d·B`;
+//! filters are transformed once with `G·g·Gᵀ`; per-tile element-wise
+//! products are accumulated over channels and transformed back with
+//! `Aᵀ·M·A` to yield 2×2 output tiles. 4 multiplies per output where the
+//! direct method uses 9 — the arithmetic reduction that makes cuDNN's
+//! Winograd variants dominate 3×3 configurations in the paper's Figure 6.
+//!
+//! Supports 3×3 stride-1 convolutions with any padding.
+
+use crate::conv::ConvSpec;
+use crate::cpuref::check_shapes;
+use crate::tensor::Tensor;
+
+/// Filter transform: `U = G·g·Gᵀ` for one 3×3 filter plane → 4×4.
+pub fn transform_filter_3x3(g: &[f32; 9]) -> [f32; 16] {
+    // G = [[1,0,0],[.5,.5,.5],[.5,-.5,.5],[0,0,1]]
+    let mut tmp = [0.0f32; 12]; // G·g : 4x3
+    for r in 0..4 {
+        for c in 0..3 {
+            tmp[r * 3 + c] = match r {
+                0 => g[c],
+                1 => 0.5 * (g[c] + g[3 + c] + g[6 + c]),
+                2 => 0.5 * (g[c] - g[3 + c] + g[6 + c]),
+                _ => g[6 + c],
+            };
+        }
+    }
+    let mut u = [0.0f32; 16]; // (G·g)·Gᵀ : 4x4
+    for r in 0..4 {
+        let t = &tmp[r * 3..r * 3 + 3];
+        u[r * 4] = t[0];
+        u[r * 4 + 1] = 0.5 * (t[0] + t[1] + t[2]);
+        u[r * 4 + 2] = 0.5 * (t[0] - t[1] + t[2]);
+        u[r * 4 + 3] = t[2];
+    }
+    u
+}
+
+/// Input tile transform: `V = Bᵀ·d·B` for one 4×4 tile.
+#[inline]
+pub fn transform_input_tile(d: &[f32; 16]) -> [f32; 16] {
+    // Bᵀ = [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]]
+    let mut tmp = [0.0f32; 16]; // Bᵀ·d
+    for c in 0..4 {
+        tmp[c] = d[c] - d[8 + c];
+        tmp[4 + c] = d[4 + c] + d[8 + c];
+        tmp[8 + c] = d[8 + c] - d[4 + c];
+        tmp[12 + c] = d[4 + c] - d[12 + c];
+    }
+    let mut v = [0.0f32; 16]; // (Bᵀ·d)·B
+    for r in 0..4 {
+        let t = &tmp[r * 4..r * 4 + 4];
+        v[r * 4] = t[0] - t[2];
+        v[r * 4 + 1] = t[1] + t[2];
+        v[r * 4 + 2] = t[2] - t[1];
+        v[r * 4 + 3] = t[1] - t[3];
+    }
+    v
+}
+
+/// Output transform: `Y = Aᵀ·M·A` for one 4×4 accumulator → 2×2.
+#[inline]
+pub fn transform_output_tile(m: &[f32; 16]) -> [f32; 4] {
+    // Aᵀ = [[1,1,1,0],[0,1,-1,-1]]
+    let mut tmp = [0.0f32; 8]; // Aᵀ·M : 2x4
+    for c in 0..4 {
+        tmp[c] = m[c] + m[4 + c] + m[8 + c];
+        tmp[4 + c] = m[4 + c] - m[8 + c] - m[12 + c];
+    }
+    [
+        tmp[0] + tmp[1] + tmp[2],
+        tmp[1] - tmp[2] - tmp[3],
+        tmp[4] + tmp[5] + tmp[6],
+        tmp[5] - tmp[6] - tmp[7],
+    ]
+}
+
+/// Winograd F(2×2, 3×3) convolution. Panics if the spec is not 3×3
+/// stride-1 (checked by [`CpuImpl::supports`](crate::cpuref::CpuImpl)).
+pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    check_shapes(spec, input, filters);
+    assert!(spec.kh == 3 && spec.kw == 3 && spec.stride == 1, "winograd is 3x3/s1 only");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    // Tile grid over the output, 2x2 tiles.
+    let th = oh.div_ceil(2);
+    let tw = ow.div_ceil(2);
+
+    // Pre-transform all filters: U[m][c] : 4x4.
+    let mut u = vec![[0.0f32; 16]; spec.m * spec.c];
+    for m in 0..spec.m {
+        for c in 0..spec.c {
+            let base = filters.offset(m, c, 0, 0);
+            let g: [f32; 9] = filters.data()[base..base + 9].try_into().unwrap();
+            u[m * spec.c + c] = transform_filter_3x3(&g);
+        }
+    }
+
+    // Padded input view bounds helper.
+    let get = |n: usize, c: usize, y: isize, x: isize| -> f32 {
+        if y < 0 || x < 0 || y >= spec.h as isize || x >= spec.w as isize {
+            0.0
+        } else {
+            input.at(n, c, y as usize, x as usize)
+        }
+    };
+
+    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
+    for n in 0..spec.n {
+        for ty in 0..th {
+            for tx in 0..tw {
+                // Input tile origin (top-left of the 4x4 patch) in
+                // unpadded coordinates.
+                let iy0 = (ty * 2) as isize - spec.pad_h as isize;
+                let ix0 = (tx * 2) as isize - spec.pad_w as isize;
+                // V tiles per channel for this (n, tile).
+                // Accumulate M[m] = sum_c U[m][c] ⊙ V[c] incrementally to
+                // avoid storing all V tiles: loop c outer, m inner.
+                let mut acc = vec![[0.0f32; 16]; spec.m];
+                for c in 0..spec.c {
+                    let mut d = [0.0f32; 16];
+                    for dy in 0..4 {
+                        for dx in 0..4 {
+                            d[dy * 4 + dx] = get(n, c, iy0 + dy as isize, ix0 + dx as isize);
+                        }
+                    }
+                    let v = transform_input_tile(&d);
+                    for m in 0..spec.m {
+                        let uf = &u[m * spec.c + c];
+                        let am = &mut acc[m];
+                        for i in 0..16 {
+                            am[i] += uf[i] * v[i];
+                        }
+                    }
+                }
+                for m in 0..spec.m {
+                    let y = transform_output_tile(&acc[m]);
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let oy = ty * 2 + dy;
+                            let ox = tx * 2 + dx;
+                            if oy < oh && ox < ow {
+                                *out.at_mut(n, m, oy, ox) = y[dy * 2 + dx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpuref::naive::conv_naive;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn filter_transform_of_identity_tap() {
+        // A filter with a single 1 at the center: U = G[:,1]·G[:,1]ᵀ.
+        let mut g = [0.0f32; 9];
+        g[4] = 1.0;
+        let u = transform_filter_3x3(&g);
+        let col = [0.0f32, 0.5, -0.5, 0.0];
+        for r in 0..4 {
+            for c in 0..4 {
+                assert!((u[r * 4 + c] - col[r] * col[c]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_matches_direct() {
+        // 4x4 input, 3x3 filter, valid conv -> 2x2 output, one tile.
+        let spec = ConvSpec {
+            n: 1, c: 1, h: 4, w: 4, m: 1, kh: 3, kw: 3,
+            stride: 1, pad_h: 0, pad_w: 0,
+        };
+        let mut rng = Rng::new(51);
+        let input = Tensor::random(1, 1, 4, 4, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(1, 1, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_winograd_3x3(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+
+    #[test]
+    fn tiled_same_padded_matches_oracle() {
+        for (hw, c, m, seed) in [(8, 3, 2, 52), (13, 4, 5, 53), (7, 2, 3, 54)] {
+            let spec = ConvSpec::paper(hw, 1, 3, m, c);
+            let mut rng = Rng::new(seed);
+            let input = Tensor::random(1, c, hw, hw, &mut rng, -1.0, 1.0);
+            let filters = Tensor::random(m, c, 3, 3, &mut rng, -1.0, 1.0);
+            let got = conv_winograd_3x3(&spec, &input, &filters);
+            let want = conv_naive(&spec, &input, &filters);
+            assert!(got.rel_l2_error(&want) < 2e-5, "hw={hw} c={c} m={m}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_oracle() {
+        let spec = ConvSpec::paper(6, 3, 3, 2, 2);
+        let mut rng = Rng::new(55);
+        let input = Tensor::random(3, 2, 6, 6, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(2, 2, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_winograd_3x3(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 2e-5);
+    }
+
+    #[test]
+    fn odd_output_size_edge_tiles() {
+        // 5x5 output: last tile row/col is partial.
+        let spec = ConvSpec::paper(5, 1, 3, 1, 1);
+        let mut rng = Rng::new(56);
+        let input = Tensor::random(1, 1, 5, 5, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(1, 1, 3, 3, &mut rng, -1.0, 1.0);
+        let got = conv_winograd_3x3(&spec, &input, &filters);
+        let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 2e-5);
+    }
+}

@@ -1,0 +1,79 @@
+//! Device constants of the paper's testbed GPU (NVIDIA Tesla V100-SXM2,
+//! Volta) — §4 and §2.2 of the paper.
+
+/// Streaming multiprocessors.
+pub const SMS: usize = 80;
+
+/// Warp width (threads executing in lock-step, §2.2).
+pub const WARP: usize = 32;
+
+/// L1 cache line size in bytes (§2.2: "an L1 cache line size of 128 bytes").
+pub const CACHE_LINE_BYTES: usize = 128;
+
+/// Max threads per block.
+pub const MAX_THREADS_PER_BLOCK: usize = 1024;
+
+/// Resident warps per SM needed to hide latency (occupancy knee).
+/// 8 warps/SM × 80 SMs = the 640-warp saturation point of the model.
+pub const WARPS_PER_SM_SAT: usize = 8;
+
+/// Warp saturation point for the occupancy model.
+pub const WARPS_SAT: usize = SMS * WARPS_PER_SM_SAT;
+
+/// FP32 peak of V100-SXM2 in MFLOP/µs (15.7 TFLOP/s).
+pub const PEAK_MFLOP_PER_US: f64 = 15.7e6 / 1e6;
+
+/// HBM2 bandwidth in bytes/µs (900 GB/s).
+pub const DRAM_BYTES_PER_US: f64 = 900e9 / 1e6;
+
+/// Linear occupancy: fraction of latency-hiding capacity a launch of
+/// `warps` total warps achieves. The model's central mechanism — the
+/// paper's §4.2 attributes cuConv's batch-1 wins to exposing more
+/// thread-block parallelism than the GEMM variants.
+pub fn occupancy(warps: usize) -> f64 {
+    (warps as f64 / WARPS_SAT as f64).min(1.0)
+}
+
+/// Warps of a launch of `blocks` blocks × `threads` threads.
+pub fn launch_warps(blocks: usize, threads: usize) -> usize {
+    blocks * threads.div_ceil(WARP)
+}
+
+/// Coalescing inflation factor for a warp reading `row_bytes` contiguous
+/// bytes per row (§3's analysis: rows narrower than a cache line still
+/// cost a full 128-byte transaction).
+pub fn coalescing_inflation(row_bytes: usize) -> f64 {
+    if row_bytes == 0 {
+        return 1.0;
+    }
+    let lines = row_bytes.div_ceil(CACHE_LINE_BYTES);
+    (lines * CACHE_LINE_BYTES) as f64 / row_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_saturates_at_640_warps() {
+        assert!((occupancy(640) - 1.0).abs() < 1e-12);
+        assert!((occupancy(6400) - 1.0).abs() < 1e-12);
+        assert!((occupancy(64) - 0.1).abs() < 1e-12);
+        assert_eq!(occupancy(0), 0.0);
+    }
+
+    #[test]
+    fn launch_warps_rounds_up() {
+        assert_eq!(launch_warps(256, 49), 512); // table 3 config A stage 1
+        assert_eq!(launch_warps(1, 1024), 32);
+        assert_eq!(launch_warps(4, 256), 32); // precomp config A
+    }
+
+    #[test]
+    fn coalescing_full_line_is_ideal() {
+        assert!((coalescing_inflation(128) - 1.0).abs() < 1e-12);
+        assert!((coalescing_inflation(256) - 1.0).abs() < 1e-12);
+        // A 7-element f32 row (28 bytes) costs a whole 128-byte line.
+        assert!((coalescing_inflation(28) - 128.0 / 28.0).abs() < 1e-9);
+    }
+}

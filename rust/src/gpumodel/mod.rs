@@ -1,0 +1,156 @@
+//! The V100 analytical performance model — this reproduction's testbed
+//! substitute.
+//!
+//! The paper's evaluation is wall-clock on an NVIDIA V100 against
+//! closed-source cuDNN 7.1; neither exists here (repro band 0/5), so
+//! Figures 5–7 and Tables 3–5 are regenerated from an analytical model
+//! instead (DESIGN.md §2 documents the substitution):
+//!
+//! * Every algorithm is decomposed into the **same GPU kernels** the
+//!   paper's profiles show (e.g. `computeOffsetsKernel` + main kernel
+//!   for implicit-precomp GEMM; four kernels for non-fused Winograd;
+//!   `scalar_prods_kernel` + `sum_kernel` for cuConv).
+//! * Each kernel's time follows an affine law `t = a·(work/occ) + b`,
+//!   where `work` is the kernel's work feature (MFLOPs or K-elements),
+//!   `occ = min(1, warps/640)` is linear occupancy on 80 SMs (8 resident
+//!   warps per SM to hide latency), and `(a, b)` are **calibrated
+//!   against the paper's own published kernel timings** (12+ data points
+//!   across Tables 3–5; `tools/fit_gpumodel.py` reproduces the fit).
+//! * Thread-block counts per kernel follow the paper's profiled values
+//!   exactly (§4.2: cuConv launches `Kh·Kw·M·split` blocks; implicit
+//!   GEMM tiles 32×32; implicit-precomp tiles 128×64 — the model's
+//!   block counts match all six published counts).
+//!
+//! The model's purpose is the paper's *claims*, not microsecond
+//! accuracy: who wins at which (filter size, batch, geometry), by
+//! roughly what factor, and where the crossovers fall. Calibration tests
+//! in [`calib`] pin every published timing within a tolerance band and
+//! every published win/loss ordering exactly.
+
+pub mod calib;
+pub mod paper;
+pub mod cost;
+pub mod device;
+pub mod roofline;
+
+use crate::algo::Algorithm;
+use crate::conv::ConvSpec;
+
+/// One modeled kernel launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelTime {
+    /// Kernel name, following the paper's profiles.
+    pub name: &'static str,
+    /// Thread blocks launched.
+    pub blocks: usize,
+    /// Threads per block.
+    pub threads: usize,
+    /// Predicted time in microseconds.
+    pub us: f64,
+}
+
+/// A full algorithm prediction: per-kernel breakdown plus total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgoTime {
+    pub algo: Algorithm,
+    pub kernels: Vec<KernelTime>,
+}
+
+impl AlgoTime {
+    pub fn total_us(&self) -> f64 {
+        self.kernels.iter().map(|k| k.us).sum()
+    }
+}
+
+/// Predict the kernel-time breakdown of `algo` on `spec`.
+/// Returns `None` when the algorithm is unavailable for the spec
+/// (parameter limitation or >1 GB workspace, as in the paper).
+pub fn predict(spec: &ConvSpec, algo: Algorithm) -> Option<AlgoTime> {
+    if !algo.available(spec) {
+        return None;
+    }
+    Some(AlgoTime { algo, kernels: cost::kernels(spec, algo) })
+}
+
+/// The best cuDNN-side baseline for `spec` (minimum total time across
+/// all available Table-2 variants) — the denominator of Figures 5–7.
+pub fn best_baseline(spec: &ConvSpec) -> Option<AlgoTime> {
+    Algorithm::BASELINES
+        .iter()
+        .filter_map(|&a| predict(spec, a))
+        .min_by(|a, b| a.total_us().partial_cmp(&b.total_us()).unwrap())
+}
+
+/// Modeled speedup of cuConv over the best baseline (Figures 5–7's
+/// y-axis). `None` if either side is unavailable.
+pub fn speedup(spec: &ConvSpec) -> Option<f64> {
+    let cu = predict(spec, Algorithm::CuConv)?;
+    let base = best_baseline(spec)?;
+    Some(base.total_us() / cu.total_us())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_unavailable_is_none() {
+        let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+        assert!(predict(&spec, Algorithm::Winograd).is_none());
+        assert!(predict(&spec, Algorithm::CuConv).is_some());
+    }
+
+    #[test]
+    fn totals_are_positive_and_sum_kernels() {
+        let spec = ConvSpec::paper(13, 1, 3, 384, 384);
+        for algo in Algorithm::ALL {
+            if let Some(t) = predict(&spec, algo) {
+                assert!(t.total_us() > 0.0, "{algo}");
+                assert_eq!(t.kernels.len(), algo.kernel_count(&spec), "{algo}");
+                let sum: f64 = t.kernels.iter().map(|k| k.us).sum();
+                assert!((sum - t.total_us()).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn headline_speedup_near_paper() {
+        // 7-32-832 at batch 1: the paper's 2.29x maximum.
+        let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+        let s = speedup(&spec).unwrap();
+        assert!(s > 1.5 && s < 3.5, "headline speedup {s}");
+    }
+
+    #[test]
+    fn speedup_declines_with_batch() {
+        // §4.1: "this advantage is reduced as the batch size ... increase".
+        let base = ConvSpec::paper(7, 1, 1, 256, 832);
+        let s1 = speedup(&base.with_batch(1)).unwrap();
+        let s64 = speedup(&base.with_batch(64)).unwrap();
+        assert!(s1 > 1.0, "batch-1 speedup {s1}");
+        assert!(s64 < s1, "batch-64 {s64} !< batch-1 {s1}");
+    }
+
+    #[test]
+    fn winograd_dominates_3x3_at_scale() {
+        // Figure 6: for 3x3 at larger sizes the Winograd variants win.
+        let spec = ConvSpec::paper(13, 1, 3, 384, 384);
+        let best = best_baseline(&spec).unwrap();
+        assert!(
+            matches!(best.algo, Algorithm::Winograd | Algorithm::WinogradNonfused),
+            "best 3x3 baseline is {}",
+            best.algo
+        );
+        assert!(speedup(&spec).unwrap() < 1.0);
+    }
+
+    #[test]
+    fn fft_amortizes_with_batch() {
+        // §2.3.3: FFT improves with larger N*M (transform amortization).
+        let spec = ConvSpec::paper(27, 1, 5, 256, 96);
+        let t1 = predict(&spec.with_batch(1), Algorithm::Fft).unwrap().total_us();
+        let t32 = predict(&spec.with_batch(32), Algorithm::Fft).unwrap().total_us();
+        // Per-image time falls with batch.
+        assert!(t32 / 32.0 < t1, "per-image FFT time must fall with batch");
+    }
+}

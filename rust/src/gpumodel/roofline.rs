@@ -1,0 +1,118 @@
+//! Roofline analysis of the evaluation configurations.
+//!
+//! Places each configuration on the V100 roofline (peak 15.7 TFLOP/s,
+//! 900 GB/s HBM2) and reports each algorithm's achieved fraction of the
+//! attainable bound — the "efficiency ratio" the perf pass targets
+//! (EXPERIMENTS.md §Perf). The paper's region of advantage is exactly
+//! the launch/occupancy-bound corner where *no* algorithm comes near
+//! the roofline; the analysis quantifies that.
+
+use crate::algo::Algorithm;
+use crate::conv::ConvSpec;
+use crate::gpumodel::device::{DRAM_BYTES_PER_US, PEAK_MFLOP_PER_US};
+use crate::gpumodel::predict;
+
+/// Roofline placement of one (spec, algorithm) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflinePoint {
+    pub algo: Algorithm,
+    /// FLOPs per byte of compulsory traffic.
+    pub arithmetic_intensity: f64,
+    /// µs lower bound: max(compute at peak, compulsory bytes at BW).
+    pub bound_us: f64,
+    /// Modeled time, µs.
+    pub model_us: f64,
+    /// bound/model — fraction of the attainable roofline achieved.
+    pub efficiency: f64,
+    /// True when the bound is the memory side of the roof.
+    pub memory_bound: bool,
+}
+
+/// Compulsory traffic: inputs + filters read once, outputs written once.
+fn compulsory_bytes(spec: &ConvSpec) -> f64 {
+    ((spec.input_elems() + spec.filter_elems() + spec.output_elems()) * 4) as f64
+}
+
+/// Roofline bound in µs for the direct-algorithm FLOP count.
+pub fn bound_us(spec: &ConvSpec) -> f64 {
+    let compute = spec.flops() as f64 / 1e6 / PEAK_MFLOP_PER_US;
+    let memory = compulsory_bytes(spec) / DRAM_BYTES_PER_US;
+    compute.max(memory)
+}
+
+/// Place one algorithm on the roofline. `None` if unavailable.
+pub fn place(spec: &ConvSpec, algo: Algorithm) -> Option<RooflinePoint> {
+    let model = predict(spec, algo)?;
+    let compute = spec.flops() as f64 / 1e6 / PEAK_MFLOP_PER_US;
+    let memory = compulsory_bytes(spec) / DRAM_BYTES_PER_US;
+    let bound = compute.max(memory);
+    Some(RooflinePoint {
+        algo,
+        arithmetic_intensity: spec.arithmetic_intensity(),
+        bound_us: bound,
+        model_us: model.total_us(),
+        efficiency: bound / model.total_us(),
+        memory_bound: memory > compute,
+    })
+}
+
+/// Roofline placements of every available algorithm, best first.
+pub fn place_all(spec: &ConvSpec) -> Vec<RooflinePoint> {
+    let mut v: Vec<RooflinePoint> =
+        Algorithm::ALL.iter().filter_map(|&a| place(spec, a)).collect();
+    v.sort_by(|a, b| b.efficiency.partial_cmp(&a.efficiency).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_is_bounded() {
+        // Modeled time can never beat the roofline bound by more than
+        // the model's own noise; efficiencies must be in (0, ~1].
+        for label in ["7-1-1-256-832", "13-1-3-384-384", "7-8-5-128-48"] {
+            let spec = ConvSpec::from_table_label(label).unwrap();
+            for p in place_all(&spec) {
+                assert!(p.efficiency > 0.0, "{label} {p:?}");
+                assert!(p.efficiency < 1.5, "{label} {p:?}");
+                assert!(p.bound_us > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn small_batch1_configs_are_far_from_roofline() {
+        // The paper's winning region: tiny workloads where everything
+        // is launch/occupancy bound — low roofline efficiency across
+        // the board.
+        let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+        let best = place_all(&spec).remove(0);
+        assert!(
+            best.efficiency < 0.25,
+            "tiny config should be far from roof: {best:?}"
+        );
+    }
+
+    #[test]
+    fn large_batch_gets_closer_to_roofline() {
+        let small = ConvSpec::paper(14, 1, 3, 256, 256);
+        let large = small.with_batch(64);
+        let e_small = place(&small, Algorithm::GemmImplicitPrecomp).unwrap().efficiency;
+        let e_large = place(&large, Algorithm::GemmImplicitPrecomp).unwrap().efficiency;
+        assert!(e_large > e_small, "{e_small} -> {e_large}");
+        assert!(e_large > 0.4, "saturated GEMM should be reasonably efficient");
+    }
+
+    #[test]
+    fn one_by_one_is_memory_bound_on_the_roofline() {
+        // 1x1 convs have low arithmetic intensity (< ridge point).
+        let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+        let p = place(&spec, Algorithm::CuConv).unwrap();
+        assert!(p.memory_bound);
+        let big = ConvSpec::paper(56, 8, 3, 256, 256);
+        let q = place(&big, Algorithm::CuConv).unwrap();
+        assert!(!q.memory_bound, "large 3x3 should be compute bound");
+    }
+}

@@ -1,0 +1,38 @@
+//! # cuconv — a reproduction of *cuConv: A CUDA Implementation of
+//! Convolution for CNN Inference* (Jorda, Valero-Lara, Peña; 2021)
+//!
+//! This crate is Layer 3 of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the paper's two-stage
+//!   convolution and every baseline algorithm family (direct, GEMM
+//!   explicit/implicit/implicit-precomp, Winograd fused/non-fused, FFT)
+//!   as Pallas/JAX kernels, validated against a pure-jnp oracle.
+//! * **Layer 2** (`python/compile/model.py`): CNN forward graphs calling
+//!   the kernels, AOT-lowered once to HLO text in `artifacts/`.
+//! * **Layer 3** (this crate): loads + executes the artifacts via the
+//!   PJRT C API (`xla` crate), and implements everything around them —
+//!   the conv-config zoo of the paper's five CNNs, the algorithm
+//!   registry/selector/autotuner, a calibrated analytical V100
+//!   performance model (the testbed substitute), a serving coordinator
+//!   with dynamic batching, and the bench harness that regenerates every
+//!   table and figure of the paper's evaluation.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only and the `cuconv` binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algo;
+pub mod conv;
+pub mod coordinator;
+pub mod cpuref;
+pub mod gpumodel;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod zoo;
+
+/// Crate version, re-exported for the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,237 @@
+//! `cuconv` — the Layer-3 command line.
+//!
+//! ```text
+//! cuconv census                         Table 1 census
+//! cuconv registry                       Table 2 algorithm variants
+//! cuconv tables  [--measure] [--out D]  Tables 3-5 (paper vs model vs ours)
+//! cuconv figures [--out D]              Figures 5-7 + §4.1 aggregates
+//! cuconv sweep                          616-case sweep aggregates only
+//! cuconv autotune <HW-N-K-M-C> [--cpu]  rank algorithms for one config
+//! cuconv plan <network> [--batch B]     per-layer algorithm plan
+//! cuconv serve-bench [--requests N]     end-to-end serving benchmark
+//! cuconv validate                       validate AOT artifacts end to end
+//! ```
+//!
+//! (`clap` is not in the offline vendor set; argument parsing is a thin
+//! hand-rolled matcher.)
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use cuconv::algo::{autotune, TimingSource};
+use cuconv::conv::{ConvSpec, FilterSize};
+use cuconv::coordinator::{plan_network, BatchPolicy, Server, ServerConfig};
+use cuconv::report::{self, figures, tables};
+use cuconv::runtime::{default_artifact_dir, Engine, Manifest};
+use cuconv::util::rng::Rng;
+use cuconv::zoo::Network;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn load_manifest() -> Result<Manifest> {
+    let dir = default_artifact_dir();
+    Manifest::load(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts`)", dir.display())
+    })
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "census" => {
+            print!("{}", tables::table1().render());
+        }
+        "registry" => {
+            print!("{}", tables::table2().render());
+        }
+        "tables" => {
+            let iters: usize =
+                opt(args, "--iters").map(|v| v.parse()).transpose()?.unwrap_or(5);
+            let mut engine = if flag(args, "--measure") {
+                Some(Engine::new(load_manifest()?)?)
+            } else {
+                None
+            };
+            for no in [3u8, 4, 5] {
+                let t = tables::table_kernels(no, engine.as_mut(), iters);
+                println!("{}", t.render());
+                if let Some(dir) = opt(args, "--out") {
+                    t.write_csv(format!("{dir}/table{no}.csv"))?;
+                }
+            }
+        }
+        "figures" => {
+            for filter in [FilterSize::F1x1, FilterSize::F3x3, FilterSize::F5x5] {
+                let t = figures::figure_speedups(filter);
+                println!("{}", t.render());
+                if let Some(dir) = opt(args, "--out") {
+                    t.write_csv(format!(
+                        "{dir}/figure{}.csv",
+                        figures::figure_number(filter)
+                    ))?;
+                }
+            }
+            let agg = figures::aggregates_table();
+            print!("{}", agg.render());
+            if let Some(dir) = opt(args, "--out") {
+                agg.write_csv(format!("{dir}/aggregates.csv"))?;
+            }
+        }
+        "sweep" => {
+            print!("{}", figures::aggregates_table().render());
+        }
+        "autotune" => {
+            let label = args
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: cuconv autotune <HW-N-K-M-C>"))?;
+            let spec = ConvSpec::from_table_label(label)
+                .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
+            let source = if flag(args, "--cpu") {
+                TimingSource::CpuMeasured
+            } else {
+                TimingSource::GpuModel
+            };
+            let result = autotune(&spec, source, 5);
+            let mut t = report::Table::new(
+                format!("autotune {label} ({source:?})"),
+                &["rank", "algorithm", "score us", "workspace MB"],
+            );
+            for (i, e) in result.entries.iter().enumerate() {
+                t.row(vec![
+                    (i + 1).to_string(),
+                    e.algo.name().to_string(),
+                    report::fmt_us(e.score_us),
+                    format!("{:.1}", e.workspace_bytes as f64 / 1e6),
+                ]);
+            }
+            print!("{}", t.render());
+            if let Some(s) = result.cuconv_speedup() {
+                println!("cuconv speedup vs best baseline: {s:.2}x");
+            }
+        }
+        "plan" => {
+            let net = match args.get(1).map(|s| s.as_str()) {
+                Some("googlenet") => Network::GoogleNet,
+                Some("squeezenet") => Network::SqueezeNet,
+                Some("alexnet") => Network::AlexNet,
+                Some("resnet50") => Network::ResNet50,
+                Some("vgg19") => Network::Vgg19,
+                other => bail!("unknown network {other:?}"),
+            };
+            let batch: usize =
+                opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            let plan = plan_network(net, batch, TimingSource::GpuModel);
+            let mut t = report::Table::new(
+                format!("{} @ batch {batch}: per-layer algorithm plan", net.name()),
+                &["layer", "config", "chosen", "us", "best baseline us", "speedup"],
+            );
+            for l in &plan.layers {
+                t.row(vec![
+                    l.layer.to_string(),
+                    l.spec.fig_label(),
+                    l.chosen.name().to_string(),
+                    report::fmt_us(l.best_us),
+                    report::fmt_us(l.baseline_us),
+                    report::fmt_speedup(l.speedup()),
+                ]);
+            }
+            print!("{}", t.render());
+            println!(
+                "cuconv selected on {}/{} layers; network speedup {:.3}x",
+                plan.cuconv_layers(),
+                plan.layers.len(),
+                plan.network_speedup()
+            );
+        }
+        "serve-bench" => {
+            let requests: usize =
+                opt(args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
+            serve_bench(requests)?;
+        }
+        "validate" => {
+            let mut engine = Engine::new(load_manifest()?)?;
+            let models: Vec<String> =
+                engine.manifest().models.iter().map(|m| m.name.clone()).collect();
+            for name in models {
+                let err = engine.validate_model(&name)?;
+                println!(
+                    "{name}: max abs err {err:.2e} {}",
+                    if err < 5e-4 { "OK" } else { "FAIL" }
+                );
+                if err >= 5e-4 {
+                    bail!("artifact validation failed");
+                }
+            }
+            println!("all model artifacts validate");
+        }
+        _ => {
+            println!("cuconv {} — see README.md", cuconv::VERSION);
+            println!(
+                "commands: census registry tables figures sweep autotune plan \
+                 serve-bench validate"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn serve_bench(requests: usize) -> Result<()> {
+    let manifest = load_manifest()?;
+    let config = ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            queue_capacity: 512,
+        },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(manifest, config)?;
+    let h = server.handle();
+    let elems = h.image_elems();
+    println!("serving {requests} requests from 8 client threads ...");
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let h = h.clone();
+            let n = requests / 8;
+            s.spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..n {
+                    let mut img = vec![0.0f32; elems];
+                    rng.fill_uniform(&mut img, -1.0, 1.0);
+                    let _ = h.infer(img);
+                }
+            });
+        }
+    });
+    let m = server.metrics();
+    println!(
+        "requests={} batches={} mean_batch={:.2} throughput={:.1} rps",
+        m.requests, m.batches, m.mean_batch_size, m.throughput_rps
+    );
+    println!(
+        "latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms max={:.2}ms",
+        m.total_mean * 1e3,
+        m.total_p50 * 1e3,
+        m.total_p99 * 1e3,
+        m.total_max * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,210 @@
+//! Regeneration of the paper's Figures 5–7 and the §4.1 aggregates.
+//!
+//! Figures 5–7 plot cuConv's speedup over the best cuDNN variant per
+//! configuration, split by filter size, across batch sizes. Here the
+//! series come from the calibrated V100 model ([`crate::gpumodel`]);
+//! the bench binaries print them and dump CSVs under `results/`.
+
+use crate::conv::FilterSize;
+use crate::gpumodel;
+use crate::report::{fmt_speedup, Table};
+use crate::util::stats::geomean;
+use crate::zoo;
+
+/// The batch sizes each figure shows (figures 5 and 6 are truncated in
+/// the paper "to focus on the relevant results").
+pub fn figure_batches(filter: FilterSize) -> &'static [usize] {
+    match filter {
+        FilterSize::F1x1 => &[1, 8, 16, 32, 64],
+        FilterSize::F3x3 => &[1, 8, 16],
+        _ => &[1, 8, 16, 32, 64, 128, 256],
+    }
+}
+
+/// Figure number for a filter size (paper numbering).
+pub fn figure_number(filter: FilterSize) -> u8 {
+    match filter {
+        FilterSize::F1x1 => 5,
+        FilterSize::F3x3 => 6,
+        _ => 7,
+    }
+}
+
+/// One figure: speedup per (config, batch).
+pub fn figure_speedups(filter: FilterSize) -> Table {
+    let batches = figure_batches(filter);
+    let mut headers: Vec<&str> = vec!["config"];
+    let batch_headers: Vec<String> = batches.iter().map(|b| format!("b={b}")).collect();
+    headers.extend(batch_headers.iter().map(|s| s.as_str()));
+    let mut table = Table::new(
+        format!(
+            "Figure {}: cuConv speedup vs best baseline, {} filters (model)",
+            figure_number(filter),
+            filter
+        ),
+        &headers,
+    );
+    let mut entries = zoo::configs_with_filter(filter);
+    // Paper orders configs by size; sort by (H, M, C) for a stable axis.
+    entries.sort_by_key(|e| (e.spec.h, e.spec.m, e.spec.c));
+    for entry in entries {
+        let mut row = vec![entry.spec.fig_label()];
+        for &b in batches {
+            let spec = entry.spec.with_batch(b);
+            row.push(match gpumodel::speedup(&spec) {
+                Some(s) => fmt_speedup(s),
+                None => "n/a".to_string(),
+            });
+        }
+        table.row(row);
+    }
+    table
+}
+
+/// §4.1 aggregate reproduction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepAggregates {
+    pub cases: usize,
+    pub wins: usize,
+    pub win_fraction: f64,
+    pub avg_win_speedup: f64,
+    pub max_speedup: f64,
+    pub max_label: String,
+    pub max_batch: usize,
+    pub avg_1x1_batch1: f64,
+    pub max_1x1_batch1: f64,
+    pub max_1x1_label: String,
+    pub avg_5x5_batch1: f64,
+    pub max_5x5_batch1: f64,
+    pub wins_at_batch1: usize,
+}
+
+/// Run the full 616-case sweep and aggregate like §4.1.
+pub fn sweep_aggregates() -> SweepAggregates {
+    let mut wins = Vec::new();
+    let mut cases = 0usize;
+    let mut max = (0.0f64, String::new(), 0usize);
+    let mut f1b1 = Vec::new();
+    let mut f5b1 = Vec::new();
+    let mut wins_b1 = 0usize;
+    let mut max_1x1 = (0.0f64, String::new());
+    for (entry, batch) in zoo::all_cases() {
+        let spec = entry.spec.with_batch(batch);
+        let Some(s) = gpumodel::speedup(&spec) else { continue };
+        cases += 1;
+        if s > 1.0 {
+            wins.push(s);
+            if batch == 1 {
+                wins_b1 += 1;
+            }
+        }
+        if s > max.0 {
+            max = (s, spec.fig_label(), batch);
+        }
+        if batch == 1 {
+            match spec.filter_size() {
+                FilterSize::F1x1 => {
+                    if s > max_1x1.0 {
+                        max_1x1 = (s, spec.fig_label());
+                    }
+                    f1b1.push(s);
+                }
+                FilterSize::F5x5 => f5b1.push(s),
+                _ => {}
+            }
+        }
+    }
+    SweepAggregates {
+        cases,
+        wins: wins.len(),
+        win_fraction: wins.len() as f64 / cases as f64,
+        avg_win_speedup: if wins.is_empty() { 0.0 } else { geomean(&wins) },
+        max_speedup: max.0,
+        max_label: max.1,
+        max_batch: max.2,
+        avg_1x1_batch1: geomean(&f1b1),
+        max_1x1_batch1: max_1x1.0,
+        max_1x1_label: max_1x1.1,
+        avg_5x5_batch1: geomean(&f5b1),
+        max_5x5_batch1: f5b1.iter().copied().fold(0.0, f64::max),
+        wins_at_batch1: wins_b1,
+    }
+}
+
+/// The §4.1 aggregates as a paper-vs-model table.
+pub fn aggregates_table() -> Table {
+    use crate::gpumodel::paper::claims;
+    let a = sweep_aggregates();
+    let mut t = Table::new(
+        "§4.1 aggregates: paper vs model",
+        &["metric", "paper", "model"],
+    );
+    t.row(vec![
+        "avg speedup, 1x1, batch 1".into(),
+        format!("{:.2}x", claims::AVG_SPEEDUP_1X1_B1),
+        fmt_speedup(a.avg_1x1_batch1),
+    ]);
+    t.row(vec![
+        "max speedup, 1x1, batch 1".into(),
+        format!("{:.2}x (7-32-832)", claims::MAX_SPEEDUP_1X1_B1),
+        format!("{} ({})", fmt_speedup(a.max_1x1_batch1), a.max_1x1_label),
+    ]);
+    t.row(vec![
+        "avg speedup, 5x5, batch 1".into(),
+        format!("{:.2}x", claims::AVG_SPEEDUP_5X5_B1),
+        fmt_speedup(a.avg_5x5_batch1),
+    ]);
+    t.row(vec![
+        "max speedup, 5x5, batch 1".into(),
+        format!("{:.2}x", claims::MAX_SPEEDUP_5X5_B1),
+        fmt_speedup(a.max_5x5_batch1),
+    ]);
+    t.row(vec![
+        "configs where cuConv wins".into(),
+        format!("{:.1}%", 100.0 * claims::WIN_FRACTION),
+        format!("{:.1}% ({} of {})", 100.0 * a.win_fraction, a.wins, a.cases),
+    ]);
+    t.row(vec![
+        "avg speedup over wins".into(),
+        format!("{:.2}x", claims::AVG_SPEEDUP_WINS),
+        fmt_speedup(a.avg_win_speedup),
+    ]);
+    t.row(vec![
+        "wins at batch 1".into(),
+        "almost all".into(),
+        format!("{} of {}", a.wins_at_batch1, a.wins),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_tables_have_all_configs() {
+        let f5 = figure_speedups(FilterSize::F1x1);
+        assert!(f5.rows.len() >= 40, "{} 1x1 rows", f5.rows.len());
+        assert_eq!(f5.headers.len(), 1 + figure_batches(FilterSize::F1x1).len());
+        let f7 = figure_speedups(FilterSize::F5x5);
+        assert_eq!(f7.rows.len(), 9);
+    }
+
+    #[test]
+    fn aggregates_reproduce_claim_shapes() {
+        let a = sweep_aggregates();
+        assert!(a.cases >= 550);
+        assert!(a.max_speedup > 1.5 && a.max_speedup < 4.0);
+        assert_eq!(a.max_batch, 1, "max speedup must be at batch 1");
+        assert!(a.win_fraction > 0.02 && a.win_fraction < 0.30);
+        assert!(a.wins_at_batch1 * 2 > a.wins);
+        assert!(a.avg_1x1_batch1 > 0.8);
+    }
+
+    #[test]
+    fn aggregates_table_renders() {
+        let t = aggregates_table();
+        assert_eq!(t.rows.len(), 7);
+        assert!(t.render().contains("paper"));
+    }
+}

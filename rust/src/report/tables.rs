@@ -1,0 +1,186 @@
+//! Regeneration of the paper's Tables 1–5.
+//!
+//! * Table 1 — the census of conv configurations per network.
+//! * Table 2 — the algorithm-variant registry.
+//! * Tables 3–5 — per-kernel execution times of the profiled configs:
+//!   paper µs (V100) vs model µs, plus — when AOT artifacts are present —
+//!   **measured** µs of our own Pallas kernels executed through PJRT
+//!   from the Rust hot path (CPU, interpret mode: ordering among our
+//!   variants is meaningful, absolute values are not V100-comparable).
+
+use crate::algo::Algorithm;
+use crate::conv::{ConvSpec, FilterSize};
+use crate::gpumodel::{self, paper};
+use crate::report::{fmt_us, Table};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::zoo;
+
+/// Table 1: summary of the convolution census.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1: stride-1 convolution configurations of the five CNNs",
+        &["network", "# distinct", "1x1", "3x3", "5x5", "last conv input"],
+    );
+    for row in zoo::census() {
+        let (h, w, c) = row.network.last_conv_input();
+        t.row(vec![
+            row.network.name().to_string(),
+            row.distinct.to_string(),
+            format!("{} ({:.1}%)", row.n_1x1, row.pct(FilterSize::F1x1)),
+            format!("{} ({:.1}%)", row.n_3x3, row.pct(FilterSize::F3x3)),
+            format!("{} ({:.1}%)", row.n_5x5, row.pct(FilterSize::F5x5)),
+            format!("{h}x{w}x{c}"),
+        ]);
+    }
+    t
+}
+
+/// Table 2: the algorithm registry.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2: convolution algorithm variants",
+        &["algorithm", "kernels (3x3)", "description"],
+    );
+    let probe = ConvSpec::paper(14, 1, 3, 64, 64);
+    for algo in Algorithm::ALL {
+        let kernels = if algo.supports(&probe) {
+            algo.kernel_count(&probe).to_string()
+        } else {
+            "-".to_string()
+        };
+        t.row(vec![algo.name().to_string(), kernels, algo.description().to_string()]);
+    }
+    t
+}
+
+/// Median measured execution µs of an artifact over `iters` runs.
+fn measure_artifact_us(
+    engine: &mut Engine,
+    label: &str,
+    algo: Algorithm,
+    iters: usize,
+) -> Option<f64> {
+    let name = format!("conv_{label}_{}", algo.name());
+    let artifact = engine.manifest().find_conv(&name)?.clone();
+    let spec = artifact.spec;
+    let mut rng = Rng::new(0xCAFE);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    // Warmup (compiles on first call).
+    engine.run_conv(&artifact, &input, &filters).ok()?;
+    let mut times: Vec<f64> = (0..iters)
+        .filter_map(|_| {
+            engine
+                .run_conv(&artifact, &input, &filters)
+                .ok()
+                .map(|(_, t)| t.exec_seconds * 1e6)
+        })
+        .collect();
+    if times.is_empty() {
+        return None;
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(times[times.len() / 2])
+}
+
+/// Tables 3–5: kernel times for the profiled configs.
+///
+/// `engine`: pass `Some` to add the measured column from real PJRT
+/// executions of our artifacts.
+pub fn table_kernels(table_no: u8, mut engine: Option<&mut Engine>, iters: usize) -> Table {
+    let filter = match table_no {
+        3 => "1x1",
+        4 => "3x3",
+        _ => "5x5",
+    };
+    let mut t = Table::new(
+        format!(
+            "Table {table_no}: kernel times for the profiled {filter} configs (µs; \
+             measured = our stack on CPU-PJRT, not V100-comparable)"
+        ),
+        &["config", "algorithm", "kernel", "paper us", "model us", "ours measured us"],
+    );
+    for label in paper::table_labels(table_no) {
+        let spec = ConvSpec::from_table_label(label).unwrap();
+        let rows: Vec<&paper::PaperRow> = paper::PAPER_ROWS
+            .iter()
+            .filter(|r| r.label == label)
+            .collect();
+        for row in rows {
+            let model = gpumodel::predict(&spec, row.algo);
+            let measured = engine
+                .as_deref_mut()
+                .and_then(|e| measure_artifact_us(e, label, row.algo, iters));
+            // Per-kernel lines.
+            for (i, pk) in row.kernels.iter().enumerate() {
+                let model_us = model
+                    .as_ref()
+                    .and_then(|m| m.kernels.get(i))
+                    .map(|k| fmt_us(k.us))
+                    .unwrap_or_else(|| "-".into());
+                t.row(vec![
+                    if i == 0 { label.to_string() } else { String::new() },
+                    if i == 0 { row.algo.name().to_string() } else { String::new() },
+                    pk.kernel.to_string(),
+                    fmt_us(pk.us),
+                    model_us,
+                    String::new(),
+                ]);
+            }
+            // Total line (measured applies to the whole algorithm).
+            t.row(vec![
+                String::new(),
+                String::new(),
+                "Total".to_string(),
+                fmt_us(row.total_us()),
+                model
+                    .as_ref()
+                    .map(|m| fmt_us(m.total_us()))
+                    .unwrap_or_else(|| "-".into()),
+                measured.map(fmt_us).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_five_networks() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 5);
+        let rendered = t.render();
+        assert!(rendered.contains("GoogleNet"));
+        assert!(rendered.contains("42"));
+        assert!(rendered.contains("7x7x832"));
+    }
+
+    #[test]
+    fn table2_lists_all_algorithms() {
+        let t = table2();
+        assert_eq!(t.rows.len(), Algorithm::ALL.len());
+        assert!(t.render().contains("cuconv"));
+        // Winograd row exists and reports 2 kernels for 3x3.
+        assert!(t
+            .rows
+            .iter()
+            .any(|r| r[0] == "winograd" && r[1] == "2"));
+    }
+
+    #[test]
+    fn tables_3_to_5_have_paper_and_model_columns() {
+        for no in [3u8, 4, 5] {
+            let t = table_kernels(no, None, 1);
+            assert!(!t.rows.is_empty(), "table {no} empty");
+            // Totals must be present for every (config, algo).
+            let totals = t.rows.iter().filter(|r| r[2] == "Total").count();
+            let expected = paper::PAPER_ROWS.iter().filter(|r| r.table == no).count();
+            assert_eq!(totals, expected, "table {no}");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! The PJRT engine: compile HLO text, cache executables, run them.
+//!
+//! Mirrors `/opt/xla-example/load_hlo.rs`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+//!
+//! An [`Engine`] is deliberately `!Send` (the underlying handles are raw
+//! pointers); cross-thread access goes through
+//! [`executor`](crate::runtime::executor).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{read_f32_bin, ConvArtifact, Manifest, ModelArtifact};
+use crate::tensor::Tensor;
+
+/// Timing breakdown of one execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecTiming {
+    /// Host→literal staging + argument prep.
+    pub stage_seconds: f64,
+    /// PJRT execute + device→host readback.
+    pub exec_seconds: f64,
+}
+
+impl ExecTiming {
+    pub fn total(&self) -> f64 {
+        self.stage_seconds + self.exec_seconds
+    }
+}
+
+/// PJRT client + lazily-compiled executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    compiles: usize,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), compiles: 0 })
+    }
+
+    /// Load the manifest from a directory and build the engine.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Ok(Engine::new(Manifest::load(dir)?)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compilations performed (cache misses).
+    pub fn compile_count(&self) -> usize {
+        self.compiles
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<f64> {
+        if self.cache.contains_key(name) {
+            return Ok(0.0);
+        }
+        let file = self
+            .artifact_file(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.manifest.path_of(&file);
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(wrap_xla)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(wrap_xla)
+            .with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        self.compiles += 1;
+        Ok(start.elapsed().as_secs_f64())
+    }
+
+    fn artifact_file(&self, name: &str) -> Option<String> {
+        if let Some(c) = self.manifest.find_conv(name) {
+            return Some(c.file.clone());
+        }
+        self.manifest.find_model(name).map(|m| m.file.clone())
+    }
+
+    /// Execute a conv artifact on (input, filters). Returns the output
+    /// tensor and a timing breakdown.
+    pub fn run_conv(
+        &mut self,
+        artifact: &ConvArtifact,
+        input: &Tensor,
+        filters: &Tensor,
+    ) -> Result<(Tensor, ExecTiming)> {
+        if input.shape() != artifact.spec.input_shape() {
+            bail!(
+                "input shape {:?} != artifact {:?}",
+                input.shape(),
+                artifact.spec.input_shape()
+            );
+        }
+        if filters.shape() != artifact.spec.filter_shape() {
+            bail!(
+                "filter shape {:?} != artifact {:?}",
+                filters.shape(),
+                artifact.spec.filter_shape()
+            );
+        }
+        self.ensure_compiled(&artifact.name)?;
+
+        let t0 = Instant::now();
+        let x = literal_from_tensor(input)?;
+        let w = literal_from_tensor(filters)?;
+        let stage_seconds = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let exe = self.cache.get(&artifact.name).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&[x, w]).map_err(wrap_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let out = lit.to_tuple1().map_err(wrap_xla)?;
+        let data = out.to_vec::<f32>().map_err(wrap_xla)?;
+        let exec_seconds = t1.elapsed().as_secs_f64();
+
+        let [n, m, oh, ow] = artifact.spec.output_shape();
+        if data.len() != n * m * oh * ow {
+            bail!(
+                "artifact {} returned {} elems, expected {}",
+                artifact.name,
+                data.len(),
+                n * m * oh * ow
+            );
+        }
+        Ok((Tensor::from_vec(n, m, oh, ow, data), ExecTiming { stage_seconds, exec_seconds }))
+    }
+
+    /// Execute a model artifact on an input batch `[B,3,H,W]` → logits.
+    pub fn run_model(
+        &mut self,
+        artifact: &ModelArtifact,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, ExecTiming)> {
+        let n_in: usize = artifact.input_shape.iter().product();
+        if input.len() != n_in {
+            bail!(
+                "model {} input has {} elems, expected {}",
+                artifact.name,
+                input.len(),
+                n_in
+            );
+        }
+        self.ensure_compiled(&artifact.name)?;
+
+        let t0 = Instant::now();
+        let dims: Vec<i64> = artifact.input_shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(input).reshape(&dims).map_err(wrap_xla)?;
+        let stage_seconds = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let exe = self.cache.get(&artifact.name).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&[x]).map_err(wrap_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let out = lit.to_tuple1().map_err(wrap_xla)?;
+        let data = out.to_vec::<f32>().map_err(wrap_xla)?;
+        let exec_seconds = t1.elapsed().as_secs_f64();
+
+        let n_out: usize = artifact.output_shape.iter().product();
+        if data.len() != n_out {
+            bail!("model {} returned {} elems, expected {}", artifact.name, data.len(), n_out);
+        }
+        Ok((data, ExecTiming { stage_seconds, exec_seconds }))
+    }
+
+    /// Validate a model artifact against its AOT sample I/O pair.
+    /// Returns the max absolute error.
+    pub fn validate_model(&mut self, name: &str) -> Result<f32> {
+        let artifact = self
+            .manifest
+            .find_model(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))?
+            .clone();
+        let x = read_f32_bin(self.manifest.path_of(&artifact.sample_input))?;
+        let want = read_f32_bin(self.manifest.path_of(&artifact.sample_output))?;
+        let (got, _) = self.run_model(&artifact, &x)?;
+        if got.len() != want.len() {
+            bail!("sample output length mismatch");
+        }
+        Ok(got
+            .iter()
+            .zip(want.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+}
+
+/// Convert an NCHW tensor into an f32 literal of the same shape.
+pub fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data()).reshape(&dims).map_err(wrap_xla)
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

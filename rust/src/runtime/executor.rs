@@ -1,0 +1,173 @@
+//! The executor thread: cross-thread access to the `!Send` [`Engine`].
+//!
+//! One OS thread owns the PJRT client and the compiled-executable cache;
+//! everyone else holds an [`ExecutorHandle`] (cheap to clone, `Send`)
+//! and submits requests over an mpsc channel, receiving results on a
+//! per-request oneshot channel. This is the same shape as a production
+//! serving stack's per-accelerator submission queue, and it makes the
+//! coordinator's worker pool trivially safe.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::{Engine, ExecTiming};
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+
+enum Request {
+    RunConv {
+        name: String,
+        input: Tensor,
+        filters: Tensor,
+        resp: mpsc::Sender<Result<(Tensor, ExecTiming)>>,
+    },
+    RunModel {
+        name: String,
+        input: Vec<f32>,
+        resp: mpsc::Sender<Result<(Vec<f32>, ExecTiming)>>,
+    },
+    Warmup {
+        names: Vec<String>,
+        resp: mpsc::Sender<Result<f64>>,
+    },
+    ValidateModel {
+        name: String,
+        resp: mpsc::Sender<Result<f32>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the executor thread; joins it on drop.
+pub struct ExecutorThread {
+    handle: Option<JoinHandle<()>>,
+    tx: mpsc::Sender<Request>,
+}
+
+/// Spawn the executor thread over an artifact manifest.
+///
+/// Returns the owning guard plus a cloneable handle. The engine (and
+/// PJRT client) is created *on* the executor thread, since it must never
+/// cross threads.
+pub fn spawn_executor(manifest: Manifest) -> Result<(ExecutorThread, ExecutorHandle)> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let handle = std::thread::Builder::new()
+        .name("pjrt-executor".into())
+        .spawn(move || {
+            let mut engine = match Engine::new(manifest) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::RunConv { name, input, filters, resp } => {
+                        let r = engine
+                            .manifest()
+                            .find_conv(&name)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("unknown conv artifact '{name}'"))
+                            .and_then(|a| engine.run_conv(&a, &input, &filters));
+                        let _ = resp.send(r);
+                    }
+                    Request::RunModel { name, input, resp } => {
+                        let r = engine
+                            .manifest()
+                            .find_model(&name)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("unknown model artifact '{name}'"))
+                            .and_then(|a| engine.run_model(&a, &input));
+                        let _ = resp.send(r);
+                    }
+                    Request::Warmup { names, resp } => {
+                        let mut total = 0.0;
+                        let mut result = Ok(());
+                        for n in &names {
+                            match engine.ensure_compiled(n) {
+                                Ok(secs) => total += secs,
+                                Err(e) => {
+                                    result = Err(e);
+                                    break;
+                                }
+                            }
+                        }
+                        let _ = resp.send(result.map(|_| total));
+                    }
+                    Request::ValidateModel { name, resp } => {
+                        let _ = resp.send(engine.validate_model(&name));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })?;
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("executor thread died during startup"))??;
+    let guard = ExecutorThread { handle: Some(handle), tx: tx.clone() };
+    Ok((guard, ExecutorHandle { tx }))
+}
+
+impl ExecutorHandle {
+    /// Execute a conv artifact by name.
+    pub fn run_conv(
+        &self,
+        name: &str,
+        input: Tensor,
+        filters: Tensor,
+    ) -> Result<(Tensor, ExecTiming)> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::RunConv { name: name.to_string(), input, filters, resp })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped the request"))?
+    }
+
+    /// Execute a model artifact by name.
+    pub fn run_model(&self, name: &str, input: Vec<f32>) -> Result<(Vec<f32>, ExecTiming)> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::RunModel { name: name.to_string(), input, resp })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped the request"))?
+    }
+
+    /// Pre-compile a set of artifacts; returns total compile seconds.
+    pub fn warmup(&self, names: &[String]) -> Result<f64> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warmup { names: names.to_vec(), resp })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped the request"))?
+    }
+
+    /// Run a model's AOT sample I/O pair; returns max abs error.
+    pub fn validate_model(&self, name: &str) -> Result<f32> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::ValidateModel { name: name.to_string(), resp })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped the request"))?
+    }
+}
+
+impl Drop for ExecutorThread {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

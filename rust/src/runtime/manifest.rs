@@ -1,0 +1,255 @@
+//! `artifacts/manifest.json` parsing — the contract between
+//! `python/compile/aot.py` (writer) and this runtime (reader).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::conv::ConvSpec;
+use crate::util::json::{self, Json};
+
+/// A per-configuration convolution executable.
+#[derive(Debug, Clone)]
+pub struct ConvArtifact {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Algorithm name (matches `crate::algo` and the Python registry).
+    pub algo: String,
+    /// Paper-style label `[HW]-[N]-[K]-[M]-[C]`.
+    pub label: String,
+    pub spec: ConvSpec,
+}
+
+/// An end-to-end model executable with baked weights.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Raw-f32 sample input/output pair (relative paths) computed with
+    /// the independent reference algorithm at AOT time.
+    pub sample_input: String,
+    pub sample_output: String,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub convs: Vec<ConvArtifact>,
+    pub models: Vec<ModelArtifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (dir recorded for relative paths).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut convs = Vec::new();
+        for c in root.get("convs").and_then(Json::as_arr).unwrap_or(&[]) {
+            convs.push(parse_conv(c)?);
+        }
+        let mut models = Vec::new();
+        for m in root.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            models.push(parse_model(m)?);
+        }
+        Ok(Manifest { dir, convs, models })
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path_of(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    pub fn find_conv(&self, name: &str) -> Option<&ConvArtifact> {
+        self.convs.iter().find(|c| c.name == name)
+    }
+
+    /// Conv artifacts for a given label, one per lowered algorithm.
+    pub fn convs_for_label(&self, label: &str) -> Vec<&ConvArtifact> {
+        self.convs.iter().filter(|c| c.label == label).collect()
+    }
+
+    pub fn find_model(&self, name: &str) -> Option<&ModelArtifact> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Model executables of one family, sorted by batch size — the
+    /// coordinator's batcher picks the largest batch ≤ queue depth.
+    pub fn model_family(&self, model: &str) -> Vec<&ModelArtifact> {
+        let mut v: Vec<&ModelArtifact> =
+            self.models.iter().filter(|m| m.model == model).collect();
+        v.sort_by_key(|m| m.batch);
+        v
+    }
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| anyhow!("manifest entry missing '{key}'"))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    Ok(field(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("'{key}' is not a string"))?
+        .to_string())
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    field(v, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'{key}' is not a non-negative integer"))
+}
+
+fn shape_field(v: &Json, key: &str) -> Result<Vec<usize>> {
+    field(v, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in '{key}'")))
+        .collect()
+}
+
+fn parse_conv(v: &Json) -> Result<ConvArtifact> {
+    let spec_json = field(v, "spec")?;
+    let spec = ConvSpec {
+        n: usize_field(spec_json, "n")?,
+        c: usize_field(spec_json, "c")?,
+        h: usize_field(spec_json, "h")?,
+        w: usize_field(spec_json, "w")?,
+        m: usize_field(spec_json, "m")?,
+        kh: usize_field(spec_json, "kh")?,
+        kw: usize_field(spec_json, "kw")?,
+        stride: usize_field(spec_json, "stride")?,
+        pad_h: usize_field(spec_json, "pad_h")?,
+        pad_w: usize_field(spec_json, "pad_w")?,
+    };
+    if !spec.is_valid() {
+        bail!("invalid conv spec in manifest: {spec}");
+    }
+    Ok(ConvArtifact {
+        name: str_field(v, "name")?,
+        file: str_field(v, "file")?,
+        algo: str_field(v, "algo")?,
+        label: str_field(v, "label")?,
+        spec,
+    })
+}
+
+fn parse_model(v: &Json) -> Result<ModelArtifact> {
+    Ok(ModelArtifact {
+        name: str_field(v, "name")?,
+        file: str_field(v, "file")?,
+        model: str_field(v, "model")?,
+        batch: usize_field(v, "batch")?,
+        input_shape: shape_field(v, "input_shape")?,
+        output_shape: shape_field(v, "output_shape")?,
+        sample_input: str_field(v, "sample_input")?,
+        sample_output: str_field(v, "sample_output")?,
+    })
+}
+
+/// Read a raw little-endian f32 binary file (the sample I/O format).
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("f32 bin file has non-multiple-of-4 length {}", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "convs": [
+        {"name": "conv_7-1-1-32-832_cuconv", "file": "a.hlo.txt",
+         "algo": "cuconv", "label": "7-1-1-32-832",
+         "spec": {"n":1,"c":832,"h":7,"w":7,"m":32,"kh":1,"kw":1,
+                  "stride":1,"pad_h":0,"pad_w":0},
+         "input_shapes": [[1,832,7,7],[32,832,1,1]],
+         "output_shape": [1,32,7,7]}
+      ],
+      "models": [
+        {"name": "minisqueezenet_b2", "file": "m.hlo.txt",
+         "model": "minisqueezenet", "batch": 2,
+         "input_shape": [2,3,32,32], "output_shape": [2,10],
+         "sample_input": "io/in.bin", "sample_output": "io/out.bin",
+         "param_count": 8258}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.convs.len(), 1);
+        assert_eq!(m.models.len(), 1);
+        let c = &m.convs[0];
+        assert_eq!(c.algo, "cuconv");
+        assert_eq!(c.spec.c, 832);
+        assert_eq!(c.spec.fig_label(), "7-32-832");
+        let md = &m.models[0];
+        assert_eq!(md.batch, 2);
+        assert_eq!(md.input_shape, vec![2, 3, 32, 32]);
+    }
+
+    #[test]
+    fn lookup_helpers() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert!(m.find_conv("conv_7-1-1-32-832_cuconv").is_some());
+        assert!(m.find_conv("nope").is_none());
+        assert_eq!(m.convs_for_label("7-1-1-32-832").len(), 1);
+        assert_eq!(m.model_family("minisqueezenet").len(), 1);
+        assert_eq!(m.path_of("a.hlo.txt"), PathBuf::from("/x/a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_spec() {
+        let bad = SAMPLE.replace("\"h\":7", "\"h\":0");
+        assert!(Manifest::parse(&bad, PathBuf::from("/x")).is_err());
+    }
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("cuconv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_bin(&p).unwrap(), vals);
+        std::fs::write(&p, [0u8; 5]).unwrap();
+        assert!(read_f32_bin(&p).is_err());
+    }
+}

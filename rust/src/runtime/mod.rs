@@ -1,0 +1,35 @@
+//! Layer-3 runtime: load and execute the AOT artifacts via PJRT.
+//!
+//! The build-time Python side (`python/compile/aot.py`) lowers every
+//! kernel/model to HLO **text** in `artifacts/`; this module is the only
+//! place that touches the `xla` crate:
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (conv executables
+//!   with their [`ConvSpec`](crate::conv::ConvSpec), model executables
+//!   with sample I/O for end-to-end validation).
+//! * [`engine`] — the PJRT CPU client wrapper: HLO-text → compile →
+//!   execute, with an executable cache and literal↔[`Tensor`](crate::tensor::Tensor)
+//!   conversion. `xla` handles are raw pointers (`!Send`), so an
+//!   [`Engine`] must stay on one thread.
+//! * [`executor`] — the threading answer: a dedicated executor thread
+//!   owns the [`Engine`]; [`ExecutorHandle`] is a cheap, cloneable,
+//!   `Send` handle the coordinator's workers submit work through. This
+//!   mirrors production serving stacks where a single submission queue
+//!   fronts each accelerator.
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+
+pub use engine::{Engine, ExecTiming};
+pub use executor::{spawn_executor, ExecutorHandle};
+pub use manifest::{ConvArtifact, Manifest, ModelArtifact};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$CUCONV_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("CUCONV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

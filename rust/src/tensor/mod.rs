@@ -1,0 +1,222 @@
+//! NCHW tensors.
+//!
+//! The paper's implementation (and this reproduction) works on NCHW
+//! f32 tensors: `N` volumes of `C` channels of `H×W` planes, with the `W`
+//! (X) axis contiguous in memory — the layout whose coalescing behaviour
+//! §3 of the paper analyzes.
+
+use crate::util::rng::Rng;
+
+/// A dense f32 tensor in NCHW layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> Tensor {
+        Tensor { n, c, h, w, data: vec![0.0; n * c * h * w] }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(n: usize, c: usize, h: usize, w: usize, v: f32) -> Tensor {
+        Tensor { n, c, h, w, data: vec![v; n * c * h * w] }
+    }
+
+    /// Tensor from existing data; length must match the shape.
+    pub fn from_vec(n: usize, c: usize, h: usize, w: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), n * c * h * w, "shape/data mismatch");
+        Tensor { n, c, h, w, data }
+    }
+
+    /// Uniform random tensor in `[lo, hi)` from a seeded PRNG.
+    pub fn random(n: usize, c: usize, h: usize, w: usize, rng: &mut Rng, lo: f32, hi: f32) -> Tensor {
+        let mut t = Tensor::zeros(n, c, h, w);
+        rng.fill_uniform(&mut t.data, lo, hi);
+        t
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Shape as `[n, c, h, w]`.
+    pub fn shape(&self) -> [usize; 4] {
+        [self.n, self.c, self.h, self.w]
+    }
+
+    /// Flat NCHW offset of `(n, c, y, x)`.
+    #[inline]
+    pub fn offset(&self, n: usize, c: usize, y: usize, x: usize) -> usize {
+        ((n * self.c + c) * self.h + y) * self.w + x
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, c: usize, y: usize, x: usize) -> f32 {
+        self.data[self.offset(n, c, y, x)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, n: usize, c: usize, y: usize, x: usize) -> &mut f32 {
+        let i = self.offset(n, c, y, x);
+        &mut self.data[i]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Maximum absolute difference vs another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error vs a reference tensor: ‖a−b‖₂ / max(‖b‖₂, ε).
+    pub fn rel_l2_error(&self, reference: &Tensor) -> f32 {
+        assert_eq!(self.shape(), reference.shape(), "shape mismatch");
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(reference.data.iter()) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num.sqrt() / den.sqrt().max(1e-12)) as f32
+    }
+
+    /// True if all elements are within `atol + rtol*|ref|` of the reference.
+    pub fn allclose(&self, reference: &Tensor, rtol: f32, atol: f32) -> bool {
+        assert_eq!(self.shape(), reference.shape(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(reference.data.iter())
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Zero-pad the H and W dimensions by `ph`/`pw` on each side.
+    pub fn pad_hw(&self, ph: usize, pw: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.n, self.c, self.h + 2 * ph, self.w + 2 * pw);
+        for n in 0..self.n {
+            for c in 0..self.c {
+                for y in 0..self.h {
+                    let src = self.offset(n, c, y, 0);
+                    let dst = out.offset(n, c, y + ph, pw);
+                    out.data[dst..dst + self.w]
+                        .copy_from_slice(&self.data[src..src + self.w]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Reinterpret to a new 4D shape with the same number of elements.
+    pub fn reshape(mut self, n: usize, c: usize, h: usize, w: usize) -> Tensor {
+        assert_eq!(self.len(), n * c * h * w, "reshape element-count mismatch");
+        self.n = n;
+        self.c = c;
+        self.h = h;
+        self.w = w;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_nchw() {
+        let t = Tensor::zeros(2, 3, 4, 5);
+        assert_eq!(t.offset(0, 0, 0, 0), 0);
+        assert_eq!(t.offset(0, 0, 0, 1), 1); // x contiguous
+        assert_eq!(t.offset(0, 0, 1, 0), 5); // y stride = w
+        assert_eq!(t.offset(0, 1, 0, 0), 20); // c stride = h*w
+        assert_eq!(t.offset(1, 0, 0, 0), 60); // n stride = c*h*w
+    }
+
+    #[test]
+    fn at_and_at_mut_roundtrip() {
+        let mut t = Tensor::zeros(1, 2, 3, 4);
+        *t.at_mut(0, 1, 2, 3) = 7.5;
+        assert_eq!(t.at(0, 1, 2, 3), 7.5);
+        assert_eq!(t.data().iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_length() {
+        Tensor::from_vec(1, 1, 2, 2, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Tensor::random(1, 2, 3, 4, &mut r1, -1.0, 1.0);
+        let b = Tensor::random(1, 2, 3, 4, &mut r2, -1.0, 1.0);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn pad_hw_places_values_centered() {
+        let mut t = Tensor::zeros(1, 1, 2, 2);
+        *t.at_mut(0, 0, 0, 0) = 1.0;
+        *t.at_mut(0, 0, 1, 1) = 2.0;
+        let p = t.pad_hw(1, 1);
+        assert_eq!(p.shape(), [1, 1, 4, 4]);
+        assert_eq!(p.at(0, 0, 1, 1), 1.0);
+        assert_eq!(p.at(0, 0, 2, 2), 2.0);
+        assert_eq!(p.at(0, 0, 0, 0), 0.0);
+        let sum: f32 = p.data().iter().sum();
+        assert_eq!(sum, 3.0);
+    }
+
+    #[test]
+    fn allclose_and_errors() {
+        let a = Tensor::full(1, 1, 2, 2, 1.0);
+        let mut b = a.clone();
+        *b.at_mut(0, 0, 0, 0) = 1.0 + 1e-6;
+        assert!(b.allclose(&a, 1e-5, 1e-5));
+        assert!(b.max_abs_diff(&a) > 0.0);
+        assert!(b.rel_l2_error(&a) < 1e-5);
+        *b.at_mut(0, 0, 0, 0) = 2.0;
+        assert!(!b.allclose(&a, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(1, 1, 2, 6, (0..12).map(|i| i as f32).collect());
+        let r = t.clone().reshape(1, 3, 2, 2);
+        assert_eq!(r.shape(), [1, 3, 2, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape element-count mismatch")]
+    fn reshape_checks_count() {
+        Tensor::zeros(1, 1, 2, 2).reshape(1, 1, 3, 3);
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and the vendored crate set does
+//! not include `serde`, `rand`, `proptest` or `criterion`, so this module
+//! provides the minimal equivalents the rest of the crate needs:
+//!
+//! * [`json`] — a tiny JSON value model, writer and recursive-descent
+//!   parser (used for `artifacts/manifest.json` and result dumps).
+//! * [`rng`] — a splitmix64/xoshiro256** PRNG with normal/uniform helpers.
+//! * [`stats`] — summary statistics and fixed-bound latency histograms.
+//! * [`timer`] — monotonic wall-clock timing helpers for the bench harness.
+//! * [`prop`] — a miniature property-based testing framework with
+//!   shrinking, in the spirit of `proptest`.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

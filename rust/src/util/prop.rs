@@ -1,0 +1,312 @@
+//! Miniature property-based testing framework.
+//!
+//! `proptest` is not available in the offline vendor set, so this module
+//! provides the core of it: generators driven by a seeded [`Rng`], a
+//! configurable number of cases, and greedy shrinking of failing inputs
+//! toward minimal counterexamples. Property tests across the crate (conv
+//! geometry, batcher invariants, JSON round-trips, gpumodel monotonicity)
+//! are built on this.
+
+use crate::util::rng::Rng;
+
+/// A generator of values plus a shrinking strategy.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    /// Generate a value from the PRNG.
+    fn gen(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate smaller values to try when shrinking a failure.
+    /// Default: no shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in `[lo, hi]`, shrinking toward `lo`.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+
+    fn gen(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != self.lo && mid != *v {
+                out.push(mid);
+            }
+            if *v - 1 != self.lo {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f32 in `[lo, hi)`, shrinking toward 0 (clamped into range).
+pub struct F32In {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for F32In {
+    type Value = f32;
+
+    fn gen(&self, rng: &mut Rng) -> f32 {
+        rng.uniform_f32(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let zero = 0f32.clamp(self.lo, self.hi);
+        if *v != zero {
+            vec![zero, *v / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// One-of: pick uniformly among fixed choices. No shrinking (choices are
+/// unordered).
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+
+    fn gen(&self, rng: &mut Rng) -> T {
+        rng.choose(&self.0).clone()
+    }
+}
+
+/// Vec of values from an element generator with length in `[min_len, max_len]`.
+/// Shrinks by halving length, dropping one element, and shrinking elements.
+pub struct VecOf<G: Gen> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+
+    fn gen(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.range(self.min_len, self.max_len);
+        (0..len).map(|_| self.elem.gen(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Halve.
+            let half = v.len().max(2 * self.min_len) / 2;
+            out.push(v[..half.max(self.min_len)].to_vec());
+            // Drop last.
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // Shrink the first shrinkable element.
+        for (i, e) in v.iter().enumerate() {
+            let cands = self.elem.shrink(e);
+            if let Some(smaller) = cands.first() {
+                let mut copy = v.clone();
+                copy[i] = smaller.clone();
+                out.push(copy);
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE, max_shrink_steps: 500 }
+    }
+}
+
+/// Result of a failed property: the original and the shrunk counterexample.
+#[derive(Debug)]
+pub struct Failure<V> {
+    pub original: V,
+    pub shrunk: V,
+    pub message: String,
+}
+
+/// Check `prop` on `config.cases` generated values. Returns `Ok(())` or the
+/// shrunk counterexample. `prop` returns `Err(reason)` or panics to fail.
+pub fn check<G: Gen>(
+    config: Config,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) -> Result<(), Failure<G::Value>> {
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let value = gen.gen(&mut rng);
+        if let Err(msg) = run_case(&prop, &value) {
+            // Shrink.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < config.max_shrink_steps {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = run_case(&prop, &cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= config.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            return Err(Failure {
+                original: value,
+                shrunk: best,
+                message: format!("case {case}: {best_msg}"),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn run_case<V>(prop: &impl Fn(&V) -> Result<(), String>, v: &V) -> Result<(), String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(v))) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".to_string());
+            Err(format!("panicked: {msg}"))
+        }
+    }
+}
+
+/// Assert a property holds; panics with the shrunk counterexample on failure.
+pub fn assert_prop<G: Gen>(
+    config: Config,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    if let Err(f) = check(config, gen, prop) {
+        panic!(
+            "property failed: {}\n  original: {:?}\n  shrunk:   {:?}",
+            f.message, f.original, f.shrunk
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        assert_prop(Config::default(), &UsizeIn { lo: 0, hi: 100 }, |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let gen = UsizeIn { lo: 0, hi: 1000 };
+        let res = check(Config::default(), &gen, |&v| {
+            if v < 500 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 500"))
+            }
+        });
+        let f = res.expect_err("must fail");
+        assert_eq!(f.shrunk, 500, "greedy shrink should reach the boundary");
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let gen = VecOf { elem: UsizeIn { lo: 0, hi: 9 }, min_len: 0, max_len: 50 };
+        let res = check(Config::default(), &gen, |v| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+        let f = res.expect_err("must fail");
+        assert_eq!(f.shrunk.len(), 3);
+    }
+
+    #[test]
+    fn panics_are_caught_as_failures() {
+        let gen = UsizeIn { lo: 0, hi: 10 };
+        let res = check(Config { cases: 64, ..Config::default() }, &gen, |&v| {
+            assert!(v < 11, "generator out of bounds");
+            if v == 7 {
+                panic!("boom on 7");
+            }
+            Ok(())
+        });
+        let f = res.expect_err("must fail");
+        assert!(f.message.contains("boom"), "{}", f.message);
+    }
+
+    #[test]
+    fn pair_generator_shrinks_both_sides() {
+        let gen = PairOf(UsizeIn { lo: 0, hi: 100 }, UsizeIn { lo: 0, hi: 100 });
+        let res = check(Config::default(), &gen, |&(a, b)| {
+            if a + b < 50 {
+                Ok(())
+            } else {
+                Err("sum too big".into())
+            }
+        });
+        let f = res.expect_err("must fail");
+        assert!(f.shrunk.0 + f.shrunk.1 >= 50);
+        // Shrunk sum should be no larger than original sum.
+        assert!(f.shrunk.0 + f.shrunk.1 <= f.original.0 + f.original.1);
+    }
+}

@@ -1,0 +1,232 @@
+//! Summary statistics and latency histograms for the bench harness and
+//! the coordinator's metrics.
+
+/// Summary of a sample of observations (times in seconds, speedups, ...).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+            max: sorted[n - 1],
+        })
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Geometric mean; all inputs must be positive.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Log-bucketed latency histogram, suitable for lock-free-ish metric
+/// aggregation in the coordinator (buckets grow ×2 from `base`).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Lower bound of the first bucket, in seconds.
+    base: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LatencyHistogram {
+    /// `base` is the upper bound of bucket 0 in seconds; each subsequent
+    /// bucket doubles. 40 buckets starting at 1 µs spans >1000 s.
+    pub fn new(base: f64, buckets: usize) -> Self {
+        LatencyHistogram {
+            base,
+            counts: vec![0; buckets],
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Default histogram: 1 µs base, 40 doubling buckets.
+    pub fn standard() -> Self {
+        Self::new(1e-6, 40)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = if seconds <= self.base {
+            0
+        } else {
+            ((seconds / self.base).log2().ceil() as usize).min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += seconds;
+        if seconds > self.max {
+            self.max = seconds;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Upper bound of the bucket containing the q-quantile (conservative
+    /// estimate; exact values are not retained).
+    pub fn quantile_upper_bound(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * 2f64.powi(i as i32);
+            }
+        }
+        self.base * 2f64.powi(self.counts.len() as i32 - 1)
+    }
+
+    /// Merge another histogram with identical geometry.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.base, other.base);
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Format seconds with an adaptive unit (µs / ms / s).
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let mut h = LatencyHistogram::standard();
+        for _ in 0..99 {
+            h.record(10e-6); // ~10µs
+        }
+        h.record(500e-3); // one 500ms outlier
+        assert_eq!(h.count(), 100);
+        // p50 bucket bound should be near 16µs (2^4 µs), way below the outlier.
+        let p50 = h.quantile_upper_bound(0.50);
+        assert!(p50 < 100e-6, "p50 bound {p50}");
+        let p999 = h.quantile_upper_bound(0.999);
+        assert!(p999 > 100e-3, "p99.9 bound {p999}");
+        assert!((h.max() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::standard();
+        let mut b = LatencyHistogram::standard();
+        a.record(1e-3);
+        b.record(2e-3);
+        b.record(4e-3);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!(a.mean() > 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_seconds(5e-6).ends_with("µs"));
+        assert!(fmt_seconds(5e-3).ends_with("ms"));
+        assert!(fmt_seconds(5.0).ends_with('s'));
+    }
+}

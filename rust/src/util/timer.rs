@@ -1,0 +1,80 @@
+//! Wall-clock timing helpers for the bench harness.
+//!
+//! `criterion` is unavailable offline; [`bench_fn`] provides the small
+//! slice of it we need: warmup, fixed-iteration measurement, and a
+//! [`Summary`](crate::util::stats::Summary) of per-iteration times.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Time a single invocation of `f`, returning (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let start = Instant::now();
+    let out = f();
+    (start.elapsed().as_secs_f64(), out)
+}
+
+/// Options for [`bench_fn`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 3, iters: 30 }
+    }
+}
+
+impl BenchOpts {
+    /// A faster profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        BenchOpts { warmup_iters: 1, iters: 10 }
+    }
+}
+
+/// Run `f` `opts.warmup_iters` times unmeasured then `opts.iters` times
+/// measured; return the per-iteration timing summary.
+pub fn bench_fn(opts: BenchOpts, mut f: impl FnMut()) -> Summary {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    for _ in 0..opts.iters {
+        let start = Instant::now();
+        f();
+        samples.push(start.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples).expect("iters > 0")
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept behind one name so call sites read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_result() {
+        let (secs, v) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_fn_runs_expected_iterations() {
+        let mut count = 0usize;
+        let opts = BenchOpts { warmup_iters: 2, iters: 5 };
+        let s = bench_fn(opts, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+}

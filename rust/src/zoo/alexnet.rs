@@ -1,0 +1,46 @@
+//! AlexNet distinct stride-1 convolution configurations.
+//!
+//! Single-tower (ungrouped) AlexNet: conv1 (11×11 stride 4) is excluded
+//! as non-stride-1; conv2 (5×5 on 27×27×96) and conv3–conv5 (3×3 on
+//! 13×13) remain. Reproduces Table 1's 4 configs = 75% 3×3 + 25% 5×5.
+
+use super::{Network, ZooEntry};
+use crate::conv::ConvSpec;
+
+fn e(layer: &'static str, hw: usize, k: usize, m: usize, c: usize) -> ZooEntry {
+    ZooEntry {
+        network: Network::AlexNet,
+        layer,
+        spec: ConvSpec::paper(hw, 1, k, m, c),
+    }
+}
+
+pub fn configs() -> Vec<ZooEntry> {
+    vec![
+        e("conv2", 27, 5, 256, 96),
+        e("conv3", 13, 3, 384, 256),
+        e("conv4", 13, 3, 384, 384),
+        e("conv5", 13, 3, 256, 384),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::FilterSize;
+
+    #[test]
+    fn counts_match_table1_row() {
+        let cfgs = configs();
+        assert_eq!(cfgs.len(), 4);
+        let n3 = cfgs.iter().filter(|e| e.spec.filter_size() == FilterSize::F3x3).count();
+        let n5 = cfgs.iter().filter(|e| e.spec.filter_size() == FilterSize::F5x5).count();
+        assert_eq!((n3, n5), (3, 1));
+    }
+
+    #[test]
+    fn last_conv_input_is_13x13x384() {
+        let conv5 = configs().into_iter().find(|e| e.layer == "conv5").unwrap();
+        assert_eq!((conv5.spec.h, conv5.spec.c), (13, 384));
+    }
+}

@@ -1,0 +1,108 @@
+//! GoogleNet (Inception v1) distinct stride-1 convolution configurations.
+//!
+//! Derived from Szegedy et al., "Going deeper with convolutions", Table 1:
+//! conv2's 1×1 reduce and 3×3, plus each inception module's 1×1, 3×3
+//! reduce, 3×3, 5×5 reduce and 5×5 branches. Pool projections and the two
+//! auxiliary classifiers are excluded (see `zoo` module docs) — this is
+//! the only counting that reproduces the paper's 42 = 24 + 10 + 8 census.
+//! Duplicate (H, K, M, C) tuples across modules are listed once.
+
+use super::{Network, ZooEntry};
+use crate::conv::ConvSpec;
+
+fn e(layer: &'static str, hw: usize, k: usize, m: usize, c: usize) -> ZooEntry {
+    ZooEntry {
+        network: Network::GoogleNet,
+        layer,
+        spec: ConvSpec::paper(hw, 1, k, m, c),
+    }
+}
+
+pub fn configs() -> Vec<ZooEntry> {
+    vec![
+        // ---- stem ----
+        e("conv2.reduce", 56, 1, 64, 64),
+        e("conv2.3x3", 56, 3, 192, 64),
+        // ---- inception 3a (28x28, depth 192) ----
+        e("inception3a.1x1", 28, 1, 64, 192),
+        e("inception3a.3x3reduce", 28, 1, 96, 192),
+        e("inception3a.5x5reduce", 28, 1, 16, 192),
+        e("inception3a.3x3", 28, 3, 128, 96),
+        e("inception3a.5x5", 28, 5, 32, 16),
+        // ---- inception 3b (28x28, depth 256) ----
+        // 1x1 and 3x3reduce are both 128 filters -> one distinct config.
+        e("inception3b.1x1", 28, 1, 128, 256),
+        e("inception3b.5x5reduce", 28, 1, 32, 256),
+        e("inception3b.3x3", 28, 3, 192, 128),
+        e("inception3b.5x5", 28, 5, 96, 32),
+        // ---- inception 4a (14x14, depth 480) ----
+        e("inception4a.1x1", 14, 1, 192, 480),
+        e("inception4a.3x3reduce", 14, 1, 96, 480),
+        e("inception4a.5x5reduce", 14, 1, 16, 480),
+        e("inception4a.3x3", 14, 3, 208, 96),
+        e("inception4a.5x5", 14, 5, 48, 16),
+        // ---- inception 4b (14x14, depth 512) ----
+        e("inception4b.1x1", 14, 1, 160, 512),
+        e("inception4b.3x3reduce", 14, 1, 112, 512),
+        e("inception4b.5x5reduce", 14, 1, 24, 512),
+        e("inception4b.3x3", 14, 3, 224, 112),
+        e("inception4b.5x5", 14, 5, 64, 24),
+        // ---- inception 4c (14x14, depth 512) ----
+        // 5x5reduce (24) duplicates 4b's; 5x5 (64 on 24) duplicates 4b's.
+        e("inception4c.1x1", 14, 1, 128, 512),
+        e("inception4c.3x3", 14, 3, 256, 128),
+        // ---- inception 4d (14x14, depth 528) ----
+        e("inception4d.1x1", 14, 1, 112, 528),
+        e("inception4d.3x3reduce", 14, 1, 144, 528),
+        e("inception4d.5x5reduce", 14, 1, 32, 528),
+        e("inception4d.3x3", 14, 3, 288, 144),
+        e("inception4d.5x5", 14, 5, 64, 32),
+        // ---- inception 4e (14x14, depth 528) ----
+        // 5x5reduce (32) duplicates 4d's.
+        e("inception4e.1x1", 14, 1, 256, 528),
+        e("inception4e.3x3reduce", 14, 1, 160, 528),
+        e("inception4e.3x3", 14, 3, 320, 160),
+        e("inception4e.5x5", 14, 5, 128, 32),
+        // ---- inception 5a (7x7, depth 832) ----
+        e("inception5a.1x1", 7, 1, 256, 832),
+        e("inception5a.3x3reduce", 7, 1, 160, 832),
+        // The paper's maximum-speedup configuration (2.29x at batch 1):
+        e("inception5a.5x5reduce", 7, 1, 32, 832),
+        e("inception5a.3x3", 7, 3, 320, 160),
+        e("inception5a.5x5", 7, 5, 128, 32),
+        // ---- inception 5b (7x7, depth 832) ----
+        e("inception5b.1x1", 7, 1, 384, 832),
+        e("inception5b.3x3reduce", 7, 1, 192, 832),
+        e("inception5b.5x5reduce", 7, 1, 48, 832),
+        e("inception5b.3x3", 7, 3, 384, 192),
+        e("inception5b.5x5", 7, 5, 128, 48),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::FilterSize;
+
+    #[test]
+    fn counts_match_table1_row() {
+        let cfgs = configs();
+        assert_eq!(cfgs.len(), 42);
+        let count = |f: FilterSize| cfgs.iter().filter(|e| e.spec.filter_size() == f).count();
+        assert_eq!(count(FilterSize::F1x1), 24);
+        assert_eq!(count(FilterSize::F3x3), 10);
+        assert_eq!(count(FilterSize::F5x5), 8);
+    }
+
+    #[test]
+    fn last_conv_depth_is_832() {
+        // Table 1: input size to last convolutional layer is 7x7x832.
+        let max_depth_at_7 = configs()
+            .iter()
+            .filter(|e| e.spec.h == 7)
+            .map(|e| e.spec.c)
+            .max()
+            .unwrap();
+        assert_eq!(max_depth_at_7, 832);
+    }
+}

@@ -1,0 +1,157 @@
+//! Full forward conv-layer *sequences* of the five networks, with
+//! repetition.
+//!
+//! The census in the sibling modules lists the *distinct* stride-1
+//! configurations (Table 1); network-level conclusions ("convolutions
+//! account for a large part of the overall network execution time", §1)
+//! need the actual execution sequence, where VGG19 runs 16 convs and
+//! ResNet-50 repeats each bottleneck shape per block. This module
+//! expands the distinct configs into full sequences, used by
+//! [`crate::coordinator::plan`]-style accounting and the ablation
+//! benches.
+
+use super::{network_configs, Network, ZooEntry};
+
+/// One step of a network's conv execution: a distinct config times its
+/// repetition count (stride-1 convs only, matching the census scope).
+#[derive(Debug, Clone)]
+pub struct LayerStep {
+    pub entry: ZooEntry,
+    /// How many times this exact configuration runs in one forward pass.
+    pub count: usize,
+}
+
+/// Repetition count of a distinct config within one forward pass.
+fn repetition(net: Network, layer: &str) -> usize {
+    match net {
+        // VGG19 stages repeat their second shape: conv3_2 == conv3_3 ==
+        // conv3_4, conv4_2..conv4_4, conv5_1..conv5_4 share one shape.
+        Network::Vgg19 => match layer {
+            "conv3_2" | "conv4_2" => 3,
+            "conv5_1" => 4,
+            _ => 1,
+        },
+        // ResNet-50 bottleneck shapes repeat per block in each stage
+        // (conv2: 3 blocks, conv3: 4, conv4: 6, conv5: 3). First-block
+        // reduces run at stride 2 for conv3-5 and are outside the
+        // stride-1 census; the remaining blocks share these shapes.
+        Network::ResNet50 => {
+            let blocks = if layer.starts_with("conv2") {
+                3
+            } else if layer.starts_with("conv3") {
+                4
+            } else if layer.starts_with("conv4") {
+                6
+            } else {
+                3
+            };
+            if layer.ends_with("reduce1x1") {
+                blocks - 1 // first block's reduce is the stride-2 one
+            } else {
+                blocks
+            }
+        }
+        // SqueezeNet: fire2/fire3 share expand shapes; fire6/fire7
+        // share expand shapes (annotated in the config list).
+        Network::SqueezeNet => match layer {
+            "fire2.expand1x1" | "fire2.expand3x3" => 2,
+            "fire6.expand1x1" | "fire6.expand3x3" => 2,
+            _ => 1,
+        },
+        // GoogleNet: 4b/4c share the 5x5 branch shapes; 4d/4e share the
+        // 5x5-reduce; 5a/5b share the pool-proj (excluded) — within the
+        // census only these two dedups repeat.
+        Network::GoogleNet => match layer {
+            "inception4b.5x5reduce" | "inception4b.5x5" => 2,
+            "inception4d.5x5reduce" => 2,
+            // 3b and 4c use the same filter count for their 1x1 and
+            // 3x3-reduce branches, so one distinct config runs twice.
+            "inception3b.1x1" | "inception4c.1x1" => 2,
+            _ => 1,
+        },
+        Network::AlexNet => 1,
+    }
+}
+
+/// The full stride-1 conv sequence of one forward pass.
+pub fn network_layers(net: Network) -> Vec<LayerStep> {
+    network_configs(net)
+        .into_iter()
+        .map(|entry| LayerStep { count: repetition(net, entry.layer), entry })
+        .collect()
+}
+
+/// Total stride-1 convolutions executed in one forward pass.
+pub fn conv_executions(net: Network) -> usize {
+    network_layers(net).iter().map(|l| l.count).sum()
+}
+
+/// Total forward MACs of the stride-1 convs at a batch size.
+pub fn network_macs(net: Network, batch: usize) -> u64 {
+    network_layers(net)
+        .iter()
+        .map(|l| l.entry.spec.with_batch(batch).macs() * l.count as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_runs_sixteen_convs() {
+        // VGG19's defining property: 16 conv layers, all 3x3 stride 1.
+        assert_eq!(conv_executions(Network::Vgg19), 16);
+    }
+
+    #[test]
+    fn resnet50_bottleneck_expansion() {
+        // 3+4+6+3 = 16 bottlenecks; each contributes a stride-1 3x3
+        // (first-stage blocks included: downsampling is on the first
+        // conv of the stage in this derivation) and expand 1x1s.
+        let layers = network_layers(Network::ResNet50);
+        let threes: usize = layers
+            .iter()
+            .filter(|l| l.entry.spec.kh == 3)
+            .map(|l| l.count)
+            .sum();
+        assert_eq!(threes, 16);
+        let total = conv_executions(Network::ResNet50);
+        // 16 blocks x 3 convs minus the four stride-2 first-block
+        // reduces that fall outside the stride-1 census.
+        assert_eq!(total, 16 * 3 - 4);
+    }
+
+    #[test]
+    fn squeezenet_fire_modules() {
+        // fire2..fire9 = 8 squeezes + 8 expand pairs + conv10 = 25.
+        assert_eq!(conv_executions(Network::SqueezeNet), 25);
+    }
+
+    #[test]
+    fn googlenet_census_expansion_is_consistent() {
+        let layers = network_layers(Network::GoogleNet);
+        let total = conv_executions(Network::GoogleNet);
+        // 2 stem + 9 inceptions x 5 counted branches = 47 executions
+        // (pool projections and aux classifiers excluded, as in the
+        // census; shared shapes counted once per occurrence).
+        assert_eq!(layers.len(), 42);
+        assert_eq!(total, 47);
+    }
+
+    #[test]
+    fn macs_scale_with_batch() {
+        for net in Network::ALL {
+            let m1 = network_macs(net, 1);
+            let m8 = network_macs(net, 8);
+            assert_eq!(m8, 8 * m1, "{net:?}");
+            assert!(m1 > 0);
+        }
+    }
+
+    #[test]
+    fn vgg_dominates_compute() {
+        // §1 motivation sanity: VGG19's conv MACs dwarf SqueezeNet's.
+        assert!(network_macs(Network::Vgg19, 1) > 10 * network_macs(Network::SqueezeNet, 1));
+    }
+}

@@ -1,0 +1,273 @@
+//! The paper's evaluation workload: every *distinct* stride-1 forward
+//! convolution configuration of the five CNNs in Table 1.
+//!
+//! Counts match Table 1 exactly:
+//!
+//! | network    | configs | 1×1 | 3×3 | 5×5 |
+//! |------------|---------|-----|-----|-----|
+//! | GoogleNet  | 42      | 24  | 10  | 8   |
+//! | SqueezeNet | 21      | 15  | 6   | 0   |
+//! | AlexNet    | 4       | 0   | 3   | 1   |
+//! | ResNet-50  | 12      | 8   | 4   | 0   |
+//! | VGG19      | 9       | 0   | 9   | 0   |
+//!
+//! 88 distinct configs × 7 batch sizes = 616 cases (the paper's ">600").
+//!
+//! Derivation notes (the paper lists only the census, not the configs):
+//! * GoogleNet: conv2 3×3-reduce plus, per inception module, the 1×1,
+//!   3×3-reduce, 3×3, 5×5-reduce and 5×5 branches. Pool-projection 1×1s
+//!   and the auxiliary classifiers are excluded — this is the only
+//!   counting that reproduces 24/10/8 exactly.
+//! * SqueezeNet: v1.0 squeeze/expand convs of fire2–fire9 plus conv10;
+//!   reproduces 15/6 exactly.
+//! * AlexNet: single-tower (ungrouped) conv2–conv5; conv1 (11×11 stride
+//!   4) is excluded as non-stride-1; reproduces 3×3 75% / 5×5 25%.
+//! * ResNet-50: bottleneck convs with downsampling on the first conv of
+//!   each stage (stride 2, excluded). The conv2_1 64→64 reduce is folded
+//!   into the census to land on the published 8×1×1 + 4×3×3 = 12.
+//! * VGG19: all 16 convs are 3×3 stride 1; 9 distinct shapes.
+
+pub mod layers;
+
+mod alexnet;
+mod googlenet;
+mod resnet50;
+mod squeezenet;
+mod vgg19;
+
+use crate::conv::{ConvSpec, FilterSize};
+
+/// The five networks of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Network {
+    GoogleNet,
+    SqueezeNet,
+    AlexNet,
+    ResNet50,
+    Vgg19,
+}
+
+impl Network {
+    pub const ALL: [Network; 5] = [
+        Network::GoogleNet,
+        Network::SqueezeNet,
+        Network::AlexNet,
+        Network::ResNet50,
+        Network::Vgg19,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Network::GoogleNet => "GoogleNet",
+            Network::SqueezeNet => "SqueezeNet",
+            Network::AlexNet => "AlexNet",
+            Network::ResNet50 => "ResNet-50",
+            Network::Vgg19 => "VGG19",
+        }
+    }
+
+    /// Input size of the full network (all five use 224×224×3).
+    pub fn input_size(&self) -> (usize, usize, usize) {
+        (224, 224, 3)
+    }
+
+    /// Input size to the last convolutional layer, as listed in Table 1.
+    pub fn last_conv_input(&self) -> (usize, usize, usize) {
+        match self {
+            Network::GoogleNet => (7, 7, 832),
+            Network::SqueezeNet => (13, 13, 512),
+            Network::AlexNet => (13, 13, 384),
+            Network::ResNet50 => (7, 7, 1024),
+            Network::Vgg19 => (14, 14, 512),
+        }
+    }
+}
+
+/// One distinct convolution configuration of a network (batch = 1; use
+/// [`ConvSpec::with_batch`] to expand).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ZooEntry {
+    pub network: Network,
+    /// Human-readable layer name, e.g. `inception4e.5x5reduce`.
+    pub layer: &'static str,
+    pub spec: ConvSpec,
+}
+
+/// Batch sizes evaluated in the paper ("1, 8, 16, 32, 64, 128, 256").
+pub const BATCH_SIZES: [usize; 7] = [1, 8, 16, 32, 64, 128, 256];
+
+/// All distinct stride-1 configurations of one network.
+pub fn network_configs(net: Network) -> Vec<ZooEntry> {
+    match net {
+        Network::GoogleNet => googlenet::configs(),
+        Network::SqueezeNet => squeezenet::configs(),
+        Network::AlexNet => alexnet::configs(),
+        Network::ResNet50 => resnet50::configs(),
+        Network::Vgg19 => vgg19::configs(),
+    }
+}
+
+/// All 88 distinct configurations across the five networks.
+pub fn all_configs() -> Vec<ZooEntry> {
+    Network::ALL.iter().flat_map(|&n| network_configs(n)).collect()
+}
+
+/// The full evaluation set: every distinct config at every batch size
+/// (616 cases).
+pub fn all_cases() -> Vec<(ZooEntry, usize)> {
+    let mut out = Vec::new();
+    for entry in all_configs() {
+        for &b in BATCH_SIZES.iter() {
+            out.push((entry.clone(), b));
+        }
+    }
+    out
+}
+
+/// Census row for Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CensusRow {
+    pub network: Network,
+    pub distinct: usize,
+    pub n_1x1: usize,
+    pub n_3x3: usize,
+    pub n_5x5: usize,
+}
+
+impl CensusRow {
+    pub fn pct(&self, f: FilterSize) -> f64 {
+        let count = match f {
+            FilterSize::F1x1 => self.n_1x1,
+            FilterSize::F3x3 => self.n_3x3,
+            FilterSize::F5x5 => self.n_5x5,
+            FilterSize::Other(..) => 0,
+        };
+        100.0 * count as f64 / self.distinct as f64
+    }
+}
+
+/// Compute the Table 1 census from the config lists.
+pub fn census() -> Vec<CensusRow> {
+    Network::ALL
+        .iter()
+        .map(|&network| {
+            let configs = network_configs(network);
+            let count =
+                |fs: FilterSize| configs.iter().filter(|e| e.spec.filter_size() == fs).count();
+            CensusRow {
+                network,
+                distinct: configs.len(),
+                n_1x1: count(FilterSize::F1x1),
+                n_3x3: count(FilterSize::F3x3),
+                n_5x5: count(FilterSize::F5x5),
+            }
+        })
+        .collect()
+}
+
+/// Convenience: entries of a given filter size across all networks,
+/// deduplicated by spec (a few shapes repeat across networks).
+pub fn configs_with_filter(fs: FilterSize) -> Vec<ZooEntry> {
+    let mut seen = std::collections::HashSet::new();
+    all_configs()
+        .into_iter()
+        .filter(|e| e.spec.filter_size() == fs && seen.insert(e.spec))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_matches_table1() {
+        let rows = census();
+        let get = |n: Network| rows.iter().find(|r| r.network == n).unwrap().clone();
+
+        let g = get(Network::GoogleNet);
+        assert_eq!((g.distinct, g.n_1x1, g.n_3x3, g.n_5x5), (42, 24, 10, 8));
+
+        let s = get(Network::SqueezeNet);
+        assert_eq!((s.distinct, s.n_1x1, s.n_3x3, s.n_5x5), (21, 15, 6, 0));
+
+        let a = get(Network::AlexNet);
+        assert_eq!((a.distinct, a.n_1x1, a.n_3x3, a.n_5x5), (4, 0, 3, 1));
+
+        let r = get(Network::ResNet50);
+        assert_eq!((r.distinct, r.n_1x1, r.n_3x3, r.n_5x5), (12, 8, 4, 0));
+
+        let v = get(Network::Vgg19);
+        assert_eq!((v.distinct, v.n_1x1, v.n_3x3, v.n_5x5), (9, 0, 9, 0));
+    }
+
+    #[test]
+    fn census_percentages_match_table1() {
+        let rows = census();
+        let g = rows.iter().find(|r| r.network == Network::GoogleNet).unwrap();
+        assert!((g.pct(FilterSize::F1x1) - 57.2).abs() < 0.2);
+        assert!((g.pct(FilterSize::F3x3) - 23.8).abs() < 0.2);
+        assert!((g.pct(FilterSize::F5x5) - 19.0).abs() < 0.2);
+        let a = rows.iter().find(|r| r.network == Network::AlexNet).unwrap();
+        assert!((a.pct(FilterSize::F3x3) - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_cases_exceed_600() {
+        assert_eq!(all_configs().len(), 88);
+        assert_eq!(all_cases().len(), 88 * 7);
+        assert!(all_cases().len() > 600, "paper: 'more than 600'");
+    }
+
+    #[test]
+    fn all_specs_are_valid_stride1_same_padded() {
+        for e in all_configs() {
+            assert!(e.spec.is_valid(), "{:?}", e);
+            assert_eq!(e.spec.stride, 1, "{:?}", e);
+            assert_eq!(e.spec.n, 1, "zoo entries are batch-1: {:?}", e);
+            // Same padding => output spatial == input spatial.
+            assert_eq!(e.spec.out_h(), e.spec.h, "{:?}", e);
+            assert_eq!(e.spec.out_w(), e.spec.w, "{:?}", e);
+        }
+    }
+
+    #[test]
+    fn configs_are_distinct_within_network() {
+        for net in Network::ALL {
+            let cfgs = network_configs(net);
+            let set: std::collections::HashSet<_> =
+                cfgs.iter().map(|e| e.spec).collect();
+            assert_eq!(set.len(), cfgs.len(), "{net:?} has duplicate configs");
+        }
+    }
+
+    #[test]
+    fn headline_config_is_present() {
+        // 7-32-832 — the paper's maximum-speedup configuration (2.29x),
+        // inception 5a's 5x5-reduce.
+        let found = all_configs()
+            .iter()
+            .any(|e| e.spec.fig_label() == "7-32-832" && e.spec.kh == 1);
+        assert!(found);
+    }
+
+    #[test]
+    fn profiled_table_configs_are_present() {
+        // Tables 3-5 reference these configs (at various batch sizes).
+        for label in ["7-256-832", "14-1024-256", "27-256-64", "7-384-192",
+                      "13-384-384", "7-128-48"] {
+            let found = all_configs().iter().any(|e| e.spec.fig_label() == label);
+            assert!(found, "missing profiled config {label}");
+        }
+    }
+
+    #[test]
+    fn filter_queries_cover_all() {
+        let n1 = configs_with_filter(FilterSize::F1x1).len();
+        let n3 = configs_with_filter(FilterSize::F3x3).len();
+        let n5 = configs_with_filter(FilterSize::F5x5).len();
+        // Deduplicated across networks, so <= the raw census sums.
+        assert!(n1 <= 47 && n1 > 40);
+        assert!(n3 <= 32 && n3 > 25);
+        assert_eq!(n5, 9);
+    }
+}

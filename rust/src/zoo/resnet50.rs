@@ -1,0 +1,62 @@
+//! ResNet-50 distinct stride-1 convolution configurations.
+//!
+//! Bottleneck blocks per He et al. (2015), with downsampling on the first
+//! conv of stages conv3–conv5 (stride 2, excluded from the stride-1
+//! census, as are the stride-2 projection shortcuts). conv1 (7×7 stride
+//! 2) is likewise excluded. The conv2_1 64→64 reduce is folded into the
+//! census (its role is subsumed by the 256→64 reduce of blocks 2–3) —
+//! the only counting that lands on Table 1's published 12 = 8×1×1 +
+//! 4×3×3 split.
+
+use super::{Network, ZooEntry};
+use crate::conv::ConvSpec;
+
+fn e(layer: &'static str, hw: usize, k: usize, m: usize, c: usize) -> ZooEntry {
+    ZooEntry {
+        network: Network::ResNet50,
+        layer,
+        spec: ConvSpec::paper(hw, 1, k, m, c),
+    }
+}
+
+pub fn configs() -> Vec<ZooEntry> {
+    vec![
+        // ---- conv2_x (56x56) ----
+        e("conv2.reduce1x1", 56, 1, 64, 256),
+        e("conv2.3x3", 56, 3, 64, 64),
+        e("conv2.expand1x1", 56, 1, 256, 64), // also the projection shortcut
+        // ---- conv3_x (28x28) ----
+        e("conv3.reduce1x1", 28, 1, 128, 512),
+        e("conv3.3x3", 28, 3, 128, 128),
+        e("conv3.expand1x1", 28, 1, 512, 128),
+        // ---- conv4_x (14x14) ----
+        e("conv4.reduce1x1", 14, 1, 256, 1024),
+        e("conv4.3x3", 14, 3, 256, 256),
+        e("conv4.expand1x1", 14, 1, 1024, 256), // Table 3 config B shape
+        // ---- conv5_x (7x7) ----
+        e("conv5.reduce1x1", 7, 1, 512, 2048),
+        e("conv5.3x3", 7, 3, 512, 512),
+        e("conv5.expand1x1", 7, 1, 2048, 512),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::FilterSize;
+
+    #[test]
+    fn counts_match_table1_row() {
+        let cfgs = configs();
+        assert_eq!(cfgs.len(), 12);
+        let n1 = cfgs.iter().filter(|e| e.spec.filter_size() == FilterSize::F1x1).count();
+        let n3 = cfgs.iter().filter(|e| e.spec.filter_size() == FilterSize::F3x3).count();
+        assert_eq!((n1, n3), (8, 4));
+    }
+
+    #[test]
+    fn table3_config_b_shape_present() {
+        // 14-1-1-1024-256 at batch 1.
+        assert!(configs().iter().any(|e| e.spec.table_label() == "14-1-1-1024-256"));
+    }
+}

@@ -1,0 +1,68 @@
+//! SqueezeNet v1.0 distinct stride-1 convolution configurations.
+//!
+//! Derived from Iandola et al. (2016), Table 1: fire2–fire9 squeeze (1×1)
+//! and expand (1×1 + 3×3) convs plus conv10, with duplicates listed once.
+//! conv1 (7×7 stride 2) is excluded as non-stride-1. Reproduces the
+//! paper's 21 = 15×1×1 + 6×3×3 census exactly.
+
+use super::{Network, ZooEntry};
+use crate::conv::ConvSpec;
+
+fn e(layer: &'static str, hw: usize, k: usize, m: usize, c: usize) -> ZooEntry {
+    ZooEntry {
+        network: Network::SqueezeNet,
+        layer,
+        spec: ConvSpec::paper(hw, 1, k, m, c),
+    }
+}
+
+pub fn configs() -> Vec<ZooEntry> {
+    vec![
+        // ---- 55x55 stage (after conv1 + maxpool) ----
+        e("fire2.squeeze1x1", 55, 1, 16, 96),
+        e("fire2.expand1x1", 55, 1, 64, 16), // == fire3.expand1x1
+        e("fire2.expand3x3", 55, 3, 64, 16), // == fire3.expand3x3
+        e("fire3.squeeze1x1", 55, 1, 16, 128),
+        e("fire4.squeeze1x1", 55, 1, 32, 128),
+        e("fire4.expand1x1", 55, 1, 128, 32),
+        e("fire4.expand3x3", 55, 3, 128, 32),
+        // ---- 27x27 stage (after maxpool4) ----
+        e("fire5.squeeze1x1", 27, 1, 32, 256),
+        e("fire5.expand1x1", 27, 1, 128, 32),
+        e("fire5.expand3x3", 27, 3, 128, 32),
+        e("fire6.squeeze1x1", 27, 1, 48, 256),
+        e("fire6.expand1x1", 27, 1, 192, 48), // == fire7.expand1x1
+        e("fire6.expand3x3", 27, 3, 192, 48), // == fire7.expand3x3
+        e("fire7.squeeze1x1", 27, 1, 48, 384),
+        e("fire8.squeeze1x1", 27, 1, 64, 384),
+        e("fire8.expand1x1", 27, 1, 256, 64), // Table 3 config C shape
+        e("fire8.expand3x3", 27, 3, 256, 64),
+        // ---- 13x13 stage (after maxpool8) ----
+        e("fire9.squeeze1x1", 13, 1, 64, 512),
+        e("fire9.expand1x1", 13, 1, 256, 64),
+        e("fire9.expand3x3", 13, 3, 256, 64),
+        e("conv10", 13, 1, 1000, 512),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::FilterSize;
+
+    #[test]
+    fn counts_match_table1_row() {
+        let cfgs = configs();
+        assert_eq!(cfgs.len(), 21);
+        let count = |f: FilterSize| cfgs.iter().filter(|e| e.spec.filter_size() == f).count();
+        assert_eq!(count(FilterSize::F1x1), 15);
+        assert_eq!(count(FilterSize::F3x3), 6);
+        assert_eq!(count(FilterSize::F5x5), 0);
+    }
+
+    #[test]
+    fn last_conv_input_is_13x13x512() {
+        let conv10 = configs().into_iter().find(|e| e.layer == "conv10").unwrap();
+        assert_eq!((conv10.spec.h, conv10.spec.c), (13, 512));
+    }
+}

@@ -1,0 +1,49 @@
+//! VGG19 distinct stride-1 convolution configurations.
+//!
+//! All 16 convs of VGG19 are 3×3 stride-1 same-padded; repeated layers
+//! within a stage share a shape, leaving the 9 distinct configurations of
+//! Table 1 (100% 3×3).
+
+use super::{Network, ZooEntry};
+use crate::conv::ConvSpec;
+
+fn e(layer: &'static str, hw: usize, m: usize, c: usize) -> ZooEntry {
+    ZooEntry {
+        network: Network::Vgg19,
+        layer,
+        spec: ConvSpec::paper(hw, 1, 3, m, c),
+    }
+}
+
+pub fn configs() -> Vec<ZooEntry> {
+    vec![
+        e("conv1_1", 224, 64, 3),
+        e("conv1_2", 224, 64, 64),
+        e("conv2_1", 112, 128, 64),
+        e("conv2_2", 112, 128, 128),
+        e("conv3_1", 56, 256, 128),
+        e("conv3_2", 56, 256, 256), // == conv3_3, conv3_4
+        e("conv4_1", 28, 512, 256),
+        e("conv4_2", 28, 512, 512), // == conv4_3, conv4_4
+        e("conv5_1", 14, 512, 512), // == conv5_2..conv5_4
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::FilterSize;
+
+    #[test]
+    fn counts_match_table1_row() {
+        let cfgs = configs();
+        assert_eq!(cfgs.len(), 9);
+        assert!(cfgs.iter().all(|e| e.spec.filter_size() == FilterSize::F3x3));
+    }
+
+    #[test]
+    fn last_conv_input_is_14x14x512() {
+        let last = configs().into_iter().last().unwrap();
+        assert_eq!((last.spec.h, last.spec.c), (14, 512));
+    }
+}

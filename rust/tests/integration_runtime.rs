@@ -1,0 +1,153 @@
+//! Integration: AOT artifacts → PJRT → numerics vs the Rust oracle.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a note) when the artifact directory is missing so `cargo test`
+//! stays runnable on a fresh checkout.
+
+use cuconv::cpuref::naive::conv_naive;
+use cuconv::runtime::{spawn_executor, Engine, Manifest};
+use cuconv::tensor::Tensor;
+use cuconv::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = cuconv::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn sanity_config_all_algorithms_match_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::from_dir(&dir).unwrap();
+    let artifacts = engine.manifest().convs_for_label("8-2-3-16-32");
+    assert!(!artifacts.is_empty(), "sanity config missing from manifest");
+    let artifacts: Vec<_> = artifacts.into_iter().cloned().collect();
+
+    let spec = artifacts[0].spec;
+    let mut rng = Rng::new(0xF00D);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let want = conv_naive(&spec, &input, &filters);
+
+    let mut tested = 0;
+    for artifact in &artifacts {
+        let (got, timing) = engine.run_conv(artifact, &input, &filters).unwrap();
+        let err = got.rel_l2_error(&want);
+        assert!(
+            err < 5e-4,
+            "algo {} disagrees with rust oracle: rel_l2={err}",
+            artifact.algo
+        );
+        assert!(timing.exec_seconds > 0.0);
+        tested += 1;
+    }
+    // cuconv, direct, 3 GEMM variants, winograd, fft, reference.
+    assert!(tested >= 8, "expected >=8 algorithms, got {tested}");
+}
+
+#[test]
+fn one_by_one_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::from_dir(&dir).unwrap();
+    let Some(artifact) = engine.manifest().find_conv("conv_7-1-1-32-832_cuconv").cloned()
+    else {
+        eprintln!("headline artifact not built; skipping");
+        return;
+    };
+    let spec = artifact.spec;
+    let mut rng = Rng::new(0xBEEF);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let want = conv_naive(&spec, &input, &filters);
+    let (got, _) = engine.run_conv(&artifact, &input, &filters).unwrap();
+    assert!(got.rel_l2_error(&want) < 5e-4);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::from_dir(&dir).unwrap();
+    let artifact = engine
+        .manifest()
+        .find_conv("conv_8-2-3-16-32_reference")
+        .cloned()
+        .expect("sanity reference artifact");
+    let spec = artifact.spec;
+    let mut rng = Rng::new(7);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    engine.run_conv(&artifact, &input, &filters).unwrap();
+    assert_eq!(engine.compile_count(), 1);
+    engine.run_conv(&artifact, &input, &filters).unwrap();
+    engine.run_conv(&artifact, &input, &filters).unwrap();
+    assert_eq!(engine.compile_count(), 1, "cache must prevent recompiles");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::from_dir(&dir).unwrap();
+    let artifact = engine
+        .manifest()
+        .find_conv("conv_8-2-3-16-32_reference")
+        .cloned()
+        .expect("sanity reference artifact");
+    let bad_input = Tensor::zeros(1, 1, 8, 8);
+    let filters = Tensor::zeros(
+        artifact.spec.m,
+        artifact.spec.c,
+        artifact.spec.kh,
+        artifact.spec.kw,
+    );
+    assert!(engine.run_conv(&artifact, &bad_input, &filters).is_err());
+}
+
+#[test]
+fn model_artifacts_validate_against_sample_io() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::from_dir(&dir).unwrap();
+    let models: Vec<String> =
+        engine.manifest().models.iter().map(|m| m.name.clone()).collect();
+    assert!(!models.is_empty(), "no model artifacts");
+    for name in models {
+        let err = engine.validate_model(&name).unwrap();
+        // Sample outputs were computed with the reference algorithm; the
+        // executable runs the Pallas cuconv kernels — agreement here
+        // proves the full AOT chain end to end.
+        assert!(err < 5e-4, "model {name} max abs err {err}");
+    }
+}
+
+#[test]
+fn executor_thread_roundtrip_and_concurrency() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = manifest.model_family("minisqueezenet").first().map(|m| m.name.clone());
+    let (_guard, handle) = spawn_executor(manifest).unwrap();
+
+    // Warmup compiles through the handle.
+    if let Some(model_name) = model {
+        handle.warmup(&[model_name.clone()]).unwrap();
+        // Hammer it from several threads: the executor serializes safely.
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = handle.clone();
+                let name = model_name.clone();
+                s.spawn(move || {
+                    let err = h.validate_model(&name).unwrap();
+                    assert!(err < 5e-4, "thread {t}: err {err}");
+                });
+            }
+        });
+    }
+
+    // Unknown artifact errors cleanly rather than wedging the thread.
+    assert!(handle.run_model("nope", vec![0.0; 4]).is_err());
+    let x = Tensor::zeros(1, 1, 1, 1);
+    let w = Tensor::zeros(1, 1, 1, 1);
+    assert!(handle.run_conv("nope", x, w).is_err());
+}

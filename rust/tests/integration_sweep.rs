@@ -1,0 +1,183 @@
+//! The full 616-case evaluation sweep through the analytical model,
+//! checked against the paper's §4.1 aggregate claims.
+
+use cuconv::algo::Algorithm;
+use cuconv::conv::FilterSize;
+use cuconv::gpumodel::{self, paper::claims};
+use cuconv::util::stats::geomean;
+use cuconv::zoo;
+
+struct SweepCase {
+    filter: FilterSize,
+    batch: usize,
+    label: String,
+    speedup: f64,
+}
+
+fn run_sweep() -> Vec<SweepCase> {
+    let mut out = Vec::new();
+    for (entry, batch) in zoo::all_cases() {
+        let spec = entry.spec.with_batch(batch);
+        if let Some(speedup) = gpumodel::speedup(&spec) {
+            out.push(SweepCase {
+                filter: spec.filter_size(),
+                batch,
+                label: spec.fig_label(),
+                speedup,
+            });
+        }
+    }
+    out
+}
+
+#[test]
+fn sweep_covers_the_full_case_set() {
+    // A handful of large-batch, large-input cases exceed the paper's
+    // 1 GB workspace cap for cuConv's own stage-1 temporary (§4 notes
+    // the cap affects ~4% of algorithm/config cases); every other case
+    // must produce a speedup.
+    let cases = run_sweep();
+    let total = zoo::all_cases().len();
+    assert_eq!(total, 88 * 7);
+    assert!(
+        cases.len() >= 550,
+        "only {} of {total} cases produced speedups",
+        cases.len()
+    );
+    let missing = total - cases.len();
+    assert!(missing <= total / 10, "{missing} cases missing");
+    // Every missing case must be a genuine workspace exclusion.
+    for (entry, batch) in zoo::all_cases() {
+        let spec = entry.spec.with_batch(batch);
+        if gpumodel::speedup(&spec).is_none() {
+            assert!(
+                spec.cuconv_temp_bytes() > cuconv::algo::WORKSPACE_CAP_BYTES,
+                "{} batch {batch} missing without workspace reason",
+                spec.fig_label()
+            );
+        }
+    }
+}
+
+#[test]
+fn max_speedup_is_batch1_1x1_in_paper_range() {
+    // Paper: max 2.29x at 7-32-832 (1x1, batch 1).
+    let cases = run_sweep();
+    let best = cases
+        .iter()
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .unwrap();
+    assert_eq!(best.batch, 1, "max speedup at batch {}", best.batch);
+    assert!(
+        best.speedup > 1.5 && best.speedup < 4.0,
+        "max modeled speedup {:.2} (paper {})",
+        best.speedup,
+        claims::MAX_SPEEDUP_1X1_B1
+    );
+    // The winner must be a small-input config (the 7x7 GoogleNet region).
+    assert!(best.label.starts_with('7'), "max at {}", best.label);
+}
+
+#[test]
+fn batch1_1x1_average_speedup_in_paper_range() {
+    // Paper: 1.23x average for 1x1 at batch 1.
+    let cases = run_sweep();
+    let b1: Vec<f64> = cases
+        .iter()
+        .filter(|c| c.batch == 1 && c.filter == FilterSize::F1x1)
+        .map(|c| c.speedup)
+        .collect();
+    assert!(!b1.is_empty());
+    let avg = geomean(&b1);
+    assert!(
+        avg > 0.8 && avg < 2.0,
+        "1x1 batch-1 geomean speedup {avg:.2} (paper avg {})",
+        claims::AVG_SPEEDUP_1X1_B1
+    );
+}
+
+#[test]
+fn wins_concentrate_at_batch_one() {
+    // Paper: cuConv wins 8.31% of configs, "almost all … batch size of 1".
+    let cases = run_sweep();
+    let wins: Vec<&SweepCase> = cases.iter().filter(|c| c.speedup > 1.0).collect();
+    let frac = wins.len() as f64 / cases.len() as f64;
+    assert!(
+        frac > 0.02 && frac < 0.30,
+        "win fraction {frac:.3} (paper {})",
+        claims::WIN_FRACTION
+    );
+    let b1_wins = wins.iter().filter(|c| c.batch == 1).count();
+    assert!(
+        b1_wins * 2 > wins.len(),
+        "only {b1_wins}/{} wins at batch 1",
+        wins.len()
+    );
+    // Average speedup across wins (paper: 1.46x).
+    let avg_win = geomean(&wins.iter().map(|c| c.speedup).collect::<Vec<_>>());
+    assert!(
+        avg_win > 1.1 && avg_win < 2.5,
+        "avg winning speedup {avg_win:.2} (paper {})",
+        claims::AVG_SPEEDUP_WINS
+    );
+}
+
+#[test]
+fn speedup_never_increases_with_batch_on_average() {
+    // §4.1: the advantage shrinks as batch grows. Check the geomean
+    // speedup per batch size is (weakly) decreasing overall.
+    let cases = run_sweep();
+    let mut prev: Option<f64> = None;
+    for &batch in zoo::BATCH_SIZES.iter() {
+        let s: Vec<f64> =
+            cases.iter().filter(|c| c.batch == batch).map(|c| c.speedup).collect();
+        let g = geomean(&s);
+        if let Some(p) = prev {
+            assert!(
+                g <= p * 1.10,
+                "geomean speedup rose from {p:.3} to {g:.3} at batch {batch}"
+            );
+        }
+        prev = Some(g);
+    }
+}
+
+#[test]
+fn three_by_three_is_cuconvs_weakest_filter_size() {
+    // Figure 6's message: 3x3 is where cuConv is least competitive
+    // (Winograd territory).
+    let cases = run_sweep();
+    let geo = |f: FilterSize| {
+        let v: Vec<f64> = cases
+            .iter()
+            .filter(|c| c.filter == f && c.batch == 1)
+            .map(|c| c.speedup)
+            .collect();
+        geomean(&v)
+    };
+    let g1 = geo(FilterSize::F1x1);
+    let g3 = geo(FilterSize::F3x3);
+    let g5 = geo(FilterSize::F5x5);
+    assert!(g3 < g1, "3x3 geomean {g3:.2} !< 1x1 {g1:.2}");
+    assert!(g3 < g5, "3x3 geomean {g3:.2} !< 5x5 {g5:.2}");
+}
+
+#[test]
+fn winograd_best_baseline_for_most_3x3() {
+    // "the two based on Winograd" dominate 3x3 configs.
+    let mut wino_best = 0;
+    let mut total = 0;
+    for entry in zoo::configs_with_filter(FilterSize::F3x3) {
+        let spec = entry.spec; // batch 1
+        if let Some(best) = gpumodel::best_baseline(&spec) {
+            total += 1;
+            if matches!(best.algo, Algorithm::Winograd | Algorithm::WinogradNonfused) {
+                wino_best += 1;
+            }
+        }
+    }
+    assert!(
+        wino_best * 2 > total,
+        "winograd best in only {wino_best}/{total} 3x3 configs"
+    );
+}

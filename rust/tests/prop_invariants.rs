@@ -1,0 +1,209 @@
+//! Cross-module property tests (mini-proptest from `cuconv::util::prop`).
+
+use cuconv::algo::Algorithm;
+use cuconv::conv::ConvSpec;
+use cuconv::cpuref::{naive::conv_naive, CpuImpl};
+use cuconv::gpumodel;
+use cuconv::tensor::Tensor;
+use cuconv::util::json::{parse, Json};
+use cuconv::util::prop::{assert_prop, Config, Gen, UsizeIn, VecOf};
+use cuconv::util::rng::Rng;
+
+/// Generator for small random valid stride-1 same-padded conv specs.
+struct SpecGen;
+
+impl Gen for SpecGen {
+    type Value = ConvSpec;
+
+    fn gen(&self, rng: &mut Rng) -> ConvSpec {
+        let k = *rng.choose(&[1usize, 3, 5]);
+        let hw = rng.range(k.max(3), 12);
+        ConvSpec::paper(
+            hw,
+            rng.range(1, 3),
+            k,
+            rng.range(1, 12),
+            rng.range(1, 12),
+        )
+    }
+
+    fn shrink(&self, v: &ConvSpec) -> Vec<ConvSpec> {
+        let mut out = Vec::new();
+        if v.n > 1 {
+            out.push(ConvSpec { n: 1, ..*v });
+        }
+        if v.m > 1 {
+            out.push(ConvSpec { m: 1, ..*v });
+        }
+        if v.c > 1 {
+            out.push(ConvSpec { c: 1, ..*v });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_same_padding_preserves_spatial_dims() {
+    assert_prop(Config::default(), &SpecGen, |spec| {
+        if spec.out_h() != spec.h || spec.out_w() != spec.w {
+            return Err(format!("out {}x{}", spec.out_h(), spec.out_w()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flops_scale_linearly_in_batch() {
+    assert_prop(Config::default(), &SpecGen, |spec| {
+        let f1 = spec.flops();
+        let f4 = spec.with_batch(spec.n * 4).flops();
+        if f4 != 4 * f1 {
+            return Err(format!("{f1} -> {f4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_cpu_impls_agree_on_random_specs() {
+    let cfg = Config { cases: 24, ..Config::default() };
+    assert_prop(cfg, &SpecGen, |spec| {
+        let mut rng = Rng::new(spec.flops() ^ 0x5EED);
+        let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let want = conv_naive(spec, &input, &filters);
+        for imp in CpuImpl::ALL {
+            if imp == CpuImpl::Naive || !imp.supports(spec) {
+                continue;
+            }
+            let got = imp.run(spec, &input, &filters);
+            let err = got.rel_l2_error(&want);
+            if err > 5e-4 {
+                return Err(format!("{} err {err} on {spec}", imp.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cuconv_temp_accounting_matches_stage1_size() {
+    assert_prop(Config::default(), &SpecGen, |spec| {
+        let expected = if spec.kh == 1 {
+            0
+        } else {
+            spec.kh * spec.kw * spec.output_elems() * 4
+        };
+        if spec.cuconv_temp_bytes() != expected {
+            return Err(format!("{} != {expected}", spec.cuconv_temp_bytes()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gpumodel_time_monotone_in_batch() {
+    // More work at equal-or-better occupancy can't get cheaper.
+    let cfg = Config { cases: 64, ..Config::default() };
+    assert_prop(cfg, &SpecGen, |spec| {
+        for algo in Algorithm::ALL {
+            let t1 = gpumodel::predict(spec, algo).map(|t| t.total_us());
+            let t4 = gpumodel::predict(&spec.with_batch(spec.n * 4), algo)
+                .map(|t| t.total_us());
+            if let (Some(a), Some(b)) = (t1, t4) {
+                if b < a * 0.999 {
+                    return Err(format!("{algo}: batch x4 {b} < {a}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gpumodel_speedup_finite_and_positive() {
+    let cfg = Config { cases: 128, ..Config::default() };
+    assert_prop(cfg, &SpecGen, |spec| {
+        if let Some(s) = gpumodel::speedup(spec) {
+            if !(s.is_finite() && s > 0.0) {
+                return Err(format!("speedup {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// JSON generator: nested values from numbers/strings/arrays.
+struct JsonGen;
+
+impl Gen for JsonGen {
+    type Value = Json;
+
+    fn gen(&self, rng: &mut Rng) -> Json {
+        gen_json(rng, 3)
+    }
+}
+
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    // range() is inclusive; at depth 0 only scalar variants (0..=2) are
+    // allowed, otherwise recursion would never terminate.
+    let pick = rng.range(0, if depth == 0 { 2 } else { 4 });
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 1),
+        2 => {
+            // Integers + fractional values (printable f64s).
+            let v = (rng.next_f64() - 0.5) * 1e6;
+            Json::Num((v * 100.0).round() / 100.0)
+        }
+        3 => {
+            let n = rng.range(0, 4);
+            Json::Arr((0..n).map(|_| gen_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.range(0, 4);
+            Json::Obj(
+                (0..n)
+                    .map(|i| {
+                        (format!("k{}_{}", i, rng.below(100)), gen_json(rng, depth - 1))
+                    })
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrips() {
+    let cfg = Config { cases: 300, ..Config::default() };
+    assert_prop(cfg, &JsonGen, |v| {
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            match parse(&text) {
+                Ok(back) if &back == v => {}
+                Ok(back) => return Err(format!("{v:?} -> {text} -> {back:?}")),
+                Err(e) => return Err(format!("{v:?} -> {text}: {e}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_pad_preserves_sum() {
+    let gen = VecOf { elem: UsizeIn { lo: 1, hi: 6 }, min_len: 4, max_len: 4 };
+    assert_prop(Config::default(), &gen, |dims| {
+        let (n, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+        let mut rng = Rng::new((n * 37 + c * 11 + h * 5 + w) as u64);
+        let t = Tensor::random(n, c, h, w, &mut rng, -1.0, 1.0);
+        let p = t.pad_hw(2, 1);
+        let s0: f32 = t.data().iter().sum();
+        let s1: f32 = p.data().iter().sum();
+        if (s0 - s1).abs() > 1e-3 {
+            return Err(format!("{s0} vs {s1}"));
+        }
+        if p.shape() != [n, c, h + 4, w + 2] {
+            return Err(format!("shape {:?}", p.shape()));
+        }
+        Ok(())
+    });
+}

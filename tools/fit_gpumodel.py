@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Fit the gpumodel calibration constants from the paper's published
+kernel timings (Tables 3-5 of the cuConv paper).
+
+Each kernel family is modeled as an affine law
+
+    t_us = a * (work / occ) + b
+
+where `work` is the family's work feature (MFLOPs for compute kernels,
+K-elements for transform kernels) and `occ` is the linear occupancy
+min(1, warps/640) of the launch on an 80-SM V100 (640 = 80 SMs x 8
+resident warps needed to hide latency).
+
+Run:  python tools/fit_gpumodel.py
+Copy the printed constants into rust/src/gpumodel/calib.rs.
+"""
+import math
+
+SM, WARPS_SAT = 80, 640
+
+def occ(warps): return min(1.0, warps / WARPS_SAT)
+
+def P(hw, n): return hw*hw*n
+
+# ---- measurements: (feature_work, occ, t_us) per family ----
+def mf(hw,n,m,c,k): return 2.0*P(hw,n)*m*c*k*k/1e6
+
+def cuconv_s1_warps(hw,n,m,c,k):
+    T = min(1024, P(hw,n)); blocks = k*k*m*math.ceil(P(hw,n)/1024)
+    return blocks*math.ceil(T/32)
+
+fams = {}
+
+# cuconv stage 1 (scalar_prods_kernel)
+pts=[]
+for (hw,n,m,c,k,t) in [(7,1,256,832,1,58.56),(14,1,1024,256,1,73.86),(27,1,256,64,1,22.53),
+                       (7,1,384,192,3,52.86),(13,1,384,384,3,461.37),
+                       (7,1,128,48,5,16.80),(7,8,128,48,5,107.58)]:
+    pts.append((mf(hw,n,m,c,k)/occ(cuconv_s1_warps(hw,n,m,c,k)), t))
+fams["CUCONV_S1"]=pts
+
+# cuconv stage 2 (sum_kernel): feature = temp K-elements (taps*P*M/1e3)
+pts=[]
+for (hw,n,m,k,t) in [(7,1,384,3,4.93),(13,1,384,3,5.31),(7,1,128,5,5.70),(7,8,128,5,9.02)]:
+    pts.append((k*k*P(hw,n)*m/1e3, t))
+fams["CUCONV_S2"]=pts
+
+# gemm implicit (32x32 tiles, 256 threads)
+pts=[]
+for (hw,n,m,c,k,t) in [(7,1,256,832,1,128.13),(14,1,1024,256,1,47.87),(27,1,256,64,1,19.20)]:
+    blocks = math.ceil(P(hw,n)/32)*math.ceil(m/32)
+    pts.append((mf(hw,n,m,c,k)/occ(blocks*8), t))
+fams["GEMM_IMPL"]=pts
+
+# gemm implicit precomp main kernel (128x64 tiles, 256 threads); t minus 2us offsets kernel
+pts=[]
+for (hw,n,m,c,k,t) in [(7,1,256,832,1,105.31),(14,1,1024,256,1,43.23),(27,1,256,64,1,22.40),
+                       (7,1,384,192,3,201.47),(13,1,384,384,3,386.97)]:
+    blocks = math.ceil(P(hw,n)/128)*math.ceil(m/64)
+    pts.append((mf(hw,n,m,c,k)/occ(blocks*8), t))
+fams["GEMM_PRECOMP"]=pts
+
+# winograd fused: tiles kernel (feature: N*C*Hp*Wp kelems) + main (wino MFLOPs)
+fams["WINO_TILES"]=[(192*81/1e3, 9.12),(384*225/1e3, 19.77)]
+def wino_mf(hw,n,m,c): tiles=math.ceil(hw/2)**2*n; return 16*2*m*c*tiles/1e6
+fams["WINO_MAIN"]=[(wino_mf(7,1,384,192),101.91),(wino_mf(13,1,384,384),212.58)]
+
+# winograd nonfused (F(4x4): 5x5 uses 8x8 transforms)
+fams["NF_DATA"]=[(192*81/1e3,8.06),(384*225/1e3,22.75),(48*121/1e3,13.82),(8*48*121/1e3,13.89)]
+fams["NF_FILTER"]=[(384*192/1e3,17.44),(384*384/1e3,35.10),(128*48/1e3,9.15),(128*48/1e3,9.73)]
+def nf_mf3(hw,n,m,c): tiles=math.ceil(hw/4)**2*n; return 36*2*m*c*tiles/1e6
+def nf_mf5(hw,n,m,c): tiles=math.ceil(hw/4)**2*n; return 64*2*m*c*tiles/1e6
+fams["NF_GEMM3"]=[(nf_mf3(7,1,384,192),69.31),(nf_mf3(13,1,384,384),242.56)]
+fams["NF_GEMM5"]=[(nf_mf5(7,1,128,48),34.91),(nf_mf5(7,8,128,48),35.36)]
+fams["NF_OUT"]=[(384*49/1e3,10.82),(384*169/1e3,27.14),(128*49/1e3,16.92),(8*128*49/1e3,17.60)]
+
+# offsets kernel (constant)
+fams["OFFSETS"]=[(0,1.98),(0,2.00),(0,1.89),(0,1.98),(0,2.11)]
+
+for name, pts in sorted(fams.items()):
+    xs=[p[0] for p in pts]; ts=[p[1] for p in pts]
+    n=len(pts)
+    if max(xs)-min(xs) < 1e-9:
+        a, b = 0.0, sum(ts)/n
+    else:
+        mx=sum(xs)/n; mt=sum(ts)/n
+        a = sum((x-mx)*(t-mt) for x,t in pts)/sum((x-mx)**2 for x in xs)
+        b = mt - a*mx
+        if b < 1.0: b = 1.0; a = sum((t-b)*x for x,t in pts)/sum(x*x for x in xs)
+        if a < 0: a = 0.0; b = mt
+    errs=[(a*x+b)/t for x,t in pts]
+    print(f"{name:14s} a={a:8.4f} b={b:8.2f}   ratios: " + " ".join(f"{e:.2f}" for e in errs))
