@@ -2,28 +2,32 @@
 //!
 //! Ranks every algorithm on the paper's profiled configurations two
 //! ways: with the calibrated V100 model (what the paper's testbed would
-//! pick) and with real wall-clock of the Rust CPU substrate
-//! implementations (what this host picks). Then prints the per-layer
-//! plan for GoogleNet at batch 1 — the network where cuConv wins most.
+//! pick) and with real wall-clock of the CPU reference backend through
+//! the descriptor → plan → execute API (what this host picks). Then
+//! prints the per-layer plan for GoogleNet at batch 1 — the network
+//! where cuConv wins most.
 //!
 //! Run: `cargo run --release --example autotune`
 
 use cuconv::algo::{autotune, TimingSource};
+use cuconv::backend::{algo_find, algo_get, ConvDescriptor, CpuRefBackend};
 use cuconv::conv::ConvSpec;
 use cuconv::coordinator::plan_network;
 use cuconv::report::{fmt_speedup, fmt_us, Table};
 use cuconv::zoo::Network;
 
 fn main() {
+    let backend = CpuRefBackend::new();
     let labels = ["7-1-1-256-832", "14-1-1-1024-256", "7-1-3-384-192", "7-1-5-128-48"];
     for label in labels {
         let spec = ConvSpec::from_table_label(label).unwrap();
+        let desc = ConvDescriptor::new(spec).unwrap();
         let mut t = Table::new(
             format!("autotune {label}"),
-            &["rank", "V100 model", "model us", "rank ", "CPU measured", "cpu us"],
+            &["rank", "V100 model", "model us", "rank ", "cpuref backend", "cpu us"],
         );
         let model = autotune(&spec, TimingSource::GpuModel, 1);
-        let cpu = autotune(&spec, TimingSource::CpuMeasured, 3);
+        let cpu = algo_find(&backend, &desc, 3);
         let n = model.entries.len().max(cpu.entries.len());
         for i in 0..n {
             let (m_name, m_us) = model
@@ -38,7 +42,11 @@ fn main() {
                 .unwrap_or_default();
             t.row(vec![(i + 1).to_string(), m_name, m_us, (i + 1).to_string(), c_name, c_us]);
         }
-        print!("{}\n", t.render());
+        println!("{}", t.render());
+        println!(
+            "  heuristic (algo_get) pick on cpuref: {}\n",
+            algo_get(&backend, &desc).unwrap()
+        );
     }
 
     // The deployment story: per-layer plan for GoogleNet at batch 1.

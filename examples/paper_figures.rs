@@ -1,16 +1,37 @@
 //! Regenerate every table and figure of the paper's evaluation in one
 //! run, writing text + CSV to `results/`.
 //!
-//! Run: `cargo run --release --example paper_figures [-- --measure]`
-//! (`--measure` additionally times our own AOT kernels through PJRT for
-//! Tables 3–5's "ours measured" column; needs `make artifacts`.)
+//! Run: `cargo run --release --example paper_figures [-- --measure | -- --measure-cpu]`
+//! (`--measure` additionally times our own AOT kernels through the PJRT
+//! backend for Tables 3–5's "ours measured" column; needs the `pjrt`
+//! feature and `make artifacts`. `--measure-cpu` times the CPU
+//! reference backend instead — slow on the batched configs.)
 
+use cuconv::backend::Backend;
 use cuconv::conv::FilterSize;
 use cuconv::report::{figures, tables, write_file};
-use cuconv::runtime::{default_artifact_dir, Engine};
+
+/// The PJRT backend when compiled in and artifacts exist.
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Option<Box<dyn Backend>> {
+    match cuconv::backend::pjrt_from_default_dir() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("pjrt backend unavailable ({e:#}); model-only");
+            None
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Option<Box<dyn Backend>> {
+    eprintln!("--measure needs the `pjrt` feature (try --measure-cpu); model-only");
+    None
+}
 
 fn main() -> anyhow::Result<()> {
     let measure = std::env::args().any(|a| a == "--measure");
+    let measure_cpu = std::env::args().any(|a| a == "--measure-cpu");
     let out_dir = "results";
     let mut all = String::new();
 
@@ -23,20 +44,17 @@ fn main() -> anyhow::Result<()> {
     tables::table1().write_csv(format!("{out_dir}/table1.csv"))?;
     tables::table2().write_csv(format!("{out_dir}/table2.csv"))?;
 
-    // Tables 3-5 (optionally with measured column).
-    let mut engine = if measure {
-        let dir = default_artifact_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Engine::from_dir(&dir)?)
-        } else {
-            eprintln!("--measure requested but artifacts missing; model-only");
-            None
-        }
+    // Tables 3-5 (optionally with measured column, through the backend
+    // descriptor -> plan -> execute API).
+    let backend: Option<Box<dyn Backend>> = if measure {
+        pjrt_backend()
+    } else if measure_cpu {
+        Some(Box::new(cuconv::backend::CpuRefBackend::new()))
     } else {
         None
     };
     for no in [3u8, 4, 5] {
-        let t = tables::table_kernels(no, engine.as_mut(), 5);
+        let t = tables::table_kernels(no, backend.as_deref(), 5);
         println!("{}", t.render());
         all.push_str(&t.render());
         all.push('\n');

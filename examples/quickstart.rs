@@ -1,17 +1,22 @@
-//! Quickstart: one convolution through the whole stack.
+//! Quickstart: one convolution through the descriptor → plan → execute
+//! lifecycle (the system's single front door, modeled on cuDNN's
+//! Get/Find + workspace + execute interface).
 //!
-//! Loads the AOT-compiled cuConv Pallas kernel for the paper's headline
-//! configuration (7-32-832, the 2.29× speedup case), executes it via
-//! PJRT from Rust, and verifies the numerics against the pure-Rust
-//! oracle. Falls back to the CPU substrate when artifacts are missing.
+//! Runs the paper's headline configuration (7-32-832, the 2.29× speedup
+//! case) on the always-available CPU reference backend, verifies the
+//! numerics against the clear-loop oracle, and — when built with the
+//! `pjrt` feature and `make artifacts` — repeats the same lifecycle on
+//! the AOT Pallas kernels through the PJRT backend.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! (PJRT path: `make artifacts && cargo run --release --features pjrt \
+//!  --example quickstart`)
 
 use cuconv::algo::Algorithm;
+use cuconv::backend::{algo_find, algo_get, Backend, ConvDescriptor, CpuRefBackend, Workspace};
 use cuconv::conv::ConvSpec;
-use cuconv::cpuref::{naive::conv_naive, CpuImpl};
+use cuconv::cpuref::naive::conv_naive;
 use cuconv::gpumodel;
-use cuconv::runtime::{default_artifact_dir, Engine};
 use cuconv::tensor::Tensor;
 use cuconv::util::rng::Rng;
 
@@ -28,36 +33,71 @@ fn main() -> anyhow::Result<()> {
     let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
     let oracle = conv_naive(&spec, &input, &filters);
 
-    // 1) The AOT path: Pallas cuconv kernel -> HLO text -> PJRT.
-    let dir = default_artifact_dir();
-    if dir.join("manifest.json").exists() {
-        let mut engine = Engine::from_dir(&dir)?;
-        if let Some(artifact) =
-            engine.manifest().find_conv("conv_7-1-1-32-832_cuconv").cloned()
-        {
-            let (out, timing) = engine.run_conv(&artifact, &input, &filters)?;
-            println!(
-                "PJRT cuconv kernel: rel_l2 vs oracle = {:.2e}, exec {:.2} ms",
-                out.rel_l2_error(&oracle),
-                timing.exec_seconds * 1e3
-            );
-            assert!(out.rel_l2_error(&oracle) < 5e-4);
-        } else {
-            println!("(headline artifact not in manifest; skipping PJRT run)");
-        }
-    } else {
-        println!("(artifacts not built; run `make artifacts` for the PJRT path)");
+    // The cuDNN-style lifecycle, step by step.
+    // 1) Descriptor: validate the problem, query workspace needs.
+    let desc = ConvDescriptor::new(spec)?;
+    println!(
+        "  cuconv workspace: {} B (cap 1 GB; 1x1 skips stage 2 -> none needed)",
+        desc.workspace_bytes(Algorithm::CuConv)
+    );
+
+    // 2) Algorithm choice against a concrete backend: the heuristic
+    //    `algo_get` is instant; `algo_find` times every supported
+    //    algorithm on the backend itself and ranks them.
+    let backend = CpuRefBackend::new();
+    let pick = algo_get(&backend, &desc)?;
+    println!("  algo_get pick: {pick}");
+    let found = algo_find(&backend, &desc, 3);
+    for (i, e) in found.entries.iter().take(3).enumerate() {
+        println!("  algo_find #{}: {} ({:.1} us)", i + 1, e.algo, e.score_us);
     }
 
-    // 2) The CPU substrate: the same two-stage algorithm in Rust.
-    let out = CpuImpl::CuConvTwoStage.run(&spec, &input, &filters);
+    // 3) Plan once, execute many: the plan carries all per-(spec, algo)
+    //    preparation; the workspace is reused across requests.
+    let plans_before = backend.plan_count();
+    let plan = backend.plan(&desc, pick)?;
+    let mut workspace = Workspace::new();
+    let out = backend.execute(&plan, &input, &filters, &mut workspace)?;
     println!(
-        "CPU two-stage cuconv: rel_l2 vs oracle = {:.2e}",
+        "cpuref {}: rel_l2 vs oracle = {:.2e}",
+        plan.algo(),
         out.rel_l2_error(&oracle)
     );
     assert!(out.rel_l2_error(&oracle) < 1e-5);
+    for _ in 0..4 {
+        // Reusing the plan repeats none of the planning work.
+        backend.execute(&plan, &input, &filters, &mut workspace)?;
+    }
+    println!(
+        "  (5 executes, {} new plan created — plan once, execute many)",
+        backend.plan_count() - plans_before
+    );
 
-    // 3) The analytical V100 model: what the paper's testbed would show.
+    // 4) The same lifecycle on the AOT Pallas kernels through PJRT.
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = cuconv::runtime::default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let pjrt = cuconv::backend::PjrtBackend::from_dir(&dir)?;
+            if pjrt.capabilities(&spec, Algorithm::CuConv).is_supported() {
+                let plan = pjrt.plan(&desc, Algorithm::CuConv)?;
+                let out = pjrt.execute(&plan, &input, &filters, &mut workspace)?;
+                println!(
+                    "pjrt cuconv kernel: rel_l2 vs oracle = {:.2e}",
+                    out.rel_l2_error(&oracle)
+                );
+                assert!(out.rel_l2_error(&oracle) < 5e-4);
+            } else {
+                println!("(headline artifact not in manifest; skipping PJRT run)");
+            }
+        } else {
+            println!("(artifacts not built; run `make artifacts` for the PJRT path)");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the `pjrt` feature; skipping the PJRT backend)");
+
+    // 5) The analytical V100 model: what the paper's testbed would show.
     let cu = gpumodel::predict(&spec, Algorithm::CuConv).unwrap();
     let best = gpumodel::best_baseline(&spec).unwrap();
     println!(

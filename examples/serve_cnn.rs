@@ -1,58 +1,25 @@
 //! End-to-end serving driver (the repository's flagship example).
 //!
-//! Boots the full stack on a real small workload and proves every layer
-//! composes: the AOT MiniSqueezeNet (Pallas cuConv kernels, weights
-//! baked at compile time) is loaded by the Rust coordinator and serves
-//! batched inference requests from concurrent clients. Reports
-//! latency/throughput at several offered loads — the numbers recorded
-//! in EXPERIMENTS.md §End-to-end.
+//! With the `pjrt` feature and built artifacts, boots the full stack on
+//! a real small workload: the AOT MiniSqueezeNet (Pallas cuConv
+//! kernels, weights baked at compile time) is loaded by the Rust
+//! coordinator and serves batched inference requests from concurrent
+//! clients. Without `pjrt`, serves the paper's headline convolution
+//! layer through the CPU reference backend instead — same coordinator,
+//! same dynamic batcher, different [`BatchRunner`] behind the router.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_cnn`
+//! Run: `make artifacts && cargo run --release --features pjrt --example serve_cnn`
+//! Fallback: `cargo run --release --example serve_cnn`
 
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use cuconv::coordinator::{BatchPolicy, Server, ServerConfig};
-use cuconv::runtime::Manifest;
+use cuconv::coordinator::Server;
 use cuconv::util::rng::Rng;
 
 const CLIENT_THREADS: usize = 8;
 
-fn main() -> anyhow::Result<()> {
-    let dir = cuconv::runtime::default_artifact_dir();
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts not built; run `make artifacts`"
-    );
-    let manifest = Manifest::load(&dir)?;
-    let n_family = {
-        let family = manifest.model_family("minisqueezenet");
-        println!("model executables:");
-        for m in &family {
-            println!(
-                "  {} (batch {}, in {:?}, out {:?})",
-                m.name, m.batch, m.input_shape, m.output_shape
-            );
-        }
-        family.len()
-    };
-
-    let config = ServerConfig {
-        policy: BatchPolicy {
-            max_batch: 8,
-            max_delay: Duration::from_millis(4),
-            queue_capacity: 512,
-        },
-        ..ServerConfig::default()
-    };
-    let t0 = Instant::now();
-    let server = Server::start(manifest, config)?;
-    println!(
-        "server up in {:.2}s (compiled + validated {} executables)\n",
-        t0.elapsed().as_secs_f64(),
-        n_family
-    );
-
-    // Closed-loop load test at increasing request counts.
+/// Closed-loop load phases against a running server.
+fn drive_loads(server: &Server) {
     for &total in &[32usize, 128, 256] {
         let h = server.handle();
         let elems = h.image_elems();
@@ -98,7 +65,10 @@ fn main() -> anyhow::Result<()> {
             m.total_p99 * 1e3,
             m.total_max * 1e3
         );
-        println!("  predicted-class histogram: {class_histogram:?}\n");
+        if class_histogram.len() <= 16 {
+            println!("  predicted-class histogram: {class_histogram:?}");
+        }
+        println!();
     }
 
     let m = server.metrics();
@@ -106,6 +76,75 @@ fn main() -> anyhow::Result<()> {
         "totals: {} requests in {} batches, {} rejected",
         m.requests, m.batches, m.rejected
     );
+}
+
+#[cfg(feature = "pjrt")]
+fn start_server() -> anyhow::Result<Server> {
+    use std::time::Duration;
+
+    use cuconv::coordinator::{BatchPolicy, ServerConfig};
+    use cuconv::runtime::Manifest;
+
+    let dir = cuconv::runtime::default_artifact_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built; run `make artifacts` (or build without `pjrt` for the \
+         conv-backend fallback)"
+    );
+    let manifest = Manifest::load(&dir)?;
+    {
+        let family = manifest.model_family("minisqueezenet");
+        println!("model executables:");
+        for m in &family {
+            println!(
+                "  {} (batch {}, in {:?}, out {:?})",
+                m.name, m.batch, m.input_shape, m.output_shape
+            );
+        }
+    }
+    let config = ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(4),
+            queue_capacity: 512,
+        },
+        ..ServerConfig::default()
+    };
+    let t0 = Instant::now();
+    let server = Server::start(manifest, config)?;
+    println!(
+        "server up in {:.2}s (compiled + validated model executables)\n",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(server)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_server() -> anyhow::Result<Server> {
+    use std::time::Duration;
+
+    use cuconv::backend::CpuRefBackend;
+    use cuconv::conv::ConvSpec;
+    use cuconv::coordinator::BatchPolicy;
+
+    // The paper's headline layer, served as the workload.
+    let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+    println!("no pjrt feature: serving conv {} through the cpuref backend", spec);
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(4),
+        queue_capacity: 512,
+    };
+    let t0 = Instant::now();
+    let server =
+        Server::start_conv(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4, 8], policy)?;
+    println!("server up in {:.2}s (plans created for batch sizes 1,2,4,8)\n", t0.elapsed().as_secs_f64());
+    Ok(server)
+}
+
+fn main() -> anyhow::Result<()> {
+    let server = start_server()?;
+    drive_loads(&server);
     println!("serve_cnn OK");
     Ok(())
 }

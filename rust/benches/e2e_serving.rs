@@ -1,13 +1,16 @@
-//! Bench: end-to-end serving throughput/latency of the coordinator over
-//! the AOT MiniSqueezeNet (the numbers in EXPERIMENTS.md §End-to-end).
+//! Bench: end-to-end serving throughput/latency of the coordinator (the
+//! numbers in EXPERIMENTS.md §End-to-end).
 //!
-//! Sweeps batching policies to show the dynamic batcher's effect:
-//! batch-1-only vs batched-with-window.
+//! With the `pjrt` feature and built artifacts this serves the AOT
+//! MiniSqueezeNet; otherwise it serves the paper's headline convolution
+//! layer through the CPU reference backend — same router, same dynamic
+//! batcher, different [`BatchRunner`] behind it. Sweeps batching
+//! policies to show the dynamic batcher's effect, then an open-loop
+//! Poisson arrival sweep (latency vs offered load).
 
 use std::time::{Duration, Instant};
 
-use cuconv::coordinator::{run_open_loop, BatchPolicy, LoadSpec, Server, ServerConfig};
-use cuconv::runtime::Manifest;
+use cuconv::coordinator::{run_open_loop, BatchPolicy, LoadSpec, Server};
 use cuconv::util::rng::Rng;
 
 fn drive(server: &Server, total: usize, threads: usize) -> (f64, f64, f64, f64) {
@@ -33,16 +36,48 @@ fn drive(server: &Server, total: usize, threads: usize) -> (f64, f64, f64, f64) 
     (total as f64 / wall, m.total_mean * 1e3, m.total_p99 * 1e3, m.mean_batch_size)
 }
 
-fn main() {
+/// Start a server for one policy sweep point.
+#[cfg(feature = "pjrt")]
+fn start(policy: BatchPolicy, adaptive: bool) -> Option<Server> {
+    use cuconv::coordinator::ServerConfig;
+    use cuconv::runtime::Manifest;
+
     let dir = cuconv::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; skipping e2e_serving bench");
-        return;
+        return None;
     }
+    let manifest = Manifest::load(&dir).unwrap();
+    let config = ServerConfig {
+        policy,
+        validate_on_start: false,
+        adaptive_sizes: adaptive,
+        ..Default::default()
+    };
+    Some(Server::start(manifest, config).expect("server"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start(policy: BatchPolicy, _adaptive: bool) -> Option<Server> {
+    use cuconv::backend::CpuRefBackend;
+    use cuconv::conv::ConvSpec;
+
+    let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+    Some(
+        Server::start_conv(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4, 8], policy)
+            .expect("server"),
+    )
+}
+
+fn main() {
     let total = std::env::var("CUCONV_BENCH_REQUESTS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(128);
+
+    #[cfg(feature = "pjrt")]
+    println!("workload: AOT minisqueezenet model family (pjrt)");
+    #[cfg(not(feature = "pjrt"))]
+    println!("workload: conv 7-1-1-32-832 through the cpuref backend");
 
     println!("policy                          rps     mean ms  p99<= ms  mean batch");
     println!("-------------------------------------------------------------------");
@@ -78,14 +113,10 @@ fn main() {
             true,
         ),
     ] {
-        let manifest = Manifest::load(&dir).unwrap();
-        let config = ServerConfig {
-            policy,
-            validate_on_start: false,
-            adaptive_sizes: adaptive,
-            ..Default::default()
+        let Some(server) = start(policy, adaptive) else {
+            eprintln!("artifacts not built; skipping e2e_serving bench");
+            return;
         };
-        let server = Server::start(manifest, config).expect("server");
         // warmup
         drive(&server, 16, threads.min(4));
         let (rps, mean_ms, p99_ms, mean_batch) = drive(&server, total, threads);
@@ -97,17 +128,14 @@ fn main() {
     println!("\nopen-loop Poisson arrivals (dynamic batching b<=8/4ms):");
     println!("offered rps  achieved  completed  rejected  p50 ms   p99 ms");
     println!("------------------------------------------------------------");
-    let manifest = Manifest::load(&dir).unwrap();
-    let config = ServerConfig {
-        policy: BatchPolicy {
-            max_batch: 8,
-            max_delay: Duration::from_millis(4),
-            queue_capacity: 256,
-        },
-        validate_on_start: false,
-        ..Default::default()
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(4),
+        queue_capacity: 256,
     };
-    let server = Server::start(manifest, config).expect("server");
+    let Some(server) = start(policy, false) else {
+        return;
+    };
     drive(&server, 32, 4); // warmup
     for rate in [50.0f64, 150.0, 300.0, 600.0] {
         let report = run_open_loop(

@@ -7,9 +7,9 @@
 //! * JSON manifest parse
 //! * batch decomposition
 
+use cuconv::backend::{Backend, ConvDescriptor, CpuRefBackend, Workspace};
 use cuconv::conv::ConvSpec;
 use cuconv::coordinator::decompose_batches;
-use cuconv::cpuref::CpuImpl;
 use cuconv::tensor::Tensor;
 use cuconv::util::rng::Rng;
 use cuconv::util::stats::fmt_seconds;
@@ -18,22 +18,28 @@ use cuconv::util::timer::{bench_fn, black_box, BenchOpts};
 fn main() {
     let opts = BenchOpts { warmup_iters: 2, iters: 12 };
 
-    // --- CPU substrate implementations on Table-5 config A ---
+    // --- CPU backend, every supported algorithm, on Table-5 config A
+    //     (plan once outside the loop; execute is the timed hot path) ---
     let spec = ConvSpec::from_table_label("7-1-5-128-48").unwrap();
     let mut rng = Rng::new(1);
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
     let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
-    println!("cpu substrate on {} ({:.1} MFLOP):", spec.table_label(), spec.flops() as f64 / 1e6);
-    for imp in CpuImpl::ALL {
-        if !imp.supports(&spec) {
-            continue;
-        }
+    println!(
+        "cpuref backend on {} ({:.1} MFLOP):",
+        spec.table_label(),
+        spec.flops() as f64 / 1e6
+    );
+    let backend = CpuRefBackend::new();
+    let desc = ConvDescriptor::new(spec).unwrap();
+    let mut ws = Workspace::new();
+    for algo in backend.supported_algorithms(&spec) {
+        let plan = backend.plan(&desc, algo).unwrap();
         let s = bench_fn(opts, || {
-            black_box(imp.run(&spec, &input, &filters));
+            black_box(backend.execute(&plan, &input, &filters, &mut ws).unwrap());
         });
         println!(
-            "  {:10}  p50 {}  (min {}, p99 {})",
-            imp.name(),
+            "  {:22}  p50 {}  (min {}, p99 {})",
+            algo.name(),
             fmt_seconds(s.p50),
             fmt_seconds(s.min),
             fmt_seconds(s.p99)

@@ -1,30 +1,45 @@
 //! Shared driver for the Table 3/4/5 kernel-time benches.
 
+use cuconv::backend::Backend;
 use cuconv::report::tables;
-use cuconv::runtime::{default_artifact_dir, Engine};
+
+/// The measurement backend for the "ours measured" column: the PJRT
+/// artifact backend when compiled in and artifacts are present;
+/// otherwise the CPU reference backend when `CUCONV_MEASURE_CPU` is set
+/// (opt-in — the batched 3x3 configs are slow on CPU); otherwise none
+/// (paper-vs-model only).
+#[cfg(feature = "pjrt")]
+fn measure_backend() -> Option<Box<dyn Backend>> {
+    match cuconv::backend::pjrt_from_default_dir() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("pjrt backend unavailable ({e:#}); paper-vs-model only");
+            None
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn measure_backend() -> Option<Box<dyn Backend>> {
+    if std::env::var_os("CUCONV_MEASURE_CPU").is_some() {
+        Some(Box::new(cuconv::backend::CpuRefBackend::new()))
+    } else {
+        eprintln!(
+            "no pjrt feature; set CUCONV_MEASURE_CPU=1 to measure the cpuref backend"
+        );
+        None
+    }
+}
 
 /// Regenerate one kernel-time table: paper vs model, plus the measured
-/// column from real PJRT executions of our AOT kernels when artifacts
-/// are present.
+/// column from real executions through the backend API when available.
 pub fn run(table_no: u8) {
-    let dir = default_artifact_dir();
-    let mut engine = if dir.join("manifest.json").exists() {
-        match Engine::from_dir(&dir) {
-            Ok(e) => Some(e),
-            Err(e) => {
-                eprintln!("engine unavailable ({e:#}); model-only");
-                None
-            }
-        }
-    } else {
-        eprintln!("artifacts not built; printing paper-vs-model only");
-        None
-    };
+    let backend = measure_backend();
     let iters = std::env::var("CUCONV_BENCH_ITERS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(5);
-    let t = tables::table_kernels(table_no, engine.as_mut(), iters);
+    let t = tables::table_kernels(table_no, backend.as_deref(), iters);
     print!("{}", t.render());
     println!("\ntable{table_no} bench OK");
 }

@@ -6,25 +6,28 @@
 //! exhaustive `Find`. Both are reproduced here:
 //!
 //! * [`select_heuristic`] — a closed-form rule-of-thumb (no timing).
-//! * [`autotune`] — run/score every available algorithm and rank them,
-//!   either from the analytical V100 model or from real wall-clock of
-//!   the CPU substrate implementations.
+//! * [`autotune`] — rank every available algorithm, either from the
+//!   analytical V100 model (instant) or by actually timing a backend.
+//!
+//! Measured timing goes through the descriptor → plan → execute API
+//! ([`backend::algo_find`]), never by constructing substrate
+//! implementations directly — so the ranking reflects exactly the code
+//! path that will serve the plan.
 
 use crate::algo::Algorithm;
+use crate::backend::{self, ConvDescriptor, CpuRefBackend};
 use crate::conv::ConvSpec;
-use crate::cpuref::CpuImpl;
 use crate::gpumodel;
-use crate::tensor::Tensor;
-use crate::util::rng::Rng;
-use crate::util::timer;
 
 /// Where autotune timings come from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TimingSource {
     /// The calibrated V100 analytical model (instant).
     GpuModel,
-    /// Wall-clock of the Rust CPU implementations (measures this host).
+    /// Wall-clock of the CPU reference backend (measures this host).
     CpuMeasured,
+    /// Wall-clock of an arbitrary backend via [`backend::algo_find`].
+    BackendMeasured,
 }
 
 /// One ranked autotune entry.
@@ -51,9 +54,14 @@ impl AutotuneResult {
     }
 
     /// Speedup of cuConv over the best non-cuConv entry (>1 ⇒ cuConv
-    /// would be auto-selected, the paper's deployment story).
+    /// would be auto-selected, the paper's deployment story). `None`
+    /// when cuConv is absent, its score is zero/non-finite, or no
+    /// baseline has a finite score.
     pub fn cuconv_speedup(&self) -> Option<f64> {
         let cu = self.entries.iter().find(|e| e.algo == Algorithm::CuConv)?;
+        if !cu.score_us.is_finite() || cu.score_us <= 0.0 {
+            return None;
+        }
         let best_other = self
             .entries
             .iter()
@@ -71,6 +79,9 @@ impl AutotuneResult {
 /// Heuristic selection without timing (the `cudnnGet` analogue),
 /// following the paper's observed structure: Winograd for 3×3, cuConv
 /// for batch-1 small-input configs, implicit GEMM otherwise.
+///
+/// This is registry-level; a backend-aware pick (guaranteed supported)
+/// is [`backend::algo_get`].
 pub fn select_heuristic(spec: &ConvSpec) -> Algorithm {
     if Algorithm::Winograd.available(spec) && spec.n > 1 {
         return Algorithm::Winograd;
@@ -89,12 +100,13 @@ pub fn select_heuristic(spec: &ConvSpec) -> Algorithm {
 }
 
 /// Exhaustively score every available algorithm (the `cudnnFind`
-/// analogue). With [`TimingSource::CpuMeasured`] the CPU substrate
-/// implementations are actually run `iters` times on random data.
+/// analogue). Measured sources plan and execute through the CPU
+/// reference backend; to autotune against a different backend (e.g.
+/// PJRT), call [`backend::algo_find`] directly.
 pub fn autotune(spec: &ConvSpec, source: TimingSource, iters: usize) -> AutotuneResult {
-    let mut entries = Vec::new();
     match source {
         TimingSource::GpuModel => {
+            let mut entries = Vec::new();
             for algo in Algorithm::ALL {
                 if let Some(t) = gpumodel::predict(spec, algo) {
                     entries.push(AutotuneEntry {
@@ -104,44 +116,21 @@ pub fn autotune(spec: &ConvSpec, source: TimingSource, iters: usize) -> Autotune
                     });
                 }
             }
+            entries.sort_by(|a, b| a.score_us.partial_cmp(&b.score_us).unwrap());
+            AutotuneResult { spec: *spec, source, entries }
         }
-        TimingSource::CpuMeasured => {
-            let mut rng = Rng::new(0x7E57);
-            let input =
-                Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
-            let filters =
-                Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
-            for (algo, imp) in cpu_pairs() {
-                if !algo.available(spec) || !imp.supports(spec) {
-                    continue;
+        TimingSource::CpuMeasured | TimingSource::BackendMeasured => {
+            match ConvDescriptor::new(*spec) {
+                Ok(desc) => {
+                    let cpu = CpuRefBackend::new();
+                    let mut r = backend::algo_find(&cpu, &desc, iters);
+                    r.source = source;
+                    r
                 }
-                let opts = timer::BenchOpts { warmup_iters: 1, iters: iters.max(1) };
-                let summary =
-                    timer::bench_fn(opts, || {
-                        timer::black_box(imp.run(spec, &input, &filters));
-                    });
-                entries.push(AutotuneEntry {
-                    algo,
-                    score_us: summary.p50 * 1e6,
-                    workspace_bytes: algo.workspace_bytes(spec),
-                });
+                Err(_) => AutotuneResult { spec: *spec, source, entries: Vec::new() },
             }
         }
     }
-    entries.sort_by(|a, b| a.score_us.partial_cmp(&b.score_us).unwrap());
-    AutotuneResult { spec: *spec, source, entries }
-}
-
-/// Mapping from registry algorithms to the CPU substrate paths that
-/// implement the same family.
-fn cpu_pairs() -> Vec<(Algorithm, CpuImpl)> {
-    vec![
-        (Algorithm::CuConv, CpuImpl::CuConvTwoStage),
-        (Algorithm::Direct, CpuImpl::Blocked),
-        (Algorithm::GemmExplicit, CpuImpl::Im2colGemm),
-        (Algorithm::Winograd, CpuImpl::Winograd),
-        (Algorithm::Fft, CpuImpl::Fft),
-    ]
 }
 
 #[cfg(test)]
@@ -175,9 +164,10 @@ mod tests {
     }
 
     #[test]
-    fn measured_autotune_runs_real_cpu_impls() {
+    fn measured_autotune_runs_through_the_backend() {
         let spec = ConvSpec::paper(8, 1, 3, 4, 4);
         let r = autotune(&spec, TimingSource::CpuMeasured, 2);
+        assert_eq!(r.source, TimingSource::CpuMeasured);
         assert!(r.entries.len() >= 4);
         assert!(r.entries.iter().all(|e| e.score_us > 0.0));
     }
@@ -199,5 +189,42 @@ mod tests {
             select_heuristic(&ConvSpec::paper(28, 64, 1, 128, 256)),
             Algorithm::GemmImplicitPrecomp
         );
+    }
+
+    #[test]
+    fn cuconv_speedup_guards_degenerate_scores() {
+        let spec = ConvSpec::paper(7, 1, 1, 4, 4);
+        let entry = |algo, score_us| AutotuneEntry { algo, score_us, workspace_bytes: 0 };
+        // Zero cuConv score must not yield an infinite speedup.
+        let r = AutotuneResult {
+            spec,
+            source: TimingSource::BackendMeasured,
+            entries: vec![entry(Algorithm::CuConv, 0.0), entry(Algorithm::Direct, 5.0)],
+        };
+        assert_eq!(r.cuconv_speedup(), None);
+        // Non-finite likewise.
+        let r = AutotuneResult {
+            spec,
+            source: TimingSource::BackendMeasured,
+            entries: vec![
+                entry(Algorithm::CuConv, f64::NAN),
+                entry(Algorithm::Direct, 5.0),
+            ],
+        };
+        assert_eq!(r.cuconv_speedup(), None);
+        // No baseline: None, not a panic.
+        let r = AutotuneResult {
+            spec,
+            source: TimingSource::BackendMeasured,
+            entries: vec![entry(Algorithm::CuConv, 2.0)],
+        };
+        assert_eq!(r.cuconv_speedup(), None);
+        // Healthy case still works.
+        let r = AutotuneResult {
+            spec,
+            source: TimingSource::BackendMeasured,
+            entries: vec![entry(Algorithm::CuConv, 2.0), entry(Algorithm::Direct, 5.0)],
+        };
+        assert_eq!(r.cuconv_speedup(), Some(2.5));
     }
 }

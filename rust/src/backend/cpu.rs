@@ -1,0 +1,215 @@
+//! [`CpuRefBackend`]: the pure-Rust substrate behind the [`Backend`]
+//! trait — always available, no artifacts or accelerator required.
+//!
+//! Wraps all six [`CpuImpl`] paths. Registry algorithms map onto the
+//! substrate by family: the three GEMM variants share the im2col path
+//! and the two FFT variants share the FFT path (the GPU-side distinction
+//! is staging strategy, which the CPU substrate implements once), while
+//! workspace accounting always follows the registry's GPU model. The
+//! sixth path — the clear-loop oracle — is exposed via
+//! [`CpuRefBackend::reference_plan`] for verification harnesses.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::algo::Algorithm;
+use crate::backend::plan::PlanImpl;
+use crate::backend::{Backend, ConvDescriptor, ConvPlan, Support, Workspace};
+use crate::conv::ConvSpec;
+use crate::cpuref::CpuImpl;
+use crate::tensor::Tensor;
+
+/// The CPU reference backend.
+#[derive(Default)]
+pub struct CpuRefBackend {
+    /// Number of plans created — the CPU analogue of
+    /// `Engine::compile_count`, used by tests to prove plan reuse.
+    plans: AtomicUsize,
+}
+
+impl CpuRefBackend {
+    pub fn new() -> CpuRefBackend {
+        CpuRefBackend::default()
+    }
+
+    /// Plans created so far (each [`Backend::plan`] call increments it;
+    /// [`Backend::execute`] never does — plan reuse keeps this flat).
+    pub fn plan_count(&self) -> usize {
+        self.plans.load(Ordering::Relaxed)
+    }
+
+    /// The substrate path implementing `algo`'s family.
+    fn impl_for(algo: Algorithm) -> CpuImpl {
+        match algo {
+            Algorithm::CuConv => CpuImpl::CuConvTwoStage,
+            Algorithm::Direct => CpuImpl::Blocked,
+            Algorithm::GemmExplicit
+            | Algorithm::GemmImplicit
+            | Algorithm::GemmImplicitPrecomp => CpuImpl::Im2colGemm,
+            Algorithm::Winograd | Algorithm::WinogradNonfused => CpuImpl::Winograd,
+            Algorithm::Fft | Algorithm::FftTiled => CpuImpl::Fft,
+        }
+    }
+
+    /// A plan running the clear-loop oracle ([`CpuImpl::Naive`]) —
+    /// the ground truth every other backend/algorithm is tested against.
+    pub fn reference_plan(&self, desc: &ConvDescriptor) -> ConvPlan {
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        ConvPlan::new(
+            self.name(),
+            *desc.spec(),
+            Algorithm::Direct,
+            PlanImpl::CpuRef(CpuImpl::Naive),
+        )
+    }
+}
+
+impl Backend for CpuRefBackend {
+    fn name(&self) -> &'static str {
+        "cpuref"
+    }
+
+    fn capabilities(&self, spec: &ConvSpec, algo: Algorithm) -> Support {
+        if !spec.is_valid() {
+            return Support::Unsupported("invalid spec");
+        }
+        if !algo.supports(spec) {
+            return Support::Unsupported("algorithm parameter limitation");
+        }
+        if !algo.available(spec) {
+            return Support::Unsupported("workspace above the 1 GB cap");
+        }
+        // The registry may allow what the substrate path cannot run
+        // (e.g. winograd_nonfused on 5x5: our Winograd is 3x3-only).
+        if !Self::impl_for(algo).supports(spec) {
+            return Support::Unsupported("no CPU substrate path for this shape");
+        }
+        Support::Supported
+    }
+
+    fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan> {
+        let spec = desc.spec();
+        if let Support::Unsupported(reason) = self.capabilities(spec, algo) {
+            bail!("cpuref cannot plan {algo} for {spec}: {reason}");
+        }
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        Ok(ConvPlan::new(self.name(), *spec, algo, PlanImpl::CpuRef(Self::impl_for(algo))))
+    }
+
+    fn execute(
+        &self,
+        plan: &ConvPlan,
+        input: &Tensor,
+        filters: &Tensor,
+        workspace: &mut Workspace,
+    ) -> Result<Tensor> {
+        let PlanImpl::CpuRef(imp) = &plan.inner else {
+            bail!("plan from backend '{}' handed to cpuref", plan.backend_name());
+        };
+        plan.check_args(input, filters)?;
+        workspace.ensure_bytes(plan.workspace_bytes())?;
+        Ok(imp.run(&plan.spec, input, filters))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpuref::naive::conv_naive;
+    use crate::util::rng::Rng;
+
+    fn io(spec: &ConvSpec, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+        let filters =
+            Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        (input, filters)
+    }
+
+    #[test]
+    fn every_supported_algorithm_matches_oracle() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(9, 1, 3, 4, 3);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 0xC0DE);
+        let oracle = conv_naive(&spec, &input, &filters);
+        let mut ws = Workspace::new();
+        for algo in backend.supported_algorithms(&spec) {
+            let plan = backend.plan(&desc, algo).unwrap();
+            let got = backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+            assert!(
+                got.rel_l2_error(&oracle) < 2e-5,
+                "{algo} disagrees with oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_count_tracks_plans_not_executes() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(7, 1, 1, 4, 8);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let plan = backend.plan(&desc, Algorithm::CuConv).unwrap();
+        assert_eq!(backend.plan_count(), 1);
+        let (input, filters) = io(&spec, 1);
+        let mut ws = Workspace::new();
+        for _ in 0..5 {
+            backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+        }
+        assert_eq!(backend.plan_count(), 1, "execute must not re-plan");
+    }
+
+    #[test]
+    fn capabilities_mirror_substrate_limits() {
+        let backend = CpuRefBackend::new();
+        let s5 = ConvSpec::paper(14, 1, 5, 8, 8);
+        // Registry allows non-fused Winograd on 5x5; the CPU path is
+        // 3x3-only, so the backend must refuse.
+        assert!(Algorithm::WinogradNonfused.available(&s5));
+        assert!(!backend.capabilities(&s5, Algorithm::WinogradNonfused).is_supported());
+        assert!(backend.plan(&ConvDescriptor::new(s5).unwrap(), Algorithm::WinogradNonfused).is_err());
+        // Workspace cap: batch-256 VGG-scale FFT.
+        let big = ConvSpec::paper(224, 256, 3, 64, 64);
+        assert_eq!(
+            backend.capabilities(&big, Algorithm::Fft).reason(),
+            Some("workspace above the 1 GB cap")
+        );
+    }
+
+    #[test]
+    fn gemm_family_shares_one_path() {
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        for a in [
+            Algorithm::GemmExplicit,
+            Algorithm::GemmImplicit,
+            Algorithm::GemmImplicitPrecomp,
+        ] {
+            assert_eq!(CpuRefBackend::impl_for(a), CpuImpl::Im2colGemm);
+            assert!(CpuRefBackend::new().capabilities(&spec, a).is_supported());
+        }
+    }
+
+    #[test]
+    fn foreign_plan_is_rejected() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(7, 1, 1, 4, 8);
+        let plan = ConvPlan::new_opaque("mock", spec, Algorithm::CuConv, "k");
+        let (input, filters) = io(&spec, 2);
+        let mut ws = Workspace::new();
+        assert!(backend.execute(&plan, &input, &filters, &mut ws).is_err());
+    }
+
+    #[test]
+    fn reference_plan_runs_the_oracle_path() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(6, 2, 3, 3, 2);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 3);
+        let plan = backend.reference_plan(&desc);
+        let mut ws = Workspace::new();
+        let got = backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+        let want = conv_naive(&spec, &input, &filters);
+        assert_eq!(got.max_abs_diff(&want), 0.0, "reference plan must be the oracle");
+    }
+}

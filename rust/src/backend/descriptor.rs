@@ -1,0 +1,98 @@
+//! [`ConvDescriptor`]: a validated convolution problem description, the
+//! entry point of the descriptor → plan → execute lifecycle (the
+//! `cudnnConvolutionDescriptor` analogue).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
+use crate::conv::ConvSpec;
+
+/// A validated [`ConvSpec`] with the registry-level queries a caller
+/// needs before planning: which algorithms are available at all, and how
+/// much workspace each needs (the `cudnnGetConvolutionForwardWorkspaceSize`
+/// analogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvDescriptor {
+    spec: ConvSpec,
+}
+
+impl ConvDescriptor {
+    /// Build a descriptor, rejecting geometrically invalid specs (zero
+    /// dims, filter larger than the padded input).
+    pub fn new(spec: ConvSpec) -> Result<ConvDescriptor> {
+        if !spec.is_valid() {
+            bail!("invalid convolution spec {spec}");
+        }
+        Ok(ConvDescriptor { spec })
+    }
+
+    pub fn spec(&self) -> &ConvSpec {
+        &self.spec
+    }
+
+    /// Workspace bytes `algo` needs for this problem (registry model).
+    pub fn workspace_bytes(&self, algo: Algorithm) -> usize {
+        algo.workspace_bytes(&self.spec)
+    }
+
+    /// Whether `algo`'s workspace fits under the paper's 1 GB cap (§4).
+    pub fn fits_workspace_cap(&self, algo: Algorithm) -> bool {
+        self.workspace_bytes(algo) <= WORKSPACE_CAP_BYTES
+    }
+
+    /// Registry algorithms available for this problem irrespective of
+    /// backend (parameter support + workspace cap). A backend may
+    /// support fewer — query [`Backend::capabilities`](super::Backend::capabilities)
+    /// for the authoritative per-backend answer.
+    pub fn registry_algorithms(&self) -> Vec<Algorithm> {
+        Algorithm::ALL
+            .iter()
+            .copied()
+            .filter(|a| a.available(&self.spec))
+            .collect()
+    }
+}
+
+impl fmt::Display for ConvDescriptor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_invalid_spec() {
+        let mut bad = ConvSpec::paper(3, 1, 5, 4, 4);
+        bad.pad_h = 0;
+        bad.pad_w = 0;
+        assert!(ConvDescriptor::new(bad).is_err());
+        assert!(ConvDescriptor::new(ConvSpec::paper(7, 1, 1, 32, 832)).is_ok());
+    }
+
+    #[test]
+    fn workspace_queries_match_registry() {
+        let d = ConvDescriptor::new(ConvSpec::paper(13, 2, 3, 16, 8)).unwrap();
+        assert_eq!(
+            d.workspace_bytes(Algorithm::CuConv),
+            d.spec().cuconv_temp_bytes()
+        );
+        assert!(d.fits_workspace_cap(Algorithm::CuConv));
+        // VGG-scale batch-256 FFT blows the cap.
+        let big = ConvDescriptor::new(ConvSpec::paper(224, 256, 3, 64, 64)).unwrap();
+        assert!(!big.fits_workspace_cap(Algorithm::Fft));
+        assert!(!big.registry_algorithms().contains(&Algorithm::Fft));
+    }
+
+    #[test]
+    fn registry_algorithms_respect_parameter_limits() {
+        let d = ConvDescriptor::new(ConvSpec::paper(7, 1, 1, 32, 832)).unwrap();
+        let algos = d.registry_algorithms();
+        assert!(algos.contains(&Algorithm::CuConv));
+        assert!(!algos.contains(&Algorithm::Winograd), "winograd is 3x3-only");
+    }
+}

@@ -1,0 +1,161 @@
+//! The cuDNN-style algorithm choosers, resolved against a backend:
+//! [`algo_get`] (heuristic, no timing) and [`algo_find`] (exhaustive,
+//! timed on the backend that will actually serve the plan).
+
+use anyhow::{anyhow, Result};
+
+use crate::algo::{
+    select_heuristic, Algorithm, AutotuneEntry, AutotuneResult, TimingSource,
+};
+use crate::backend::{Backend, ConvDescriptor, Workspace};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::timer::{bench_fn, black_box, BenchOpts};
+
+/// Heuristic algorithm choice (the `cudnnGet` analogue): start from the
+/// registry's closed-form rule, then fall back to the backend's first
+/// supported algorithm. Always returns an algorithm the backend reports
+/// as [`Supported`](crate::backend::Support::Supported), or errors when
+/// the backend supports nothing for this problem.
+pub fn algo_get(backend: &dyn Backend, desc: &ConvDescriptor) -> Result<Algorithm> {
+    let spec = desc.spec();
+    let pick = select_heuristic(spec);
+    if backend.capabilities(spec, pick).is_supported() {
+        return Ok(pick);
+    }
+    backend.supported_algorithms(spec).into_iter().next().ok_or_else(|| {
+        anyhow!("backend '{}' supports no algorithm for {spec}", backend.name())
+    })
+}
+
+/// Exhaustive, timed algorithm search (the `cudnnFind` analogue): plan
+/// and execute every algorithm the backend supports on random data,
+/// `iters` measured runs each (plus one warmup), and rank by median
+/// wall-clock. Workspace is reused across candidates, as a serving
+/// system would. Algorithms whose plan or warmup execution fails are
+/// skipped rather than failing the whole search.
+pub fn algo_find(
+    backend: &dyn Backend,
+    desc: &ConvDescriptor,
+    iters: usize,
+) -> AutotuneResult {
+    let spec = *desc.spec();
+    let mut rng = Rng::new(0x7E57);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let mut workspace = Workspace::new();
+
+    let mut entries = Vec::new();
+    for algo in backend.supported_algorithms(&spec) {
+        let Ok(plan) = backend.plan(desc, algo) else { continue };
+        if backend.execute(&plan, &input, &filters, &mut workspace).is_err() {
+            continue;
+        }
+        let opts = BenchOpts { warmup_iters: 0, iters: iters.max(1) };
+        // Any failure during the timed runs disqualifies the candidate —
+        // a failing execute returns instantly and would otherwise win
+        // the ranking as a near-zero no-op.
+        let mut failed = false;
+        let summary = bench_fn(opts, || {
+            match backend.execute(&plan, &input, &filters, &mut workspace) {
+                Ok(out) => {
+                    black_box(out);
+                }
+                Err(_) => failed = true,
+            }
+        });
+        if failed {
+            continue;
+        }
+        entries.push(AutotuneEntry {
+            algo,
+            score_us: summary.p50 * 1e6,
+            workspace_bytes: plan.workspace_bytes(),
+        });
+    }
+    entries.sort_by(|a, b| a.score_us.partial_cmp(&b.score_us).unwrap());
+    AutotuneResult { spec, source: TimingSource::BackendMeasured, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{ConvPlan, CpuRefBackend, Support};
+    use crate::conv::ConvSpec;
+
+    #[test]
+    fn algo_get_is_always_supported() {
+        let backend = CpuRefBackend::new();
+        for spec in [
+            ConvSpec::paper(7, 1, 1, 32, 832),
+            ConvSpec::paper(14, 8, 3, 64, 64),
+            ConvSpec::paper(7, 2, 5, 6, 5),
+            ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 4, 2) },
+        ] {
+            let desc = ConvDescriptor::new(spec).unwrap();
+            let algo = algo_get(&backend, &desc).unwrap();
+            assert!(
+                backend.capabilities(&spec, algo).is_supported(),
+                "algo_get returned unsupported {algo} for {spec}"
+            );
+        }
+    }
+
+    #[test]
+    fn algo_find_ranks_supported_algorithms() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let r = algo_find(&backend, &desc, 2);
+        assert_eq!(r.source, TimingSource::BackendMeasured);
+        assert_eq!(r.entries.len(), backend.supported_algorithms(&spec).len());
+        assert!(r.entries.iter().all(|e| e.score_us > 0.0));
+        for w in r.entries.windows(2) {
+            assert!(w[0].score_us <= w[1].score_us, "not sorted");
+        }
+    }
+
+    /// A backend that claims support but cannot actually execute: find
+    /// must skip it gracefully, and `algo_get` falls back past it.
+    struct BrokenBackend;
+
+    impl Backend for BrokenBackend {
+        fn name(&self) -> &'static str {
+            "broken"
+        }
+        fn capabilities(&self, _: &ConvSpec, algo: Algorithm) -> Support {
+            if algo == Algorithm::Direct {
+                Support::Supported
+            } else {
+                Support::Unsupported("only direct")
+            }
+        }
+        fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan> {
+            Ok(ConvPlan::new_opaque(self.name(), *desc.spec(), algo, "slot"))
+        }
+        fn execute(
+            &self,
+            _: &ConvPlan,
+            _: &Tensor,
+            _: &Tensor,
+            _: &mut Workspace,
+        ) -> Result<Tensor> {
+            anyhow::bail!("broken on purpose")
+        }
+    }
+
+    #[test]
+    fn algo_get_falls_back_to_backend_support() {
+        // The heuristic would say cuConv for this spec; the backend only
+        // does Direct, so algo_get must return Direct.
+        let desc = ConvDescriptor::new(ConvSpec::paper(7, 1, 1, 32, 832)).unwrap();
+        assert_eq!(algo_get(&BrokenBackend, &desc).unwrap(), Algorithm::Direct);
+    }
+
+    #[test]
+    fn algo_find_skips_failing_candidates() {
+        let desc = ConvDescriptor::new(ConvSpec::paper(7, 1, 1, 4, 4)).unwrap();
+        let r = algo_find(&BrokenBackend, &desc, 1);
+        assert!(r.entries.is_empty(), "failing executes must be skipped");
+    }
+}

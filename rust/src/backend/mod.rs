@@ -1,0 +1,159 @@
+//! The single front door for running a convolution — a cuDNN-style
+//! descriptor → plan → execute lifecycle with pluggable backends.
+//!
+//! §2.1 of the paper describes cuDNN's deployment interface: a heuristic
+//! `Get` and an exhaustive `Find` choose an algorithm per layer, the
+//! workspace requirement is queried up front, and the execute call then
+//! runs with a caller-provided workspace. This module reproduces that
+//! interface over every execution substrate in the repository:
+//!
+//! 1. Build a [`ConvDescriptor`] from a [`ConvSpec`](crate::conv::ConvSpec)
+//!    (validation + workspace accounting).
+//! 2. Pick an [`Algorithm`](crate::algo::Algorithm) with [`algo_get`]
+//!    (heuristic, no timing — `cudnnGetConvolutionForwardAlgorithm`) or
+//!    [`algo_find`] (exhaustive, timed against the actual backend —
+//!    `cudnnFindConvolutionForwardAlgorithm`).
+//! 3. [`Backend::plan`] once — per-backend preparation (path selection,
+//!    artifact lookup, PJRT compilation) happens here, not per request.
+//! 4. [`Backend::execute`] many times, reusing the [`ConvPlan`] and a
+//!    caller-owned [`Workspace`] across requests. The workspace enforces
+//!    the paper's 1 GB cap (§4).
+//!
+//! Two backends ship in-tree: [`CpuRefBackend`] (the pure-Rust substrate,
+//! always available) and [`PjrtBackend`] (AOT Pallas artifacts through
+//! PJRT, behind the `pjrt` feature). Third-party backends implement
+//! [`Backend`] and carry their state in an opaque plan
+//! ([`ConvPlan::new_opaque`]).
+//!
+//! No call site outside this module runs a convolution by constructing
+//! [`CpuImpl`](crate::cpuref::CpuImpl) or
+//! `Engine` directly — the autotuner, the serving
+//! coordinator, the CLI and the bench harnesses all go through `dyn
+//! Backend`.
+
+mod cpu;
+mod descriptor;
+mod find;
+mod plan;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use cpu::CpuRefBackend;
+pub use descriptor::ConvDescriptor;
+pub use find::{algo_find, algo_get};
+pub use plan::{ConvPlan, Workspace};
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+
+/// Load the PJRT backend from the default artifact directory
+/// (`$CUCONV_ARTIFACTS` or `./artifacts`), boxed for `dyn Backend`
+/// call sites — the one place the CLI/bench/example artifact lookup
+/// lives.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_from_default_dir() -> Result<Box<dyn Backend>> {
+    use anyhow::Context as _;
+    let dir = crate::runtime::default_artifact_dir();
+    let backend = PjrtBackend::from_dir(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts`)", dir.display())
+    })?;
+    Ok(Box::new(backend))
+}
+
+use crate::algo::Algorithm;
+use crate::conv::ConvSpec;
+use crate::tensor::Tensor;
+
+/// A backend's answer to "can you run `algo` on `spec`?".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Support {
+    Supported,
+    /// Not runnable, with the reason (parameter limitation, workspace
+    /// cap, missing substrate path or missing artifact).
+    Unsupported(&'static str),
+}
+
+impl Support {
+    pub fn is_supported(&self) -> bool {
+        matches!(self, Support::Supported)
+    }
+
+    /// The rejection reason, if any.
+    pub fn reason(&self) -> Option<&'static str> {
+        match self {
+            Support::Supported => None,
+            Support::Unsupported(r) => Some(r),
+        }
+    }
+}
+
+/// An execution substrate for convolutions.
+///
+/// Implementations are `Send` so a boxed backend can be handed to the
+/// serving coordinator's router thread.
+pub trait Backend: Send {
+    /// Stable backend name (also stamped into the plans it creates).
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can run `algo` on `spec`. Must be consistent
+    /// with [`Backend::plan`]: a supported pair must plan successfully.
+    fn capabilities(&self, spec: &ConvSpec, algo: Algorithm) -> Support;
+
+    /// One-time preparation for (descriptor, algorithm): path selection,
+    /// artifact lookup, compilation. The returned plan is reused across
+    /// many [`Backend::execute`] calls without repeating that work.
+    fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan>;
+
+    /// Run one convolution with a previously created plan. `workspace`
+    /// is caller-owned and reused across requests; the backend sizes it
+    /// to the plan's requirement (enforcing the 1 GB cap).
+    fn execute(
+        &self,
+        plan: &ConvPlan,
+        input: &Tensor,
+        filters: &Tensor,
+        workspace: &mut Workspace,
+    ) -> Result<Tensor>;
+
+    /// Registry algorithms this backend supports for `spec`, in the
+    /// registry's canonical order (cuConv first).
+    fn supported_algorithms(&self, spec: &ConvSpec) -> Vec<Algorithm> {
+        Algorithm::ALL
+            .iter()
+            .copied()
+            .filter(|&a| self.capabilities(spec, a).is_supported())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_reasons() {
+        assert!(Support::Supported.is_supported());
+        assert_eq!(Support::Supported.reason(), None);
+        let u = Support::Unsupported("nope");
+        assert!(!u.is_supported());
+        assert_eq!(u.reason(), Some("nope"));
+    }
+
+    #[test]
+    fn supported_algorithms_keeps_registry_order() {
+        let b = CpuRefBackend::new();
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        let algos = b.supported_algorithms(&spec);
+        assert_eq!(algos.first(), Some(&Algorithm::CuConv));
+        // Order follows Algorithm::ALL.
+        let mut last = 0usize;
+        for a in &algos {
+            let idx = Algorithm::ALL.iter().position(|x| x == a).unwrap();
+            assert!(idx >= last);
+            last = idx;
+        }
+    }
+}

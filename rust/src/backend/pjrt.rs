@@ -1,0 +1,125 @@
+//! [`PjrtBackend`]: AOT Pallas artifacts executed through PJRT, behind
+//! the [`Backend`] trait (`pjrt` feature).
+//!
+//! Capability = "an artifact for exactly this (spec, algorithm) exists
+//! in the manifest". Planning warms the executable (PJRT compilation
+//! happens once, on the executor thread); executing a reused plan hits
+//! the engine's executable cache, so `compile_count` stays flat across
+//! requests — the property the integration tests pin.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::Algorithm;
+use crate::backend::plan::PlanImpl;
+use crate::backend::{Backend, ConvDescriptor, ConvPlan, Support, Workspace};
+use crate::conv::ConvSpec;
+use crate::runtime::executor::ExecutorThread;
+use crate::runtime::{spawn_executor, ConvArtifact, ExecutorHandle, Manifest};
+use crate::tensor::Tensor;
+
+/// The PJRT artifact backend. Owns the executor thread that owns the
+/// `!Send` engine; the backend itself is `Send` and cheap to share.
+pub struct PjrtBackend {
+    manifest: Manifest,
+    exec: ExecutorHandle,
+    _guard: ExecutorThread,
+}
+
+impl PjrtBackend {
+    /// Spin up a PJRT executor over an artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<PjrtBackend> {
+        let (guard, exec) = spawn_executor(manifest.clone())?;
+        Ok(PjrtBackend { manifest, exec, _guard: guard })
+    }
+
+    /// Load `<dir>/manifest.json` and build the backend.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        PjrtBackend::new(Manifest::load(dir)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Handle to the executor thread, for model-serving call sites that
+    /// share this backend's PJRT client.
+    pub fn executor(&self) -> &ExecutorHandle {
+        &self.exec
+    }
+
+    /// Compilations performed by the engine so far (cache misses).
+    pub fn compile_count(&self) -> Result<usize> {
+        self.exec.compile_count()
+    }
+
+    /// Validate every model artifact against its AOT sample I/O pair;
+    /// returns `(name, max_abs_err)` per model.
+    pub fn validate_models(&self) -> Result<Vec<(String, f32)>> {
+        let mut out = Vec::new();
+        for m in &self.manifest.models {
+            let err = self
+                .exec
+                .validate_model(&m.name)
+                .with_context(|| format!("validating {}", m.name))?;
+            out.push((m.name.clone(), err));
+        }
+        Ok(out)
+    }
+
+    fn artifact_for(&self, spec: &ConvSpec, algo: Algorithm) -> Option<&ConvArtifact> {
+        self.manifest
+            .convs
+            .iter()
+            .find(|c| c.spec == *spec && c.algo == algo.name())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self, spec: &ConvSpec, algo: Algorithm) -> Support {
+        if !spec.is_valid() {
+            return Support::Unsupported("invalid spec");
+        }
+        if !algo.available(spec) {
+            return Support::Unsupported("unavailable in the algorithm registry");
+        }
+        if self.artifact_for(spec, algo).is_none() {
+            return Support::Unsupported("no AOT artifact for this (spec, algorithm)");
+        }
+        Support::Supported
+    }
+
+    fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan> {
+        let spec = desc.spec();
+        let Some(artifact) = self.artifact_for(spec, algo) else {
+            bail!("pjrt cannot plan {algo} for {spec}: no AOT artifact");
+        };
+        let name = artifact.name.clone();
+        // Compile now so executes only ever hit the cache.
+        self.exec
+            .warmup(std::slice::from_ref(&name))
+            .with_context(|| format!("compiling artifact {name}"))?;
+        Ok(ConvPlan::new(self.name(), *spec, algo, PlanImpl::Pjrt { artifact: name }))
+    }
+
+    fn execute(
+        &self,
+        plan: &ConvPlan,
+        input: &Tensor,
+        filters: &Tensor,
+        workspace: &mut Workspace,
+    ) -> Result<Tensor> {
+        let PlanImpl::Pjrt { artifact } = &plan.inner else {
+            bail!("plan from backend '{}' handed to pjrt", plan.backend_name());
+        };
+        plan.check_args(input, filters)?;
+        workspace.ensure_bytes(plan.workspace_bytes())?;
+        let (out, _timing) = self.exec.run_conv(artifact, input.clone(), filters.clone())?;
+        Ok(out)
+    }
+}

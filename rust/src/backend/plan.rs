@@ -1,0 +1,201 @@
+//! [`ConvPlan`] (the reusable execution plan a backend produces) and
+//! [`Workspace`] (the caller-owned scratch buffer, reused across
+//! requests and capped at the paper's 1 GB).
+
+use anyhow::{bail, Result};
+
+use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
+use crate::conv::{ConvSpec, F32_BYTES};
+use crate::cpuref::CpuImpl;
+
+/// Backend-specific payload of a plan. In-tree backends get first-class
+/// variants; external backends carry a lookup key in [`PlanImpl::Opaque`].
+#[derive(Debug, Clone)]
+pub(crate) enum PlanImpl {
+    /// A CPU substrate path chosen by [`CpuRefBackend`](super::CpuRefBackend).
+    CpuRef(CpuImpl),
+    /// A compiled PJRT artifact, by manifest name.
+    #[cfg(feature = "pjrt")]
+    Pjrt { artifact: String },
+    /// A key meaningful only to the third-party backend that created it.
+    Opaque { key: String },
+}
+
+/// The product of [`Backend::plan`](super::Backend::plan): everything a
+/// backend needs to run one convolution many times. Plan once, execute
+/// many — per-request work must not repeat planning (path selection,
+/// artifact lookup, compilation).
+#[derive(Debug, Clone)]
+pub struct ConvPlan {
+    pub(crate) backend: &'static str,
+    pub(crate) spec: ConvSpec,
+    pub(crate) algo: Algorithm,
+    pub(crate) workspace_bytes: usize,
+    pub(crate) inner: PlanImpl,
+}
+
+impl ConvPlan {
+    pub(crate) fn new(
+        backend: &'static str,
+        spec: ConvSpec,
+        algo: Algorithm,
+        inner: PlanImpl,
+    ) -> ConvPlan {
+        ConvPlan { backend, spec, algo, workspace_bytes: algo.workspace_bytes(&spec), inner }
+    }
+
+    /// Build a plan for a backend implemented outside this crate; `key`
+    /// is handed back verbatim via [`ConvPlan::opaque_key`] at execute
+    /// time.
+    pub fn new_opaque(
+        backend: &'static str,
+        spec: ConvSpec,
+        algo: Algorithm,
+        key: impl Into<String>,
+    ) -> ConvPlan {
+        ConvPlan::new(backend, spec, algo, PlanImpl::Opaque { key: key.into() })
+    }
+
+    /// Name of the backend that created this plan.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
+    }
+
+    pub fn spec(&self) -> &ConvSpec {
+        &self.spec
+    }
+
+    pub fn algo(&self) -> Algorithm {
+        self.algo
+    }
+
+    /// Workspace bytes [`Backend::execute`](super::Backend::execute)
+    /// will request from the caller's [`Workspace`].
+    pub fn workspace_bytes(&self) -> usize {
+        self.workspace_bytes
+    }
+
+    /// The opaque key, when this plan was built with
+    /// [`ConvPlan::new_opaque`].
+    pub fn opaque_key(&self) -> Option<&str> {
+        match &self.inner {
+            PlanImpl::Opaque { key } => Some(key),
+            _ => None,
+        }
+    }
+
+    /// Check that `input`/`filters` match this plan's geometry.
+    pub(crate) fn check_args(
+        &self,
+        input: &crate::tensor::Tensor,
+        filters: &crate::tensor::Tensor,
+    ) -> Result<()> {
+        if input.shape() != self.spec.input_shape() {
+            bail!(
+                "input shape {:?} does not match plan {:?} ({})",
+                input.shape(),
+                self.spec.input_shape(),
+                self.spec
+            );
+        }
+        if filters.shape() != self.spec.filter_shape() {
+            bail!(
+                "filter shape {:?} does not match plan {:?} ({})",
+                filters.shape(),
+                self.spec.filter_shape(),
+                self.spec
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Caller-owned convolution workspace, reused across executes (the
+/// `cudnnConvolutionForward` workspace argument).
+///
+/// Grows on demand, never shrinks, and refuses any single request above
+/// the paper's 1 GB cap (§4) — planning against a capped algorithm fails
+/// before execution ever allocates. The CPU substrate implementations
+/// currently stage their temporaries internally; the workspace still
+/// models cuDNN's accounting (cap enforcement + high-water telemetry) so
+/// call sites are written against the production contract.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    buf: Vec<f32>,
+    high_water_bytes: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Reserve (growing if needed) and return a scratch slice of at
+    /// least `bytes`. Errors above the 1 GB cap.
+    pub fn ensure_bytes(&mut self, bytes: usize) -> Result<&mut [f32]> {
+        if bytes > WORKSPACE_CAP_BYTES {
+            bail!(
+                "workspace request {bytes} B exceeds the {} B cap",
+                WORKSPACE_CAP_BYTES
+            );
+        }
+        let elems = bytes.div_ceil(F32_BYTES);
+        if self.buf.len() < elems {
+            self.buf.resize(elems, 0.0);
+        }
+        self.high_water_bytes = self.high_water_bytes.max(bytes);
+        Ok(&mut self.buf[..elems])
+    }
+
+    /// Currently allocated capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.buf.len() * F32_BYTES
+    }
+
+    /// Largest single request served so far (bytes).
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_grows_and_reuses() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.capacity_bytes(), 0);
+        let s = ws.ensure_bytes(10).unwrap();
+        assert_eq!(s.len(), 3); // ceil(10/4) f32s
+        let cap = ws.capacity_bytes();
+        assert!(cap >= 10);
+        // A smaller request must not shrink the buffer.
+        ws.ensure_bytes(4).unwrap();
+        assert_eq!(ws.capacity_bytes(), cap);
+        assert_eq!(ws.high_water_bytes(), 10);
+        // A bigger one grows it.
+        ws.ensure_bytes(100).unwrap();
+        assert!(ws.capacity_bytes() >= 100);
+        assert_eq!(ws.high_water_bytes(), 100);
+    }
+
+    #[test]
+    fn workspace_enforces_cap() {
+        let mut ws = Workspace::new();
+        assert!(ws.ensure_bytes(WORKSPACE_CAP_BYTES + 1).is_err());
+        // The failed request must not poison the buffer.
+        assert!(ws.ensure_bytes(8).is_ok());
+    }
+
+    #[test]
+    fn opaque_plan_roundtrip() {
+        let spec = ConvSpec::paper(7, 1, 1, 32, 832);
+        let p = ConvPlan::new_opaque("mock", spec, Algorithm::CuConv, "slot-3");
+        assert_eq!(p.backend_name(), "mock");
+        assert_eq!(p.algo(), Algorithm::CuConv);
+        assert_eq!(p.opaque_key(), Some("slot-3"));
+        assert_eq!(p.workspace_bytes(), Algorithm::CuConv.workspace_bytes(&spec));
+        assert_eq!(*p.spec(), spec);
+    }
+}

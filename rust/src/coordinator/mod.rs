@@ -12,8 +12,12 @@
 //!   (`minisqueezenet_b{1,2,4,8}`).
 //! * [`metrics`] — latency histograms (queue / execute / total),
 //!   batch-size distribution, throughput counters.
+//! * [`runner`] — the execution seam: the router runs batches on a
+//!   [`BatchRunner`] — the AOT model executables through PJRT, or a
+//!   convolution layer through any
+//!   [`Backend`](crate::backend::Backend) (the artifact-free fallback).
 //! * [`server`] — the router thread tying it together: drain queue →
-//!   form batches → submit to the PJRT executor → scatter replies.
+//!   form batches → run on the configured runner → scatter replies.
 //!
 //! The per-layer algorithm choice (the paper's §4.1 deployment story:
 //! "frameworks automatically select the best-performing convolution
@@ -25,11 +29,16 @@ pub mod loadgen;
 pub mod metrics;
 pub mod plan;
 pub mod request;
+pub mod runner;
 pub mod server;
 
 pub use batcher::{decompose_batches, BatchPolicy};
 pub use loadgen::{run_open_loop, LoadReport, LoadSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use plan::{plan_network, LayerPlan, NetworkPlan};
+pub use plan::{plan_network, plan_network_measured, LayerPlan, NetworkPlan};
 pub use request::{InferRequest, InferResponse, RequestId};
+pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner};
 pub use server::{Server, ServerConfig, ServerHandle};
+
+#[cfg(feature = "pjrt")]
+pub use runner::{PjrtModelRunner, ADAPTIVE_SLACK};

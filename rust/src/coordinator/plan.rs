@@ -9,6 +9,7 @@
 //! attributed layer by layer.
 
 use crate::algo::{autotune, Algorithm, AutotuneResult, TimingSource};
+use crate::backend::{algo_find, Backend, ConvDescriptor};
 use crate::conv::ConvSpec;
 use crate::zoo::{network_configs, Network};
 
@@ -69,11 +70,48 @@ impl NetworkPlan {
 
 /// Autotune every distinct conv layer of `network` at `batch`.
 pub fn plan_network(network: Network, batch: usize, source: TimingSource) -> NetworkPlan {
+    let plan = plan_layers(network, batch, |spec| autotune(spec, source, 3));
+    // The registry guarantees at least one algorithm per zoo layer; a
+    // silently shortened plan would misreport the network speedup.
+    assert_eq!(
+        plan.layers.len(),
+        network_configs(network).len(),
+        "autotune produced no entries for some layer of {network:?} at batch {batch}"
+    );
+    plan
+}
+
+/// Autotune every layer by actually timing `backend` through the
+/// descriptor → plan → execute API ([`algo_find`]) — the per-layer
+/// `cudnnFind` deployment story resolved against the substrate that
+/// will serve the plan. Layers the backend cannot run at all are
+/// skipped (none exist for the in-tree backends on the zoo).
+pub fn plan_network_measured(
+    backend: &dyn Backend,
+    network: Network,
+    batch: usize,
+    iters: usize,
+) -> NetworkPlan {
+    plan_layers(network, batch, |spec| match ConvDescriptor::new(*spec) {
+        Ok(desc) => algo_find(backend, &desc, iters),
+        Err(_) => AutotuneResult {
+            spec: *spec,
+            source: TimingSource::BackendMeasured,
+            entries: Vec::new(),
+        },
+    })
+}
+
+fn plan_layers(
+    network: Network,
+    batch: usize,
+    mut tune: impl FnMut(&ConvSpec) -> AutotuneResult,
+) -> NetworkPlan {
     let mut layers = Vec::new();
     for entry in network_configs(network) {
         let spec = entry.spec.with_batch(batch);
-        let result: AutotuneResult = autotune(&spec, source, 3);
-        let best = result.best().expect("at least one algorithm available");
+        let result = tune(&spec);
+        let Some(best) = result.best() else { continue };
         let baseline_us = result
             .entries
             .iter()

@@ -1,0 +1,362 @@
+//! Batch execution behind the server: the [`BatchRunner`] seam that
+//! makes the coordinator's artifact-vs-fallback split a backend choice.
+//!
+//! The router thread (see [`server`](crate::coordinator::server)) is
+//! generic over *what* a batch runs on:
+//!
+//! * [`ConvBackendRunner`] — serves one convolution layer through any
+//!   [`Backend`] (descriptor → plan once per batch size at startup →
+//!   execute per request, with workspace reuse). Works offline on
+//!   [`CpuRefBackend`](crate::backend::CpuRefBackend); plug in
+//!   `PjrtBackend` for the AOT kernels.
+//! * `PjrtModelRunner` (`pjrt` feature) — serves the end-to-end AOT
+//!   model executables (e.g. `minisqueezenet_b{1,2,4,8}`) through the
+//!   PJRT executor thread, with startup validation and adaptive
+//!   batch-size pruning.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{algo_get, Backend, ConvDescriptor, ConvPlan, Workspace};
+use crate::conv::ConvSpec;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Result of running one batch.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Flattened per-item outputs, `batch × item_out_elems` values.
+    pub data: Vec<f32>,
+    /// Execution seconds (shared by the whole batch).
+    pub exec_seconds: f64,
+}
+
+/// What the router thread executes batches on. Implementations own all
+/// per-size plans/executables; `run` must not repeat startup work.
+pub trait BatchRunner: Send {
+    /// Supported batch sizes (must include 1).
+    fn batch_sizes(&self) -> Vec<usize>;
+    /// Per-item input elements.
+    fn item_in_elems(&self) -> usize;
+    /// Per-item output elements.
+    fn item_out_elems(&self) -> usize;
+    /// Run one batch; `input` holds `batch × item_in_elems` values
+    /// (taken by value — the router's gathered buffer moves straight
+    /// into the executor with no extra copy).
+    fn run(&mut self, batch: usize, input: Vec<f32>) -> Result<BatchOutput>;
+}
+
+/// Serve one convolution layer through a pluggable [`Backend`].
+///
+/// The layer's filters are fixed at construction (seeded), **one**
+/// algorithm is chosen for all batch sizes (so identical pixels produce
+/// identical outputs regardless of how the batcher groups requests),
+/// one plan per executable batch size is created up front, and a single
+/// [`Workspace`] is reused across every request — the descriptor →
+/// plan → execute lifecycle in its serving configuration.
+pub struct ConvBackendRunner {
+    backend: Box<dyn Backend>,
+    spec: ConvSpec,
+    filters: Tensor,
+    plans: HashMap<usize, ConvPlan>,
+    workspace: Workspace,
+    sizes: Vec<usize>,
+}
+
+impl ConvBackendRunner {
+    /// `spec` is the batch-1 layer; plans are created for each size in
+    /// `batch_sizes` (deduplicated; must include 1). `algo: None` picks
+    /// one algorithm via [`algo_get`] at batch 1, falling back to the
+    /// first algorithm the backend supports at *every* planned size.
+    pub fn new(
+        backend: Box<dyn Backend>,
+        spec: ConvSpec,
+        algo: Option<crate::algo::Algorithm>,
+        batch_sizes: &[usize],
+    ) -> Result<ConvBackendRunner> {
+        let spec = spec.with_batch(1);
+        let mut sizes: Vec<usize> = batch_sizes.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if !sizes.contains(&1) {
+            bail!("batch sizes must include 1 (got {sizes:?})");
+        }
+        let chosen = match algo {
+            Some(a) => a,
+            None => {
+                let base = ConvDescriptor::new(spec)?;
+                let mut candidates = vec![algo_get(backend.as_ref(), &base)?];
+                candidates.extend(backend.supported_algorithms(&spec));
+                candidates
+                    .into_iter()
+                    .find(|&a| {
+                        sizes.iter().all(|&b| {
+                            backend
+                                .capabilities(&spec.with_batch(b), a)
+                                .is_supported()
+                        })
+                    })
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "backend '{}' supports no single algorithm across batch \
+                             sizes {sizes:?} for {spec}",
+                            backend.name()
+                        )
+                    })?
+            }
+        };
+        let mut rng = Rng::new(0xF117E25);
+        let filters =
+            Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let mut plans = HashMap::new();
+        for &b in &sizes {
+            let desc = ConvDescriptor::new(spec.with_batch(b))?;
+            plans.insert(b, backend.plan(&desc, chosen)?);
+        }
+        Ok(ConvBackendRunner {
+            backend,
+            spec,
+            filters,
+            plans,
+            workspace: Workspace::new(),
+            sizes,
+        })
+    }
+
+    /// The algorithm planned for each batch size.
+    pub fn chosen_algorithms(&self) -> Vec<(usize, crate::algo::Algorithm)> {
+        let mut v: Vec<_> = self.plans.iter().map(|(&b, p)| (b, p.algo())).collect();
+        v.sort_unstable_by_key(|&(b, _)| b);
+        v
+    }
+
+    pub fn spec(&self) -> &ConvSpec {
+        &self.spec
+    }
+}
+
+impl BatchRunner for ConvBackendRunner {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn item_in_elems(&self) -> usize {
+        self.spec.input_elems()
+    }
+
+    fn item_out_elems(&self) -> usize {
+        self.spec.output_elems()
+    }
+
+    fn run(&mut self, batch: usize, input: Vec<f32>) -> Result<BatchOutput> {
+        let plan = self
+            .plans
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no plan for batch size {batch}"))?;
+        let spec = self.spec.with_batch(batch);
+        if input.len() != spec.input_elems() {
+            bail!("batch input has {} elems, expected {}", input.len(), spec.input_elems());
+        }
+        let x = Tensor::from_vec(batch, spec.c, spec.h, spec.w, input);
+        let started = Instant::now();
+        let out = self.backend.execute(plan, &x, &self.filters, &mut self.workspace)?;
+        Ok(BatchOutput {
+            data: out.into_vec(),
+            exec_seconds: started.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_model::{PjrtModelRunner, ADAPTIVE_SLACK};
+
+#[cfg(feature = "pjrt")]
+mod pjrt_model {
+    use super::*;
+    use crate::coordinator::server::ServerConfig;
+    use crate::runtime::executor::ExecutorThread;
+    use crate::runtime::{spawn_executor, ExecutorHandle, Manifest};
+
+    /// Per-image cost slack for adaptive size pruning (1.0 = best only).
+    pub const ADAPTIVE_SLACK: f64 = 1.25;
+
+    /// Serve an AOT model family (batched executables) through PJRT.
+    pub struct PjrtModelRunner {
+        exec: ExecutorHandle,
+        _guard: ExecutorThread,
+        /// (batch, executable name), ascending by batch.
+        variants: Vec<(usize, String)>,
+        item_in: usize,
+        item_out: usize,
+    }
+
+    impl PjrtModelRunner {
+        /// Compile + (optionally) validate the model family named by
+        /// `config.model`, pruning inefficient batch sizes when
+        /// `config.adaptive_sizes` is set.
+        pub fn new(manifest: Manifest, config: &ServerConfig) -> Result<PjrtModelRunner> {
+            let family = manifest.model_family(&config.model);
+            if family.is_empty() {
+                bail!("no '{}' model artifacts in manifest", config.model);
+            }
+            let batch_sizes: Vec<usize> = family.iter().map(|m| m.batch).collect();
+            if !batch_sizes.contains(&1) {
+                bail!("model family must include a batch-1 executable");
+            }
+            let mut variants: Vec<(usize, String)> =
+                family.iter().map(|m| (m.batch, m.name.clone())).collect();
+            let item_in: usize = family[0].input_shape.iter().skip(1).product();
+            let item_out: usize = family[0].output_shape.iter().skip(1).product();
+            let names: Vec<String> = variants.iter().map(|(_, n)| n.clone()).collect();
+
+            let (guard, exec) = spawn_executor(manifest)?;
+            exec.warmup(&names)?;
+            if config.validate_on_start {
+                for name in &names {
+                    let err = exec.validate_model(name)?;
+                    if err > 5e-4 {
+                        bail!("artifact {name} fails sample-I/O validation (err {err})");
+                    }
+                }
+            }
+            if config.adaptive_sizes && variants.len() > 1 {
+                variants = prune_inefficient_sizes(&exec, variants, item_in)?;
+            }
+            Ok(PjrtModelRunner { exec, _guard: guard, variants, item_in, item_out })
+        }
+    }
+
+    impl BatchRunner for PjrtModelRunner {
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.variants.iter().map(|(b, _)| *b).collect()
+        }
+
+        fn item_in_elems(&self) -> usize {
+            self.item_in
+        }
+
+        fn item_out_elems(&self) -> usize {
+            self.item_out
+        }
+
+        fn run(&mut self, batch: usize, input: Vec<f32>) -> Result<BatchOutput> {
+            let name = &self
+                .variants
+                .iter()
+                .find(|(b, _)| *b == batch)
+                .ok_or_else(|| anyhow!("no executable for batch size {batch}"))?
+                .1;
+            let (data, timing) = self.exec.run_model(name, input)?;
+            Ok(BatchOutput { data, exec_seconds: timing.exec_seconds })
+        }
+    }
+
+    /// Time each executable variant and keep only the sizes whose
+    /// per-image cost is within [`ADAPTIVE_SLACK`] of the best (batch 1
+    /// always kept). See EXPERIMENTS.md §Perf: on this CPU-PJRT testbed
+    /// interpret-mode execution grows superlinearly with batch, and
+    /// pruning the inefficient sizes recovers batch-1-grade throughput.
+    fn prune_inefficient_sizes(
+        exec: &ExecutorHandle,
+        variants: Vec<(usize, String)>,
+        item_in: usize,
+    ) -> Result<Vec<(usize, String)>> {
+        let mut costs = Vec::with_capacity(variants.len());
+        for (batch, name) in &variants {
+            let input = vec![0.0f32; batch * item_in];
+            // Warm + two timed runs; take the min (steady-state estimate).
+            exec.run_model(name, input.clone())?;
+            let mut best = f64::INFINITY;
+            for _ in 0..2 {
+                let (_, t) = exec.run_model(name, input.clone())?;
+                best = best.min(t.exec_seconds);
+            }
+            costs.push(best / *batch as f64);
+        }
+        let min_cost = costs.iter().copied().fold(f64::INFINITY, f64::min);
+        Ok(variants
+            .into_iter()
+            .zip(costs)
+            .filter(|((batch, _), cost)| *batch == 1 || *cost <= min_cost * ADAPTIVE_SLACK)
+            .map(|(v, _)| v)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::CpuRefBackend;
+    use crate::cpuref::naive::conv_naive;
+
+    fn runner(spec: ConvSpec) -> ConvBackendRunner {
+        ConvBackendRunner::new(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4])
+            .unwrap()
+    }
+
+    #[test]
+    fn conv_runner_plans_every_size_up_front() {
+        let r = runner(ConvSpec::paper(8, 1, 3, 4, 4));
+        assert_eq!(r.batch_sizes(), vec![1, 2, 4]);
+        assert_eq!(r.chosen_algorithms().len(), 3);
+        assert_eq!(r.item_in_elems(), 4 * 8 * 8);
+        assert_eq!(r.item_out_elems(), 4 * 8 * 8);
+    }
+
+    #[test]
+    fn conv_runner_output_matches_oracle() {
+        let spec = ConvSpec::paper(6, 1, 3, 3, 2);
+        let mut r = runner(spec);
+        let batch = 2;
+        let mut rng = Rng::new(9);
+        let mut input = vec![0.0f32; batch * r.item_in_elems()];
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        let out = r.run(batch, input.clone()).unwrap();
+        assert_eq!(out.data.len(), batch * r.item_out_elems());
+
+        // The runner's filters are deterministic (seeded): reproduce.
+        let bspec = spec.with_batch(batch);
+        let mut frng = Rng::new(0xF117E25);
+        let filters =
+            Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut frng, -1.0, 1.0);
+        let x = Tensor::from_vec(batch, spec.c, spec.h, spec.w, input);
+        let want = conv_naive(&bspec, &x, &filters);
+        let got = Tensor::from_vec(batch, spec.m, spec.out_h(), spec.out_w(), out.data);
+        assert!(got.rel_l2_error(&want) < 2e-5);
+    }
+
+    #[test]
+    fn conv_runner_uses_one_algorithm_for_all_sizes() {
+        // 1x1 batch-1 heuristic says cuConv while batched says GEMM —
+        // the runner must still pin a single algorithm so outputs do
+        // not depend on how the batcher groups requests.
+        let r = runner(ConvSpec::paper(7, 1, 1, 8, 16));
+        let algos: Vec<_> = r.chosen_algorithms().into_iter().map(|(_, a)| a).collect();
+        assert!(!algos.is_empty());
+        assert!(
+            algos.windows(2).all(|w| w[0] == w[1]),
+            "algorithm varies across batch sizes: {algos:?}"
+        );
+    }
+
+    #[test]
+    fn conv_runner_rejects_unknown_size_and_bad_len() {
+        let mut r = runner(ConvSpec::paper(6, 1, 1, 2, 2));
+        let buf = vec![0.0; 3 * r.item_in_elems()];
+        assert!(r.run(3, buf).is_err(), "3 is not a planned batch size");
+        assert!(r.run(2, vec![0.0; 7]).is_err(), "wrong input length");
+    }
+
+    #[test]
+    fn conv_runner_requires_batch_one() {
+        let err = ConvBackendRunner::new(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(6, 1, 1, 2, 2),
+            None,
+            &[2, 4],
+        );
+        assert!(err.is_err());
+    }
+}

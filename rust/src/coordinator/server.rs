@@ -1,21 +1,28 @@
-//! The serving router: bounded queue → dynamic batches → PJRT → replies.
+//! The serving router: bounded queue → dynamic batches → runner → replies.
+//!
+//! The router thread is generic over a [`BatchRunner`]: the AOT model
+//! executables through PJRT (`pjrt` feature), or a convolution layer
+//! through any [`Backend`](crate::backend::Backend) — so whether a
+//! deployment serves artifacts or the CPU fallback is a backend choice,
+//! not a different server.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::{decompose_batches, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse};
-use crate::runtime::{spawn_executor, ExecutorHandle, Manifest};
+use crate::coordinator::runner::BatchRunner;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Model family to serve (e.g. `minisqueezenet`).
+    /// Model family to serve (e.g. `minisqueezenet`) — used by the AOT
+    /// model path ([`Server::start`], `pjrt` feature).
     pub model: String,
     pub policy: BatchPolicy,
     /// Validate every model executable against its AOT sample I/O pair
@@ -23,17 +30,10 @@ pub struct ServerConfig {
     pub validate_on_start: bool,
     /// Cost-aware batching: time every executable variant at startup
     /// and only batch onto sizes whose per-image cost is within
-    /// [`ADAPTIVE_SLACK`] of the best. On accelerators large batches
-    /// amortize weight traffic and all sizes survive; on this CPU-PJRT
-    /// testbed interpret-mode execution grows superlinearly with batch,
-    /// and pruning the inefficient sizes recovers the batch-1-grade
-    /// throughput while keeping multi-size batching available
-    /// (EXPERIMENTS.md §Perf, L3 iteration 2).
+    /// `ADAPTIVE_SLACK` of the best (see
+    /// [`runner`](crate::coordinator::runner)).
     pub adaptive_sizes: bool,
 }
-
-/// Per-image cost slack for adaptive size pruning (1.0 = best only).
-pub const ADAPTIVE_SLACK: f64 = 1.25;
 
 impl Default for ServerConfig {
     fn default() -> Self {
@@ -56,8 +56,6 @@ pub struct Server {
     handle: ServerHandle,
     router: Option<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
-    // Keeps the executor thread alive for the server's lifetime.
-    _executor_guard: crate::runtime::executor::ExecutorThread,
 }
 
 /// Cheap cloneable client handle.
@@ -71,47 +69,28 @@ pub struct ServerHandle {
 }
 
 impl Server {
-    /// Start serving `config.model` from the artifact manifest.
-    pub fn start(manifest: Manifest, config: ServerConfig) -> Result<Server> {
-        let family = manifest.model_family(&config.model);
-        if family.is_empty() {
-            bail!("no '{}' model artifacts in manifest", config.model);
+    /// Start serving batches on an explicit runner (the general entry
+    /// point; the convenience constructors below build the runner).
+    pub fn start_with_runner(
+        runner: Box<dyn BatchRunner>,
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        let sizes = runner.batch_sizes();
+        if !sizes.contains(&1) {
+            bail!("runner must support batch size 1 (got {sizes:?})");
         }
-        let batch_sizes: Vec<usize> = family.iter().map(|m| m.batch).collect();
-        if !batch_sizes.contains(&1) {
-            bail!("model family must include a batch-1 executable");
-        }
-        // name + per-image input size per batch variant.
-        let mut variants: Vec<(usize, String)> =
-            family.iter().map(|m| (m.batch, m.name.clone())).collect();
-        let image_elems: usize = family[0].input_shape.iter().skip(1).product();
-        let classes: usize = family[0].output_shape[1];
-        let names: Vec<String> = variants.iter().map(|(_, n)| n.clone()).collect();
-
-        let (_executor_guard, exec) = spawn_executor(manifest)?;
-        exec.warmup(&names).context("compiling model executables")?;
-        if config.validate_on_start {
-            for name in &names {
-                let err = exec.validate_model(name)?;
-                if err > 5e-4 {
-                    bail!("artifact {name} fails sample-I/O validation (err {err})");
-                }
-            }
-        }
-        if config.adaptive_sizes && variants.len() > 1 {
-            variants = prune_inefficient_sizes(&exec, variants, image_elems)?;
-        }
+        let image_elems = runner.item_in_elems();
+        let classes = runner.item_out_elems();
 
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(config.policy.queue_capacity);
+        let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(policy.queue_capacity);
 
         let router = {
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
-            let policy = config.policy;
             std::thread::Builder::new().name("cuconv-router".into()).spawn(move || {
-                router_loop(rx, exec, variants, image_elems, classes, policy, metrics, shutdown)
+                router_loop(rx, runner, classes, policy, metrics, shutdown)
             })?
         };
 
@@ -122,7 +101,35 @@ impl Server {
             image_elems,
             classes,
         };
-        Ok(Server { handle, router: Some(router), shutdown, _executor_guard })
+        Ok(Server { handle, router: Some(router), shutdown })
+    }
+
+    /// Serve one convolution layer through a pluggable backend — the
+    /// artifact-free serving path (and, with `PjrtBackend`, the
+    /// kernel-serving path). `batch_sizes` are the plan granularities.
+    pub fn start_conv(
+        backend: Box<dyn crate::backend::Backend>,
+        spec: crate::conv::ConvSpec,
+        algo: Option<crate::algo::Algorithm>,
+        batch_sizes: &[usize],
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        let runner = crate::coordinator::runner::ConvBackendRunner::new(
+            backend,
+            spec,
+            algo,
+            batch_sizes,
+        )?;
+        Server::start_with_runner(Box::new(runner), policy)
+    }
+
+    /// Start serving `config.model` from the artifact manifest (AOT
+    /// model executables through PJRT).
+    #[cfg(feature = "pjrt")]
+    pub fn start(manifest: crate::runtime::Manifest, config: ServerConfig) -> Result<Server> {
+        let runner =
+            crate::coordinator::runner::PjrtModelRunner::new(manifest, &config)?;
+        Server::start_with_runner(Box::new(runner), config.policy)
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -196,51 +203,17 @@ impl ServerHandle {
     }
 }
 
-/// Time each executable variant and keep only the sizes whose per-image
-/// cost is within [`ADAPTIVE_SLACK`] of the best (batch 1 always kept).
-fn prune_inefficient_sizes(
-    exec: &ExecutorHandle,
-    variants: Vec<(usize, String)>,
-    image_elems: usize,
-) -> Result<Vec<(usize, String)>> {
-    let mut costs = Vec::with_capacity(variants.len());
-    for (batch, name) in &variants {
-        let input = vec![0.0f32; batch * image_elems];
-        // Warm + two timed runs; take the min (steady-state estimate).
-        exec.run_model(name, input.clone())?;
-        let mut best = f64::INFINITY;
-        for _ in 0..2 {
-            let (_, t) = exec.run_model(name, input.clone())?;
-            best = best.min(t.exec_seconds);
-        }
-        costs.push(best / *batch as f64);
-    }
-    let min_cost = costs.iter().copied().fold(f64::INFINITY, f64::min);
-    let kept: Vec<(usize, String)> = variants
-        .into_iter()
-        .zip(costs)
-        .filter(|((batch, _), cost)| *batch == 1 || *cost <= min_cost * ADAPTIVE_SLACK)
-        .map(|(v, _)| v)
-        .collect();
-    Ok(kept)
-}
-
 /// The router thread body: window the queue, batch, execute, scatter.
-#[allow(clippy::too_many_arguments)]
 fn router_loop(
     rx: Receiver<QueuedRequest>,
-    exec: ExecutorHandle,
-    variants: Vec<(usize, String)>,
-    image_elems: usize,
+    mut runner: Box<dyn BatchRunner>,
     classes: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let sizes: Vec<usize> = variants.iter().map(|(b, _)| *b).collect();
-    let name_for = |batch: usize| -> &str {
-        &variants.iter().find(|(b, _)| *b == batch).expect("known size").1
-    };
+    let sizes = runner.batch_sizes();
+    let image_elems = runner.item_in_elems();
 
     let mut window: Vec<QueuedRequest> = Vec::new();
     loop {
@@ -281,21 +254,21 @@ fn router_loop(
             for q in &chunk {
                 batch_input.extend_from_slice(&q.req.pixels);
             }
-            match exec.run_model(name_for(chunk_size), batch_input) {
-                Ok((logits, timing)) => {
+            match runner.run(chunk_size, batch_input) {
+                Ok(out) => {
                     for (i, q) in chunk.into_iter().enumerate() {
                         let total = q.req.enqueued.elapsed().as_secs_f64();
                         let queue_s =
                             (batch_started - q.req.enqueued).as_secs_f64().max(0.0);
                         let resp = InferResponse {
                             id: q.req.id,
-                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                            logits: out.data[i * classes..(i + 1) * classes].to_vec(),
                             queue_seconds: queue_s,
-                            exec_seconds: timing.exec_seconds,
+                            exec_seconds: out.exec_seconds,
                             total_seconds: total,
                             batch_size: chunk_size,
                         };
-                        metrics.record_request(queue_s, timing.exec_seconds, total);
+                        metrics.record_request(queue_s, out.exec_seconds, total);
                         let _ = q.resp.send(Ok(resp));
                     }
                 }

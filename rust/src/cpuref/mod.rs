@@ -10,11 +10,16 @@
 //!    Winograd and FFT families; cuDNN is closed-source, so we implement
 //!    each family ourselves ([`im2col`], [`winograd`], [`fft`]) and the
 //!    paper's own two-stage algorithm ([`cuconv`]).
-//! 3. **Fallback executor** — the coordinator can serve requests without
-//!    AOT artifacts using [`blocked`]'s parallel implementation.
+//! 3. **Fallback executor** — the coordinator serves requests without
+//!    AOT artifacts through
+//!    [`CpuRefBackend`](crate::backend::CpuRefBackend).
 //!
 //! All functions take NCHW inputs `[N,C,H,W]`, filters `[M,C,Kh,Kw]` and
 //! produce `[N,M,OH,OW]`.
+//!
+//! This module is the *substrate*: outside of `backend/`, convolutions
+//! are run through the descriptor → plan → execute API
+//! ([`crate::backend`]), not by calling [`CpuImpl::run`] directly.
 
 pub mod blocked;
 pub mod cuconv;

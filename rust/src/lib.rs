@@ -20,10 +20,16 @@
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only and the `cuconv` binary is self-contained afterwards.
 //!
+//! Every convolution is run through [`backend`] — the cuDNN-style
+//! descriptor → plan → execute front door with pluggable backends
+//! ([`backend::CpuRefBackend`] always; `backend::PjrtBackend` behind the
+//! `pjrt` feature, which gates everything that needs the `xla` crate).
+//!
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod algo;
+pub mod backend;
 pub mod conv;
 pub mod coordinator;
 pub mod cpuref;

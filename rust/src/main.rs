@@ -3,27 +3,35 @@
 //! ```text
 //! cuconv census                         Table 1 census
 //! cuconv registry                       Table 2 algorithm variants
-//! cuconv tables  [--measure] [--out D]  Tables 3-5 (paper vs model vs ours)
+//! cuconv tables  [--measure | --measure-cpu] [--out D]
+//!                                       Tables 3-5 (paper vs model vs ours)
 //! cuconv figures [--out D]              Figures 5-7 + §4.1 aggregates
 //! cuconv sweep                          616-case sweep aggregates only
 //! cuconv autotune <HW-N-K-M-C> [--cpu]  rank algorithms for one config
-//! cuconv plan <network> [--batch B]     per-layer algorithm plan
-//! cuconv serve-bench [--requests N]     end-to-end serving benchmark
+//! cuconv plan <network> [--batch B] [--measure]
+//!                                       per-layer algorithm plan
+//! cuconv serve-bench [--requests N] [--conv HW-N-K-M-C]
+//!                                       end-to-end serving benchmark
 //! cuconv validate                       validate AOT artifacts end to end
 //! ```
+//!
+//! Every convolution runs through the `backend` descriptor → plan →
+//! execute API: `--cpu`/`--measure-cpu`/`--conv` use the always-available
+//! CPU reference backend; the AOT/PJRT paths need the `pjrt` cargo
+//! feature and `make artifacts`.
 //!
 //! (`clap` is not in the offline vendor set; argument parsing is a thin
 //! hand-rolled matcher.)
 
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use cuconv::algo::{autotune, TimingSource};
+use cuconv::backend::{algo_find, algo_get, Backend, ConvDescriptor, CpuRefBackend};
 use cuconv::conv::{ConvSpec, FilterSize};
-use cuconv::coordinator::{plan_network, BatchPolicy, Server, ServerConfig};
+use cuconv::coordinator::{plan_network, plan_network_measured, BatchPolicy, Server};
 use cuconv::report::{self, figures, tables};
-use cuconv::runtime::{default_artifact_dir, Engine, Manifest};
 use cuconv::util::rng::Rng;
 use cuconv::zoo::Network;
 
@@ -46,11 +54,15 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
-fn load_manifest() -> Result<Manifest> {
-    let dir = default_artifact_dir();
-    Manifest::load(&dir).with_context(|| {
-        format!("loading artifacts from {} (run `make artifacts`)", dir.display())
-    })
+/// The PJRT artifact backend, when compiled in and artifacts exist.
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Result<Box<dyn Backend>> {
+    cuconv::backend::pjrt_from_default_dir()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Result<Box<dyn Backend>> {
+    bail!("this build lacks the `pjrt` feature; rebuild with --features pjrt")
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -65,13 +77,15 @@ fn run(args: &[String]) -> Result<()> {
         "tables" => {
             let iters: usize =
                 opt(args, "--iters").map(|v| v.parse()).transpose()?.unwrap_or(5);
-            let mut engine = if flag(args, "--measure") {
-                Some(Engine::new(load_manifest()?)?)
+            let backend: Option<Box<dyn Backend>> = if flag(args, "--measure") {
+                Some(pjrt_backend()?)
+            } else if flag(args, "--measure-cpu") {
+                Some(Box::new(CpuRefBackend::new()))
             } else {
                 None
             };
             for no in [3u8, 4, 5] {
-                let t = tables::table_kernels(no, engine.as_mut(), iters);
+                let t = tables::table_kernels(no, backend.as_deref(), iters);
                 println!("{}", t.render());
                 if let Some(dir) = opt(args, "--out") {
                     t.write_csv(format!("{dir}/table{no}.csv"))?;
@@ -101,17 +115,18 @@ fn run(args: &[String]) -> Result<()> {
         "autotune" => {
             let label = args
                 .get(1)
-                .ok_or_else(|| anyhow!("usage: cuconv autotune <HW-N-K-M-C>"))?;
+                .ok_or_else(|| anyhow!("usage: cuconv autotune <HW-N-K-M-C> [--cpu]"))?;
             let spec = ConvSpec::from_table_label(label)
                 .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
-            let source = if flag(args, "--cpu") {
-                TimingSource::CpuMeasured
+            let (result, heuristic) = if flag(args, "--cpu") {
+                let backend = CpuRefBackend::new();
+                let desc = ConvDescriptor::new(spec)?;
+                (algo_find(&backend, &desc, 5), Some(algo_get(&backend, &desc)?))
             } else {
-                TimingSource::GpuModel
+                (autotune(&spec, TimingSource::GpuModel, 5), None)
             };
-            let result = autotune(&spec, source, 5);
             let mut t = report::Table::new(
-                format!("autotune {label} ({source:?})"),
+                format!("autotune {label} ({:?})", result.source),
                 &["rank", "algorithm", "score us", "workspace MB"],
             );
             for (i, e) in result.entries.iter().enumerate() {
@@ -123,6 +138,9 @@ fn run(args: &[String]) -> Result<()> {
                 ]);
             }
             print!("{}", t.render());
+            if let Some(h) = heuristic {
+                println!("heuristic (algo_get) pick: {h}");
+            }
             if let Some(s) = result.cuconv_speedup() {
                 println!("cuconv speedup vs best baseline: {s:.2}x");
             }
@@ -138,7 +156,13 @@ fn run(args: &[String]) -> Result<()> {
             };
             let batch: usize =
                 opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(1);
-            let plan = plan_network(net, batch, TimingSource::GpuModel);
+            let plan = if flag(args, "--measure") {
+                // Timed on this host through the CPU reference backend
+                // (slow at large batch sizes).
+                plan_network_measured(&CpuRefBackend::new(), net, batch, 3)
+            } else {
+                plan_network(net, batch, TimingSource::GpuModel)
+            };
             let mut t = report::Table::new(
                 format!("{} @ batch {batch}: per-layer algorithm plan", net.name()),
                 &["layer", "config", "chosen", "us", "best baseline us", "speedup"],
@@ -164,23 +188,16 @@ fn run(args: &[String]) -> Result<()> {
         "serve-bench" => {
             let requests: usize =
                 opt(args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
-            serve_bench(requests)?;
+            if let Some(label) = opt(args, "--conv") {
+                let spec = ConvSpec::from_table_label(label)
+                    .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
+                serve_bench_conv(spec, requests)?;
+            } else {
+                serve_bench_model(requests)?;
+            }
         }
         "validate" => {
-            let mut engine = Engine::new(load_manifest()?)?;
-            let models: Vec<String> =
-                engine.manifest().models.iter().map(|m| m.name.clone()).collect();
-            for name in models {
-                let err = engine.validate_model(&name)?;
-                println!(
-                    "{name}: max abs err {err:.2e} {}",
-                    if err < 5e-4 { "OK" } else { "FAIL" }
-                );
-                if err >= 5e-4 {
-                    bail!("artifact validation failed");
-                }
-            }
-            println!("all model artifacts validate");
+            validate()?;
         }
         _ => {
             println!("cuconv {} — see README.md", cuconv::VERSION);
@@ -193,20 +210,61 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn serve_bench(requests: usize) -> Result<()> {
-    let manifest = load_manifest()?;
-    let config = ServerConfig {
+/// Serve one convolution layer through the CPU reference backend — the
+/// artifact-free serving path, runnable in the default build.
+fn serve_bench_conv(spec: ConvSpec, requests: usize) -> Result<()> {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(5),
+        queue_capacity: 512,
+    };
+    let server = Server::start_conv(
+        Box::new(CpuRefBackend::new()),
+        spec,
+        None,
+        &[1, 2, 4, 8],
+        policy,
+    )?;
+    println!(
+        "serving conv {} through the cpuref backend ({} requests, 8 client threads) ...",
+        spec.table_label(),
+        requests
+    );
+    drive_and_report(&server, requests)
+}
+
+/// Serve the AOT model family through PJRT (needs the `pjrt` feature).
+#[cfg(feature = "pjrt")]
+fn serve_bench_model(requests: usize) -> Result<()> {
+    use anyhow::Context;
+    let dir = cuconv::runtime::default_artifact_dir();
+    let manifest = cuconv::runtime::Manifest::load(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts`)", dir.display())
+    })?;
+    let config = cuconv::coordinator::ServerConfig {
         policy: BatchPolicy {
             max_batch: 8,
             max_delay: Duration::from_millis(5),
             queue_capacity: 512,
         },
-        ..ServerConfig::default()
+        ..Default::default()
     };
     let server = Server::start(manifest, config)?;
+    println!("serving {requests} requests from 8 client threads ...");
+    drive_and_report(&server, requests)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_bench_model(_requests: usize) -> Result<()> {
+    bail!(
+        "model serving needs the `pjrt` feature; use `serve-bench --conv <HW-N-K-M-C>` \
+         for the backend-based conv serving path"
+    )
+}
+
+fn drive_and_report(server: &Server, requests: usize) -> Result<()> {
     let h = server.handle();
     let elems = h.image_elems();
-    println!("serving {requests} requests from 8 client threads ...");
     std::thread::scope(|s| {
         for t in 0..8u64 {
             let h = h.clone();
@@ -234,4 +292,30 @@ fn serve_bench(requests: usize) -> Result<()> {
         m.total_max * 1e3
     );
     Ok(())
+}
+
+/// Validate every AOT model artifact against its sample I/O pair.
+#[cfg(feature = "pjrt")]
+fn validate() -> Result<()> {
+    use anyhow::Context;
+    let dir = cuconv::runtime::default_artifact_dir();
+    let backend = cuconv::backend::PjrtBackend::from_dir(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts`)", dir.display())
+    })?;
+    for (name, err) in backend.validate_models()? {
+        println!(
+            "{name}: max abs err {err:.2e} {}",
+            if err < 5e-4 { "OK" } else { "FAIL" }
+        );
+        if err >= 5e-4 {
+            bail!("artifact validation failed");
+        }
+    }
+    println!("all model artifacts validate");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn validate() -> Result<()> {
+    bail!("validate needs the `pjrt` feature; rebuild with --features pjrt")
 }

@@ -3,16 +3,17 @@
 //! * Table 1 — the census of conv configurations per network.
 //! * Table 2 — the algorithm-variant registry.
 //! * Tables 3–5 — per-kernel execution times of the profiled configs:
-//!   paper µs (V100) vs model µs, plus — when AOT artifacts are present —
-//!   **measured** µs of our own Pallas kernels executed through PJRT
-//!   from the Rust hot path (CPU, interpret mode: ordering among our
-//!   variants is meaningful, absolute values are not V100-comparable).
+//!   paper µs (V100) vs model µs, plus — when a measurement
+//!   [`Backend`] is supplied — **measured** µs of real executions
+//!   through the descriptor → plan → execute API (PJRT artifacts or the
+//!   CPU reference backend; ordering among our variants is meaningful,
+//!   absolute values are not V100-comparable).
 
 use crate::algo::Algorithm;
+use crate::backend::{Backend, ConvDescriptor, Workspace};
 use crate::conv::{ConvSpec, FilterSize};
 use crate::gpumodel::{self, paper};
 use crate::report::{fmt_us, Table};
-use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::zoo;
@@ -55,27 +56,37 @@ pub fn table2() -> Table {
     t
 }
 
-/// Median measured execution µs of an artifact over `iters` runs.
-fn measure_artifact_us(
-    engine: &mut Engine,
-    label: &str,
+/// Median measured execution µs of (spec, algo) on a backend over
+/// `iters` runs, via the descriptor → plan → execute lifecycle. `None`
+/// when the backend does not support the pair (e.g. no AOT artifact).
+///
+/// Timings are caller wall-clock around [`Backend::execute`], i.e. the
+/// serving-path cost including backend dispatch (for PJRT: tensor
+/// staging plus the executor-thread round-trip) — not the bare kernel
+/// time. On very small configs dispatch overhead can dominate, so
+/// treat cross-algorithm ordering there with care.
+fn measure_backend_us(
+    backend: &dyn Backend,
+    spec: &ConvSpec,
     algo: Algorithm,
     iters: usize,
 ) -> Option<f64> {
-    let name = format!("conv_{label}_{}", algo.name());
-    let artifact = engine.manifest().find_conv(&name)?.clone();
-    let spec = artifact.spec;
+    if !backend.capabilities(spec, algo).is_supported() {
+        return None;
+    }
+    let desc = ConvDescriptor::new(*spec).ok()?;
+    let plan = backend.plan(&desc, algo).ok()?;
     let mut rng = Rng::new(0xCAFE);
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
     let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
-    // Warmup (compiles on first call).
-    engine.run_conv(&artifact, &input, &filters).ok()?;
+    let mut ws = Workspace::new();
+    // Warmup (PJRT compiles at plan time; this warms caches/allocations).
+    backend.execute(&plan, &input, &filters, &mut ws).ok()?;
     let mut times: Vec<f64> = (0..iters)
         .filter_map(|_| {
-            engine
-                .run_conv(&artifact, &input, &filters)
-                .ok()
-                .map(|(_, t)| t.exec_seconds * 1e6)
+            let started = std::time::Instant::now();
+            backend.execute(&plan, &input, &filters, &mut ws).ok()?;
+            Some(started.elapsed().as_secs_f64() * 1e6)
         })
         .collect();
     if times.is_empty() {
@@ -87,9 +98,10 @@ fn measure_artifact_us(
 
 /// Tables 3–5: kernel times for the profiled configs.
 ///
-/// `engine`: pass `Some` to add the measured column from real PJRT
-/// executions of our artifacts.
-pub fn table_kernels(table_no: u8, mut engine: Option<&mut Engine>, iters: usize) -> Table {
+/// `backend`: pass `Some` to add the measured column from real
+/// executions through the descriptor → plan → execute API (PJRT
+/// artifacts or the CPU reference backend).
+pub fn table_kernels(table_no: u8, backend: Option<&dyn Backend>, iters: usize) -> Table {
     let filter = match table_no {
         3 => "1x1",
         4 => "3x3",
@@ -98,7 +110,7 @@ pub fn table_kernels(table_no: u8, mut engine: Option<&mut Engine>, iters: usize
     let mut t = Table::new(
         format!(
             "Table {table_no}: kernel times for the profiled {filter} configs (µs; \
-             measured = our stack on CPU-PJRT, not V100-comparable)"
+             measured = our stack via the backend API, not V100-comparable)"
         ),
         &["config", "algorithm", "kernel", "paper us", "model us", "ours measured us"],
     );
@@ -110,9 +122,8 @@ pub fn table_kernels(table_no: u8, mut engine: Option<&mut Engine>, iters: usize
             .collect();
         for row in rows {
             let model = gpumodel::predict(&spec, row.algo);
-            let measured = engine
-                .as_deref_mut()
-                .and_then(|e| measure_artifact_us(e, label, row.algo, iters));
+            let measured =
+                backend.and_then(|b| measure_backend_us(b, &spec, row.algo, iters));
             // Per-kernel lines.
             for (i, pk) in row.kernels.iter().enumerate() {
                 let model_us = model

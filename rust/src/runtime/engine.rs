@@ -49,7 +49,7 @@ impl Engine {
 
     /// Load the manifest from a directory and build the engine.
     pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
-        Ok(Engine::new(Manifest::load(dir)?)?)
+        Engine::new(Manifest::load(dir)?)
     }
 
     pub fn manifest(&self) -> &Manifest {

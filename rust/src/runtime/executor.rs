@@ -36,6 +36,9 @@ enum Request {
         name: String,
         resp: mpsc::Sender<Result<f32>>,
     },
+    CompileCount {
+        resp: mpsc::Sender<usize>,
+    },
     Shutdown,
 }
 
@@ -109,6 +112,9 @@ pub fn spawn_executor(manifest: Manifest) -> Result<(ExecutorThread, ExecutorHan
                     Request::ValidateModel { name, resp } => {
                         let _ = resp.send(engine.validate_model(&name));
                     }
+                    Request::CompileCount { resp } => {
+                        let _ = resp.send(engine.compile_count());
+                    }
                     Request::Shutdown => break,
                 }
             }
@@ -151,6 +157,16 @@ impl ExecutorHandle {
             .send(Request::Warmup { names: names.to_vec(), resp })
             .map_err(|_| anyhow!("executor thread is gone"))?;
         rx.recv().map_err(|_| anyhow!("executor dropped the request"))?
+    }
+
+    /// Number of engine compilations so far (cache misses) — flat across
+    /// plan-reuse executions.
+    pub fn compile_count(&self) -> Result<usize> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::CompileCount { resp })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped the request"))
     }
 
     /// Run a model's AOT sample I/O pair; returns max abs error.

@@ -1,5 +1,11 @@
 //! Layer-3 runtime: load and execute the AOT artifacts via PJRT.
 //!
+//! Manifest parsing is always available; the engine/executor (and their
+//! `xla` dependency) are gated behind the `pjrt` cargo feature so the
+//! default build works offline. Convolution call sites should not use
+//! this module directly — go through
+//! [`backend::PjrtBackend`](crate::backend) instead.
+//!
 //! The build-time Python side (`python/compile/aot.py`) lowers every
 //! kernel/model to HLO **text** in `artifacts/`; this module is the only
 //! place that touches the `xla` crate:
@@ -17,11 +23,15 @@
 //!   mirrors production serving stacks where a single submission queue
 //!   fronts each accelerator.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, ExecTiming};
+#[cfg(feature = "pjrt")]
 pub use executor::{spawn_executor, ExecutorHandle};
 pub use manifest::{ConvArtifact, Manifest, ModelArtifact};
 

@@ -1,0 +1,208 @@
+//! Integration: the descriptor → plan → execute API across backends.
+//!
+//! Pins the acceptance properties of the backend subsystem:
+//! * every backend agrees with the `conv_naive` oracle across the
+//!   1×1/3×3/5×5 + stride/padding spec set,
+//! * plan reuse repeats no planning work (`plan_count` stays flat; the
+//!   PJRT `compile_count` twin lives in `integration_runtime.rs`),
+//! * `algo_get` always returns an algorithm the backend reports as
+//!   supported,
+//! * workspace accounting enforces the paper's 1 GB cap.
+
+use cuconv::algo::Algorithm;
+use cuconv::backend::{
+    algo_find, algo_get, Backend, ConvDescriptor, ConvPlan, CpuRefBackend, Support,
+    Workspace,
+};
+use cuconv::conv::ConvSpec;
+use cuconv::cpuref::naive::conv_naive;
+use cuconv::tensor::Tensor;
+use cuconv::util::rng::Rng;
+
+/// The oracle-agreement spec set: 1x1/3x3/5x5, batching, stride and
+/// asymmetric padding.
+fn oracle_specs() -> Vec<ConvSpec> {
+    vec![
+        ConvSpec::paper(7, 2, 1, 8, 16),
+        ConvSpec::paper(9, 1, 3, 4, 3),
+        ConvSpec::paper(7, 2, 5, 6, 5),
+        ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 4, 2) },
+        ConvSpec { pad_h: 2, pad_w: 1, ..ConvSpec::paper(6, 1, 3, 2, 2) },
+    ]
+}
+
+fn io(spec: &ConvSpec, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    (input, filters)
+}
+
+/// Every supported (spec, algo) of `backend` must match the oracle.
+fn assert_backend_matches_oracle(backend: &dyn Backend, tol: f32) {
+    let mut workspace = Workspace::new();
+    let mut pairs_tested = 0;
+    for spec in oracle_specs() {
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 0xABCD ^ spec.flops());
+        let oracle = conv_naive(&spec, &input, &filters);
+        for algo in backend.supported_algorithms(&spec) {
+            let plan = backend.plan(&desc, algo).unwrap();
+            let got = backend.execute(&plan, &input, &filters, &mut workspace).unwrap();
+            let err = got.rel_l2_error(&oracle);
+            assert!(
+                err < tol,
+                "{}::{algo} vs oracle: rel_l2={err} on {spec}",
+                backend.name()
+            );
+            pairs_tested += 1;
+        }
+    }
+    assert!(pairs_tested > 0, "{} supported nothing", backend.name());
+}
+
+#[test]
+fn cpuref_backend_agrees_with_oracle_across_spec_set() {
+    assert_backend_matches_oracle(&CpuRefBackend::new(), 2e-5);
+}
+
+#[test]
+fn cpuref_plan_reuse_repeats_no_planning() {
+    let backend = CpuRefBackend::new();
+    let spec = ConvSpec::paper(9, 1, 3, 4, 3);
+    let desc = ConvDescriptor::new(spec).unwrap();
+    let (input, filters) = io(&spec, 7);
+    let mut workspace = Workspace::new();
+    let plan = backend.plan(&desc, Algorithm::CuConv).unwrap();
+    let baseline = backend.plan_count();
+    for _ in 0..10 {
+        backend.execute(&plan, &input, &filters, &mut workspace).unwrap();
+    }
+    assert_eq!(
+        backend.plan_count(),
+        baseline,
+        "execute must not plan; plan reuse keeps plan_count flat"
+    );
+}
+
+#[test]
+fn algo_get_always_returns_a_supported_algorithm() {
+    // Across the whole zoo (every distinct config, three batch sizes):
+    // the contract is unconditional.
+    let backend = CpuRefBackend::new();
+    for entry in cuconv::zoo::all_configs() {
+        for batch in [1usize, 8, 64] {
+            let spec = entry.spec.with_batch(batch);
+            let desc = ConvDescriptor::new(spec).unwrap();
+            let algo = algo_get(&backend, &desc).unwrap();
+            assert!(
+                backend.capabilities(&spec, algo).is_supported(),
+                "algo_get returned unsupported {algo} for {spec}"
+            );
+        }
+    }
+}
+
+#[test]
+fn algo_find_best_is_executable_and_ranked() {
+    let backend = CpuRefBackend::new();
+    let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+    let desc = ConvDescriptor::new(spec).unwrap();
+    let result = algo_find(&backend, &desc, 2);
+    assert!(!result.entries.is_empty());
+    for w in result.entries.windows(2) {
+        assert!(w[0].score_us <= w[1].score_us);
+    }
+    // The winner must actually execute.
+    let best = result.best().unwrap().algo;
+    let plan = backend.plan(&desc, best).unwrap();
+    let (input, filters) = io(&spec, 11);
+    let mut workspace = Workspace::new();
+    backend.execute(&plan, &input, &filters, &mut workspace).unwrap();
+}
+
+#[test]
+fn workspace_cap_blocks_oversized_plans() {
+    let backend = CpuRefBackend::new();
+    // VGG-scale conv at batch 256: FFT spectra blow the 1 GB cap.
+    let spec = ConvSpec::paper(224, 256, 3, 64, 64);
+    assert_eq!(
+        backend.capabilities(&spec, Algorithm::Fft),
+        Support::Unsupported("workspace above the 1 GB cap")
+    );
+    let desc = ConvDescriptor::new(spec).unwrap();
+    assert!(backend.plan(&desc, Algorithm::Fft).is_err());
+    // The workspace object itself also refuses a direct oversized ask.
+    let mut ws = Workspace::new();
+    assert!(ws.ensure_bytes(Algorithm::Fft.workspace_bytes(&spec)).is_err());
+}
+
+#[test]
+fn workspace_is_reused_and_tracks_high_water() {
+    let backend = CpuRefBackend::new();
+    let mut workspace = Workspace::new();
+    // Execute a 3x3 (needs cuconv stage-1 temp) then a 1x1 (needs none):
+    // capacity must be retained, high-water must reflect the larger ask.
+    let s3 = ConvSpec::paper(9, 1, 3, 4, 3);
+    let s1 = ConvSpec::paper(7, 1, 1, 8, 16);
+    for spec in [s3, s1] {
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let plan = backend.plan(&desc, Algorithm::CuConv).unwrap();
+        let (input, filters) = io(&spec, 5);
+        backend.execute(&plan, &input, &filters, &mut workspace).unwrap();
+    }
+    assert_eq!(workspace.high_water_bytes(), s3.cuconv_temp_bytes());
+    assert!(workspace.capacity_bytes() >= s3.cuconv_temp_bytes());
+}
+
+#[test]
+fn plans_are_stamped_with_their_backend() {
+    let backend = CpuRefBackend::new();
+    let spec = ConvSpec::paper(7, 1, 1, 8, 16);
+    let desc = ConvDescriptor::new(spec).unwrap();
+    let plan = backend.plan(&desc, Algorithm::CuConv).unwrap();
+    assert_eq!(plan.backend_name(), "cpuref");
+    assert_eq!(plan.algo(), Algorithm::CuConv);
+    assert_eq!(plan.workspace_bytes(), 0, "1x1 cuconv skips stage 2");
+    // A foreign (opaque) plan is refused at execute time.
+    let foreign = ConvPlan::new_opaque("elsewhere", spec, Algorithm::CuConv, "k0");
+    let (input, filters) = io(&spec, 6);
+    let mut workspace = Workspace::new();
+    assert!(backend.execute(&foreign, &input, &filters, &mut workspace).is_err());
+}
+
+/// With `--features pjrt` and built artifacts, the PJRT backend must
+/// pass the same oracle sweep on whatever artifacts exist.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_backend_agrees_with_oracle_where_artifacts_exist() {
+    let dir = cuconv::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let backend = cuconv::backend::PjrtBackend::from_dir(&dir).unwrap();
+    let mut workspace = Workspace::new();
+    let mut tested = 0;
+    for artifact in backend.manifest().convs.clone() {
+        let Some(algo) = Algorithm::from_name(&artifact.algo) else { continue };
+        let spec = artifact.spec;
+        if !backend.capabilities(&spec, algo).is_supported() {
+            continue;
+        }
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let plan = backend.plan(&desc, algo).unwrap();
+        let (input, filters) = io(&spec, 0xF00D ^ spec.flops());
+        let oracle = conv_naive(&spec, &input, &filters);
+        let got = backend.execute(&plan, &input, &filters, &mut workspace).unwrap();
+        assert!(
+            got.rel_l2_error(&oracle) < 5e-4,
+            "pjrt::{algo} disagrees with oracle on {spec}"
+        );
+        tested += 1;
+        if tested >= 12 {
+            break; // bounded runtime; coverage across algorithms suffices
+        }
+    }
+    assert!(tested > 0, "no conv artifacts were testable");
+}

@@ -1,20 +1,16 @@
-//! Integration: the serving coordinator end to end over real AOT
-//! artifacts (skipped when artifacts are not built).
+//! Integration: the serving coordinator end to end.
+//!
+//! The conv-backend serving path (a convolution layer through the
+//! [`Backend`](cuconv::backend::Backend) API) runs on every build; the
+//! AOT-model path additionally needs the `pjrt` feature and built
+//! artifacts (skipped with a note otherwise).
 
 use std::time::Duration;
 
-use cuconv::coordinator::{BatchPolicy, Server, ServerConfig};
-use cuconv::runtime::Manifest;
+use cuconv::backend::CpuRefBackend;
+use cuconv::conv::ConvSpec;
+use cuconv::coordinator::{BatchPolicy, Server};
 use cuconv::util::rng::Rng;
-
-fn manifest() -> Option<Manifest> {
-    let dir = cuconv::runtime::default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Manifest::load(dir).unwrap())
-}
 
 fn image(rng: &mut Rng, elems: usize) -> Vec<f32> {
     let mut v = vec![0.0f32; elems];
@@ -22,46 +18,43 @@ fn image(rng: &mut Rng, elems: usize) -> Vec<f32> {
     v
 }
 
+/// A conv-layer server over the CPU reference backend — no artifacts.
+fn conv_server(policy: BatchPolicy) -> Server {
+    let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+    Server::start_conv(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4, 8], policy)
+        .unwrap()
+}
+
 #[test]
-fn serves_single_request() {
-    let Some(m) = manifest() else { return };
-    let server = Server::start(m, ServerConfig::default()).unwrap();
+fn conv_server_serves_single_request() {
+    let server = conv_server(BatchPolicy::default());
     let h = server.handle();
     let mut rng = Rng::new(1);
     let resp = h.infer(image(&mut rng, h.image_elems())).unwrap();
     assert_eq!(resp.logits.len(), h.classes());
     assert!(resp.total_seconds > 0.0);
     assert!(resp.batch_size >= 1);
-    assert!(resp.predicted_class() < h.classes());
 }
 
 #[test]
-fn rejects_wrong_image_size() {
-    let Some(m) = manifest() else { return };
-    let server = Server::start(m, ServerConfig::default()).unwrap();
+fn conv_server_rejects_wrong_image_size() {
+    let server = conv_server(BatchPolicy::default());
     assert!(server.handle().infer(vec![0.0; 7]).is_err());
 }
 
 #[test]
-fn batches_concurrent_requests() {
-    let Some(m) = manifest() else { return };
-    let config = ServerConfig {
-        policy: BatchPolicy {
-            max_batch: 8,
-            max_delay: Duration::from_millis(30),
-            queue_capacity: 64,
-        },
-        // This test checks the batcher mechanics; keep all executable
-        // sizes even where the adaptive policy would prune them.
-        adaptive_sizes: false,
-        ..ServerConfig::default()
+fn conv_server_batches_concurrent_requests() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(30),
+        queue_capacity: 64,
     };
-    let server = Server::start(m, config).unwrap();
+    let server = conv_server(policy);
     let h = server.handle();
     let elems = h.image_elems();
 
     // Fire 16 requests concurrently; the router should form multi-image
-    // batches (the AOT family has batch sizes 1,2,4,8).
+    // batches (plans exist for batch sizes 1,2,4,8).
     std::thread::scope(|s| {
         for t in 0..16u64 {
             let h = h.clone();
@@ -83,37 +76,29 @@ fn batches_concurrent_requests() {
 }
 
 #[test]
-fn deterministic_outputs_across_batch_sizes() {
-    // The same image must produce the same logits whether it is served
-    // alone or inside a batch — the batcher must not mix rows up.
-    let Some(m) = manifest() else { return };
-    let config = ServerConfig {
-        policy: BatchPolicy {
-            max_batch: 4,
-            max_delay: Duration::from_millis(20),
-            queue_capacity: 64,
-        },
-        adaptive_sizes: false,
-        ..ServerConfig::default()
+fn conv_server_solo_vs_batched_outputs_agree() {
+    // The same pixels must produce the same conv output whether served
+    // alone or inside a batch — the batcher must not mix rows up, and
+    // the runner's per-size plans must agree numerically.
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(20),
+        queue_capacity: 64,
     };
-    let server = Server::start(m, config).unwrap();
+    let server = conv_server(policy);
     let h = server.handle();
     let mut rng = Rng::new(99);
     let img = image(&mut rng, h.image_elems());
 
-    // Serve alone.
     let solo = h.infer(img.clone()).unwrap();
 
-    // Serve among distinct other images, concurrently.
     let batched = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for t in 0..4u64 {
             let h2 = h.clone();
-            let img2 = if t == 0 {
-                img.clone()
-            } else {
-                image(&mut Rng::new(1000 + t), elemsof(&h))
-            };
+            let elems = h.image_elems();
+            let img2 =
+                if t == 0 { img.clone() } else { image(&mut Rng::new(1000 + t), elems) };
             handles.push(s.spawn(move || h2.infer(img2).unwrap()));
         }
         handles.remove(0).join().unwrap()
@@ -123,29 +108,18 @@ fn deterministic_outputs_across_batch_sizes() {
     }
 }
 
-fn elemsof(h: &cuconv::coordinator::ServerHandle) -> usize {
-    h.image_elems()
-}
-
 #[test]
-fn backpressure_rejects_when_flooded() {
-    let Some(m) = manifest() else { return };
-    let config = ServerConfig {
-        policy: BatchPolicy {
-            max_batch: 1,
-            max_delay: Duration::from_millis(1),
-            queue_capacity: 2,
-        },
-        ..ServerConfig::default()
+fn conv_server_backpressure_rejects_when_flooded() {
+    let policy = BatchPolicy {
+        max_batch: 1,
+        max_delay: Duration::from_millis(1),
+        queue_capacity: 2,
     };
-    let server = Server::start(m, config).unwrap();
+    let server = conv_server(policy);
     let h = server.handle();
     let elems = h.image_elems();
     let mut rng = Rng::new(3);
 
-    // Flood with async submissions; keep receivers so accepted ones
-    // complete. With capacity 2 and instant flooding, rejections are
-    // expected — and the count must be reflected in the metrics.
     let mut accepted = Vec::new();
     let mut rejected = 0;
     for _ in 0..64 {
@@ -162,13 +136,116 @@ fn backpressure_rejects_when_flooded() {
 }
 
 #[test]
-fn shutdown_is_clean() {
-    let Some(m) = manifest() else { return };
-    let mut server = Server::start(m, ServerConfig::default()).unwrap();
+fn conv_server_shutdown_is_clean() {
+    let mut server = conv_server(BatchPolicy::default());
     let h = server.handle();
     let mut rng = Rng::new(5);
     let _ = h.infer(image(&mut rng, h.image_elems())).unwrap();
     server.shutdown();
     // Further submissions fail cleanly.
     assert!(h.infer(image(&mut rng, h.image_elems())).is_err());
+}
+
+/// The AOT-model serving path (needs `--features pjrt` + artifacts).
+#[cfg(feature = "pjrt")]
+mod pjrt_model {
+    use super::*;
+    use cuconv::coordinator::ServerConfig;
+    use cuconv::runtime::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = cuconv::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let Some(m) = manifest() else { return };
+        let server = Server::start(m, ServerConfig::default()).unwrap();
+        let h = server.handle();
+        let mut rng = Rng::new(1);
+        let resp = h.infer(image(&mut rng, h.image_elems())).unwrap();
+        assert_eq!(resp.logits.len(), h.classes());
+        assert!(resp.total_seconds > 0.0);
+        assert!(resp.predicted_class() < h.classes());
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let Some(m) = manifest() else { return };
+        let config = ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(30),
+                queue_capacity: 64,
+            },
+            // This test checks the batcher mechanics; keep all
+            // executable sizes even where the adaptive policy would
+            // prune them.
+            adaptive_sizes: false,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(m, config).unwrap();
+        let h = server.handle();
+        let elems = h.image_elems();
+
+        std::thread::scope(|s| {
+            for t in 0..16u64 {
+                let h = h.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(t);
+                    let resp = h.infer(image(&mut rng, elems)).unwrap();
+                    assert_eq!(resp.logits.len(), h.classes());
+                });
+            }
+        });
+        let snap = server.metrics();
+        assert_eq!(snap.requests, 16);
+        assert!(
+            snap.mean_batch_size > 1.0,
+            "dynamic batching never batched (mean={})",
+            snap.mean_batch_size
+        );
+    }
+
+    #[test]
+    fn deterministic_outputs_across_batch_sizes() {
+        let Some(m) = manifest() else { return };
+        let config = ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(20),
+                queue_capacity: 64,
+            },
+            adaptive_sizes: false,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(m, config).unwrap();
+        let h = server.handle();
+        let mut rng = Rng::new(99);
+        let img = image(&mut rng, h.image_elems());
+
+        let solo = h.infer(img.clone()).unwrap();
+        let batched = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..4u64 {
+                let h2 = h.clone();
+                let elems = h.image_elems();
+                let img2 = if t == 0 {
+                    img.clone()
+                } else {
+                    image(&mut Rng::new(1000 + t), elems)
+                };
+                handles.push(s.spawn(move || h2.infer(img2).unwrap()));
+            }
+            handles.remove(0).join().unwrap()
+        });
+        for (a, b) in solo.logits.iter().zip(batched.logits.iter()) {
+            assert!((a - b).abs() < 1e-4, "solo {a} vs batched {b}");
+        }
+    }
 }

@@ -1,9 +1,13 @@
 //! Integration: AOT artifacts → PJRT → numerics vs the Rust oracle.
 //!
-//! These tests require `make artifacts` to have run; they are skipped
-//! (with a note) when the artifact directory is missing so `cargo test`
-//! stays runnable on a fresh checkout.
+//! These tests require the `pjrt` cargo feature (the whole file is
+//! compiled out otherwise) and `make artifacts` to have run; they are
+//! skipped (with a note) when the artifact directory is missing so
+//! `cargo test` stays runnable on a fresh checkout.
 
+#![cfg(feature = "pjrt")]
+
+use cuconv::backend::{Backend, ConvDescriptor, PjrtBackend, Workspace};
 use cuconv::cpuref::naive::conv_naive;
 use cuconv::runtime::{spawn_executor, Engine, Manifest};
 use cuconv::tensor::Tensor;
@@ -120,6 +124,40 @@ fn model_artifacts_validate_against_sample_io() {
         // proves the full AOT chain end to end.
         assert!(err < 5e-4, "model {name} max abs err {err}");
     }
+}
+
+#[test]
+fn pjrt_backend_plan_reuse_does_not_recompile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::from_dir(&dir).unwrap();
+    let Some(artifact) = backend.manifest().find_conv("conv_8-2-3-16-32_cuconv").cloned()
+    else {
+        eprintln!("sanity cuconv artifact missing; skipping");
+        return;
+    };
+    let spec = artifact.spec;
+    let algo = cuconv::algo::Algorithm::CuConv;
+    assert!(backend.capabilities(&spec, algo).is_supported());
+    let desc = ConvDescriptor::new(spec).unwrap();
+    // Planning compiles (once, at plan time) ...
+    let plan = backend.plan(&desc, algo).unwrap();
+    let compiles_after_plan = backend.compile_count().unwrap();
+    assert!(compiles_after_plan >= 1);
+    // ... and reusing the plan never recompiles.
+    let mut rng = Rng::new(0x9A7);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let mut ws = Workspace::new();
+    let want = conv_naive(&spec, &input, &filters);
+    for _ in 0..3 {
+        let got = backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+        assert!(got.rel_l2_error(&want) < 5e-4);
+    }
+    assert_eq!(
+        backend.compile_count().unwrap(),
+        compiles_after_plan,
+        "plan reuse must keep compile_count flat"
+    );
 }
 
 #[test]

@@ -1,8 +1,9 @@
 //! Cross-module property tests (mini-proptest from `cuconv::util::prop`).
 
 use cuconv::algo::Algorithm;
+use cuconv::backend::{Backend, ConvDescriptor, CpuRefBackend, Workspace};
 use cuconv::conv::ConvSpec;
-use cuconv::cpuref::{naive::conv_naive, CpuImpl};
+use cuconv::cpuref::naive::conv_naive;
 use cuconv::gpumodel;
 use cuconv::tensor::Tensor;
 use cuconv::util::json::{parse, Json};
@@ -65,21 +66,24 @@ fn prop_flops_scale_linearly_in_batch() {
 }
 
 #[test]
-fn prop_all_cpu_impls_agree_on_random_specs() {
+fn prop_backend_algorithms_agree_on_random_specs() {
     let cfg = Config { cases: 24, ..Config::default() };
+    let backend = CpuRefBackend::new();
     assert_prop(cfg, &SpecGen, |spec| {
         let mut rng = Rng::new(spec.flops() ^ 0x5EED);
         let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
         let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
         let want = conv_naive(spec, &input, &filters);
-        for imp in CpuImpl::ALL {
-            if imp == CpuImpl::Naive || !imp.supports(spec) {
-                continue;
-            }
-            let got = imp.run(spec, &input, &filters);
+        let desc = ConvDescriptor::new(*spec).map_err(|e| e.to_string())?;
+        let mut workspace = Workspace::new();
+        for algo in backend.supported_algorithms(spec) {
+            let plan = backend.plan(&desc, algo).map_err(|e| e.to_string())?;
+            let got = backend
+                .execute(&plan, &input, &filters, &mut workspace)
+                .map_err(|e| e.to_string())?;
             let err = got.rel_l2_error(&want);
             if err > 5e-4 {
-                return Err(format!("{} err {err} on {spec}", imp.name()));
+                return Err(format!("{algo} err {err} on {spec}"));
             }
         }
         Ok(())
