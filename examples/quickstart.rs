@@ -64,13 +64,20 @@ fn main() -> anyhow::Result<()> {
         out.rel_l2_error(&oracle)
     );
     assert!(out.rel_l2_error(&oracle) < 1e-5);
+    // The serving form: reuse the output tensor too (execute_into) —
+    // plan + workspace + output all reused, so the request path
+    // allocates no buffers.
+    let mut reused = out.clone();
     for _ in 0..4 {
         // Reusing the plan repeats none of the planning work.
-        backend.execute(&plan, &input, &filters, &mut workspace)?;
+        backend.execute_into(&plan, &input, &filters, &mut workspace, &mut reused)?;
     }
+    assert!(reused.rel_l2_error(&oracle) < 1e-5);
     println!(
-        "  (5 executes, {} new plan created — plan once, execute many)",
-        backend.plan_count() - plans_before
+        "  (5 executes, {} new plan created — plan once, execute many; \
+         workspace high-water {} B)",
+        backend.plan_count() - plans_before,
+        workspace.high_water_bytes()
     );
 
     // 4) The same lifecycle on the AOT Pallas kernels through PJRT.

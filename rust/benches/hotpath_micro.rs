@@ -1,49 +1,124 @@
 //! Bench: microbenchmarks of the Layer-3 hot path pieces (the §Perf
 //! iteration log in EXPERIMENTS.md tracks these before/after).
 //!
-//! * CPU substrate conv implementations on a profiled config
-//! * tensor→literal staging for the serving input shape
+//! * allocating `execute` vs workspace+output-reuse `execute_into` for
+//!   every supported algorithm on a profiled config
+//! * the seed-style staged cuConv (allocating two-pass) vs the fused
+//!   workspace-reuse hot path on every multi-tap profiled config
 //! * batch gather (request pixels → batch buffer)
 //! * JSON manifest parse
 //! * batch decomposition
+//!
+//! The algorithm comparisons are also written to `BENCH_hotpath.json`
+//! at the repository root so the perf trajectory is machine-readable
+//! across PRs.
 
 use cuconv::backend::{Backend, ConvDescriptor, CpuRefBackend, Workspace};
 use cuconv::conv::ConvSpec;
 use cuconv::coordinator::decompose_batches;
+use cuconv::cpuref::CpuImpl;
 use cuconv::tensor::Tensor;
+use cuconv::util::json::Json;
 use cuconv::util::rng::Rng;
 use cuconv::util::stats::fmt_seconds;
 use cuconv::util::timer::{bench_fn, black_box, BenchOpts};
 
+fn io(spec: &ConvSpec, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    (input, filters)
+}
+
 fn main() {
     let opts = BenchOpts { warmup_iters: 2, iters: 12 };
 
-    // --- CPU backend, every supported algorithm, on Table-5 config A
-    //     (plan once outside the loop; execute is the timed hot path) ---
+    // --- CPU backend, every supported algorithm, on Table-5 config A:
+    //     a fresh workspace + allocated output per call ("alloc", the
+    //     seed behaviour) vs one reused workspace + output tensor
+    //     ("reuse", the serving hot path via execute_into) ---
     let spec = ConvSpec::from_table_label("7-1-5-128-48").unwrap();
-    let mut rng = Rng::new(1);
-    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
-    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let (input, filters) = io(&spec, 1);
     println!(
-        "cpuref backend on {} ({:.1} MFLOP):",
+        "cpuref backend on {} ({:.1} MFLOP), alloc-per-call vs workspace reuse:",
         spec.table_label(),
         spec.flops() as f64 / 1e6
     );
     let backend = CpuRefBackend::new();
     let desc = ConvDescriptor::new(spec).unwrap();
-    let mut ws = Workspace::new();
+    let [on, om, ooh, oow] = spec.output_shape();
+    let mut algo_rows = Vec::new();
     for algo in backend.supported_algorithms(&spec) {
         let plan = backend.plan(&desc, algo).unwrap();
-        let s = bench_fn(opts, || {
+        let alloc = bench_fn(opts, || {
+            let mut ws = Workspace::new();
             black_box(backend.execute(&plan, &input, &filters, &mut ws).unwrap());
         });
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(on, om, ooh, oow);
+        let reuse = bench_fn(opts, || {
+            backend.execute_into(&plan, &input, &filters, &mut ws, &mut out).unwrap();
+            black_box(out.data().first().copied());
+        });
+        let speedup = alloc.p50 / reuse.p50;
         println!(
-            "  {:22}  p50 {}  (min {}, p99 {})",
+            "  {:22}  alloc p50 {}  reuse p50 {}  ({speedup:.2}x)",
             algo.name(),
-            fmt_seconds(s.p50),
-            fmt_seconds(s.min),
-            fmt_seconds(s.p99)
+            fmt_seconds(alloc.p50),
+            fmt_seconds(reuse.p50),
         );
+        algo_rows.push(Json::obj(vec![
+            ("algo", Json::str(algo.name())),
+            ("alloc_p50_us", Json::num(alloc.p50 * 1e6)),
+            ("reuse_p50_us", Json::num(reuse.p50 * 1e6)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    // --- seed-style staged cuConv (allocating two-pass) vs the fused
+    //     workspace-reuse path, on every multi-tap profiled config ---
+    println!("\ncuconv staged(alloc) vs fused(workspace reuse):");
+    let mut cuconv_rows = Vec::new();
+    for label in ["14-1-3-64-64", "7-1-3-384-192", "7-1-5-128-48", "9-2-3-16-8"] {
+        let spec = ConvSpec::from_table_label(label).unwrap();
+        let (input, filters) = io(&spec, 2);
+        let staged = bench_fn(opts, || {
+            black_box(CpuImpl::CuConvTwoStage.run(&spec, &input, &filters));
+        });
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let plan = backend.plan(&desc, cuconv::algo::Algorithm::CuConv).unwrap();
+        let mut ws = Workspace::new();
+        let [n, m, oh, ow] = spec.output_shape();
+        let mut out = Tensor::zeros(n, m, oh, ow);
+        let fused = bench_fn(opts, || {
+            backend.execute_into(&plan, &input, &filters, &mut ws, &mut out).unwrap();
+            black_box(out.data().first().copied());
+        });
+        let speedup = staged.p50 / fused.p50;
+        println!(
+            "  {label:16}  staged p50 {}  fused p50 {}  ({speedup:.2}x)",
+            fmt_seconds(staged.p50),
+            fmt_seconds(fused.p50),
+        );
+        cuconv_rows.push(Json::obj(vec![
+            ("config", Json::str(label)),
+            ("staged_alloc_p50_us", Json::num(staged.p50 * 1e6)),
+            ("fused_reuse_p50_us", Json::num(fused.p50 * 1e6)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    // Machine-readable perf trajectory, at the repository root.
+    let report = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro")),
+        ("config", Json::str(spec.table_label())),
+        ("execute_alloc_vs_reuse", Json::arr(algo_rows)),
+        ("cuconv_staged_vs_fused", Json::arr(cuconv_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(path, report.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\n(could not write {path}: {e})"),
     }
 
     // --- serving-input staging ---

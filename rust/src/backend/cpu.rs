@@ -1,22 +1,33 @@
 //! [`CpuRefBackend`]: the pure-Rust substrate behind the [`Backend`]
 //! trait — always available, no artifacts or accelerator required.
 //!
-//! Wraps all six [`CpuImpl`] paths. Registry algorithms map onto the
-//! substrate by family: the three GEMM variants share the im2col path
-//! and the two FFT variants share the FFT path (the GPU-side distinction
-//! is staging strategy, which the CPU substrate implements once), while
-//! workspace accounting always follows the registry's GPU model. The
-//! sixth path — the clear-loop oracle — is exposed via
-//! [`CpuRefBackend::reference_plan`] for verification harnesses.
+//! Wraps the [`CpuImpl`] paths. Registry algorithms map onto the
+//! substrate by family: cuConv runs the fused single-pass kernel, the
+//! three GEMM variants share the im2col path and the two FFT variants
+//! share the FFT path (the GPU-side distinction is staging strategy,
+//! which the CPU substrate implements once). The clear-loop oracle is
+//! exposed via [`CpuRefBackend::reference_plan`] for verification
+//! harnesses.
+//!
+//! A plan's `workspace_bytes` is the substrate's **true** scratch
+//! footprint ([`CpuImpl::scratch_elems`]): the slice the caller
+//! reserves is exactly the slice the kernel runs in
+//! ([`CpuImpl::run_in`] carves it), no substrate allocates behind the
+//! caller's back, and `Workspace::high_water_bytes` is honest
+//! telemetry. The registry's GPU model (`Algorithm::workspace_bytes`)
+//! still governs availability and the 1 GB cap — and for the staged
+//! cuConv path the two figures coincide exactly (pinned by tests);
+//! the fused cuConv kernel eliminates the stage-1 temporary, so its
+//! plans request zero.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, Result};
 
-use crate::algo::Algorithm;
+use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::backend::plan::PlanImpl;
 use crate::backend::{Backend, ConvDescriptor, ConvPlan, Support, Workspace};
-use crate::conv::ConvSpec;
+use crate::conv::{ConvSpec, F32_BYTES};
 use crate::cpuref::CpuImpl;
 use crate::tensor::Tensor;
 
@@ -39,10 +50,13 @@ impl CpuRefBackend {
         self.plans.load(Ordering::Relaxed)
     }
 
-    /// The substrate path implementing `algo`'s family.
+    /// The substrate path implementing `algo`'s family. cuConv serves
+    /// the fused single-pass kernel; the staged two-pass mirror
+    /// ([`CpuImpl::CuConvTwoStage`]) stays a substrate-level path for
+    /// testing the decomposition.
     fn impl_for(algo: Algorithm) -> CpuImpl {
         match algo {
-            Algorithm::CuConv => CpuImpl::CuConvTwoStage,
+            Algorithm::CuConv => CpuImpl::CuConvFused,
             Algorithm::Direct => CpuImpl::Blocked,
             Algorithm::GemmExplicit
             | Algorithm::GemmImplicit
@@ -50,6 +64,16 @@ impl CpuRefBackend {
             Algorithm::Winograd | Algorithm::WinogradNonfused => CpuImpl::Winograd,
             Algorithm::Fft | Algorithm::FftTiled => CpuImpl::Fft,
         }
+    }
+
+    /// Workspace bytes a plan for (spec, algo) will request — the
+    /// substrate's true scratch footprint, which execute carves and the
+    /// kernel runs in. May differ from the registry's GPU accounting in
+    /// both directions: implicit GEMM is zero-workspace on the GPU but
+    /// runs the im2col path here, while fused cuConv eliminates the
+    /// stage-1 temporary the GPU algorithm stages.
+    fn plan_workspace_bytes(spec: &ConvSpec, algo: Algorithm) -> usize {
+        Self::impl_for(algo).scratch_elems(spec).saturating_mul(F32_BYTES)
     }
 
     /// A plan running the clear-loop oracle ([`CpuImpl::Naive`]) —
@@ -85,6 +109,11 @@ impl Backend for CpuRefBackend {
         if !Self::impl_for(algo).supports(spec) {
             return Support::Unsupported("no CPU substrate path for this shape");
         }
+        // The substrate's scratch is workspace-carved, so it is subject
+        // to the same 1 GB cap as the registry accounting.
+        if Self::plan_workspace_bytes(spec, algo) > WORKSPACE_CAP_BYTES {
+            return Support::Unsupported("workspace above the 1 GB cap");
+        }
         Support::Supported
     }
 
@@ -94,22 +123,35 @@ impl Backend for CpuRefBackend {
             bail!("cpuref cannot plan {algo} for {spec}: {reason}");
         }
         self.plans.fetch_add(1, Ordering::Relaxed);
-        Ok(ConvPlan::new(self.name(), *spec, algo, PlanImpl::CpuRef(Self::impl_for(algo))))
+        Ok(ConvPlan::new(self.name(), *spec, algo, PlanImpl::CpuRef(Self::impl_for(algo)))
+            .with_workspace_bytes(Self::plan_workspace_bytes(spec, algo)))
     }
 
-    fn execute(
+    fn execute_into(
         &self,
         plan: &ConvPlan,
         input: &Tensor,
         filters: &Tensor,
         workspace: &mut Workspace,
-    ) -> Result<Tensor> {
+        out: &mut Tensor,
+    ) -> Result<()> {
         let PlanImpl::CpuRef(imp) = &plan.inner else {
             bail!("plan from backend '{}' handed to cpuref", plan.backend_name());
         };
         plan.check_args(input, filters)?;
-        workspace.ensure_bytes(plan.workspace_bytes())?;
-        Ok(imp.run(&plan.spec, input, filters))
+        if out.shape() != plan.spec.output_shape() {
+            bail!(
+                "output shape {:?} does not match plan {:?} ({})",
+                out.shape(),
+                plan.spec.output_shape(),
+                plan.spec
+            );
+        }
+        // The workspace reservation IS the kernel's scratch: carve it
+        // and run in place — no allocation below this point.
+        let mut scratch = workspace.carve_bytes(plan.workspace_bytes())?;
+        imp.run_in(&plan.spec, input, filters, &mut scratch, out.data_mut());
+        Ok(())
     }
 }
 
@@ -188,6 +230,65 @@ mod tests {
             assert_eq!(CpuRefBackend::impl_for(a), CpuImpl::Im2colGemm);
             assert!(CpuRefBackend::new().capabilities(&spec, a).is_supported());
         }
+    }
+
+    #[test]
+    fn cuconv_plans_the_fused_zero_workspace_path() {
+        let spec = ConvSpec::paper(9, 1, 3, 4, 3);
+        assert_eq!(CpuRefBackend::impl_for(Algorithm::CuConv), CpuImpl::CuConvFused);
+        let backend = CpuRefBackend::new();
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let plan = backend.plan(&desc, Algorithm::CuConv).unwrap();
+        // The fused kernel eliminates the stage-1 temporary: the plan
+        // requests nothing, while the descriptor still reports the GPU
+        // algorithm's registry accounting for deployment decisions.
+        assert_eq!(plan.workspace_bytes(), 0);
+        assert_eq!(desc.workspace_bytes(Algorithm::CuConv), spec.cuconv_temp_bytes());
+        // The staged substrate's footprint IS the registry figure
+        // (the accounting contract, exact).
+        assert_eq!(
+            CpuImpl::CuConvTwoStage.scratch_elems(&spec) * 4,
+            spec.cuconv_temp_bytes()
+        );
+    }
+
+    #[test]
+    fn implicit_gemm_accounting_is_raised_to_substrate_need() {
+        // Registry says implicit GEMM needs no workspace (GPU on-the-fly
+        // transform); the CPU substrate runs im2col, whose scratch is
+        // workspace-carved — the plan must request the larger figure.
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        assert_eq!(Algorithm::GemmImplicit.workspace_bytes(&spec), 0);
+        let backend = CpuRefBackend::new();
+        let plan =
+            backend.plan(&ConvDescriptor::new(spec).unwrap(), Algorithm::GemmImplicit).unwrap();
+        let need = CpuImpl::Im2colGemm.scratch_elems(&spec) * 4;
+        assert_eq!(plan.workspace_bytes(), need);
+        // And execute actually fits in exactly that reservation.
+        let (input, filters) = io(&spec, 0xBEEF);
+        let mut ws = Workspace::new();
+        backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+        assert_eq!(ws.high_water_bytes(), need);
+    }
+
+    #[test]
+    fn execute_into_reuses_the_output_tensor() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(6, 2, 3, 3, 2);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 4);
+        let want = conv_naive(&spec, &input, &filters);
+        let plan = backend.plan(&desc, Algorithm::CuConv).unwrap();
+        let mut ws = Workspace::new();
+        let [n, m, oh, ow] = spec.output_shape();
+        let mut out = Tensor::full(n, m, oh, ow, f32::NAN); // dirty reuse
+        for _ in 0..3 {
+            backend.execute_into(&plan, &input, &filters, &mut ws, &mut out).unwrap();
+            assert!(out.rel_l2_error(&want) < 2e-5);
+        }
+        // A wrong-shaped output tensor is refused.
+        let mut bad = Tensor::zeros(n, m, oh, ow + 1);
+        assert!(backend.execute_into(&plan, &input, &filters, &mut ws, &mut bad).is_err());
     }
 
     #[test]

@@ -31,9 +31,11 @@ pub fn algo_get(backend: &dyn Backend, desc: &ConvDescriptor) -> Result<Algorith
 /// Exhaustive, timed algorithm search (the `cudnnFind` analogue): plan
 /// and execute every algorithm the backend supports on random data,
 /// `iters` measured runs each (plus one warmup), and rank by median
-/// wall-clock. Workspace is reused across candidates, as a serving
-/// system would. Algorithms whose plan or warmup execution fails are
-/// skipped rather than failing the whole search.
+/// wall-clock. Workspace and output tensor are reused across runs via
+/// [`Backend::execute_into`], as a serving system would — the timed
+/// loop measures the allocation-free steady state, not allocator noise.
+/// Algorithms whose plan or warmup execution fails are skipped rather
+/// than failing the whole search.
 pub fn algo_find(
     backend: &dyn Backend,
     desc: &ConvDescriptor,
@@ -44,11 +46,13 @@ pub fn algo_find(
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
     let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
     let mut workspace = Workspace::new();
+    let [on, om, ooh, oow] = spec.output_shape();
+    let mut out = Tensor::zeros(on, om, ooh, oow);
 
     let mut entries = Vec::new();
     for algo in backend.supported_algorithms(&spec) {
         let Ok(plan) = backend.plan(desc, algo) else { continue };
-        if backend.execute(&plan, &input, &filters, &mut workspace).is_err() {
+        if backend.execute_into(&plan, &input, &filters, &mut workspace, &mut out).is_err() {
             continue;
         }
         let opts = BenchOpts { warmup_iters: 0, iters: iters.max(1) };
@@ -57,9 +61,9 @@ pub fn algo_find(
         // the ranking as a near-zero no-op.
         let mut failed = false;
         let summary = bench_fn(opts, || {
-            match backend.execute(&plan, &input, &filters, &mut workspace) {
-                Ok(out) => {
-                    black_box(out);
+            match backend.execute_into(&plan, &input, &filters, &mut workspace, &mut out) {
+                Ok(()) => {
+                    black_box(out.data().first().copied());
                 }
                 Err(_) => failed = true,
             }
@@ -133,13 +137,14 @@ mod tests {
         fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan> {
             Ok(ConvPlan::new_opaque(self.name(), *desc.spec(), algo, "slot"))
         }
-        fn execute(
+        fn execute_into(
             &self,
             _: &ConvPlan,
             _: &Tensor,
             _: &Tensor,
             _: &mut Workspace,
-        ) -> Result<Tensor> {
+            _: &mut Tensor,
+        ) -> Result<()> {
             anyhow::bail!("broken on purpose")
         }
     }

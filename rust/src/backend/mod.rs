@@ -17,7 +17,11 @@
 //!    artifact lookup, PJRT compilation) happens here, not per request.
 //! 4. [`Backend::execute`] many times, reusing the [`ConvPlan`] and a
 //!    caller-owned [`Workspace`] across requests. The workspace enforces
-//!    the paper's 1 GB cap (§4).
+//!    the paper's 1 GB cap (§4) and is carved into the kernel's scratch
+//!    regions at execute time; [`Backend::execute_into`] additionally
+//!    reuses a caller-owned output tensor, making the steady-state
+//!    request path allocation-free (see DESIGN.md §"Workspace
+//!    ownership").
 //!
 //! Two backends ship in-tree: [`CpuRefBackend`] (the pure-Rust substrate,
 //! always available) and [`PjrtBackend`] (AOT Pallas artifacts through
@@ -107,16 +111,37 @@ pub trait Backend: Send {
     /// many [`Backend::execute`] calls without repeating that work.
     fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan>;
 
-    /// Run one convolution with a previously created plan. `workspace`
-    /// is caller-owned and reused across requests; the backend sizes it
-    /// to the plan's requirement (enforcing the 1 GB cap).
+    /// Run one convolution with a previously created plan, writing into
+    /// a caller-owned output tensor of the plan's output shape (fully
+    /// overwritten). `workspace` is caller-owned and reused across
+    /// requests; the backend sizes it to the plan's requirement
+    /// (enforcing the 1 GB cap) and carves the kernel's scratch from it.
+    /// With a reused `out` and `workspace`, steady-state execution on
+    /// the CPU backend allocates no buffers — the serving hot path.
+    /// (Device-backed backends may still stage host copies internally.)
+    fn execute_into(
+        &self,
+        plan: &ConvPlan,
+        input: &Tensor,
+        filters: &Tensor,
+        workspace: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()>;
+
+    /// As [`Backend::execute_into`], allocating a fresh output tensor —
+    /// the convenience form for one-shot callers and tests.
     fn execute(
         &self,
         plan: &ConvPlan,
         input: &Tensor,
         filters: &Tensor,
         workspace: &mut Workspace,
-    ) -> Result<Tensor>;
+    ) -> Result<Tensor> {
+        let [n, m, oh, ow] = plan.spec().output_shape();
+        let mut out = Tensor::zeros(n, m, oh, ow);
+        self.execute_into(plan, input, filters, workspace, &mut out)?;
+        Ok(out)
+    }
 
     /// Registry algorithms this backend supports for `spec`, in the
     /// registry's canonical order (cuConv first).

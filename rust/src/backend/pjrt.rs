@@ -107,6 +107,33 @@ impl Backend for PjrtBackend {
         Ok(ConvPlan::new(self.name(), *spec, algo, PlanImpl::Pjrt { artifact: name }))
     }
 
+    fn execute_into(
+        &self,
+        plan: &ConvPlan,
+        input: &Tensor,
+        filters: &Tensor,
+        workspace: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        // Validate the target before paying for a device execution.
+        if out.shape() != plan.spec().output_shape() {
+            bail!(
+                "output shape {:?} does not match plan {:?} ({})",
+                out.shape(),
+                plan.spec().output_shape(),
+                plan.spec()
+            );
+        }
+        // The PJRT path still stages host copies (input/filter clones
+        // into the executor, a fresh device-result tensor, and the copy
+        // below) — only the CPU backend achieves the buffer-free steady
+        // state. This override exists so `execute_into` call sites work
+        // uniformly across backends, not as a perf path.
+        let got = self.execute(plan, input, filters, workspace)?;
+        out.data_mut().copy_from_slice(got.data());
+        Ok(())
+    }
+
     fn execute(
         &self,
         plan: &ConvPlan,

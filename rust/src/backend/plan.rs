@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::conv::{ConvSpec, F32_BYTES};
-use crate::cpuref::CpuImpl;
+use crate::cpuref::{CpuImpl, Scratch};
 
 /// Backend-specific payload of a plan. In-tree backends get first-class
 /// variants; external backends carry a lookup key in [`PlanImpl::Opaque`].
@@ -42,6 +42,16 @@ impl ConvPlan {
         inner: PlanImpl,
     ) -> ConvPlan {
         ConvPlan { backend, spec, algo, workspace_bytes: algo.workspace_bytes(&spec), inner }
+    }
+
+    /// Override the workspace requirement stamped on this plan. Backends
+    /// whose execution substrate needs more scratch than the registry's
+    /// GPU accounting (e.g. the CPU im2col path behind the
+    /// implicit-GEMM algorithms) raise the figure here so
+    /// [`Workspace::carve_bytes`] hands the kernel everything it carves.
+    pub(crate) fn with_workspace_bytes(mut self, bytes: usize) -> ConvPlan {
+        self.workspace_bytes = bytes;
+        self
     }
 
     /// Build a plan for a backend implemented outside this crate; `key`
@@ -115,10 +125,13 @@ impl ConvPlan {
 ///
 /// Grows on demand, never shrinks, and refuses any single request above
 /// the paper's 1 GB cap (§4) — planning against a capped algorithm fails
-/// before execution ever allocates. The CPU substrate implementations
-/// currently stage their temporaries internally; the workspace still
-/// models cuDNN's accounting (cap enforcement + high-water telemetry) so
-/// call sites are written against the production contract.
+/// before execution ever allocates. This buffer is the **only** scratch
+/// memory the CPU substrate kernels touch: `Backend::execute` carves it
+/// into named regions ([`Workspace::carve_bytes`] →
+/// [`Scratch`](crate::cpuref::Scratch)) and hands them to the kernel, so
+/// steady-state serving does no per-request scratch allocation and
+/// [`Workspace::high_water_bytes`] is true telemetry of kernel
+/// temporaries.
 #[derive(Debug, Default)]
 pub struct Workspace {
     buf: Vec<f32>,
@@ -145,6 +158,14 @@ impl Workspace {
         }
         self.high_water_bytes = self.high_water_bytes.max(bytes);
         Ok(&mut self.buf[..elems])
+    }
+
+    /// Reserve `bytes` (growing if needed, cap-checked) and return a
+    /// [`Scratch`] carver over the reservation, for splitting into the
+    /// named per-kernel regions. The carve-out borrows the workspace:
+    /// regions are valid for the duration of one execute.
+    pub fn carve_bytes(&mut self, bytes: usize) -> Result<Scratch<'_>> {
+        Ok(Scratch::new(self.ensure_bytes(bytes)?))
     }
 
     /// Currently allocated capacity in bytes.
@@ -186,6 +207,26 @@ mod tests {
         assert!(ws.ensure_bytes(WORKSPACE_CAP_BYTES + 1).is_err());
         // The failed request must not poison the buffer.
         assert!(ws.ensure_bytes(8).is_ok());
+    }
+
+    #[test]
+    fn carve_bytes_hands_out_the_reservation() {
+        let mut ws = Workspace::new();
+        {
+            let mut scratch = ws.carve_bytes(40).unwrap();
+            let a = scratch.take("a", 6);
+            let b = scratch.take("b", 4);
+            a.fill(1.0);
+            b.fill(2.0);
+            assert_eq!(scratch.remaining(), 0);
+        }
+        assert_eq!(ws.high_water_bytes(), 40);
+        // The next carve sees the same backing buffer (dirty reuse).
+        let mut scratch = ws.carve_bytes(8).unwrap();
+        let a = scratch.take("a", 2);
+        assert_eq!(a, &[1.0, 1.0]);
+        // And the cap still applies.
+        assert!(ws.carve_bytes(WORKSPACE_CAP_BYTES + 1).is_err());
     }
 
     #[test]

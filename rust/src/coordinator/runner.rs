@@ -53,14 +53,18 @@ pub trait BatchRunner: Send {
 /// The layer's filters are fixed at construction (seeded), **one**
 /// algorithm is chosen for all batch sizes (so identical pixels produce
 /// identical outputs regardless of how the batcher groups requests),
-/// one plan per executable batch size is created up front, and a single
-/// [`Workspace`] is reused across every request — the descriptor →
-/// plan → execute lifecycle in its serving configuration.
+/// one plan **and one output tensor** per executable batch size are
+/// created up front, and a single [`Workspace`] is reused across every
+/// request — with [`Backend::execute_into`] the steady-state request
+/// path performs no convolution-side buffer allocation (the only
+/// per-request buffer is the response vector handed to the router).
 pub struct ConvBackendRunner {
     backend: Box<dyn Backend>,
     spec: ConvSpec,
     filters: Tensor,
     plans: HashMap<usize, ConvPlan>,
+    /// Reused per-batch-size output tensors (`execute_into` targets).
+    outputs: HashMap<usize, Tensor>,
     workspace: Workspace,
     sizes: Vec<usize>,
 }
@@ -111,15 +115,20 @@ impl ConvBackendRunner {
         let filters =
             Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
         let mut plans = HashMap::new();
+        let mut outputs = HashMap::new();
         for &b in &sizes {
-            let desc = ConvDescriptor::new(spec.with_batch(b))?;
+            let bspec = spec.with_batch(b);
+            let desc = ConvDescriptor::new(bspec)?;
             plans.insert(b, backend.plan(&desc, chosen)?);
+            let [n, m, oh, ow] = bspec.output_shape();
+            outputs.insert(b, Tensor::zeros(n, m, oh, ow));
         }
         Ok(ConvBackendRunner {
             backend,
             spec,
             filters,
             plans,
+            outputs,
             workspace: Workspace::new(),
             sizes,
         })
@@ -155,15 +164,22 @@ impl BatchRunner for ConvBackendRunner {
             .plans
             .get(&batch)
             .ok_or_else(|| anyhow!("no plan for batch size {batch}"))?;
+        let out = self
+            .outputs
+            .get_mut(&batch)
+            .ok_or_else(|| anyhow!("no output tensor for batch size {batch}"))?;
         let spec = self.spec.with_batch(batch);
         if input.len() != spec.input_elems() {
             bail!("batch input has {} elems, expected {}", input.len(), spec.input_elems());
         }
         let x = Tensor::from_vec(batch, spec.c, spec.h, spec.w, input);
         let started = Instant::now();
-        let out = self.backend.execute(plan, &x, &self.filters, &mut self.workspace)?;
+        // Plan, workspace and output tensor are all reused: the conv
+        // allocates no buffers; only the response vector below is
+        // per-request (it leaves this runner with the batch).
+        self.backend.execute_into(plan, &x, &self.filters, &mut self.workspace, out)?;
         Ok(BatchOutput {
-            data: out.into_vec(),
+            data: out.data().to_vec(),
             exec_seconds: started.elapsed().as_secs_f64(),
         })
     }
@@ -339,6 +355,24 @@ mod tests {
             algos.windows(2).all(|w| w[0] == w[1]),
             "algorithm varies across batch sizes: {algos:?}"
         );
+    }
+
+    #[test]
+    fn conv_runner_is_deterministic_across_reused_buffers() {
+        // The output tensor and workspace are reused across requests;
+        // identical inputs must produce identical responses regardless.
+        let spec = ConvSpec::paper(6, 1, 3, 3, 2);
+        let mut r = runner(spec);
+        let mut rng = Rng::new(17);
+        let mut a = vec![0.0f32; 2 * r.item_in_elems()];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        let mut b = vec![0.0f32; 4 * r.item_in_elems()];
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let first = r.run(2, a.clone()).unwrap();
+        // Interleave another batch size to dirty the shared buffers.
+        r.run(4, b).unwrap();
+        let again = r.run(2, a).unwrap();
+        assert_eq!(first.data, again.data);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! inner loop by splitting the X range, and parallelize over (n, m).
 
 use crate::conv::ConvSpec;
-use crate::cpuref::check_shapes;
-use crate::cpuref::gemm::default_threads;
+use crate::cpuref::gemm::{default_threads, par_chunks};
+use crate::cpuref::{check_shapes, ox_range};
 use crate::tensor::Tensor;
 
 /// Direct convolution, optimized. Equivalent to
@@ -24,46 +24,33 @@ pub fn conv_blocked_with_threads(
     filters: &Tensor,
     threads: usize,
 ) -> Tensor {
+    let [n, m, oh, ow] = spec.output_shape();
+    let mut out = Tensor::zeros(n, m, oh, ow);
+    conv_blocked_into(spec, input, filters, threads, out.data_mut());
+    out
+}
+
+/// As [`conv_blocked`], writing into a caller-provided output slice of
+/// `spec.output_elems()` f32s (fully overwritten; no allocation).
+pub fn conv_blocked_into(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    threads: usize,
+    out: &mut [f32],
+) {
     check_shapes(spec, input, filters);
     let (oh, ow) = (spec.out_h(), spec.out_w());
-    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
     let plane = oh * ow;
     let planes = spec.n * spec.m;
-    let threads = threads.max(1).min(planes.max(1));
-
-    if threads == 1 {
-        let out_data = out.data_mut();
-        for p in 0..planes {
+    par_chunks(out, plane, planes, threads, |start, band| {
+        for (off, out_plane) in band.chunks_mut(plane).enumerate() {
+            let p = start + off;
             let (n, m) = (p / spec.m, p % spec.m);
-            conv_plane(spec, input, filters, n, m, &mut out_data[p * plane..(p + 1) * plane]);
-        }
-        return out;
-    }
-
-    // Chunk output planes across threads; each chunk is a disjoint slice.
-    let per = planes.div_ceil(threads);
-    let mut chunks: Vec<(usize, &mut [f32])> = Vec::new();
-    let mut rest = out.data_mut();
-    let mut idx = 0;
-    while idx < planes {
-        let take = per.min(planes - idx);
-        let (head, tail) = rest.split_at_mut(take * plane);
-        chunks.push((idx, head));
-        rest = tail;
-        idx += take;
-    }
-    std::thread::scope(|s| {
-        for (start, chunk) in chunks {
-            s.spawn(move || {
-                for (off, out_plane) in chunk.chunks_mut(plane).enumerate() {
-                    let p = start + off;
-                    let (n, m) = (p / spec.m, p % spec.m);
-                    conv_plane(spec, input, filters, n, m, out_plane);
-                }
-            });
+            conv_plane(spec, input, filters, n, m, out_plane);
         }
     });
-    out
 }
 
 /// Compute one output plane (fixed n, m) into `out_plane` (len OH·OW).
@@ -96,19 +83,9 @@ fn conv_plane(
                     }
                     let in_row = in_base + iy as usize * spec.w;
                     let out_row = oy * ow;
-                    // Valid ox range for this kx: pad_w <= ox*s + kx < w + pad_w.
-                    // Solve ox bounds once, then run a branch-free inner loop.
-                    let lo_num = spec.pad_w as isize - kx as isize;
-                    let ox_lo = if lo_num <= 0 {
-                        0
-                    } else {
-                        (lo_num as usize).div_ceil(spec.stride)
-                    };
-                    let hi_num = spec.w as isize + spec.pad_w as isize - kx as isize;
-                    if hi_num <= 0 {
-                        continue;
-                    }
-                    let ox_hi = (((hi_num - 1) as usize) / spec.stride + 1).min(ow);
+                    // Solve the valid ox bounds once (the padding test
+                    // hoisted out), then run a branch-free inner loop.
+                    let (ox_lo, ox_hi) = ox_range(spec, kx);
                     if ox_lo >= ox_hi {
                         continue;
                     }

@@ -1,100 +1,282 @@
-//! CPU mirror of the paper's two-stage cuConv algorithm (§3).
+//! CPU mirror of the paper's two-stage cuConv algorithm (§3), in two
+//! forms:
 //!
-//! Stage 1 (`scalar_prods`): for every filter tap (ky,kx) — a "filter
-//! row" in the paper's terminology, the depth-C vector at a fixed filter
-//! position — compute its dot product with the input row at every output
-//! position, for every (input n, filter m) pair. The result is the
-//! paper's set of `Kh·Kw·N·M` temporary matrices of size `OH×OW`.
+//! **Staged** ([`conv_two_stage_in`]): the literal decomposition.
+//! Stage 1 ([`scalar_prods_into`]): for every filter tap (ky,kx) — a
+//! "filter row" in the paper's terminology, the depth-C vector at a
+//! fixed filter position — compute its dot product with the input row at
+//! every output position, for every (input n, filter m) pair, yielding
+//! the paper's `Kh·Kw` partial planes of `[N, M, OH, OW]`. Stage 2
+//! ([`sum_taps_into`]): sum the per-tap planes into the output. For 1×1
+//! filters stage 2 is skipped: stage 1 writes final outputs directly,
+//! exactly as the paper's `scalar_prods_kernel` does. The stage-1
+//! temporary is carved from the caller's workspace — its size is exactly
+//! the registry's `cuconv_temp_bytes` accounting.
 //!
-//! Stage 2 (`sum_taps`): sum the `Kh·Kw` temporaries of each (n,m) pair
-//! into the final output plane.
+//! **Fused** ([`conv_fused_into`]): the serving hot path. The same
+//! per-tap "filter row × input row" scalar products, but accumulated
+//! straight into the output plane row-by-row instead of staged through
+//! the `Kh·Kw` temporaries: for each output row, each tap contributes a
+//! contiguous input-row slice scaled by its filter value (the CPU analog
+//! of the coalesced accesses §3 engineers on the GPU). Padding tests are
+//! hoisted out of the inner loop by X-range splitting and the `(n, m)`
+//! output planes run in parallel on the scoped-thread band splitter.
+//! Zero scratch, zero allocation.
 //!
-//! For 1×1 filters stage 2 is skipped: stage 1 writes final outputs
-//! directly, exactly as the paper's `scalar_prods_kernel` does.
-//!
-//! This mirror exists so the decomposition itself is testable in Rust
-//! (shape algebra, tap indexing, the 1×1 fast path) independent of the
-//! Pallas kernels, and to serve as a CPU baseline of the same algorithm.
+//! The staged form exists so the decomposition itself stays testable in
+//! Rust (shape algebra, tap indexing, the 1×1 fast path) independent of
+//! the Pallas kernels; the fused form is what
+//! [`CpuRefBackend`](crate::backend::CpuRefBackend) serves.
 
 use crate::conv::ConvSpec;
-use crate::cpuref::check_shapes;
+use crate::cpuref::gemm::{default_threads, par_chunks};
+use crate::cpuref::{check_shapes, ox_range, Scratch};
 use crate::tensor::Tensor;
 
-/// Stage-1 output: `Kh·Kw` partial planes, each `[N, M, OH, OW]`,
-/// flattened tap-major to match the Pallas kernel's temp layout.
-pub struct ScalarProds {
-    pub taps: usize,
-    pub plane_elems: usize,
-    pub data: Vec<f32>,
+/// Accumulate one tap's "filter row × input row" scalar products into
+/// `dst`, the row slice covering output columns `[ox_lo, ox_hi)`: for
+/// every channel, `dst[i] += f[c] · input(iy, ox·stride + kx − pad_w)`.
+/// The single home of the tap-row bounds math, shared by the staged
+/// stage-1 kernel and the fused kernel so the two paths cannot drift.
+///
+/// `in_row` is the flat offset of `(n, c=0, iy, x=0)`; `f_tap` the flat
+/// offset of `(m, c=0, ky, kx)`. Caller guarantees `iy` is in range and
+/// `ox_lo < ox_hi` (from [`ox_range`]).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accumulate_tap_row(
+    spec: &ConvSpec,
+    in_data: &[f32],
+    f_data: &[f32],
+    in_row: usize,
+    f_tap: usize,
+    kx: usize,
+    ox_lo: usize,
+    ox_hi: usize,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(dst.len(), ox_hi - ox_lo);
+    let chan = spec.h * spec.w;
+    let f_chan = spec.kh * spec.kw;
+    if spec.stride == 1 {
+        // ix = ox + kx - pad_w: one contiguous input-row slice per
+        // (tap, channel) — the coalescing analog, vectorizable.
+        let ix0 = ox_lo + kx - spec.pad_w;
+        let len = ox_hi - ox_lo;
+        for c in 0..spec.c {
+            let fv = f_data[f_tap + c * f_chan];
+            if fv == 0.0 {
+                continue;
+            }
+            let base = in_row + c * chan + ix0;
+            let src = &in_data[base..base + len];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += fv * s;
+            }
+        }
+    } else {
+        for c in 0..spec.c {
+            let fv = f_data[f_tap + c * f_chan];
+            if fv == 0.0 {
+                continue;
+            }
+            let base = in_row + c * chan;
+            for (i, ox) in (ox_lo..ox_hi).enumerate() {
+                dst[i] += fv * in_data[base + ox * spec.stride + kx - spec.pad_w];
+            }
+        }
+    }
 }
 
-/// Stage 1: per-tap channel contraction.
-pub fn scalar_prods(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> ScalarProds {
+/// Stage 1 into a caller-provided buffer of `Kh·Kw · N·M·OH·OW` f32s,
+/// laid out tap-major to match the Pallas kernel's temp layout. The
+/// buffer is fully overwritten (padding positions are zeroed).
+///
+/// For 1×1 filters the single tap plane *is* the output, so callers may
+/// pass the output buffer itself.
+pub fn scalar_prods_into(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    planes: &mut [f32],
+) {
     check_shapes(spec, input, filters);
     let (oh, ow) = (spec.out_h(), spec.out_w());
-    let taps = spec.kh * spec.kw;
     let plane_elems = spec.n * spec.m * oh * ow;
-    let mut data = vec![0.0f32; taps * plane_elems];
+    let taps = spec.kh * spec.kw;
+    assert_eq!(planes.len(), taps * plane_elems, "stage-1 buffer mismatch for {spec}");
+    planes.fill(0.0);
+    let in_data = input.data();
+    let f_data = filters.data();
     for ky in 0..spec.kh {
         for kx in 0..spec.kw {
             let tap = ky * spec.kw + kx;
-            let plane = &mut data[tap * plane_elems..(tap + 1) * plane_elems];
+            // Padding hoisted: outside [ox_lo, ox_hi) this tap reads
+            // padding, and the plane is already zeroed.
+            let (ox_lo, ox_hi) = ox_range(spec, kx);
+            if ox_lo >= ox_hi {
+                continue;
+            }
+            let plane = &mut planes[tap * plane_elems..(tap + 1) * plane_elems];
             for n in 0..spec.n {
+                let in_n = input.offset(n, 0, 0, 0);
                 for m in 0..spec.m {
+                    let f_tap = filters.offset(m, 0, ky, kx);
+                    let p_base = (n * spec.m + m) * oh * ow;
                     for oy in 0..oh {
                         let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
-                        for ox in 0..ow {
-                            let ix =
-                                (ox * spec.stride + kx) as isize - spec.pad_w as isize;
-                            let mut acc = 0.0f32;
-                            if iy >= 0
-                                && iy < spec.h as isize
-                                && ix >= 0
-                                && ix < spec.w as isize
-                            {
-                                // The channel dot product: this is the
-                                // "filter row × input row" scalar product
-                                // the paper's first kernel performs.
-                                for c in 0..spec.c {
-                                    acc += input.at(n, c, iy as usize, ix as usize)
-                                        * filters.at(m, c, ky, kx);
-                                }
-                            }
-                            plane[((n * spec.m + m) * oh + oy) * ow + ox] = acc;
+                        if iy < 0 || iy >= spec.h as isize {
+                            continue; // whole row is padding: stays zero
                         }
+                        let in_row = in_n + iy as usize * spec.w;
+                        let dst =
+                            &mut plane[p_base + oy * ow + ox_lo..p_base + oy * ow + ox_hi];
+                        accumulate_tap_row(
+                            spec, in_data, f_data, in_row, f_tap, kx, ox_lo, ox_hi, dst,
+                        );
                     }
                 }
             }
         }
     }
-    ScalarProds { taps, plane_elems, data }
 }
 
-/// Stage 2: sum the per-tap partial planes into the output tensor.
-pub fn sum_taps(spec: &ConvSpec, prods: &ScalarProds) -> Tensor {
-    let (oh, ow) = (spec.out_h(), spec.out_w());
-    assert_eq!(prods.plane_elems, spec.n * spec.m * oh * ow);
-    let mut out = vec![0.0f32; prods.plane_elems];
-    for tap in 0..prods.taps {
-        let plane = &prods.data[tap * prods.plane_elems..(tap + 1) * prods.plane_elems];
+/// Stage 2: sum the per-tap partial planes (tap-major, as written by
+/// [`scalar_prods_into`]) into `out` (len `N·M·OH·OW`, fully
+/// overwritten).
+pub fn sum_taps_into(spec: &ConvSpec, planes: &[f32], out: &mut [f32]) {
+    let plane_elems = spec.output_elems();
+    assert_eq!(out.len(), plane_elems, "output slice mismatch for {spec}");
+    let taps = spec.kh * spec.kw;
+    assert_eq!(planes.len(), taps * plane_elems, "stage-1 buffer mismatch for {spec}");
+    out.copy_from_slice(&planes[..plane_elems]);
+    for tap in 1..taps {
+        let plane = &planes[tap * plane_elems..(tap + 1) * plane_elems];
         for (o, p) in out.iter_mut().zip(plane.iter()) {
             *o += p;
         }
     }
-    Tensor::from_vec(spec.n, spec.m, oh, ow, out)
 }
 
-/// The full two-stage algorithm with the paper's 1×1 fast path.
-pub fn conv_two_stage(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
-    let prods = scalar_prods(spec, input, filters);
+/// The staged two-pass algorithm with the paper's 1×1 fast path, carving
+/// the stage-1 temporary from `scratch`
+/// ([`CpuImpl::CuConvTwoStage`](crate::cpuref::CpuImpl)'s
+/// `scratch_elems`; zero for 1×1).
+pub fn conv_two_stage_in(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    scratch: &mut Scratch<'_>,
+    out: &mut [f32],
+) {
     if spec.kh == 1 && spec.kw == 1 {
         // §3: "For convolutions which involve filters of size 1×1, the
         // second kernel is not necessary" — the single tap plane IS the
-        // output.
-        let (oh, ow) = (spec.out_h(), spec.out_w());
-        Tensor::from_vec(spec.n, spec.m, oh, ow, prods.data)
+        // output; stage 1 writes it directly, no temporary.
+        scalar_prods_into(spec, input, filters, out);
     } else {
-        sum_taps(spec, &prods)
+        let taps = spec.kh * spec.kw;
+        let tmp = scratch.take("cuconv.taps", taps * spec.output_elems());
+        scalar_prods_into(spec, input, filters, tmp);
+        sum_taps_into(spec, tmp, out);
+    }
+}
+
+/// Allocating convenience wrapper around [`conv_two_stage_in`] — the
+/// seed-style staged execution (fresh temporary per call), kept as the
+/// baseline the fused path is benchmarked against.
+pub fn conv_two_stage(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    crate::cpuref::CpuImpl::CuConvTwoStage.run(spec, input, filters)
+}
+
+/// Fused cuConv with the default thread count.
+pub fn conv_fused(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    conv_fused_with_threads(spec, input, filters, default_threads())
+}
+
+/// As [`conv_fused`] with an explicit thread count (1 = no spawning).
+pub fn conv_fused_with_threads(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    threads: usize,
+) -> Tensor {
+    let [n, m, oh, ow] = spec.output_shape();
+    let mut out = Tensor::zeros(n, m, oh, ow);
+    conv_fused_into(spec, input, filters, threads, out.data_mut());
+    out
+}
+
+/// Fused single-pass cuConv into a caller-provided output slice of
+/// `spec.output_elems()` f32s (fully overwritten): both stages of the
+/// paper's algorithm in one pass, parallel over `(n, m)` output planes,
+/// no scratch, no allocation.
+pub fn conv_fused_into(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    threads: usize,
+    out: &mut [f32],
+) {
+    check_shapes(spec, input, filters);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
+    let plane = oh * ow;
+    let planes = spec.n * spec.m;
+    par_chunks(out, plane, planes, threads, |start, band| {
+        for (off, out_plane) in band.chunks_mut(plane).enumerate() {
+            let p = start + off;
+            conv_plane_fused(spec, input, filters, p / spec.m, p % spec.m, out_plane);
+        }
+    });
+}
+
+/// One fused output plane (fixed n, m): for each output row, every tap's
+/// "filter row × input row" scalar products are accumulated directly
+/// into the row — tap-major, channel-minor, exactly the staged
+/// algorithm's summation order with the `Kh·Kw` temporaries eliminated.
+fn conv_plane_fused(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    n: usize,
+    m: usize,
+    out_plane: &mut [f32],
+) {
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    debug_assert_eq!(out_plane.len(), oh * ow);
+    out_plane.fill(0.0);
+    let in_data = input.data();
+    let f_data = filters.data();
+    let in_n = input.offset(n, 0, 0, 0);
+    let f_m = filters.offset(m, 0, 0, 0);
+    for oy in 0..oh {
+        let out_row = &mut out_plane[oy * ow..(oy + 1) * ow];
+        for ky in 0..spec.kh {
+            let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
+            if iy < 0 || iy >= spec.h as isize {
+                continue; // this tap row reads padding only
+            }
+            let in_row = in_n + iy as usize * spec.w;
+            for kx in 0..spec.kw {
+                let (ox_lo, ox_hi) = ox_range(spec, kx);
+                if ox_lo >= ox_hi {
+                    continue;
+                }
+                let f_tap = f_m + ky * spec.kw + kx;
+                accumulate_tap_row(
+                    spec,
+                    in_data,
+                    f_data,
+                    in_row,
+                    f_tap,
+                    kx,
+                    ox_lo,
+                    ox_hi,
+                    &mut out_row[ox_lo..ox_hi],
+                );
+            }
+        }
     }
 }
 
@@ -104,24 +286,32 @@ mod tests {
     use crate::cpuref::naive::conv_naive;
     use crate::util::rng::Rng;
 
+    fn io(spec: &ConvSpec, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+        let filters =
+            Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        (input, filters)
+    }
+
     #[test]
     fn stage1_produces_khkw_planes() {
         let spec = ConvSpec::paper(5, 1, 3, 2, 4);
-        let mut rng = Rng::new(1);
-        let input = Tensor::random(1, 4, 5, 5, &mut rng, -1.0, 1.0);
-        let filters = Tensor::random(2, 4, 3, 3, &mut rng, -1.0, 1.0);
-        let prods = scalar_prods(&spec, &input, &filters);
-        assert_eq!(prods.taps, 9);
-        assert_eq!(prods.plane_elems, 1 * 2 * 5 * 5);
-        assert_eq!(prods.data.len(), 9 * 50);
+        let (input, filters) = io(&spec, 1);
+        let plane_elems = spec.output_elems();
+        let mut planes = vec![f32::NAN; 9 * plane_elems];
+        scalar_prods_into(&spec, &input, &filters, &mut planes);
+        assert_eq!(plane_elems, 2 * 5 * 5);
+        // Fully overwritten, padding included: no NaN survives.
+        assert!(planes.iter().all(|v| v.is_finite()));
+        // The corner tap (ky=0,kx=0) at output (0,0) reads pure padding.
+        assert_eq!(planes[0], 0.0);
     }
 
     #[test]
     fn two_stage_matches_oracle_3x3() {
         let spec = ConvSpec::paper(8, 2, 3, 3, 5);
-        let mut rng = Rng::new(2);
-        let input = Tensor::random(2, 5, 8, 8, &mut rng, -1.0, 1.0);
-        let filters = Tensor::random(3, 5, 3, 3, &mut rng, -1.0, 1.0);
+        let (input, filters) = io(&spec, 2);
         let got = conv_two_stage(&spec, &input, &filters);
         let want = conv_naive(&spec, &input, &filters);
         assert!(got.rel_l2_error(&want) < 1e-5);
@@ -130,9 +320,7 @@ mod tests {
     #[test]
     fn one_by_one_fast_path_matches_oracle() {
         let spec = ConvSpec::paper(7, 1, 1, 32, 16);
-        let mut rng = Rng::new(3);
-        let input = Tensor::random(1, 16, 7, 7, &mut rng, -1.0, 1.0);
-        let filters = Tensor::random(32, 16, 1, 1, &mut rng, -1.0, 1.0);
+        let (input, filters) = io(&spec, 3);
         let got = conv_two_stage(&spec, &input, &filters);
         let want = conv_naive(&spec, &input, &filters);
         assert!(got.rel_l2_error(&want) < 1e-5);
@@ -143,23 +331,68 @@ mod tests {
     #[test]
     fn stage2_is_plain_sum() {
         let spec = ConvSpec::paper(2, 1, 3, 1, 1);
-        let prods = ScalarProds {
-            taps: 9,
-            plane_elems: 4,
-            data: (0..36).map(|_| 1.0).collect(),
-        };
-        let out = sum_taps(&spec, &prods);
-        assert!(out.data().iter().all(|&v| v == 9.0));
+        let planes = vec![1.0f32; 9 * spec.output_elems()];
+        let mut out = vec![0.0f32; spec.output_elems()];
+        sum_taps_into(&spec, &planes, &mut out);
+        assert!(out.iter().all(|&v| v == 9.0));
     }
 
     #[test]
     fn stride_and_padding_handled() {
         let spec = ConvSpec { stride: 2, ..ConvSpec::paper(9, 1, 3, 2, 3) };
-        let mut rng = Rng::new(4);
-        let input = Tensor::random(1, 3, 9, 9, &mut rng, -1.0, 1.0);
-        let filters = Tensor::random(2, 3, 3, 3, &mut rng, -1.0, 1.0);
+        let (input, filters) = io(&spec, 4);
         let got = conv_two_stage(&spec, &input, &filters);
         let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+
+    #[test]
+    fn fused_matches_staged_and_oracle_across_sweep() {
+        let specs = [
+            ConvSpec::paper(7, 1, 1, 8, 16),          // 1x1 fast path
+            ConvSpec::paper(9, 2, 3, 4, 3),           // 3x3 batched
+            ConvSpec::paper(7, 1, 5, 6, 5),           // 5x5
+            ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 4, 2) },
+            ConvSpec { pad_h: 2, pad_w: 1, ..ConvSpec::paper(6, 1, 3, 2, 2) },
+            ConvSpec { stride: 2, ..ConvSpec::paper(9, 1, 5, 2, 3) },
+        ];
+        for (i, spec) in specs.iter().enumerate() {
+            let (input, filters) = io(spec, 0x10 + i as u64);
+            let oracle = conv_naive(spec, &input, &filters);
+            let staged = conv_two_stage(spec, &input, &filters);
+            for threads in [1, 4] {
+                let fused = conv_fused_with_threads(spec, &input, &filters, threads);
+                assert!(
+                    fused.rel_l2_error(&oracle) < 1e-5,
+                    "fused vs oracle, threads={threads}, {spec}"
+                );
+                assert!(
+                    fused.rel_l2_error(&staged) < 1e-5,
+                    "fused vs staged, threads={threads}, {spec}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_parallel_path_matches_oracle_above_spawn_cutoff() {
+        // 32x32x8 output = 8192 f32s: at the par_chunks spawn cutoff,
+        // so threads=4 actually exercises the banded parallel path.
+        let spec = ConvSpec::paper(32, 1, 3, 8, 4);
+        let (input, filters) = io(&spec, 0x99);
+        let want = conv_naive(&spec, &input, &filters);
+        let got = conv_fused_with_threads(&spec, &input, &filters, 4);
+        assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+
+    #[test]
+    fn fused_overwrites_a_dirty_output_buffer() {
+        let spec = ConvSpec::paper(6, 1, 3, 2, 2);
+        let (input, filters) = io(&spec, 9);
+        let want = conv_naive(&spec, &input, &filters);
+        let mut out = vec![f32::NAN; spec.output_elems()];
+        conv_fused_into(&spec, &input, &filters, 2, &mut out);
+        let got = Tensor::from_vec(spec.n, spec.m, spec.out_h(), spec.out_w(), out);
         assert!(got.rel_l2_error(&want) < 1e-5);
     }
 }

@@ -8,31 +8,33 @@
 //! transformed once and reused across all N inputs — the reuse that makes
 //! FFT competitive only for large N·M.
 //!
+//! Complex values are stored **interleaved** (`[re0, im0, re1, im1, …]`)
+//! in plain f32 slices so every spectrum lives in workspace-carved
+//! scratch ([`conv_fft_in`]) rather than per-call allocations.
+//!
 //! Supports stride-1 convolutions of any filter size/padding.
 
 use crate::conv::ConvSpec;
-use crate::cpuref::check_shapes;
+use crate::cpuref::{check_shapes, CpuImpl, Scratch};
 use crate::tensor::Tensor;
 
-/// Complex number as (re, im) pairs in flat arrays for cache friendliness.
-type C = (f32, f32);
-
 #[inline]
-fn cmul(a: C, b: C) -> C {
-    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+    (ar * br - ai * bi, ar * bi + ai * br)
 }
 
 #[inline]
-fn cmul_conj(a: C, b: C) -> C {
+fn cmul_conj(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
     // a * conj(b)
-    (a.0 * b.0 + a.1 * b.1, a.1 * b.0 - a.0 * b.1)
+    (ar * br + ai * bi, ai * br - ar * bi)
 }
 
-/// In-place iterative radix-2 FFT over a buffer of length `n` (power of
-/// two). `inverse` applies the conjugate transform *without* the 1/n
-/// scaling (callers scale once at the end).
-pub fn fft_inplace(buf: &mut [C], inverse: bool) {
-    let n = buf.len();
+/// In-place iterative radix-2 FFT over an interleaved complex buffer of
+/// `2n` f32s (`n` a power of two). `inverse` applies the conjugate
+/// transform *without* the 1/n scaling (callers scale once at the end).
+pub fn fft_inplace(buf: &mut [f32], inverse: bool) {
+    assert_eq!(buf.len() % 2, 0, "interleaved complex buffer");
+    let n = buf.len() / 2;
     assert!(n.is_power_of_two(), "fft length must be a power of two");
     // Bit-reversal permutation.
     let mut j = 0usize;
@@ -44,7 +46,8 @@ pub fn fft_inplace(buf: &mut [C], inverse: bool) {
         }
         j |= bit;
         if i < j {
-            buf.swap(i, j);
+            buf.swap(2 * i, 2 * j);
+            buf.swap(2 * i + 1, 2 * j + 1);
         }
     }
     // Butterflies.
@@ -54,110 +57,132 @@ pub fn fft_inplace(buf: &mut [C], inverse: bool) {
         let ang = sign * std::f64::consts::TAU / len as f64;
         let (wr, wi) = (ang.cos() as f32, ang.sin() as f32);
         for start in (0..n).step_by(len) {
-            let mut w: C = (1.0, 0.0);
+            let (mut cwr, mut cwi) = (1.0f32, 0.0f32);
             for k in 0..len / 2 {
-                let u = buf[start + k];
-                let v = cmul(buf[start + k + len / 2], w);
-                buf[start + k] = (u.0 + v.0, u.1 + v.1);
-                buf[start + k + len / 2] = (u.0 - v.0, u.1 - v.1);
-                w = cmul(w, (wr, wi));
+                let (ur, ui) = (buf[2 * (start + k)], buf[2 * (start + k) + 1]);
+                let h = start + k + len / 2;
+                let (vr, vi) = cmul(buf[2 * h], buf[2 * h + 1], cwr, cwi);
+                buf[2 * (start + k)] = ur + vr;
+                buf[2 * (start + k) + 1] = ui + vi;
+                buf[2 * h] = ur - vr;
+                buf[2 * h + 1] = ui - vi;
+                (cwr, cwi) = cmul(cwr, cwi, wr, wi);
             }
         }
         len <<= 1;
     }
 }
 
-/// 2D FFT of an `s×s` complex plane (rows then columns).
-pub fn fft2_inplace(plane: &mut [C], s: usize, inverse: bool) {
-    assert_eq!(plane.len(), s * s);
+/// 2D FFT of an `s×s` interleaved complex plane (rows then columns).
+/// `col` is the column staging buffer, `2s` f32s.
+pub fn fft2_inplace(plane: &mut [f32], s: usize, inverse: bool, col: &mut [f32]) {
+    assert_eq!(plane.len(), 2 * s * s);
+    assert_eq!(col.len(), 2 * s);
     // Rows.
     for r in 0..s {
-        fft_inplace(&mut plane[r * s..(r + 1) * s], inverse);
+        fft_inplace(&mut plane[2 * r * s..2 * (r + 1) * s], inverse);
     }
-    // Columns via transpose-free strided gather (s is small; simple copy).
-    let mut col = vec![(0.0f32, 0.0f32); s];
+    // Columns via strided gather through the staging buffer.
     for c in 0..s {
         for r in 0..s {
-            col[r] = plane[r * s + c];
+            col[2 * r] = plane[2 * (r * s + c)];
+            col[2 * r + 1] = plane[2 * (r * s + c) + 1];
         }
-        fft_inplace(&mut col, inverse);
+        fft_inplace(col, inverse);
         for r in 0..s {
-            plane[r * s + c] = col[r];
+            plane[2 * (r * s + c)] = col[2 * r];
+            plane[2 * (r * s + c) + 1] = col[2 * r + 1];
         }
     }
 }
 
-fn next_pow2(v: usize) -> usize {
-    v.next_power_of_two()
+/// FFT plane side: next power of two fitting the linear correlation
+/// (`S >= dim + k - 1` in each axis).
+pub fn fft_plane_size(spec: &ConvSpec) -> usize {
+    ((spec.h + spec.kh - 1).max(spec.w + spec.kw - 1)).next_power_of_two()
 }
 
-/// FFT convolution. Transforms each input and filter plane once, forms
-/// the per-(n,m) spectral accumulation over channels, and inverse
-/// transforms per output plane.
-pub fn conv_fft(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+/// FFT convolution with every spectrum carved from `scratch` (sized by
+/// [`CpuImpl::Fft`]'s `scratch_elems`). Transforms each input and filter
+/// plane once, forms the per-(n,m) spectral accumulation over channels,
+/// and inverse transforms per output plane.
+pub fn conv_fft_in(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    scratch: &mut Scratch<'_>,
+    out: &mut [f32],
+) {
     check_shapes(spec, input, filters);
     assert_eq!(spec.stride, 1, "fft conv is stride-1 only");
     let (oh, ow) = (spec.out_h(), spec.out_w());
-    // Linear-correlation support needs S >= dim + k - 1 in each axis.
-    let s = next_pow2((spec.h + spec.kh - 1).max(spec.w + spec.kw - 1));
-    let plane = s * s;
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
+    let s = fft_plane_size(spec);
+    let plane = 2 * s * s; // interleaved complex plane
+
+    let col = scratch.take("fft.col", 2 * s);
 
     // FFT of every input plane: N*C transforms, reused across M filters.
-    let mut in_f = vec![(0.0f32, 0.0f32); spec.n * spec.c * plane];
+    let in_f = scratch.take_zeroed("fft.input_spectra", spec.n * spec.c * plane);
     for n in 0..spec.n {
         for c in 0..spec.c {
             let dst = &mut in_f[(n * spec.c + c) * plane..(n * spec.c + c + 1) * plane];
             for y in 0..spec.h {
                 for x in 0..spec.w {
-                    dst[y * s + x] = (input.at(n, c, y, x), 0.0);
+                    dst[2 * (y * s + x)] = input.at(n, c, y, x);
                 }
             }
-            fft2_inplace(dst, s, false);
+            fft2_inplace(dst, s, false, col);
         }
     }
     // FFT of every filter plane: M*C transforms, reused across N inputs.
-    let mut fl_f = vec![(0.0f32, 0.0f32); spec.m * spec.c * plane];
+    let fl_f = scratch.take_zeroed("fft.filter_spectra", spec.m * spec.c * plane);
     for m in 0..spec.m {
         for c in 0..spec.c {
             let dst = &mut fl_f[(m * spec.c + c) * plane..(m * spec.c + c + 1) * plane];
             for y in 0..spec.kh {
                 for x in 0..spec.kw {
-                    dst[y * s + x] = (filters.at(m, c, y, x), 0.0);
+                    dst[2 * (y * s + x)] = filters.at(m, c, y, x);
                 }
             }
-            fft2_inplace(dst, s, false);
+            fft2_inplace(dst, s, false, col);
         }
     }
 
-    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
-    let scale = 1.0 / plane as f32;
-    let mut acc = vec![(0.0f32, 0.0f32); plane];
+    let scale = 1.0 / (s * s) as f32;
+    let acc = scratch.take("fft.acc", plane);
     for n in 0..spec.n {
         for m in 0..spec.m {
-            acc.fill((0.0, 0.0));
+            acc.fill(0.0);
             for c in 0..spec.c {
                 let a = &in_f[(n * spec.c + c) * plane..(n * spec.c + c + 1) * plane];
                 let b = &fl_f[(m * spec.c + c) * plane..(m * spec.c + c + 1) * plane];
-                for i in 0..plane {
+                for i in 0..s * s {
                     // Cross-correlation: input × conj(filter).
-                    let p = cmul_conj(a[i], b[i]);
-                    acc[i].0 += p.0;
-                    acc[i].1 += p.1;
+                    let (pr, pi) =
+                        cmul_conj(a[2 * i], a[2 * i + 1], b[2 * i], b[2 * i + 1]);
+                    acc[2 * i] += pr;
+                    acc[2 * i + 1] += pi;
                 }
             }
-            fft2_inplace(&mut acc, s, true);
+            fft2_inplace(acc, s, true, col);
             // out(oy,ox) = corr(oy - pad_h, ox - pad_w), circular indices.
+            let out_base = (n * spec.m + m) * oh * ow;
             for oy in 0..oh {
                 let cy = (oy as isize - spec.pad_h as isize).rem_euclid(s as isize) as usize;
                 for ox in 0..ow {
                     let cx =
                         (ox as isize - spec.pad_w as isize).rem_euclid(s as isize) as usize;
-                    *out.at_mut(n, m, oy, ox) = acc[cy * s + cx].0 * scale;
+                    out[out_base + oy * ow + ox] = acc[2 * (cy * s + cx)] * scale;
                 }
             }
         }
     }
-    out
+}
+
+/// Allocating convenience wrapper around [`conv_fft_in`].
+pub fn conv_fft(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    CpuImpl::Fft.run(spec, input, filters)
 }
 
 #[cfg(test)]
@@ -169,23 +194,22 @@ mod tests {
     #[test]
     fn fft_roundtrip_identity() {
         let mut rng = Rng::new(61);
-        let mut buf: Vec<C> = (0..64).map(|_| (rng.next_f32(), rng.next_f32())).collect();
+        let mut buf: Vec<f32> = (0..128).map(|_| rng.next_f32()).collect();
         let orig = buf.clone();
         fft_inplace(&mut buf, false);
         fft_inplace(&mut buf, true);
         for (a, b) in buf.iter().zip(orig.iter()) {
-            assert!((a.0 / 64.0 - b.0).abs() < 1e-4);
-            assert!((a.1 / 64.0 - b.1).abs() < 1e-4);
+            assert!((a / 64.0 - b).abs() < 1e-4);
         }
     }
 
     #[test]
     fn fft_of_impulse_is_flat() {
-        let mut buf = vec![(0.0f32, 0.0f32); 16];
-        buf[0] = (1.0, 0.0);
+        let mut buf = vec![0.0f32; 32];
+        buf[0] = 1.0;
         fft_inplace(&mut buf, false);
-        for v in buf {
-            assert!((v.0 - 1.0).abs() < 1e-5 && v.1.abs() < 1e-5);
+        for i in 0..16 {
+            assert!((buf[2 * i] - 1.0).abs() < 1e-5 && buf[2 * i + 1].abs() < 1e-5);
         }
     }
 
@@ -233,6 +257,22 @@ mod tests {
         let filters = Tensor::random(2, 2, 3, 3, &mut rng, -1.0, 1.0);
         let got = conv_fft(&spec, &input, &filters);
         let want = conv_naive(&spec, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 1e-4);
+    }
+
+    #[test]
+    fn scratch_is_fully_dirty_tolerant() {
+        // A reused (non-zero) workspace must not leak into the result.
+        let spec = ConvSpec::paper(6, 1, 3, 2, 2);
+        let mut rng = Rng::new(66);
+        let input = Tensor::random(1, 2, 6, 6, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(2, 2, 3, 3, &mut rng, -1.0, 1.0);
+        let want = conv_naive(&spec, &input, &filters);
+        let mut buf = vec![123.456f32; CpuImpl::Fft.scratch_elems(&spec)];
+        let mut scratch = Scratch::new(&mut buf);
+        let mut out = vec![f32::NAN; spec.output_elems()];
+        conv_fft_in(&spec, &input, &filters, &mut scratch, &mut out);
+        let got = Tensor::from_vec(spec.n, spec.m, spec.out_h(), spec.out_w(), out);
         assert!(got.rel_l2_error(&want) < 1e-4);
     }
 }

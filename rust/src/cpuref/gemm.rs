@@ -61,6 +61,55 @@ fn block_panel(
     }
 }
 
+/// Below this many output f32s the work is smaller than the cost of
+/// spawning workers; [`par_chunks`] runs inline instead.
+const MIN_PAR_ELEMS: usize = 8 * 1024;
+
+/// Band-split a buffer of `items` consecutive items of `item_len` f32s
+/// each across scoped threads and run `f(first_item_index, band)` on
+/// every band. Each band is a disjoint `&mut` slice of whole items, so
+/// the split is embarrassingly parallel; `threads == 1`, a single item,
+/// or a buffer under [`MIN_PAR_ELEMS`] runs inline with no spawn and no
+/// allocation. Workers are scoped threads spawned per call (there is no
+/// persistent pool), so callers on a per-request path should size work
+/// above the inline cutoff or pass `threads == 1`.
+///
+/// This is the scoped-thread band splitter behind [`sgemm`],
+/// `conv_blocked` and the fused cuConv kernel — anything that writes
+/// independent output rows/planes into one contiguous buffer.
+pub fn par_chunks(
+    buf: &mut [f32],
+    item_len: usize,
+    items: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(buf.len(), items * item_len);
+    let threads = if buf.len() < MIN_PAR_ELEMS {
+        1
+    } else {
+        threads.max(1).min(items.max(1))
+    };
+    if threads == 1 {
+        f(0, buf);
+        return;
+    }
+    let per = items.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = buf;
+        let mut idx = 0;
+        while idx < items {
+            let take = per.min(items - idx);
+            let (band, tail) = rest.split_at_mut(take * item_len);
+            rest = tail;
+            let start = idx;
+            idx += take;
+            s.spawn(move || f(start, band));
+        }
+    });
+}
+
 /// `c += a · b`, parallel over row panels. `threads == 1` falls back to
 /// the single-threaded path (no spawn overhead).
 pub fn sgemm(
@@ -75,41 +124,28 @@ pub fn sgemm(
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    let threads = threads.max(1).min(m.max(1));
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(m);
     if threads == 1 || m < 2 * MC {
         sgemm_st(m, k, n, a, b, c);
         return;
     }
-    // Split C into row bands, one per thread; each band only touches its
-    // own rows of A and C so the split is embarrassingly parallel.
-    let rows_per = m.div_ceil(threads);
-    let mut bands: Vec<&mut [f32]> = Vec::with_capacity(threads);
-    let mut rest = c;
-    for t in 0..threads {
-        let lo = t * rows_per;
-        let hi = ((t + 1) * rows_per).min(m);
-        if lo >= hi {
-            break;
-        }
-        let (band, tail) = rest.split_at_mut((hi - lo) * n);
-        bands.push(band);
-        rest = tail;
-    }
-    std::thread::scope(|s| {
-        for (t, band) in bands.into_iter().enumerate() {
-            let lo = t * rows_per;
-            let hi = (lo + rows_per).min(m);
-            let a_band = &a[lo * k..hi * k];
-            s.spawn(move || {
-                sgemm_st(hi - lo, k, n, a_band, b, band);
-            });
-        }
+    // Each band only touches its own rows of A and C.
+    par_chunks(c, n, m, threads, |row0, band| {
+        let rows = band.len() / n;
+        sgemm_st(rows, k, n, &a[row0 * k..(row0 + rows) * k], b, band);
     });
 }
 
-/// Default thread count for CPU substrate work.
+/// Default thread count for CPU substrate work (cached: this is queried
+/// on every per-request execute).
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    })
 }
 
 #[cfg(test)]
@@ -169,6 +205,29 @@ mod tests {
             .map(|(x, y)| (x - y).abs())
             .fold(0.0, f32::max);
         assert!(err < 1e-4);
+    }
+
+    #[test]
+    fn par_chunks_covers_every_item_once() {
+        // Mixes buffers above the spawn cutoff (parallel path) and tiny
+        // ones (inline path).
+        for (items, item_len, threads) in
+            [(7usize, 2048usize, 3usize), (1, 4, 8), (16, 1024, 4), (16, 1, 4)]
+        {
+            let mut buf = vec![0.0f32; items * item_len];
+            par_chunks(&mut buf, item_len, items, threads, |start, band| {
+                for (off, chunk) in band.chunks_mut(item_len).enumerate() {
+                    for v in chunk.iter_mut() {
+                        *v += (start + off) as f32 + 1.0;
+                    }
+                }
+            });
+            for i in 0..items {
+                for j in 0..item_len {
+                    assert_eq!(buf[i * item_len + j], i as f32 + 1.0, "item {i}");
+                }
+            }
+        }
     }
 
     #[test]

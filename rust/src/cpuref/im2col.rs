@@ -7,19 +7,30 @@
 //! approach avoids.
 
 use crate::conv::ConvSpec;
-use crate::cpuref::check_shapes;
 use crate::cpuref::gemm::{default_threads, sgemm};
+use crate::cpuref::{check_shapes, CpuImpl, Scratch};
 use crate::tensor::Tensor;
 
-/// Lower the input to the im2col matrix `[C·Kh·Kw, N·OH·OW]`.
+/// Lower the input to the im2col matrix `[C·Kh·Kw, N·OH·OW]`
+/// (allocating wrapper around [`im2col_into`]).
+pub fn im2col(spec: &ConvSpec, input: &Tensor) -> Vec<f32> {
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut cols = vec![0.0f32; spec.c * spec.kh * spec.kw * spec.n * oh * ow];
+    im2col_into(spec, input, &mut cols);
+    cols
+}
+
+/// Lower the input into a caller-provided im2col matrix
+/// `[C·Kh·Kw, N·OH·OW]` (fully overwritten; padding positions zeroed).
 ///
 /// Column-per-output-position layout so the GEMM is
 /// `filters[M, C·Kh·Kw] · cols[C·Kh·Kw, N·OH·OW]`.
-pub fn im2col(spec: &ConvSpec, input: &Tensor) -> Vec<f32> {
+pub fn im2col_into(spec: &ConvSpec, input: &Tensor, cols: &mut [f32]) {
     let (oh, ow) = (spec.out_h(), spec.out_w());
     let rows = spec.c * spec.kh * spec.kw;
     let cols_n = spec.n * oh * ow;
-    let mut cols = vec![0.0f32; rows * cols_n];
+    assert_eq!(cols.len(), rows * cols_n, "im2col matrix mismatch for {spec}");
+    cols.fill(0.0);
     for c in 0..spec.c {
         for ky in 0..spec.kh {
             for kx in 0..spec.kw {
@@ -45,37 +56,43 @@ pub fn im2col(spec: &ConvSpec, input: &Tensor) -> Vec<f32> {
             }
         }
     }
-    cols
 }
 
-/// Explicit-GEMM convolution: im2col + SGEMM + reshape.
-pub fn conv_im2col(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+/// Explicit-GEMM convolution: im2col + SGEMM + reshape, with the column
+/// matrix and the pre-transpose GEMM output carved from `scratch`
+/// (sized by [`CpuImpl::Im2colGemm`]'s `scratch_elems`).
+pub fn conv_im2col_in(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    scratch: &mut Scratch<'_>,
+    out: &mut [f32],
+) {
     check_shapes(spec, input, filters);
     let (oh, ow) = (spec.out_h(), spec.out_w());
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
     let k = spec.c * spec.kh * spec.kw;
-    let cols = im2col(spec, input);
-    // filters are already [M, C, Kh, Kw] = [M, k] row-major.
-    let mut out_mat = vec![0.0f32; spec.m * spec.n * oh * ow];
-    sgemm(
-        spec.m,
-        k,
-        spec.n * oh * ow,
-        filters.data(),
-        &cols,
-        &mut out_mat,
-        default_threads(),
-    );
+    let cols_n = spec.n * oh * ow;
+    let cols = scratch.take("im2col.cols", k * cols_n);
+    im2col_into(spec, input, cols);
+    // filters are already [M, C, Kh, Kw] = [M, k] row-major. sgemm
+    // accumulates, so the GEMM output region must start zeroed.
+    let out_mat = scratch.take_zeroed("im2col.out_mat", spec.m * cols_n);
+    sgemm(spec.m, k, cols_n, filters.data(), cols, out_mat, default_threads());
     // out_mat is [M, N, OH, OW]; transpose the leading two axes to NCHW.
-    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
     let plane = oh * ow;
     for m in 0..spec.m {
         for n in 0..spec.n {
             let src = (m * spec.n + n) * plane;
-            let dst = out.offset(n, m, 0, 0);
-            out.data_mut()[dst..dst + plane].copy_from_slice(&out_mat[src..src + plane]);
+            let dst = (n * spec.m + m) * plane;
+            out[dst..dst + plane].copy_from_slice(&out_mat[src..src + plane]);
         }
     }
-    out
+}
+
+/// Allocating convenience wrapper around [`conv_im2col_in`].
+pub fn conv_im2col(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    CpuImpl::Im2colGemm.run(spec, input, filters)
 }
 
 #[cfg(test)]

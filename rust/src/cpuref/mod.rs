@@ -8,14 +8,24 @@
 //!    tested against.
 //! 2. **Baselines** — the paper compares cuConv against cuDNN's GEMM,
 //!    Winograd and FFT families; cuDNN is closed-source, so we implement
-//!    each family ourselves ([`im2col`], [`winograd`], [`fft`]) and the
-//!    paper's own two-stage algorithm ([`cuconv`]).
+//!    each family ourselves ([`im2col`], [`winograd`], [`fft`]), the
+//!    paper's own two-stage algorithm ([`cuconv`]) in both its staged
+//!    (decomposition-testable) and fused (serving hot path) forms.
 //! 3. **Fallback executor** — the coordinator serves requests without
 //!    AOT artifacts through
 //!    [`CpuRefBackend`](crate::backend::CpuRefBackend).
 //!
 //! All functions take NCHW inputs `[N,C,H,W]`, filters `[M,C,Kh,Kw]` and
 //! produce `[N,M,OH,OW]`.
+//!
+//! **Allocation contract:** the per-execute entry point is
+//! [`CpuImpl::run_in`], which writes into a caller-provided output slice
+//! and carves every temporary it needs from a caller-provided [`Scratch`]
+//! (sized by [`CpuImpl::scratch_elems`]). No substrate allocates in its
+//! per-execute hot path — the backing buffer is the reusable
+//! [`Workspace`](crate::backend::Workspace) a serving system owns.
+//! [`CpuImpl::run`] is the allocating convenience wrapper for tests and
+//! one-shot callers.
 //!
 //! This module is the *substrate*: outside of `backend/`, convolutions
 //! are run through the descriptor → plan → execute API
@@ -32,22 +42,79 @@ pub mod winograd;
 use crate::conv::ConvSpec;
 use crate::tensor::Tensor;
 
+/// A borrowed scratch buffer being carved into named regions — the
+/// substrate-side view of a [`Workspace`](crate::backend::Workspace)
+/// reservation (see `Workspace::carve_bytes`).
+///
+/// Regions are carved off the front in call order and live as long as
+/// the backing buffer, so a kernel can hold several disjoint regions at
+/// once. Regions come back **dirty** (workspaces are reused across
+/// requests); kernels that rely on zero-initialization use
+/// [`Scratch::take_zeroed`].
+pub struct Scratch<'a> {
+    rest: &'a mut [f32],
+}
+
+impl<'a> Scratch<'a> {
+    /// Carve regions out of `buf`.
+    pub fn new(buf: &'a mut [f32]) -> Scratch<'a> {
+        Scratch { rest: buf }
+    }
+
+    /// Carve `elems` f32s off the front as the region `name`. The
+    /// contents are whatever the previous execute left there. Panics when
+    /// the buffer is too small — region sizing is the planner's contract
+    /// ([`CpuImpl::scratch_elems`]), not a runtime condition.
+    pub fn take(&mut self, name: &'static str, elems: usize) -> &'a mut [f32] {
+        let buf = std::mem::take(&mut self.rest);
+        assert!(
+            elems <= buf.len(),
+            "scratch region '{name}' needs {elems} f32s but only {} remain",
+            buf.len()
+        );
+        let (region, tail) = buf.split_at_mut(elems);
+        self.rest = tail;
+        region
+    }
+
+    /// As [`Scratch::take`], with the region zero-filled.
+    pub fn take_zeroed(&mut self, name: &'static str, elems: usize) -> &'a mut [f32] {
+        let region = self.take(name, elems);
+        region.fill(0.0);
+        region
+    }
+
+    /// f32s not yet carved.
+    pub fn remaining(&self) -> usize {
+        self.rest.len()
+    }
+}
+
 /// The CPU execution paths available for a convolution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CpuImpl {
     Naive,
     Blocked,
+    /// The paper's two-stage decomposition, staged through the workspace
+    /// (stage-1 tap planes materialized, then summed) — kept for testing
+    /// the decomposition and as the reference for the fused rewrite.
     CuConvTwoStage,
+    /// The same algorithm with both stages fused: all `Kh·Kw` taps
+    /// accumulated into the output plane row-by-row, zero scratch,
+    /// parallel over `(n, m)` planes. The serving hot path for
+    /// [`Algorithm::CuConv`](crate::algo::Algorithm::CuConv).
+    CuConvFused,
     Im2colGemm,
     Winograd,
     Fft,
 }
 
 impl CpuImpl {
-    pub const ALL: [CpuImpl; 6] = [
+    pub const ALL: [CpuImpl; 7] = [
         CpuImpl::Naive,
         CpuImpl::Blocked,
         CpuImpl::CuConvTwoStage,
+        CpuImpl::CuConvFused,
         CpuImpl::Im2colGemm,
         CpuImpl::Winograd,
         CpuImpl::Fft,
@@ -58,6 +125,7 @@ impl CpuImpl {
             CpuImpl::Naive => "naive",
             CpuImpl::Blocked => "blocked",
             CpuImpl::CuConvTwoStage => "cuconv",
+            CpuImpl::CuConvFused => "cuconv_fused",
             CpuImpl::Im2colGemm => "im2col",
             CpuImpl::Winograd => "winograd",
             CpuImpl::Fft => "fft",
@@ -75,17 +143,81 @@ impl CpuImpl {
         }
     }
 
-    /// Run the convolution with this implementation.
-    pub fn run(&self, spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
-        assert!(self.supports(spec), "{} does not support {}", self.name(), spec);
+    /// Scratch f32s [`CpuImpl::run_in`] carves for `spec` — the
+    /// substrate's true temporary footprint, all of it workspace-carved
+    /// (no hidden allocations). Zero for the direct paths and the fused
+    /// cuConv kernel.
+    pub fn scratch_elems(&self, spec: &ConvSpec) -> usize {
+        let (oh, ow) = (spec.out_h(), spec.out_w());
+        let out_elems = spec.n * spec.m * oh * ow;
         match self {
-            CpuImpl::Naive => naive::conv_naive(spec, input, filters),
-            CpuImpl::Blocked => blocked::conv_blocked(spec, input, filters),
-            CpuImpl::CuConvTwoStage => cuconv::conv_two_stage(spec, input, filters),
-            CpuImpl::Im2colGemm => im2col::conv_im2col(spec, input, filters),
-            CpuImpl::Winograd => winograd::conv_winograd_3x3(spec, input, filters),
-            CpuImpl::Fft => fft::conv_fft(spec, input, filters),
+            CpuImpl::Naive | CpuImpl::Blocked | CpuImpl::CuConvFused => 0,
+            // Stage-1 tap planes; 1×1 writes outputs directly (§3).
+            CpuImpl::CuConvTwoStage => {
+                if spec.kh == 1 && spec.kw == 1 {
+                    0
+                } else {
+                    spec.kh * spec.kw * out_elems
+                }
+            }
+            // The lowered column matrix plus the pre-transpose GEMM output.
+            CpuImpl::Im2colGemm => {
+                spec.c * spec.kh * spec.kw * spec.n * oh * ow + out_elems
+            }
+            // Transformed filters U[m][c] plus the per-tile accumulators.
+            CpuImpl::Winograd => 16 * spec.m * spec.c + 16 * spec.m,
+            // Interleaved complex spectra of inputs and filters, one
+            // accumulator plane, and the column-FFT staging buffer.
+            CpuImpl::Fft => {
+                let s = fft::fft_plane_size(spec);
+                2 * s * s * (spec.n * spec.c + spec.m * spec.c + 1) + 2 * s
+            }
         }
+    }
+
+    /// Run the convolution into `out` (len `spec.output_elems()`),
+    /// carving temporaries from `scratch` (at least
+    /// [`CpuImpl::scratch_elems`] f32s). The per-execute hot path: no
+    /// allocation happens below this call.
+    pub fn run_in(
+        &self,
+        spec: &ConvSpec,
+        input: &Tensor,
+        filters: &Tensor,
+        scratch: &mut Scratch<'_>,
+        out: &mut [f32],
+    ) {
+        assert!(self.supports(spec), "{} does not support {}", self.name(), spec);
+        assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
+        match self {
+            CpuImpl::Naive => naive::conv_naive_into(spec, input, filters, out),
+            CpuImpl::Blocked => {
+                blocked::conv_blocked_into(spec, input, filters, gemm::default_threads(), out)
+            }
+            CpuImpl::CuConvTwoStage => {
+                cuconv::conv_two_stage_in(spec, input, filters, scratch, out)
+            }
+            CpuImpl::CuConvFused => {
+                cuconv::conv_fused_into(spec, input, filters, gemm::default_threads(), out)
+            }
+            CpuImpl::Im2colGemm => im2col::conv_im2col_in(spec, input, filters, scratch, out),
+            CpuImpl::Winograd => {
+                winograd::conv_winograd_3x3_in(spec, input, filters, scratch, out)
+            }
+            CpuImpl::Fft => fft::conv_fft_in(spec, input, filters, scratch, out),
+        }
+    }
+
+    /// Allocating convenience wrapper around [`CpuImpl::run_in`]: one
+    /// scratch buffer and one output tensor per call. Tests and one-shot
+    /// callers only — serving paths go through the backend's workspace.
+    pub fn run(&self, spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+        let mut buf = vec![0.0f32; self.scratch_elems(spec)];
+        let mut scratch = Scratch::new(&mut buf);
+        let [n, m, oh, ow] = spec.output_shape();
+        let mut out = Tensor::zeros(n, m, oh, ow);
+        self.run_in(spec, input, filters, &mut scratch, out.data_mut());
+        out
     }
 }
 
@@ -94,6 +226,25 @@ pub(crate) fn check_shapes(spec: &ConvSpec, input: &Tensor, filters: &Tensor) {
     assert!(spec.is_valid(), "invalid spec {spec}");
     assert_eq!(input.shape(), spec.input_shape(), "input shape mismatch for {spec}");
     assert_eq!(filters.shape(), spec.filter_shape(), "filter shape mismatch for {spec}");
+}
+
+/// Valid `ox` range `[lo, hi)` for filter column `kx`: the output
+/// positions whose input column `ox·stride + kx − pad_w` lands inside
+/// `[0, w)`. Hoists the per-element padding test out of the inner loops
+/// — outside the returned range the contribution is zero (padding), so
+/// the inner loop can run branch-free over contiguous input-row slices.
+/// May return an empty range (`lo >= hi`).
+#[inline]
+pub(crate) fn ox_range(spec: &ConvSpec, kx: usize) -> (usize, usize) {
+    let ow = spec.out_w();
+    let lo_num = spec.pad_w as isize - kx as isize;
+    let lo = if lo_num <= 0 { 0 } else { (lo_num as usize).div_ceil(spec.stride) };
+    let hi_num = spec.w as isize + spec.pad_w as isize - kx as isize;
+    if hi_num <= 0 {
+        return (0, 0);
+    }
+    let hi = (((hi_num - 1) as usize) / spec.stride + 1).min(ow);
+    (lo, hi)
 }
 
 #[cfg(test)]
@@ -141,5 +292,70 @@ mod tests {
         assert!(!CpuImpl::Winograd.supports(&ConvSpec::paper(8, 1, 5, 4, 4)));
         assert!(!CpuImpl::Winograd
             .supports(&ConvSpec { stride: 2, ..ConvSpec::paper(8, 1, 3, 4, 4) }));
+    }
+
+    #[test]
+    fn scratch_carves_named_regions_in_order() {
+        let mut buf = vec![7.0f32; 10];
+        let mut s = Scratch::new(&mut buf);
+        let a = s.take("a", 4);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|&v| v == 7.0), "take must return the region dirty");
+        let b = s.take_zeroed("b", 5);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(s.remaining(), 1);
+        // Regions are disjoint and usable simultaneously.
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_eq!((a[0], b[0]), (1.0, 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "scratch region 'big'")]
+    fn scratch_overflow_panics_with_region_name() {
+        let mut buf = vec![0.0f32; 2];
+        let mut s = Scratch::new(&mut buf);
+        s.take("big", 3);
+    }
+
+    #[test]
+    fn scratch_elems_is_zero_for_direct_and_fused_paths() {
+        let spec = ConvSpec::paper(9, 2, 3, 4, 3);
+        assert_eq!(CpuImpl::Naive.scratch_elems(&spec), 0);
+        assert_eq!(CpuImpl::Blocked.scratch_elems(&spec), 0);
+        assert_eq!(CpuImpl::CuConvFused.scratch_elems(&spec), 0);
+        // Staged cuConv's footprint IS the registry's stage-1 accounting.
+        assert_eq!(
+            CpuImpl::CuConvTwoStage.scratch_elems(&spec) * 4,
+            spec.cuconv_temp_bytes()
+        );
+        // …and the 1×1 fast path needs none.
+        let one = ConvSpec::paper(7, 1, 1, 8, 16);
+        assert_eq!(CpuImpl::CuConvTwoStage.scratch_elems(&one), 0);
+    }
+
+    #[test]
+    fn ox_range_matches_bruteforce_bounds() {
+        let specs = [
+            ConvSpec::paper(9, 1, 3, 1, 1),
+            ConvSpec::paper(7, 1, 5, 1, 1),
+            ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 1, 1) },
+            ConvSpec { pad_h: 2, pad_w: 4, ..ConvSpec::paper(6, 1, 3, 1, 1) },
+            ConvSpec { stride: 3, ..ConvSpec::paper(10, 1, 5, 1, 1) },
+        ];
+        for spec in specs {
+            for kx in 0..spec.kw {
+                let (lo, hi) = ox_range(&spec, kx);
+                for ox in 0..spec.out_w() {
+                    let ix = (ox * spec.stride + kx) as isize - spec.pad_w as isize;
+                    let valid = ix >= 0 && ix < spec.w as isize;
+                    let in_range = ox >= lo && ox < hi;
+                    assert_eq!(
+                        valid, in_range,
+                        "spec={spec} kx={kx} ox={ox} lo={lo} hi={hi}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -11,9 +11,18 @@ use crate::tensor::Tensor;
 
 /// Direct convolution, NCHW, arbitrary stride/padding.
 pub fn conv_naive(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    let [n, m, oh, ow] = spec.output_shape();
+    let mut out = Tensor::zeros(n, m, oh, ow);
+    conv_naive_into(spec, input, filters, out.data_mut());
+    out
+}
+
+/// As [`conv_naive`], writing into a caller-provided output slice of
+/// `spec.output_elems()` f32s (fully overwritten).
+pub fn conv_naive_into(spec: &ConvSpec, input: &Tensor, filters: &Tensor, out: &mut [f32]) {
     check_shapes(spec, input, filters);
     let (oh, ow) = (spec.out_h(), spec.out_w());
-    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
     for n in 0..spec.n {
         for m in 0..spec.m {
             for oy in 0..oh {
@@ -36,12 +45,11 @@ pub fn conv_naive(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
                             }
                         }
                     }
-                    *out.at_mut(n, m, oy, ox) = acc;
+                    out[((n * spec.m + m) * oh + oy) * ow + ox] = acc;
                 }
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

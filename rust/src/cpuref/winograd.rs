@@ -11,7 +11,7 @@
 //! Supports 3×3 stride-1 convolutions with any padding.
 
 use crate::conv::ConvSpec;
-use crate::cpuref::check_shapes;
+use crate::cpuref::{check_shapes, CpuImpl, Scratch};
 use crate::tensor::Tensor;
 
 /// Filter transform: `U = G·g·Gᵀ` for one 3×3 filter plane → 4×4.
@@ -78,25 +78,37 @@ pub fn transform_output_tile(m: &[f32; 16]) -> [f32; 4] {
     ]
 }
 
-/// Winograd F(2×2, 3×3) convolution. Panics if the spec is not 3×3
-/// stride-1 (checked by [`CpuImpl::supports`](crate::cpuref::CpuImpl)).
-pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+/// Winograd F(2×2, 3×3) convolution with the transformed filters `U`
+/// and per-tile accumulators carved from `scratch` (sized by
+/// [`CpuImpl::Winograd`]'s `scratch_elems`). Panics if the spec is not
+/// 3×3 stride-1 (checked by [`CpuImpl::supports`](crate::cpuref::CpuImpl)).
+pub fn conv_winograd_3x3_in(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    scratch: &mut Scratch<'_>,
+    out: &mut [f32],
+) {
     check_shapes(spec, input, filters);
     assert!(spec.kh == 3 && spec.kw == 3 && spec.stride == 1, "winograd is 3x3/s1 only");
     let (oh, ow) = (spec.out_h(), spec.out_w());
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
     // Tile grid over the output, 2x2 tiles.
     let th = oh.div_ceil(2);
     let tw = ow.div_ceil(2);
 
-    // Pre-transform all filters: U[m][c] : 4x4.
-    let mut u = vec![[0.0f32; 16]; spec.m * spec.c];
+    // Pre-transform all filters: U[m][c] : 4x4, flat [m*c, 16].
+    let u = scratch.take("winograd.u", 16 * spec.m * spec.c);
     for m in 0..spec.m {
         for c in 0..spec.c {
             let base = filters.offset(m, c, 0, 0);
             let g: [f32; 9] = filters.data()[base..base + 9].try_into().unwrap();
-            u[m * spec.c + c] = transform_filter_3x3(&g);
+            u[(m * spec.c + c) * 16..(m * spec.c + c + 1) * 16]
+                .copy_from_slice(&transform_filter_3x3(&g));
         }
     }
+    // Per-tile Winograd-domain accumulators M[m] : 4x4, flat [m, 16].
+    let acc = scratch.take("winograd.acc", 16 * spec.m);
 
     // Padded input view bounds helper.
     let get = |n: usize, c: usize, y: isize, x: isize| -> f32 {
@@ -107,7 +119,6 @@ pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> T
         }
     };
 
-    let mut out = Tensor::zeros(spec.n, spec.m, oh, ow);
     for n in 0..spec.n {
         for ty in 0..th {
             for tx in 0..tw {
@@ -118,7 +129,7 @@ pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> T
                 // V tiles per channel for this (n, tile).
                 // Accumulate M[m] = sum_c U[m][c] ⊙ V[c] incrementally to
                 // avoid storing all V tiles: loop c outer, m inner.
-                let mut acc = vec![[0.0f32; 16]; spec.m];
+                acc.fill(0.0);
                 for c in 0..spec.c {
                     let mut d = [0.0f32; 16];
                     for dy in 0..4 {
@@ -128,21 +139,23 @@ pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> T
                     }
                     let v = transform_input_tile(&d);
                     for m in 0..spec.m {
-                        let uf = &u[m * spec.c + c];
-                        let am = &mut acc[m];
+                        let uf = &u[(m * spec.c + c) * 16..(m * spec.c + c + 1) * 16];
+                        let am = &mut acc[m * 16..(m + 1) * 16];
                         for i in 0..16 {
                             am[i] += uf[i] * v[i];
                         }
                     }
                 }
                 for m in 0..spec.m {
-                    let y = transform_output_tile(&acc[m]);
+                    let am: &[f32; 16] = acc[m * 16..(m + 1) * 16].try_into().unwrap();
+                    let y = transform_output_tile(am);
                     for dy in 0..2 {
                         for dx in 0..2 {
                             let oy = ty * 2 + dy;
                             let ox = tx * 2 + dx;
                             if oy < oh && ox < ow {
-                                *out.at_mut(n, m, oy, ox) = y[dy * 2 + dx];
+                                out[((n * spec.m + m) * oh + oy) * ow + ox] =
+                                    y[dy * 2 + dx];
                             }
                         }
                     }
@@ -150,7 +163,11 @@ pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> T
             }
         }
     }
-    out
+}
+
+/// Allocating convenience wrapper around [`conv_winograd_3x3_in`].
+pub fn conv_winograd_3x3(spec: &ConvSpec, input: &Tensor, filters: &Tensor) -> Tensor {
+    CpuImpl::Winograd.run(spec, input, filters)
 }
 
 #[cfg(test)]

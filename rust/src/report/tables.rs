@@ -80,12 +80,15 @@ fn measure_backend_us(
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
     let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
     let mut ws = Workspace::new();
-    // Warmup (PJRT compiles at plan time; this warms caches/allocations).
-    backend.execute(&plan, &input, &filters, &mut ws).ok()?;
+    let [on, om, oh, ow] = spec.output_shape();
+    let mut out = Tensor::zeros(on, om, oh, ow);
+    // Warmup (PJRT compiles at plan time; this warms caches and grows
+    // the reused workspace to its high-water size).
+    backend.execute_into(&plan, &input, &filters, &mut ws, &mut out).ok()?;
     let mut times: Vec<f64> = (0..iters)
         .filter_map(|_| {
             let started = std::time::Instant::now();
-            backend.execute(&plan, &input, &filters, &mut ws).ok()?;
+            backend.execute_into(&plan, &input, &filters, &mut ws, &mut out).ok()?;
             Some(started.elapsed().as_secs_f64() * 1e6)
         })
         .collect();

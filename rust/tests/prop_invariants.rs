@@ -90,6 +90,81 @@ fn prop_backend_algorithms_agree_on_random_specs() {
     });
 }
 
+/// Generator for small conv specs across the full parameter space the
+/// cuConv kernels must handle: 1×1/3×3/5×5 filters, stride 1–2, and
+/// independent (possibly asymmetric, possibly zero) padding.
+struct WideSpecGen;
+
+impl Gen for WideSpecGen {
+    type Value = ConvSpec;
+
+    fn gen(&self, rng: &mut Rng) -> ConvSpec {
+        let k = *rng.choose(&[1usize, 3, 5]);
+        let hw = rng.range(k.max(3), 12);
+        ConvSpec {
+            stride: rng.range(1, 2),
+            pad_h: rng.range(0, 2),
+            pad_w: rng.range(0, 2),
+            ..ConvSpec::paper(hw, rng.range(1, 3), k, rng.range(1, 8), rng.range(1, 8))
+        }
+    }
+
+    fn shrink(&self, v: &ConvSpec) -> Vec<ConvSpec> {
+        let mut out = Vec::new();
+        if v.n > 1 {
+            out.push(ConvSpec { n: 1, ..*v });
+        }
+        if v.m > 1 {
+            out.push(ConvSpec { m: 1, ..*v });
+        }
+        if v.c > 1 {
+            out.push(ConvSpec { c: 1, ..*v });
+        }
+        if v.stride > 1 {
+            out.push(ConvSpec { stride: 1, ..*v });
+        }
+        if v.pad_h != v.pad_w {
+            out.push(ConvSpec { pad_h: v.pad_w, ..*v });
+        }
+        out
+    }
+}
+
+/// The fused single-pass cuConv, the staged two-pass decomposition and
+/// the clear-loop oracle must agree across the stride/padding/1×1 sweep
+/// — the correctness contract of the fused rewrite.
+#[test]
+fn prop_cuconv_fused_equals_staged_equals_oracle() {
+    use cuconv::cpuref::cuconv::{conv_fused_with_threads, conv_two_stage};
+    let cfg = Config { cases: 48, ..Config::default() };
+    assert_prop(cfg, &WideSpecGen, |spec| {
+        if !spec.is_valid() {
+            return Ok(()); // e.g. 5x5 filter on a small unpadded input
+        }
+        let mut rng = Rng::new(spec.flops() ^ 0xF05ED);
+        let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let oracle = conv_naive(spec, &input, &filters);
+        let staged = conv_two_stage(spec, &input, &filters);
+        let err = staged.rel_l2_error(&oracle);
+        if err > 1e-5 {
+            return Err(format!("staged vs oracle err {err}"));
+        }
+        for threads in [1, 3] {
+            let fused = conv_fused_with_threads(spec, &input, &filters, threads);
+            let err = fused.rel_l2_error(&oracle);
+            if err > 1e-5 {
+                return Err(format!("fused({threads}t) vs oracle err {err}"));
+            }
+            let err = fused.rel_l2_error(&staged);
+            if err > 1e-5 {
+                return Err(format!("fused({threads}t) vs staged err {err}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_cuconv_temp_accounting_matches_stage1_size() {
     assert_prop(Config::default(), &SpecGen, |spec| {
