@@ -6,7 +6,9 @@
 //! case) on the always-available CPU reference backend, verifies the
 //! numerics against the clear-loop oracle, and — when built with the
 //! `pjrt` feature and `make artifacts` — repeats the same lifecycle on
-//! the AOT Pallas kernels through the PJRT backend.
+//! the AOT Pallas kernels through the PJRT backend. It ends with the
+//! serving story at network scope: a whole SqueezeNet forward pass
+//! (batch 1) through the net engine's graph → plan → forward lifecycle.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (PJRT path: `make artifacts && cargo run --release --features pjrt \
@@ -115,6 +117,40 @@ fn main() -> anyhow::Result<()> {
         best.total_us(),
         gpumodel::speedup(&spec).unwrap()
     );
+
+    // 6) From one convolution to a whole network: compile SqueezeNet
+    //    input-to-logits with the net engine (graph IR -> per-conv
+    //    algorithm choice -> arena-planned activations) and serve a
+    //    batch-1 forward. Compile once, forward many — the steady
+    //    state allocates no buffers.
+    let graph = cuconv::net::network_graph(cuconv::zoo::Network::SqueezeNet);
+    let planner = cuconv::net::NetPlanner::new(Box::new(CpuRefBackend::new()));
+    let mut plan = planner.compile(&graph, 1)?;
+    let mut image = vec![0.0f32; plan.input_elems()];
+    rng.fill_uniform(&mut image, -1.0, 1.0);
+    let probs = plan.forward(planner.backend(), &image)?;
+    let top = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!(
+        "squeezenet forward (batch 1, {} nodes, {} convs): {:.1} ms total, \
+         conv share {:.0}%, top class {} (p={:.4}, seeded weights)",
+        graph.len(),
+        plan.conv_algorithms().len(),
+        plan.total_seconds() * 1e3,
+        100.0 * plan.conv_seconds() / plan.total_seconds(),
+        top.0,
+        top.1,
+    );
+    println!(
+        "  memory: arena {:.1} MB in {} slots, shared conv workspace {:.1} MB",
+        plan.arena_capacity_bytes() as f64 / 1e6,
+        plan.slot_count(),
+        plan.max_conv_workspace_bytes() as f64 / 1e6,
+    );
+    assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4, "softmax must normalize");
     println!("quickstart OK");
     Ok(())
 }

@@ -1,0 +1,152 @@
+//! Bench: whole-network forward latency of the five zoo CNNs through
+//! the net engine on the CPU reference backend — the paper's headline
+//! framing ("convolutions account for a large part of the overall
+//! network execution time", §1) measured at network level instead of
+//! extrapolated from per-layer census numbers.
+//!
+//! Per network it reports
+//! * end-to-end batch-1 latency and the conv share of it (measured on
+//!   this host through `NetPlan`'s per-layer timers),
+//! * the memory plan (arena slots/bytes, max conv workspace),
+//! * the modeled V100 network-level cuConv attribution: total conv time
+//!   with cuConv in the algorithm pool vs best-baseline-only, summed
+//!   over the *graph's* conv nodes (stride-2 stems included — the
+//!   layers the census excludes still cost time in a real forward).
+//!
+//! Results also land in `BENCH_e2e.json` at the repository root so the
+//! perf trajectory is machine-readable across PRs.
+//! `CUCONV_BENCH_FORWARD_ITERS` overrides the timed iterations
+//! (default 1 — VGG19 is ~20 GFLOP per forward on a CPU).
+
+use cuconv::algo::Algorithm;
+use cuconv::backend::CpuRefBackend;
+use cuconv::gpumodel;
+use cuconv::net::{network_graph, NetPlanner, Op};
+use cuconv::util::json::Json;
+use cuconv::util::rng::Rng;
+use cuconv::zoo::Network;
+
+/// Modeled network-level conv totals (µs): with cuConv in the pool vs
+/// cuDNN baselines only. `None` entries (no baseline available) cannot
+/// occur on these graphs — every conv shape supports the GEMM family.
+fn modeled_attribution(net: Network) -> (f64, f64) {
+    let graph = network_graph(net);
+    let shapes = graph.infer_shapes().expect("zoo graph");
+    let (mut with_us, mut without_us) = (0.0f64, 0.0f64);
+    for node in graph.nodes() {
+        if let Op::Conv { m, k, stride, pad, .. } = node.op {
+            let x = shapes[node.inputs[0]];
+            let spec = cuconv::conv::ConvSpec {
+                n: 1,
+                c: x.c,
+                h: x.h,
+                w: x.w,
+                m,
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: pad,
+                pad_w: pad,
+            };
+            let best_all = Algorithm::ALL
+                .iter()
+                .filter_map(|&a| gpumodel::predict(&spec, a))
+                .map(|t| t.total_us())
+                .fold(f64::INFINITY, f64::min);
+            let best_baseline = gpumodel::best_baseline(&spec)
+                .map(|t| t.total_us())
+                .unwrap_or(f64::INFINITY);
+            assert!(
+                best_all.is_finite() && best_baseline.is_finite(),
+                "no modeled algorithm for {spec}"
+            );
+            with_us += best_all;
+            without_us += best_baseline;
+        }
+    }
+    (with_us, without_us)
+}
+
+fn main() {
+    let iters: usize = std::env::var("CUCONV_BENCH_FORWARD_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+
+    println!(
+        "network     nodes conv   latency ms  conv ms  conv%   arena MB  ws MB  model speedup"
+    );
+    println!(
+        "--------------------------------------------------------------------------------------"
+    );
+    let mut rows = Vec::new();
+    for net in Network::ALL {
+        let graph = network_graph(net);
+        let planner = NetPlanner::new(Box::new(CpuRefBackend::new()));
+        let mut plan = planner.compile(&graph, 1).expect("compile");
+        let mut rng = Rng::new(0xE2E);
+        let mut input = vec![0.0f32; plan.input_elems()];
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        let mut out = vec![0.0f32; plan.output_elems()];
+
+        // Warmup once (first-touch paging of weights/arena), then take
+        // the fastest of `iters` timed forwards.
+        plan.forward_into(planner.backend(), &input, &mut out).expect("forward");
+        let (mut best_total, mut best_conv) = (f64::INFINITY, 0.0f64);
+        for _ in 0..iters.max(1) {
+            plan.forward_into(planner.backend(), &input, &mut out).expect("forward");
+            if plan.total_seconds() < best_total {
+                best_total = plan.total_seconds();
+                best_conv = plan.conv_seconds();
+            }
+        }
+        assert!((out.iter().take(plan.classes()).sum::<f32>() - 1.0).abs() < 1e-3);
+
+        let convs = plan.conv_algorithms().len();
+        let conv_share = best_conv / best_total;
+        let (with_us, without_us) = modeled_attribution(net);
+        let model_speedup = without_us / with_us;
+        println!(
+            "{:11} {:5} {:4}  {:10.1}  {:7.1}  {:5.1}  {:9.1}  {:5.1}  {:12.3}x",
+            graph.name,
+            graph.len(),
+            convs,
+            best_total * 1e3,
+            best_conv * 1e3,
+            100.0 * conv_share,
+            plan.arena_capacity_bytes() as f64 / 1e6,
+            plan.max_conv_workspace_bytes() as f64 / 1e6,
+            model_speedup,
+        );
+        rows.push(Json::obj(vec![
+            ("network", Json::str(graph.name.clone())),
+            ("nodes", Json::num(graph.len() as f64)),
+            ("conv_nodes", Json::num(convs as f64)),
+            ("latency_ms", Json::num(best_total * 1e3)),
+            ("conv_ms", Json::num(best_conv * 1e3)),
+            ("conv_share", Json::num(conv_share)),
+            ("arena_bytes", Json::num(plan.arena_capacity_bytes() as f64)),
+            ("arena_slots", Json::num(plan.slot_count() as f64)),
+            (
+                "max_conv_workspace_bytes",
+                Json::num(plan.max_conv_workspace_bytes() as f64),
+            ),
+            ("modeled_conv_us_with_cuconv", Json::num(with_us)),
+            ("modeled_conv_us_best_baseline", Json::num(without_us)),
+            ("modeled_network_speedup", Json::num(model_speedup)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("e2e_forward")),
+        ("batch", Json::num(1.0)),
+        ("backend", Json::str("cpuref")),
+        ("networks", Json::arr(rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_e2e.json");
+    match std::fs::write(path, report.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\n(could not write {path}: {e})"),
+    }
+    println!("e2e_forward bench OK ({iters} timed forward(s) per network)");
+}

@@ -222,6 +222,53 @@ mod tests {
     }
 
     #[test]
+    fn stride_two_excludes_winograd_and_fft() {
+        // The net engine executes the layers the stride-1 census
+        // excludes (7x7/s2 stems, ResNet downsampling convs): Winograd
+        // (3x3/s1-only) and both FFT variants must report unsupported
+        // for stride > 1 instead of being offered.
+        let s2 = ConvSpec { stride: 2, ..ConvSpec::paper(56, 1, 3, 128, 512) };
+        for a in [
+            Algorithm::Winograd,
+            Algorithm::WinogradNonfused,
+            Algorithm::Fft,
+            Algorithm::FftTiled,
+        ] {
+            assert!(!a.supports(&s2), "{a} must not support stride 2");
+            assert!(!a.available(&s2), "{a} must not be available at stride 2");
+        }
+        // The stride-agnostic families still serve these layers.
+        for a in [
+            Algorithm::CuConv,
+            Algorithm::Direct,
+            Algorithm::GemmExplicit,
+            Algorithm::GemmImplicit,
+            Algorithm::GemmImplicitPrecomp,
+        ] {
+            assert!(a.available(&s2), "{a} must stay available at stride 2");
+        }
+    }
+
+    #[test]
+    fn alexnet_conv1_has_working_fallbacks() {
+        // 11x11 stride-4 (AlexNet conv1): outside every specialized
+        // variant's parameter range, but the GEMM family + cuConv +
+        // direct must all remain available.
+        let conv1 = ConvSpec {
+            n: 1, c: 3, h: 227, w: 227, m: 96, kh: 11, kw: 11,
+            stride: 4, pad_h: 0, pad_w: 0,
+        };
+        assert!(conv1.is_valid());
+        let avail: Vec<Algorithm> =
+            Algorithm::ALL.iter().copied().filter(|a| a.available(&conv1)).collect();
+        assert!(avail.contains(&Algorithm::CuConv));
+        assert!(avail.contains(&Algorithm::GemmImplicitPrecomp));
+        assert!(!avail.contains(&Algorithm::Winograd));
+        assert!(!avail.contains(&Algorithm::WinogradNonfused), "11x11 is not 3x3/5x5");
+        assert!(!avail.contains(&Algorithm::Fft));
+    }
+
+    #[test]
     fn winograd_limitations() {
         let s3 = ConvSpec::paper(14, 1, 3, 64, 64);
         let s5 = ConvSpec::paper(14, 1, 5, 64, 64);

@@ -139,14 +139,7 @@ impl Backend for CpuRefBackend {
             bail!("plan from backend '{}' handed to cpuref", plan.backend_name());
         };
         plan.check_args(input, filters)?;
-        if out.shape() != plan.spec.output_shape() {
-            bail!(
-                "output shape {:?} does not match plan {:?} ({})",
-                out.shape(),
-                plan.spec.output_shape(),
-                plan.spec
-            );
-        }
+        plan.check_out(out)?;
         // The workspace reservation IS the kernel's scratch: carve it
         // and run in place — no allocation below this point.
         let mut scratch = workspace.carve_bytes(plan.workspace_bytes())?;

@@ -119,6 +119,51 @@ mod tests {
         }
     }
 
+    #[test]
+    fn algo_get_returns_a_working_fallback_for_alexnet_conv1() {
+        // 11x11/s4 — the census-excluded stride-4 layer the net engine
+        // now runs. The heuristic must return an algorithm that both
+        // claims support and actually executes correctly.
+        let backend = CpuRefBackend::new();
+        let conv1 = ConvSpec {
+            n: 1, c: 3, h: 27, w: 27, m: 4, kh: 11, kw: 11,
+            stride: 4, pad_h: 0, pad_w: 0,
+        };
+        let desc = ConvDescriptor::new(conv1).unwrap();
+        let algo = algo_get(&backend, &desc).unwrap();
+        assert!(backend.capabilities(&conv1, algo).is_supported());
+        let plan = backend.plan(&desc, algo).unwrap();
+        let mut rng = Rng::new(8);
+        let input = Tensor::random(1, 3, 27, 27, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(4, 3, 11, 11, &mut rng, -1.0, 1.0);
+        let mut ws = Workspace::new();
+        let got = backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+        let want = crate::cpuref::naive::conv_naive(&conv1, &input, &filters);
+        assert!(got.rel_l2_error(&want) < 2e-5, "fallback {algo} is wrong");
+    }
+
+    #[test]
+    fn algo_find_never_offers_winograd_or_fft_at_stride_two() {
+        let backend = CpuRefBackend::new();
+        let s2 = ConvSpec { stride: 2, ..ConvSpec::paper(14, 1, 3, 8, 8) };
+        let desc = ConvDescriptor::new(s2).unwrap();
+        let r = algo_find(&backend, &desc, 1);
+        assert!(!r.entries.is_empty());
+        for e in &r.entries {
+            assert!(
+                !matches!(
+                    e.algo,
+                    Algorithm::Winograd
+                        | Algorithm::WinogradNonfused
+                        | Algorithm::Fft
+                        | Algorithm::FftTiled
+                ),
+                "{} offered for stride-2",
+                e.algo
+            );
+        }
+    }
+
     /// A backend that claims support but cannot actually execute: find
     /// must skip it gracefully, and `algo_get` falls back past it.
     struct BrokenBackend;

@@ -116,14 +116,7 @@ impl Backend for PjrtBackend {
         out: &mut Tensor,
     ) -> Result<()> {
         // Validate the target before paying for a device execution.
-        if out.shape() != plan.spec().output_shape() {
-            bail!(
-                "output shape {:?} does not match plan {:?} ({})",
-                out.shape(),
-                plan.spec().output_shape(),
-                plan.spec()
-            );
-        }
+        plan.check_out(out)?;
         // The PJRT path still stages host copies (input/filter clones
         // into the executor, a fresh device-result tensor, and the copy
         // below) — only the CPU backend achieves the buffer-free steady

@@ -118,6 +118,21 @@ impl ConvPlan {
         }
         Ok(())
     }
+
+    /// Check that a caller-owned output tensor matches this plan's
+    /// geometry (the `execute_into` target) — shared by every backend
+    /// so the validation cannot drift between implementations.
+    pub(crate) fn check_out(&self, out: &crate::tensor::Tensor) -> Result<()> {
+        if out.shape() != self.spec.output_shape() {
+            bail!(
+                "output shape {:?} does not match plan {:?} ({})",
+                out.shape(),
+                self.spec.output_shape(),
+                self.spec
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Caller-owned convolution workspace, reused across executes (the

@@ -13,9 +13,11 @@
 //! * [`metrics`] — latency histograms (queue / execute / total),
 //!   batch-size distribution, throughput counters.
 //! * [`runner`] — the execution seam: the router runs batches on a
-//!   [`BatchRunner`] — the AOT model executables through PJRT, or a
+//!   [`BatchRunner`] — the AOT model executables through PJRT, a
 //!   convolution layer through any
-//!   [`Backend`](crate::backend::Backend) (the artifact-free fallback).
+//!   [`Backend`](crate::backend::Backend) (the artifact-free fallback),
+//!   or a whole network through [`NetForwardRunner`] (the
+//!   [`net`](crate::net) engine behind the dynamic batcher).
 //! * [`server`] — the router thread tying it together: drain queue →
 //!   form batches → run on the configured runner → scatter replies.
 //!
@@ -37,7 +39,7 @@ pub use loadgen::{run_open_loop, LoadReport, LoadSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use plan::{plan_network, plan_network_measured, LayerPlan, NetworkPlan};
 pub use request::{InferRequest, InferResponse, RequestId};
-pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner};
+pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner, NetForwardRunner};
 pub use server::{Server, ServerConfig, ServerHandle};
 
 #[cfg(feature = "pjrt")]

@@ -9,6 +9,12 @@
 //!   execute per request, with workspace reuse). Works offline on
 //!   [`CpuRefBackend`](crate::backend::CpuRefBackend); plug in
 //!   `PjrtBackend` for the AOT kernels.
+//! * [`NetForwardRunner`] — serves a **whole network** (a
+//!   [`NetGraph`](crate::net::NetGraph) compiled by
+//!   [`NetPlanner`](crate::net::NetPlanner)) through any [`Backend`]:
+//!   one arena-planned [`NetPlan`](crate::net::NetPlan) per batch
+//!   size, one algorithm per conv node across all sizes, steady-state
+//!   forwards allocation-free.
 //! * `PjrtModelRunner` (`pjrt` feature) — serves the end-to-end AOT
 //!   model executables (e.g. `minisqueezenet_b{1,2,4,8}`) through the
 //!   PJRT executor thread, with startup validation and adaptive
@@ -182,6 +188,77 @@ impl BatchRunner for ConvBackendRunner {
             data: out.data().to_vec(),
             exec_seconds: started.elapsed().as_secs_f64(),
         })
+    }
+}
+
+/// Serve whole-network forward passes through a pluggable [`Backend`].
+///
+/// The network-scope sibling of [`ConvBackendRunner`]: the graph is
+/// compiled once per batch size via
+/// [`NetPlanner::compile_for_sizes`](crate::net::NetPlanner::compile_for_sizes)
+/// (seeded weights, one algorithm per conv node across every size, so
+/// outputs cannot depend on how the batcher groups requests), and each
+/// request then runs [`NetPlan::forward_into`](crate::net::NetPlan::forward_into)
+/// — activations in the plan's arena, conv scratch in its pre-grown
+/// workspace; the only per-request buffer is the response vector
+/// handed back to the router.
+pub struct NetForwardRunner {
+    backend: Box<dyn Backend>,
+    plans: Vec<(usize, crate::net::NetPlan)>,
+    item_in: usize,
+    item_out: usize,
+}
+
+impl NetForwardRunner {
+    /// Compile `graph` for every size in `batch_sizes` (deduplicated;
+    /// must include 1) on `backend`.
+    pub fn new(
+        backend: Box<dyn Backend>,
+        graph: &crate::net::NetGraph,
+        batch_sizes: &[usize],
+    ) -> Result<NetForwardRunner> {
+        if !batch_sizes.contains(&1) {
+            bail!("batch sizes must include 1 (got {batch_sizes:?})");
+        }
+        let planner = crate::net::NetPlanner::new(backend);
+        let plans = planner.compile_for_sizes(graph, batch_sizes)?;
+        let (item_in, item_out) = {
+            let p1 = &plans[0].1;
+            (p1.input_elems(), p1.output_elems())
+        };
+        Ok(NetForwardRunner { backend: planner.into_backend(), plans, item_in, item_out })
+    }
+
+    /// The compiled plan for one batch size.
+    pub fn plan(&self, batch: usize) -> Option<&crate::net::NetPlan> {
+        self.plans.iter().find(|(b, _)| *b == batch).map(|(_, p)| p)
+    }
+}
+
+impl BatchRunner for NetForwardRunner {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.plans.iter().map(|(b, _)| *b).collect()
+    }
+
+    fn item_in_elems(&self) -> usize {
+        self.item_in
+    }
+
+    fn item_out_elems(&self) -> usize {
+        self.item_out
+    }
+
+    fn run(&mut self, batch: usize, input: Vec<f32>) -> Result<BatchOutput> {
+        let plan = self
+            .plans
+            .iter_mut()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, p)| p)
+            .ok_or_else(|| anyhow!("no plan for batch size {batch}"))?;
+        let mut data = vec![0.0f32; batch * self.item_out];
+        let started = Instant::now();
+        plan.forward_into(self.backend.as_ref(), &input, &mut data)?;
+        Ok(BatchOutput { data, exec_seconds: started.elapsed().as_secs_f64() })
     }
 }
 
@@ -391,6 +468,55 @@ mod tests {
             None,
             &[2, 4],
         );
+        assert!(err.is_err());
+    }
+
+    fn tiny_net() -> crate::net::NetGraph {
+        let mut b = crate::net::GraphBuilder::new("tiny", 2, 8, 8);
+        let c = b.conv_same("c1", b.input(), 4, 3);
+        let p = b.max_pool("p", c, 2, 2, 0);
+        let g = b.global_avg_pool("gap", p);
+        let fc = b.linear("fc", g, 5, false);
+        b.softmax("sm", fc);
+        b.finish()
+    }
+
+    #[test]
+    fn net_runner_serves_whole_network_batches() {
+        let mut r = NetForwardRunner::new(
+            Box::new(CpuRefBackend::new()),
+            &tiny_net(),
+            &[1, 2, 4],
+        )
+        .unwrap();
+        assert_eq!(r.batch_sizes(), vec![1, 2, 4]);
+        assert_eq!(r.item_in_elems(), 2 * 8 * 8);
+        assert_eq!(r.item_out_elems(), 5);
+        let mut rng = Rng::new(3);
+        let mut input = vec![0.0f32; 2 * r.item_in_elems()];
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        let out = r.run(2, input.clone()).unwrap();
+        assert_eq!(out.data.len(), 2 * 5);
+        // Every item's output is a probability distribution.
+        for row in out.data.chunks_exact(5) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        // Batch grouping must not change outputs: run the same items
+        // at batch 1 and compare exactly (one pinned algorithm per
+        // conv node across sizes).
+        let item = r.item_in_elems();
+        for i in 0..2 {
+            let single = r.run(1, input[i * item..(i + 1) * item].to_vec()).unwrap();
+            assert_eq!(single.data, out.data[i * 5..(i + 1) * 5].to_vec(), "item {i}");
+        }
+        // Unknown batch size is refused.
+        assert!(r.run(3, vec![0.0; 3 * item]).is_err());
+    }
+
+    #[test]
+    fn net_runner_requires_batch_one() {
+        let err =
+            NetForwardRunner::new(Box::new(CpuRefBackend::new()), &tiny_net(), &[2]);
         assert!(err.is_err());
     }
 }

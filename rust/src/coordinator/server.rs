@@ -123,6 +123,23 @@ impl Server {
         Server::start_with_runner(Box::new(runner), policy)
     }
 
+    /// Serve a whole network (a [`NetGraph`](crate::net::NetGraph)
+    /// compiled per batch size) through a pluggable backend — the
+    /// network-scope sibling of [`Server::start_conv`].
+    pub fn start_net(
+        backend: Box<dyn crate::backend::Backend>,
+        graph: &crate::net::NetGraph,
+        batch_sizes: &[usize],
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        let runner = crate::coordinator::runner::NetForwardRunner::new(
+            backend,
+            graph,
+            batch_sizes,
+        )?;
+        Server::start_with_runner(Box::new(runner), policy)
+    }
+
     /// Start serving `config.model` from the artifact manifest (AOT
     /// model executables through PJRT).
     #[cfg(feature = "pjrt")]

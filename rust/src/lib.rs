@@ -13,9 +13,11 @@
 //!   PJRT C API (`xla` crate), and implements everything around them —
 //!   the conv-config zoo of the paper's five CNNs, the algorithm
 //!   registry/selector/autotuner, a calibrated analytical V100
-//!   performance model (the testbed substitute), a serving coordinator
-//!   with dynamic batching, and the bench harness that regenerates every
-//!   table and figure of the paper's evaluation.
+//!   performance model (the testbed substitute), a whole-network
+//!   forward engine ([`net`]: graph IR, arena-planned activations,
+//!   input-to-logits execution of the five zoo CNNs), a serving
+//!   coordinator with dynamic batching, and the bench harness that
+//!   regenerates every table and figure of the paper's evaluation.
 //!
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only and the `cuconv` binary is self-contained afterwards.
@@ -34,6 +36,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod cpuref;
 pub mod gpumodel;
+pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod tensor;

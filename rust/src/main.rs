@@ -10,7 +10,10 @@
 //! cuconv autotune <HW-N-K-M-C> [--cpu]  rank algorithms for one config
 //! cuconv plan <network> [--batch B] [--measure]
 //!                                       per-layer algorithm plan
-//! cuconv serve-bench [--requests N] [--conv HW-N-K-M-C]
+//! cuconv forward <network> [--batch N] [--cpu] [--measure]
+//!                                       whole-network forward pass with a
+//!                                       per-layer time/algorithm breakdown
+//! cuconv serve-bench [--requests N] [--conv HW-N-K-M-C | --net NETWORK]
 //!                                       end-to-end serving benchmark
 //! cuconv validate                       validate AOT artifacts end to end
 //! ```
@@ -52,6 +55,19 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(|s| s.as_str())
+}
+
+fn parse_network(arg: Option<&str>) -> Result<Network> {
+    match arg {
+        Some("googlenet") => Ok(Network::GoogleNet),
+        Some("squeezenet") => Ok(Network::SqueezeNet),
+        Some("alexnet") => Ok(Network::AlexNet),
+        Some("resnet50") => Ok(Network::ResNet50),
+        Some("vgg19") => Ok(Network::Vgg19),
+        other => bail!(
+            "unknown network {other:?} (expected googlenet|squeezenet|alexnet|resnet50|vgg19)"
+        ),
+    }
 }
 
 /// The PJRT artifact backend, when compiled in and artifacts exist.
@@ -146,14 +162,7 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         "plan" => {
-            let net = match args.get(1).map(|s| s.as_str()) {
-                Some("googlenet") => Network::GoogleNet,
-                Some("squeezenet") => Network::SqueezeNet,
-                Some("alexnet") => Network::AlexNet,
-                Some("resnet50") => Network::ResNet50,
-                Some("vgg19") => Network::Vgg19,
-                other => bail!("unknown network {other:?}"),
-            };
+            let net = parse_network(args.get(1).map(|s| s.as_str()))?;
             let batch: usize =
                 opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(1);
             let plan = if flag(args, "--measure") {
@@ -185,6 +194,18 @@ fn run(args: &[String]) -> Result<()> {
                 plan.network_speedup()
             );
         }
+        "forward" => {
+            let net = parse_network(args.get(1).map(|s| s.as_str()))?;
+            let batch: usize =
+                opt(args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            // `--cpu` names the always-available CPU reference backend
+            // explicitly (it is also the default — whole-network
+            // execution has no artifact path yet); `--measure` switches
+            // the per-conv choice from the heuristic `algo_get` to the
+            // timed `algo_find` (slow at compile time).
+            let _ = flag(args, "--cpu");
+            forward_network(net, batch, flag(args, "--measure"))?;
+        }
         "serve-bench" => {
             let requests: usize =
                 opt(args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
@@ -192,6 +213,8 @@ fn run(args: &[String]) -> Result<()> {
                 let spec = ConvSpec::from_table_label(label)
                     .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
                 serve_bench_conv(spec, requests)?;
+            } else if let Some(name) = opt(args, "--net") {
+                serve_bench_net(parse_network(Some(name))?, requests)?;
             } else {
                 serve_bench_model(requests)?;
             }
@@ -203,11 +226,114 @@ fn run(args: &[String]) -> Result<()> {
             println!("cuconv {} — see README.md", cuconv::VERSION);
             println!(
                 "commands: census registry tables figures sweep autotune plan \
-                 serve-bench validate"
+                 forward serve-bench validate"
+            );
+            println!(
+                "  forward <net> [--batch N] [--cpu] [--measure]  whole-network \
+                 forward pass (cpuref backend) with a per-layer breakdown"
             );
         }
     }
     Ok(())
+}
+
+/// Run one whole-network forward pass on the CPU reference backend and
+/// print the per-layer time/algorithm breakdown (the `forward` command).
+fn forward_network(net: Network, batch: usize, measure: bool) -> Result<()> {
+    use cuconv::net::{input_hw, network_graph, AlgoChoice, NetPlanner};
+
+    let graph = network_graph(net);
+    let hw = input_hw(net);
+    let planner = NetPlanner::new(Box::new(CpuRefBackend::new())).with_choice(if measure {
+        AlgoChoice::Measured { iters: 2 }
+    } else {
+        AlgoChoice::Heuristic
+    });
+    println!(
+        "compiling {} ({} nodes, {hw}x{hw} input) at batch {batch} on cpuref{} ...",
+        graph.name,
+        graph.len(),
+        if measure { " (measured per-layer algo_find)" } else { "" }
+    );
+    let mut plan = planner.compile(&graph, batch)?;
+    let mut rng = Rng::new(0xF0A11);
+    let mut input = vec![0.0f32; plan.input_elems()];
+    rng.fill_uniform(&mut input, -1.0, 1.0);
+    // One warmup (first-touch effects), one reported forward.
+    let _ = plan.forward(planner.backend(), &input)?;
+    let probs = plan.forward(planner.backend(), &input)?;
+
+    let total = plan.total_seconds();
+    let mut t = report::Table::new(
+        format!("{} @ batch {batch}: per-layer forward breakdown", graph.name),
+        &["layer", "op", "out shape", "algo", "us", "% total"],
+    );
+    for l in plan.layer_report() {
+        if l.kind == "input" {
+            continue;
+        }
+        t.row(vec![
+            l.name,
+            l.kind.to_string(),
+            l.out_shape.to_string(),
+            l.algo.map(|a| a.name().to_string()).unwrap_or_else(|| "-".to_string()),
+            report::fmt_us(l.seconds * 1e6),
+            format!("{:5.1}", 100.0 * l.seconds / total),
+        ]);
+    }
+    print!("{}", t.render());
+    let top = probs
+        .iter()
+        .take(plan.classes())
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, p)| (i, *p))
+        .unwrap_or((0, 0.0));
+    println!(
+        "forward: {:.2} ms total, conv {:.2} ms ({:.1}%), {} conv nodes",
+        total * 1e3,
+        plan.conv_seconds() * 1e3,
+        100.0 * plan.conv_seconds() / total,
+        plan.conv_algorithms().len(),
+    );
+    println!(
+        "memory: arena {:.1} MB in {} slots, conv workspace {:.1} MB (max layer), \
+         logits argmax class {} (p={:.4}, seeded weights)",
+        plan.arena_capacity_bytes() as f64 / 1e6,
+        plan.slot_count(),
+        plan.max_conv_workspace_bytes() as f64 / 1e6,
+        top.0,
+        top.1,
+    );
+    Ok(())
+}
+
+/// Serve whole-network requests through the coordinator (the
+/// `serve-bench --net` path): same router and dynamic batcher as the
+/// model/conv paths, a [`NetForwardRunner`] behind it.
+fn serve_bench_net(net: Network, requests: usize) -> Result<()> {
+    use cuconv::net::network_graph;
+
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(20),
+        queue_capacity: 512,
+    };
+    let graph = network_graph(net);
+    println!("compiling {} for batch sizes [1, 2, 4] ...", graph.name);
+    let server = Server::start_net(
+        Box::new(CpuRefBackend::new()),
+        &graph,
+        &[1, 2, 4],
+        policy,
+    )?;
+    println!(
+        "serving {} end-to-end through the cpuref backend ({} requests, 4 client \
+         threads) ...",
+        graph.name,
+        requests
+    );
+    drive_and_report(&server, requests, 4)
 }
 
 /// Serve one convolution layer through the CPU reference backend — the
@@ -230,7 +356,7 @@ fn serve_bench_conv(spec: ConvSpec, requests: usize) -> Result<()> {
         spec.table_label(),
         requests
     );
-    drive_and_report(&server, requests)
+    drive_and_report(&server, requests, 8)
 }
 
 /// Serve the AOT model family through PJRT (needs the `pjrt` feature).
@@ -251,7 +377,7 @@ fn serve_bench_model(requests: usize) -> Result<()> {
     };
     let server = Server::start(manifest, config)?;
     println!("serving {requests} requests from 8 client threads ...");
-    drive_and_report(&server, requests)
+    drive_and_report(&server, requests, 8)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -262,13 +388,15 @@ fn serve_bench_model(_requests: usize) -> Result<()> {
     )
 }
 
-fn drive_and_report(server: &Server, requests: usize) -> Result<()> {
+fn drive_and_report(server: &Server, requests: usize, threads: usize) -> Result<()> {
     let h = server.handle();
     let elems = h.image_elems();
     std::thread::scope(|s| {
-        for t in 0..8u64 {
+        for t in 0..threads as u64 {
             let h = h.clone();
-            let n = requests / 8;
+            // Distribute the remainder so exactly `requests` are sent
+            // (integer division alone would drop `requests % threads`).
+            let n = requests / threads + usize::from((t as usize) < requests % threads);
             s.spawn(move || {
                 let mut rng = Rng::new(t);
                 for _ in 0..n {

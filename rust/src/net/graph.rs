@@ -1,0 +1,501 @@
+//! The network graph IR: a small typed DAG of CNN forward operators.
+//!
+//! Nodes are stored in topological order (an edge always points from a
+//! lower to a higher id), which every consumer relies on: shape
+//! inference walks the list once, and the planner's liveness analysis
+//! is a single backward scan. The IR is deliberately minimal — exactly
+//! the operators the five Table-1 networks need to run input-to-logits:
+//! convolution with a fused bias+ReLU epilogue, max/average pooling,
+//! channel concatenation (inception branches), residual addition
+//! (ResNet blocks) and the `Linear`+`Softmax` classifier tail.
+//!
+//! The graph is *batch-agnostic*: shapes are per-item
+//! ([`FeatShape`] = channels × height × width) and the batch dimension
+//! is chosen at plan time ([`crate::net::NetPlanner`]), mirroring how
+//! the zoo stores batch-1 [`ConvSpec`](crate::conv::ConvSpec)s and
+//! expands them with `with_batch`.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Per-item feature-map shape (the batch dimension lives in the plan).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FeatShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl FeatShape {
+    pub fn new(c: usize, h: usize, w: usize) -> FeatShape {
+        FeatShape { c, h, w }
+    }
+
+    /// Elements per batch item.
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+impl fmt::Display for FeatShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// Window geometry shared by the pooling operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2d {
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Pool2d {
+    fn out_dim(&self, d: usize) -> usize {
+        (d + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    fn check(&self, shape: FeatShape) -> Result<()> {
+        if self.k == 0 || self.stride == 0 {
+            bail!("pool window/stride must be nonzero");
+        }
+        if self.pad >= self.k {
+            // A window fully inside the padding would have no valid cell.
+            bail!("pool pad {} must be smaller than the window {}", self.pad, self.k);
+        }
+        if shape.h + 2 * self.pad < self.k || shape.w + 2 * self.pad < self.k {
+            bail!("pool window {} does not fit {}", self.k, shape);
+        }
+        Ok(())
+    }
+}
+
+/// Node id — an index into [`NetGraph::nodes`].
+pub type NodeId = usize;
+
+/// A forward operator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// The graph's single entry point (must be node 0). Carries the
+    /// per-item input shape.
+    Input(FeatShape),
+    /// Convolution with a fused bias (+ optional ReLU) epilogue. Square
+    /// `k×k` filters, symmetric padding — every layer of the five
+    /// networks fits this (stride ≠ 1 included; the Table-1 census only
+    /// *lists* stride-1 layers, the graph runs all of them).
+    Conv { m: usize, k: usize, stride: usize, pad: usize, relu: bool },
+    MaxPool(Pool2d),
+    /// Average pooling; padding cells are excluded from the divisor
+    /// (irrelevant for the zero-pad global pools the zoo networks use).
+    AvgPool(Pool2d),
+    /// Channel concatenation of ≥ 2 inputs with equal spatial dims
+    /// (inception branches).
+    Concat,
+    /// Elementwise sum of exactly two equal-shaped inputs, with an
+    /// optional fused ReLU (ResNet block joins).
+    ResidualAdd { relu: bool },
+    /// Fully connected layer over the flattened input (+ bias, optional
+    /// ReLU). Output shape is `out×1×1`.
+    Linear { out: usize, relu: bool },
+    /// Softmax over the class axis; requires a `c×1×1` input.
+    Softmax,
+}
+
+impl Op {
+    /// Short operator name for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input(_) => "input",
+            Op::Conv { .. } => "conv",
+            Op::MaxPool(_) => "maxpool",
+            Op::AvgPool(_) => "avgpool",
+            Op::Concat => "concat",
+            Op::ResidualAdd { .. } => "residual",
+            Op::Linear { .. } => "linear",
+            Op::Softmax => "softmax",
+        }
+    }
+}
+
+/// One graph node: an operator applied to earlier nodes' outputs.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Human-readable layer name (e.g. `inception4e.5x5`, `fire2.squeeze`).
+    pub name: String,
+    pub op: Op,
+    /// Producers, in operator order. Empty only for [`Op::Input`].
+    pub inputs: Vec<NodeId>,
+}
+
+/// A CNN forward graph in topological order. Build one with
+/// [`GraphBuilder`]; the last node's output is the network's result.
+#[derive(Debug, Clone)]
+pub struct NetGraph {
+    pub name: String,
+    nodes: Vec<Node>,
+}
+
+impl NetGraph {
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The node whose output is the network's result (the last node).
+    pub fn output_id(&self) -> NodeId {
+        self.nodes.len() - 1
+    }
+
+    /// The per-item input shape ([`Op::Input`] of node 0).
+    pub fn input_shape(&self) -> FeatShape {
+        match self.nodes[0].op {
+            Op::Input(s) => s,
+            _ => unreachable!("validated at construction: node 0 is Input"),
+        }
+    }
+
+    /// Type-check the graph: verify topological order and per-operator
+    /// shape rules, and return every node's output shape. This is the
+    /// shape-propagation pass the planner runs before compiling.
+    pub fn infer_shapes(&self) -> Result<Vec<FeatShape>> {
+        if self.nodes.is_empty() {
+            bail!("graph '{}' has no nodes", self.name);
+        }
+        let mut shapes: Vec<FeatShape> = Vec::with_capacity(self.nodes.len());
+        for (id, node) in self.nodes.iter().enumerate() {
+            let shape = infer_node(node, id, &shapes)
+                .map_err(|e| e.context(format!("node {id} '{}'", node.name)))?;
+            shapes.push(shape);
+        }
+        Ok(shapes)
+    }
+}
+
+/// Shape rule of one node given all earlier shapes.
+fn infer_node(node: &Node, id: NodeId, shapes: &[FeatShape]) -> Result<FeatShape> {
+    for &i in &node.inputs {
+        if i >= id {
+            bail!("input {i} is not an earlier node (graph must be topological)");
+        }
+    }
+    let arity = |want: usize| -> Result<()> {
+        if node.inputs.len() != want {
+            bail!("expects {want} input(s), got {}", node.inputs.len());
+        }
+        Ok(())
+    };
+    match &node.op {
+        Op::Input(s) => {
+            if id != 0 {
+                bail!("Input must be node 0");
+            }
+            arity(0)?;
+            if s.elems() == 0 {
+                bail!("empty input shape {s}");
+            }
+            Ok(*s)
+        }
+        Op::Conv { m, k, stride, pad, .. } => {
+            arity(1)?;
+            let x = shapes[node.inputs[0]];
+            if *m == 0 || *k == 0 || *stride == 0 {
+                bail!("conv m/k/stride must be nonzero");
+            }
+            if x.h + 2 * pad < *k || x.w + 2 * pad < *k {
+                bail!("filter {k}x{k} does not fit input {x} with pad {pad}");
+            }
+            Ok(FeatShape::new(
+                *m,
+                (x.h + 2 * pad - k) / stride + 1,
+                (x.w + 2 * pad - k) / stride + 1,
+            ))
+        }
+        Op::MaxPool(p) | Op::AvgPool(p) => {
+            arity(1)?;
+            let x = shapes[node.inputs[0]];
+            p.check(x)?;
+            Ok(FeatShape::new(x.c, p.out_dim(x.h), p.out_dim(x.w)))
+        }
+        Op::Concat => {
+            if node.inputs.len() < 2 {
+                bail!("concat needs at least 2 inputs");
+            }
+            let first = shapes[node.inputs[0]];
+            let mut c = 0;
+            for &i in &node.inputs {
+                let s = shapes[i];
+                if (s.h, s.w) != (first.h, first.w) {
+                    bail!("concat spatial mismatch: {s} vs {first}");
+                }
+                c += s.c;
+            }
+            Ok(FeatShape::new(c, first.h, first.w))
+        }
+        Op::ResidualAdd { .. } => {
+            arity(2)?;
+            let a = shapes[node.inputs[0]];
+            let b = shapes[node.inputs[1]];
+            if a != b {
+                bail!("residual shape mismatch: {a} vs {b}");
+            }
+            Ok(a)
+        }
+        Op::Linear { out, .. } => {
+            arity(1)?;
+            if *out == 0 {
+                bail!("linear output width must be nonzero");
+            }
+            Ok(FeatShape::new(*out, 1, 1))
+        }
+        Op::Softmax => {
+            arity(1)?;
+            let x = shapes[node.inputs[0]];
+            if x.h != 1 || x.w != 1 {
+                bail!("softmax needs a cx1x1 input, got {x}");
+            }
+            Ok(x)
+        }
+    }
+}
+
+/// Incremental graph builder: appends nodes in topological order and
+/// type-checks each one immediately, so shapes are available while
+/// building (e.g. [`GraphBuilder::global_avg_pool`] reads the current
+/// spatial size). Helper methods panic on a shape error — the builders
+/// construct the five fixed zoo networks, where a shape error is a bug,
+/// not an input condition; external graph construction goes through
+/// [`GraphBuilder::add`], which returns `Result`.
+pub struct GraphBuilder {
+    graph: NetGraph,
+    shapes: Vec<FeatShape>,
+}
+
+impl GraphBuilder {
+    /// Start a graph with its input node.
+    pub fn new(name: impl Into<String>, c: usize, h: usize, w: usize) -> GraphBuilder {
+        let shape = FeatShape::new(c, h, w);
+        GraphBuilder {
+            graph: NetGraph {
+                name: name.into(),
+                nodes: vec![Node {
+                    name: "input".to_string(),
+                    op: Op::Input(shape),
+                    inputs: Vec::new(),
+                }],
+            },
+            shapes: vec![shape],
+        }
+    }
+
+    /// The input node's id.
+    pub fn input(&self) -> NodeId {
+        0
+    }
+
+    /// Output shape of an already-added node.
+    pub fn shape(&self, id: NodeId) -> FeatShape {
+        self.shapes[id]
+    }
+
+    /// Append a node, type-checking it against the existing graph.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        op: Op,
+        inputs: Vec<NodeId>,
+    ) -> Result<NodeId> {
+        let node = Node { name: name.into(), op, inputs };
+        let id = self.graph.nodes.len();
+        let shape = infer_node(&node, id, &self.shapes)
+            .map_err(|e| e.context(format!("adding node '{}'", node.name)))?;
+        self.graph.nodes.push(node);
+        self.shapes.push(shape);
+        Ok(id)
+    }
+
+    fn must(&mut self, name: impl Into<String>, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        self.add(name, op, inputs).expect("zoo graph construction")
+    }
+
+    /// Convolution + bias + ReLU.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        m: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.must(name, Op::Conv { m, k, stride, pad, relu: true }, vec![from])
+    }
+
+    /// Stride-1 same-padded convolution + bias + ReLU (the census shape).
+    pub fn conv_same(&mut self, name: &str, from: NodeId, m: usize, k: usize) -> NodeId {
+        self.conv(name, from, m, k, 1, (k - 1) / 2)
+    }
+
+    /// Convolution + bias without the ReLU (ResNet expand convs — the
+    /// ReLU runs after the residual join).
+    pub fn conv_linear(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        m: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.must(name, Op::Conv { m, k, stride, pad, relu: false }, vec![from])
+    }
+
+    pub fn max_pool(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.must(name, Op::MaxPool(Pool2d { k, stride, pad }), vec![from])
+    }
+
+    /// Average pool over the full current spatial extent (→ `c×1×1`).
+    pub fn global_avg_pool(&mut self, name: &str, from: NodeId) -> NodeId {
+        let s = self.shape(from);
+        assert_eq!(s.h, s.w, "global pool expects square maps, got {s}");
+        self.must(name, Op::AvgPool(Pool2d { k: s.h, stride: 1, pad: 0 }), vec![from])
+    }
+
+    pub fn concat(&mut self, name: &str, parts: Vec<NodeId>) -> NodeId {
+        self.must(name, Op::Concat, parts)
+    }
+
+    pub fn residual_add(&mut self, name: &str, a: NodeId, b: NodeId, relu: bool) -> NodeId {
+        self.must(name, Op::ResidualAdd { relu }, vec![a, b])
+    }
+
+    pub fn linear(&mut self, name: &str, from: NodeId, out: usize, relu: bool) -> NodeId {
+        self.must(name, Op::Linear { out, relu }, vec![from])
+    }
+
+    pub fn softmax(&mut self, name: &str, from: NodeId) -> NodeId {
+        self.must(name, Op::Softmax, vec![from])
+    }
+
+    pub fn finish(self) -> NetGraph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain_infers_shapes() {
+        let mut b = GraphBuilder::new("t", 3, 8, 8);
+        let c1 = b.conv_same("c1", b.input(), 4, 3);
+        assert_eq!(b.shape(c1), FeatShape::new(4, 8, 8));
+        let p = b.max_pool("p", c1, 2, 2, 0);
+        assert_eq!(b.shape(p), FeatShape::new(4, 4, 4));
+        let g = b.global_avg_pool("gap", p);
+        assert_eq!(b.shape(g), FeatShape::new(4, 1, 1));
+        let l = b.linear("fc", g, 10, false);
+        let s = b.softmax("sm", l);
+        let graph = b.finish();
+        let shapes = graph.infer_shapes().unwrap();
+        assert_eq!(shapes[s], FeatShape::new(10, 1, 1));
+        assert_eq!(graph.output_id(), s);
+        assert_eq!(graph.input_shape(), FeatShape::new(3, 8, 8));
+    }
+
+    #[test]
+    fn strided_conv_halves_output() {
+        let mut b = GraphBuilder::new("t", 3, 224, 224);
+        let c = b.conv("stem", b.input(), 64, 7, 2, 3);
+        assert_eq!(b.shape(c), FeatShape::new(64, 112, 112));
+        // AlexNet conv1 geometry: 227 → 55 at 11x11/s4.
+        let mut b = GraphBuilder::new("t", 3, 227, 227);
+        let c = b.conv("conv1", b.input(), 96, 11, 4, 0);
+        assert_eq!(b.shape(c), FeatShape::new(96, 55, 55));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new("t", 8, 6, 6);
+        let a = b.conv_same("a", b.input(), 3, 1);
+        let c = b.conv_same("c", b.input(), 5, 3);
+        let cat = b.concat("cat", vec![a, c]);
+        assert_eq!(b.shape(cat), FeatShape::new(8, 6, 6));
+    }
+
+    #[test]
+    fn residual_requires_equal_shapes() {
+        let mut b = GraphBuilder::new("t", 4, 6, 6);
+        let a = b.conv_same("a", b.input(), 4, 3);
+        let ok = b.add("r", Op::ResidualAdd { relu: true }, vec![b.input(), a]);
+        assert!(ok.is_ok());
+        let bad = b.conv_same("b", b.input(), 5, 3);
+        let err = b.add("r2", Op::ResidualAdd { relu: true }, vec![b.input(), bad]);
+        assert!(err.is_err(), "channel mismatch must fail");
+    }
+
+    #[test]
+    fn invalid_graphs_are_rejected() {
+        // Concat spatial mismatch.
+        let mut b = GraphBuilder::new("t", 3, 8, 8);
+        let small = b.max_pool("p", b.input(), 2, 2, 0);
+        assert!(b.add("cat", Op::Concat, vec![0, small]).is_err());
+        // Softmax on a spatial map.
+        assert!(b.add("sm", Op::Softmax, vec![0]).is_err());
+        // Oversized filter.
+        assert!(b
+            .add("c", Op::Conv { m: 1, k: 9, stride: 1, pad: 0, relu: true }, vec![small])
+            .is_err());
+        // Pool pad >= window.
+        assert!(b
+            .add("p2", Op::MaxPool(Pool2d { k: 2, stride: 2, pad: 2 }), vec![0])
+            .is_err());
+        // Forward reference breaks topological order.
+        let g = NetGraph {
+            name: "bad".into(),
+            nodes: vec![
+                Node {
+                    name: "input".into(),
+                    op: Op::Input(FeatShape::new(1, 2, 2)),
+                    inputs: vec![],
+                },
+                Node {
+                    name: "c".into(),
+                    op: Op::Conv { m: 1, k: 1, stride: 1, pad: 0, relu: false },
+                    inputs: vec![2],
+                },
+            ],
+        };
+        assert!(g.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn op_kinds_are_stable_names() {
+        assert_eq!(Op::Concat.kind(), "concat");
+        assert_eq!(Op::Softmax.kind(), "softmax");
+        assert_eq!(
+            Op::Conv { m: 1, k: 1, stride: 1, pad: 0, relu: true }.kind(),
+            "conv"
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! The whole-network forward engine.
+//!
+//! The paper's motivation is *CNN inference* — "convolutions account
+//! for a large part of the overall network execution time" (§1) — but
+//! the rest of the crate executes one convolution at a time: the zoo
+//! holds the census, the coordinator serves a single layer. This
+//! subsystem makes the five Table-1 networks runnable input-to-logits,
+//! so network-level claims (conv share of total time, network speedup
+//! from adding cuConv to the algorithm pool) are measured rather than
+//! extrapolated:
+//!
+//! * [`graph`] — a small typed DAG IR: `Conv` with a fused bias+ReLU
+//!   epilogue, max/average pooling, `Concat` (inception), `ResidualAdd`
+//!   (ResNet), `Linear`+`Softmax` (classifier tails).
+//! * [`graphs`] — the five zoo networks as graphs, including the
+//!   stride≠1 layers the Table-1 census deliberately excludes
+//!   (AlexNet's 11×11/s4 conv1, the 7×7/s2 stems, ResNet's
+//!   downsampling convs) — cross-checked against the census by test.
+//! * [`ops`] — allocation-free CPU kernels for the non-conv operators.
+//! * [`planner`] — [`NetPlanner`] compiles a graph for any
+//!   [`Backend`](crate::backend::Backend): per-conv algorithm choice
+//!   (`algo_get`/`algo_find`), liveness analysis, an activation arena
+//!   whose slots ping-pong across the DAG, and one shared conv
+//!   [`Workspace`](crate::backend::Workspace) sized to the maximum
+//!   per-layer footprint. The steady-state [`NetPlan::forward_into`]
+//!   allocates no buffers — PR 2's per-conv contract at network scope.
+//!
+//! Serving sits on top: `coordinator::NetForwardRunner` runs whole-net
+//! requests behind the dynamic batcher, the CLI's `forward` command
+//! prints per-layer breakdowns, and the `e2e_forward` bench emits the
+//! network-level cuConv attribution (`BENCH_e2e.json`).
+
+pub mod graph;
+pub mod graphs;
+pub mod ops;
+pub mod planner;
+
+pub use graph::{FeatShape, GraphBuilder, NetGraph, Node, NodeId, Op, Pool2d};
+pub use graphs::{input_hw, network_graph, CLASSES};
+pub use planner::{AlgoChoice, LayerReport, NetPlan, NetPlanner};

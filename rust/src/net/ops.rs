@@ -1,0 +1,388 @@
+//! CPU implementations of the non-convolution graph operators.
+//!
+//! Same contract as the convolution substrate
+//! ([`CpuImpl::run_in`](crate::cpuref::CpuImpl::run_in)): every function
+//! writes into a caller-provided output slice (fully overwritten) and
+//! allocates nothing — the activation buffers come from the plan's
+//! arena ([`crate::net::NetPlan`]), so the steady-state forward pass is
+//! allocation-free end to end. Inputs are NCHW with the batch dimension
+//! explicit (`n` items of `shape` each).
+
+use crate::net::graph::{FeatShape, Pool2d};
+
+/// Add a per-channel bias to an NCHW activation in place, optionally
+/// followed by ReLU — the convolution epilogue (`out` is `n` items of
+/// `m·plane` values; `bias` has `m` entries).
+pub fn bias_relu_inplace(out: &mut [f32], m: usize, plane: usize, bias: &[f32], relu: bool) {
+    assert_eq!(bias.len(), m, "bias/channel mismatch");
+    assert_eq!(out.len() % (m * plane).max(1), 0, "output not whole items");
+    for (ch, row) in out.chunks_exact_mut(plane).enumerate() {
+        let b = bias[ch % m];
+        if relu {
+            for v in row.iter_mut() {
+                *v = (*v + b).max(0.0);
+            }
+        } else {
+            for v in row.iter_mut() {
+                *v += b;
+            }
+        }
+    }
+}
+
+/// Max pooling over `k×k` windows (NEG_INFINITY-initialized, so padding
+/// cells never win).
+pub fn max_pool_into(input: &[f32], n: usize, shape: FeatShape, p: Pool2d, out: &mut [f32]) {
+    pool_into(input, n, shape, p, out, true)
+}
+
+/// Average pooling over `k×k` windows. Padding cells are excluded from
+/// the divisor (equivalent to include-pad for the unpadded global pools
+/// the zoo networks use).
+pub fn avg_pool_into(input: &[f32], n: usize, shape: FeatShape, p: Pool2d, out: &mut [f32]) {
+    pool_into(input, n, shape, p, out, false)
+}
+
+fn pool_into(
+    input: &[f32],
+    n: usize,
+    shape: FeatShape,
+    p: Pool2d,
+    out: &mut [f32],
+    is_max: bool,
+) {
+    if is_max {
+        pool_planes::<true>(input, n, shape, p, out);
+    } else {
+        pool_planes::<false>(input, n, shape, p, out);
+    }
+}
+
+/// Pooling skeleton, monomorphized per mode so the max path pays no
+/// sum/count bookkeeping and the avg path no comparisons (the `MAX`
+/// branches are compile-time constants). One output plane reads one
+/// input plane — pooling never mixes channels or items.
+fn pool_planes<const MAX: bool>(
+    input: &[f32],
+    n: usize,
+    shape: FeatShape,
+    p: Pool2d,
+    out: &mut [f32],
+) {
+    let (h, w) = (shape.h, shape.w);
+    let oh = (h + 2 * p.pad - p.k) / p.stride + 1;
+    let ow = (w + 2 * p.pad - p.k) / p.stride + 1;
+    assert_eq!(input.len(), n * shape.elems(), "pool input mismatch");
+    assert_eq!(out.len(), n * shape.c * oh * ow, "pool output mismatch");
+    for (q, orow) in out.chunks_exact_mut(oh * ow).enumerate() {
+        let iplane = &input[q * h * w..(q + 1) * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = if MAX { f32::NEG_INFINITY } else { 0.0 };
+                let mut count = 0usize;
+                for ky in 0..p.k {
+                    let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..p.k {
+                        let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let v = iplane[iy as usize * w + ix as usize];
+                        if MAX {
+                            acc = acc.max(v);
+                        } else {
+                            acc += v;
+                            count += 1;
+                        }
+                    }
+                }
+                orow[oy * ow + ox] = if MAX { acc } else { acc / count as f32 };
+            }
+        }
+    }
+}
+
+/// Copy one concat part into its channel band of the output: `src` is
+/// `n` items of `c_part·plane` values, written at channel offset
+/// `c_off` of an output with `c_total` channels. Callers invoke this
+/// once per input, walking `c_off` — no gather list is built, so a
+/// concat node allocates nothing.
+pub fn concat_part_into(
+    src: &[f32],
+    n: usize,
+    plane: usize,
+    (c_part, c_off, c_total): (usize, usize, usize),
+    out: &mut [f32],
+) {
+    assert_eq!(src.len(), n * c_part * plane, "concat part mismatch");
+    assert_eq!(out.len(), n * c_total * plane, "concat output mismatch");
+    assert!(c_off + c_part <= c_total, "concat band out of range");
+    let part_len = c_part * plane;
+    for item in 0..n {
+        let dst = (item * c_total + c_off) * plane;
+        out[dst..dst + part_len].copy_from_slice(&src[item * part_len..(item + 1) * part_len]);
+    }
+}
+
+/// `out = a + b`, optionally followed by ReLU (the ResNet block join).
+pub fn residual_add_into(a: &[f32], b: &[f32], relu: bool, out: &mut [f32]) {
+    assert_eq!(a.len(), b.len(), "residual operand mismatch");
+    assert_eq!(a.len(), out.len(), "residual output mismatch");
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        let v = x + y;
+        *o = if relu { v.max(0.0) } else { v };
+    }
+}
+
+/// Weights of a fully connected layer. The matrix is stored
+/// **transposed** (`[in, out]` row-major) so the forward pass is a
+/// plain row-major GEMM `out[n, out] = x[n, in] · wt[in, out]` on
+/// [`sgemm`](crate::cpuref::gemm::sgemm) with no per-call transpose.
+#[derive(Debug, Clone)]
+pub struct LinearWeights {
+    pub in_f: usize,
+    pub out_f: usize,
+    /// `[in_f, out_f]` row-major (transposed from the conventional
+    /// `[out, in]`).
+    pub wt: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Fully connected layer over flattened inputs: `n` items of `in_f`
+/// values → `n` items of `out_f`, plus bias and optional ReLU.
+pub fn linear_into(input: &[f32], n: usize, lw: &LinearWeights, relu: bool, out: &mut [f32]) {
+    assert_eq!(input.len(), n * lw.in_f, "linear input mismatch");
+    assert_eq!(out.len(), n * lw.out_f, "linear output mismatch");
+    assert_eq!(lw.wt.len(), lw.in_f * lw.out_f, "linear weight mismatch");
+    out.fill(0.0); // sgemm accumulates
+    crate::cpuref::gemm::sgemm(
+        n,
+        lw.in_f,
+        lw.out_f,
+        input,
+        &lw.wt,
+        out,
+        crate::cpuref::gemm::default_threads(),
+    );
+    bias_relu_inplace(out, lw.out_f, 1, &lw.bias, relu);
+}
+
+/// Row-wise softmax: `n` items of `classes` logits → probabilities.
+/// Max-subtracted for numerical stability.
+pub fn softmax_into(input: &[f32], n: usize, classes: usize, out: &mut [f32]) {
+    assert_eq!(input.len(), n * classes, "softmax input mismatch");
+    assert_eq!(out.len(), n * classes, "softmax output mismatch");
+    for (row_in, row_out) in
+        input.chunks_exact(classes).zip(out.chunks_exact_mut(classes))
+    {
+        let max = row_in.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &v) in row_out.iter_mut().zip(row_in.iter()) {
+            let e = (v - max).exp();
+            *o = e;
+            sum += e;
+        }
+        for o in row_out.iter_mut() {
+            *o /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        v
+    }
+
+    /// Brute-force pooling oracle, written independently of the
+    /// plane-sliced implementation above.
+    fn pool_oracle(
+        input: &[f32],
+        n: usize,
+        s: FeatShape,
+        p: Pool2d,
+        is_max: bool,
+    ) -> Vec<f32> {
+        let oh = (s.h + 2 * p.pad - p.k) / p.stride + 1;
+        let ow = (s.w + 2 * p.pad - p.k) / p.stride + 1;
+        let mut out = vec![0.0f32; n * s.c * oh * ow];
+        for item in 0..n {
+            for c in 0..s.c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut vals = Vec::new();
+                        for ky in 0..p.k {
+                            for kx in 0..p.k {
+                                let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                                let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                                if iy >= 0
+                                    && iy < s.h as isize
+                                    && ix >= 0
+                                    && ix < s.w as isize
+                                {
+                                    vals.push(
+                                        input[((item * s.c + c) * s.h + iy as usize) * s.w
+                                            + ix as usize],
+                                    );
+                                }
+                            }
+                        }
+                        out[((item * s.c + c) * oh + oy) * ow + ox] = if is_max {
+                            vals.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+                        } else {
+                            vals.iter().sum::<f32>() / vals.len() as f32
+                        };
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pooling_matches_bruteforce_oracle() {
+        let mut rng = Rng::new(0x9001);
+        for (s, p) in [
+            (FeatShape::new(3, 7, 7), Pool2d { k: 3, stride: 2, pad: 0 }),
+            (FeatShape::new(2, 8, 8), Pool2d { k: 3, stride: 2, pad: 1 }),
+            (FeatShape::new(4, 5, 5), Pool2d { k: 2, stride: 2, pad: 0 }),
+            (FeatShape::new(1, 6, 6), Pool2d { k: 3, stride: 1, pad: 1 }),
+            (FeatShape::new(5, 4, 4), Pool2d { k: 4, stride: 1, pad: 0 }), // global
+        ] {
+            for n in [1usize, 3] {
+                let input = rand(&mut rng, n * s.elems());
+                let oh = (s.h + 2 * p.pad - p.k) / p.stride + 1;
+                let mut got = vec![0.0f32; n * s.c * oh * oh];
+                max_pool_into(&input, n, s, p, &mut got);
+                assert_eq!(got, pool_oracle(&input, n, s, p, true), "max {s} {p:?}");
+                avg_pool_into(&input, n, s, p, &mut got);
+                let want = pool_oracle(&input, n, s, p, false);
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert!((g - w).abs() < 1e-6, "avg {s} {p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_avg_pool_is_plane_mean() {
+        let s = FeatShape::new(2, 3, 3);
+        let input: Vec<f32> = (0..18).map(|v| v as f32).collect();
+        let mut out = vec![0.0f32; 2];
+        avg_pool_into(&input, 1, s, Pool2d { k: 3, stride: 1, pad: 0 }, &mut out);
+        assert_eq!(out, vec![4.0, 13.0]); // means of 0..9 and 9..18
+    }
+
+    #[test]
+    fn bias_relu_applies_per_channel() {
+        // 2 items x 2 channels x 3-pixel planes.
+        let mut out = vec![
+            1.0, -1.0, 0.5, /* c0 */ 2.0, -2.0, 0.0, /* c1 */
+            -0.5, 0.0, 3.0, /* c0 */ 1.0, 1.0, 1.0, /* c1 */
+        ];
+        bias_relu_inplace(&mut out, 2, 3, &[0.25, -1.0], true);
+        assert_eq!(
+            out,
+            vec![1.25, 0.0, 0.75, 1.0, 0.0, 0.0, 0.0, 0.25, 3.25, 0.0, 0.0, 0.0]
+        );
+        // Without relu: plain add.
+        let mut out = vec![1.0, -1.0];
+        bias_relu_inplace(&mut out, 2, 1, &[1.0, 1.0], false);
+        assert_eq!(out, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn concat_places_bands_per_item() {
+        // Two parts (c=1 and c=2) over 2 items of 2-pixel planes.
+        let a = vec![1.0, 2.0, /* item1 */ 10.0, 20.0];
+        let b = vec![3.0, 4.0, 5.0, 6.0, /* item1 */ 30.0, 40.0, 50.0, 60.0];
+        let mut out = vec![0.0f32; 2 * 3 * 2];
+        concat_part_into(&a, 2, 2, (1, 0, 3), &mut out);
+        concat_part_into(&b, 2, 2, (2, 1, 3), &mut out);
+        assert_eq!(
+            out,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 10.0, 20.0, 30.0, 40.0, 50.0, 60.0]
+        );
+    }
+
+    #[test]
+    fn residual_add_matches_elementwise() {
+        let a = vec![1.0, -2.0, 3.0];
+        let b = vec![0.5, 1.0, -4.0];
+        let mut out = vec![0.0f32; 3];
+        residual_add_into(&a, &b, false, &mut out);
+        assert_eq!(out, vec![1.5, -1.0, -1.0]);
+        residual_add_into(&a, &b, true, &mut out);
+        assert_eq!(out, vec![1.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn linear_matches_bruteforce_oracle() {
+        let mut rng = Rng::new(0x9002);
+        let (n, in_f, out_f) = (3usize, 11usize, 7usize);
+        let input = rand(&mut rng, n * in_f);
+        let lw = LinearWeights {
+            in_f,
+            out_f,
+            wt: rand(&mut rng, in_f * out_f),
+            bias: rand(&mut rng, out_f),
+        };
+        let mut got = vec![0.0f32; n * out_f];
+        linear_into(&input, n, &lw, false, &mut got);
+        for item in 0..n {
+            for o in 0..out_f {
+                let mut want = lw.bias[o];
+                for i in 0..in_f {
+                    want += input[item * in_f + i] * lw.wt[i * out_f + o];
+                }
+                let g = got[item * out_f + o];
+                assert!((g - want).abs() < 1e-4, "({item},{o}): {g} vs {want}");
+            }
+        }
+        // ReLU clamps the negative entries.
+        let mut relued = vec![0.0f32; n * out_f];
+        linear_into(&input, n, &lw, true, &mut relued);
+        for (r, g) in relued.iter().zip(got.iter()) {
+            assert_eq!(*r, g.max(0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut rng = Rng::new(0x9003);
+        let (n, classes) = (4usize, 9usize);
+        let input = rand(&mut rng, n * classes);
+        let mut out = vec![0.0f32; n * classes];
+        softmax_into(&input, n, classes, &mut out);
+        for row in out.chunks_exact(classes) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| p > 0.0 && p < 1.0));
+        }
+        // Ordering preserved: argmax of logits == argmax of probs.
+        for (lrow, prow) in input.chunks_exact(classes).zip(out.chunks_exact(classes)) {
+            let am = |r: &[f32]| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            assert_eq!(am(lrow), am(prow));
+        }
+        // Large logits do not overflow (max-subtraction).
+        let big = vec![1000.0f32, 1001.0, 999.0];
+        let mut o = vec![0.0f32; 3];
+        softmax_into(&big, 1, 3, &mut o);
+        assert!(o.iter().all(|p| p.is_finite()));
+        assert!((o.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+}

@@ -13,6 +13,11 @@
 //!
 //! 88 distinct configs × 7 batch sizes = 616 cases (the paper's ">600").
 //!
+//! The census lists *distinct stride-1* configurations only;
+//! [`crate::net`] expands these sequences into runnable input-to-logits
+//! forward graphs (stride≠1 stems, pooling, branches and classifier
+//! tails restored), cross-checked against this census by test.
+//!
 //! Derivation notes (the paper lists only the census, not the configs):
 //! * GoogleNet: conv2 3×3-reduce plus, per inception module, the 1×1,
 //!   3×3-reduce, 3×3, 5×5-reduce and 5×5 branches. Pool-projection 1×1s
@@ -66,9 +71,15 @@ impl Network {
         }
     }
 
-    /// Input size of the full network (all five use 224×224×3).
+    /// Input size of the full network as the forward engine runs it
+    /// ([`crate::net::graphs`]): 224×224×3, except single-tower AlexNet,
+    /// whose conv1 (11×11 stride 4, the census-excluded layer) needs
+    /// 227×227×3 to produce the canonical 55×55 output.
     pub fn input_size(&self) -> (usize, usize, usize) {
-        (224, 224, 3)
+        match self {
+            Network::AlexNet => (227, 227, 3),
+            _ => (224, 224, 3),
+        }
     }
 
     /// Input size to the last convolutional layer, as listed in Table 1.

@@ -1,0 +1,184 @@
+//! Integration tests of the whole-network forward engine: the five zoo
+//! networks run input-to-logits on the CPU reference backend, and the
+//! steady-state forward path is allocation-flat (PR 2's per-conv
+//! workspace test at network scope).
+
+use cuconv::backend::CpuRefBackend;
+use cuconv::net::{
+    input_hw, network_graph, FeatShape, GraphBuilder, NetPlanner, CLASSES,
+};
+use cuconv::util::rng::Rng;
+use cuconv::zoo::Network;
+
+fn planner() -> NetPlanner {
+    NetPlanner::new(Box::new(CpuRefBackend::new()))
+}
+
+/// Shape propagation: every zoo network's graph type-checks from its
+/// 224×224 (227×227 AlexNet) input down to its 1000-class logits.
+#[test]
+fn every_network_graph_type_checks_input_to_logits() {
+    for net in Network::ALL {
+        let graph = network_graph(net);
+        let shapes = graph
+            .infer_shapes()
+            .unwrap_or_else(|e| panic!("{}: {e:#}", graph.name));
+        let hw = input_hw(net);
+        assert_eq!(graph.input_shape(), FeatShape::new(3, hw, hw), "{}", graph.name);
+        assert_eq!(
+            shapes[graph.output_id()],
+            FeatShape::new(CLASSES, 1, 1),
+            "{} must end at {CLASSES} logits",
+            graph.name
+        );
+    }
+}
+
+/// The acceptance run: all five networks execute a full forward pass on
+/// `CpuRefBackend` with correct output shapes and well-formed
+/// probabilities. (Real compute — VGG19 alone is ~20 GFLOP — which is
+/// why the test profiles build the library optimized.)
+#[test]
+fn all_five_networks_run_a_full_forward_pass() {
+    for net in Network::ALL {
+        let graph = network_graph(net);
+        let p = planner();
+        let mut plan = p
+            .compile(&graph, 1)
+            .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", graph.name));
+        let hw = input_hw(net);
+        assert_eq!(plan.input_elems(), 3 * hw * hw, "{}", graph.name);
+        assert_eq!(plan.output_elems(), CLASSES, "{}", graph.name);
+
+        let mut rng = Rng::new(0x5EED ^ hw as u64);
+        let mut image = vec![0.0f32; plan.input_elems()];
+        rng.fill_uniform(&mut image, -1.0, 1.0);
+        let probs = plan.forward(p.backend(), &image).expect("forward");
+
+        assert_eq!(probs.len(), CLASSES, "{}", graph.name);
+        assert!(
+            probs.iter().all(|v| v.is_finite() && *v >= 0.0),
+            "{}: non-finite/negative probabilities (weight-scale blowup?)",
+            graph.name
+        );
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "{}: softmax sums to {sum}", graph.name);
+        // Not a degenerate (exactly uniform) distribution — a dead
+        // network (all-zero logits) would produce max == 1/CLASSES.
+        // Seeded weights discriminate only weakly after global
+        // pooling, so the margin is small by design.
+        let max = probs.iter().copied().fold(0.0f32, f32::max);
+        assert!(max > 1.02 / CLASSES as f32, "{}: flat output (max {max})", graph.name);
+        // Every conv node got an algorithm plan.
+        assert!(!plan.conv_algorithms().is_empty(), "{}", graph.name);
+    }
+}
+
+/// Steady-state zero-allocation: over ≥100 forwards the arena capacity,
+/// workspace capacity and workspace high-water stay exactly flat, and
+/// dirty buffer reuse never changes the output. Uses a small synthetic
+/// graph that exercises every operator (conv with epilogue, both pools,
+/// concat, residual, linear, softmax) so 100 iterations stay fast.
+#[test]
+fn arena_and_workspace_are_flat_over_100_forwards() {
+    let mut b = GraphBuilder::new("steady", 3, 16, 16);
+    let stem = b.conv("stem", b.input(), 8, 3, 2, 1); // 16 -> 8
+    let br1 = b.conv_same("br1", stem, 8, 1);
+    let br2 = b.conv_same("br2", stem, 8, 3);
+    let cat = b.concat("cat", vec![br1, br2]); // 16ch
+    let mix = b.conv_linear("mix", cat, 8, 1, 1, 0);
+    let res = b.residual_add("res", mix, stem, true);
+    let pool = b.max_pool("pool", res, 2, 2, 0); // 8 -> 4
+    let gap = b.global_avg_pool("gap", pool);
+    let fc = b.linear("fc", gap, 10, false);
+    b.softmax("softmax", fc);
+    let graph = b.finish();
+
+    let p = planner();
+    let mut plan = p.compile(&graph, 2).unwrap();
+    let mut rng = Rng::new(77);
+    let mut image = vec![0.0f32; plan.input_elems()];
+    rng.fill_uniform(&mut image, -1.0, 1.0);
+
+    // Warm up once, then record the high-water marks.
+    let first = plan.forward(p.backend(), &image).unwrap();
+    let arena = plan.arena_capacity_bytes();
+    let planned = plan.planned_arena_bytes();
+    let ws_cap = plan.workspace().capacity_bytes();
+    let ws_high = plan.workspace().high_water_bytes();
+    assert!(arena > 0);
+    assert!(arena >= planned, "arena below its own plan");
+    assert!(ws_cap >= plan.max_conv_workspace_bytes());
+
+    for i in 0..100 {
+        let out = plan.forward(p.backend(), &image).unwrap();
+        assert_eq!(out, first, "forward {i} diverged (dirty-buffer reuse bug)");
+        assert_eq!(plan.arena_capacity_bytes(), arena, "arena grew at forward {i}");
+        assert_eq!(
+            plan.workspace().capacity_bytes(),
+            ws_cap,
+            "workspace grew at forward {i}"
+        );
+        assert_eq!(
+            plan.workspace().high_water_bytes(),
+            ws_high,
+            "workspace high-water moved at forward {i}"
+        );
+    }
+}
+
+/// The arena plan is far smaller than one-buffer-per-node: liveness
+/// actually reuses memory on a real network graph, and the arena-backed
+/// execution matches a fresh-buffer-per-node reference bit for bit.
+#[test]
+fn arena_reuses_memory_and_preserves_numerics_on_a_real_network() {
+    // SqueezeNet: the smallest zoo network, with real branch structure.
+    let graph = network_graph(Network::SqueezeNet);
+    let p = planner();
+    let mut plan = p.compile(&graph, 1).unwrap();
+
+    let shapes = graph.infer_shapes().unwrap();
+    let naive_bytes: usize = shapes.iter().map(|s| s.elems() * 4).sum();
+    assert!(
+        plan.arena_capacity_bytes() * 3 < naive_bytes,
+        "arena {} B vs one-buffer-per-node {} B: liveness is not reusing",
+        plan.arena_capacity_bytes(),
+        naive_bytes
+    );
+    assert!(plan.slot_count() < graph.len() / 4, "slots: {}", plan.slot_count());
+
+    let mut rng = Rng::new(123);
+    let mut image = vec![0.0f32; plan.input_elems()];
+    rng.fill_uniform(&mut image, -1.0, 1.0);
+    let want = plan.forward_reference(p.backend(), &image).unwrap();
+    let _ = plan.forward(p.backend(), &image).unwrap(); // dirty the arena
+    let got = plan.forward(p.backend(), &image).unwrap();
+    assert_eq!(got, want, "arena execution diverged from the reference");
+}
+
+/// Batched whole-network forwards through `compile_for_sizes` match the
+/// same items run one by one — the property the serving batcher relies
+/// on (one pinned algorithm per conv node across batch sizes).
+#[test]
+fn network_forward_is_batch_grouping_invariant() {
+    let graph = network_graph(Network::SqueezeNet);
+    let p = planner();
+    let mut plans = p.compile_for_sizes(&graph, &[1, 2]).unwrap();
+    let item = plans[0].1.input_elems();
+    let mut rng = Rng::new(9);
+    let mut batch = vec![0.0f32; 2 * item];
+    rng.fill_uniform(&mut batch, -1.0, 1.0);
+    let batched = {
+        let (_, plan2) = &mut plans[1];
+        plan2.forward(p.backend(), &batch).unwrap()
+    };
+    let (_, plan1) = &mut plans[0];
+    for i in 0..2 {
+        let single = plan1.forward(p.backend(), &batch[i * item..(i + 1) * item]).unwrap();
+        assert_eq!(
+            single,
+            batched[i * CLASSES..(i + 1) * CLASSES].to_vec(),
+            "item {i} depends on batch grouping"
+        );
+    }
+}
