@@ -125,9 +125,11 @@ fn start_server() -> anyhow::Result<Server> {
 
     use cuconv::backend::CpuRefBackend;
     use cuconv::conv::ConvSpec;
-    use cuconv::coordinator::BatchPolicy;
+    use cuconv::coordinator::{BatchPolicy, PoolConfig};
 
-    // The paper's headline layer, served as the workload.
+    // The paper's headline layer, served as the workload — through a
+    // two-shard worker pool (each shard owns a replicated runner:
+    // shared filters and plans, private workspace and output buffers).
     let spec = ConvSpec::paper(7, 1, 1, 32, 832);
     println!("no pjrt feature: serving conv {} through the cpuref backend", spec);
     let policy = BatchPolicy {
@@ -136,9 +138,18 @@ fn start_server() -> anyhow::Result<Server> {
         queue_capacity: 512,
     };
     let t0 = Instant::now();
-    let server =
-        Server::start_conv(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4, 8], policy)?;
-    println!("server up in {:.2}s (plans created for batch sizes 1,2,4,8)\n", t0.elapsed().as_secs_f64());
+    let server = Server::start_conv(
+        Box::new(CpuRefBackend::new()),
+        spec,
+        None,
+        &[1, 2, 4, 8],
+        policy,
+        PoolConfig::with_workers(2),
+    )?;
+    println!(
+        "server up in {:.2}s (plans created for batch sizes 1,2,4,8 on 2 worker shards)\n",
+        t0.elapsed().as_secs_f64()
+    );
     Ok(server)
 }
 

@@ -60,11 +60,19 @@ fn start(policy: BatchPolicy, adaptive: bool) -> Option<Server> {
 fn start(policy: BatchPolicy, _adaptive: bool) -> Option<Server> {
     use cuconv::backend::CpuRefBackend;
     use cuconv::conv::ConvSpec;
+    use cuconv::coordinator::PoolConfig;
 
     let spec = ConvSpec::paper(7, 1, 1, 32, 832);
     Some(
-        Server::start_conv(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4, 8], policy)
-            .expect("server"),
+        Server::start_conv(
+            Box::new(CpuRefBackend::new()),
+            spec,
+            None,
+            &[1, 2, 4, 8],
+            policy,
+            PoolConfig::default(),
+        )
+        .expect("server"),
     )
 }
 
@@ -126,8 +134,8 @@ fn main() {
     // Open-loop Poisson sweep: latency vs offered load (the serving
     // paper's load/latency curve).
     println!("\nopen-loop Poisson arrivals (dynamic batching b<=8/4ms):");
-    println!("offered rps  achieved  completed  rejected  p50 ms   p99 ms");
-    println!("------------------------------------------------------------");
+    println!("offered rps  achieved  completed  rejected  failed  p50 ms   p99 ms");
+    println!("--------------------------------------------------------------------");
     let policy = BatchPolicy {
         max_batch: 8,
         max_delay: Duration::from_millis(4),
@@ -147,11 +155,12 @@ fn main() {
             .map(|l| (l.p50 * 1e3, l.p99 * 1e3))
             .unwrap_or((f64::NAN, f64::NAN));
         println!(
-            "{:11.0}  {:8.1}  {:9}  {:8}  {:6.2}  {:7.2}",
+            "{:11.0}  {:8.1}  {:9}  {:8}  {:6}  {:6.2}  {:7.2}",
             report.offered_rps,
             report.achieved_rps,
             report.completed,
             report.rejected,
+            report.failed,
             p50,
             p99
         );

@@ -1,0 +1,131 @@
+//! Bench: worker-pool scaling of whole-network serving — the
+//! workers-vs-throughput curve for the sharded coordinator.
+//!
+//! For each worker count the same network is served through
+//! [`Server::start_net`] with replicated `NetPlan`s (shared weights,
+//! per-worker arenas/workspaces) and driven closed-loop by
+//! `2 × workers` clients. To keep total convolution fan-out constant
+//! while worker-level parallelism varies, each configuration caps the
+//! per-conv thread count at `cores / workers` via `CUCONV_CPU_THREADS`
+//! — the curve then isolates *request-level* scaling, which is what
+//! the pool adds over PR 3's single router.
+//!
+//! Results land in `BENCH_serve.json` at the repository root (validated
+//! in CI by `tools/check_bench.py`). Environment knobs:
+//! `CUCONV_BENCH_SERVE_NET` (default `squeezenet`),
+//! `CUCONV_BENCH_SERVE_REQUESTS` (default 96, per configuration).
+
+use std::time::Duration;
+
+use cuconv::backend::CpuRefBackend;
+use cuconv::coordinator::{run_closed_loop, BatchPolicy, PoolConfig, Server};
+use cuconv::net::network_graph;
+use cuconv::util::json::Json;
+use cuconv::zoo::Network;
+
+fn parse_net(name: &str) -> Network {
+    match name {
+        "googlenet" => Network::GoogleNet,
+        "squeezenet" => Network::SqueezeNet,
+        "alexnet" => Network::AlexNet,
+        "resnet50" => Network::ResNet50,
+        "vgg19" => Network::Vgg19,
+        other => panic!("unknown network '{other}'"),
+    }
+}
+
+fn main() {
+    let requests: usize = std::env::var("CUCONV_BENCH_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(96);
+    let net = parse_net(
+        &std::env::var("CUCONV_BENCH_SERVE_NET")
+            .unwrap_or_else(|_| "squeezenet".to_string()),
+    );
+    let cores =
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let graph = network_graph(net);
+
+    println!(
+        "serve scaling: {} on {cores} cores, {requests} requests per point",
+        graph.name
+    );
+    println!("workers  conv threads  rps      p50<= ms  p99<= ms  mean batch  scaling");
+    println!("------------------------------------------------------------------------");
+
+    let mut points = Vec::new();
+    let mut base_rps = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let conv_threads = (cores / workers).max(1);
+        std::env::set_var("CUCONV_CPU_THREADS", conv_threads.to_string());
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(5),
+            queue_capacity: 256,
+        };
+        let server = Server::start_net(
+            Box::new(CpuRefBackend::new()),
+            &graph,
+            &[1, 2, 4],
+            policy,
+            PoolConfig::with_workers(workers),
+        )
+        .expect("server");
+        let clients = 2 * workers;
+        // Warmup (first-touch paging of each replica's arena), then the
+        // timed run.
+        run_closed_loop(&server.handle(), 4 * workers, clients, 1);
+        let report = run_closed_loop(&server.handle(), requests, clients, 2);
+        assert_eq!(
+            report.completed + report.rejected + report.failed,
+            requests,
+            "closed-loop accounting must cover every offered request"
+        );
+        let m = server.metrics();
+        if workers == 1 {
+            base_rps = report.achieved_rps;
+        }
+        let scaling =
+            if base_rps > 0.0 { report.achieved_rps / base_rps } else { f64::NAN };
+        let (p50_ms, p99_ms) = report
+            .latency
+            .as_ref()
+            .map(|l| (l.p50 * 1e3, l.p99 * 1e3))
+            .unwrap_or((f64::NAN, f64::NAN));
+        println!(
+            "{workers:7}  {conv_threads:12}  {:7.1}  {p50_ms:8.2}  {p99_ms:8.2}  \
+             {:10.2}  {scaling:6.2}x",
+            report.achieved_rps, m.mean_batch_size
+        );
+        points.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("conv_threads_per_worker", Json::num(conv_threads as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("rps", Json::num(report.achieved_rps)),
+            ("completed", Json::num(report.completed as f64)),
+            ("rejected", Json::num(report.rejected as f64)),
+            ("failed", Json::num(report.failed as f64)),
+            ("p50_ms", Json::num(p50_ms)),
+            ("p99_ms", Json::num(p99_ms)),
+            ("mean_batch", Json::num(m.mean_batch_size)),
+            ("scaling_vs_1_worker", Json::num(scaling)),
+        ]));
+    }
+    std::env::remove_var("CUCONV_CPU_THREADS");
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("serve_scaling")),
+        ("network", Json::str(graph.name.clone())),
+        ("backend", Json::str("cpuref")),
+        ("cores", Json::num(cores as f64)),
+        ("requests_per_point", Json::num(requests as f64)),
+        ("points", Json::arr(points)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match std::fs::write(path, report.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\n(could not write {path}: {e})"),
+    }
+    println!("serve_scaling bench OK ({requests} requests per worker count)");
+}

@@ -96,9 +96,13 @@ impl Support {
 
 /// An execution substrate for convolutions.
 ///
-/// Implementations are `Send` so a boxed backend can be handed to the
-/// serving coordinator's router thread.
-pub trait Backend: Send {
+/// Implementations are `Send + Sync` so one backend instance can be
+/// handed to the serving coordinator and *shared* by every worker in a
+/// sharded pool (plans and executes take `&self`; cuDNN's "one library
+/// handle, many contexts" shape). In-tree backends qualify naturally:
+/// `CpuRefBackend` keeps only an atomic counter, `PjrtBackend` funnels
+/// device work through a channel to its executor thread.
+pub trait Backend: Send + Sync {
     /// Stable backend name (also stamped into the plans it creates).
     fn name(&self) -> &'static str;
 

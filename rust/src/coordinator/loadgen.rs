@@ -1,12 +1,15 @@
-//! Open-loop load generation for serving experiments.
+//! Load generation for serving experiments: a closed-loop driver
+//! (N clients, back-to-back requests — peak throughput) and an
+//! open-loop Poisson driver (requests arrive whether or not the server
+//! keeps up — the load/latency curve of EXPERIMENTS.md §End-to-end).
 //!
-//! The closed-loop drivers in the examples measure peak throughput; an
-//! inference service is evaluated under an *open-loop* arrival process
-//! (requests arrive whether or not the server keeps up). This module
-//! generates Poisson arrivals at a target rate, fires them at a
-//! [`ServerHandle`](crate::coordinator::ServerHandle), and reports the
-//! latency distribution plus the rejected (backpressured) count — the
-//! methodology behind EXPERIMENTS.md §End-to-end's load/latency curve.
+//! Both report through [`LoadReport`], which keeps the three outcomes
+//! separate: **completed** (a response came back), **rejected**
+//! (backpressured at submission — every bounded worker queue was
+//! full), and **failed** (admitted, but the server errored or dropped
+//! the reply). Rejected and failed requests are never counted as
+//! completed and never enter the latency distribution — a saturated
+//! server must look saturated in the report, not faster.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -26,13 +29,19 @@ pub struct LoadSpec {
     pub seed: u64,
 }
 
-/// Outcome of an open-loop run.
+/// Outcome of a load run. `completed + rejected + failed` equals the
+/// requests offered.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     pub offered_rps: f64,
+    /// Completed requests per wall-second (rejected/failed excluded).
     pub achieved_rps: f64,
     pub completed: usize,
+    /// Backpressured at submission: every bounded worker queue was full.
     pub rejected: usize,
+    /// Admitted but not answered: the server errored or dropped the
+    /// reply.
+    pub failed: usize,
     /// End-to-end latency summary over completed requests (seconds).
     pub latency: Option<Summary>,
     pub wall_seconds: f64,
@@ -100,7 +109,73 @@ pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
         offered_rps: spec.rate_rps,
         achieved_rps: latencies.len() as f64 / wall,
         completed: latencies.len(),
-        rejected: rejected + failed,
+        rejected,
+        failed,
+        latency: Summary::of(&latencies),
+        wall_seconds: wall,
+    }
+}
+
+/// Run a closed-loop load test: `threads` clients each submit their
+/// share of `requests` back-to-back, blocking on every reply — the
+/// peak-throughput methodology behind `serve-bench` and the scaling
+/// bench. Unlike a bare `infer` loop, the accounting here keeps
+/// rejected (backpressured) submissions and failed executions out of
+/// the completed count and the latency distribution.
+pub fn run_closed_loop(
+    handle: &ServerHandle,
+    requests: usize,
+    threads: usize,
+    seed: u64,
+) -> LoadReport {
+    let threads = threads.max(1);
+    let elems = handle.image_elems();
+    let started = Instant::now();
+    let per_thread: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = handle.clone();
+                // Distribute the remainder so exactly `requests` are
+                // offered (integer division alone would drop
+                // `requests % threads`).
+                let n = requests / threads + usize::from(t < requests % threads);
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ t as u64);
+                    let mut latencies = Vec::with_capacity(n);
+                    let (mut rejected, mut failed) = (0usize, 0usize);
+                    for _ in 0..n {
+                        let mut img = vec![0.0f32; elems];
+                        rng.fill_uniform(&mut img, -1.0, 1.0);
+                        match h.submit(img) {
+                            Ok(rx) => match rx.recv() {
+                                Ok(Ok(resp)) => latencies.push(resp.total_seconds),
+                                _ => failed += 1,
+                            },
+                            Err(_) => rejected += 1,
+                        }
+                    }
+                    (latencies, rejected, failed)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = started.elapsed().as_secs_f64();
+    let mut latencies = Vec::with_capacity(requests);
+    let (mut rejected, mut failed) = (0usize, 0usize);
+    for (l, r, f) in per_thread {
+        latencies.extend(l);
+        rejected += r;
+        failed += f;
+    }
+    LoadReport {
+        // A closed loop has no arrival process: it offers exactly as
+        // fast as the server completes.
+        offered_rps: f64::NAN,
+        achieved_rps: latencies.len() as f64 / wall,
+        completed: latencies.len(),
+        rejected,
+        failed,
         latency: Summary::of(&latencies),
         wall_seconds: wall,
     }
@@ -119,6 +194,44 @@ mod tests {
             (0..n).map(|_| exp_interarrival(&mut rng, rate).as_secs_f64()).sum();
         let mean = total / n as f64;
         assert!((mean - 1.0 / rate).abs() < 0.1 / rate, "mean {mean}");
+    }
+
+    #[test]
+    fn closed_loop_accounting_separates_rejection_from_completion() {
+        use crate::backend::CpuRefBackend;
+        use crate::conv::ConvSpec;
+        use crate::coordinator::{BatchPolicy, PoolConfig, Server};
+
+        // A deliberately tiny pool: one worker, queue depth 1, batch 1,
+        // flooded by 8 clients — backpressure is expected, and every
+        // offered request must be accounted exactly once.
+        let policy = BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::from_millis(1),
+            queue_capacity: 1,
+        };
+        let server = Server::start_conv(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(8, 1, 3, 4, 4),
+            None,
+            &[1],
+            policy,
+            PoolConfig::default(),
+        )
+        .unwrap();
+        let report = run_closed_loop(&server.handle(), 40, 8, 7);
+        let m = server.metrics();
+        assert_eq!(
+            report.completed + report.rejected + report.failed,
+            40,
+            "every offered request is accounted exactly once"
+        );
+        assert_eq!(report.completed, m.requests as usize, "completed == served");
+        assert_eq!(report.rejected as u64, m.rejected, "rejected == backpressured");
+        assert_eq!(report.failed, 0, "healthy server fails nothing");
+        // Only completed requests enter the latency summary.
+        assert_eq!(report.latency.map(|l| l.n).unwrap_or(0), report.completed);
+        assert!(report.offered_rps.is_nan(), "closed loop has no arrival rate");
     }
 
     #[test]

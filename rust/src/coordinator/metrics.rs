@@ -83,6 +83,37 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Add `n` rejected submissions at once (the pool dispatcher keeps
+    /// its rejection count in an atomic and folds it in at snapshot
+    /// time).
+    pub fn add_rejected(&self, n: u64) {
+        self.inner.lock().unwrap().rejected += n;
+    }
+
+    /// Fold another sink's counts into this one: histograms merge
+    /// bucket-wise, counters add, and the uptime origin becomes the
+    /// earlier of the two. This is how a worker pool's aggregate view
+    /// is built — per-worker sinks stay untouched, a fresh `Metrics`
+    /// absorbs each of them at snapshot time.
+    ///
+    /// Only ever absorb into a sink that is not concurrently absorbed
+    /// *from* (the aggregate is always a private fresh instance), so
+    /// the two locks below cannot deadlock.
+    pub fn absorb(&self, other: &Metrics) {
+        let o = other.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap();
+        m.queue.merge(&o.queue);
+        m.exec.merge(&o.exec);
+        m.total.merge(&o.total);
+        m.requests += o.requests;
+        m.batches += o.batches;
+        m.rejected += o.rejected;
+        m.batch_size_sum += o.batch_size_sum;
+        if o.started < m.started {
+            m.started = o.started;
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let uptime = m.started.elapsed().as_secs_f64();
@@ -138,5 +169,42 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.total_max, 0.0);
+        // Quantiles of an empty histogram are zero, not garbage.
+        assert_eq!(s.queue_p50, 0.0);
+        assert_eq!(s.total_p99, 0.0);
+    }
+
+    #[test]
+    fn absorb_aggregates_two_workers() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_batch(4);
+        b.record_batch(2);
+        b.record_batch(2);
+        for _ in 0..4 {
+            a.record_request(1e-4, 2e-3, 2.2e-3);
+        }
+        for _ in 0..4 {
+            b.record_request(1e-4, 8e-3, 8.2e-3);
+        }
+        b.record_rejected();
+
+        let agg = Metrics::new();
+        agg.absorb(&a);
+        agg.absorb(&b);
+        agg.add_rejected(2); // dispatcher-level rejections fold in too
+        let s = agg.snapshot();
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.rejected, 3);
+        assert!((s.mean_batch_size - 8.0 / 3.0).abs() < 1e-12);
+        // The merged exec distribution spans both workers: p50 bound at
+        // or below the slow worker's bucket, p99 bound at or above it.
+        assert!(s.exec_p50 >= 2e-3);
+        assert!(s.exec_p99 >= 8e-3);
+        assert!(s.total_max >= 8.2e-3);
+        // Absorbing must not disturb the per-worker sinks.
+        assert_eq!(a.snapshot().requests, 4);
+        assert_eq!(b.snapshot().rejected, 1);
     }
 }

@@ -12,14 +12,20 @@
 //!   (`minisqueezenet_b{1,2,4,8}`).
 //! * [`metrics`] — latency histograms (queue / execute / total),
 //!   batch-size distribution, throughput counters.
-//! * [`runner`] — the execution seam: the router runs batches on a
+//! * [`runner`] — the execution seam: each worker runs batches on a
 //!   [`BatchRunner`] — the AOT model executables through PJRT, a
 //!   convolution layer through any
 //!   [`Backend`](crate::backend::Backend) (the artifact-free fallback),
 //!   or a whole network through [`NetForwardRunner`] (the
 //!   [`net`](crate::net) engine behind the dynamic batcher).
-//! * [`server`] — the router thread tying it together: drain queue →
-//!   form batches → run on the configured runner → scatter replies.
+//! * [`server`] — the sharded worker pool tying it together: the
+//!   dispatcher admits each request to a bounded per-shard queue
+//!   (round-robin or least-loaded, rejecting only when every queue is
+//!   full), and each worker thread drains its queue → forms batches →
+//!   runs them on its replicated runner → scatters replies. Replicas
+//!   share weights/algorithm choices (`Arc`) and own their mutable
+//!   buffers, so N workers serve concurrently with outputs
+//!   bit-identical to one.
 //!
 //! The per-layer algorithm choice (the paper's §4.1 deployment story:
 //! "frameworks automatically select the best-performing convolution
@@ -35,12 +41,12 @@ pub mod runner;
 pub mod server;
 
 pub use batcher::{decompose_batches, BatchPolicy};
-pub use loadgen::{run_open_loop, LoadReport, LoadSpec};
+pub use loadgen::{run_closed_loop, run_open_loop, LoadReport, LoadSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use plan::{plan_network, plan_network_measured, LayerPlan, NetworkPlan};
 pub use request::{InferRequest, InferResponse, RequestId};
 pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner, NetForwardRunner};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{PoolConfig, Server, ServerConfig, ServerHandle, ShardSelection};
 
 #[cfg(feature = "pjrt")]
 pub use runner::{PjrtModelRunner, ADAPTIVE_SLACK};

@@ -1,7 +1,7 @@
 //! Batch execution behind the server: the [`BatchRunner`] seam that
 //! makes the coordinator's artifact-vs-fallback split a backend choice.
 //!
-//! The router thread (see [`server`](crate::coordinator::server)) is
+//! Each worker shard (see [`server`](crate::coordinator::server)) is
 //! generic over *what* a batch runs on:
 //!
 //! * [`ConvBackendRunner`] — serves one convolution layer through any
@@ -21,6 +21,7 @@
 //!   batch-size pruning.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -39,7 +40,7 @@ pub struct BatchOutput {
     pub exec_seconds: f64,
 }
 
-/// What the router thread executes batches on. Implementations own all
+/// What a worker thread executes batches on. Implementations own all
 /// per-size plans/executables; `run` must not repeat startup work.
 pub trait BatchRunner: Send {
     /// Supported batch sizes (must include 1).
@@ -52,6 +53,16 @@ pub trait BatchRunner: Send {
     /// (taken by value — the router's gathered buffer moves straight
     /// into the executor with no extra copy).
     fn run(&mut self, batch: usize, input: Vec<f32>) -> Result<BatchOutput>;
+    /// Clone this runner for another worker shard: the replica must
+    /// **share** the immutable startup products (weights, algorithm
+    /// choices, backend) but own every mutable buffer (workspace,
+    /// output tensors, arenas), so N replicas can run concurrently with
+    /// outputs bit-identical to the original's. Runners that cannot
+    /// uphold that contract keep this default and are restricted to
+    /// single-worker serving.
+    fn replicate(&self) -> Result<Box<dyn BatchRunner>> {
+        bail!("this runner does not support replication (single-worker only)")
+    }
 }
 
 /// Serve one convolution layer through a pluggable [`Backend`].
@@ -65,9 +76,9 @@ pub trait BatchRunner: Send {
 /// path performs no convolution-side buffer allocation (the only
 /// per-request buffer is the response vector handed to the router).
 pub struct ConvBackendRunner {
-    backend: Box<dyn Backend>,
+    backend: Arc<dyn Backend>,
     spec: ConvSpec,
-    filters: Tensor,
+    filters: Arc<Tensor>,
     plans: HashMap<usize, ConvPlan>,
     /// Reused per-batch-size output tensors (`execute_into` targets).
     outputs: HashMap<usize, Tensor>,
@@ -86,6 +97,7 @@ impl ConvBackendRunner {
         algo: Option<crate::algo::Algorithm>,
         batch_sizes: &[usize],
     ) -> Result<ConvBackendRunner> {
+        let backend: Arc<dyn Backend> = Arc::from(backend);
         let spec = spec.with_batch(1);
         let mut sizes: Vec<usize> = batch_sizes.to_vec();
         sizes.sort_unstable();
@@ -132,7 +144,7 @@ impl ConvBackendRunner {
         Ok(ConvBackendRunner {
             backend,
             spec,
-            filters,
+            filters: Arc::new(filters),
             plans,
             outputs,
             workspace: Workspace::new(),
@@ -189,6 +201,30 @@ impl BatchRunner for ConvBackendRunner {
             exec_seconds: started.elapsed().as_secs_f64(),
         })
     }
+
+    fn replicate(&self) -> Result<Box<dyn BatchRunner>> {
+        // Shared: the backend handle, seeded filters and per-size plans
+        // (algorithm choices included). Owned: output tensors and a
+        // workspace pre-grown to the largest plan requirement, so the
+        // replica is allocation-free from its first request.
+        let mut outputs = HashMap::new();
+        for &b in &self.sizes {
+            let [n, m, oh, ow] = self.spec.with_batch(b).output_shape();
+            outputs.insert(b, Tensor::zeros(n, m, oh, ow));
+        }
+        let mut workspace = Workspace::new();
+        let max_ws = self.plans.values().map(|p| p.workspace_bytes()).max().unwrap_or(0);
+        workspace.ensure_bytes(max_ws)?;
+        Ok(Box::new(ConvBackendRunner {
+            backend: Arc::clone(&self.backend),
+            spec: self.spec,
+            filters: Arc::clone(&self.filters),
+            plans: self.plans.clone(),
+            outputs,
+            workspace,
+            sizes: self.sizes.clone(),
+        }))
+    }
 }
 
 /// Serve whole-network forward passes through a pluggable [`Backend`].
@@ -203,7 +239,7 @@ impl BatchRunner for ConvBackendRunner {
 /// workspace; the only per-request buffer is the response vector
 /// handed back to the router.
 pub struct NetForwardRunner {
-    backend: Box<dyn Backend>,
+    backend: Arc<dyn Backend>,
     plans: Vec<(usize, crate::net::NetPlan)>,
     item_in: usize,
     item_out: usize,
@@ -226,7 +262,12 @@ impl NetForwardRunner {
             let p1 = &plans[0].1;
             (p1.input_elems(), p1.output_elems())
         };
-        Ok(NetForwardRunner { backend: planner.into_backend(), plans, item_in, item_out })
+        Ok(NetForwardRunner {
+            backend: Arc::from(planner.into_backend()),
+            plans,
+            item_in,
+            item_out,
+        })
     }
 
     /// The compiled plan for one batch size.
@@ -259,6 +300,18 @@ impl BatchRunner for NetForwardRunner {
         let started = Instant::now();
         plan.forward_into(self.backend.as_ref(), &input, &mut data)?;
         Ok(BatchOutput { data, exec_seconds: started.elapsed().as_secs_f64() })
+    }
+
+    fn replicate(&self) -> Result<Box<dyn BatchRunner>> {
+        // One NetPlan::replicate per batch size: weights and algorithm
+        // choices stay shared (Arc), arenas and workspaces are fresh
+        // per worker.
+        Ok(Box::new(NetForwardRunner {
+            backend: Arc::clone(&self.backend),
+            plans: self.plans.iter().map(|(b, p)| (*b, p.replicate())).collect(),
+            item_in: self.item_in,
+            item_out: self.item_out,
+        }))
     }
 }
 
@@ -511,6 +564,41 @@ mod tests {
         }
         // Unknown batch size is refused.
         assert!(r.run(3, vec![0.0; 3 * item]).is_err());
+    }
+
+    #[test]
+    fn conv_runner_replica_is_bit_identical() {
+        let spec = ConvSpec::paper(6, 1, 3, 3, 2);
+        let mut r = runner(spec);
+        let mut rng = Rng::new(23);
+        let mut input = vec![0.0f32; 2 * r.item_in_elems()];
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        let want = r.run(2, input.clone()).unwrap();
+        let mut replica = r.replicate().unwrap();
+        assert_eq!(replica.batch_sizes(), r.batch_sizes());
+        assert_eq!(replica.item_in_elems(), r.item_in_elems());
+        let got = replica.run(2, input.clone()).unwrap();
+        assert_eq!(got.data, want.data, "replica conv output diverged");
+        // Replicas have private buffers: running one must not perturb
+        // the other.
+        let mut other = vec![0.0f32; 4 * r.item_in_elems()];
+        rng.fill_uniform(&mut other, -1.0, 1.0);
+        r.run(4, other).unwrap();
+        assert_eq!(replica.run(2, input).unwrap().data, want.data);
+    }
+
+    #[test]
+    fn net_runner_replica_is_bit_identical() {
+        let mut r =
+            NetForwardRunner::new(Box::new(CpuRefBackend::new()), &tiny_net(), &[1, 2])
+                .unwrap();
+        let mut replica = r.replicate().unwrap();
+        let mut rng = Rng::new(31);
+        let mut input = vec![0.0f32; 2 * r.item_in_elems()];
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        let want = r.run(2, input.clone()).unwrap();
+        let got = replica.run(2, input).unwrap();
+        assert_eq!(got.data, want.data, "replica network output diverged");
     }
 
     #[test]

@@ -1,22 +1,75 @@
-//! The serving router: bounded queue → dynamic batches → runner → replies.
+//! The serving front end: a sharded pool of worker threads, each owning
+//! a replicated runner, behind a dispatching [`ServerHandle`].
 //!
-//! The router thread is generic over a [`BatchRunner`]: the AOT model
-//! executables through PJRT (`pjrt` feature), or a convolution layer
-//! through any [`Backend`](crate::backend::Backend) — so whether a
-//! deployment serves artifacts or the CPU fallback is a backend choice,
-//! not a different server.
+//! One worker is PR 3's router: drain a bounded queue in windows, form
+//! dynamic batches, execute on a [`BatchRunner`], scatter replies. This
+//! module generalizes it to N workers for multi-core serving:
+//!
+//! * **Replication** — the pool is built from one runner plus
+//!   `workers - 1` calls to [`BatchRunner::replicate`]: weights,
+//!   algorithm choices and the backend are shared (`Arc`), every
+//!   mutable buffer (arena, workspace, output tensors) is per-worker,
+//!   so shards serve concurrently with zero steady-state allocation and
+//!   outputs bit-identical to the single-worker path.
+//! * **Bounded admission** — every shard has its own bounded queue.
+//!   [`ServerHandle::submit`] picks a preferred shard
+//!   ([`ShardSelection`]: round-robin or least-loaded by in-flight
+//!   count), then sweeps the remaining shards before rejecting — a
+//!   request is refused only when *every* queue is full, so the pool
+//!   backpressures instead of growing memory without bound.
+//! * **Metrics** — each worker records into its own sink; the
+//!   aggregate view ([`ServerHandle::metrics`]) merges the per-worker
+//!   histograms and folds in the dispatcher's rejected count.
+//!   [`ServerHandle::worker_metrics`] exposes the per-shard view.
+//!
+//! Whether a deployment serves artifacts, one conv layer, or a whole
+//! network is still a [`BatchRunner`] choice, not a different server.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::batcher::{decompose_batches, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::runner::BatchRunner;
+
+/// How the dispatcher picks a preferred shard for each submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSelection {
+    /// Rotate through the shards — fair under uniform request cost.
+    RoundRobin,
+    /// Pick the shard with the fewest in-flight (queued + executing)
+    /// requests — adapts when request costs or batch shapes skew.
+    LeastLoaded,
+}
+
+/// Worker-pool shape: how many shards and how they are selected. The
+/// per-shard queue depth comes from [`BatchPolicy::queue_capacity`].
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Worker threads, each with its own replicated runner (must be at
+    /// least 1; `workers > 1` requires the runner to support
+    /// [`BatchRunner::replicate`]).
+    pub workers: usize,
+    pub selection: ShardSelection,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { workers: 1, selection: ShardSelection::LeastLoaded }
+    }
+}
+
+impl PoolConfig {
+    /// A pool of `workers` shards with the default selection policy.
+    pub fn with_workers(workers: usize) -> PoolConfig {
+        PoolConfig { workers, ..PoolConfig::default() }
+    }
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -25,6 +78,10 @@ pub struct ServerConfig {
     /// model path ([`Server::start`], `pjrt` feature).
     pub model: String,
     pub policy: BatchPolicy,
+    /// Worker-pool shape (the AOT model runner is single-worker: its
+    /// PJRT executor is one thread, so replication would add queues
+    /// without adding parallelism).
+    pub pool: PoolConfig,
     /// Validate every model executable against its AOT sample I/O pair
     /// before serving (slower startup, catches artifact skew).
     pub validate_on_start: bool,
@@ -40,6 +97,7 @@ impl Default for ServerConfig {
         ServerConfig {
             model: "minisqueezenet".to_string(),
             policy: BatchPolicy::default(),
+            pool: PoolConfig::default(),
             validate_on_start: true,
             adaptive_sizes: true,
         }
@@ -51,30 +109,50 @@ struct QueuedRequest {
     resp: mpsc::Sender<Result<InferResponse>>,
 }
 
-/// The running server. Dropping it shuts the router down.
+/// One worker shard as the dispatcher sees it.
+struct Shard {
+    tx: SyncSender<QueuedRequest>,
+    metrics: Arc<Metrics>,
+    /// Requests admitted to this shard and not yet answered.
+    inflight: Arc<AtomicUsize>,
+}
+
+/// The running server. Dropping it shuts the worker pool down.
 pub struct Server {
     handle: ServerHandle,
-    router: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
 }
 
-/// Cheap cloneable client handle.
+/// Cheap cloneable client handle; doubles as the dispatcher (shard
+/// selection happens in [`ServerHandle::submit`], so there is no extra
+/// dispatcher thread between clients and workers).
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: SyncSender<QueuedRequest>,
-    metrics: Arc<Metrics>,
+    shards: Arc<Vec<Shard>>,
+    selection: ShardSelection,
+    /// Round-robin cursor (shared across handle clones so concurrent
+    /// clients keep rotating instead of all starting at shard 0).
+    rr: Arc<AtomicUsize>,
+    /// Submissions rejected because every shard queue was full.
+    rejected: Arc<AtomicU64>,
     next_id: Arc<AtomicU64>,
+    queue_depth: usize,
     image_elems: usize,
     classes: usize,
 }
 
 impl Server {
-    /// Start serving batches on an explicit runner (the general entry
-    /// point; the convenience constructors below build the runner).
-    pub fn start_with_runner(
+    /// Start a sharded worker pool on an explicit runner (the general
+    /// entry point; the convenience constructors below build the
+    /// runner). The runner becomes worker 0; workers `1..N` run
+    /// replicas from [`BatchRunner::replicate`].
+    pub fn start_pool(
         runner: Box<dyn BatchRunner>,
         policy: BatchPolicy,
+        pool: PoolConfig,
     ) -> Result<Server> {
+        ensure!(pool.workers >= 1, "pool needs at least one worker");
         let sizes = runner.batch_sizes();
         if !sizes.contains(&1) {
             bail!("runner must support batch size 1 (got {sizes:?})");
@@ -82,26 +160,54 @@ impl Server {
         let image_elems = runner.item_in_elems();
         let classes = runner.item_out_elems();
 
-        let metrics = Arc::new(Metrics::new());
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(policy.queue_capacity);
+        // Replicate before spawning anything: a runner that cannot
+        // replicate fails the whole start, not worker 3 of 4.
+        let mut runners = Vec::with_capacity(pool.workers);
+        for _ in 1..pool.workers {
+            runners.push(runner.replicate()?);
+        }
+        runners.insert(0, runner);
 
-        let router = {
-            let metrics = metrics.clone();
-            let shutdown = shutdown.clone();
-            std::thread::Builder::new().name("cuconv-router".into()).spawn(move || {
-                router_loop(rx, runner, classes, policy, metrics, shutdown)
-            })?
-        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut shards = Vec::with_capacity(pool.workers);
+        let mut workers = Vec::with_capacity(pool.workers);
+        for (i, r) in runners.into_iter().enumerate() {
+            let metrics = Arc::new(Metrics::new());
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(policy.queue_capacity);
+            let worker = {
+                let metrics = metrics.clone();
+                let inflight = inflight.clone();
+                let shutdown = shutdown.clone();
+                std::thread::Builder::new()
+                    .name(format!("cuconv-worker-{i}"))
+                    .spawn(move || {
+                        worker_loop(rx, r, classes, policy, metrics, inflight, shutdown)
+                    })?
+            };
+            shards.push(Shard { tx, metrics, inflight });
+            workers.push(worker);
+        }
 
         let handle = ServerHandle {
-            tx,
-            metrics,
+            shards: Arc::new(shards),
+            selection: pool.selection,
+            rr: Arc::new(AtomicUsize::new(0)),
+            rejected: Arc::new(AtomicU64::new(0)),
             next_id: Arc::new(AtomicU64::new(1)),
+            queue_depth: policy.queue_capacity,
             image_elems,
             classes,
         };
-        Ok(Server { handle, router: Some(router), shutdown })
+        Ok(Server { handle, workers, shutdown })
+    }
+
+    /// Single-worker convenience form of [`Server::start_pool`].
+    pub fn start_with_runner(
+        runner: Box<dyn BatchRunner>,
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        Server::start_pool(runner, policy, PoolConfig::default())
     }
 
     /// Serve one convolution layer through a pluggable backend — the
@@ -113,6 +219,7 @@ impl Server {
         algo: Option<crate::algo::Algorithm>,
         batch_sizes: &[usize],
         policy: BatchPolicy,
+        pool: PoolConfig,
     ) -> Result<Server> {
         let runner = crate::coordinator::runner::ConvBackendRunner::new(
             backend,
@@ -120,7 +227,7 @@ impl Server {
             algo,
             batch_sizes,
         )?;
-        Server::start_with_runner(Box::new(runner), policy)
+        Server::start_pool(Box::new(runner), policy, pool)
     }
 
     /// Serve a whole network (a [`NetGraph`](crate::net::NetGraph)
@@ -131,13 +238,14 @@ impl Server {
         graph: &crate::net::NetGraph,
         batch_sizes: &[usize],
         policy: BatchPolicy,
+        pool: PoolConfig,
     ) -> Result<Server> {
         let runner = crate::coordinator::runner::NetForwardRunner::new(
             backend,
             graph,
             batch_sizes,
         )?;
-        Server::start_with_runner(Box::new(runner), policy)
+        Server::start_pool(Box::new(runner), policy, pool)
     }
 
     /// Start serving `config.model` from the artifact manifest (AOT
@@ -146,22 +254,33 @@ impl Server {
     pub fn start(manifest: crate::runtime::Manifest, config: ServerConfig) -> Result<Server> {
         let runner =
             crate::coordinator::runner::PjrtModelRunner::new(manifest, &config)?;
-        Server::start_with_runner(Box::new(runner), config.policy)
+        Server::start_pool(Box::new(runner), config.policy, config.pool)
     }
 
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
 
+    /// Aggregate metrics over every worker (plus dispatcher rejections).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.handle.metrics.snapshot()
+        self.handle.metrics()
     }
 
-    /// Stop the router (pending queue is drained with errors).
+    /// Per-worker metrics, in shard order.
+    pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.handle.worker_metrics()
+    }
+
+    /// Worker shards in the pool.
+    pub fn workers(&self) -> usize {
+        self.handle.workers()
+    }
+
+    /// Stop every worker (pending queues are drained with errors).
     pub fn shutdown(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.router.take() {
-            let _ = h.join();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
@@ -173,27 +292,57 @@ impl Drop for Server {
 }
 
 impl ServerHandle {
-    /// Submit one image; returns a receiver for the reply. Errors
-    /// immediately when the queue is full (backpressure) or the image
-    /// has the wrong size.
+    /// Submit one image; returns a receiver for the reply. The
+    /// preferred shard comes from the selection policy; if its bounded
+    /// queue is full the remaining shards are tried in order, and the
+    /// submission is rejected (backpressure) only when every queue is
+    /// full. Errors immediately on a wrong-sized image.
     pub fn submit(&self, pixels: Vec<f32>) -> Result<Receiver<Result<InferResponse>>> {
         if pixels.len() != self.image_elems {
             bail!("image has {} elems, expected {}", pixels.len(), self.image_elems);
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = mpsc::channel();
-        let queued = QueuedRequest {
+        let mut queued = QueuedRequest {
             req: InferRequest { id, pixels, enqueued: Instant::now() },
             resp: resp_tx,
         };
-        match self.tx.try_send(queued) {
-            Ok(()) => Ok(resp_rx),
-            Err(TrySendError::Full(_)) => {
-                self.metrics.record_rejected();
-                Err(anyhow!("queue full ({} pending)", self.queue_capacity()))
+        let n = self.shards.len();
+        let preferred = match self.selection {
+            ShardSelection::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            ShardSelection::LeastLoaded => self
+                .shards
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.inflight.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        };
+        for k in 0..n {
+            let shard = &self.shards[(preferred + k) % n];
+            // Count the request in *before* the send: the worker only
+            // decrements after receiving it, and the channel's
+            // send→recv edge orders this add before that sub — the
+            // counter can never wrap below zero.
+            shard.inflight.fetch_add(1, Ordering::Relaxed);
+            match shard.tx.try_send(queued) {
+                Ok(()) => return Ok(resp_rx),
+                // Full: take the request back and try the next shard.
+                Err(TrySendError::Full(q)) => {
+                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    queued = q;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    return Err(anyhow!("server is shut down"));
+                }
             }
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server is shut down")),
         }
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(anyhow!(
+            "all {n} worker queue(s) full ({} deep each)",
+            self.queue_depth
+        ))
     }
 
     /// Blocking inference.
@@ -202,8 +351,25 @@ impl ServerHandle {
         rx.recv().map_err(|_| anyhow!("server dropped the request"))?
     }
 
+    /// Aggregate metrics over every worker (plus dispatcher rejections).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let agg = Metrics::new();
+        for shard in self.shards.iter() {
+            agg.absorb(&shard.metrics);
+        }
+        agg.add_rejected(self.rejected.load(Ordering::Relaxed));
+        agg.snapshot()
+    }
+
+    /// Per-worker metrics, in shard order (dispatcher-level rejections
+    /// are not attributed to a shard; see [`ServerHandle::metrics`]).
+    pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|s| s.metrics.snapshot()).collect()
+    }
+
+    /// Worker shards in the pool.
+    pub fn workers(&self) -> usize {
+        self.shards.len()
     }
 
     pub fn image_elems(&self) -> usize {
@@ -213,20 +379,18 @@ impl ServerHandle {
     pub fn classes(&self) -> usize {
         self.classes
     }
-
-    fn queue_capacity(&self) -> usize {
-        // sync_channel has no capacity getter; report a static hint.
-        0
-    }
 }
 
-/// The router thread body: window the queue, batch, execute, scatter.
-fn router_loop(
+/// One worker thread's body: window its queue, batch, execute on its
+/// replicated runner, scatter replies — PR 3's router loop, now one
+/// shard of N.
+fn worker_loop(
     rx: Receiver<QueuedRequest>,
     mut runner: Box<dyn BatchRunner>,
     classes: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
 ) {
     let sizes = runner.batch_sizes();
@@ -296,6 +460,8 @@ fn router_loop(
                     }
                 }
             }
+            // Every request of the chunk has been answered (ok or err).
+            inflight.fetch_sub(chunk_size, Ordering::Relaxed);
         }
 
         if shutdown.load(Ordering::SeqCst) && window.is_empty() {

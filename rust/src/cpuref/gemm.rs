@@ -139,9 +139,20 @@ pub fn sgemm(
     });
 }
 
-/// Default thread count for CPU substrate work (cached: this is queried
-/// on every per-request execute).
+/// Default thread count for CPU substrate work. `CUCONV_CPU_THREADS`
+/// overrides the detected core count — sharded serving divides the
+/// machine across worker shards, so per-conv fan-out must be cappable
+/// (the scaling bench sets this to `cores / workers` to keep total
+/// parallelism constant). The env var is re-read on every call (cheap
+/// next to a convolution); the detected fallback is cached.
 pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("CUCONV_CPU_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
     static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *THREADS.get_or_init(|| {
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)

@@ -13,8 +13,11 @@
 //! cuconv forward <network> [--batch N] [--cpu] [--measure]
 //!                                       whole-network forward pass with a
 //!                                       per-layer time/algorithm breakdown
-//! cuconv serve-bench [--requests N] [--conv HW-N-K-M-C | --net NETWORK]
+//! cuconv serve-bench [--requests N] [--workers W] [--queue-depth D]
+//!                    [--round-robin] [--conv HW-N-K-M-C | --net NETWORK]
 //!                                       end-to-end serving benchmark
+//!                                       (W worker shards, D-deep
+//!                                       bounded queue per shard)
 //! cuconv validate                       validate AOT artifacts end to end
 //! ```
 //!
@@ -33,7 +36,10 @@ use anyhow::{anyhow, bail, Result};
 use cuconv::algo::{autotune, TimingSource};
 use cuconv::backend::{algo_find, algo_get, Backend, ConvDescriptor, CpuRefBackend};
 use cuconv::conv::{ConvSpec, FilterSize};
-use cuconv::coordinator::{plan_network, plan_network_measured, BatchPolicy, Server};
+use cuconv::coordinator::{
+    plan_network, plan_network_measured, run_closed_loop, BatchPolicy, PoolConfig, Server,
+    ShardSelection,
+};
 use cuconv::report::{self, figures, tables};
 use cuconv::util::rng::Rng;
 use cuconv::zoo::Network;
@@ -209,14 +215,26 @@ fn run(args: &[String]) -> Result<()> {
         "serve-bench" => {
             let requests: usize =
                 opt(args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
+            let workers: usize =
+                opt(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            let queue_depth: Option<usize> =
+                opt(args, "--queue-depth").map(|v| v.parse()).transpose()?;
+            let pool = PoolConfig {
+                workers,
+                selection: if flag(args, "--round-robin") {
+                    ShardSelection::RoundRobin
+                } else {
+                    ShardSelection::LeastLoaded
+                },
+            };
             if let Some(label) = opt(args, "--conv") {
                 let spec = ConvSpec::from_table_label(label)
                     .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
-                serve_bench_conv(spec, requests)?;
+                serve_bench_conv(spec, requests, pool, queue_depth)?;
             } else if let Some(name) = opt(args, "--net") {
-                serve_bench_net(parse_network(Some(name))?, requests)?;
+                serve_bench_net(parse_network(Some(name))?, requests, pool, queue_depth)?;
             } else {
-                serve_bench_model(requests)?;
+                serve_bench_model(requests, pool, queue_depth)?;
             }
         }
         "validate" => {
@@ -309,40 +327,54 @@ fn forward_network(net: Network, batch: usize, measure: bool) -> Result<()> {
 }
 
 /// Serve whole-network requests through the coordinator (the
-/// `serve-bench --net` path): same router and dynamic batcher as the
-/// model/conv paths, a [`NetForwardRunner`] behind it.
-fn serve_bench_net(net: Network, requests: usize) -> Result<()> {
+/// `serve-bench --net` path): same dispatcher and dynamic batcher as
+/// the model/conv paths, [`NetForwardRunner`] replicas behind it.
+fn serve_bench_net(
+    net: Network,
+    requests: usize,
+    pool: PoolConfig,
+    queue_depth: Option<usize>,
+) -> Result<()> {
     use cuconv::net::network_graph;
 
     let policy = BatchPolicy {
         max_batch: 4,
         max_delay: Duration::from_millis(20),
-        queue_capacity: 512,
+        queue_capacity: queue_depth.unwrap_or(512),
     };
     let graph = network_graph(net);
-    println!("compiling {} for batch sizes [1, 2, 4] ...", graph.name);
+    println!(
+        "compiling {} for batch sizes [1, 2, 4] x {} worker(s) ...",
+        graph.name, pool.workers
+    );
     let server = Server::start_net(
         Box::new(CpuRefBackend::new()),
         &graph,
         &[1, 2, 4],
         policy,
+        pool,
     )?;
+    let clients = (2 * pool.workers).max(4);
     println!(
-        "serving {} end-to-end through the cpuref backend ({} requests, 4 client \
+        "serving {} end-to-end through the cpuref backend ({} requests, {} client \
          threads) ...",
-        graph.name,
-        requests
+        graph.name, requests, clients
     );
-    drive_and_report(&server, requests, 4)
+    drive_and_report(&server, requests, clients)
 }
 
 /// Serve one convolution layer through the CPU reference backend — the
 /// artifact-free serving path, runnable in the default build.
-fn serve_bench_conv(spec: ConvSpec, requests: usize) -> Result<()> {
+fn serve_bench_conv(
+    spec: ConvSpec,
+    requests: usize,
+    pool: PoolConfig,
+    queue_depth: Option<usize>,
+) -> Result<()> {
     let policy = BatchPolicy {
         max_batch: 8,
         max_delay: Duration::from_millis(5),
-        queue_capacity: 512,
+        queue_capacity: queue_depth.unwrap_or(512),
     };
     let server = Server::start_conv(
         Box::new(CpuRefBackend::new()),
@@ -350,29 +382,42 @@ fn serve_bench_conv(spec: ConvSpec, requests: usize) -> Result<()> {
         None,
         &[1, 2, 4, 8],
         policy,
+        pool,
     )?;
+    let clients = (2 * pool.workers).max(8);
     println!(
-        "serving conv {} through the cpuref backend ({} requests, 8 client threads) ...",
+        "serving conv {} through the cpuref backend ({} requests, {} client \
+         threads, {} worker(s)) ...",
         spec.table_label(),
-        requests
+        requests,
+        clients,
+        pool.workers
     );
-    drive_and_report(&server, requests, 8)
+    drive_and_report(&server, requests, clients)
 }
 
 /// Serve the AOT model family through PJRT (needs the `pjrt` feature).
 #[cfg(feature = "pjrt")]
-fn serve_bench_model(requests: usize) -> Result<()> {
+fn serve_bench_model(
+    requests: usize,
+    pool: PoolConfig,
+    queue_depth: Option<usize>,
+) -> Result<()> {
     use anyhow::Context;
     let dir = cuconv::runtime::default_artifact_dir();
     let manifest = cuconv::runtime::Manifest::load(&dir).with_context(|| {
         format!("loading artifacts from {} (run `make artifacts`)", dir.display())
     })?;
+    // The PJRT model runner funnels through one executor thread, so it
+    // does not replicate; `--workers > 1` fails loudly at startup
+    // rather than pretending to shard.
     let config = cuconv::coordinator::ServerConfig {
         policy: BatchPolicy {
             max_batch: 8,
             max_delay: Duration::from_millis(5),
-            queue_capacity: 512,
+            queue_capacity: queue_depth.unwrap_or(512),
         },
+        pool,
         ..Default::default()
     };
     let server = Server::start(manifest, config)?;
@@ -381,44 +426,50 @@ fn serve_bench_model(requests: usize) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn serve_bench_model(_requests: usize) -> Result<()> {
+fn serve_bench_model(
+    _requests: usize,
+    _pool: PoolConfig,
+    _queue_depth: Option<usize>,
+) -> Result<()> {
     bail!(
         "model serving needs the `pjrt` feature; use `serve-bench --conv <HW-N-K-M-C>` \
          for the backend-based conv serving path"
     )
 }
 
+/// Drive a closed loop and print the report — completed, rejected
+/// (backpressured) and failed requests are reported separately, never
+/// folded into each other, plus aggregate and per-worker latency.
 fn drive_and_report(server: &Server, requests: usize, threads: usize) -> Result<()> {
-    let h = server.handle();
-    let elems = h.image_elems();
-    std::thread::scope(|s| {
-        for t in 0..threads as u64 {
-            let h = h.clone();
-            // Distribute the remainder so exactly `requests` are sent
-            // (integer division alone would drop `requests % threads`).
-            let n = requests / threads + usize::from((t as usize) < requests % threads);
-            s.spawn(move || {
-                let mut rng = Rng::new(t);
-                for _ in 0..n {
-                    let mut img = vec![0.0f32; elems];
-                    rng.fill_uniform(&mut img, -1.0, 1.0);
-                    let _ = h.infer(img);
-                }
-            });
-        }
-    });
+    let report = run_closed_loop(&server.handle(), requests, threads, 0xD21);
     let m = server.metrics();
     println!(
-        "requests={} batches={} mean_batch={:.2} throughput={:.1} rps",
-        m.requests, m.batches, m.mean_batch_size, m.throughput_rps
+        "offered={} completed={} rejected={} failed={} throughput={:.1} rps",
+        requests, report.completed, report.rejected, report.failed, report.achieved_rps
     );
     println!(
-        "latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms max={:.2}ms",
+        "batches={} mean_batch={:.2} latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms \
+         max={:.2}ms",
+        m.batches,
+        m.mean_batch_size,
         m.total_mean * 1e3,
         m.total_p50 * 1e3,
         m.total_p99 * 1e3,
         m.total_max * 1e3
     );
+    if server.workers() > 1 {
+        for (i, w) in server.worker_metrics().iter().enumerate() {
+            println!(
+                "  worker {i}: requests={} batches={} queue p99<={:.2}ms exec \
+                 p50<={:.2}ms p99<={:.2}ms",
+                w.requests,
+                w.batches,
+                w.queue_p99 * 1e3,
+                w.exec_p50 * 1e3,
+                w.exec_p99 * 1e3
+            );
+        }
+    }
     Ok(())
 }
 

@@ -313,6 +313,7 @@ impl NetPlanner {
 /// per-batch-size plans of [`NetPlanner::compile_for_sizes`] share one
 /// copy (weights never depend on batch; VGG19's ~550 MB of parameters
 /// must not be duplicated per serving batch size).
+#[derive(Clone)]
 enum StepRes {
     Plain,
     Conv { plan: ConvPlan, filters: Arc<Tensor>, bias: Arc<Vec<f32>> },
@@ -509,6 +510,39 @@ impl NetPlan {
     /// Total seconds of the most recent forward.
     pub fn total_seconds(&self) -> f64 {
         self.node_seconds.iter().sum()
+    }
+
+    /// Cheap clone for sharded serving. The expensive compile products
+    /// are **shared** via `Arc` — the seeded weights (VGG19's ~550 MB
+    /// of parameters stays one copy no matter how many workers serve
+    /// it) and each conv node's `ConvPlan` payload (same algorithm
+    /// choices). Small metadata — graph, shapes, slot assignment — is
+    /// plainly copied per replica. The replica **owns** a fresh
+    /// activation arena and conv workspace, both pre-sized to the
+    /// original's planned figures, plus fresh per-node timers. Every
+    /// mutable buffer is per-replica and everything shared is
+    /// immutable, so N replicas forward concurrently on N threads with
+    /// outputs bit-identical to the original's.
+    pub fn replicate(&self) -> NetPlan {
+        let slots: Vec<Vec<f32>> =
+            self.slots.iter().map(|s| Vec::with_capacity(s.capacity())).collect();
+        let mut workspace = Workspace::new();
+        workspace
+            .ensure_bytes(self.max_ws_bytes)
+            .expect("compile already reserved this workspace size under the cap");
+        NetPlan {
+            graph: self.graph.clone(),
+            shapes: self.shapes.clone(),
+            batch: self.batch,
+            backend_name: self.backend_name,
+            steps: self.steps.clone(),
+            slot_of: self.slot_of.clone(),
+            slots,
+            planned_arena_elems: self.planned_arena_elems,
+            max_ws_bytes: self.max_ws_bytes,
+            workspace,
+            node_seconds: vec![0.0; self.node_seconds.len()],
+        }
     }
 
     /// Run one forward pass, writing the class probabilities into a
@@ -912,6 +946,58 @@ mod tests {
                 "item {i} depends on batch grouping"
             );
         }
+    }
+
+    #[test]
+    fn replicate_shares_weights_but_owns_arena_and_workspace() {
+        let p = planner();
+        let mut plan = p.compile(&every_op_graph(), 2).unwrap();
+        let input = rand_input(&plan, 51);
+        let want = plan.forward(p.backend(), &input).unwrap();
+        let mut replica = plan.replicate();
+        // Shared: the weight allocations themselves and the algorithm
+        // choices (not merely equal values).
+        let stem = 1; // first conv node of every_op_graph
+        let (f0, _) = plan.conv_params(stem).unwrap();
+        let (f1, _) = replica.conv_params(stem).unwrap();
+        assert!(std::ptr::eq(f0, f1), "replicate must share weights via Arc");
+        assert_eq!(plan.conv_algorithms(), replica.conv_algorithms());
+        // Per-replica: a fresh arena and workspace at the planned sizes.
+        assert_eq!(replica.planned_arena_bytes(), plan.planned_arena_bytes());
+        assert_eq!(replica.max_conv_workspace_bytes(), plan.max_conv_workspace_bytes());
+        assert!(replica.workspace().capacity_bytes() >= replica.max_conv_workspace_bytes());
+        // Bit-identical outputs, including after interleaved forwards
+        // that dirty both replicas' private buffers.
+        let got = replica.forward(p.backend(), &input).unwrap();
+        assert_eq!(got, want, "replica numerics diverged");
+        let other = rand_input(&plan, 52);
+        let _ = plan.forward(p.backend(), &other).unwrap();
+        let again = replica.forward(p.backend(), &input).unwrap();
+        assert_eq!(again, want);
+    }
+
+    #[test]
+    fn replicas_forward_concurrently_and_agree() {
+        let p = planner();
+        let plan = p.compile(&every_op_graph(), 1).unwrap();
+        let input = {
+            let mut rng = Rng::new(77);
+            let mut v = vec![0.0f32; plan.input_elems()];
+            rng.fill_uniform(&mut v, -1.0, 1.0);
+            v
+        };
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..3)
+                .map(|_| {
+                    let mut replica = plan.replicate();
+                    let backend = p.backend();
+                    let input = input.clone();
+                    s.spawn(move || replica.forward(backend, &input).unwrap())
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert!(outs.windows(2).all(|w| w[0] == w[1]), "replicas disagree");
     }
 
     #[test]

@@ -122,12 +122,16 @@ impl LatencyHistogram {
     }
 
     /// Upper bound of the bucket containing the q-quantile (conservative
-    /// estimate; exact values are not retained).
+    /// estimate; exact values are not retained). An empty histogram
+    /// reports 0; otherwise the answer is always the bound of a
+    /// *populated* bucket — `q == 0.0` targets the first sample rather
+    /// than a count of zero (which would select bucket 0 even when
+    /// nothing was ever recorded there).
     pub fn quantile_upper_bound(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
         let mut acc = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
@@ -209,6 +213,65 @@ mod tests {
         let p999 = h.quantile_upper_bound(0.999);
         assert!(p999 > 100e-3, "p99.9 bound {p999}");
         assert!((h.max() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_of_empty_histogram_is_zero() {
+        let h = LatencyHistogram::standard();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_upper_bound(q), 0.0, "q={q}");
+        }
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn quantile_of_single_sample_bounds_it_at_every_q() {
+        let mut h = LatencyHistogram::standard();
+        let sample = 3e-3;
+        h.record(sample);
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            let bound = h.quantile_upper_bound(q);
+            assert!(bound >= sample, "q={q}: bound {bound} below the only sample");
+            // The bound is the sample's bucket ceiling, not a farther
+            // bucket: one doubling away at most.
+            assert!(bound < 2.0 * sample, "q={q}: bound {bound} overshoots");
+        }
+    }
+
+    #[test]
+    fn quantiles_of_all_equal_samples_agree() {
+        let mut h = LatencyHistogram::standard();
+        for _ in 0..1000 {
+            h.record(250e-6);
+        }
+        let p50 = h.quantile_upper_bound(0.50);
+        let p99 = h.quantile_upper_bound(0.99);
+        let p100 = h.quantile_upper_bound(1.0);
+        assert_eq!(p50, p99, "identical samples must share one bucket bound");
+        assert_eq!(p99, p100);
+        assert!(p50 >= 250e-6 && p50 < 500e-6, "bound {p50}");
+    }
+
+    #[test]
+    fn quantile_clamps_out_of_range_q() {
+        let mut h = LatencyHistogram::standard();
+        h.record(1e-3);
+        assert_eq!(h.quantile_upper_bound(-1.0), h.quantile_upper_bound(0.0));
+        assert_eq!(h.quantile_upper_bound(2.0), h.quantile_upper_bound(1.0));
+    }
+
+    #[test]
+    fn quantile_below_base_and_saturated_bucket_edges() {
+        // Sub-base samples land in bucket 0 (bound = base); samples
+        // beyond the last bucket saturate into it rather than vanish.
+        let mut h = LatencyHistogram::new(1e-6, 4); // covers up to 8µs
+        h.record(1e-9);
+        assert_eq!(h.quantile_upper_bound(1.0), 1e-6);
+        h.record(5.0); // way past the last bucket
+        let top = h.quantile_upper_bound(1.0);
+        assert_eq!(top, 1e-6 * 8.0, "overflow sample must sit in the last bucket");
+        assert_eq!(h.count(), 2);
     }
 
     #[test]

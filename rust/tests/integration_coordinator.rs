@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use cuconv::backend::CpuRefBackend;
 use cuconv::conv::ConvSpec;
-use cuconv::coordinator::{BatchPolicy, Server};
+use cuconv::coordinator::{BatchPolicy, PoolConfig, Server, ShardSelection};
 use cuconv::util::rng::Rng;
 
 fn image(rng: &mut Rng, elems: usize) -> Vec<f32> {
@@ -18,11 +18,24 @@ fn image(rng: &mut Rng, elems: usize) -> Vec<f32> {
     v
 }
 
-/// A conv-layer server over the CPU reference backend — no artifacts.
-fn conv_server(policy: BatchPolicy) -> Server {
+/// A conv-layer worker pool over the CPU reference backend — no
+/// artifacts.
+fn conv_pool(policy: BatchPolicy, pool: PoolConfig) -> Server {
     let spec = ConvSpec::paper(8, 1, 3, 4, 4);
-    Server::start_conv(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4, 8], policy)
-        .unwrap()
+    Server::start_conv(
+        Box::new(CpuRefBackend::new()),
+        spec,
+        None,
+        &[1, 2, 4, 8],
+        policy,
+        pool,
+    )
+    .unwrap()
+}
+
+/// Single-worker convenience used by the pre-pool tests.
+fn conv_server(policy: BatchPolicy) -> Server {
+    conv_pool(policy, PoolConfig::default())
 }
 
 #[test]
@@ -133,6 +146,179 @@ fn conv_server_backpressure_rejects_when_flooded() {
     }
     let snap = server.metrics();
     assert_eq!(snap.rejected as usize, rejected);
+}
+
+#[test]
+fn pool_outputs_bit_identical_to_single_worker() {
+    // The sharded-serving determinism contract: the same pixels produce
+    // the same logits — bit for bit — whether the pool has one worker
+    // or four, because replicas share the seeded filters and pinned
+    // algorithm choices and every kernel processes items independently.
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(5),
+        queue_capacity: 64,
+    };
+    let single = conv_pool(policy, PoolConfig::with_workers(1));
+    let pool = conv_pool(policy, PoolConfig::with_workers(4));
+    let h1 = single.handle();
+    let h4 = pool.handle();
+    assert_eq!(pool.workers(), 4);
+
+    let mut rng = Rng::new(2024);
+    for i in 0..6 {
+        let img = image(&mut rng, h1.image_elems());
+        let a = h1.infer(img.clone()).unwrap();
+        let b = h4.infer(img).unwrap();
+        assert_eq!(a.logits, b.logits, "request {i}: pool diverged from single worker");
+    }
+}
+
+#[test]
+fn pool_concurrent_load_is_bit_identical_too() {
+    // Same contract under concurrency: fire the same image through a
+    // 3-worker pool from many threads alongside decoys; every reply for
+    // the pinned image must be bit-identical to the solo answer.
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(10),
+        queue_capacity: 64,
+    };
+    let pool = conv_pool(policy, PoolConfig::with_workers(3));
+    let h = pool.handle();
+    let elems = h.image_elems();
+    let mut rng = Rng::new(7);
+    let img = image(&mut rng, elems);
+    let want = h.infer(img.clone()).unwrap().logits;
+
+    let echoes: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..12u64)
+            .map(|t| {
+                let h = h.clone();
+                let img = if t % 2 == 0 {
+                    img.clone()
+                } else {
+                    image(&mut Rng::new(5000 + t), elems)
+                };
+                let keep = t % 2 == 0;
+                s.spawn(move || {
+                    let logits = h.infer(img).unwrap().logits;
+                    keep.then_some(logits)
+                })
+            })
+            .collect();
+        joins.into_iter().filter_map(|j| j.join().unwrap()).collect()
+    });
+    assert_eq!(echoes.len(), 6);
+    for (i, e) in echoes.iter().enumerate() {
+        assert_eq!(e, &want, "echo {i} diverged under concurrent sharding");
+    }
+}
+
+#[test]
+fn pool_round_robin_spreads_requests_across_workers() {
+    let policy = BatchPolicy {
+        max_batch: 1,
+        max_delay: Duration::from_millis(1),
+        queue_capacity: 8,
+    };
+    let pool = conv_pool(
+        policy,
+        PoolConfig { workers: 4, selection: ShardSelection::RoundRobin },
+    );
+    let h = pool.handle();
+    let mut rng = Rng::new(11);
+    // Sequential blocking requests: the round-robin cursor must rotate
+    // through all four shards.
+    for _ in 0..8 {
+        h.infer(image(&mut rng, h.image_elems())).unwrap();
+    }
+    let per_worker = pool.worker_metrics();
+    assert_eq!(per_worker.len(), 4);
+    assert_eq!(per_worker.iter().map(|w| w.requests).sum::<u64>(), 8);
+    for (i, w) in per_worker.iter().enumerate() {
+        assert_eq!(w.requests, 2, "worker {i} did not get its round-robin share");
+    }
+    // The aggregate view equals the sum of the shards.
+    assert_eq!(pool.metrics().requests, 8);
+}
+
+#[test]
+fn pool_backpressure_rejects_only_when_every_queue_is_full() {
+    let policy = BatchPolicy {
+        max_batch: 1,
+        max_delay: Duration::from_millis(1),
+        queue_capacity: 1,
+    };
+    let pool = conv_pool(policy, PoolConfig::with_workers(2));
+    let h = pool.handle();
+    let elems = h.image_elems();
+    let mut rng = Rng::new(13);
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..64 {
+        match h.submit(image(&mut rng, elems)) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in accepted {
+        let _ = rx.recv();
+    }
+    let snap = pool.metrics();
+    assert_eq!(snap.rejected, rejected, "dispatcher rejections must be surfaced");
+    assert_eq!(snap.requests + rejected, 64, "every submission accounted once");
+}
+
+#[test]
+fn net_pool_matches_single_worker_bit_for_bit() {
+    // Whole-network sharding: NetForwardRunner replicas (one NetPlan
+    // replica per batch size, shared weights, private arenas) must
+    // serve logits bit-identical to the single-worker path.
+    use cuconv::net::GraphBuilder;
+
+    let graph = {
+        let mut b = GraphBuilder::new("pool-net", 2, 10, 10);
+        let c1 = b.conv_same("c1", b.input(), 6, 3);
+        let p = b.max_pool("p", c1, 2, 2, 0);
+        let c2 = b.conv_same("c2", p, 8, 3);
+        let g = b.global_avg_pool("gap", c2);
+        let fc = b.linear("fc", g, 7, false);
+        b.softmax("sm", fc);
+        b.finish()
+    };
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(5),
+        queue_capacity: 32,
+    };
+    let single = Server::start_net(
+        Box::new(CpuRefBackend::new()),
+        &graph,
+        &[1, 2, 4],
+        policy,
+        PoolConfig::with_workers(1),
+    )
+    .unwrap();
+    let pool = Server::start_net(
+        Box::new(CpuRefBackend::new()),
+        &graph,
+        &[1, 2, 4],
+        policy,
+        PoolConfig::with_workers(3),
+    )
+    .unwrap();
+    let h1 = single.handle();
+    let h3 = pool.handle();
+    let mut rng = Rng::new(42);
+    for i in 0..4 {
+        let img = image(&mut rng, h1.image_elems());
+        let a = h1.infer(img.clone()).unwrap();
+        let b = h3.infer(img).unwrap();
+        assert_eq!(a.logits.len(), 7);
+        assert_eq!(a.logits, b.logits, "request {i}: net pool diverged");
+    }
 }
 
 #[test]

@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Validate the machine-readable bench reports (BENCH_*.json).
+
+The benches are plain binaries that print tables *and* write JSON; a
+harness bug (or a bench silently skipping its workload) would otherwise
+produce an empty/garbage report that nobody notices until the perf
+trajectory is needed. CI runs this after every bench step, so an empty
+or insane report fails the build instead of landing.
+
+Checks per file:
+  * parses as JSON, top-level object, correct ``bench`` tag;
+  * every required list is present and non-empty;
+  * every timing/throughput field is a finite, strictly positive number
+    (the JSON writer emits ``null`` for NaN/Inf — also rejected);
+  * per-file invariants (e.g. the serve scaling curve covers the
+    worker counts it promises and accounts every offered request).
+
+Usage:
+    python3 tools/check_bench.py BENCH_hotpath.json BENCH_e2e.json ...
+
+Exits non-zero listing every violation (not just the first).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+PROBLEMS: list[str] = []
+
+
+def problem(path: str, msg: str) -> None:
+    PROBLEMS.append(f"{path}: {msg}")
+
+
+def finite_positive(path: str, row: dict, key: str, where: str) -> None:
+    v = row.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        problem(path, f"{where}: '{key}' is {v!r}, expected a number")
+        return
+    if not math.isfinite(v) or v <= 0.0:
+        problem(path, f"{where}: '{key}' = {v!r} is not finite and positive")
+
+
+def nonneg_count(path: str, row: dict, key: str, where: str) -> None:
+    v = row.get(key)
+    if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+        problem(path, f"{where}: '{key}' is {v!r}, expected a count >= 0")
+
+
+def non_empty_rows(path: str, doc: dict, key: str) -> list:
+    rows = doc.get(key)
+    if not isinstance(rows, list) or not rows:
+        problem(path, f"'{key}' is missing or empty — did the bench run its workload?")
+        return []
+    bad = [r for r in rows if not isinstance(r, dict)]
+    if bad:
+        problem(path, f"'{key}' contains non-object rows")
+        return []
+    return rows
+
+
+def check_hotpath(path: str, doc: dict) -> None:
+    for row in non_empty_rows(path, doc, "execute_alloc_vs_reuse"):
+        where = f"execute_alloc_vs_reuse[{row.get('algo')!r}]"
+        if not row.get("algo"):
+            problem(path, f"{where}: missing 'algo'")
+        for key in ("alloc_p50_us", "reuse_p50_us", "speedup"):
+            finite_positive(path, row, key, where)
+    for row in non_empty_rows(path, doc, "cuconv_staged_vs_fused"):
+        where = f"cuconv_staged_vs_fused[{row.get('config')!r}]"
+        for key in ("staged_alloc_p50_us", "fused_reuse_p50_us", "speedup"):
+            finite_positive(path, row, key, where)
+
+
+def check_e2e(path: str, doc: dict) -> None:
+    rows = non_empty_rows(path, doc, "networks")
+    names = [r.get("network") for r in rows]
+    if len(set(names)) != len(names):
+        problem(path, f"duplicate network rows: {names}")
+    for row in rows:
+        where = f"networks[{row.get('network')!r}]"
+        for key in ("latency_ms", "conv_ms", "modeled_network_speedup"):
+            finite_positive(path, row, key, where)
+        share = row.get("conv_share")
+        if not isinstance(share, (int, float)) or not (0.0 < float(share) <= 1.0):
+            problem(path, f"{where}: conv_share {share!r} outside (0, 1]")
+        for key in ("nodes", "conv_nodes", "arena_bytes"):
+            finite_positive(path, row, key, where)
+
+
+def check_serve(path: str, doc: dict) -> None:
+    points = non_empty_rows(path, doc, "points")
+    offered = doc.get("requests_per_point")
+    workers_seen = []
+    for row in points:
+        where = f"points[workers={row.get('workers')!r}]"
+        for key in ("workers", "rps"):
+            finite_positive(path, row, key, where)
+        for key in ("completed", "rejected", "failed"):
+            nonneg_count(path, row, key, where)
+        if isinstance(offered, int) and all(
+            isinstance(row.get(k), int) for k in ("completed", "rejected", "failed")
+        ):
+            total = row["completed"] + row["rejected"] + row["failed"]
+            if total != offered:
+                problem(
+                    path,
+                    f"{where}: completed+rejected+failed = {total} != offered {offered}",
+                )
+        if isinstance(row.get("completed"), int) and row.get("completed", 0) > 0:
+            for key in ("p50_ms", "p99_ms"):
+                finite_positive(path, row, key, where)
+        workers_seen.append(row.get("workers"))
+    if workers_seen and workers_seen != sorted(set(workers_seen)):
+        problem(path, f"worker counts not strictly increasing: {workers_seen}")
+    if 1 not in workers_seen:
+        problem(path, "scaling curve lacks the 1-worker baseline point")
+
+
+CHECKERS = {
+    "hotpath_micro": check_hotpath,
+    "e2e_forward": check_e2e,
+    "serve_scaling": check_serve,
+}
+
+
+def check_file(path: str) -> None:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        problem(path, f"cannot read: {e}")
+        return
+    except json.JSONDecodeError as e:
+        problem(path, f"invalid JSON: {e}")
+        return
+    if not isinstance(doc, dict):
+        problem(path, "top level is not an object")
+        return
+    bench = doc.get("bench")
+    checker = CHECKERS.get(bench)
+    if checker is None:
+        problem(path, f"unknown bench tag {bench!r} (expected {sorted(CHECKERS)})")
+        return
+    checker(path, doc)
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    for path in argv[1:]:
+        check_file(path)
+    if PROBLEMS:
+        print(f"check_bench: {len(PROBLEMS)} problem(s):")
+        for p in PROBLEMS:
+            print(f"  FAIL {p}")
+        return 1
+    print(f"check_bench: {len(argv) - 1} report(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
