@@ -5,6 +5,10 @@
 //!   every supported algorithm on a profiled config
 //! * the seed-style staged cuConv (allocating two-pass) vs the fused
 //!   workspace-reuse hot path on every multi-tap profiled config
+//! * the register-tiled packed-weights microkernel vs the untiled fused
+//!   kernel on the common 3×3 zoo configs (geomean speedup; tiled
+//!   outputs asserted bit-identical to the naive oracle)
+//! * the MR×NR tile-shape sweep on a representative 3×3 config
 //! * batch gather (request pixels → batch buffer)
 //! * JSON manifest parse
 //! * batch decomposition
@@ -108,12 +112,99 @@ fn main() {
         ]));
     }
 
+    // --- register-tiled packed-weights microkernel vs the untiled
+    //     fused kernel, both through the serving execute_into path, on
+    //     the common 3x3 zoo configs. A plain plan serves the untiled
+    //     kernel; a plan_with_filters plan owns packed weights and
+    //     serves the tiled one. Tiled outputs are asserted bit-identical
+    //     to the naive oracle before timing. ---
+    println!("\ncuconv fused(untiled) vs tiled(packed weights), 3x3 zoo configs:");
+    let mut tiled_rows = Vec::new();
+    let mut log_speedup_sum = 0.0f64;
+    for label in ["14-1-3-64-64", "7-1-3-384-192", "28-1-3-64-32", "9-2-3-16-8"] {
+        let spec = ConvSpec::from_table_label(label).unwrap();
+        let (input, filters) = io(&spec, 3);
+        let filters = std::sync::Arc::new(filters);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let [n, m, oh, ow] = spec.output_shape();
+
+        let untiled_plan = backend.plan(&desc, cuconv::algo::Algorithm::CuConv).unwrap();
+        assert!(untiled_plan.packed_filters().is_none());
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(n, m, oh, ow);
+        let fused = bench_fn(opts, || {
+            backend.execute_into(&untiled_plan, &input, &filters, &mut ws, &mut out).unwrap();
+            black_box(out.data().first().copied());
+        });
+
+        let tiled_plan = backend
+            .plan_with_filters(&desc, cuconv::algo::Algorithm::CuConv, &filters)
+            .unwrap();
+        let tile = tiled_plan.packed_filters().expect("plan must own packed weights").tile();
+        backend.execute_into(&tiled_plan, &input, &filters, &mut ws, &mut out).unwrap();
+        let oracle = cuconv::cpuref::naive::conv_naive(&spec, &input, &filters);
+        assert_eq!(
+            out.max_abs_diff(&oracle),
+            0.0,
+            "tiled kernel not bit-identical to the naive oracle on {label}"
+        );
+        let tiled = bench_fn(opts, || {
+            backend.execute_into(&tiled_plan, &input, &filters, &mut ws, &mut out).unwrap();
+            black_box(out.data().first().copied());
+        });
+
+        let speedup = fused.p50 / tiled.p50;
+        log_speedup_sum += speedup.ln();
+        println!(
+            "  {label:16}  fused p50 {}  tiled[{tile}] p50 {}  ({speedup:.2}x, bit-exact)",
+            fmt_seconds(fused.p50),
+            fmt_seconds(tiled.p50),
+        );
+        tiled_rows.push(Json::obj(vec![
+            ("config", Json::str(label)),
+            ("tile", Json::str(tile.label())),
+            ("fused_p50_us", Json::num(fused.p50 * 1e6)),
+            ("tiled_p50_us", Json::num(tiled.p50 * 1e6)),
+            ("speedup", Json::num(speedup)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    let tiled_geomean = (log_speedup_sum / tiled_rows.len() as f64).exp();
+    println!("  geomean tiled-vs-fused speedup: {tiled_geomean:.2}x");
+
+    // --- MR x NR tile-shape sweep (the find_tile candidate set) on a
+    //     representative 3x3 config, bare-kernel timing with the pack
+    //     done outside the timed loop (the plan-time contract) ---
+    println!("\ntile-shape sweep on 14-1-3-64-64:");
+    let sweep_spec = ConvSpec::from_table_label("14-1-3-64-64").unwrap();
+    let (sw_input, sw_filters) = io(&sweep_spec, 4);
+    let mut sweep_rows = Vec::new();
+    let mut sw_out = vec![0.0f32; sweep_spec.output_elems()];
+    for tile in cuconv::cpuref::pack::TileShape::CANDIDATES {
+        let packed = cuconv::cpuref::pack::PackedFilters::pack(&sw_filters, tile);
+        let threads = cuconv::cpuref::gemm::default_threads();
+        let s = bench_fn(opts, || {
+            cuconv::cpuref::cuconv::conv_tiled_into(
+                &sweep_spec, &sw_input, &packed, threads, &mut sw_out,
+            );
+            black_box(sw_out.first().copied());
+        });
+        println!("  {:5}  p50 {}", tile.label(), fmt_seconds(s.p50));
+        sweep_rows.push(Json::obj(vec![
+            ("tile", Json::str(tile.label())),
+            ("p50_us", Json::num(s.p50 * 1e6)),
+        ]));
+    }
+
     // Machine-readable perf trajectory, at the repository root.
     let report = Json::obj(vec![
         ("bench", Json::str("hotpath_micro")),
         ("config", Json::str(spec.table_label())),
         ("execute_alloc_vs_reuse", Json::arr(algo_rows)),
         ("cuconv_staged_vs_fused", Json::arr(cuconv_rows)),
+        ("cuconv_tiled_vs_fused", Json::arr(tiled_rows)),
+        ("tiled_geomean_speedup", Json::num(tiled_geomean)),
+        ("tile_sweep", Json::arr(sweep_rows)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, report.to_string_pretty() + "\n") {

@@ -6,9 +6,12 @@
 //! per-worker arenas/workspaces) and driven closed-loop by
 //! `2 × workers` clients. To keep total convolution fan-out constant
 //! while worker-level parallelism varies, each configuration caps the
-//! per-conv thread count at `cores / workers` via `CUCONV_CPU_THREADS`
-//! — the curve then isolates *request-level* scaling, which is what
-//! the pool adds over PR 3's single router.
+//! per-conv thread count at `cores / workers` via
+//! `gemm::set_threads_override` (the programmatic form of
+//! `CUCONV_CPU_THREADS`, which is parsed once and cached — mutating the
+//! environment of a running multi-threaded process is unsound) — the
+//! curve then isolates *request-level* scaling, which is what the pool
+//! adds over PR 3's single router.
 //!
 //! Results land in `BENCH_serve.json` at the repository root (validated
 //! in CI by `tools/check_bench.py`). Environment knobs:
@@ -58,7 +61,7 @@ fn main() {
     let mut base_rps = 0.0f64;
     for workers in [1usize, 2, 4] {
         let conv_threads = (cores / workers).max(1);
-        std::env::set_var("CUCONV_CPU_THREADS", conv_threads.to_string());
+        cuconv::cpuref::gemm::set_threads_override(Some(conv_threads));
         let policy = BatchPolicy {
             max_batch: 4,
             max_delay: Duration::from_millis(5),
@@ -112,7 +115,7 @@ fn main() {
             ("scaling_vs_1_worker", Json::num(scaling)),
         ]));
     }
-    std::env::remove_var("CUCONV_CPU_THREADS");
+    cuconv::cpuref::gemm::set_threads_override(None);
 
     let report = Json::obj(vec![
         ("bench", Json::str("serve_scaling")),

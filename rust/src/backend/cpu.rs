@@ -2,12 +2,14 @@
 //! trait — always available, no artifacts or accelerator required.
 //!
 //! Wraps the [`CpuImpl`] paths. Registry algorithms map onto the
-//! substrate by family: cuConv runs the fused single-pass kernel, the
-//! three GEMM variants share the im2col path and the two FFT variants
-//! share the FFT path (the GPU-side distinction is staging strategy,
-//! which the CPU substrate implements once). The clear-loop oracle is
-//! exposed via [`CpuRefBackend::reference_plan`] for verification
-//! harnesses.
+//! substrate by family: cuConv runs the register-tiled packed-weights
+//! microkernel when the plan owns a [`PackedFilters`] (created via
+//! [`Backend::plan_with_filters`]) and the untiled fused kernel
+//! otherwise, the three GEMM variants share the im2col path and the two
+//! FFT variants share the FFT path (the GPU-side distinction is staging
+//! strategy, which the CPU substrate implements once). The clear-loop
+//! oracle is exposed via [`CpuRefBackend::reference_plan`] for
+//! verification harnesses.
 //!
 //! A plan's `workspace_bytes` is the substrate's **true** scratch
 //! footprint ([`CpuImpl::scratch_elems`]): the slice the caller
@@ -20,16 +22,35 @@
 //! the fused cuConv kernel eliminates the stage-1 temporary, so its
 //! plans request zero.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::backend::plan::PlanImpl;
 use crate::backend::{Backend, ConvDescriptor, ConvPlan, Support, Workspace};
 use crate::conv::{ConvSpec, F32_BYTES};
+use crate::cpuref::cuconv::{conv_tiled_into, find_tile};
+use crate::cpuref::gemm::default_threads;
+use crate::cpuref::pack::{PackedFilters, TileShape};
 use crate::cpuref::CpuImpl;
 use crate::tensor::Tensor;
+
+/// How [`CpuRefBackend`] picks the register-tile shape when packing
+/// filters for the tiled cuConv microkernel
+/// ([`Backend::plan_with_filters`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TileChoice {
+    /// [`TileShape::heuristic`] — instant, the planning default.
+    #[default]
+    Heuristic,
+    /// [`find_tile`] with this many timed iterations per candidate —
+    /// the `cudnnFind` analogue at tile granularity, cached per spec so
+    /// a fleet planning many batch sizes measures each shape once.
+    Measured { iters: usize },
+}
 
 /// The CPU reference backend.
 #[derive(Default)]
@@ -37,6 +58,24 @@ pub struct CpuRefBackend {
     /// Number of plans created — the CPU analogue of
     /// `Engine::compile_count`, used by tests to prove plan reuse.
     plans: AtomicUsize,
+    /// Executes served by the tiled packed-weights fast path — tests
+    /// pin that serving actually takes it (and that foreign filter
+    /// tensors do not).
+    packed_executes: AtomicUsize,
+    /// Tile-shape policy for plan-time packing.
+    tile_choice: TileChoice,
+    /// Measured tile picks, cached per spec (Measured mode only).
+    tiles: Mutex<HashMap<ConvSpec, TileShape>>,
+    /// Pack cache: one [`PackedFilters`] per (filter allocation, tile),
+    /// so the per-batch-size plans of `compile_for_sizes` and every
+    /// serving replica share a single packed copy. Both sides are weak:
+    /// the cache keeps nothing alive — plans own the packing, the
+    /// planner owns the weights. Entries are validated by upgrading the
+    /// source `Weak<Tensor>` and comparing the allocation, so a freed
+    /// tensor whose address is reused (ABA) can never alias a stale
+    /// packing.
+    #[allow(clippy::type_complexity)]
+    pack_cache: Mutex<HashMap<(usize, TileShape), (Weak<Tensor>, Weak<PackedFilters>)>>,
 }
 
 impl CpuRefBackend {
@@ -44,10 +83,88 @@ impl CpuRefBackend {
         CpuRefBackend::default()
     }
 
+    /// Rank the tile-shape candidates by measurement at plan time
+    /// (cached per spec) instead of the closed-form heuristic. Tile
+    /// shape never changes outputs — the tiled kernel's accumulation
+    /// order is fixed — so this is pure performance tuning; the pick is
+    /// still pinned into the plan so replicas and batch-size siblings
+    /// serve one shape.
+    pub fn with_measured_tiles(mut self, iters: usize) -> CpuRefBackend {
+        self.tile_choice = TileChoice::Measured { iters: iters.max(1) };
+        self
+    }
+
     /// Plans created so far (each [`Backend::plan`] call increments it;
     /// [`Backend::execute`] never does — plan reuse keeps this flat).
     pub fn plan_count(&self) -> usize {
         self.plans.load(Ordering::Relaxed)
+    }
+
+    /// Executes served by the tiled packed-weights fast path so far.
+    pub fn packed_execute_count(&self) -> usize {
+        self.packed_executes.load(Ordering::Relaxed)
+    }
+
+    /// The tile shape for `spec` under the configured [`TileChoice`].
+    /// Measured mode normalizes to batch 1 before keying/measuring: the
+    /// microkernel's per-image work is batch-invariant, and one tile
+    /// per layer shape keeps the pack cache sharing a single
+    /// [`PackedFilters`] across the batch-size sibling plans of
+    /// `compile_for_sizes` (a per-batch pick could split the packing —
+    /// and would re-run the timing sweep per size for nothing).
+    fn tile_for(&self, spec: &ConvSpec) -> TileShape {
+        match self.tile_choice {
+            TileChoice::Heuristic => TileShape::heuristic(spec),
+            TileChoice::Measured { iters } => {
+                let key = spec.with_batch(1);
+                if let Some(&t) = self.tiles.lock().unwrap().get(&key) {
+                    return t;
+                }
+                // Measure outside the lock (find_tile runs real convs);
+                // insert-if-absent so concurrent planners of the same
+                // shape converge on ONE pick — a racing thread's
+                // duplicate measurement is wasted, but every plan (and
+                // therefore the pack cache) sees the same tile.
+                let t = find_tile(&key, iters);
+                *self.tiles.lock().unwrap().entry(key).or_insert(t)
+            }
+        }
+    }
+
+    /// The live cached packing of (`filters`, `tile`), if any.
+    fn cached_packed(&self, filters: &Arc<Tensor>, tile: TileShape) -> Option<Arc<PackedFilters>> {
+        let key = (Arc::as_ptr(filters) as usize, tile);
+        let cache = self.pack_cache.lock().unwrap();
+        let (src, packed) = cache.get(&key)?;
+        let (src, packed) = (src.upgrade()?, packed.upgrade()?);
+        Arc::ptr_eq(&src, filters).then_some(packed)
+    }
+
+    /// The shared packing of (`filters`, `tile`): returns the cached
+    /// `Arc` when this exact tensor allocation was already packed for
+    /// this tile (alive), packs otherwise. Packing happens **outside**
+    /// the cache lock — a VGG-scale pack must not serialize planning of
+    /// unrelated layers — with a re-check on insert so concurrent
+    /// planners of the same weights converge on one `Arc` (the loser's
+    /// pack is discarded). Dead entries are dropped on insert so the
+    /// cache tracks live weight sets only.
+    fn packed_for(&self, filters: &Arc<Tensor>, tile: TileShape) -> Arc<PackedFilters> {
+        if let Some(packed) = self.cached_packed(filters, tile) {
+            return packed;
+        }
+        let packed = Arc::new(PackedFilters::pack_shared(filters, tile));
+        let mut cache = self.pack_cache.lock().unwrap();
+        let key = (Arc::as_ptr(filters) as usize, tile);
+        if let Some((src, cached)) = cache.get(&key) {
+            if let (Some(src), Some(cached)) = (src.upgrade(), cached.upgrade()) {
+                if Arc::ptr_eq(&src, filters) {
+                    return cached; // a racing planner won; share its pack
+                }
+            }
+        }
+        cache.retain(|_, (src, p)| src.strong_count() > 0 && p.strong_count() > 0);
+        cache.insert(key, (Arc::downgrade(filters), Arc::downgrade(&packed)));
+        packed
     }
 
     /// The substrate path implementing `algo`'s family. cuConv serves
@@ -84,7 +201,7 @@ impl CpuRefBackend {
             self.name(),
             *desc.spec(),
             Algorithm::Direct,
-            PlanImpl::CpuRef(CpuImpl::Naive),
+            PlanImpl::CpuRef { imp: CpuImpl::Naive, packed: None },
         )
     }
 }
@@ -123,8 +240,43 @@ impl Backend for CpuRefBackend {
             bail!("cpuref cannot plan {algo} for {spec}: {reason}");
         }
         self.plans.fetch_add(1, Ordering::Relaxed);
-        Ok(ConvPlan::new(self.name(), *spec, algo, PlanImpl::CpuRef(Self::impl_for(algo)))
-            .with_workspace_bytes(Self::plan_workspace_bytes(spec, algo)))
+        Ok(ConvPlan::new(
+            self.name(),
+            *spec,
+            algo,
+            PlanImpl::CpuRef { imp: Self::impl_for(algo), packed: None },
+        )
+        .with_workspace_bytes(Self::plan_workspace_bytes(spec, algo)))
+    }
+
+    /// Plan with the layer's filters: cuConv plans additionally own a
+    /// [`PackedFilters`] — the weights regrouped once, at plan time,
+    /// into register-tile panels for the tiled microkernel, with the
+    /// tile shape picked by the configured [`TileChoice`] and pinned in
+    /// the plan. The packing is shared (`Arc`, via the pack cache)
+    /// whenever the same weight tensor is planned again — different
+    /// batch sizes, replicated serving shards — so a fleet packs each
+    /// weight set exactly once. Other algorithms gain nothing from the
+    /// filters and plan as [`Backend::plan`].
+    fn plan_with_filters(
+        &self,
+        desc: &ConvDescriptor,
+        algo: Algorithm,
+        filters: &Arc<Tensor>,
+    ) -> Result<ConvPlan> {
+        let plan = self.plan(desc, algo)?;
+        if algo != Algorithm::CuConv {
+            return Ok(plan);
+        }
+        let spec = desc.spec();
+        ensure!(
+            filters.shape() == spec.filter_shape(),
+            "filter shape {:?} does not match plan {:?} ({spec})",
+            filters.shape(),
+            spec.filter_shape(),
+        );
+        let tile = self.tile_for(spec);
+        Ok(plan.with_packed(self.packed_for(filters, tile)))
     }
 
     fn execute_into(
@@ -135,11 +287,23 @@ impl Backend for CpuRefBackend {
         workspace: &mut Workspace,
         out: &mut Tensor,
     ) -> Result<()> {
-        let PlanImpl::CpuRef(imp) = &plan.inner else {
+        let PlanImpl::CpuRef { imp, packed } = &plan.inner else {
             bail!("plan from backend '{}' handed to cpuref", plan.backend_name());
         };
         plan.check_args(input, filters)?;
         plan.check_out(out)?;
+        // Packed-weights fast path: plans created with the layer's
+        // filters serve the register-tiled microkernel, zero scratch.
+        // Only taken when the caller passed the exact tensor the plan
+        // was packed from — anything else falls through to the unpacked
+        // kernel below, which is correct for arbitrary filters.
+        if let Some(p) = packed {
+            if p.matches(filters) {
+                conv_tiled_into(&plan.spec, input, p, default_threads(), out.data_mut());
+                self.packed_executes.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+        }
         // The workspace reservation IS the kernel's scratch: carve it
         // and run in place — no allocation below this point.
         let mut scratch = workspace.carve_bytes(plan.workspace_bytes())?;
@@ -282,6 +446,118 @@ mod tests {
         // A wrong-shaped output tensor is refused.
         let mut bad = Tensor::zeros(n, m, oh, ow + 1);
         assert!(backend.execute_into(&plan, &input, &filters, &mut ws, &mut bad).is_err());
+    }
+
+    #[test]
+    fn plan_with_filters_packs_cuconv_only_and_serves_the_tiled_path() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(9, 1, 3, 5, 3); // M=5: tail tile
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 0x7117);
+        let filters = std::sync::Arc::new(filters);
+        // Non-cuConv algorithms gain no packed state.
+        let direct = backend.plan_with_filters(&desc, Algorithm::Direct, &filters).unwrap();
+        assert!(direct.packed_filters().is_none());
+        // cuConv does — pinned tile, plan-owned, zero workspace.
+        let plan = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        let packed = plan.packed_filters().expect("cuconv plan must own packed weights");
+        assert!(packed.matches(&filters));
+        assert_eq!(plan.workspace_bytes(), 0);
+        // Execute takes the tiled fast path and is bit-identical to the
+        // oracle (not merely close).
+        let mut ws = Workspace::new();
+        let want = conv_naive(&spec, &input, &filters);
+        assert_eq!(backend.packed_execute_count(), 0);
+        let got = backend.execute(&plan, &input, &filters, &mut ws).unwrap();
+        assert_eq!(backend.packed_execute_count(), 1);
+        assert_eq!(got.max_abs_diff(&want), 0.0, "tiled path must be bit-exact");
+        // The fast path never touches the workspace.
+        assert_eq!(ws.high_water_bytes(), 0);
+    }
+
+    #[test]
+    fn foreign_filters_fall_back_to_the_unpacked_kernel() {
+        // A caller passing different weights than the plan was packed
+        // for must get correct outputs for THOSE weights (unpacked
+        // path), never stale packed data.
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(8, 1, 3, 4, 2);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 1);
+        let filters = std::sync::Arc::new(filters);
+        let plan = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        let mut rng = Rng::new(99);
+        let other =
+            Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let mut ws = Workspace::new();
+        let got = backend.execute(&plan, &input, &other, &mut ws).unwrap();
+        assert_eq!(backend.packed_execute_count(), 0, "foreign filters must miss");
+        let want = conv_naive(&spec, &input, &other);
+        assert!(got.rel_l2_error(&want) < 2e-5, "fallback produced wrong outputs");
+    }
+
+    #[test]
+    fn pack_cache_shares_one_packing_per_weight_set() {
+        // The same Arc'd weights planned at several batch sizes (the
+        // compile_for_sizes shape) must share ONE PackedFilters
+        // allocation; a different weight tensor must get its own.
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(7, 1, 3, 8, 4);
+        let mut rng = Rng::new(5);
+        let filters = std::sync::Arc::new(Tensor::random(
+            spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+        ));
+        let plans: Vec<ConvPlan> = [1usize, 2, 4]
+            .iter()
+            .map(|&b| {
+                let desc = ConvDescriptor::new(spec.with_batch(b)).unwrap();
+                backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap()
+            })
+            .collect();
+        let first = plans[0].packed_filters().unwrap();
+        for p in &plans[1..] {
+            assert!(
+                std::sync::Arc::ptr_eq(first, p.packed_filters().unwrap()),
+                "packing duplicated across batch sizes"
+            );
+        }
+        // Equal values, different allocation: a fresh packing.
+        let clone = std::sync::Arc::new(filters.as_ref().clone());
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let other = backend.plan_with_filters(&desc, Algorithm::CuConv, &clone).unwrap();
+        assert!(!std::sync::Arc::ptr_eq(first, other.packed_filters().unwrap()));
+    }
+
+    #[test]
+    fn measured_tiles_pick_a_candidate_and_cache_it() {
+        let backend = CpuRefBackend::new().with_measured_tiles(1);
+        let spec = ConvSpec::paper(8, 1, 3, 8, 4);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let mut rng = Rng::new(6);
+        let filters = std::sync::Arc::new(Tensor::random(
+            spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+        ));
+        let p1 = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        let tile = p1.packed_filters().unwrap().tile();
+        assert!(TileShape::CANDIDATES.contains(&tile));
+        // Same spec again: the cached pick (and via the pack cache, the
+        // same packing).
+        let p2 = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        assert_eq!(p2.packed_filters().unwrap().tile(), tile);
+        assert!(std::sync::Arc::ptr_eq(
+            p1.packed_filters().unwrap(),
+            p2.packed_filters().unwrap()
+        ));
+        // Measured mode keys its pick on batch-1 geometry, so a
+        // batch-size sibling gets the SAME tile and (via the pack
+        // cache) the same packing — not a second timing sweep.
+        let desc4 = ConvDescriptor::new(spec.with_batch(4)).unwrap();
+        let p4 = backend.plan_with_filters(&desc4, Algorithm::CuConv, &filters).unwrap();
+        assert_eq!(p4.packed_filters().unwrap().tile(), tile);
+        assert!(std::sync::Arc::ptr_eq(
+            p1.packed_filters().unwrap(),
+            p4.packed_filters().unwrap()
+        ));
     }
 
     #[test]

@@ -34,8 +34,12 @@ pub fn algo_get(backend: &dyn Backend, desc: &ConvDescriptor) -> Result<Algorith
 /// wall-clock. Workspace and output tensor are reused across runs via
 /// [`Backend::execute_into`], as a serving system would — the timed
 /// loop measures the allocation-free steady state, not allocator noise.
-/// Algorithms whose plan or warmup execution fails are skipped rather
-/// than failing the whole search.
+/// Plans are created with the probe filters
+/// ([`Backend::plan_with_filters`]) so algorithms with plan-time
+/// derived weight state (the packed tiled cuConv path) are ranked on
+/// the code path that will actually serve. Algorithms whose plan or
+/// warmup execution fails are skipped rather than failing the whole
+/// search.
 pub fn algo_find(
     backend: &dyn Backend,
     desc: &ConvDescriptor,
@@ -44,14 +48,16 @@ pub fn algo_find(
     let spec = *desc.spec();
     let mut rng = Rng::new(0x7E57);
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
-    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let filters = std::sync::Arc::new(Tensor::random(
+        spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+    ));
     let mut workspace = Workspace::new();
     let [on, om, ooh, oow] = spec.output_shape();
     let mut out = Tensor::zeros(on, om, ooh, oow);
 
     let mut entries = Vec::new();
     for algo in backend.supported_algorithms(&spec) {
-        let Ok(plan) = backend.plan(desc, algo) else { continue };
+        let Ok(plan) = backend.plan_with_filters(desc, algo, &filters) else { continue };
         if backend.execute_into(&plan, &input, &filters, &mut workspace, &mut out).is_err() {
             continue;
         }

@@ -43,7 +43,7 @@ mod plan;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
-pub use cpu::CpuRefBackend;
+pub use cpu::{CpuRefBackend, TileChoice};
 pub use descriptor::ConvDescriptor;
 pub use find::{algo_find, algo_get};
 pub use plan::{ConvPlan, Workspace};
@@ -114,6 +114,28 @@ pub trait Backend: Send + Sync {
     /// artifact lookup, compilation. The returned plan is reused across
     /// many [`Backend::execute`] calls without repeating that work.
     fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan>;
+
+    /// As [`Backend::plan`], additionally offering the layer's constant
+    /// filter tensor so the backend can derive **plan-owned weight
+    /// state** once, at plan time — e.g. [`CpuRefBackend`] packs filters
+    /// into register-tile panels for the tiled cuConv microkernel. The
+    /// plan remembers which tensor it was derived from; execute calls
+    /// that pass a *different* tensor still run correctly (the backend
+    /// falls back to its unpacked path) — the packing is a performance
+    /// contract, never a correctness assumption. Backends with no
+    /// derived weight state keep this default, which ignores `filters`.
+    ///
+    /// `filters` is `Arc`-shared so a planner holding one weight set
+    /// (across batch sizes, across serving shards) lets the backend
+    /// share the derived state too instead of re-deriving per plan.
+    fn plan_with_filters(
+        &self,
+        desc: &ConvDescriptor,
+        algo: Algorithm,
+        _filters: &std::sync::Arc<Tensor>,
+    ) -> Result<ConvPlan> {
+        self.plan(desc, algo)
+    }
 
     /// Run one convolution with a previously created plan, writing into
     /// a caller-owned output tensor of the plan's output shape (fully

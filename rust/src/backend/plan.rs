@@ -2,18 +2,30 @@
 //! [`Workspace`] (the caller-owned scratch buffer, reused across
 //! requests and capped at the paper's 1 GB).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::conv::{ConvSpec, F32_BYTES};
+use crate::cpuref::pack::PackedFilters;
 use crate::cpuref::{CpuImpl, Scratch};
+use crate::util::align::AlignedF32Buf;
 
 /// Backend-specific payload of a plan. In-tree backends get first-class
 /// variants; external backends carry a lookup key in [`PlanImpl::Opaque`].
 #[derive(Debug, Clone)]
 pub(crate) enum PlanImpl {
     /// A CPU substrate path chosen by [`CpuRefBackend`](super::CpuRefBackend).
-    CpuRef(CpuImpl),
+    CpuRef {
+        imp: CpuImpl,
+        /// Plan-owned derived weight state: filters packed at plan time
+        /// for the register-tiled cuConv microkernel
+        /// ([`Backend::plan_with_filters`](super::Backend::plan_with_filters)).
+        /// `Arc`-shared across batch-size plans and serving replicas —
+        /// cloning a plan never re-packs.
+        packed: Option<Arc<PackedFilters>>,
+    },
     /// A compiled PJRT artifact, by manifest name.
     #[cfg(feature = "pjrt")]
     Pjrt { artifact: String },
@@ -94,6 +106,26 @@ impl ConvPlan {
         }
     }
 
+    /// Plan-owned packed weights, when this plan was created with
+    /// [`Backend::plan_with_filters`](super::Backend::plan_with_filters)
+    /// on a backend that packs (CPU cuConv). Exposed for telemetry and
+    /// for sharing tests (`Arc::ptr_eq` across batch sizes / replicas).
+    pub fn packed_filters(&self) -> Option<&Arc<PackedFilters>> {
+        match &self.inner {
+            PlanImpl::CpuRef { packed, .. } => packed.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Attach plan-time packed weights (CPU backend only; no-op on
+    /// other payloads).
+    pub(crate) fn with_packed(mut self, p: Arc<PackedFilters>) -> ConvPlan {
+        if let PlanImpl::CpuRef { packed, .. } = &mut self.inner {
+            *packed = Some(p);
+        }
+        self
+    }
+
     /// Check that `input`/`filters` match this plan's geometry.
     pub(crate) fn check_args(
         &self,
@@ -147,9 +179,14 @@ impl ConvPlan {
 /// steady-state serving does no per-request scratch allocation and
 /// [`Workspace::high_water_bytes`] is true telemetry of kernel
 /// temporaries.
+///
+/// The backing buffer is 64-byte aligned ([`AlignedF32Buf`]), and
+/// [`Scratch`] aligns every region start to the same boundary — so each
+/// named scratch region a kernel carves begins on a cache line and
+/// vectorized loads never straddle one.
 #[derive(Debug, Default)]
 pub struct Workspace {
-    buf: Vec<f32>,
+    buf: AlignedF32Buf,
     high_water_bytes: usize,
 }
 
@@ -159,7 +196,8 @@ impl Workspace {
     }
 
     /// Reserve (growing if needed) and return a scratch slice of at
-    /// least `bytes`. Errors above the 1 GB cap.
+    /// least `bytes`, starting on a 64-byte boundary. Errors above the
+    /// 1 GB cap.
     pub fn ensure_bytes(&mut self, bytes: usize) -> Result<&mut [f32]> {
         if bytes > WORKSPACE_CAP_BYTES {
             bail!(
@@ -168,11 +206,9 @@ impl Workspace {
             );
         }
         let elems = bytes.div_ceil(F32_BYTES);
-        if self.buf.len() < elems {
-            self.buf.resize(elems, 0.0);
-        }
+        self.buf.ensure_len(elems);
         self.high_water_bytes = self.high_water_bytes.max(bytes);
-        Ok(&mut self.buf[..elems])
+        Ok(&mut self.buf.as_mut_slice()[..elems])
     }
 
     /// Reserve `bytes` (growing if needed, cap-checked) and return a
@@ -183,7 +219,8 @@ impl Workspace {
         Ok(Scratch::new(self.ensure_bytes(bytes)?))
     }
 
-    /// Currently allocated capacity in bytes.
+    /// Currently allocated capacity in bytes (the aligned window; the
+    /// cache-line over-allocation is not counted).
     pub fn capacity_bytes(&self) -> usize {
         self.buf.len() * F32_BYTES
     }
@@ -226,22 +263,46 @@ mod tests {
 
     #[test]
     fn carve_bytes_hands_out_the_reservation() {
+        // a(6) + 10 f32s of alignment padding + b(4) = 20 f32s = 80 B
+        // (region starts land on 16-f32 boundaries).
         let mut ws = Workspace::new();
         {
-            let mut scratch = ws.carve_bytes(40).unwrap();
+            let mut scratch = ws.carve_bytes(80).unwrap();
             let a = scratch.take("a", 6);
             let b = scratch.take("b", 4);
             a.fill(1.0);
             b.fill(2.0);
             assert_eq!(scratch.remaining(), 0);
         }
-        assert_eq!(ws.high_water_bytes(), 40);
+        assert_eq!(ws.high_water_bytes(), 80);
         // The next carve sees the same backing buffer (dirty reuse).
         let mut scratch = ws.carve_bytes(8).unwrap();
         let a = scratch.take("a", 2);
         assert_eq!(a, &[1.0, 1.0]);
         // And the cap still applies.
         assert!(ws.carve_bytes(WORKSPACE_CAP_BYTES + 1).is_err());
+    }
+
+    #[test]
+    fn carved_regions_are_64_byte_aligned_addresses() {
+        // Mixed-size carve sequences over a real workspace: every
+        // non-empty region must start on a cache line, because the
+        // backing buffer is aligned AND Scratch pads region starts.
+        let mut ws = Workspace::new();
+        for sizes in [vec![3usize, 5, 17, 1], vec![16, 4], vec![1, 1, 1]] {
+            let bytes: usize = crate::cpuref::SCRATCH_ALIGN_ELEMS
+                .max(sizes.iter().sum::<usize>() + 16 * sizes.len())
+                * F32_BYTES;
+            let mut scratch = ws.carve_bytes(bytes).unwrap();
+            for (i, &sz) in sizes.iter().enumerate() {
+                let region = scratch.take("r", sz);
+                assert_eq!(
+                    region.as_ptr() as usize % 64,
+                    0,
+                    "region {i} of {sizes:?} misaligned"
+                );
+            }
+        }
     }
 
     #[test]

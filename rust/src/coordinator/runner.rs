@@ -130,21 +130,26 @@ impl ConvBackendRunner {
             }
         };
         let mut rng = Rng::new(0xF117E25);
-        let filters =
-            Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let filters = Arc::new(Tensor::random(
+            spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+        ));
         let mut plans = HashMap::new();
         let mut outputs = HashMap::new();
         for &b in &sizes {
             let bspec = spec.with_batch(b);
             let desc = ConvDescriptor::new(bspec)?;
-            plans.insert(b, backend.plan(&desc, chosen)?);
+            // Plan with the layer's weights: cuConv plans own packed
+            // register-tile panels, built once here and Arc-shared
+            // across the per-batch-size plans (backend pack cache) and
+            // across replicate() shards (plan clone).
+            plans.insert(b, backend.plan_with_filters(&desc, chosen, &filters)?);
             let [n, m, oh, ow] = bspec.output_shape();
             outputs.insert(b, Tensor::zeros(n, m, oh, ow));
         }
         Ok(ConvBackendRunner {
             backend,
             spec,
-            filters: Arc::new(filters),
+            filters,
             plans,
             outputs,
             workspace: Workspace::new(),
@@ -157,6 +162,13 @@ impl ConvBackendRunner {
         let mut v: Vec<_> = self.plans.iter().map(|(&b, p)| (b, p.algo())).collect();
         v.sort_unstable_by_key(|&(b, _)| b);
         v
+    }
+
+    /// The plan serving one batch size (verification harnesses — e.g.
+    /// pinning that packed weights are shared, not re-derived, across
+    /// batch sizes).
+    pub fn plan(&self, batch: usize) -> Option<&ConvPlan> {
+        self.plans.get(&batch)
     }
 
     pub fn spec(&self) -> &ConvSpec {
@@ -485,6 +497,20 @@ mod tests {
             algos.windows(2).all(|w| w[0] == w[1]),
             "algorithm varies across batch sizes: {algos:?}"
         );
+    }
+
+    #[test]
+    fn conv_runner_shares_one_packing_across_sizes() {
+        // 1x1 batch-1: the pinned algorithm is cuConv, whose plans own
+        // plan-time packed weights — one Arc across every batch size.
+        let r = runner(ConvSpec::paper(7, 1, 1, 8, 16));
+        let p1 = r.plan(1).expect("batch-1 plan");
+        assert_eq!(p1.algo(), crate::algo::Algorithm::CuConv, "test premise");
+        let pk1 = p1.packed_filters().expect("cuconv plan must own packed weights");
+        for b in [2usize, 4] {
+            let pk = r.plan(b).unwrap().packed_filters().unwrap();
+            assert!(Arc::ptr_eq(pk1, pk), "packing duplicated at batch {b}");
+        }
     }
 
     #[test]

@@ -28,8 +28,24 @@
 //! the Pallas kernels; the fused form is what
 //! [`CpuRefBackend`](crate::backend::CpuRefBackend) serves.
 
+//! **Tiled** ([`conv_tiled_into`]): the register-tiled microkernel — an
+//! `MR × NR` tile of (output filters × contiguous output pixels)
+//! accumulated in a stack array, fed by plan-time
+//! [`PackedFilters`](crate::cpuref::pack::PackedFilters) panels. Each
+//! input row segment is loaded once and reused across all `MR` filters
+//! of the block (the paper's register-blocking move, after maxDNN), so
+//! arithmetic intensity grows `MR`-fold over the fused kernel's
+//! one-filter-at-a-time streaming. Taps walk in the naive oracle's
+//! `(c, ky, kx)` order, so outputs are **bit-identical** to
+//! [`conv_naive`](crate::cpuref::naive::conv_naive) — tile shape is
+//! pure performance, never numerics. Padding stays hoisted via
+//! [`ox_range`] intersection, and the parallel split runs over
+//! `(n, m-block)` output blocks on the uneven-band splitter
+//! ([`par_chunks_by`]).
+
 use crate::conv::ConvSpec;
-use crate::cpuref::gemm::{default_threads, par_chunks};
+use crate::cpuref::gemm::{default_threads, par_chunks, par_chunks_by};
+use crate::cpuref::pack::{PackedFilters, TileShape};
 use crate::cpuref::{check_shapes, ox_range, Scratch};
 use crate::tensor::Tensor;
 
@@ -280,6 +296,223 @@ fn conv_plane_fused(
     }
 }
 
+/// Register-tiled cuConv into a caller-provided output slice of
+/// `spec.output_elems()` f32s (fully overwritten), reading weights from
+/// a plan-time [`PackedFilters`] instead of the raw filter tensor. The
+/// serving hot path for plans that own packed weights: zero scratch,
+/// zero allocation, parallel over `(n, m-block)` output blocks.
+///
+/// Outputs are bit-identical to [`conv_naive`] — see the module docs.
+///
+/// [`conv_naive`]: crate::cpuref::naive::conv_naive
+pub fn conv_tiled_into(
+    spec: &ConvSpec,
+    input: &Tensor,
+    packed: &PackedFilters,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert!(spec.is_valid(), "invalid spec {spec}");
+    assert_eq!(input.shape(), spec.input_shape(), "input shape mismatch for {spec}");
+    assert!(packed.matches_spec(spec), "packed filters do not fit {spec}");
+    assert_eq!(out.len(), spec.output_elems(), "output slice mismatch for {spec}");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let plane = oh * ow;
+    let mr = packed.tile().mr();
+    let blocks_per_image = spec.m.div_ceil(mr);
+    let blocks = spec.n * blocks_per_image;
+    // Filter rows in block `i` (the per-image tail block is shorter
+    // when M % MR != 0).
+    let rows_of = |i: usize| mr.min(spec.m - (i % blocks_per_image) * mr);
+    let in_data = input.data();
+    par_chunks_by(out, blocks, |i| rows_of(i) * plane, threads, |first, band| {
+        let mut off = 0usize;
+        let mut i = first;
+        while off < band.len() {
+            let rows = rows_of(i);
+            let blk = &mut band[off..off + rows * plane];
+            off += rows * plane;
+            let n = i / blocks_per_image;
+            let b = i % blocks_per_image;
+            block_tiled(spec, in_data, packed, n, b, rows, blk);
+            i += 1;
+        }
+    });
+}
+
+/// Allocating convenience wrapper: pack `filters` for `tile` and run
+/// the tiled kernel once. Tests and benches; serving packs at plan time.
+pub fn conv_tiled(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    tile: TileShape,
+    threads: usize,
+) -> Tensor {
+    check_shapes(spec, input, filters);
+    let packed = PackedFilters::pack(filters, tile);
+    let [n, m, oh, ow] = spec.output_shape();
+    let mut out = Tensor::zeros(n, m, oh, ow);
+    conv_tiled_into(spec, input, &packed, threads, out.data_mut());
+    out
+}
+
+/// One output block (fixed image `n`, filter block `b` of `rows` real
+/// filters): dispatch to the microkernel monomorphized for the packed
+/// tile shape. `out_block` is the `rows × OH·OW` slice of the output.
+fn block_tiled(
+    spec: &ConvSpec,
+    in_data: &[f32],
+    packed: &PackedFilters,
+    n: usize,
+    b: usize,
+    rows: usize,
+    out_block: &mut [f32],
+) {
+    let panel = packed.panel(b);
+    match (packed.tile().mr(), packed.tile().nr()) {
+        (2, 8) => block_loop::<2, 8>(spec, in_data, panel, n, rows, out_block),
+        (4, 8) => block_loop::<4, 8>(spec, in_data, panel, n, rows, out_block),
+        (8, 8) => block_loop::<8, 8>(spec, in_data, panel, n, rows, out_block),
+        (4, 4) => block_loop::<4, 4>(spec, in_data, panel, n, rows, out_block),
+        (mr, nr) => unreachable!("TileShape {mr}x{nr} outside the candidate set"),
+    }
+}
+
+/// Walk one output block strip by strip. Monomorphized per tile shape so
+/// the accumulator tile is a true stack array with unrolled `MR` loops.
+fn block_loop<const MR: usize, const NR: usize>(
+    spec: &ConvSpec,
+    in_data: &[f32],
+    panel: &[f32],
+    n: usize,
+    rows: usize,
+    out_block: &mut [f32],
+) {
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let plane = oh * ow;
+    debug_assert_eq!(out_block.len(), rows * plane);
+    let in_n = n * spec.c * spec.h * spec.w;
+    for oy in 0..oh {
+        let mut ox0 = 0usize;
+        while ox0 < ow {
+            let len = NR.min(ow - ox0);
+            tile_strip::<MR, NR>(
+                spec, in_data, panel, in_n, oy, ox0, len, rows, plane, out_block,
+            );
+            ox0 += NR;
+        }
+    }
+}
+
+/// The microkernel: one `MR × len` register tile (output filters ×
+/// contiguous output pixels `[ox0, ox0+len)` of row `oy`), accumulated
+/// in a flat stack array. For every tap `(c, ky, kx)` — walked in the
+/// naive oracle's order, so per-output accumulation is bit-identical to
+/// it — the input row segment is loaded once and multiplied into all
+/// `MR` accumulator rows; the packed panel supplies the `MR` weights of
+/// the tap contiguously. Padding never enters the loop: row taps with
+/// `iy` outside the input are skipped, column taps are clipped to
+/// [`ox_range`] ∩ strip.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn tile_strip<const MR: usize, const NR: usize>(
+    spec: &ConvSpec,
+    in_data: &[f32],
+    panel: &[f32],
+    in_n: usize,
+    oy: usize,
+    ox0: usize,
+    len: usize,
+    rows: usize,
+    plane: usize,
+    out_block: &mut [f32],
+) {
+    debug_assert!(len <= NR && rows <= MR);
+    let mut acc = [[0.0f32; NR]; MR];
+    let chan = spec.h * spec.w;
+    let taps = spec.kh * spec.kw;
+    for c in 0..spec.c {
+        let in_c = in_n + c * chan;
+        let f_c = c * taps * MR;
+        for ky in 0..spec.kh {
+            let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
+            if iy < 0 || iy >= spec.h as isize {
+                continue; // this tap row reads padding only
+            }
+            let in_row = in_c + iy as usize * spec.w;
+            for kx in 0..spec.kw {
+                let (lo, hi) = ox_range(spec, kx);
+                // Clip the tap's valid output range to this strip.
+                let j0 = if lo > ox0 { lo - ox0 } else { 0 };
+                let j1 = if hi > ox0 { (hi - ox0).min(len) } else { 0 };
+                if j0 >= j1 {
+                    continue;
+                }
+                let f = &panel[f_c + (ky * spec.kw + kx) * MR..][..MR];
+                if spec.stride == 1 {
+                    // One contiguous input-row segment, reused across
+                    // all MR filter rows.
+                    let ix0 = ox0 + j0 + kx - spec.pad_w;
+                    let xs = &in_data[in_row + ix0..][..j1 - j0];
+                    for r in 0..MR {
+                        let fr = f[r];
+                        let accr = &mut acc[r];
+                        for (j, &x) in xs.iter().enumerate() {
+                            accr[j0 + j] += fr * x;
+                        }
+                    }
+                } else {
+                    for r in 0..MR {
+                        let fr = f[r];
+                        let accr = &mut acc[r];
+                        for j in j0..j1 {
+                            let ix = (ox0 + j) * spec.stride + kx - spec.pad_w;
+                            accr[j] += fr * in_data[in_row + ix];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Store the real rows; tail-tile rows (r >= rows, zero-padded
+    // weights) are computed and discarded.
+    let row_base = oy * spec.out_w() + ox0;
+    for (r, accr) in acc.iter().enumerate().take(rows) {
+        out_block[r * plane + row_base..][..len].copy_from_slice(&accr[..len]);
+    }
+}
+
+/// Time every [`TileShape`] candidate on `spec` with seeded random data
+/// (packing done once per candidate, **outside** the timed loop — the
+/// serving contract) and return the fastest. The tile-shape analogue of
+/// `algo_find`: `iters` measured runs per candidate, ranked by median.
+/// Pinned into the plan by
+/// [`CpuRefBackend::with_measured_tiles`](crate::backend::CpuRefBackend::with_measured_tiles);
+/// tile shape never changes outputs (bit-identical accumulation order),
+/// so this is pure performance tuning.
+pub fn find_tile(spec: &ConvSpec, iters: usize) -> TileShape {
+    use crate::util::timer::{bench_fn, black_box, BenchOpts};
+    let mut rng = crate::util::rng::Rng::new(0x711E);
+    let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let mut out = vec![0.0f32; spec.output_elems()];
+    let threads = default_threads();
+    let mut best = (TileShape::heuristic(spec), f64::INFINITY);
+    for tile in TileShape::CANDIDATES {
+        let packed = PackedFilters::pack(&filters, tile);
+        let opts = BenchOpts { warmup_iters: 1, iters: iters.max(1) };
+        let s = bench_fn(opts, || {
+            conv_tiled_into(spec, &input, &packed, threads, &mut out);
+            black_box(out.first().copied());
+        });
+        if s.p50 < best.1 {
+            best = (tile, s.p50);
+        }
+    }
+    best.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,6 +616,73 @@ mod tests {
         let want = conv_naive(&spec, &input, &filters);
         let got = conv_fused_with_threads(&spec, &input, &filters, 4);
         assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+
+    /// The tiled microkernel must agree with the clear-loop oracle
+    /// **bit for bit** (same `(c, ky, kx)` accumulation order, same
+    /// mul-then-add rounding) on every tile shape and thread count,
+    /// across strides 1/2/4, asymmetric padding, 1×1, 11×11/s4 and
+    /// filter counts not divisible by MR (tail tiles).
+    #[test]
+    fn tiled_matches_oracle_bit_exactly_across_sweep() {
+        let specs = [
+            ConvSpec::paper(7, 1, 1, 8, 16), // 1x1
+            ConvSpec::paper(9, 2, 3, 5, 3),  // 3x3, M=5: tail for MR 2/4/8
+            ConvSpec::paper(7, 1, 5, 6, 5),  // 5x5, M=6: tail for MR 4/8
+            ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 4, 2) },
+            ConvSpec { pad_h: 2, pad_w: 1, ..ConvSpec::paper(6, 1, 3, 3, 2) }, // asym pad
+            ConvSpec { stride: 2, ..ConvSpec::paper(9, 1, 5, 2, 3) },
+            // AlexNet conv1 shrunk: 11x11 stride-4 unpadded.
+            ConvSpec {
+                n: 1, c: 3, h: 27, w: 27, m: 5, kh: 11, kw: 11,
+                stride: 4, pad_h: 0, pad_w: 0,
+            },
+        ];
+        for (i, spec) in specs.iter().enumerate() {
+            let (input, filters) = io(spec, 0x20 + i as u64);
+            let oracle = conv_naive(spec, &input, &filters);
+            for tile in TileShape::CANDIDATES {
+                for threads in [1, 4] {
+                    let got = conv_tiled(spec, &input, &filters, tile, threads);
+                    assert_eq!(
+                        got.max_abs_diff(&oracle),
+                        0.0,
+                        "tiled {tile} ({threads}t) not bit-identical on {spec}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_parallel_split_respects_block_boundaries_above_cutoff() {
+        // 32x32 output, M=10 with MR=4: blocks of 4,4,2 per image, two
+        // images — 8192+ output f32s so threads=4 actually splits.
+        let spec = ConvSpec::paper(32, 2, 3, 10, 3);
+        assert!(spec.output_elems() >= 8 * 1024);
+        let (input, filters) = io(&spec, 0x77);
+        let want = conv_naive(&spec, &input, &filters);
+        let got = conv_tiled(&spec, &input, &filters, TileShape::of(4, 8).unwrap(), 4);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn tiled_overwrites_a_dirty_output_buffer() {
+        let spec = ConvSpec::paper(6, 1, 3, 3, 2);
+        let (input, filters) = io(&spec, 0x88);
+        let want = conv_naive(&spec, &input, &filters);
+        let packed = PackedFilters::pack(&filters, TileShape::heuristic(&spec));
+        let mut out = vec![f32::NAN; spec.output_elems()];
+        conv_tiled_into(&spec, &input, &packed, 2, &mut out);
+        let got = Tensor::from_vec(spec.n, spec.m, spec.out_h(), spec.out_w(), out);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn find_tile_returns_a_candidate() {
+        let spec = ConvSpec::paper(8, 1, 3, 8, 4);
+        let tile = find_tile(&spec, 1);
+        assert!(TileShape::CANDIDATES.contains(&tile));
     }
 
     #[test]

@@ -85,6 +85,28 @@ pub fn par_chunks(
     f: impl Fn(usize, &mut [f32]) + Sync,
 ) {
     debug_assert_eq!(buf.len(), items * item_len);
+    par_chunks_by(buf, items, |_| item_len, threads, f)
+}
+
+/// As [`par_chunks`], for items of **non-uniform** length: item `i`
+/// occupies `item_len(i)` consecutive f32s of `buf` (lengths must sum to
+/// `buf.len()`). Bands are contiguous runs of whole items, so the split
+/// points respect item boundaries — the splitter behind the tiled
+/// cuConv kernel, whose items are MR-filter output blocks with a
+/// shorter tail block when `M % MR != 0`. Same inline-below-cutoff and
+/// scoped-thread semantics as [`par_chunks`].
+pub fn par_chunks_by(
+    buf: &mut [f32],
+    items: usize,
+    item_len: impl Fn(usize) -> usize + Sync,
+    threads: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(
+        buf.len(),
+        (0..items).map(&item_len).sum::<usize>(),
+        "item lengths must cover the buffer exactly"
+    );
     let threads = if buf.len() < MIN_PAR_ELEMS {
         1
     } else {
@@ -97,11 +119,13 @@ pub fn par_chunks(
     let per = items.div_ceil(threads);
     std::thread::scope(|s| {
         let f = &f;
+        let item_len = &item_len;
         let mut rest = buf;
         let mut idx = 0;
         while idx < items {
             let take = per.min(items - idx);
-            let (band, tail) = rest.split_at_mut(take * item_len);
+            let band_elems: usize = (idx..idx + take).map(item_len).sum();
+            let (band, tail) = rest.split_at_mut(band_elems);
             rest = tail;
             let start = idx;
             idx += take;
@@ -139,19 +163,43 @@ pub fn sgemm(
     });
 }
 
-/// Default thread count for CPU substrate work. `CUCONV_CPU_THREADS`
-/// overrides the detected core count — sharded serving divides the
-/// machine across worker shards, so per-conv fan-out must be cappable
-/// (the scaling bench sets this to `cores / workers` to keep total
-/// parallelism constant). The env var is re-read on every call (cheap
-/// next to a convolution); the detected fallback is cached.
+/// Process-wide runtime override of the conv thread count; 0 = none.
+/// Set through [`set_threads_override`].
+static THREADS_OVERRIDE: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// Override (or, with `None`, restore) the thread count
+/// [`default_threads`] returns, process-wide. The programmatic
+/// equivalent of `CUCONV_CPU_THREADS` for callers that need to change
+/// the cap *mid-process* (the serve-scaling bench pins per-conv fan-out
+/// to `cores / workers` per configuration) — the env var itself is read
+/// once and cached, and mutating the environment of a running
+/// multi-threaded process is unsound anyway.
+pub fn set_threads_override(threads: Option<usize>) {
+    THREADS_OVERRIDE.store(
+        threads.map_or(0, |n| n.max(1)),
+        std::sync::atomic::Ordering::Relaxed,
+    );
+}
+
+/// Default thread count for CPU substrate work, consulted on every conv
+/// dispatch: the [`set_threads_override`] value if set, else
+/// `CUCONV_CPU_THREADS` (parsed **once** and cached — sharded serving
+/// launches with the cap in the environment, so re-parsing per dispatch
+/// bought nothing), else the detected core count (also cached).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("CUCONV_CPU_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    let o = THREADS_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed);
+    if o >= 1 {
+        return o;
+    }
+    static ENV_THREADS: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    if let Some(n) = *ENV_THREADS.get_or_init(|| {
+        std::env::var("CUCONV_CPU_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    }) {
+        return n;
     }
     static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *THREADS.get_or_init(|| {
@@ -239,6 +287,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn par_chunks_by_covers_uneven_items_once() {
+        // Item i is i+1 elems long (sum 2080 for 64 items: above the
+        // spawn cutoff at 8K only for the larger case below, so cover
+        // both inline and parallel paths).
+        for (items, threads, scale) in [(64usize, 3usize, 1usize), (40, 4, 16), (1, 8, 1)] {
+            let len_of = |i: usize| (i + 1) * scale;
+            let total: usize = (0..items).map(len_of).sum();
+            let mut buf = vec![0.0f32; total];
+            par_chunks_by(&mut buf, items, len_of, threads, |start, band| {
+                let mut off = 0usize;
+                let mut i = start;
+                while off < band.len() {
+                    let l = len_of(i);
+                    for v in &mut band[off..off + l] {
+                        *v += i as f32 + 1.0;
+                    }
+                    off += l;
+                    i += 1;
+                }
+                assert_eq!(off, band.len(), "band not an exact run of items");
+            });
+            let mut off = 0usize;
+            for i in 0..items {
+                let l = len_of(i);
+                assert!(
+                    buf[off..off + l].iter().all(|&v| v == i as f32 + 1.0),
+                    "item {i} wrong (items={items} threads={threads} scale={scale})"
+                );
+                off += l;
+            }
+        }
+    }
+
+    #[test]
+    fn threads_override_takes_effect_and_resets() {
+        // The override wins over env/detection; clearing it restores the
+        // cached default. (No env mutation: the env parse is cached at
+        // first use and this test must not depend on call order.)
+        let base = default_threads();
+        assert!(base >= 1);
+        set_threads_override(Some(3));
+        assert_eq!(default_threads(), 3);
+        set_threads_override(Some(0)); // clamps to 1, not "unset"
+        assert_eq!(default_threads(), 1);
+        set_threads_override(None);
+        assert_eq!(default_threads(), base);
     }
 
     #[test]

@@ -37,10 +37,40 @@ pub mod fft;
 pub mod gemm;
 pub mod im2col;
 pub mod naive;
+pub mod pack;
 pub mod winograd;
 
 use crate::conv::ConvSpec;
 use crate::tensor::Tensor;
+
+/// f32s per 64-byte cache line: scratch regions ([`Scratch::take`]) and
+/// packed filter panels ([`pack::PackedFilters`]) start on these
+/// boundaries so vectorized loads never straddle cache lines.
+pub const SCRATCH_ALIGN_ELEMS: usize = 16;
+
+/// Round `elems` up to a cache-line multiple.
+#[inline]
+pub(crate) fn align_elems(elems: usize) -> usize {
+    elems.div_ceil(SCRATCH_ALIGN_ELEMS) * SCRATCH_ALIGN_ELEMS
+}
+
+/// Total f32 footprint of carving `regions` (in call order) from a
+/// [`Scratch`]: every non-empty region's *start* is aligned to
+/// [`SCRATCH_ALIGN_ELEMS`], so inter-region padding counts toward the
+/// footprint; nothing is added after the last region. The planner-side
+/// mirror of [`Scratch::take`]'s padding — [`CpuImpl::scratch_elems`]
+/// accounts multi-region kernels through this so the reservation always
+/// fits exactly what the kernel carves.
+pub(crate) fn scratch_footprint(regions: &[usize]) -> usize {
+    let mut total = 0usize;
+    for &r in regions {
+        if r == 0 {
+            continue;
+        }
+        total = align_elems(total) + r;
+    }
+    total
+}
 
 /// A borrowed scratch buffer being carved into named regions — the
 /// substrate-side view of a [`Workspace`](crate::backend::Workspace)
@@ -48,32 +78,45 @@ use crate::tensor::Tensor;
 ///
 /// Regions are carved off the front in call order and live as long as
 /// the backing buffer, so a kernel can hold several disjoint regions at
-/// once. Regions come back **dirty** (workspaces are reused across
-/// requests); kernels that rely on zero-initialization use
-/// [`Scratch::take_zeroed`].
+/// once. Every non-empty region starts at a [`SCRATCH_ALIGN_ELEMS`]
+/// offset from the buffer base (padding is skipped between regions and
+/// accounted by [`scratch_footprint`]); the base itself is 64-byte
+/// aligned when the buffer is a [`Workspace`](crate::backend::Workspace)
+/// reservation, so region starts are true cache-line-aligned addresses.
+/// Regions come back **dirty** (workspaces are reused across requests);
+/// kernels that rely on zero-initialization use [`Scratch::take_zeroed`].
 pub struct Scratch<'a> {
     rest: &'a mut [f32],
+    /// f32s consumed so far (regions + alignment padding) — the offset
+    /// of the next carve from the buffer base.
+    carved: usize,
 }
 
 impl<'a> Scratch<'a> {
     /// Carve regions out of `buf`.
     pub fn new(buf: &'a mut [f32]) -> Scratch<'a> {
-        Scratch { rest: buf }
+        Scratch { rest: buf, carved: 0 }
     }
 
-    /// Carve `elems` f32s off the front as the region `name`. The
+    /// Carve `elems` f32s off the front as the region `name`, skipping
+    /// padding first so the region starts on a cache-line boundary. The
     /// contents are whatever the previous execute left there. Panics when
     /// the buffer is too small — region sizing is the planner's contract
-    /// ([`CpuImpl::scratch_elems`]), not a runtime condition.
+    /// ([`CpuImpl::scratch_elems`] via [`scratch_footprint`]), not a
+    /// runtime condition.
     pub fn take(&mut self, name: &'static str, elems: usize) -> &'a mut [f32] {
         let buf = std::mem::take(&mut self.rest);
+        let pad = if elems == 0 { 0 } else { align_elems(self.carved) - self.carved };
         assert!(
-            elems <= buf.len(),
-            "scratch region '{name}' needs {elems} f32s but only {} remain",
+            pad + elems <= buf.len(),
+            "scratch region '{name}' needs {elems} f32s (+{pad} alignment) but only {} \
+             remain",
             buf.len()
         );
-        let (region, tail) = buf.split_at_mut(elems);
+        let (_, aligned) = buf.split_at_mut(pad);
+        let (region, tail) = aligned.split_at_mut(elems);
         self.rest = tail;
+        self.carved += pad + elems;
         region
     }
 
@@ -145,8 +188,10 @@ impl CpuImpl {
 
     /// Scratch f32s [`CpuImpl::run_in`] carves for `spec` — the
     /// substrate's true temporary footprint, all of it workspace-carved
-    /// (no hidden allocations). Zero for the direct paths and the fused
-    /// cuConv kernel.
+    /// (no hidden allocations), with inter-region alignment padding
+    /// included ([`scratch_footprint`] mirrors [`Scratch::take`]'s
+    /// cache-line alignment of region starts). Zero for the direct paths
+    /// and the fused cuConv kernel.
     pub fn scratch_elems(&self, spec: &ConvSpec) -> usize {
         let (oh, ow) = (spec.out_h(), spec.out_w());
         let out_elems = spec.n * spec.m * oh * ow;
@@ -157,20 +202,30 @@ impl CpuImpl {
                 if spec.kh == 1 && spec.kw == 1 {
                     0
                 } else {
-                    spec.kh * spec.kw * out_elems
+                    scratch_footprint(&[spec.kh * spec.kw * out_elems])
                 }
             }
             // The lowered column matrix plus the pre-transpose GEMM output.
-            CpuImpl::Im2colGemm => {
-                spec.c * spec.kh * spec.kw * spec.n * oh * ow + out_elems
-            }
+            CpuImpl::Im2colGemm => scratch_footprint(&[
+                spec.c * spec.kh * spec.kw * spec.n * oh * ow,
+                out_elems,
+            ]),
             // Transformed filters U[m][c] plus the per-tile accumulators.
-            CpuImpl::Winograd => 16 * spec.m * spec.c + 16 * spec.m,
-            // Interleaved complex spectra of inputs and filters, one
-            // accumulator plane, and the column-FFT staging buffer.
+            CpuImpl::Winograd => {
+                scratch_footprint(&[16 * spec.m * spec.c, 16 * spec.m])
+            }
+            // The column-FFT staging buffer, interleaved complex spectra
+            // of inputs and filters, and one accumulator plane — in the
+            // kernel's carve order.
             CpuImpl::Fft => {
                 let s = fft::fft_plane_size(spec);
-                2 * s * s * (spec.n * spec.c + spec.m * spec.c + 1) + 2 * s
+                let plane = 2 * s * s;
+                scratch_footprint(&[
+                    2 * s,
+                    spec.n * spec.c * plane,
+                    spec.m * spec.c * plane,
+                    plane,
+                ])
             }
         }
     }
@@ -296,7 +351,9 @@ mod tests {
 
     #[test]
     fn scratch_carves_named_regions_in_order() {
-        let mut buf = vec![7.0f32; 10];
+        // a(4) at offset 0, then 12 f32s of padding so b starts at the
+        // 16-f32 cache-line boundary: 4 + 12 + 5 = 21 carved.
+        let mut buf = vec![7.0f32; 22];
         let mut s = Scratch::new(&mut buf);
         let a = s.take("a", 4);
         assert_eq!(a.len(), 4);
@@ -308,6 +365,43 @@ mod tests {
         a[0] = 1.0;
         b[0] = 2.0;
         assert_eq!((a[0], b[0]), (1.0, 2.0));
+    }
+
+    #[test]
+    fn scratch_aligns_every_region_start_to_a_cache_line() {
+        // Mixed-size carve sequences: each non-empty region must start
+        // at a SCRATCH_ALIGN_ELEMS multiple from the buffer base, and
+        // the total consumed must equal scratch_footprint of the
+        // sequence — the accounting contract between planner and carver.
+        for regions in [
+            vec![3usize, 5, 17, 1],
+            vec![16, 16, 4],
+            vec![1, 0, 1], // empty regions carve (and pad) nothing
+            vec![7],
+            vec![0, 33, 2],
+        ] {
+            let footprint = scratch_footprint(&regions);
+            // Tag every slot with its index so a region's first element
+            // reveals its offset from the base.
+            let mut buf: Vec<f32> = (0..footprint as u32).map(|i| i as f32).collect();
+            let mut s = Scratch::new(&mut buf);
+            let mut consumed = 0usize;
+            for (i, &r) in regions.iter().enumerate() {
+                let region = s.take("region", r);
+                assert_eq!(region.len(), r);
+                if r > 0 {
+                    let offset = region[0] as usize;
+                    assert_eq!(
+                        offset % SCRATCH_ALIGN_ELEMS,
+                        0,
+                        "region {i} of {regions:?} starts at {offset}"
+                    );
+                    consumed = offset + r;
+                }
+            }
+            assert_eq!(consumed, footprint, "{regions:?} footprint accounting drifted");
+            assert_eq!(s.remaining(), 0);
+        }
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Plan-time filter packing for the register-tiled cuConv microkernel.
+//!
+//! The tiled kernel ([`cuconv::conv_tiled_into`](crate::cpuref::cuconv))
+//! processes an `MR × NR` tile of (output filters × contiguous output
+//! pixels) at a time, so its innermost loop wants the `MR` filter values
+//! of one tap — `(c, ky, kx)` for `MR` consecutive filters — adjacent in
+//! memory. The natural `[M, C, Kh, Kw]` filter layout scatters them `C·Kh·Kw`
+//! apart. [`PackedFilters`] regroups the weights once into MR-blocked
+//! panels (one panel per block of `MR` filters, tap-major within the
+//! panel, each panel 64-byte aligned), honoring the paper's constraint
+//! that any data transformation be amortized at plan time, never per
+//! call (§2.1; the same rule cuDNN applies to its precomputed-offsets
+//! GEMM variant).
+//!
+//! Packing is **plan-owned** state: [`CpuRefBackend`](crate::backend::CpuRefBackend)
+//! builds a `PackedFilters` when a plan is created with the layer's
+//! filters ([`Backend::plan_with_filters`](crate::backend::Backend::plan_with_filters))
+//! and shares it via `Arc` — across the per-batch-size plans of
+//! `NetPlanner::compile_for_sizes` and across the serving shards of
+//! `NetPlan::replicate`, so VGG-scale weights are packed once per fleet.
+//!
+//! Panel layout for block `b` (filters `b·MR .. b·MR+MR`):
+//!
+//! ```text
+//! panel[((c*Kh + ky)*Kw + kx) * MR + r] = filters[(b*MR + r), c, ky, kx]
+//! ```
+//!
+//! i.e. `[C][Kh][Kw][MR]` — the kernel walks taps in the same
+//! `(c, ky, kx)` order as the naive oracle (bit-identical accumulation)
+//! and reads `MR` contiguous weights per tap. The tail block of an `M`
+//! not divisible by `MR` is zero-padded: the kernel computes the full
+//! `MR` accumulator rows and stores only the real ones.
+
+use std::sync::{Arc, Weak};
+
+use crate::conv::{ConvSpec, F32_BYTES};
+use crate::cpuref::SCRATCH_ALIGN_ELEMS;
+use crate::tensor::Tensor;
+use crate::util::align::AlignedF32Buf;
+
+/// A register-tile shape for the tiled cuConv microkernel: `MR` output
+/// filters × `NR` contiguous output pixels accumulated in registers.
+///
+/// Only the shapes in [`TileShape::CANDIDATES`] exist (the kernel is
+/// monomorphized per shape), so a `TileShape` is always dispatchable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileShape {
+    mr: usize,
+    nr: usize,
+}
+
+impl TileShape {
+    /// The closed candidate set the autotuner ranks: filter-block
+    /// heights {2, 4, 8} on an 8-wide pixel strip, plus a narrow 4×4
+    /// for small output rows. 4×8 (32 accumulators) fits the x86-64
+    /// vector register file without spilling; 8×8 trades register
+    /// pressure for more input reuse.
+    pub const CANDIDATES: [TileShape; 4] = [
+        TileShape { mr: 2, nr: 8 },
+        TileShape { mr: 4, nr: 8 },
+        TileShape { mr: 8, nr: 8 },
+        TileShape { mr: 4, nr: 4 },
+    ];
+
+    /// The candidate with this shape, if it exists.
+    pub fn of(mr: usize, nr: usize) -> Option<TileShape> {
+        TileShape::CANDIDATES.iter().copied().find(|t| t.mr == mr && t.nr == nr)
+    }
+
+    /// Closed-form default (no timing): 4×8 — wide enough to amortize
+    /// input loads across four filters, narrow enough not to spill —
+    /// dropping to 4×4 when the output rows are too short to fill an
+    /// 8-wide strip, and to 2×8 when there are fewer than 4 filters.
+    pub fn heuristic(spec: &ConvSpec) -> TileShape {
+        if spec.m < 4 {
+            TileShape { mr: 2, nr: 8 }
+        } else if spec.out_w() < 8 {
+            TileShape { mr: 4, nr: 4 }
+        } else {
+            TileShape { mr: 4, nr: 8 }
+        }
+    }
+
+    /// Filter rows per tile.
+    pub fn mr(&self) -> usize {
+        self.mr
+    }
+
+    /// Output pixels per tile row.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Display form, e.g. `4x8`.
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.mr, self.nr)
+    }
+}
+
+impl std::fmt::Display for TileShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.mr, self.nr)
+    }
+}
+
+/// Filters regrouped into MR-blocked, tap-major, 64-byte-aligned panels
+/// (see the module docs for the layout), built once at plan time and
+/// `Arc`-shared by every plan/replica that serves the same weights.
+///
+/// Remembers **which** tensor it was packed from — a `Weak` to the
+/// shared source when built with [`PackedFilters::pack_shared`] —
+/// so [`PackedFilters::matches`] lets the execute path verify it was
+/// handed the same filters the plan was built for, and fall back to the
+/// unpacked kernel otherwise instead of serving stale weights.
+#[derive(Debug)]
+pub struct PackedFilters {
+    tile: TileShape,
+    m: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    /// f32s between consecutive panel starts (panel elems rounded up to
+    /// a cache line so every panel starts 64-byte aligned).
+    panel_stride: usize,
+    /// The source tensor, weakly: [`PackedFilters::matches`] only
+    /// succeeds while the source `Arc` is alive, so a freed allocation
+    /// whose address gets reused can never alias this packing (ABA).
+    /// `None` for [`PackedFilters::pack`] packs — those never match.
+    source: Option<Weak<Tensor>>,
+    buf: AlignedF32Buf,
+}
+
+impl PackedFilters {
+    /// Pack `filters` (`[M, C, Kh, Kw]`) for `tile`. One-time cost, to
+    /// be amortized at plan time. The packing records **no** source
+    /// identity ([`PackedFilters::matches`] is always false) — use
+    /// [`PackedFilters::pack_shared`] when the execute path must be
+    /// able to recognize the source tensor.
+    pub fn pack(filters: &Tensor, tile: TileShape) -> PackedFilters {
+        let [m, c, kh, kw] = filters.shape();
+        let taps = kh * kw;
+        let panel_elems = c * taps * tile.mr;
+        let panel_stride =
+            panel_elems.div_ceil(SCRATCH_ALIGN_ELEMS) * SCRATCH_ALIGN_ELEMS;
+        let blocks = m.div_ceil(tile.mr);
+        let mut buf = AlignedF32Buf::zeroed(blocks * panel_stride);
+        let dst = buf.as_mut_slice();
+        let src = filters.data();
+        for b in 0..blocks {
+            let m0 = b * tile.mr;
+            let mlen = tile.mr.min(m - m0);
+            let panel = &mut dst[b * panel_stride..][..panel_elems];
+            for r in 0..mlen {
+                let frow = &src[(m0 + r) * c * taps..][..c * taps];
+                for (t, &v) in frow.iter().enumerate() {
+                    panel[t * tile.mr + r] = v;
+                }
+            }
+            // Tail rows (r >= mlen) stay zero: the kernel computes them
+            // and discards the results.
+        }
+        PackedFilters { tile, m, c, kh, kw, panel_stride, source: None, buf }
+    }
+
+    /// As [`PackedFilters::pack`], remembering the `Arc`-shared source
+    /// tensor (weakly — the packing keeps nothing alive) so
+    /// [`PackedFilters::matches`] can recognize it at execute time.
+    /// This is what plan-time packing uses.
+    pub fn pack_shared(filters: &Arc<Tensor>, tile: TileShape) -> PackedFilters {
+        let mut p = PackedFilters::pack(filters, tile);
+        p.source = Some(Arc::downgrade(filters));
+        p
+    }
+
+    pub fn tile(&self) -> TileShape {
+        self.tile
+    }
+
+    /// Filter blocks (panels), `ceil(M / MR)`.
+    pub fn blocks(&self) -> usize {
+        self.m.div_ceil(self.tile.mr)
+    }
+
+    /// The packed panel of filter block `b`: `C·Kh·Kw·MR` f32s, tap-major
+    /// (`[C][Kh][Kw][MR]`), starting on a 64-byte boundary.
+    pub fn panel(&self, b: usize) -> &[f32] {
+        let elems = self.c * self.kh * self.kw * self.tile.mr;
+        &self.buf.as_slice()[b * self.panel_stride..][..elems]
+    }
+
+    /// Packed size in bytes (zero-padding and alignment included) —
+    /// plan-memory telemetry.
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * F32_BYTES
+    }
+
+    /// Whether this packing was built ([`PackedFilters::pack_shared`])
+    /// from exactly `filters`: the recorded source must still be
+    /// **alive** (so a freed-and-reused allocation can never alias it)
+    /// and be this very buffer. The execute path consults this so a
+    /// caller passing *different* weights than the plan was packed for
+    /// gets the unpacked kernel (correct for any weights), never a
+    /// silent stale-weight fast path.
+    pub fn matches(&self, filters: &Tensor) -> bool {
+        if filters.shape() != [self.m, self.c, self.kh, self.kw] {
+            return false;
+        }
+        let Some(src) = self.source.as_ref().and_then(Weak::upgrade) else {
+            return false;
+        };
+        std::ptr::eq(src.data().as_ptr(), filters.data().as_ptr())
+    }
+
+    /// Whether this packing's filter geometry matches `spec`'s.
+    pub fn matches_spec(&self, spec: &ConvSpec) -> bool {
+        [self.m, self.c, self.kh, self.kw] == spec.filter_shape()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn candidates_roundtrip_and_heuristic_is_a_candidate() {
+        for t in TileShape::CANDIDATES {
+            assert_eq!(TileShape::of(t.mr(), t.nr()), Some(t));
+            assert_eq!(t.label(), format!("{}x{}", t.mr(), t.nr()));
+        }
+        assert_eq!(TileShape::of(3, 8), None);
+        for spec in [
+            ConvSpec::paper(14, 1, 3, 64, 64),
+            ConvSpec::paper(3, 1, 3, 64, 64), // ow < 8
+            ConvSpec::paper(14, 1, 3, 2, 64), // m < 4
+        ] {
+            let t = TileShape::heuristic(&spec);
+            assert!(TileShape::CANDIDATES.contains(&t), "{t} not a candidate");
+        }
+    }
+
+    #[test]
+    fn packed_layout_matches_filter_taps() {
+        let (m, c, kh, kw) = (5usize, 3usize, 3usize, 3usize);
+        let mut rng = Rng::new(42);
+        let filters = Tensor::random(m, c, kh, kw, &mut rng, -1.0, 1.0);
+        let tile = TileShape::of(4, 8).unwrap();
+        let p = PackedFilters::pack(&filters, tile);
+        assert_eq!(p.blocks(), 2); // 5 filters in blocks of 4: tail of 1
+        for b in 0..p.blocks() {
+            let panel = p.panel(b);
+            for ci in 0..c {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let t = (ci * kh + ky) * kw + kx;
+                        for r in 0..tile.mr() {
+                            let want = if b * tile.mr() + r < m {
+                                filters.at(b * tile.mr() + r, ci, ky, kx)
+                            } else {
+                                0.0 // zero-padded tail rows
+                            };
+                            assert_eq!(panel[t * tile.mr() + r], want, "b={b} t={t} r={r}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panels_are_64_byte_aligned() {
+        let mut rng = Rng::new(7);
+        // c*kh*kw*mr = 3*3*3*4 = 108, not a multiple of 16: the stride
+        // must round up so later panels stay aligned.
+        let filters = Tensor::random(9, 3, 3, 3, &mut rng, -1.0, 1.0);
+        let p = PackedFilters::pack(&filters, TileShape::of(4, 8).unwrap());
+        assert_eq!(p.blocks(), 3);
+        for b in 0..p.blocks() {
+            let addr = p.panel(b).as_ptr() as usize;
+            assert_eq!(addr % 64, 0, "panel {b} misaligned");
+        }
+    }
+
+    #[test]
+    fn matches_is_live_allocation_identity_not_value_equality() {
+        let mut rng = Rng::new(9);
+        let tile = TileShape::heuristic(&ConvSpec::paper(8, 1, 3, 4, 2));
+        let filters = Arc::new(Tensor::random(4, 2, 3, 3, &mut rng, -1.0, 1.0));
+        let p = PackedFilters::pack_shared(&filters, tile);
+        assert!(p.matches(&filters));
+        // An equal-valued clone is a different allocation: no match.
+        let clone = filters.as_ref().clone();
+        assert!(!p.matches(&clone));
+        // A different shape never matches.
+        let other = Tensor::zeros(4, 2, 1, 1);
+        assert!(!p.matches(&other));
+        assert!(p.matches_spec(&ConvSpec::paper(8, 1, 3, 4, 2)));
+        assert!(!p.matches_spec(&ConvSpec::paper(8, 1, 3, 8, 2)));
+        // A plain (non-shared) pack records no identity: never matches.
+        let anon = PackedFilters::pack(&filters, tile);
+        assert!(!anon.matches(&filters));
+        // Dropping the last source Arc kills the match — a new tensor
+        // reusing the freed allocation's address can never alias the
+        // packing (ABA safety).
+        drop(filters);
+        assert!(!p.matches(&clone));
+    }
+}

@@ -262,7 +262,15 @@ fn forward_network(net: Network, batch: usize, measure: bool) -> Result<()> {
 
     let graph = network_graph(net);
     let hw = input_hw(net);
-    let planner = NetPlanner::new(Box::new(CpuRefBackend::new())).with_choice(if measure {
+    // `--measure` also upgrades the cuConv register-tile choice from
+    // the closed-form heuristic to the timed per-shape ranking (both
+    // picks end up pinned in the compiled plan).
+    let backend = if measure {
+        CpuRefBackend::new().with_measured_tiles(2)
+    } else {
+        CpuRefBackend::new()
+    };
+    let planner = NetPlanner::new(Box::new(backend)).with_choice(if measure {
         AlgoChoice::Measured { iters: 2 }
     } else {
         AlgoChoice::Heuristic
@@ -271,7 +279,7 @@ fn forward_network(net: Network, batch: usize, measure: bool) -> Result<()> {
         "compiling {} ({} nodes, {hw}x{hw} input) at batch {batch} on cpuref{} ...",
         graph.name,
         graph.len(),
-        if measure { " (measured per-layer algo_find)" } else { "" }
+        if measure { " (measured per-layer algo_find + tile find)" } else { "" }
     );
     let mut plan = planner.compile(&graph, batch)?;
     let mut rng = Rng::new(0xF0A11);

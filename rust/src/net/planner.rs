@@ -231,9 +231,14 @@ impl NetPlanner {
                             }
                         },
                     };
-                    let plan = backend.plan(&desc, algo).map_err(|e| {
-                        e.context(format!("planning conv node '{}'", node.name))
-                    })?;
+                    // Plan with the node's weights: the backend derives
+                    // plan-owned state (packed tiled-cuConv panels) once
+                    // here — and because the weights are Arc-shared
+                    // across batch sizes and replicas, the backend's
+                    // pack cache shares the derived state too.
+                    let plan = backend.plan_with_filters(&desc, algo, &filters).map_err(
+                        |e| e.context(format!("planning conv node '{}'", node.name)),
+                    )?;
                     max_ws_bytes = max_ws_bytes.max(plan.workspace_bytes());
                     StepRes::Conv { plan, filters, bias }
                 }
@@ -468,6 +473,16 @@ impl NetPlan {
             StepRes::Conv { filters, bias, .. } => {
                 Some((filters.as_ref(), bias.as_slice()))
             }
+            _ => None,
+        }
+    }
+
+    /// The backend plan of a conv node (verification harnesses — e.g.
+    /// pinning that packed weights are shared across batch sizes and
+    /// replicas, not duplicated).
+    pub fn conv_plan(&self, id: NodeId) -> Option<&ConvPlan> {
+        match &self.steps[id] {
+            StepRes::Conv { plan, .. } => Some(plan),
             _ => None,
         }
     }
@@ -946,6 +961,44 @@ mod tests {
                 "item {i} depends on batch grouping"
             );
         }
+    }
+
+    /// Plan-time packed weights (the tiled cuConv panels) must exist
+    /// once per weight set per fleet: shared across the per-batch-size
+    /// plans of `compile_for_sizes` AND across `replicate()` shards —
+    /// the same `Arc`, not equal copies.
+    #[test]
+    fn packed_weights_are_shared_across_sizes_and_replicas() {
+        let p = planner();
+        // A batch-1 small 1×1 conv pins cuConv across sizes (heuristic
+        // region), which is the algorithm that owns packed weights.
+        let mut gb = GraphBuilder::new("pack", 16, 7, 7);
+        let c = gb.conv_same("c", gb.input(), 32, 1);
+        let g = gb.global_avg_pool("gap", c);
+        let fc = gb.linear("fc", g, 4, false);
+        gb.softmax("sm", fc);
+        let graph = gb.finish();
+        let plans = p.compile_for_sizes(&graph, &[1, 2]).unwrap();
+        let (_, plan1) = &plans[0];
+        let (_, plan2) = &plans[1];
+        assert_eq!(
+            plan1.conv_plan(c).unwrap().algo(),
+            Algorithm::CuConv,
+            "test premise: this conv must pin cuConv"
+        );
+        let pk1 = plan1
+            .conv_plan(c)
+            .unwrap()
+            .packed_filters()
+            .expect("cuconv plan must own packed weights");
+        let pk2 = plan2.conv_plan(c).unwrap().packed_filters().unwrap();
+        assert!(Arc::ptr_eq(pk1, pk2), "packing duplicated across batch sizes");
+        // Replication (sharded serving) shares the same packing.
+        let replica = plan1.replicate();
+        let pkr = replica.conv_plan(c).unwrap().packed_filters().unwrap();
+        assert!(Arc::ptr_eq(pk1, pkr), "replicate must share the packing");
+        // And the packed tile is one of the closed candidate set.
+        assert!(crate::cpuref::pack::TileShape::CANDIDATES.contains(&pk1.tile()));
     }
 
     #[test]

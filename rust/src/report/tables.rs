@@ -75,10 +75,15 @@ fn measure_backend_us(
         return None;
     }
     let desc = ConvDescriptor::new(*spec).ok()?;
-    let plan = backend.plan(&desc, algo).ok()?;
     let mut rng = Rng::new(0xCAFE);
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
-    let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+    let filters = std::sync::Arc::new(Tensor::random(
+        spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+    ));
+    // Plan with the probe filters so algorithms with plan-time derived
+    // weight state (packed tiled cuConv) are measured on the serving
+    // code path.
+    let plan = backend.plan_with_filters(&desc, algo, &filters).ok()?;
     let mut ws = Workspace::new();
     let [on, om, oh, ow] = spec.output_shape();
     let mut out = Tensor::zeros(on, om, oh, ow);

@@ -1,0 +1,138 @@
+//! [`AlignedF32Buf`]: a growable f32 buffer whose exposed slice always
+//! starts on a 64-byte (cache-line) boundary.
+//!
+//! Rust's global allocator only guarantees 4-byte alignment for
+//! `Vec<f32>`, so a vectorized kernel reading a `Vec`-backed buffer can
+//! start mid-cache-line and every 8-wide load straddles two lines. This
+//! buffer over-allocates by one cache line and exposes the first aligned
+//! window, in safe code (no `unsafe` allocator calls): the
+//! [`Workspace`](crate::backend::Workspace) scratch regions and the
+//! plan-owned [`PackedFilters`](crate::cpuref::pack::PackedFilters)
+//! panels both sit on it, so their 64-byte-aligned internal offsets
+//! translate to 64-byte-aligned addresses.
+
+/// Alignment guarantee of [`AlignedF32Buf::as_slice`], in bytes.
+pub const ALIGN_BYTES: usize = 64;
+
+const F32_BYTES: usize = std::mem::size_of::<f32>();
+
+/// Worst-case f32s between the raw allocation start and the first
+/// 64-byte boundary.
+const PAD_ELEMS: usize = ALIGN_BYTES / F32_BYTES;
+
+/// A growable f32 buffer aligned to [`ALIGN_BYTES`]. Grows, never
+/// shrinks; growing zero-fills new elements and preserves the prefix
+/// contents (the backing allocation may move, in which case the aligned
+/// window is recomputed).
+/// Deliberately **not** `Clone`: a derived clone would element-copy the
+/// raw Vec into a differently-aligned allocation and expose a shifted
+/// window. Nothing needs cloning today (the packed-weight and workspace
+/// owners share via `Arc` / own per-replica buffers); implement a
+/// window-copying clone if that changes.
+#[derive(Debug, Default)]
+pub struct AlignedF32Buf {
+    raw: Vec<f32>,
+    len: usize,
+}
+
+impl AlignedF32Buf {
+    pub fn new() -> AlignedF32Buf {
+        AlignedF32Buf::default()
+    }
+
+    /// A zero-filled aligned buffer of exactly `elems` f32s.
+    pub fn zeroed(elems: usize) -> AlignedF32Buf {
+        let mut b = AlignedF32Buf::new();
+        b.ensure_len(elems);
+        b
+    }
+
+    /// Logical length in f32s (the exposed slice's length).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow the logical length to at least `elems` (no-op when already
+    /// large enough). New elements are zero; existing contents survive.
+    pub fn ensure_len(&mut self, elems: usize) {
+        if elems <= self.len {
+            return;
+        }
+        // Preserve the aligned window's contents across a possible
+        // realloc-induced shift of the alignment offset: materialize the
+        // old window first, then rebuild.
+        let old: Vec<f32> = self.as_slice().to_vec();
+        self.raw.clear();
+        self.raw.resize(elems + PAD_ELEMS, 0.0);
+        self.len = elems;
+        self.as_mut_slice()[..old.len()].copy_from_slice(&old);
+    }
+
+    /// f32s between the raw allocation start and the first 64-byte
+    /// boundary (recomputed per call: the Vec may have moved).
+    fn start(&self) -> usize {
+        let addr = self.raw.as_ptr() as usize;
+        // Vec<f32> is at least 4-aligned, so the byte distance to the
+        // next 64-byte boundary is an exact number of f32s.
+        (ALIGN_BYTES - addr % ALIGN_BYTES) % ALIGN_BYTES / F32_BYTES
+    }
+
+    /// The aligned window: `len` f32s starting on a 64-byte boundary.
+    pub fn as_slice(&self) -> &[f32] {
+        if self.len == 0 {
+            return &[];
+        }
+        let s = self.start();
+        &self.raw[s..s + self.len]
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        if self.len == 0 {
+            return &mut [];
+        }
+        let s = self.start();
+        &mut self.raw[s..s + self.len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_is_64_byte_aligned() {
+        for elems in [1usize, 3, 16, 1000, 4097] {
+            let b = AlignedF32Buf::zeroed(elems);
+            assert_eq!(b.len(), elems);
+            assert_eq!(b.as_slice().len(), elems);
+            assert_eq!(b.as_slice().as_ptr() as usize % ALIGN_BYTES, 0, "{elems} elems");
+        }
+    }
+
+    #[test]
+    fn empty_buffer_is_safe() {
+        let mut b = AlignedF32Buf::new();
+        assert!(b.is_empty());
+        assert!(b.as_slice().is_empty());
+        assert!(b.as_mut_slice().is_empty());
+    }
+
+    #[test]
+    fn grow_preserves_contents_and_alignment() {
+        let mut b = AlignedF32Buf::zeroed(4);
+        b.as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        b.ensure_len(100);
+        assert_eq!(b.len(), 100);
+        assert_eq!(&b.as_slice()[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(b.as_slice()[4..].iter().all(|&v| v == 0.0));
+        assert_eq!(b.as_slice().as_ptr() as usize % ALIGN_BYTES, 0);
+        // Shrinking requests are no-ops.
+        b.ensure_len(10);
+        assert_eq!(b.len(), 100);
+        assert_eq!(&b.as_slice()[..4], &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

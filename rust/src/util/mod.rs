@@ -4,6 +4,8 @@
 //! not include `serde`, `rand`, `proptest` or `criterion`, so this module
 //! provides the minimal equivalents the rest of the crate needs:
 //!
+//! * [`align`] — a growable 64-byte-aligned f32 buffer (workspace and
+//!   packed-weight backing storage).
 //! * [`json`] — a tiny JSON value model, writer and recursive-descent
 //!   parser (used for `artifacts/manifest.json` and result dumps).
 //! * [`rng`] — a splitmix64/xoshiro256** PRNG with normal/uniform helpers.
@@ -12,6 +14,7 @@
 //! * [`prop`] — a miniature property-based testing framework with
 //!   shrinking, in the spirit of `proptest`.
 
+pub mod align;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -66,6 +66,45 @@ fn cpuref_backend_agrees_with_oracle_across_spec_set() {
     assert_backend_matches_oracle(&CpuRefBackend::new(), 2e-5);
 }
 
+/// The serving shape of the tiled path through the public API only:
+/// plan once **with** the layer's filters, execute many times into
+/// reused buffers — every execute takes the packed fast path, outputs
+/// are bit-identical to the oracle, and the workspace is never touched
+/// (the microkernel's scratch is its register tile).
+#[test]
+fn packed_cuconv_plans_serve_tiled_bit_exact_and_workspace_free() {
+    let backend = CpuRefBackend::new();
+    let mut workspace = Workspace::new();
+    for spec in oracle_specs() {
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let (input, filters) = io(&spec, 0x717ED ^ spec.flops());
+        let oracle = conv_naive(&spec, &input, &filters);
+        let filters = std::sync::Arc::new(filters);
+        let plan = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        assert!(plan.packed_filters().is_some(), "no packed weights for {spec}");
+        assert_eq!(plan.workspace_bytes(), 0);
+        let [n, m, oh, ow] = spec.output_shape();
+        let mut out = Tensor::full(n, m, oh, ow, f32::NAN); // dirty reuse
+        let before = backend.packed_execute_count();
+        for _ in 0..3 {
+            backend
+                .execute_into(&plan, &input, &filters, &mut workspace, &mut out)
+                .unwrap();
+            assert_eq!(
+                out.max_abs_diff(&oracle),
+                0.0,
+                "tiled serving not bit-identical on {spec}"
+            );
+        }
+        assert_eq!(
+            backend.packed_execute_count(),
+            before + 3,
+            "an execute missed the packed fast path on {spec}"
+        );
+    }
+    assert_eq!(workspace.high_water_bytes(), 0, "tiled path must not touch scratch");
+}
+
 #[test]
 fn cpuref_plan_reuse_repeats_no_planning() {
     let backend = CpuRefBackend::new();

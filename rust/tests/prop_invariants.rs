@@ -165,6 +165,79 @@ fn prop_cuconv_fused_equals_staged_equals_oracle() {
     });
 }
 
+/// The register-tiled microkernel must agree with the clear-loop oracle
+/// **bit for bit** — same `(c, ky, kx)` accumulation order, same
+/// mul-then-add rounding — on every tile-shape candidate and thread
+/// count, across the random stride/padding/1×1 sweep. The generator's
+/// `m ∈ [1, 8)` leaves tail tiles for every MR in the candidate set.
+#[test]
+fn prop_cuconv_tiled_is_bit_identical_to_oracle() {
+    use cuconv::cpuref::cuconv::conv_tiled;
+    use cuconv::cpuref::pack::TileShape;
+    let cfg = Config { cases: 32, ..Config::default() };
+    assert_prop(cfg, &WideSpecGen, |spec| {
+        if !spec.is_valid() {
+            return Ok(());
+        }
+        let mut rng = Rng::new(spec.flops() ^ 0x7173D);
+        let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let oracle = conv_naive(spec, &input, &filters);
+        for tile in TileShape::CANDIDATES {
+            for threads in [1, 3] {
+                let got = conv_tiled(spec, &input, &filters, tile, threads);
+                let d = got.max_abs_diff(&oracle);
+                if d != 0.0 {
+                    return Err(format!(
+                        "tiled {tile} ({threads}t) differs by {d} on {spec}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fixed hard cases the random generator cannot reach: AlexNet conv1
+/// (11×11 stride 4 on a 227×227 input), stride-2 5×5, heavily
+/// asymmetric padding — tiled (every tile shape) == naive bit-exactly,
+/// and fused == staged == naive within float tolerance, all four paths
+/// on one problem.
+#[test]
+fn tiled_fused_staged_and_oracle_agree_on_hard_cases() {
+    use cuconv::cpuref::cuconv::{conv_fused_with_threads, conv_tiled, conv_two_stage};
+    use cuconv::cpuref::pack::TileShape;
+    let specs = [
+        // AlexNet conv1 geometry (m trimmed 64 -> 9: tails for all MR).
+        ConvSpec {
+            n: 1, c: 3, h: 227, w: 227, m: 9, kh: 11, kw: 11,
+            stride: 4, pad_h: 0, pad_w: 0,
+        },
+        ConvSpec { stride: 2, ..ConvSpec::paper(13, 1, 5, 6, 4) },
+        ConvSpec { pad_h: 0, pad_w: 3, ..ConvSpec::paper(8, 2, 3, 5, 2) },
+        ConvSpec { stride: 3, ..ConvSpec::paper(10, 1, 5, 7, 2) },
+    ];
+    for (i, spec) in specs.iter().enumerate() {
+        assert!(spec.is_valid(), "bad hard case {spec}");
+        let mut rng = Rng::new(0xA1E7 + i as u64);
+        let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
+        let filters = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let oracle = conv_naive(spec, &input, &filters);
+        for tile in TileShape::CANDIDATES {
+            let tiled = conv_tiled(spec, &input, &filters, tile, 2);
+            assert_eq!(
+                tiled.max_abs_diff(&oracle),
+                0.0,
+                "tiled {tile} not bit-identical on {spec}"
+            );
+        }
+        let fused = conv_fused_with_threads(spec, &input, &filters, 2);
+        assert!(fused.rel_l2_error(&oracle) < 1e-5, "fused vs oracle on {spec}");
+        let staged = conv_two_stage(spec, &input, &filters);
+        assert!(staged.rel_l2_error(&oracle) < 1e-5, "staged vs oracle on {spec}");
+    }
+}
+
 #[test]
 fn prop_cuconv_temp_accounting_matches_stage1_size() {
     assert_prop(Config::default(), &SpecGen, |spec| {

@@ -72,6 +72,38 @@ def check_hotpath(path: str, doc: dict) -> None:
         where = f"cuconv_staged_vs_fused[{row.get('config')!r}]"
         for key in ("staged_alloc_p50_us", "fused_reuse_p50_us", "speedup"):
             finite_positive(path, row, key, where)
+    # Register-tiled microkernel vs the untiled fused kernel: rows must
+    # exist, carry a tile label, time out finite and positive, and
+    # attest bit-identity with the naive oracle (the bench asserts it
+    # before timing; a false here means the assertion was bypassed).
+    for row in non_empty_rows(path, doc, "cuconv_tiled_vs_fused"):
+        where = f"cuconv_tiled_vs_fused[{row.get('config')!r}]"
+        if not row.get("tile"):
+            problem(path, f"{where}: missing 'tile'")
+        for key in ("fused_p50_us", "tiled_p50_us", "speedup"):
+            finite_positive(path, row, key, where)
+        if row.get("bit_identical") is not True:
+            problem(path, f"{where}: 'bit_identical' is {row.get('bit_identical')!r}")
+    finite_positive(path, doc, "tiled_geomean_speedup", "top level")
+    # The MR x NR sweep must have run the whole candidate set (mirror
+    # of TileShape::CANDIDATES in rust/src/cpuref/pack.rs — update both
+    # together): a truncated sweep must fail here, not land silently.
+    tile_candidates = {"2x8", "4x8", "8x8", "4x4"}
+    sweep = non_empty_rows(path, doc, "tile_sweep")
+    tiles = [r.get("tile") for r in sweep]
+    if len(set(tiles)) != len(tiles):
+        problem(path, f"tile_sweep has duplicate tiles: {tiles}")
+    if sweep and set(tiles) != tile_candidates:
+        problem(
+            path,
+            f"tile_sweep covered {sorted(set(tiles))}, "
+            f"expected the full candidate set {sorted(tile_candidates)}",
+        )
+    for row in sweep:
+        where = f"tile_sweep[{row.get('tile')!r}]"
+        if not row.get("tile"):
+            problem(path, f"{where}: missing 'tile'")
+        finite_positive(path, row, "p50_us", where)
 
 
 def check_e2e(path: str, doc: dict) -> None:
