@@ -8,7 +8,10 @@
 //! `pjrt` feature and `make artifacts` — repeats the same lifecycle on
 //! the AOT Pallas kernels through the PJRT backend. It ends with the
 //! serving story at network scope: a whole SqueezeNet forward pass
-//! (batch 1) through the net engine's graph → plan → forward lifecycle.
+//! (batch 1) through the net engine's graph → plan → forward lifecycle,
+//! then the same network served over a real loopback socket through the
+//! HTTP/JSON front door (lazy-scan admission → shard pool → JSON
+//! logits).
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (PJRT path: `make artifacts && cargo run --release --features pjrt \
@@ -151,6 +154,54 @@ fn main() -> anyhow::Result<()> {
         plan.max_conv_workspace_bytes() as f64 / 1e6,
     );
     assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4, "softmax must normalize");
+
+    // 7) The HTTP/JSON front door: the same network behind a real TCP
+    //    socket. One request roundtrips JSON → lazy-scan admission →
+    //    shard dispatch → inference → JSON logits; `GET /metrics` shows
+    //    the four-class accounting and SLO buckets the front door keeps.
+    {
+        use cuconv::coordinator::{BatchPolicy, PoolConfig, Server};
+        use cuconv::http::{
+            infer_body, logits_of, wait_healthy, AppState, HttpClient, HttpConfig,
+            HttpServer, TenantLimiter,
+        };
+        use std::time::{Duration, Instant};
+
+        let server = Server::start_net(
+            Box::new(CpuRefBackend::new()),
+            &graph,
+            &[1],
+            BatchPolicy::default(),
+            PoolConfig::default(),
+        )?;
+        let http = HttpServer::start(
+            AppState {
+                handle: server.handle(),
+                model: graph.name.clone(),
+                max_batch: 1,
+                limiter: TenantLimiter::new(None),
+                default_deadline: Some(Duration::from_secs(30)),
+                started: Instant::now(),
+            },
+            HttpConfig::default(),
+        )?;
+        wait_healthy(http.addr(), Duration::from_secs(5))?;
+        let mut client = HttpClient::connect(http.addr())?;
+        let body = infer_body(&graph.name, 1, None, Some("quickstart"), &image);
+        let (status, resp) = client.post_json("/v1/infer", &body)?;
+        assert_eq!(status, 200, "infer over the wire: {resp}");
+        let rows = logits_of(&resp)?;
+        let (st, metrics) = client.get("/metrics")?;
+        assert_eq!(st, 200);
+        println!(
+            "http front door on {}: POST /v1/infer -> 200, {} logits over the \
+             wire; /metrics: {} bytes of accounting + SLO buckets",
+            http.addr(),
+            rows[0].len(),
+            metrics.len(),
+        );
+    }
+
     println!("quickstart OK");
     Ok(())
 }

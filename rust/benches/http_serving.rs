@@ -1,0 +1,209 @@
+//! Bench: the HTTP/JSON front door over a real loopback socket —
+//! wire-path throughput/latency versus client concurrency, plus the
+//! deadline-shedding path.
+//!
+//! A shard pool serves a whole network ([`Server::start_net`]) behind
+//! the [`HttpServer`]; the socket load generator
+//! ([`run_closed_loop_http`]) drives it closed-loop through real TCP
+//! connections, so every point pays for JSON encode, lazy-scan
+//! admission, payload decode, dispatch, inference, and JSON response —
+//! the full front-door path, not the in-process shortcut
+//! `serve_scaling` measures.
+//!
+//! Points: one per client count (no deadline), plus one point with
+//! `deadline_ms = 0` where **every** request is dead on arrival — the
+//! bench asserts the whole batch is counted `expired` (never completed,
+//! rejected, or failed) and that the server turned them away at
+//! admission, before any worker saw them.
+//!
+//! Results land in `BENCH_http.json` at the repository root (validated
+//! in CI by `tools/check_bench.py`), including the server's cumulative
+//! SLO attainment buckets. Environment knobs: `CUCONV_BENCH_HTTP_NET`
+//! (default `squeezenet`), `CUCONV_BENCH_HTTP_REQUESTS` (default 48,
+//! per point), `CUCONV_BENCH_HTTP_WORKERS` (default 2).
+
+use std::time::{Duration, Instant};
+
+use cuconv::backend::CpuRefBackend;
+use cuconv::coordinator::{BatchPolicy, PoolConfig, Server};
+use cuconv::http::{
+    run_closed_loop_http, wait_healthy, AppState, HttpConfig, HttpServer,
+    TenantLimiter,
+};
+use cuconv::net::network_graph;
+use cuconv::util::json::Json;
+use cuconv::zoo::Network;
+
+fn parse_net(name: &str) -> Network {
+    match name {
+        "googlenet" => Network::GoogleNet,
+        "squeezenet" => Network::SqueezeNet,
+        "alexnet" => Network::AlexNet,
+        "resnet50" => Network::ResNet50,
+        "vgg19" => Network::Vgg19,
+        other => panic!("unknown network '{other}'"),
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let requests = env_usize("CUCONV_BENCH_HTTP_REQUESTS", 48);
+    let workers = env_usize("CUCONV_BENCH_HTTP_WORKERS", 2);
+    let net = parse_net(
+        &std::env::var("CUCONV_BENCH_HTTP_NET")
+            .unwrap_or_else(|_| "squeezenet".to_string()),
+    );
+    let graph = network_graph(net);
+    let cores =
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+
+    println!(
+        "http serving: {} x {workers} worker(s) on {cores} cores, \
+         {requests} requests per point",
+        graph.name
+    );
+    let server = Server::start_net(
+        Box::new(CpuRefBackend::new()),
+        &graph,
+        &[1, 2, 4],
+        BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(5),
+            queue_capacity: 256,
+        },
+        PoolConfig::with_workers(workers),
+    )
+    .expect("server");
+    let handle = server.handle();
+    let image_elems = handle.image_elems();
+    let mut http = HttpServer::start(
+        AppState {
+            handle: handle.clone(),
+            model: graph.name.clone(),
+            max_batch: 4,
+            limiter: TenantLimiter::new(None),
+            default_deadline: None,
+            started: Instant::now(),
+        },
+        HttpConfig::default(),
+    )
+    .expect("http server");
+    let addr = http.addr();
+    wait_healthy(addr, Duration::from_secs(5)).expect("healthz");
+    println!("front door on http://{addr}");
+
+    // Warmup: first-touch paging of each replica's arena plus the
+    // connection establishment path.
+    run_closed_loop_http(addr, &graph.name, image_elems, 4 * workers, 2, 1, None);
+
+    println!("point          clients  rps      p50 ms   p99 ms   acct (c/r/f/e)");
+    println!("-----------------------------------------------------------------");
+    let mut points = Vec::new();
+    for (label, clients, deadline_ms) in [
+        ("closed-1", 1usize, None),
+        ("closed-4", 4usize, None),
+        // Every request in this point carries an already-elapsed
+        // deadline: lazy admission must refuse them all as `expired`
+        // without decoding a single payload.
+        ("dead-on-arrival", 2usize, Some(0u64)),
+    ] {
+        let report = run_closed_loop_http(
+            addr,
+            &graph.name,
+            image_elems,
+            requests,
+            clients,
+            0xB127 ^ clients as u64,
+            deadline_ms,
+        );
+        assert_eq!(
+            report.offered(),
+            requests,
+            "closed-loop accounting (completed + rejected + failed + expired) \
+             must cover every offered request"
+        );
+        if deadline_ms == Some(0) {
+            assert_eq!(
+                report.expired, requests,
+                "a zero deadline budget must expire every request"
+            );
+            assert_eq!(report.completed, 0);
+            assert_eq!(report.failed, 0);
+        } else {
+            assert_eq!(
+                report.failed, 0,
+                "a healthy front door must not fail requests"
+            );
+        }
+        let (p50_ms, p99_ms) = report
+            .latency
+            .as_ref()
+            .map(|l| (l.p50 * 1e3, l.p99 * 1e3))
+            .unwrap_or((f64::NAN, f64::NAN));
+        println!(
+            "{label:14} {clients:8}  {:7.1}  {p50_ms:7.2}  {p99_ms:7.2}  \
+             {}/{}/{}/{}",
+            report.achieved_rps,
+            report.completed,
+            report.rejected,
+            report.failed,
+            report.expired
+        );
+        let mut fields = vec![
+            ("point", Json::str(label)),
+            ("clients", Json::num(clients as f64)),
+            ("rps", Json::num(report.achieved_rps)),
+            ("completed", Json::num(report.completed as f64)),
+            ("rejected", Json::num(report.rejected as f64)),
+            ("failed", Json::num(report.failed as f64)),
+            ("expired", Json::num(report.expired as f64)),
+        ];
+        if report.completed > 0 {
+            fields.push(("p50_ms", Json::num(p50_ms)));
+            fields.push(("p99_ms", Json::num(p99_ms)));
+        }
+        points.push(Json::obj(fields));
+    }
+
+    // The server's aggregate view: every dead-on-arrival request must
+    // appear in `expired` without ever reaching a worker.
+    let m = server.metrics();
+    assert!(
+        m.expired >= requests as u64,
+        "server-side expired count must include the dead-on-arrival point"
+    );
+    let slo = Json::arr(
+        m.slo
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("le_seconds", Json::num(b.le_seconds)),
+                    ("count", Json::num(b.count as f64)),
+                ])
+            })
+            .collect(),
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("http_serving")),
+        ("network", Json::str(graph.name.clone())),
+        ("backend", Json::str("cpuref")),
+        ("workers", Json::num(workers as f64)),
+        ("cores", Json::num(cores as f64)),
+        ("requests_per_point", Json::num(requests as f64)),
+        ("server_requests", Json::num(m.requests as f64)),
+        ("server_expired", Json::num(m.expired as f64)),
+        ("slo", slo),
+        ("points", Json::arr(points)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_http.json");
+    match std::fs::write(path, report.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\n(could not write {path}: {e})"),
+    }
+    http.shutdown();
+    println!("http_serving bench OK ({requests} requests per point)");
+}

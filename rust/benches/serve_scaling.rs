@@ -81,9 +81,10 @@ fn main() {
         run_closed_loop(&server.handle(), 4 * workers, clients, 1);
         let report = run_closed_loop(&server.handle(), requests, clients, 2);
         assert_eq!(
-            report.completed + report.rejected + report.failed,
+            report.offered(),
             requests,
-            "closed-loop accounting must cover every offered request"
+            "closed-loop accounting (completed + rejected + failed + expired) \
+             must cover every offered request"
         );
         let m = server.metrics();
         if workers == 1 {
@@ -109,6 +110,7 @@ fn main() {
             ("completed", Json::num(report.completed as f64)),
             ("rejected", Json::num(report.rejected as f64)),
             ("failed", Json::num(report.failed as f64)),
+            ("expired", Json::num(report.expired as f64)),
             ("p50_ms", Json::num(p50_ms)),
             ("p99_ms", Json::num(p99_ms)),
             ("mean_batch", Json::num(m.mean_batch_size)),

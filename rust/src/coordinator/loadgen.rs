@@ -3,18 +3,25 @@
 //! open-loop Poisson driver (requests arrive whether or not the server
 //! keeps up — the load/latency curve of EXPERIMENTS.md §End-to-end).
 //!
-//! Both report through [`LoadReport`], which keeps the three outcomes
+//! Both report through [`LoadReport`], which keeps the four outcomes
 //! separate: **completed** (a response came back), **rejected**
 //! (backpressured at submission — every bounded worker queue was
-//! full), and **failed** (admitted, but the server errored or dropped
-//! the reply). Rejected and failed requests are never counted as
-//! completed and never enter the latency distribution — a saturated
-//! server must look saturated in the report, not faster.
+//! full), **failed** (admitted, but the server errored or dropped the
+//! reply), and **expired** (dropped because the client deadline had
+//! already passed — at the dispatcher or in a worker queue). None of
+//! the last three are ever counted as completed and none enter the
+//! latency distribution — a saturated or deadline-starved server must
+//! look that way in the report, not faster.
+//!
+//! The socket-driving sibling (`run_closed_loop_http` in
+//! [`http::client`](crate::http::client)) produces the same
+//! [`LoadReport`] over the real wire path.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::server::ServerHandle;
+use crate::coordinator::request::ServeError;
+use crate::coordinator::server::{ServerHandle, SubmitError};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -29,12 +36,13 @@ pub struct LoadSpec {
     pub seed: u64,
 }
 
-/// Outcome of a load run. `completed + rejected + failed` equals the
-/// requests offered.
+/// Outcome of a load run. `completed + rejected + failed + expired`
+/// equals the requests offered.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     pub offered_rps: f64,
-    /// Completed requests per wall-second (rejected/failed excluded).
+    /// Completed requests per wall-second (rejected/failed/expired
+    /// excluded).
     pub achieved_rps: f64,
     pub completed: usize,
     /// Backpressured at submission: every bounded worker queue was full.
@@ -42,9 +50,29 @@ pub struct LoadReport {
     /// Admitted but not answered: the server errored or dropped the
     /// reply.
     pub failed: usize,
+    /// Dropped because the client deadline had already passed — before
+    /// dispatch or while queued. Never counted as rejected or failed.
+    pub expired: usize,
     /// End-to-end latency summary over completed requests (seconds).
     pub latency: Option<Summary>,
     pub wall_seconds: f64,
+}
+
+impl LoadReport {
+    /// Requests offered, reconstructed from the per-class counts — the
+    /// accounting invariant every driver upholds.
+    pub fn offered(&self) -> usize {
+        self.completed + self.rejected + self.failed + self.expired
+    }
+}
+
+/// What one request attempt came to — the closed-loop and HTTP drivers
+/// fold these into a [`LoadReport`].
+pub(crate) enum Outcome {
+    Completed(f64),
+    Rejected,
+    Failed,
+    Expired,
 }
 
 /// Exponential inter-arrival sample for a Poisson process at `rate`.
@@ -61,11 +89,12 @@ fn exp_interarrival(rng: &mut Rng, rate: f64) -> Duration {
 pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
     let mut rng = Rng::new(spec.seed);
     let elems = handle.image_elems();
-    let (done_tx, done_rx) = mpsc::channel::<Result<f64, ()>>();
+    let (done_tx, done_rx) = mpsc::channel::<Result<f64, ServeError>>();
 
     let started = Instant::now();
     let mut next_arrival = started;
     let mut rejected = 0usize;
+    let mut expired = 0usize;
     let mut inflight = 0usize;
 
     for _ in 0..spec.requests {
@@ -76,7 +105,7 @@ pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
         }
         let mut img = vec![0.0f32; elems];
         rng.fill_uniform(&mut img, -1.0, 1.0);
-        match handle.submit(img) {
+        match handle.submit_request(img, None) {
             Ok(rx) => {
                 inflight += 1;
                 let tx = done_tx.clone();
@@ -86,11 +115,13 @@ pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
                 std::thread::spawn(move || {
                     let r = match rx.recv() {
                         Ok(Ok(resp)) => Ok(resp.total_seconds),
-                        _ => Err(()),
+                        Ok(Err(e)) => Err(e),
+                        Err(_) => Err(ServeError::Failed("reply dropped".into())),
                     };
                     let _ = tx.send(r);
                 });
             }
+            Err(SubmitError::Expired) => expired += 1,
             Err(_) => rejected += 1,
         }
     }
@@ -101,6 +132,7 @@ pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
     for _ in 0..inflight {
         match done_rx.recv() {
             Ok(Ok(secs)) => latencies.push(secs),
+            Ok(Err(ServeError::Expired)) => expired += 1,
             _ => failed += 1,
         }
     }
@@ -111,74 +143,111 @@ pub fn run_open_loop(handle: &ServerHandle, spec: LoadSpec) -> LoadReport {
         completed: latencies.len(),
         rejected,
         failed,
+        expired,
         latency: Summary::of(&latencies),
         wall_seconds: wall,
     }
+}
+
+/// Fold per-thread outcome lists into one [`LoadReport`] (shared by the
+/// in-process closed loop below and the HTTP socket loadgen).
+pub(crate) fn fold_outcomes(
+    per_thread: Vec<Vec<Outcome>>,
+    wall: f64,
+    offered_rps: f64,
+) -> LoadReport {
+    let mut latencies = Vec::new();
+    let (mut rejected, mut failed, mut expired) = (0usize, 0usize, 0usize);
+    for outcomes in per_thread {
+        for o in outcomes {
+            match o {
+                Outcome::Completed(secs) => latencies.push(secs),
+                Outcome::Rejected => rejected += 1,
+                Outcome::Failed => failed += 1,
+                Outcome::Expired => expired += 1,
+            }
+        }
+    }
+    LoadReport {
+        offered_rps,
+        achieved_rps: latencies.len() as f64 / wall,
+        completed: latencies.len(),
+        rejected,
+        failed,
+        expired,
+        latency: Summary::of(&latencies),
+        wall_seconds: wall,
+    }
+}
+
+/// Exactly `requests` split across `threads` with the remainder
+/// distributed (integer division alone would drop
+/// `requests % threads`).
+pub(crate) fn per_thread_share(requests: usize, threads: usize, t: usize) -> usize {
+    requests / threads + usize::from(t < requests % threads)
 }
 
 /// Run a closed-loop load test: `threads` clients each submit their
 /// share of `requests` back-to-back, blocking on every reply — the
 /// peak-throughput methodology behind `serve-bench` and the scaling
 /// bench. Unlike a bare `infer` loop, the accounting here keeps
-/// rejected (backpressured) submissions and failed executions out of
-/// the completed count and the latency distribution.
-pub fn run_closed_loop(
+/// rejected (backpressured), failed, and expired requests out of the
+/// completed count and the latency distribution. `deadline` (per
+/// request, relative to its submission) exercises the deadline path;
+/// `None` submits without one.
+pub fn run_closed_loop_with_deadline(
     handle: &ServerHandle,
     requests: usize,
     threads: usize,
     seed: u64,
+    deadline: Option<Duration>,
 ) -> LoadReport {
     let threads = threads.max(1);
     let elems = handle.image_elems();
     let started = Instant::now();
-    let per_thread: Vec<(Vec<f64>, usize, usize)> = std::thread::scope(|s| {
+    let per_thread: Vec<Vec<Outcome>> = std::thread::scope(|s| {
         let joins: Vec<_> = (0..threads)
             .map(|t| {
                 let h = handle.clone();
-                // Distribute the remainder so exactly `requests` are
-                // offered (integer division alone would drop
-                // `requests % threads`).
-                let n = requests / threads + usize::from(t < requests % threads);
+                let n = per_thread_share(requests, threads, t);
                 s.spawn(move || {
                     let mut rng = Rng::new(seed ^ t as u64);
-                    let mut latencies = Vec::with_capacity(n);
-                    let (mut rejected, mut failed) = (0usize, 0usize);
+                    let mut outcomes = Vec::with_capacity(n);
                     for _ in 0..n {
                         let mut img = vec![0.0f32; elems];
                         rng.fill_uniform(&mut img, -1.0, 1.0);
-                        match h.submit(img) {
+                        let dl = deadline.map(|d| Instant::now() + d);
+                        outcomes.push(match h.submit_request(img, dl) {
                             Ok(rx) => match rx.recv() {
-                                Ok(Ok(resp)) => latencies.push(resp.total_seconds),
-                                _ => failed += 1,
+                                Ok(Ok(resp)) => Outcome::Completed(resp.total_seconds),
+                                Ok(Err(ServeError::Expired)) => Outcome::Expired,
+                                _ => Outcome::Failed,
                             },
-                            Err(_) => rejected += 1,
-                        }
+                            Err(SubmitError::Expired) => Outcome::Expired,
+                            Err(_) => Outcome::Rejected,
+                        });
                     }
-                    (latencies, rejected, failed)
+                    outcomes
                 })
             })
             .collect();
         joins.into_iter().map(|j| j.join().unwrap()).collect()
     });
     let wall = started.elapsed().as_secs_f64();
-    let mut latencies = Vec::with_capacity(requests);
-    let (mut rejected, mut failed) = (0usize, 0usize);
-    for (l, r, f) in per_thread {
-        latencies.extend(l);
-        rejected += r;
-        failed += f;
-    }
-    LoadReport {
-        // A closed loop has no arrival process: it offers exactly as
-        // fast as the server completes.
-        offered_rps: f64::NAN,
-        achieved_rps: latencies.len() as f64 / wall,
-        completed: latencies.len(),
-        rejected,
-        failed,
-        latency: Summary::of(&latencies),
-        wall_seconds: wall,
-    }
+    // A closed loop has no arrival process: it offers exactly as fast
+    // as the server completes.
+    fold_outcomes(per_thread, wall, f64::NAN)
+}
+
+/// [`run_closed_loop_with_deadline`] without deadlines — the common
+/// peak-throughput form.
+pub fn run_closed_loop(
+    handle: &ServerHandle,
+    requests: usize,
+    threads: usize,
+    seed: u64,
+) -> LoadReport {
+    run_closed_loop_with_deadline(handle, requests, threads, seed, None)
 }
 
 #[cfg(test)]
@@ -222,16 +291,61 @@ mod tests {
         let report = run_closed_loop(&server.handle(), 40, 8, 7);
         let m = server.metrics();
         assert_eq!(
-            report.completed + report.rejected + report.failed,
+            report.offered(),
             40,
             "every offered request is accounted exactly once"
         );
         assert_eq!(report.completed, m.requests as usize, "completed == served");
         assert_eq!(report.rejected as u64, m.rejected, "rejected == backpressured");
         assert_eq!(report.failed, 0, "healthy server fails nothing");
+        assert_eq!(report.expired, 0, "no deadlines were set");
         // Only completed requests enter the latency summary.
         assert_eq!(report.latency.map(|l| l.n).unwrap_or(0), report.completed);
         assert!(report.offered_rps.is_nan(), "closed loop has no arrival rate");
+    }
+
+    #[test]
+    fn closed_loop_with_dead_deadline_expires_everything() {
+        use crate::backend::CpuRefBackend;
+        use crate::conv::ConvSpec;
+        use crate::coordinator::{BatchPolicy, PoolConfig, Server};
+
+        let server = Server::start_conv(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(8, 1, 3, 4, 4),
+            None,
+            &[1],
+            BatchPolicy::default(),
+            PoolConfig::default(),
+        )
+        .unwrap();
+        // A zero budget is dead on arrival: the dispatcher must drop
+        // every request before a worker sees it.
+        let report = run_closed_loop_with_deadline(
+            &server.handle(),
+            12,
+            3,
+            9,
+            Some(Duration::ZERO),
+        );
+        assert_eq!(report.expired, 12, "all requests were dead on arrival");
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.offered(), 12);
+        let m = server.metrics();
+        assert_eq!(m.expired, 12, "dispatcher must count every expiry drop");
+        assert_eq!(m.requests, 0, "no expired request may reach a worker");
+        // A generous deadline changes nothing for a healthy server.
+        let ok = run_closed_loop_with_deadline(
+            &server.handle(),
+            8,
+            2,
+            10,
+            Some(Duration::from_secs(30)),
+        );
+        assert_eq!(ok.completed, 8);
+        assert_eq!(ok.expired, 0);
     }
 
     #[test]

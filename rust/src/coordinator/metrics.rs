@@ -1,9 +1,28 @@
-//! Serving metrics: latency histograms, batch distribution, throughput.
+//! Serving metrics: latency histograms, batch distribution, throughput,
+//! and SLO attainment buckets.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::LatencyHistogram;
+
+/// End-to-end latency thresholds (seconds) the SLO attainment view is
+/// bucketed on — rendered by the HTTP `/metrics` endpoint and recorded
+/// per point in `BENCH_http.json`. Cumulative ("≤ bound"), Prometheus
+/// `le`-style; requests beyond the last bound only show up in the
+/// totals.
+pub const SLO_BOUNDS_SECONDS: [f64; 8] =
+    [0.001, 0.0025, 0.005, 0.010, 0.025, 0.050, 0.100, 0.250];
+
+/// One cumulative SLO bucket of a snapshot: how many completed requests
+/// finished within `le_seconds` end to end (conservative: computed from
+/// the log-bucketed histogram, so a request in a straddling bucket is
+/// not counted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloBucket {
+    pub le_seconds: f64,
+    pub count: u64,
+}
 
 /// Shared, thread-safe metrics sink.
 pub struct Metrics {
@@ -18,6 +37,7 @@ struct Inner {
     requests: u64,
     batches: u64,
     rejected: u64,
+    expired: u64,
     batch_size_sum: u64,
 }
 
@@ -28,6 +48,11 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
+    /// Requests dropped because the client's deadline had already
+    /// passed — at the dispatcher (never queued) or at a worker (queued
+    /// but expired before execution). Never folded into `rejected` or
+    /// counted as served.
+    pub expired: u64,
     pub mean_batch_size: f64,
     pub throughput_rps: f64,
     pub queue_p50: f64,
@@ -38,6 +63,8 @@ pub struct MetricsSnapshot {
     pub total_p50: f64,
     pub total_p99: f64,
     pub total_max: f64,
+    /// Cumulative end-to-end SLO attainment over [`SLO_BOUNDS_SECONDS`].
+    pub slo: Vec<SloBucket>,
 }
 
 impl Default for Metrics {
@@ -57,6 +84,7 @@ impl Metrics {
                 requests: 0,
                 batches: 0,
                 rejected: 0,
+                expired: 0,
                 batch_size_sum: 0,
             }),
         }
@@ -90,6 +118,19 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += n;
     }
 
+    /// Record a request dropped because its deadline had passed (a
+    /// worker found it expired in the queue).
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// Add `n` expired drops at once (the dispatcher and the HTTP
+    /// admission layer keep their pre-dispatch expiry counts in atomics
+    /// and fold them in at snapshot time).
+    pub fn add_expired(&self, n: u64) {
+        self.inner.lock().unwrap().expired += n;
+    }
+
     /// Fold another sink's counts into this one: histograms merge
     /// bucket-wise, counters add, and the uptime origin becomes the
     /// earlier of the two. This is how a worker pool's aggregate view
@@ -108,6 +149,7 @@ impl Metrics {
         m.requests += o.requests;
         m.batches += o.batches;
         m.rejected += o.rejected;
+        m.expired += o.expired;
         m.batch_size_sum += o.batch_size_sum;
         if o.started < m.started {
             m.started = o.started;
@@ -122,6 +164,7 @@ impl Metrics {
             requests: m.requests,
             batches: m.batches,
             rejected: m.rejected,
+            expired: m.expired,
             mean_batch_size: if m.batches > 0 {
                 m.batch_size_sum as f64 / m.batches as f64
             } else {
@@ -136,6 +179,13 @@ impl Metrics {
             total_p50: m.total.quantile_upper_bound(0.50),
             total_p99: m.total.quantile_upper_bound(0.99),
             total_max: m.total.max(),
+            slo: SLO_BOUNDS_SECONDS
+                .iter()
+                .map(|&le| SloBucket {
+                    le_seconds: le,
+                    count: m.total.count_at_or_below(le),
+                })
+                .collect(),
         }
     }
 }
@@ -153,10 +203,12 @@ mod tests {
             m.record_request(1e-4, 2e-3, 2.2e-3);
         }
         m.record_rejected();
+        m.record_expired();
         let s = m.snapshot();
         assert_eq!(s.requests, 6);
         assert_eq!(s.batches, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.expired, 1);
         assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
         assert!(s.total_mean > 2e-3 && s.total_mean < 3e-3);
         assert!(s.exec_p50 >= 2e-3);
@@ -167,11 +219,34 @@ mod tests {
     fn empty_snapshot_is_zeroed() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
+        assert_eq!(s.expired, 0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.total_max, 0.0);
         // Quantiles of an empty histogram are zero, not garbage.
         assert_eq!(s.queue_p50, 0.0);
         assert_eq!(s.total_p99, 0.0);
+        // SLO buckets are present (one per bound) even when empty.
+        assert_eq!(s.slo.len(), SLO_BOUNDS_SECONDS.len());
+        assert!(s.slo.iter().all(|b| b.count == 0));
+    }
+
+    #[test]
+    fn slo_buckets_are_cumulative_and_conservative() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_request(1e-5, 1e-4, 2e-3); // total 2ms → bucket bound ≤ 2.048ms
+        }
+        m.record_request(1e-5, 1e-4, 0.9); // one far outlier past every bound
+        let s = m.snapshot();
+        assert_eq!(s.slo.len(), SLO_BOUNDS_SECONDS.len());
+        // Monotone non-decreasing with the bound.
+        for w in s.slo.windows(2) {
+            assert!(w[0].count <= w[1].count, "slo buckets must be cumulative");
+        }
+        // The 2ms samples are all within 25ms; the outlier never is.
+        let last = s.slo.last().unwrap();
+        assert_eq!(last.count, 10, "outlier must stay outside the largest bound");
+        assert!(s.slo[0].count <= 10);
     }
 
     #[test]
@@ -188,15 +263,19 @@ mod tests {
             b.record_request(1e-4, 8e-3, 8.2e-3);
         }
         b.record_rejected();
+        a.record_expired();
+        b.record_expired();
 
         let agg = Metrics::new();
         agg.absorb(&a);
         agg.absorb(&b);
         agg.add_rejected(2); // dispatcher-level rejections fold in too
+        agg.add_expired(3); // dispatcher-level expiry folds in too
         let s = agg.snapshot();
         assert_eq!(s.requests, 8);
         assert_eq!(s.batches, 3);
         assert_eq!(s.rejected, 3);
+        assert_eq!(s.expired, 5, "worker + dispatcher expiry must merge");
         assert!((s.mean_batch_size - 8.0 / 3.0).abs() < 1e-12);
         // The merged exec distribution spans both workers: p50 bound at
         // or below the slow worker's bucket, p99 bound at or above it.
@@ -206,5 +285,6 @@ mod tests {
         // Absorbing must not disturb the per-worker sinks.
         assert_eq!(a.snapshot().requests, 4);
         assert_eq!(b.snapshot().rejected, 1);
+        assert_eq!(b.snapshot().expired, 1);
     }
 }

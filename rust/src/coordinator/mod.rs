@@ -21,7 +21,9 @@
 //! * [`server`] — the sharded worker pool tying it together: the
 //!   dispatcher admits each request to a bounded per-shard queue
 //!   (round-robin or least-loaded, rejecting only when every queue is
-//!   full), and each worker thread drains its queue → forms batches →
+//!   full, dropping already-expired deadlines before any queue sees
+//!   them), and each worker thread drains its queue → sheds expired
+//!   requests → forms batches →
 //!   runs them on its replicated runner → scatters replies. Replicas
 //!   share weights/algorithm choices (`Arc`) and own their mutable
 //!   buffers, so N workers serve concurrently with outputs
@@ -41,12 +43,17 @@ pub mod runner;
 pub mod server;
 
 pub use batcher::{decompose_batches, BatchPolicy};
-pub use loadgen::{run_closed_loop, run_open_loop, LoadReport, LoadSpec};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use loadgen::{
+    run_closed_loop, run_closed_loop_with_deadline, run_open_loop, LoadReport,
+    LoadSpec,
+};
+pub use metrics::{Metrics, MetricsSnapshot, SloBucket, SLO_BOUNDS_SECONDS};
 pub use plan::{plan_network, plan_network_measured, LayerPlan, NetworkPlan};
-pub use request::{InferRequest, InferResponse, RequestId};
+pub use request::{InferRequest, InferResponse, RequestId, ServeError};
 pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner, NetForwardRunner};
-pub use server::{PoolConfig, Server, ServerConfig, ServerHandle, ShardSelection};
+pub use server::{
+    PoolConfig, Server, ServerConfig, ServerHandle, ShardSelection, SubmitError,
+};
 
 #[cfg(feature = "pjrt")]
 pub use runner::{PjrtModelRunner, ADAPTIVE_SLACK};

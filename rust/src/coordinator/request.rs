@@ -1,5 +1,6 @@
 //! Inference request/response types.
 
+use std::fmt;
 use std::time::Instant;
 
 /// Monotonic request identifier.
@@ -12,7 +13,37 @@ pub struct InferRequest {
     pub id: RequestId,
     pub pixels: Vec<f32>,
     pub enqueued: Instant,
+    /// Client latency budget: after this instant the answer is useless
+    /// to the caller. The dispatcher drops an already-expired request
+    /// before it ever reaches a worker queue, and a worker drops one
+    /// that expired while queued before spending compute on it — both
+    /// are counted as `expired`, a class of their own next to
+    /// `rejected` (backpressure) and `failed` (execution error).
+    pub deadline: Option<Instant>,
 }
+
+/// Why an *admitted* request did not produce an [`InferResponse`]
+/// (the reply-channel error type; submission-time refusals are
+/// [`SubmitError`](crate::coordinator::server::SubmitError)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The client's deadline passed while the request sat in a worker
+    /// queue; the worker dropped it before execution.
+    Expired,
+    /// The runner errored executing the batch.
+    Failed(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Expired => write!(f, "deadline expired before execution"),
+            ServeError::Failed(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// The served reply.
 #[derive(Debug, Clone)]
@@ -57,5 +88,12 @@ mod tests {
             batch_size: 1,
         };
         assert_eq!(r.predicted_class(), 1);
+    }
+
+    #[test]
+    fn serve_error_displays_distinctly() {
+        assert!(ServeError::Expired.to_string().contains("expired"));
+        assert!(ServeError::Failed("boom".into()).to_string().contains("boom"));
+        assert_ne!(ServeError::Expired, ServeError::Failed("x".into()));
     }
 }

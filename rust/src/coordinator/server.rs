@@ -12,19 +12,27 @@
 //!   so shards serve concurrently with zero steady-state allocation and
 //!   outputs bit-identical to the single-worker path.
 //! * **Bounded admission** — every shard has its own bounded queue.
-//!   [`ServerHandle::submit`] picks a preferred shard
+//!   [`ServerHandle::submit_request`] picks a preferred shard
 //!   ([`ShardSelection`]: round-robin or least-loaded by in-flight
 //!   count), then sweeps the remaining shards before rejecting — a
 //!   request is refused only when *every* queue is full, so the pool
 //!   backpressures instead of growing memory without bound.
+//! * **Deadlines** — a request may carry a client deadline. One that
+//!   has already expired is dropped *at the dispatcher*, before any
+//!   queue sees it; one that expires while queued is dropped by its
+//!   worker before execution. Both are counted as `expired` — a class
+//!   of its own, never folded into `rejected` (backpressure) or
+//!   `failed` (execution error).
 //! * **Metrics** — each worker records into its own sink; the
 //!   aggregate view ([`ServerHandle::metrics`]) merges the per-worker
-//!   histograms and folds in the dispatcher's rejected count.
-//!   [`ServerHandle::worker_metrics`] exposes the per-shard view.
+//!   histograms and folds in the dispatcher's rejected and expired
+//!   counts. [`ServerHandle::worker_metrics`] exposes the per-shard
+//!   view.
 //!
 //! Whether a deployment serves artifacts, one conv layer, or a whole
 //! network is still a [`BatchRunner`] choice, not a different server.
 
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -34,7 +42,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::batcher::{decompose_batches, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::request::{InferRequest, InferResponse, ServeError};
 use crate::coordinator::runner::BatchRunner;
 
 /// How the dispatcher picks a preferred shard for each submission.
@@ -71,6 +79,42 @@ impl PoolConfig {
     }
 }
 
+/// Why [`ServerHandle::submit_request`] refused a submission outright
+/// (nothing was queued; contrast [`ServeError`], which an *admitted*
+/// request's reply channel can carry).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The payload does not match the served input shape.
+    BadInput(String),
+    /// The client deadline had already passed at submission; the
+    /// request was dropped before any worker queue saw it and counted
+    /// as `expired`.
+    Expired,
+    /// Every bounded worker queue was full (backpressure); counted as
+    /// `rejected`.
+    AllQueuesFull { workers: usize, queue_depth: usize },
+    /// The pool has shut down.
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::BadInput(msg) => write!(f, "{msg}"),
+            SubmitError::Expired => {
+                write!(f, "deadline already expired at submission")
+            }
+            SubmitError::AllQueuesFull { workers, queue_depth } => write!(
+                f,
+                "all {workers} worker queue(s) full ({queue_depth} deep each)"
+            ),
+            SubmitError::Shutdown => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -106,7 +150,7 @@ impl Default for ServerConfig {
 
 struct QueuedRequest {
     req: InferRequest,
-    resp: mpsc::Sender<Result<InferResponse>>,
+    resp: mpsc::Sender<Result<InferResponse, ServeError>>,
 }
 
 /// One worker shard as the dispatcher sees it.
@@ -125,8 +169,8 @@ pub struct Server {
 }
 
 /// Cheap cloneable client handle; doubles as the dispatcher (shard
-/// selection happens in [`ServerHandle::submit`], so there is no extra
-/// dispatcher thread between clients and workers).
+/// selection happens in [`ServerHandle::submit_request`], so there is
+/// no extra dispatcher thread between clients and workers).
 #[derive(Clone)]
 pub struct ServerHandle {
     shards: Arc<Vec<Shard>>,
@@ -136,6 +180,10 @@ pub struct ServerHandle {
     rr: Arc<AtomicUsize>,
     /// Submissions rejected because every shard queue was full.
     rejected: Arc<AtomicU64>,
+    /// Submissions dropped before dispatch because the client deadline
+    /// had already passed (includes drops noted by admission layers via
+    /// [`ServerHandle::note_expired`]).
+    expired: Arc<AtomicU64>,
     next_id: Arc<AtomicU64>,
     queue_depth: usize,
     image_elems: usize,
@@ -194,6 +242,7 @@ impl Server {
             selection: pool.selection,
             rr: Arc::new(AtomicUsize::new(0)),
             rejected: Arc::new(AtomicU64::new(0)),
+            expired: Arc::new(AtomicU64::new(0)),
             next_id: Arc::new(AtomicU64::new(1)),
             queue_depth: policy.queue_capacity,
             image_elems,
@@ -261,7 +310,8 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Aggregate metrics over every worker (plus dispatcher rejections).
+    /// Aggregate metrics over every worker (plus dispatcher rejections
+    /// and expiry drops).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.handle.metrics()
     }
@@ -292,19 +342,38 @@ impl Drop for Server {
 }
 
 impl ServerHandle {
-    /// Submit one image; returns a receiver for the reply. The
-    /// preferred shard comes from the selection policy; if its bounded
-    /// queue is full the remaining shards are tried in order, and the
-    /// submission is rejected (backpressure) only when every queue is
-    /// full. Errors immediately on a wrong-sized image.
-    pub fn submit(&self, pixels: Vec<f32>) -> Result<Receiver<Result<InferResponse>>> {
+    /// Submit one image with an optional client deadline; returns a
+    /// receiver for the reply. An already-expired deadline is dropped
+    /// here — before any worker queue sees it — and counted as
+    /// `expired`. Otherwise the preferred shard comes from the
+    /// selection policy; if its bounded queue is full the remaining
+    /// shards are tried in order, and the submission is rejected
+    /// (backpressure) only when every queue is full.
+    pub fn submit_request(
+        &self,
+        pixels: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<InferResponse, ServeError>>, SubmitError> {
         if pixels.len() != self.image_elems {
-            bail!("image has {} elems, expected {}", pixels.len(), self.image_elems);
+            return Err(SubmitError::BadInput(format!(
+                "image has {} elems, expected {}",
+                pixels.len(),
+                self.image_elems
+            )));
+        }
+        // Drop-before-dispatch: a request whose answer is already
+        // useless must not consume a queue slot, a batch slot, or a
+        // single worker cycle.
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                self.expired.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Expired);
+            }
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = mpsc::channel();
         let mut queued = QueuedRequest {
-            req: InferRequest { id, pixels, enqueued: Instant::now() },
+            req: InferRequest { id, pixels, enqueued: Instant::now(), deadline },
             resp: resp_tx,
         };
         let n = self.shards.len();
@@ -334,35 +403,60 @@ impl ServerHandle {
                 }
                 Err(TrySendError::Disconnected(_)) => {
                     shard.inflight.fetch_sub(1, Ordering::Relaxed);
-                    return Err(anyhow!("server is shut down"));
+                    return Err(SubmitError::Shutdown);
                 }
             }
         }
         self.rejected.fetch_add(1, Ordering::Relaxed);
-        Err(anyhow!(
-            "all {n} worker queue(s) full ({} deep each)",
-            self.queue_depth
-        ))
+        Err(SubmitError::AllQueuesFull {
+            workers: n,
+            queue_depth: self.queue_depth,
+        })
+    }
+
+    /// Deadline-less convenience form of
+    /// [`ServerHandle::submit_request`] with an `anyhow` error.
+    pub fn submit(
+        &self,
+        pixels: Vec<f32>,
+    ) -> Result<Receiver<Result<InferResponse, ServeError>>> {
+        self.submit_request(pixels, None).map_err(|e| anyhow!(e))
     }
 
     /// Blocking inference.
     pub fn infer(&self, pixels: Vec<f32>) -> Result<InferResponse> {
         let rx = self.submit(pixels)?;
-        rx.recv().map_err(|_| anyhow!("server dropped the request"))?
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+            .map_err(|e| anyhow!(e))
     }
 
-    /// Aggregate metrics over every worker (plus dispatcher rejections).
+    /// Count one expired request that an admission layer (e.g. the HTTP
+    /// front door) dropped before it could even build a submission —
+    /// lazy field extraction rejects a dead-on-arrival deadline before
+    /// decoding the payload, so there are no pixels to submit. Folding
+    /// it in here keeps the aggregate accounting invariant
+    /// (`completed + rejected + failed + expired == offered`) true at
+    /// the server scope too.
+    pub fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Aggregate metrics over every worker (plus dispatcher rejections
+    /// and expiry drops).
     pub fn metrics(&self) -> MetricsSnapshot {
         let agg = Metrics::new();
         for shard in self.shards.iter() {
             agg.absorb(&shard.metrics);
         }
         agg.add_rejected(self.rejected.load(Ordering::Relaxed));
+        agg.add_expired(self.expired.load(Ordering::Relaxed));
         agg.snapshot()
     }
 
     /// Per-worker metrics, in shard order (dispatcher-level rejections
-    /// are not attributed to a shard; see [`ServerHandle::metrics`]).
+    /// and expiry drops are not attributed to a shard; see
+    /// [`ServerHandle::metrics`]).
     pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
         self.shards.iter().map(|s| s.metrics.snapshot()).collect()
     }
@@ -381,9 +475,9 @@ impl ServerHandle {
     }
 }
 
-/// One worker thread's body: window its queue, batch, execute on its
-/// replicated runner, scatter replies — PR 3's router loop, now one
-/// shard of N.
+/// One worker thread's body: window its queue, shed expired requests,
+/// batch, execute on its replicated runner, scatter replies — PR 3's
+/// router loop, now one shard of N with deadline enforcement.
 fn worker_loop(
     rx: Receiver<QueuedRequest>,
     mut runner: Box<dyn BatchRunner>,
@@ -425,6 +519,24 @@ fn worker_loop(
             }
         }
 
+        // Shed requests whose deadline passed while they waited in the
+        // queue: answering them would waste a batch slot on work the
+        // client has already abandoned. Each is answered `Expired` and
+        // counted — never silently dropped.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < window.len() {
+            let dead = window[i].req.deadline.is_some_and(|d| now >= d);
+            if dead {
+                let q = window.remove(i);
+                metrics.record_expired();
+                let _ = q.resp.send(Err(ServeError::Expired));
+                inflight.fetch_sub(1, Ordering::Relaxed);
+            } else {
+                i += 1;
+            }
+        }
+
         // Execute the window as greedy sub-batches, largest first.
         let batch_started = Instant::now();
         for chunk_size in decompose_batches(window.len(), &sizes) {
@@ -454,9 +566,9 @@ fn worker_loop(
                     }
                 }
                 Err(e) => {
-                    let msg = format!("execution failed: {e}");
+                    let msg = format!("{e}");
                     for q in chunk {
-                        let _ = q.resp.send(Err(anyhow!(msg.clone())));
+                        let _ = q.resp.send(Err(ServeError::Failed(msg.clone())));
                     }
                 }
             }

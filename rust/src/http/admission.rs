@@ -1,0 +1,220 @@
+//! Admission control for the HTTP front door: per-tenant token-bucket
+//! rate limiting.
+//!
+//! The bucket is the classic leaky-refill shape: a tenant accrues
+//! `rps` tokens per second up to a `burst` cap, and each admitted
+//! request spends one token. A request that finds the bucket empty is
+//! **rejected** (HTTP 429) — it never reaches the dispatcher, so a
+//! misbehaving tenant cannot fill the shard queues and starve the
+//! others. The clock is passed in ([`TokenBucket::try_take_at`]) so the
+//! refill arithmetic is testable with a simulated clock; the
+//! [`TenantLimiter`] wrapper supplies `Instant::now()` on the serving
+//! path.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A rate-limit policy: sustained `rps` requests/second with bursts of
+/// up to `burst` back-to-back requests from a full bucket.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateLimit {
+    pub rps: f64,
+    pub burst: f64,
+}
+
+impl RateLimit {
+    /// Validated constructor: both parameters must be positive and
+    /// finite (a zero-rps limit would admit nothing forever; use no
+    /// limiter for "unlimited").
+    pub fn new(rps: f64, burst: f64) -> Result<RateLimit, String> {
+        if !(rps.is_finite() && rps > 0.0) {
+            return Err(format!("rate-limit rps must be positive, got {rps}"));
+        }
+        if !(burst.is_finite() && burst >= 1.0) {
+            return Err(format!("rate-limit burst must be >= 1, got {burst}"));
+        }
+        Ok(RateLimit { rps, burst })
+    }
+}
+
+/// One tenant's bucket state. Holds no policy — the [`RateLimit`] is
+/// passed to each call so all tenants share one policy struct.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket born full: a new tenant gets its whole burst allowance
+    /// immediately.
+    pub fn full(limit: &RateLimit, now: Instant) -> TokenBucket {
+        TokenBucket { tokens: limit.burst, last: now }
+    }
+
+    /// Refill for the time elapsed since the last call, then try to
+    /// spend one token. `now` earlier than the last observed instant is
+    /// treated as zero elapsed time (`duration_since` saturates), so a
+    /// racing caller can never mint negative time into tokens.
+    pub fn try_take_at(&mut self, limit: &RateLimit, now: Instant) -> bool {
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * limit.rps).min(limit.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current token count (test/inspection hook).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Thread-safe per-tenant limiter. `None` policy means unlimited — the
+/// front door runs wide open (the shard queues still provide
+/// backpressure via 429s of their own class).
+pub struct TenantLimiter {
+    limit: Option<RateLimit>,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl TenantLimiter {
+    pub fn new(limit: Option<RateLimit>) -> TenantLimiter {
+        TenantLimiter { limit, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Admit or refuse one request from `tenant` at wall-clock now.
+    pub fn admit(&self, tenant: &str) -> bool {
+        self.admit_at(tenant, Instant::now())
+    }
+
+    /// Clock-injected admission (the testable core).
+    pub fn admit_at(&self, tenant: &str, now: Instant) -> bool {
+        let Some(limit) = &self.limit else { return true };
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket = buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| TokenBucket::full(limit, now));
+        bucket.try_take_at(limit, now)
+    }
+
+    /// Number of tenants with bucket state (metrics hook).
+    pub fn tenants(&self) -> usize {
+        self.buckets.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn advance(now: Instant, seconds: f64) -> Instant {
+        now + std::time::Duration::from_secs_f64(seconds)
+    }
+
+    #[test]
+    fn burst_then_starve_then_refill() {
+        let limit = RateLimit::new(10.0, 4.0).unwrap();
+        let t0 = Instant::now();
+        let mut b = TokenBucket::full(&limit, t0);
+        // A full bucket admits exactly `burst` back-to-back requests.
+        for i in 0..4 {
+            assert!(b.try_take_at(&limit, t0), "burst request {i} must pass");
+        }
+        assert!(!b.try_take_at(&limit, t0), "5th instantaneous request refused");
+        // 100ms at 10 rps mints exactly one token.
+        let t1 = advance(t0, 0.100);
+        assert!(b.try_take_at(&limit, t1));
+        assert!(!b.try_take_at(&limit, t1));
+    }
+
+    #[test]
+    fn sustained_rate_converges_to_rps() {
+        // Property: offering 2× the sustained rate for a long window
+        // admits (burst + rps·T) requests — the bucket enforces the
+        // average, not just the burst.
+        let limit = RateLimit::new(50.0, 5.0).unwrap();
+        let t0 = Instant::now();
+        let mut b = TokenBucket::full(&limit, t0);
+        let mut admitted = 0u32;
+        let offered = 1000u32; // 100 rps offered for 10 s
+        for i in 0..offered {
+            let now = advance(t0, i as f64 * 0.010);
+            if b.try_take_at(&limit, now) {
+                admitted += 1;
+            }
+        }
+        // Expected: 5 burst + 50 rps × ~10 s ≈ 505.
+        assert!(
+            (500..=510).contains(&admitted),
+            "admitted {admitted}, want ≈505"
+        );
+    }
+
+    #[test]
+    fn idle_refill_caps_at_burst() {
+        let limit = RateLimit::new(100.0, 3.0).unwrap();
+        let t0 = Instant::now();
+        let mut b = TokenBucket::full(&limit, t0);
+        for _ in 0..3 {
+            assert!(b.try_take_at(&limit, t0));
+        }
+        // An hour idle must not bank 360k tokens — cap is the burst.
+        let t1 = advance(t0, 3600.0);
+        for i in 0..3 {
+            assert!(b.try_take_at(&limit, t1), "post-idle request {i}");
+        }
+        assert!(!b.try_take_at(&limit, t1), "idle refill must cap at burst");
+    }
+
+    #[test]
+    fn clock_going_backwards_is_harmless() {
+        let limit = RateLimit::new(10.0, 2.0).unwrap();
+        let t0 = Instant::now();
+        let t1 = advance(t0, 1.0);
+        let mut b = TokenBucket::full(&limit, t1);
+        assert!(b.try_take_at(&limit, t1));
+        // An earlier instant (racing threads observe now() out of
+        // order) saturates to zero elapsed — tokens never go negative
+        // and nothing panics.
+        assert!(b.try_take_at(&limit, t0));
+        assert!(!b.try_take_at(&limit, t0));
+        assert!(b.tokens() >= 0.0);
+    }
+
+    #[test]
+    fn tenants_are_isolated() {
+        let limiter =
+            TenantLimiter::new(Some(RateLimit::new(1.0, 1.0).unwrap()));
+        let t0 = Instant::now();
+        assert!(limiter.admit_at("team-a", t0));
+        assert!(!limiter.admit_at("team-a", t0), "team-a exhausted its bucket");
+        // team-b's bucket is untouched by team-a's exhaustion.
+        assert!(limiter.admit_at("team-b", t0));
+        assert_eq!(limiter.tenants(), 2);
+    }
+
+    #[test]
+    fn no_policy_admits_everything() {
+        let limiter = TenantLimiter::new(None);
+        let t0 = Instant::now();
+        for _ in 0..10_000 {
+            assert!(limiter.admit_at("anyone", t0));
+        }
+        assert_eq!(limiter.tenants(), 0, "unlimited mode keeps no state");
+    }
+
+    #[test]
+    fn rate_limit_validation() {
+        assert!(RateLimit::new(0.0, 4.0).is_err());
+        assert!(RateLimit::new(-1.0, 4.0).is_err());
+        assert!(RateLimit::new(f64::NAN, 4.0).is_err());
+        assert!(RateLimit::new(10.0, 0.5).is_err());
+        assert!(RateLimit::new(10.0, 1.0).is_ok());
+    }
+}

@@ -1,0 +1,249 @@
+//! A minimal keep-alive HTTP client and the socket-driving load
+//! generator — the over-the-wire sibling of
+//! [`run_closed_loop_with_deadline`](crate::coordinator::run_closed_loop_with_deadline).
+//!
+//! The client exists so the integration tests, the CLI self-smoke, and
+//! the `http_serving` bench can drive the front door through a real TCP
+//! socket with zero external tooling — same four-class accounting, same
+//! [`LoadReport`], but latencies now include JSON encode/decode and the
+//! loopback wire.
+
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::loadgen::{fold_outcomes, per_thread_share, Outcome};
+use crate::coordinator::LoadReport;
+use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
+
+use super::parser::{parse_response_head, HttpReader};
+
+/// One keep-alive connection to a front door.
+pub struct HttpClient {
+    reader: HttpReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).context("nodelay")?;
+        let writer = stream.try_clone().context("cloning stream")?;
+        Ok(HttpClient { reader: HttpReader::new(stream), writer })
+    }
+
+    /// GET `path`; returns `(status, body)`.
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        write!(
+            self.writer,
+            "GET {path} HTTP/1.1\r\nHost: cuconv\r\nConnection: keep-alive\r\n\r\n"
+        )?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    /// POST a JSON `body` to `path`; returns `(status, body)`.
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
+        write!(
+            self.writer,
+            "POST {path} HTTP/1.1\r\nHost: cuconv\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        )?;
+        self.writer.write_all(body.as_bytes())?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<(u16, String)> {
+        let head = self
+            .reader
+            .read_head()?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        let (status, len) =
+            parse_response_head(&head).map_err(|e| anyhow!("bad response: {e}"))?;
+        let body = self.reader.read_body(len)?;
+        Ok((status, String::from_utf8(body).context("response body UTF-8")?))
+    }
+}
+
+/// Build a `/v1/infer` request body. Hot fields come first and the
+/// payload last — the field order the server's lazy scanner is tuned
+/// for (admission decisions finish before the scanner ever reaches the
+/// payload bytes). f32 values are written with shortest-roundtrip
+/// formatting, so the server decodes the exact same bits.
+pub fn infer_body(
+    model: &str,
+    batch: usize,
+    deadline_ms: Option<u64>,
+    tenant: Option<&str>,
+    payload: &[f32],
+) -> String {
+    let mut s = String::with_capacity(64 + payload.len() * 10);
+    s.push_str(&format!("{{\"model\": \"{model}\", \"batch\": {batch}"));
+    if let Some(ms) = deadline_ms {
+        s.push_str(&format!(", \"deadline_ms\": {ms}"));
+    }
+    if let Some(t) = tenant {
+        s.push_str(&format!(", \"tenant\": \"{t}\""));
+    }
+    s.push_str(", \"payload\": [");
+    for (i, v) in payload.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Extract the per-image logits from a 200 `/v1/infer` response body.
+pub fn logits_of(body: &str) -> Result<Vec<Vec<f32>>> {
+    let v = parse(body).map_err(|e| anyhow!("response is not JSON: {e}"))?;
+    let Some(Json::Arr(rows)) = v.get("logits").cloned() else {
+        bail!("response has no 'logits' array");
+    };
+    rows.into_iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| anyhow!("logits row is not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| anyhow!("logit is not a number"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Closed-loop load over real sockets: `threads` clients, each on its
+/// own keep-alive connection, submitting its share of `requests`
+/// back-to-back and classifying every response by status code —
+/// 200 → completed, 429/503 → rejected, 504 → expired, anything else
+/// (including transport errors) → failed. Latency is measured
+/// client-side around the whole exchange.
+pub fn run_closed_loop_http(
+    addr: impl ToSocketAddrs + Clone + Send + Sync,
+    model: &str,
+    image_elems: usize,
+    requests: usize,
+    threads: usize,
+    seed: u64,
+    deadline_ms: Option<u64>,
+) -> LoadReport {
+    let threads = threads.max(1);
+    let started = Instant::now();
+    let per_thread: Vec<Vec<Outcome>> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let addr = addr.clone();
+                let n = per_thread_share(requests, threads, t);
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ t as u64);
+                    let mut outcomes = Vec::with_capacity(n);
+                    let mut client = HttpClient::connect(addr.clone()).ok();
+                    for _ in 0..n {
+                        let mut img = vec![0.0f32; image_elems];
+                        rng.fill_uniform(&mut img, -1.0, 1.0);
+                        let body =
+                            infer_body(model, 1, deadline_ms, Some("loadgen"), &img);
+                        let req_started = Instant::now();
+                        let result = match client.as_mut() {
+                            Some(c) => c.post_json("/v1/infer", &body),
+                            None => Err(anyhow!("not connected")),
+                        };
+                        outcomes.push(match result {
+                            Ok((200, _)) => {
+                                Outcome::Completed(req_started.elapsed().as_secs_f64())
+                            }
+                            Ok((429 | 503, _)) => Outcome::Rejected,
+                            Ok((504, _)) => Outcome::Expired,
+                            Ok(_) => Outcome::Failed,
+                            Err(_) => {
+                                // Transport error: the connection is
+                                // gone; reconnect for the next request.
+                                client = HttpClient::connect(addr.clone()).ok();
+                                Outcome::Failed
+                            }
+                        });
+                    }
+                    outcomes
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = started.elapsed().as_secs_f64();
+    fold_outcomes(per_thread, wall, f64::NAN)
+}
+
+/// Block until `GET /healthz` answers 200 or the timeout elapses —
+/// lets a driver start hammering the instant the acceptor is up.
+pub fn wait_healthy(addr: impl ToSocketAddrs + Clone, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(mut c) = HttpClient::connect(addr.clone()) {
+            if matches!(c.get("/healthz"), Ok((200, _))) {
+                return Ok(());
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!("server not healthy within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_body_orders_hot_fields_before_payload() {
+        let body = infer_body("sq", 2, Some(25), Some("t0"), &[1.5, -0.25]);
+        let m = body.find("\"model\"").unwrap();
+        let d = body.find("\"deadline_ms\"").unwrap();
+        let t = body.find("\"tenant\"").unwrap();
+        let p = body.find("\"payload\"").unwrap();
+        assert!(m < d && d < t && t < p, "payload must come last: {body}");
+        // And it is real JSON the strict parser accepts.
+        let v = parse(&body).unwrap();
+        assert_eq!(v.get("batch").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("payload").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn f32_survives_the_wire_format_bit_exactly() {
+        // Awkward values: subnormal-ish, repeating binary fractions,
+        // and a value with no short decimal form.
+        let vals: [f32; 5] = [0.1, -3.3333333, 1.0e-7, 123456.78, -0.0];
+        let body = infer_body("m", 1, None, None, &vals);
+        let v = parse(&body).unwrap();
+        let parsed: Vec<f32> = v
+            .get("payload")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        for (a, b) in vals.iter().zip(&parsed) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round-tripped to {b}");
+        }
+    }
+
+    #[test]
+    fn logits_of_parses_and_rejects() {
+        let ok = r#"{"logits": [[1.5, -2.0], [0.25, 0.5]], "batch": 2}"#;
+        let rows = logits_of(ok).unwrap();
+        assert_eq!(rows, vec![vec![1.5, -2.0], vec![0.25, 0.5]]);
+        assert!(logits_of(r#"{"batch": 1}"#).is_err());
+        assert!(logits_of("not json").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! The TCP front: bind, accept, thread-per-connection with a bounded
+//! acceptor, keep-alive connection loops, and clean shutdown.
+//!
+//! Deliberately `std::net` only (no async runtime in the offline vendor
+//! set; `tokio` would be the move at a larger scale). The concurrency
+//! budget is explicit instead: at most `max_connections` connection
+//! threads exist at once, and a connection arriving over that budget is
+//! answered `503` and closed *immediately* — the accept queue is never
+//! allowed to become an unbounded hidden buffer in front of the
+//! carefully bounded shard queues behind it.
+//!
+//! Shutdown is the connect-to-self trick: set the flag, then dial the
+//! listener so the blocking `accept` wakes and observes it. Connection
+//! threads poll the flag via a read timeout, so `shutdown()` joins
+//! everything within one timeout tick.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::parser::{parse_request_head, HttpReader};
+use super::responses::Response;
+use super::router::{handle_request, AppState};
+
+/// Front-door configuration (the [`AppState`] carries the routing and
+/// admission policy; this is the socket side).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks a free port (tests use this).
+    pub addr: String,
+    /// Connection-thread budget; connections over it get an instant 503.
+    pub max_connections: usize,
+    /// Largest accepted request body. A batch-8 SqueezeNet payload in
+    /// JSON text is ~1.5 MiB, so the default leaves headroom without
+    /// letting one connection buffer without bound.
+    pub max_body_bytes: usize,
+    /// Idle-poll tick for keep-alive connections (also bounds shutdown
+    /// latency).
+    pub poll_interval: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 64,
+            max_body_bytes: 8 * 1024 * 1024,
+            poll_interval: Duration::from_millis(200),
+        }
+    }
+}
+
+/// The running front door. Dropping it shuts the listener down (the
+/// inference pool behind it is owned elsewhere and unaffected).
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start accepting.
+    pub fn start(state: AppState, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(state);
+
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("http-acceptor".to_string())
+                .spawn(move || {
+                    accept_loop(listener, state, cfg, shutdown, active, conns)
+                })
+                .context("spawning acceptor")?
+        };
+        Ok(HttpServer {
+            local_addr,
+            shutdown,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+
+    /// The bound address (with the real port when `addr` used port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, then join every connection thread.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() so it can observe the flag.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<AppState>,
+    cfg: HttpConfig,
+    shutdown: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        // Enforce the connection budget at accept time: over-budget
+        // connections are told so and closed before a thread exists for
+        // them.
+        if active.fetch_add(1, Ordering::SeqCst) >= cfg.max_connections {
+            active.fetch_sub(1, Ordering::SeqCst);
+            let mut s = stream;
+            let _ = Response::error(503, "connection limit reached")
+                .with_close(true)
+                .write_to(&mut s);
+            continue;
+        }
+        let handle = {
+            let state = state.clone();
+            let cfg = cfg.clone();
+            let shutdown = shutdown.clone();
+            let active = active.clone();
+            std::thread::Builder::new()
+                .name("http-conn".to_string())
+                .spawn(move || {
+                    let _ = connection_loop(stream, &state, &cfg, &shutdown);
+                    active.fetch_sub(1, Ordering::SeqCst);
+                })
+        };
+        match handle {
+            Ok(h) => {
+                let mut guard = conns.lock().unwrap();
+                // Opportunistically reap finished threads so the vec
+                // tracks live connections, not connection history.
+                let mut live = Vec::with_capacity(guard.len() + 1);
+                for h in guard.drain(..) {
+                    if h.is_finished() {
+                        let _ = h.join();
+                    } else {
+                        live.push(h);
+                    }
+                }
+                live.push(h);
+                *guard = live;
+            }
+            Err(_) => {
+                active.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Serve one connection until the peer closes, an unrecoverable framing
+/// error occurs, or shutdown is observed.
+fn connection_loop(
+    stream: TcpStream,
+    state: &AppState,
+    cfg: &HttpConfig,
+    shutdown: &AtomicBool,
+) -> io::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.poll_interval))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = HttpReader::new(stream);
+    loop {
+        let head = match reader.read_head() {
+            Ok(Some(h)) => h,
+            // Peer closed the keep-alive connection: done.
+            Ok(None) => return Ok(()),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle tick — any partial head stays buffered in the
+                // reader; just check for shutdown and keep waiting.
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // Oversized or non-UTF-8 head: tell the peer, then
+                // drop the connection (framing is unrecoverable).
+                let _ = Response::error(400, &e.to_string())
+                    .with_close(true)
+                    .write_to(&mut writer);
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        let head = match parse_request_head(&head) {
+            Ok(h) => h,
+            Err(e) => {
+                let _ = Response::error(400, &e)
+                    .with_close(true)
+                    .write_to(&mut writer);
+                return Ok(());
+            }
+        };
+        if head.content_length > cfg.max_body_bytes {
+            // Refuse without reading the body; the unread bytes make
+            // the framing unrecoverable, so close.
+            let _ = Response::error(
+                413,
+                &format!(
+                    "body of {} bytes exceeds the {} byte limit",
+                    head.content_length, cfg.max_body_bytes
+                ),
+            )
+            .with_close(true)
+            .write_to(&mut writer);
+            return Ok(());
+        }
+        if head.expect_continue {
+            writer.write_all_flush(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        }
+        let body = read_body_patiently(&mut reader, head.content_length, shutdown)?;
+        let close = head.close || shutdown.load(Ordering::SeqCst);
+        let resp = handle_request(state, &head, &body).with_close(close);
+        resp.write_to(&mut writer)?;
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+/// Read an exact-length body across read-timeout ticks (a large payload
+/// can take longer than one poll interval to arrive).
+fn read_body_patiently(
+    reader: &mut HttpReader<TcpStream>,
+    len: usize,
+    shutdown: &AtomicBool,
+) -> io::Result<Vec<u8>> {
+    loop {
+        match reader.read_body(len) {
+            Ok(b) => return Ok(b),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::Interrupted,
+                        "shutdown while reading body",
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+trait WriteAllFlush: io::Write {
+    fn write_all_flush(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.write_all(bytes)?;
+        self.flush()
+    }
+}
+
+impl<W: io::Write> WriteAllFlush for W {}

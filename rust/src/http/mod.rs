@@ -1,0 +1,43 @@
+//! The HTTP/JSON inference front door.
+//!
+//! The serving coordinator ([`coordinator`](crate::coordinator)) gives
+//! the engine a sharded in-process API; this module puts a network
+//! protocol in front of it so external clients — and the CI smoke test,
+//! and the socket load generator — can reach a running net over plain
+//! TCP. It is deliberately dependency-free: a hand-rolled HTTP/1.1
+//! server over `std::net` (the offline vendor set has no hyper/axum/
+//! tokio), with request admission designed around **lazy JSON field
+//! extraction** so the expensive part of a request (the pixel payload)
+//! is only ever decoded for requests that pass admission.
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/infer` — `{"model", "batch"?, "deadline_ms"?, "tenant"?,
+//!   "payload"}` → `{"ids", "predicted", "logits", "total_ms", ...}`.
+//! * `GET /v1/models` — what is being served, with shapes and limits.
+//! * `GET /metrics` — the aggregate [`MetricsSnapshot`]
+//!   (latency quantiles, four-class request accounting, SLO buckets).
+//! * `GET /healthz` — liveness.
+//!
+//! Submodule map: [`parser`] (bounded head/body reading + lazy JSON),
+//! [`admission`] (per-tenant token buckets), [`router`] (the pure
+//! request→response pipeline), [`responses`] (status/class table and
+//! serialization), [`listener`] (TCP accept/connection loops),
+//! [`client`] (keep-alive client + socket loadgen).
+//!
+//! [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
+
+pub mod admission;
+pub mod client;
+pub mod listener;
+pub mod parser;
+pub mod responses;
+pub mod router;
+
+pub use admission::{RateLimit, TenantLimiter, TokenBucket};
+pub use client::{
+    infer_body, logits_of, run_closed_loop_http, wait_healthy, HttpClient,
+};
+pub use listener::{HttpConfig, HttpServer};
+pub use responses::Response;
+pub use router::{AppState, DEFAULT_TENANT};

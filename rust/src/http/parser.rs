@@ -1,0 +1,609 @@
+//! Request parsing for the HTTP front door: bounded HTTP/1.1 head and
+//! body reading, and **lazy JSON field extraction** for the hot ingest
+//! path.
+//!
+//! The ingest problem: an inference request body is dominated by the
+//! `payload` array (a 224×224×3 image is ~150k numbers, megabytes of
+//! text), but every *admission* decision — model routing, tenant rate
+//! limit, deadline — depends on a handful of tiny scalar fields. A
+//! tree-building parse (`util::json::parse`) would allocate a
+//! `Json::Num` per pixel before the first admission check can run. The
+//! mik-sdk pure-Rust JSON ADR (SNIPPETS.md) measured lazy path scanning
+//! at ~33× faster for exactly this shape of access, so the front door
+//! does the same: [`lazy_scan`] walks the raw bytes once, records the
+//! byte span of each requested top-level field, and **stops as soon as
+//! the last requested key is found** — with hot fields ordered before
+//! the payload (as our own client writes them), admission never touches
+//! the bulk of the body, and a rejected/expired request is turned away
+//! having allocated nothing. Only an admitted request pays for
+//! [`parse_f32_array`] on the payload span.
+
+use std::io::{self, Read};
+
+/// Byte range of a raw JSON value inside the scanned body.
+pub type Span = std::ops::Range<usize>;
+
+/// Caps the request/response head (request line + headers). A head this
+/// large is an attack or a bug, not a client.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Scan a top-level JSON object for `keys` without building a tree.
+///
+/// Returns, per key, the byte span of its raw value (`None` if the key
+/// was not seen before scanning stopped). Scanning is lazy: it stops at
+/// the first point where every requested key has been found, so
+/// anything after that — including a syntax error — is never examined.
+/// Keys must be plain (no escapes); a key written with JSON escapes in
+/// the body will not match. Duplicate keys keep the first occurrence.
+///
+/// Errors (with byte offsets) on malformed JSON *up to* the stopping
+/// point, including truncated input.
+pub fn lazy_scan(body: &[u8], keys: &[&str]) -> Result<Vec<Option<Span>>, String> {
+    let mut found: Vec<Option<Span>> = vec![None; keys.len()];
+    let mut remaining = keys.len();
+    let mut s = Scan { b: body, pos: 0 };
+    s.skip_ws();
+    s.expect(b'{', "request body must be a JSON object")?;
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        return Ok(found);
+    }
+    loop {
+        s.skip_ws();
+        let key = s.string_inner_span()?;
+        s.skip_ws();
+        s.expect(b':', "expected ':' after object key")?;
+        let value = s.value_span()?;
+        if let Some(i) = keys.iter().position(|k| k.as_bytes() == &body[key.clone()])
+        {
+            if found[i].is_none() {
+                found[i] = Some(value);
+                remaining -= 1;
+                if remaining == 0 {
+                    // Lazy stop: every hot field is in hand; the rest
+                    // of the body (typically the payload tail) is not
+                    // our problem here.
+                    return Ok(found);
+                }
+            }
+        }
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.pos += 1,
+            Some(b'}') => return Ok(found),
+            _ => return Err(s.err("expected ',' or '}' after object member")),
+        }
+    }
+}
+
+struct Scan<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("invalid JSON at byte {}: {}", self.pos, msg)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8, msg: &str) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// At an opening quote; returns the span *between* the quotes and
+    /// leaves the cursor past the closing quote. Byte-wise is safe:
+    /// UTF-8 continuation bytes are ≥ 0x80 and can never alias `"` or
+    /// `\`.
+    fn string_inner_span(&mut self) -> Result<Span, String> {
+        self.expect(b'"', "expected a string")?;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let span = start..self.pos;
+                    self.pos += 1;
+                    return Ok(span);
+                }
+                Some(b'\\') => {
+                    if self.pos + 1 >= self.b.len() {
+                        return Err(self.err("truncated escape"));
+                    }
+                    self.pos += 2;
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    fn literal(&mut self, lit: &[u8]) -> Result<(), String> {
+        if self.b[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err("expected a JSON value"))
+        }
+    }
+
+    /// Skip one JSON value (scalar or nested container, strings handled
+    /// for quoting only — contents are never inspected) and return its
+    /// raw byte span.
+    fn value_span(&mut self) -> Result<Span, String> {
+        self.skip_ws();
+        let start = self.pos;
+        match self.peek() {
+            Some(b'"') => {
+                self.string_inner_span()?;
+            }
+            Some(b'{' | b'[') => {
+                let mut depth = 0usize;
+                loop {
+                    match self.peek() {
+                        None => return Err(self.err("unterminated container")),
+                        Some(b'"') => {
+                            self.string_inner_span()?;
+                        }
+                        Some(b'{' | b'[') => {
+                            depth += 1;
+                            self.pos += 1;
+                        }
+                        Some(b'}' | b']') => {
+                            depth -= 1;
+                            self.pos += 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        Some(_) => self.pos += 1,
+                    }
+                }
+            }
+            Some(b't') => self.literal(b"true")?,
+            Some(b'f') => self.literal(b"false")?,
+            Some(b'n') => self.literal(b"null")?,
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                self.pos += 1;
+                while matches!(
+                    self.peek(),
+                    Some(c) if c.is_ascii_digit()
+                        || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+                ) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("expected a JSON value")),
+        }
+        Ok(start..self.pos)
+    }
+}
+
+/// Decode a scanned string-value span into its text (full unescaping,
+/// via the strict parser — the span is tiny, e.g. a tenant name).
+pub fn span_str(body: &[u8], span: &Span) -> Result<String, String> {
+    let raw = std::str::from_utf8(&body[span.start.saturating_sub(1)..span.end + 1])
+        .map_err(|_| "string field is not UTF-8".to_string())?;
+    match crate::util::json::parse(raw) {
+        Ok(crate::util::json::Json::Str(s)) => Ok(s),
+        _ => Err("expected a JSON string".to_string()),
+    }
+}
+
+/// Decode a scanned number-value span as a non-negative integer.
+pub fn span_u64(body: &[u8], span: &Span) -> Result<u64, String> {
+    let txt = std::str::from_utf8(&body[span.clone()])
+        .map_err(|_| "number field is not UTF-8".to_string())?;
+    let v: f64 =
+        txt.parse().map_err(|_| format!("'{txt}' is not a number"))?;
+    if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 {
+        Ok(v as u64)
+    } else {
+        Err(format!("'{txt}' is not a non-negative integer"))
+    }
+}
+
+/// Parse a scanned `payload` span — a flat JSON array of numbers — into
+/// f32s, without the `Json` tree (no per-element allocation). Rejects
+/// anything but finite numbers, and stops with an error as soon as the
+/// array exceeds `max_len` elements rather than buffering an oversized
+/// payload.
+pub fn parse_f32_array(
+    body: &[u8],
+    span: &Span,
+    max_len: usize,
+) -> Result<Vec<f32>, String> {
+    let bytes = &body[span.clone()];
+    let mut s = Scan { b: bytes, pos: 0 };
+    s.skip_ws();
+    s.expect(b'[', "payload must be a JSON array")?;
+    let mut out: Vec<f32> = Vec::new();
+    s.skip_ws();
+    if s.peek() == Some(b']') {
+        return Ok(out);
+    }
+    loop {
+        s.skip_ws();
+        let start = s.pos;
+        while matches!(
+            s.peek(),
+            Some(c) if c.is_ascii_digit()
+                || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            s.pos += 1;
+        }
+        if s.pos == start {
+            return Err(s.err("payload elements must be numbers"));
+        }
+        let txt = std::str::from_utf8(&bytes[start..s.pos]).unwrap();
+        let v: f32 = txt
+            .parse()
+            .map_err(|_| format!("payload element '{txt}' is not a number"))?;
+        if !v.is_finite() {
+            return Err(format!("payload element '{txt}' is not finite"));
+        }
+        if out.len() == max_len {
+            return Err(format!("payload has more than {max_len} elements"));
+        }
+        out.push(v);
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.pos += 1,
+            Some(b']') => return Ok(out),
+            _ => return Err(s.err("expected ',' or ']' in payload")),
+        }
+    }
+}
+
+/// A parsed HTTP/1.1 request head.
+#[derive(Debug, Clone)]
+pub struct RequestHead {
+    pub method: String,
+    pub path: String,
+    /// `false` for HTTP/1.0 (implies no keep-alive by default).
+    pub http11: bool,
+    pub content_length: usize,
+    /// Client asked for the connection to close after this exchange.
+    pub close: bool,
+    /// Client sent `Expect: 100-continue` and is waiting for the
+    /// interim response before transmitting the body.
+    pub expect_continue: bool,
+}
+
+/// Parse a request head (request line + headers, no trailing blank
+/// line).
+pub fn parse_request_head(head: &str) -> Result<RequestHead, String> {
+    let mut lines = head.lines();
+    let line = lines.next().ok_or("empty request head")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("missing method")?.to_string();
+    let path = parts.next().ok_or("missing path")?.to_string();
+    let version = parts.next().ok_or("missing HTTP version")?;
+    if parts.next().is_some() {
+        return Err(format!("malformed request line '{line}'"));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => return Err(format!("unsupported version '{other}'")),
+    };
+    let mut content_length = 0usize;
+    let mut close = !http11;
+    let mut expect_continue = false;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(format!("malformed header line '{line}'"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| format!("bad content-length '{value}'"))?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    close = true;
+                } else if v.contains("keep-alive") {
+                    close = false;
+                }
+            }
+            "expect" => {
+                expect_continue = value.eq_ignore_ascii_case("100-continue");
+            }
+            _ => {}
+        }
+    }
+    Ok(RequestHead { method, path, http11, content_length, close, expect_continue })
+}
+
+/// Parse a response head (status line + headers) — the client half.
+/// Returns `(status, content_length)`.
+pub fn parse_response_head(head: &str) -> Result<(u16, usize), String> {
+    let mut lines = head.lines();
+    let line = lines.next().ok_or("empty response head")?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().ok_or("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("not an HTTP response: '{line}'"));
+    }
+    let status: u16 = parts
+        .next()
+        .ok_or("missing status code")?
+        .parse()
+        .map_err(|_| format!("bad status code in '{line}'"))?;
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad content-length '{}'", value.trim()))?;
+        }
+    }
+    Ok((status, content_length))
+}
+
+/// Buffered reader for one HTTP connection: reads heads up to the
+/// `\r\n\r\n` (or lenient `\n\n`) terminator under [`MAX_HEAD_BYTES`],
+/// then exact-length bodies, carrying over-read bytes between calls so
+/// pipelined/keep-alive exchanges cannot lose data.
+pub struct HttpReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+}
+
+fn find_terminator(buf: &[u8]) -> Option<(usize, usize)> {
+    // (head_end, terminator_len)
+    buf.windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|i| (i, 4))
+        .or_else(|| buf.windows(2).position(|w| w == b"\n\n").map(|i| (i, 2)))
+}
+
+impl<R: Read> HttpReader<R> {
+    pub fn new(inner: R) -> Self {
+        HttpReader { inner, buf: Vec::new() }
+    }
+
+    /// Read one head. `Ok(None)` means the peer closed cleanly before
+    /// sending anything (the normal end of a keep-alive connection).
+    pub fn read_head(&mut self) -> io::Result<Option<String>> {
+        loop {
+            if let Some((end, tlen)) = find_terminator(&self.buf) {
+                let rest = self.buf.split_off(end + tlen);
+                let mut head_bytes = std::mem::replace(&mut self.buf, rest);
+                head_bytes.truncate(end);
+                let head = String::from_utf8(head_bytes).map_err(|_| {
+                    io::Error::new(io::ErrorKind::InvalidData, "head is not UTF-8")
+                })?;
+                return Ok(Some(head));
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "request head exceeds 16 KiB",
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.inner.read(&mut chunk)?;
+            if n == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-head",
+                ));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Read exactly `len` body bytes (the caller has already bounded
+    /// `len` against its body cap).
+    pub fn read_body(&mut self, len: usize) -> io::Result<Vec<u8>> {
+        while self.buf.len() < len {
+            let mut chunk = [0u8; 16 * 1024];
+            let n = self.inner.read(&mut chunk)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                ));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let rest = self.buf.split_off(len);
+        Ok(std::mem::replace(&mut self.buf, rest))
+    }
+
+    /// Access the underlying stream (e.g. to write an interim `100
+    /// Continue`).
+    pub fn get_mut(&mut self) -> &mut R {
+        &mut self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BODY: &[u8] = br#"{"model": "squeezenet", "batch": 2, "deadline_ms": 50,
+        "tenant": "team-a", "payload": [1.5, -2, 3e-1]}"#;
+
+    fn scan_all(body: &[u8]) -> Vec<Option<Span>> {
+        lazy_scan(body, &["model", "batch", "deadline_ms", "tenant", "payload"])
+            .unwrap()
+    }
+
+    #[test]
+    fn lazy_scan_extracts_hot_fields() {
+        let spans = scan_all(BODY);
+        assert_eq!(span_str(BODY, spans[0].as_ref().unwrap()).unwrap(), "squeezenet");
+        assert_eq!(span_u64(BODY, spans[1].as_ref().unwrap()).unwrap(), 2);
+        assert_eq!(span_u64(BODY, spans[2].as_ref().unwrap()).unwrap(), 50);
+        assert_eq!(span_str(BODY, spans[3].as_ref().unwrap()).unwrap(), "team-a");
+        let payload =
+            parse_f32_array(BODY, spans[4].as_ref().unwrap(), 16).unwrap();
+        assert_eq!(payload, vec![1.5, -2.0, 0.3]);
+    }
+
+    #[test]
+    fn lazy_scan_reports_missing_fields_as_none() {
+        let body = br#"{"model": "x", "payload": []}"#;
+        let spans =
+            lazy_scan(body, &["model", "deadline_ms", "tenant", "payload"]).unwrap();
+        assert!(spans[0].is_some());
+        assert!(spans[1].is_none(), "absent key must come back None");
+        assert!(spans[2].is_none());
+        assert!(spans[3].is_some());
+    }
+
+    #[test]
+    fn lazy_scan_stops_at_last_requested_key() {
+        // Everything after the requested keys — including a hard syntax
+        // error — is never examined. This is the laziness contract: a
+        // request can be admitted or refused without scanning its
+        // payload tail.
+        let body = br#"{"model": "m", "batch": 1, THIS IS NOT JSON"#;
+        let spans = lazy_scan(body, &["model", "batch"]).unwrap();
+        assert!(spans[0].is_some() && spans[1].is_some());
+        // ... but asking for a key that lies beyond the garbage fails.
+        assert!(lazy_scan(body, &["model", "batch", "payload"]).is_err());
+    }
+
+    #[test]
+    fn lazy_scan_skips_nested_containers_and_escapes() {
+        let body = br#"{"meta": {"a": [1, {"b": "}]"}], "q": "\"x\\"}, "batch": 7}"#;
+        let spans = lazy_scan(body, &["batch", "meta"]).unwrap();
+        assert_eq!(span_u64(body, spans[0].as_ref().unwrap()).unwrap(), 7);
+        let meta = spans[1].clone().unwrap();
+        assert!(body[meta.clone()].starts_with(b"{"));
+        assert!(body[meta].ends_with(b"}"));
+    }
+
+    #[test]
+    fn lazy_scan_rejects_truncated_and_garbage() {
+        for bad in [
+            &br#"{"model": "sq"#[..],           // truncated string
+            &br#"{"payload": [1, 2"#[..],       // truncated array
+            &br#"{"model" "x"}"#[..],           // missing colon
+            &br#"[1, 2, 3]"#[..],               // not an object
+            &br#"12"#[..],                      // not an object
+            &b""[..],                           // empty
+            &br#"{"a": tru}"#[..],              // bad literal
+        ] {
+            assert!(
+                lazy_scan(bad, &["model", "payload"]).is_err(),
+                "accepted: {:?}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+        // An empty object is valid — just nothing found.
+        let spans = lazy_scan(b"{}", &["model"]).unwrap();
+        assert!(spans[0].is_none());
+    }
+
+    #[test]
+    fn f32_array_rejects_oversize_and_non_numbers() {
+        let body = br#"{"payload": [1, 2, 3, 4]}"#;
+        let span = lazy_scan(body, &["payload"]).unwrap()[0].clone().unwrap();
+        assert_eq!(parse_f32_array(body, &span, 4).unwrap().len(), 4);
+        let err = parse_f32_array(body, &span, 3).unwrap_err();
+        assert!(err.contains("more than 3"), "oversize must fail early: {err}");
+
+        let bad = br#"{"payload": [1, "x"]}"#;
+        let span = lazy_scan(bad, &["payload"]).unwrap()[0].clone().unwrap();
+        assert!(parse_f32_array(bad, &span, 8).is_err());
+        let inf = br#"{"payload": [1e49]}"#;
+        let span = lazy_scan(inf, &["payload"]).unwrap()[0].clone().unwrap();
+        assert!(parse_f32_array(inf, &span, 8).is_err(), "overflow → non-finite");
+    }
+
+    #[test]
+    fn request_head_parses() {
+        let h = parse_request_head(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\n\
+             Connection: close",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path, "/v1/infer");
+        assert!(h.http11);
+        assert_eq!(h.content_length, 12);
+        assert!(h.close);
+        assert!(!h.expect_continue);
+
+        let h = parse_request_head("GET /healthz HTTP/1.1").unwrap();
+        assert_eq!(h.content_length, 0);
+        assert!(!h.close, "HTTP/1.1 defaults to keep-alive");
+        let h = parse_request_head("GET / HTTP/1.0").unwrap();
+        assert!(h.close, "HTTP/1.0 defaults to close");
+
+        assert!(parse_request_head("").is_err());
+        assert!(parse_request_head("GET /").is_err());
+        assert!(parse_request_head("GET / HTTP/2").is_err());
+        assert!(parse_request_head("GET / HTTP/1.1\r\nbroken-line").is_err());
+        assert!(
+            parse_request_head("POST / HTTP/1.1\r\nContent-Length: -4").is_err()
+        );
+    }
+
+    #[test]
+    fn response_head_parses() {
+        let (status, len) = parse_response_head(
+            "HTTP/1.1 429 Too Many Requests\r\nContent-Length: 9",
+        )
+        .unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(len, 9);
+        assert!(parse_response_head("junk").is_err());
+    }
+
+    #[test]
+    fn http_reader_handles_keepalive_and_overread() {
+        // Two pipelined exchanges in one byte stream: the reader must
+        // not lose body bytes it over-read while hunting the head
+        // terminator.
+        let wire = b"POST /a HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloPOST /b \
+                     HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
+        let mut r = HttpReader::new(&wire[..]);
+        let head = r.read_head().unwrap().unwrap();
+        let h = parse_request_head(&head).unwrap();
+        assert_eq!(h.path, "/a");
+        assert_eq!(r.read_body(5).unwrap(), b"hello");
+        let head = r.read_head().unwrap().unwrap();
+        assert_eq!(parse_request_head(&head).unwrap().path, "/b");
+        assert_eq!(r.read_body(2).unwrap(), b"ok");
+        assert!(r.read_head().unwrap().is_none(), "clean EOF → None");
+    }
+
+    #[test]
+    fn http_reader_bounds_the_head() {
+        let mut wire = vec![b'A'; MAX_HEAD_BYTES + 64];
+        wire.extend_from_slice(b"\r\n\r\n");
+        let mut r = HttpReader::new(&wire[..]);
+        assert!(r.read_head().is_err(), "oversized head must be refused");
+        // Truncated head (EOF before terminator) errors rather than
+        // returning a partial head.
+        let mut r = HttpReader::new(&b"GET / HTTP/1.1\r\n"[..]);
+        assert!(r.read_head().is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! HTTP response construction and serialization.
+//!
+//! Every front-door response carries a JSON body, and every error body
+//! has the same two-field shape — `{"error": <message>, "class":
+//! <accounting class>}` — so a client (and the socket load generator)
+//! can fold any response into the four-class accounting
+//! (`completed + rejected + failed + expired == offered`) from the
+//! status code alone, using `class` only as a human-readable
+//! cross-check.
+
+use std::io::{self, Write};
+
+use crate::util::json::Json;
+
+/// Status → reason phrase for the handful of statuses the front door
+/// emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Accounting class a status code maps to, mirroring the coordinator's
+/// request classes. `invalid` (4xx shape errors) counts as `failed` on
+/// the load-report side — the request was offered and produced no
+/// result.
+pub fn class_of(status: u16) -> &'static str {
+    match status {
+        200 => "completed",
+        429 | 503 => "rejected",
+        504 => "expired",
+        400 | 404 | 405 | 413 => "invalid",
+        _ => "failed",
+    }
+}
+
+/// One response ready to serialize: status, JSON body, and whether the
+/// server will close the connection after writing it.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+    pub close: bool,
+}
+
+impl Response {
+    /// A 200 with the given JSON value as body.
+    pub fn ok(body: &Json) -> Response {
+        Response { status: 200, body: body.to_string_compact(), close: false }
+    }
+
+    /// An error response with the canonical two-field body.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let body = Json::obj(vec![
+            ("error", Json::str(msg)),
+            ("class", Json::str(class_of(status))),
+        ]);
+        Response { status, body: body.to_string_compact(), close: false }
+    }
+
+    pub fn with_close(mut self, close: bool) -> Response {
+        self.close = close;
+        self
+    }
+
+    /// Serialize head + body onto the wire.
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.body.len(),
+            if self.close { "close" } else { "keep-alive" },
+        )?;
+        w.write_all(self.body.as_bytes())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn error_bodies_carry_class_and_escape() {
+        let r = Response::error(429, "tenant \"team-a\" over rate limit");
+        let v = parse(&r.body).unwrap();
+        assert_eq!(v.get("class").unwrap().as_str().unwrap(), "rejected");
+        assert_eq!(
+            v.get("error").unwrap().as_str().unwrap(),
+            "tenant \"team-a\" over rate limit",
+            "quotes in messages must survive the JSON roundtrip"
+        );
+    }
+
+    #[test]
+    fn status_class_mapping_is_total() {
+        assert_eq!(class_of(200), "completed");
+        assert_eq!(class_of(429), "rejected");
+        assert_eq!(class_of(503), "rejected");
+        assert_eq!(class_of(504), "expired");
+        assert_eq!(class_of(400), "invalid");
+        assert_eq!(class_of(500), "failed");
+        assert_eq!(class_of(599), "failed");
+    }
+
+    #[test]
+    fn wire_format_is_parseable_http() {
+        let mut wire: Vec<u8> = Vec::new();
+        Response::error(504, "deadline already passed")
+            .with_close(true)
+            .write_to(&mut wire)
+            .unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").unwrap();
+        let (status, len) = super::super::parser::parse_response_head(head).unwrap();
+        assert_eq!(status, 504);
+        assert_eq!(len, body.len());
+        assert!(head.contains("Connection: close"));
+        assert!(parse(body).is_ok());
+    }
+}

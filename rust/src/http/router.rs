@@ -1,0 +1,298 @@
+//! Route dispatch and the `/v1/infer` admission pipeline.
+//!
+//! [`handle_request`] is a pure function from `(state, head, body)` to
+//! a [`Response`] — no sockets — so the whole admission pipeline is
+//! unit-testable without binding a port. The listener owns the I/O.
+//!
+//! The `/v1/infer` pipeline runs its checks in strict cheapest-first
+//! order over lazily-scanned field spans:
+//!
+//! 1. lazy-scan the body for the five hot fields (spans only);
+//! 2. model routing (404 before anything else is looked at);
+//! 3. tenant rate limit (429 — an over-limit tenant costs the server a
+//!    hash lookup, not a payload decode);
+//! 4. deadline check (504 — a dead-on-arrival request is counted
+//!    `expired` via [`ServerHandle::note_expired`] and turned away
+//!    **before its payload is decoded**);
+//! 5. batch/payload validation (400) — only now are pixels
+//!    materialized;
+//! 6. dispatch to the shard pool, mapping [`SubmitError`] and
+//!    [`ServeError`] onto the status/class table in
+//!    [`responses`](super::responses).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{ServeError, ServerHandle, SubmitError};
+use crate::util::json::Json;
+
+use super::admission::TenantLimiter;
+use super::parser::{
+    lazy_scan, parse_f32_array, span_str, span_u64, RequestHead,
+};
+use super::responses::Response;
+
+/// Tenant used when a request carries no `tenant` field.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Everything the router needs to answer requests; shared across
+/// connection threads behind an `Arc`.
+pub struct AppState {
+    pub handle: ServerHandle,
+    /// Model name requests must route to (single-model front door).
+    pub model: String,
+    /// Largest `batch` a single request may carry.
+    pub max_batch: usize,
+    pub limiter: TenantLimiter,
+    /// Deadline applied when a request carries no `deadline_ms`.
+    pub default_deadline: Option<Duration>,
+    pub started: Instant,
+}
+
+/// Dispatch one parsed request to its route.
+pub fn handle_request(state: &AppState, head: &RequestHead, body: &[u8]) -> Response {
+    match (head.method.as_str(), head.path.as_str()) {
+        ("POST", "/v1/infer") => infer(state, body),
+        ("GET", "/v1/models") => models(state),
+        ("GET", "/metrics") => metrics(state),
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/v1/infer") | ("POST", "/v1/models" | "/metrics" | "/healthz") => {
+            Response::error(405, &format!("{} not allowed on {}", head.method, head.path))
+        }
+        (_, path) => Response::error(404, &format!("no route for {path}")),
+    }
+}
+
+fn healthz(state: &AppState) -> Response {
+    Response::ok(&Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("uptime_seconds", Json::num(state.started.elapsed().as_secs_f64())),
+        ("workers", Json::num(state.handle.workers() as f64)),
+    ]))
+}
+
+fn models(state: &AppState) -> Response {
+    Response::ok(&Json::obj(vec![(
+        "models",
+        Json::arr(vec![Json::obj(vec![
+            ("name", Json::str(state.model.clone())),
+            ("input_elems", Json::num(state.handle.image_elems() as f64)),
+            ("classes", Json::num(state.handle.classes() as f64)),
+            ("max_batch", Json::num(state.max_batch as f64)),
+            ("workers", Json::num(state.handle.workers() as f64)),
+        ])]),
+    )]))
+}
+
+fn metrics(state: &AppState) -> Response {
+    let s = state.handle.metrics();
+    let ms = |v: f64| Json::num(v * 1e3);
+    Response::ok(&Json::obj(vec![
+        ("requests", Json::num(s.requests as f64)),
+        ("batches", Json::num(s.batches as f64)),
+        ("rejected", Json::num(s.rejected as f64)),
+        ("expired", Json::num(s.expired as f64)),
+        ("mean_batch_size", Json::num(s.mean_batch_size)),
+        ("throughput_rps", Json::num(s.throughput_rps)),
+        ("queue_p50_ms", ms(s.queue_p50)),
+        ("queue_p99_ms", ms(s.queue_p99)),
+        ("exec_p50_ms", ms(s.exec_p50)),
+        ("exec_p99_ms", ms(s.exec_p99)),
+        ("total_p50_ms", ms(s.total_p50)),
+        ("total_p99_ms", ms(s.total_p99)),
+        ("total_max_ms", ms(s.total_max)),
+        ("tenants", Json::num(state.limiter.tenants() as f64)),
+        (
+            "slo",
+            Json::arr(
+                s.slo
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("le_seconds", Json::num(b.le_seconds)),
+                            ("count", Json::num(b.count as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}
+
+fn infer(state: &AppState, body: &[u8]) -> Response {
+    let arrival = Instant::now();
+
+    // 1. One lazy pass for the hot-field spans; the payload bytes are
+    //    located but not decoded.
+    let spans =
+        match lazy_scan(body, &["model", "batch", "deadline_ms", "tenant", "payload"])
+        {
+            Ok(s) => s,
+            Err(e) => return Response::error(400, &e),
+        };
+    let [model_span, batch_span, deadline_span, tenant_span, payload_span] =
+        match <[_; 5]>::try_from(spans) {
+            Ok(a) => a,
+            Err(_) => unreachable!("lazy_scan returns one span per key"),
+        };
+
+    // 2. Model routing.
+    let model = match &model_span {
+        Some(s) => match span_str(body, s) {
+            Ok(m) => m,
+            Err(e) => return Response::error(400, &format!("model: {e}")),
+        },
+        None => return Response::error(400, "missing required field 'model'"),
+    };
+    if model != state.model {
+        return Response::error(
+            404,
+            &format!("unknown model '{model}' (serving '{}')", state.model),
+        );
+    }
+
+    // 3. Tenant rate limit.
+    let tenant = match &tenant_span {
+        Some(s) => match span_str(body, s) {
+            Ok(t) => t,
+            Err(e) => return Response::error(400, &format!("tenant: {e}")),
+        },
+        None => DEFAULT_TENANT.to_string(),
+    };
+    if !state.limiter.admit(&tenant) {
+        return Response::error(429, &format!("tenant '{tenant}' over rate limit"));
+    }
+
+    // 4. Deadline — checked before the payload is decoded, so a
+    //    dead-on-arrival request costs the server nothing but this
+    //    header scan. It still counts as `expired` server-side.
+    let deadline = match &deadline_span {
+        Some(s) => match span_u64(body, s) {
+            Ok(ms) => Some(arrival + Duration::from_millis(ms)),
+            Err(e) => return Response::error(400, &format!("deadline_ms: {e}")),
+        },
+        None => state.default_deadline.map(|d| arrival + d),
+    };
+    if let Some(d) = deadline {
+        if Instant::now() >= d {
+            state.handle.note_expired();
+            return Response::error(504, "deadline already passed at admission");
+        }
+    }
+
+    // 5. Batch and payload validation — the first point that touches
+    //    the bulk of the body.
+    let batch = match &batch_span {
+        Some(s) => match span_u64(body, s) {
+            Ok(b) => b as usize,
+            Err(e) => return Response::error(400, &format!("batch: {e}")),
+        },
+        None => 1,
+    };
+    if batch == 0 || batch > state.max_batch {
+        return Response::error(
+            400,
+            &format!("batch must be in 1..={}, got {batch}", state.max_batch),
+        );
+    }
+    let image_elems = state.handle.image_elems();
+    let want = batch * image_elems;
+    let payload = match &payload_span {
+        Some(s) => match parse_f32_array(body, s, want) {
+            Ok(p) => p,
+            Err(e) => return Response::error(400, &format!("payload: {e}")),
+        },
+        None => return Response::error(400, "missing required field 'payload'"),
+    };
+    if payload.len() != want {
+        return Response::error(
+            400,
+            &format!(
+                "payload has {} elements, expected {want} (batch {batch} × {image_elems})",
+                payload.len()
+            ),
+        );
+    }
+
+    // 6. Dispatch each image to the shard pool, then gather replies.
+    let mut receivers = Vec::with_capacity(batch);
+    for i in 0..batch {
+        let pixels = payload[i * image_elems..(i + 1) * image_elems].to_vec();
+        match state.handle.submit_request(pixels, deadline) {
+            Ok(rx) => receivers.push(rx),
+            // Receivers already submitted are dropped here; their
+            // workers' replies land on closed channels, which is fine —
+            // the request as a whole has one outcome.
+            Err(SubmitError::Expired) => {
+                return Response::error(504, "deadline passed at dispatch")
+            }
+            Err(e @ SubmitError::AllQueuesFull { .. }) => {
+                return Response::error(429, &e.to_string())
+            }
+            Err(SubmitError::Shutdown) => {
+                return Response::error(503, "server is shutting down")
+            }
+            Err(SubmitError::BadInput(msg)) => return Response::error(400, &msg),
+        }
+    }
+
+    let mut ids = Vec::with_capacity(batch);
+    let mut predicted = Vec::with_capacity(batch);
+    let mut logits = Vec::with_capacity(batch);
+    let mut total_s: f64 = 0.0;
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                ids.push(Json::num(resp.id as f64));
+                predicted.push(Json::num(argmax(&resp.logits) as f64));
+                logits.push(Json::arr(
+                    // f32 → f64 is exact, and the writer's shortest-
+                    // roundtrip f64 formatting means a client casting
+                    // the parsed f64 back to f32 recovers the exact
+                    // bits — the wire is lossless for logits.
+                    resp.logits.iter().map(|&v| Json::num(v as f64)).collect(),
+                ));
+                total_s = total_s.max(resp.total_seconds);
+            }
+            Ok(Err(ServeError::Expired)) => {
+                return Response::error(504, "deadline passed in queue")
+            }
+            Ok(Err(ServeError::Failed(msg))) => {
+                return Response::error(500, &format!("execution failed: {msg}"))
+            }
+            Err(_) => {
+                return Response::error(500, "server dropped the request")
+            }
+        }
+    }
+
+    Response::ok(&Json::obj(vec![
+        ("model", Json::str(model)),
+        ("batch", Json::num(batch as f64)),
+        ("ids", Json::arr(ids)),
+        ("predicted", Json::arr(predicted)),
+        ("logits", Json::arr(logits)),
+        ("total_ms", Json::num(total_s * 1e3)),
+    ]))
+}
+
+fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_on_ties() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+}

@@ -16,8 +16,10 @@
 //!   performance model (the testbed substitute), a whole-network
 //!   forward engine ([`net`]: graph IR, arena-planned activations,
 //!   input-to-logits execution of the five zoo CNNs), a serving
-//!   coordinator with dynamic batching, and the bench harness that
-//!   regenerates every table and figure of the paper's evaluation.
+//!   coordinator with dynamic batching, an HTTP/JSON front door
+//!   ([`http`]: admission control, deadlines, SLO metrics over plain
+//!   TCP), and the bench harness that regenerates every table and
+//!   figure of the paper's evaluation.
 //!
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only and the `cuconv` binary is self-contained afterwards.
@@ -36,6 +38,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod cpuref;
 pub mod gpumodel;
+pub mod http;
 pub mod net;
 pub mod report;
 pub mod runtime;

@@ -18,6 +18,13 @@
 //!                                       end-to-end serving benchmark
 //!                                       (W worker shards, D-deep
 //!                                       bounded queue per shard)
+//! cuconv serve-http <network> [--port P] [--workers W] [--queue-depth D]
+//!                   [--rate-limit RPS] [--burst B] [--deadline-ms MS]
+//!                   [--drive N] [--clients C]
+//!                                       HTTP/JSON front door over the
+//!                                       shard pool; --drive N runs a
+//!                                       self-contained socket smoke +
+//!                                       closed loop and exits
 //! cuconv validate                       validate AOT artifacts end to end
 //! ```
 //!
@@ -39,6 +46,10 @@ use cuconv::conv::{ConvSpec, FilterSize};
 use cuconv::coordinator::{
     plan_network, plan_network_measured, run_closed_loop, BatchPolicy, PoolConfig, Server,
     ShardSelection,
+};
+use cuconv::http::{
+    logits_of, run_closed_loop_http, wait_healthy, AppState, HttpClient, HttpConfig,
+    HttpServer, RateLimit, TenantLimiter,
 };
 use cuconv::report::{self, figures, tables};
 use cuconv::util::rng::Rng;
@@ -237,6 +248,9 @@ fn run(args: &[String]) -> Result<()> {
                 serve_bench_model(requests, pool, queue_depth)?;
             }
         }
+        "serve-http" => {
+            serve_http(args)?;
+        }
         "validate" => {
             validate()?;
         }
@@ -244,7 +258,7 @@ fn run(args: &[String]) -> Result<()> {
             println!("cuconv {} — see README.md", cuconv::VERSION);
             println!(
                 "commands: census registry tables figures sweep autotune plan \
-                 forward serve-bench validate"
+                 forward serve-bench serve-http validate"
             );
             println!(
                 "  forward <net> [--batch N] [--cpu] [--measure]  whole-network \
@@ -446,14 +460,22 @@ fn serve_bench_model(
 }
 
 /// Drive a closed loop and print the report — completed, rejected
-/// (backpressured) and failed requests are reported separately, never
-/// folded into each other, plus aggregate and per-worker latency.
+/// (backpressured), failed and expired requests are reported
+/// separately, never folded into each other, plus aggregate and
+/// per-worker latency. Exits nonzero when any request *failed* (a
+/// healthy server may reject or expire under pressure, but an admitted
+/// request that errors is a bug the exit code must surface).
 fn drive_and_report(server: &Server, requests: usize, threads: usize) -> Result<()> {
     let report = run_closed_loop(&server.handle(), requests, threads, 0xD21);
     let m = server.metrics();
     println!(
-        "offered={} completed={} rejected={} failed={} throughput={:.1} rps",
-        requests, report.completed, report.rejected, report.failed, report.achieved_rps
+        "offered={} completed={} rejected={} failed={} expired={} throughput={:.1} rps",
+        requests,
+        report.completed,
+        report.rejected,
+        report.failed,
+        report.expired,
+        report.achieved_rps
     );
     println!(
         "batches={} mean_batch={:.2} latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms \
@@ -477,6 +499,151 @@ fn drive_and_report(server: &Server, requests: usize, threads: usize) -> Result<
                 w.exec_p99 * 1e3
             );
         }
+    }
+    if report.failed > 0 {
+        bail!("{} request(s) failed during the drive", report.failed);
+    }
+    Ok(())
+}
+
+/// The `serve-http` command: compile a network, start the shard pool,
+/// put the HTTP/JSON front door in front of it, and either serve until
+/// killed or (`--drive N`) run a self-contained socket smoke + closed
+/// loop and exit.
+fn serve_http(args: &[String]) -> Result<()> {
+    use cuconv::net::network_graph;
+    use std::time::Instant;
+
+    let net = parse_network(args.get(1).map(|s| s.as_str()))?;
+    let port: u16 = opt(args, "--port").map(|v| v.parse()).transpose()?.unwrap_or(8080);
+    let workers: usize =
+        opt(args, "--workers").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let queue_depth: usize =
+        opt(args, "--queue-depth").map(|v| v.parse()).transpose()?.unwrap_or(512);
+    let rate_limit = match opt(args, "--rate-limit") {
+        Some(v) => {
+            let rps: f64 = v.parse()?;
+            let burst: f64 = opt(args, "--burst")
+                .map(|b| b.parse())
+                .transpose()?
+                .unwrap_or((2.0 * rps).max(1.0));
+            Some(RateLimit::new(rps, burst).map_err(|e| anyhow!(e))?)
+        }
+        None => None,
+    };
+    let default_deadline = opt(args, "--deadline-ms")
+        .map(|v| v.parse::<u64>())
+        .transpose()?
+        .map(Duration::from_millis);
+    let drive: Option<usize> = opt(args, "--drive").map(|v| v.parse()).transpose()?;
+    let clients: usize =
+        opt(args, "--clients").map(|v| v.parse()).transpose()?.unwrap_or(4);
+
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(20),
+        queue_capacity: queue_depth,
+    };
+    let graph = network_graph(net);
+    let model = graph.name.clone();
+    println!(
+        "compiling {model} for batch sizes [1, 2, 4] x {workers} worker(s) ..."
+    );
+    let server = Server::start_net(
+        Box::new(CpuRefBackend::new()),
+        &graph,
+        &[1, 2, 4],
+        policy,
+        PoolConfig::with_workers(workers),
+    )?;
+    let handle = server.handle();
+    let image_elems = handle.image_elems();
+    let state = AppState {
+        handle: handle.clone(),
+        model: model.clone(),
+        max_batch: policy.max_batch,
+        limiter: TenantLimiter::new(rate_limit),
+        default_deadline,
+        started: Instant::now(),
+    };
+    let mut http = HttpServer::start(
+        state,
+        HttpConfig { addr: format!("127.0.0.1:{port}"), ..HttpConfig::default() },
+    )?;
+    let addr = http.addr();
+    println!(
+        "http front door on http://{addr} serving '{model}' \
+         (rate limit: {}, default deadline: {})",
+        rate_limit
+            .map(|l| format!("{} rps, burst {}", l.rps, l.burst))
+            .unwrap_or_else(|| "none".to_string()),
+        default_deadline.map(|d| format!("{d:?}")).unwrap_or_else(|| "none".to_string()),
+    );
+
+    let Some(requests) = drive else {
+        // Foreground serving: block until the process is killed; the
+        // acceptor and pool threads do the work.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    };
+
+    // --drive: smoke the endpoints through a real socket, then run the
+    // closed-loop socket load generator and report with the same
+    // four-class accounting as serve-bench.
+    wait_healthy(addr, Duration::from_secs(5))?;
+    let mut c = HttpClient::connect(addr)?;
+    let (st, body) = c.get("/v1/models")?;
+    if st != 200 || !body.contains(&model) {
+        bail!("GET /v1/models smoke failed: status {st}, body {body}");
+    }
+    let mut rng = Rng::new(0x5E12);
+    let mut img = vec![0.0f32; image_elems];
+    rng.fill_uniform(&mut img, -1.0, 1.0);
+    let canonical = cuconv::http::infer_body(&model, 1, None, Some("smoke"), &img);
+    let (st, body) = c.post_json("/v1/infer", &canonical)?;
+    if st != 200 {
+        bail!("POST /v1/infer smoke failed: status {st}, body {body}");
+    }
+    let rows = logits_of(&body)?;
+    if rows.len() != 1 || rows[0].len() != handle.classes() {
+        bail!(
+            "smoke response malformed: {} rows x {} logits, want 1 x {}",
+            rows.len(),
+            rows.first().map(|r| r.len()).unwrap_or(0),
+            handle.classes()
+        );
+    }
+    println!("smoke OK: /v1/models and /v1/infer answer 200 with well-formed JSON");
+
+    println!("driving {requests} requests from {clients} socket client(s) ...");
+    let report =
+        run_closed_loop_http(addr, &model, image_elems, requests, clients, 0xD22, None);
+    let m = server.metrics();
+    println!(
+        "offered={} completed={} rejected={} failed={} expired={} throughput={:.1} rps",
+        report.offered(),
+        report.completed,
+        report.rejected,
+        report.failed,
+        report.expired,
+        report.achieved_rps
+    );
+    println!(
+        "server: requests={} batches={} mean_batch={:.2} latency p50<={:.2}ms \
+         p99<={:.2}ms",
+        m.requests,
+        m.batches,
+        m.mean_batch_size,
+        m.total_p50 * 1e3,
+        m.total_p99 * 1e3
+    );
+    for b in &m.slo {
+        println!("  slo: <= {:6.1} ms: {}", b.le_seconds * 1e3, b.count);
+    }
+    http.shutdown();
+    if report.failed > 0 {
+        bail!("{} request(s) failed during the drive", report.failed);
     }
     Ok(())
 }

@@ -142,6 +142,26 @@ impl LatencyHistogram {
         self.base * 2f64.powi(self.counts.len() as i32 - 1)
     }
 
+    /// Samples known to be at or below `seconds`: the summed counts of
+    /// every bucket whose upper bound is ≤ `seconds`. Conservative in
+    /// the same direction as [`quantile_upper_bound`] — a sample in a
+    /// bucket straddling the threshold is *not* counted, so an SLO
+    /// attainment computed from this can only under-report, never
+    /// flatter.
+    ///
+    /// [`quantile_upper_bound`]: LatencyHistogram::quantile_upper_bound
+    pub fn count_at_or_below(&self, seconds: f64) -> u64 {
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if self.base * 2f64.powi(i as i32) <= seconds {
+                acc += c;
+            } else {
+                break;
+            }
+        }
+        acc
+    }
+
     /// Merge another histogram with identical geometry.
     pub fn merge(&mut self, other: &LatencyHistogram) {
         assert_eq!(self.base, other.base);
@@ -272,6 +292,22 @@ mod tests {
         let top = h.quantile_upper_bound(1.0);
         assert_eq!(top, 1e-6 * 8.0, "overflow sample must sit in the last bucket");
         assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn count_at_or_below_is_conservative() {
+        let mut h = LatencyHistogram::standard();
+        for _ in 0..10 {
+            h.record(10e-6); // bucket bound 16µs
+        }
+        h.record(300e-3); // far bucket
+        // Everything at 10µs is surely within 16µs and above.
+        assert_eq!(h.count_at_or_below(16e-6), 10);
+        assert_eq!(h.count_at_or_below(1.0), 11);
+        // A threshold below the samples' bucket bound counts nothing —
+        // under-reporting, never flattering.
+        assert_eq!(h.count_at_or_below(8e-6), 0);
+        assert_eq!(LatencyHistogram::standard().count_at_or_below(1.0), 0);
     }
 
     #[test]

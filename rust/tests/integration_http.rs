@@ -1,0 +1,324 @@
+//! Integration: the HTTP/JSON front door over real loopback sockets —
+//! bit-identical inference through the full wire path, deadline and
+//! rate-limit admission, endpoint smoke, and malformed-request
+//! robustness.
+
+use std::time::{Duration, Instant};
+
+use cuconv::backend::CpuRefBackend;
+use cuconv::coordinator::{BatchPolicy, PoolConfig, Server};
+use cuconv::http::{
+    infer_body, logits_of, wait_healthy, AppState, HttpClient, HttpConfig,
+    HttpServer, RateLimit, TenantLimiter,
+};
+use cuconv::net::{network_graph, GraphBuilder, NetGraph, NetPlanner};
+use cuconv::util::json::parse;
+use cuconv::util::rng::Rng;
+use cuconv::zoo::Network;
+
+/// A small net that exercises conv/pool/linear/softmax without
+/// SqueezeNet-scale compute — the workhorse for the admission tests.
+fn tiny_graph() -> NetGraph {
+    let mut b = GraphBuilder::new("tiny-net", 2, 10, 10);
+    let c1 = b.conv_same("c1", b.input(), 6, 3);
+    let p = b.max_pool("p", c1, 2, 2, 0);
+    let g = b.global_avg_pool("gap", p);
+    let fc = b.linear("fc", g, 7, false);
+    b.softmax("sm", fc);
+    b.finish()
+}
+
+struct FrontDoor {
+    // Field order is drop order: the HTTP listener goes down before the
+    // pool it dispatches into.
+    http: HttpServer,
+    server: Server,
+    model: String,
+    image_elems: usize,
+}
+
+impl FrontDoor {
+    fn start(
+        graph: &NetGraph,
+        batch_sizes: &[usize],
+        rate_limit: Option<RateLimit>,
+        default_deadline: Option<Duration>,
+        http_cfg: HttpConfig,
+    ) -> FrontDoor {
+        let server = Server::start_net(
+            Box::new(CpuRefBackend::new()),
+            graph,
+            batch_sizes,
+            BatchPolicy {
+                max_batch: *batch_sizes.iter().max().unwrap(),
+                max_delay: Duration::from_millis(5),
+                queue_capacity: 64,
+            },
+            PoolConfig::with_workers(1),
+        )
+        .expect("pool");
+        let handle = server.handle();
+        let image_elems = handle.image_elems();
+        let http = HttpServer::start(
+            AppState {
+                handle,
+                model: graph.name.clone(),
+                max_batch: *batch_sizes.iter().max().unwrap(),
+                limiter: TenantLimiter::new(rate_limit),
+                default_deadline,
+                started: Instant::now(),
+            },
+            http_cfg,
+        )
+        .expect("http server");
+        wait_healthy(http.addr(), Duration::from_secs(5)).expect("healthz");
+        FrontDoor { http, server, model: graph.name.clone(), image_elems }
+    }
+
+    fn client(&self) -> HttpClient {
+        HttpClient::connect(self.http.addr()).expect("connect")
+    }
+
+    fn rand_image(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut img = vec![0.0f32; self.image_elems];
+        rng.fill_uniform(&mut img, -1.0, 1.0);
+        img
+    }
+}
+
+fn class_of(body: &str) -> String {
+    parse(body)
+        .expect("error body is JSON")
+        .get("class")
+        .and_then(|c| c.as_str().map(str::to_string))
+        .expect("error body has a class")
+}
+
+/// The acceptance-criteria test: SqueezeNet served over a real TCP
+/// socket — JSON encode, lazy-scan admission, payload decode, dynamic
+/// batching, inference, JSON response — must produce logits
+/// **bit-identical** to [`NetPlan::forward_reference`] on the same
+/// images. The wire format (shortest-roundtrip f32) and the serving
+/// stack (replicated plans, batch grouping) are both lossless, so
+/// equality here is exact, not approximate.
+#[test]
+fn squeezenet_over_loopback_is_bit_identical_to_reference() {
+    let graph = network_graph(Network::SqueezeNet);
+    let fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let img0 = fd.rand_image(40);
+    let img1 = fd.rand_image(41);
+
+    // The oracle: the allocating reference forward at batch 1.
+    let p = NetPlanner::new(Box::new(CpuRefBackend::new()));
+    let mut plan = p.compile(&graph, 1).expect("compile reference");
+    let want0 = plan.forward_reference(p.backend(), &img0).expect("reference 0");
+    let want1 = plan.forward_reference(p.backend(), &img1).expect("reference 1");
+
+    // One batch-2 request over the socket carrying both images.
+    let mut payload = img0.clone();
+    payload.extend_from_slice(&img1);
+    let body = infer_body(&fd.model, 2, None, Some("itest"), &payload);
+    let mut c = fd.client();
+    let (status, resp) = c.post_json("/v1/infer", &body).expect("infer");
+    assert_eq!(status, 200, "infer failed: {resp}");
+    let rows = logits_of(&resp).expect("logits");
+    assert_eq!(rows.len(), 2);
+    for (got, want) in [(&rows[0], &want0), (&rows[1], &want1)] {
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "served logit {a} != reference {b} — the wire path must be lossless"
+            );
+        }
+    }
+    let m = fd.server.metrics();
+    assert_eq!(m.requests, 2, "two images served");
+    assert_eq!(m.expired + m.rejected, 0);
+}
+
+/// An already-elapsed deadline is refused with 504, counted `expired`,
+/// and never reaches a worker — the admission layer drops it before the
+/// payload is even decoded.
+#[test]
+fn dead_deadline_is_504_counted_expired_before_any_worker() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(&graph, &[1, 2, 4], None, None, HttpConfig::default());
+    let img = fd.rand_image(7);
+    let mut c = fd.client();
+
+    let body = infer_body(&fd.model, 1, Some(0), Some("t"), &img);
+    let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");
+    assert_eq!(status, 504, "zero deadline budget must be a gateway timeout");
+    assert_eq!(class_of(&resp), "expired");
+    let m = fd.server.metrics();
+    assert_eq!(m.expired, 1, "the drop must be counted as expired");
+    assert_eq!(m.requests, 0, "no worker may ever see a dead-on-arrival request");
+    assert_eq!(m.rejected, 0, "expired is its own class, not a rejection");
+
+    // A generous deadline on the same connection still completes.
+    let body = infer_body(&fd.model, 1, Some(30_000), Some("t"), &img);
+    let (status, _) = c.post_json("/v1/infer", &body).expect("exchange");
+    assert_eq!(status, 200);
+    assert_eq!(fd.server.metrics().requests, 1);
+}
+
+/// Per-tenant token buckets: an exhausted tenant gets 429 (`rejected`
+/// class) while other tenants sail through, and the refused request
+/// costs the pool nothing.
+#[test]
+fn rate_limited_tenant_gets_429_others_unaffected() {
+    let graph = tiny_graph();
+    // A bucket of exactly one token that refills slower than the test
+    // runs: the second request from the same tenant must be refused.
+    let limit = RateLimit::new(0.001, 1.0).unwrap();
+    let fd =
+        FrontDoor::start(&graph, &[1, 2], Some(limit), None, HttpConfig::default());
+    let img = fd.rand_image(8);
+    let mut c = fd.client();
+
+    let body_a = infer_body(&fd.model, 1, None, Some("team-a"), &img);
+    let (status, _) = c.post_json("/v1/infer", &body_a).expect("first");
+    assert_eq!(status, 200, "a fresh tenant's first request passes");
+    let (status, resp) = c.post_json("/v1/infer", &body_a).expect("second");
+    assert_eq!(status, 429, "the bucket is empty");
+    assert_eq!(class_of(&resp), "rejected");
+
+    let body_b = infer_body(&fd.model, 1, None, Some("team-b"), &img);
+    let (status, _) = c.post_json("/v1/infer", &body_b).expect("other tenant");
+    assert_eq!(status, 200, "tenant isolation: team-b has its own bucket");
+
+    let m = fd.server.metrics();
+    assert_eq!(m.requests, 2, "only admitted requests reach the pool");
+    assert_eq!(
+        m.rejected, 0,
+        "a rate-limit refusal happens above the dispatcher; the pool never \
+         counts it"
+    );
+}
+
+/// The observability endpoints: /healthz, /v1/models, /metrics (with
+/// SLO buckets), plus 404/405 for unknown routes and wrong methods.
+#[test]
+fn healthz_models_and_metrics_answer_over_one_connection() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let mut c = fd.client();
+
+    let (status, body) = c.get("/healthz").expect("healthz");
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+
+    let (status, body) = c.get("/v1/models").expect("models");
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    let models = v.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("name").unwrap().as_str().unwrap(), fd.model);
+    assert_eq!(
+        models[0].get("input_elems").unwrap().as_usize().unwrap(),
+        fd.image_elems
+    );
+
+    // Serve one request, then read it back out of /metrics.
+    let img = fd.rand_image(9);
+    let body = infer_body(&fd.model, 1, None, None, &img);
+    let (status, _) = c.post_json("/v1/infer", &body).expect("infer");
+    assert_eq!(status, 200);
+    let (status, body) = c.get("/metrics").expect("metrics");
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("expired").unwrap().as_usize().unwrap(), 0);
+    let slo = v.get("slo").unwrap().as_arr().unwrap();
+    assert_eq!(
+        slo.len(),
+        cuconv::coordinator::SLO_BOUNDS_SECONDS.len(),
+        "every SLO bound must be rendered"
+    );
+    let counts: Vec<usize> =
+        slo.iter().map(|b| b.get("count").unwrap().as_usize().unwrap()).collect();
+    assert!(counts.windows(2).all(|w| w[0] <= w[1]), "cumulative: {counts:?}");
+    assert_eq!(*counts.last().unwrap(), 1, "the served request is within 250ms");
+
+    let (status, resp) = c.get("/nope").expect("404");
+    assert_eq!(status, 404);
+    assert_eq!(class_of(&resp), "invalid");
+    let (status, _) = c.post_json("/healthz", "{}").expect("405");
+    assert_eq!(status, 405);
+}
+
+/// Malformed requests are answered 400/404 with a JSON error body — and
+/// the connection and server both survive to serve a valid request
+/// afterwards.
+#[test]
+fn malformed_requests_get_400s_and_never_wedge_the_server() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let img = fd.rand_image(10);
+    let mut c = fd.client();
+
+    let cases: Vec<(String, u16)> = vec![
+        // Garbage and truncated JSON.
+        ("THIS IS NOT JSON".to_string(), 400),
+        (r#"{"model": "tiny-net", "payload": [1, 2"#.to_string(), 400),
+        // Missing required fields.
+        (r#"{"payload": [1.0]}"#.to_string(), 400),
+        (format!(r#"{{"model": "{}"}}"#, fd.model), 400),
+        // Unknown model routes 404.
+        (infer_body("no-such-model", 1, None, None, &img), 404),
+        // Wrong payload size, zero batch, over-max batch.
+        (infer_body(&fd.model, 1, None, None, &img[..img.len() - 1]), 400),
+        (infer_body(&fd.model, 0, None, None, &img), 400),
+        (format!(
+            r#"{{"model": "{}", "batch": 99, "payload": [1.0]}}"#,
+            fd.model
+        ), 400),
+        // Non-numeric payload element.
+        (format!(
+            r#"{{"model": "{}", "payload": [1.0, "x"]}}"#,
+            fd.model
+        ), 400),
+    ];
+    for (body, want) in cases {
+        let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");
+        assert_eq!(status, want, "body {body:.60} → {resp}");
+        assert!(parse(&resp).is_ok(), "error bodies are JSON: {resp}");
+    }
+
+    // The same keep-alive connection still serves a valid request.
+    let body = infer_body(&fd.model, 1, None, None, &img);
+    let (status, _) = c.post_json("/v1/infer", &body).expect("valid after garbage");
+    assert_eq!(status, 200);
+    let m = fd.server.metrics();
+    assert_eq!(m.requests, 1, "only the valid request reached the pool");
+}
+
+/// Oversized bodies are refused with 413 before any buffering, and the
+/// server stays healthy for new connections.
+#[test]
+fn oversized_body_is_413_and_server_survives() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(
+        &graph,
+        &[1],
+        None,
+        None,
+        HttpConfig { max_body_bytes: 1024, ..HttpConfig::default() },
+    );
+    let img = fd.rand_image(11);
+    let body = infer_body(&fd.model, 1, None, None, &img); // > 1 KiB of text
+    assert!(body.len() > 1024, "test body must exceed the configured cap");
+    let mut c = fd.client();
+    let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");
+    assert_eq!(status, 413);
+    assert_eq!(class_of(&resp), "invalid");
+    // That connection is closed (framing was unrecoverable); a fresh
+    // one works — with a body under the cap.
+    let mut c2 = fd.client();
+    let (status, _) = c2.get("/healthz").expect("fresh connection");
+    assert_eq!(status, 200);
+}

@@ -126,20 +126,22 @@ def check_serve(path: str, doc: dict) -> None:
     points = non_empty_rows(path, doc, "points")
     offered = doc.get("requests_per_point")
     workers_seen = []
+    classes = ("completed", "rejected", "failed", "expired")
     for row in points:
         where = f"points[workers={row.get('workers')!r}]"
         for key in ("workers", "rps"):
             finite_positive(path, row, key, where)
-        for key in ("completed", "rejected", "failed"):
+        for key in classes:
             nonneg_count(path, row, key, where)
         if isinstance(offered, int) and all(
-            isinstance(row.get(k), int) for k in ("completed", "rejected", "failed")
+            isinstance(row.get(k), int) for k in classes
         ):
-            total = row["completed"] + row["rejected"] + row["failed"]
+            total = sum(row[k] for k in classes)
             if total != offered:
                 problem(
                     path,
-                    f"{where}: completed+rejected+failed = {total} != offered {offered}",
+                    f"{where}: completed+rejected+failed+expired = {total} "
+                    f"!= offered {offered}",
                 )
         if isinstance(row.get("completed"), int) and row.get("completed", 0) > 0:
             for key in ("p50_ms", "p99_ms"):
@@ -151,10 +153,84 @@ def check_serve(path: str, doc: dict) -> None:
         problem(path, "scaling curve lacks the 1-worker baseline point")
 
 
+def check_http(path: str, doc: dict) -> None:
+    offered = doc.get("requests_per_point")
+    classes = ("completed", "rejected", "failed", "expired")
+    points = non_empty_rows(path, doc, "points")
+    labels = [r.get("point") for r in points]
+    if len(set(labels)) != len(labels):
+        problem(path, f"duplicate point labels: {labels}")
+    any_expired = False
+    for row in points:
+        where = f"points[{row.get('point')!r}]"
+        if not row.get("point"):
+            problem(path, f"{where}: missing 'point' label")
+        finite_positive(path, row, "clients", where)
+        for key in classes:
+            nonneg_count(path, row, key, where)
+        if isinstance(offered, int) and all(
+            isinstance(row.get(k), int) for k in classes
+        ):
+            total = sum(row[k] for k in classes)
+            if total != offered:
+                problem(
+                    path,
+                    f"{where}: completed+rejected+failed+expired = {total} "
+                    f"!= offered {offered}",
+                )
+        if isinstance(row.get("expired"), int) and row["expired"] > 0:
+            any_expired = True
+        # Latency fields exist — finite and positive — exactly when
+        # something completed; a point with zero completions must not
+        # smuggle in a latency (there is nothing to measure).
+        if isinstance(row.get("completed"), int) and row["completed"] > 0:
+            for key in ("rps", "p50_ms", "p99_ms"):
+                finite_positive(path, row, key, where)
+        else:
+            for key in ("p50_ms", "p99_ms"):
+                if key in row:
+                    problem(
+                        path,
+                        f"{where}: '{key}' present with zero completed requests",
+                    )
+    if points and not any_expired:
+        problem(
+            path,
+            "no point exercised the expired path "
+            "(the dead-on-arrival point is part of the bench contract)",
+        )
+    # SLO attainment buckets: present, bounds strictly increasing,
+    # cumulative counts monotone non-decreasing.
+    slo = doc.get("slo")
+    if not isinstance(slo, list) or not slo:
+        problem(path, "'slo' buckets missing or empty")
+    else:
+        prev_le, prev_count = 0.0, -1
+        for i, b in enumerate(slo):
+            if not isinstance(b, dict):
+                problem(path, f"slo[{i}] is not an object")
+                continue
+            le, count = b.get("le_seconds"), b.get("count")
+            if not isinstance(le, (int, float)) or le <= prev_le:
+                problem(path, f"slo[{i}]: le_seconds {le!r} not strictly increasing")
+            else:
+                prev_le = float(le)
+            if not isinstance(count, int) or count < max(prev_count, 0):
+                problem(
+                    path,
+                    f"slo[{i}]: count {count!r} not a cumulative count",
+                )
+            else:
+                prev_count = count
+    for key in ("server_requests", "server_expired"):
+        nonneg_count(path, doc, key, "top level")
+
+
 CHECKERS = {
     "hotpath_micro": check_hotpath,
     "e2e_forward": check_e2e,
     "serve_scaling": check_serve,
+    "http_serving": check_http,
 }
 
 
