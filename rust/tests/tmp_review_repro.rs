@@ -1,0 +1,12 @@
+use cuconv::http::parser::{lazy_scan, span_str};
+
+#[test]
+fn span_str_out_of_bounds_on_number_at_eof() {
+    let body = br#"{"batch":1,"deadline_ms":1,"tenant":"t","payload":[],"model":1"#;
+    let spans = lazy_scan(body, &["model","batch","deadline_ms","tenant","payload"]).unwrap();
+    let m = spans[0].as_ref().unwrap().clone();
+    assert_eq!(m.end, body.len());
+    // This call panics with slice index out of range if the bug is real.
+    let r = span_str(body, &m);
+    println!("span_str -> {:?}", r);
+}
