@@ -187,7 +187,7 @@ fn main() -> anyhow::Result<()> {
         )?;
         wait_healthy(http.addr(), Duration::from_secs(5))?;
         let mut client = HttpClient::connect(http.addr())?;
-        let body = infer_body(&graph.name, 1, None, Some("quickstart"), &image);
+        let body = infer_body(&graph.name, 1, None, Some("quickstart"), None, &image);
         let (status, resp) = client.post_json("/v1/infer", &body)?;
         assert_eq!(status, 200, "infer over the wire: {resp}");
         let rows = logits_of(&resp)?;
@@ -199,6 +199,51 @@ fn main() -> anyhow::Result<()> {
             http.addr(),
             rows[0].len(),
             metrics.len(),
+        );
+    }
+
+    // 8) Fault tolerance: a supervised pool survives an injected worker
+    //    panic. A deterministic FaultPlan makes worker 0 panic on its
+    //    very first request; the shard supervisor requeues that shard's
+    //    queue onto its siblings, respawns a replica from the shared
+    //    plan, and a priority-tagged request stream completes with
+    //    nothing lost — the four-class accounting proves it.
+    {
+        use cuconv::coordinator::{
+            run_closed_loop_mixed, BatchPolicy, ConvBackendRunner, Fault,
+            FaultInjector, FaultPlan, PoolConfig, Priority, Server,
+        };
+
+        let runner = ConvBackendRunner::new(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(8, 1, 3, 4, 4),
+            None,
+            &[1, 2, 4],
+        )?;
+        let plan = FaultPlan::new(vec![Fault::Panic { worker: 0, request: 0 }]);
+        let server = Server::start_pool(
+            Box::new(FaultInjector::new(Box::new(runner), plan)),
+            BatchPolicy::default(),
+            PoolConfig::with_workers(2),
+        )?;
+        // Half the requests are tagged "batch" priority — the tag rides
+        // through dispatch, ordering, and the recovery path alike.
+        let report = run_closed_loop_mixed(&server.handle(), 16, 4, 7, None, 0.5);
+        let m = server.metrics();
+        assert_eq!(m.restarts, 1, "the panicked worker must be respawned");
+        assert_eq!(m.failed, 0, "its queue must be requeued, not failed");
+        assert_eq!(report.completed(), 16, "nothing may be lost to the panic");
+        assert_eq!(server.live_workers(), server.workers());
+        println!(
+            "fault tolerance: worker 0 panicked on its first request; the \
+             supervisor requeued + respawned in {:.2} ms — all {} requests \
+             completed ({} interactive / {} batch), pool back to {}/{} workers",
+            m.restart_max_seconds * 1e3,
+            report.completed(),
+            report.class(Priority::Interactive).completed,
+            report.class(Priority::Batch).completed,
+            server.live_workers(),
+            server.workers(),
         );
     }
 

@@ -1,0 +1,363 @@
+//! Bench: fault-tolerant serving under a deterministic fault campaign —
+//! the chaos contract, measured.
+//!
+//! Three scenarios, each against a fresh shard pool over the cpuref
+//! conv runner, driven closed-loop with a mixed Interactive/Batch
+//! population ([`run_closed_loop_mixed`]):
+//!
+//! 1. **panic-recovery** — a supervised 3-worker pool with an injected
+//!    panic on worker 0 and a stall on worker 1 ([`FaultInjector`]).
+//!    Asserts the panicked shard's queue is requeued (zero `failed`),
+//!    exactly one respawn happened, the pool is back to full strength,
+//!    and — the headline — **zero requests lost** per priority class:
+//!    the client-side offered count equals the server's four-way
+//!    accounting (`completed + rejected + failed + expired`) exactly.
+//! 2. **stall-deadline** — a 150 ms stall on one of two round-robin
+//!    shards with a 60 ms client deadline: requests queued behind the
+//!    stall must surface as `expired`, never hang and never be lost.
+//! 3. **overload-brownout** — one worker, a 4-slot queue, and a 0.5
+//!    brown-out threshold, swept over client counts. Batch requests
+//!    are shed first (the shed curve lands in the report); Interactive
+//!    keeps completing under overload.
+//!
+//! After scenario 1 the recovered pool answers a seeded probe set and
+//! the logits are compared bit-for-bit against a fresh unfaulted
+//! single-worker pool — recovery must not perturb numerics.
+//!
+//! Results land in `BENCH_chaos.json` at the repository root
+//! (validated in CI by `tools/check_bench.py`). Environment knobs:
+//! `CUCONV_BENCH_CHAOS_REQUESTS` (default 64 per scenario, floor 32 so
+//! every planned fault fires).
+
+use std::time::Duration;
+
+use cuconv::backend::CpuRefBackend;
+use cuconv::coordinator::{
+    run_closed_loop_mixed, BatchPolicy, ClassReport, ConvBackendRunner, Fault,
+    FaultInjector, FaultPlan, MetricsSnapshot, PoolConfig, Priority, Server,
+    ShardSelection,
+};
+use cuconv::conv::ConvSpec;
+use cuconv::util::json::Json;
+use cuconv::util::rng::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The layer every scenario serves: small enough that a request is
+/// microseconds, so fault timing — not conv cost — dominates the run.
+fn bench_spec() -> ConvSpec {
+    ConvSpec::paper(8, 1, 3, 4, 4)
+}
+
+fn bench_runner() -> ConvBackendRunner {
+    ConvBackendRunner::new(Box::new(CpuRefBackend::new()), bench_spec(), None, &[1, 2, 4])
+        .expect("plan cpuref conv runner")
+}
+
+/// Per-class report rows plus the zero-lost check: for each priority
+/// class, the client-side offered count must equal the server's
+/// four-way sum. A dropped reply channel or a silently discarded queue
+/// would show up here as `lost != 0`.
+fn class_rows(scenario: &str, report: &ClassReport, m: &MetricsSnapshot) -> (Vec<Json>, i64) {
+    let mut rows = Vec::new();
+    let mut lost_total = 0i64;
+    for snap in &m.per_class {
+        let r = report.class(snap.priority);
+        let client_offered = r.offered() as i64;
+        let lost = client_offered - snap.offered() as i64;
+        assert_eq!(
+            lost, 0,
+            "{scenario}/{}: client offered {client_offered} but server accounted {} \
+             (completed {} rejected {} failed {} expired {})",
+            snap.priority, snap.offered(), snap.completed, snap.rejected, snap.failed,
+            snap.expired,
+        );
+        lost_total += lost;
+        rows.push(Json::obj(vec![
+            ("priority", Json::str(snap.priority.as_str())),
+            ("offered", Json::num(client_offered as f64)),
+            ("completed", Json::num(snap.completed as f64)),
+            ("rejected", Json::num(snap.rejected as f64)),
+            ("failed", Json::num(snap.failed as f64)),
+            ("expired", Json::num(snap.expired as f64)),
+            ("lost", Json::num(lost as f64)),
+        ]));
+    }
+    (rows, lost_total)
+}
+
+/// Scenario 1: panic mid-load on worker 0 plus a stall on worker 1.
+/// Returns the report row and the recovered pool (reused for the
+/// bit-identity probe).
+fn scenario_panic_recovery(requests: usize) -> (Json, Server) {
+    let plan = FaultPlan::new(vec![
+        Fault::Panic { worker: 0, request: 5 },
+        Fault::Stall { worker: 1, request: 3, millis: 120 },
+    ]);
+    let faulty = FaultInjector::new(Box::new(bench_runner()), plan);
+    let server = Server::start_pool(
+        Box::new(faulty),
+        BatchPolicy::default(),
+        PoolConfig::with_workers(3),
+    )
+    .expect("start supervised 3-worker pool");
+
+    let report =
+        run_closed_loop_mixed(&server.handle(), requests, 6, 0xC5A0_5EED, None, 0.4);
+    let m = server.metrics();
+
+    assert_eq!(m.restarts, 1, "one injected panic must mean exactly one respawn");
+    assert!(
+        m.restart_max_seconds.is_finite() && m.restart_max_seconds >= 0.0,
+        "recovery time must be a finite measurement, got {}",
+        m.restart_max_seconds
+    );
+    assert_eq!(
+        server.live_workers(),
+        server.workers(),
+        "the supervisor must restore the pool to full strength"
+    );
+    for p in Priority::ALL {
+        let r = report.class(p);
+        assert_eq!(r.failed, 0, "{p}: requeue-once must absorb the panic, not fail requests");
+        assert_eq!(r.rejected, 0, "{p}: nothing sheds with default capacity and no deadline");
+        assert_eq!(r.expired, 0, "{p}: no deadline was set");
+    }
+    assert_eq!(report.completed(), requests, "every offered request must complete");
+
+    let (classes, lost) = class_rows("panic-recovery", &report, &m);
+    let row = Json::obj(vec![
+        ("scenario", Json::str("panic-recovery")),
+        ("workers", Json::num(server.workers() as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("restarts", Json::num(m.restarts as f64)),
+        ("recovery_max_ms", Json::num(m.restart_max_seconds * 1e3)),
+        ("pool_restored", Json::Bool(server.live_workers() == server.workers())),
+        ("lost", Json::num(lost as f64)),
+        ("classes", Json::arr(classes)),
+    ]);
+    (row, server)
+}
+
+/// Scenario 2: a 150 ms stall on one of two round-robin shards with a
+/// 60 ms client deadline — requests queued behind the stall must come
+/// back as `expired`, and a stall must not be treated as a crash.
+fn scenario_stall_deadline(requests: usize) -> Json {
+    let plan =
+        FaultPlan::new(vec![Fault::Stall { worker: 0, request: 2, millis: 150 }]);
+    let faulty = FaultInjector::new(Box::new(bench_runner()), plan);
+    let mut server = Server::start_pool(
+        Box::new(faulty),
+        BatchPolicy::default(),
+        PoolConfig {
+            workers: 2,
+            selection: ShardSelection::RoundRobin,
+            ..PoolConfig::default()
+        },
+    )
+    .expect("start supervised 2-worker pool");
+
+    let report = run_closed_loop_mixed(
+        &server.handle(),
+        requests,
+        8,
+        0x57A1_1ED5,
+        Some(Duration::from_millis(60)),
+        0.5,
+    );
+    let m = server.metrics();
+
+    assert_eq!(m.restarts, 0, "a stall is a slow worker, not a crash: no respawn");
+    assert_eq!(server.live_workers(), server.workers());
+    let mut expired_total = 0usize;
+    for p in Priority::ALL {
+        let r = report.class(p);
+        assert_eq!(r.failed, 0, "{p}: a stall must never fail requests");
+        expired_total += r.expired;
+    }
+    assert!(
+        expired_total > 0,
+        "requests queued behind the 150 ms stall must expire against the 60 ms deadline"
+    );
+    assert!(report.completed() > 0, "the unstalled shard must keep completing");
+
+    let (classes, lost) = class_rows("stall-deadline", &report, &m);
+    let row = Json::obj(vec![
+        ("scenario", Json::str("stall-deadline")),
+        ("workers", Json::num(server.workers() as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("restarts", Json::num(m.restarts as f64)),
+        ("recovery_max_ms", Json::num(m.restart_max_seconds * 1e3)),
+        ("pool_restored", Json::Bool(server.live_workers() == server.workers())),
+        ("lost", Json::num(lost as f64)),
+        ("classes", Json::arr(classes)),
+    ]);
+    server.shutdown();
+    row
+}
+
+/// Scenario 3: one worker, a 4-slot queue, brown-out at 0.5 — sweep
+/// client counts and record the per-class shed curve. Batch sheds
+/// first (at half the queue depth that rejects Interactive), so under
+/// overload the Batch rejected fraction dominates while Interactive
+/// keeps completing.
+fn scenario_brownout(requests: usize) -> Json {
+    let clients_sweep = [2usize, 6, 12];
+    let mut curve = Vec::new();
+    let mut final_rows: Vec<Json> = Vec::new();
+    let mut final_lost = 0i64;
+    let mut final_workers = 1usize;
+
+    for (i, &clients) in clients_sweep.iter().enumerate() {
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_micros(500),
+            queue_capacity: 4,
+        };
+        let mut server = Server::start_pool(
+            Box::new(bench_runner()),
+            policy,
+            PoolConfig { workers: 1, brownout: Some(0.5), ..PoolConfig::default() },
+        )
+        .expect("start brown-out pool");
+
+        let report = run_closed_loop_mixed(
+            &server.handle(),
+            requests,
+            clients,
+            0xB10C_0DE ^ i as u64,
+            None,
+            0.5,
+        );
+        let m = server.metrics();
+
+        for p in Priority::ALL {
+            assert_eq!(report.class(p).failed, 0, "{p}: overload sheds, it never fails");
+        }
+        let (rows, lost) = class_rows("overload-brownout", &report, &m);
+
+        let int = report.class(Priority::Interactive);
+        let bat = report.class(Priority::Batch);
+        let frac = |r: &cuconv::coordinator::LoadReport| {
+            if r.offered() == 0 {
+                0.0
+            } else {
+                r.rejected as f64 / r.offered() as f64
+            }
+        };
+        if clients == 2 {
+            assert_eq!(
+                int.rejected, 0,
+                "2 clients can never fill the 4-slot queue: Interactive must not shed"
+            );
+        }
+        if clients == *clients_sweep.last().unwrap() {
+            assert!(bat.rejected > 0, "overload must shed Batch via the brown-out");
+            assert!(int.completed > 0, "Interactive must keep completing under overload");
+            assert!(
+                frac(bat) + 0.05 >= frac(int),
+                "Batch must shed at least as hard as Interactive: batch {:.3} vs interactive {:.3}",
+                frac(bat),
+                frac(int)
+            );
+            final_rows = rows;
+            final_lost = lost;
+            final_workers = server.workers();
+        }
+
+        curve.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            ("interactive_offered", Json::num(int.offered() as f64)),
+            ("interactive_rejected", Json::num(int.rejected as f64)),
+            ("interactive_rejected_frac", Json::num(frac(int))),
+            ("batch_offered", Json::num(bat.offered() as f64)),
+            ("batch_rejected", Json::num(bat.rejected as f64)),
+            ("batch_rejected_frac", Json::num(frac(bat))),
+        ]));
+        server.shutdown();
+    }
+
+    Json::obj(vec![
+        ("scenario", Json::str("overload-brownout")),
+        ("workers", Json::num(final_workers as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("restarts", Json::num(0.0)),
+        ("recovery_max_ms", Json::num(0.0)),
+        ("pool_restored", Json::Bool(true)),
+        ("lost", Json::num(final_lost as f64)),
+        ("classes", Json::arr(final_rows)),
+        ("shed_curve", Json::arr(curve)),
+    ])
+}
+
+/// Post-recovery numerics: the recovered 3-worker pool must answer a
+/// seeded probe set bit-identically to a fresh, never-faulted
+/// single-worker pool. Probes go one at a time so both pools serve at
+/// batch 1 and the comparison isolates recovery, not batching.
+fn assert_bit_identical(recovered: &Server) -> bool {
+    let mut reference = Server::start_conv(
+        Box::new(CpuRefBackend::new()),
+        bench_spec(),
+        None,
+        &[1, 2, 4],
+        BatchPolicy::default(),
+        PoolConfig::with_workers(1),
+    )
+    .expect("start unfaulted reference pool");
+
+    let elems = recovered.handle().image_elems();
+    let rh = recovered.handle();
+    let fh = reference.handle();
+    let mut rng = Rng::new(0xB17_D);
+    for i in 0..8 {
+        let mut img = vec![0.0f32; elems];
+        rng.fill_uniform(&mut img, -1.0, 1.0);
+        let a = rh.infer(img.clone()).expect("recovered pool serves the probe");
+        let b = fh.infer(img).expect("reference pool serves the probe");
+        let ab: Vec<u32> = a.logits.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.logits.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(
+            ab, bb,
+            "probe {i}: recovered pool diverged bitwise from the unfaulted reference"
+        );
+    }
+    reference.shutdown();
+    true
+}
+
+fn main() {
+    let requests = env_usize("CUCONV_BENCH_CHAOS_REQUESTS", 64).max(32);
+    println!("chaos_serving: {requests} requests per scenario, cpuref backend");
+
+    println!("chaos_serving: scenario panic-recovery (panic w0@5, stall w1@3)");
+    let (panic_row, mut recovered) = scenario_panic_recovery(requests);
+
+    println!("chaos_serving: probing recovered pool for bit-identity");
+    let bit_identical = assert_bit_identical(&recovered);
+    let pool_restored = recovered.live_workers() == recovered.workers();
+    recovered.shutdown();
+
+    println!("chaos_serving: scenario stall-deadline (stall w0@2, 60 ms deadline)");
+    let stall_row = scenario_stall_deadline(requests);
+
+    println!("chaos_serving: scenario overload-brownout (1 worker, 4-slot queue)");
+    let brownout_row = scenario_brownout(requests);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("chaos_serving")),
+        ("backend", Json::str("cpuref")),
+        ("requests", Json::num(requests as f64)),
+        ("post_recovery_bit_identical", Json::Bool(bit_identical)),
+        ("pool_restored", Json::Bool(pool_restored)),
+        ("scenarios", Json::arr(vec![panic_row, stall_row, brownout_row])),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chaos.json");
+    match std::fs::write(path, report.to_string_pretty() + "\n") {
+        Ok(()) => println!("chaos_serving: wrote {path}"),
+        Err(e) => panic!("chaos_serving: failed to write {path}: {e}"),
+    }
+    assert!(bit_identical && pool_restored);
+    println!("chaos_serving: chaos contract holds (zero lost, pool restored, bits identical)");
+}

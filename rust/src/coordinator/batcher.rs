@@ -8,6 +8,8 @@
 
 use std::time::Duration;
 
+use crate::coordinator::request::Priority;
+
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
@@ -28,6 +30,18 @@ impl Default for BatchPolicy {
             queue_capacity: 256,
         }
     }
+}
+
+/// Order a drained window so Interactive requests run before Batch
+/// ones: the greedy decomposition executes front-to-back, so the
+/// latency class lands in the first (largest) chunks and a Batch
+/// request never delays an Interactive one that shared its window. The
+/// sort is stable, so FIFO order is preserved *within* each class and
+/// the reordering is invisible to single-class traffic. Outputs are
+/// unaffected — plans are pinned per batch size, so grouping does not
+/// change any request's numerics.
+pub fn order_by_priority<T>(window: &mut [T], priority_of: impl Fn(&T) -> Priority) {
+    window.sort_by_key(|item| priority_of(item).index());
 }
 
 /// Greedily decompose `pending` requests onto the available executable
@@ -70,6 +84,35 @@ mod tests {
     #[test]
     fn works_with_batch1_only() {
         assert_eq!(decompose_batches(3, &[1]), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn priority_order_is_a_stable_partition() {
+        // (priority, arrival order) — Interactive must float to the
+        // front while each class keeps its own FIFO order.
+        let mut window = vec![
+            (Priority::Batch, 0),
+            (Priority::Interactive, 1),
+            (Priority::Batch, 2),
+            (Priority::Interactive, 3),
+            (Priority::Batch, 4),
+        ];
+        order_by_priority(&mut window, |&(p, _)| p);
+        let got: Vec<(Priority, i32)> = window;
+        assert_eq!(
+            got,
+            vec![
+                (Priority::Interactive, 1),
+                (Priority::Interactive, 3),
+                (Priority::Batch, 0),
+                (Priority::Batch, 2),
+                (Priority::Batch, 4),
+            ]
+        );
+        // Single-class windows are untouched.
+        let mut solo = vec![(Priority::Interactive, 9), (Priority::Interactive, 8)];
+        order_by_priority(&mut solo, |&(p, _)| p);
+        assert_eq!(solo, vec![(Priority::Interactive, 9), (Priority::Interactive, 8)]);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::ServeError;
+use crate::coordinator::request::{Priority, ServeError};
 use crate::coordinator::server::{ServerHandle, SubmitError};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -73,6 +73,59 @@ pub(crate) enum Outcome {
     Rejected,
     Failed,
     Expired,
+}
+
+/// A [`LoadReport`] per priority class — what the mixed-priority
+/// drivers produce. The four-way accounting invariant holds for each
+/// class independently: a shed Batch request can never hide in the
+/// Interactive ledger.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub interactive: LoadReport,
+    pub batch: LoadReport,
+}
+
+impl ClassReport {
+    /// The report for one class.
+    pub fn class(&self, p: Priority) -> &LoadReport {
+        match p {
+            Priority::Interactive => &self.interactive,
+            Priority::Batch => &self.batch,
+        }
+    }
+
+    /// Total requests offered across both classes.
+    pub fn offered(&self) -> usize {
+        self.interactive.offered() + self.batch.offered()
+    }
+
+    /// Total completed across both classes.
+    pub fn completed(&self) -> usize {
+        self.interactive.completed + self.batch.completed
+    }
+}
+
+/// Fold per-thread `(class, outcome)` lists into one report per class
+/// (both classes share the run's wall clock).
+pub(crate) fn fold_class_outcomes(
+    per_thread: Vec<Vec<(Priority, Outcome)>>,
+    wall: f64,
+    offered_rps: f64,
+) -> ClassReport {
+    let mut interactive = Vec::new();
+    let mut batch = Vec::new();
+    for outcomes in per_thread {
+        for (p, o) in outcomes {
+            match p {
+                Priority::Interactive => interactive.push(o),
+                Priority::Batch => batch.push(o),
+            }
+        }
+    }
+    ClassReport {
+        interactive: fold_outcomes(vec![interactive], wall, offered_rps),
+        batch: fold_outcomes(vec![batch], wall, offered_rps),
+    }
 }
 
 /// Exponential inter-arrival sample for a Poisson process at `rate`.
@@ -239,6 +292,62 @@ pub fn run_closed_loop_with_deadline(
     fold_outcomes(per_thread, wall, f64::NAN)
 }
 
+/// Closed-loop driver with a mixed priority population: each request
+/// is independently Batch with probability `batch_fraction` (seeded —
+/// the same arguments draw the same class sequence), submitted via
+/// [`ServerHandle::submit_prioritized`], and accounted in its class's
+/// [`LoadReport`]. This is the driver behind the brown-out shed
+/// curves: under overload the Batch report shows the rejections while
+/// the Interactive report keeps completing.
+pub fn run_closed_loop_mixed(
+    handle: &ServerHandle,
+    requests: usize,
+    threads: usize,
+    seed: u64,
+    deadline: Option<Duration>,
+    batch_fraction: f64,
+) -> ClassReport {
+    let threads = threads.max(1);
+    let elems = handle.image_elems();
+    let started = Instant::now();
+    let per_thread: Vec<Vec<(Priority, Outcome)>> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = handle.clone();
+                let n = per_thread_share(requests, threads, t);
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ t as u64);
+                    let mut outcomes = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let mut img = vec![0.0f32; elems];
+                        rng.fill_uniform(&mut img, -1.0, 1.0);
+                        let priority = if rng.next_f64() < batch_fraction {
+                            Priority::Batch
+                        } else {
+                            Priority::Interactive
+                        };
+                        let dl = deadline.map(|d| Instant::now() + d);
+                        let outcome = match h.submit_prioritized(img, dl, priority) {
+                            Ok(rx) => match rx.recv() {
+                                Ok(Ok(resp)) => Outcome::Completed(resp.total_seconds),
+                                Ok(Err(ServeError::Expired)) => Outcome::Expired,
+                                _ => Outcome::Failed,
+                            },
+                            Err(SubmitError::Expired) => Outcome::Expired,
+                            Err(_) => Outcome::Rejected,
+                        };
+                        outcomes.push((priority, outcome));
+                    }
+                    outcomes
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = started.elapsed().as_secs_f64();
+    fold_class_outcomes(per_thread, wall, f64::NAN)
+}
+
 /// [`run_closed_loop_with_deadline`] without deadlines — the common
 /// peak-throughput form.
 pub fn run_closed_loop(
@@ -346,6 +455,39 @@ mod tests {
         );
         assert_eq!(ok.completed, 8);
         assert_eq!(ok.expired, 0);
+    }
+
+    #[test]
+    fn mixed_priorities_account_per_class() {
+        use crate::backend::CpuRefBackend;
+        use crate::conv::ConvSpec;
+        use crate::coordinator::{BatchPolicy, PoolConfig, Server};
+
+        let server = Server::start_conv(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(8, 1, 3, 4, 4),
+            None,
+            &[1],
+            BatchPolicy::default(),
+            PoolConfig::default(),
+        )
+        .unwrap();
+        let report = run_closed_loop_mixed(&server.handle(), 24, 3, 11, None, 0.5);
+        assert_eq!(report.offered(), 24, "both classes together cover every request");
+        assert!(
+            report.interactive.offered() > 0 && report.batch.offered() > 0,
+            "a 50/50 draw over 24 requests should populate both classes"
+        );
+        // A healthy, uncontended pool completes everything in both
+        // classes — priority must not change outcomes, only ordering.
+        assert_eq!(report.completed(), 24);
+        assert_eq!(report.interactive.rejected + report.batch.rejected, 0);
+        let m = server.metrics();
+        for c in &m.per_class {
+            let r = report.class(c.priority);
+            assert_eq!(c.completed as usize, r.completed, "{} class", c.priority);
+            assert_eq!(c.offered() as usize, r.offered(), "{} class", c.priority);
+        }
     }
 
     #[test]

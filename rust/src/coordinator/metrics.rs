@@ -4,6 +4,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::coordinator::request::{Priority, PRIORITY_COUNT};
 use crate::util::stats::LatencyHistogram;
 
 /// End-to-end latency thresholds (seconds) the SLO attainment view is
@@ -24,9 +25,36 @@ pub struct SloBucket {
     pub count: u64,
 }
 
+/// Per-priority-class four-way counts: together with the submissions a
+/// class offered, `completed + rejected + failed + expired == offered`
+/// must hold for each class on its own.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassSnapshot {
+    pub priority: Priority,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub expired: u64,
+}
+
+impl ClassSnapshot {
+    /// Total submissions this class accounts for.
+    pub fn offered(&self) -> u64 {
+        self.completed + self.rejected + self.failed + self.expired
+    }
+}
+
 /// Shared, thread-safe metrics sink.
 pub struct Metrics {
     inner: Mutex<Inner>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct ClassTotals {
+    completed: u64,
+    rejected: u64,
+    failed: u64,
+    expired: u64,
 }
 
 struct Inner {
@@ -34,11 +62,21 @@ struct Inner {
     queue: LatencyHistogram,
     exec: LatencyHistogram,
     total: LatencyHistogram,
-    requests: u64,
     batches: u64,
-    rejected: u64,
-    expired: u64,
     batch_size_sum: u64,
+    /// Four-way counts per priority class; the aggregate `requests`,
+    /// `rejected`, `failed`, `expired` of a snapshot are sums over
+    /// these, so the per-class and aggregate views cannot drift apart.
+    classes: [ClassTotals; PRIORITY_COUNT],
+    restarts: u64,
+    restart_seconds_sum: f64,
+    restart_seconds_max: f64,
+}
+
+impl Inner {
+    fn class_sum(&self, pick: impl Fn(&ClassTotals) -> u64) -> u64 {
+        self.classes.iter().map(pick).sum()
+    }
 }
 
 /// A point-in-time copy for reporting.
@@ -53,6 +91,18 @@ pub struct MetricsSnapshot {
     /// but expired before execution). Never folded into `rejected` or
     /// counted as served.
     pub expired: u64,
+    /// Admitted requests the pool answered with an execution error —
+    /// a runner `Err`, or a request a panicked worker could not place
+    /// anywhere after its one requeue. Never silently dropped.
+    pub failed: u64,
+    /// Worker respawns performed by shard supervisors after a panic.
+    pub restarts: u64,
+    /// Slowest single recovery (panic caught → replacement runner
+    /// serving), seconds. Zero when `restarts` is zero.
+    pub restart_max_seconds: f64,
+    /// Four-way counts split by [`Priority`], in [`Priority::ALL`]
+    /// order. Sums to the aggregate counters above.
+    pub per_class: Vec<ClassSnapshot>,
     pub mean_batch_size: f64,
     pub throughput_rps: f64,
     pub queue_p50: f64,
@@ -81,22 +131,28 @@ impl Metrics {
                 queue: LatencyHistogram::standard(),
                 exec: LatencyHistogram::standard(),
                 total: LatencyHistogram::standard(),
-                requests: 0,
                 batches: 0,
-                rejected: 0,
-                expired: 0,
                 batch_size_sum: 0,
+                classes: [ClassTotals::default(); PRIORITY_COUNT],
+                restarts: 0,
+                restart_seconds_sum: 0.0,
+                restart_seconds_max: 0.0,
             }),
         }
     }
 
-    /// Record one served request.
+    /// Record one served request in the default (Interactive) class.
     pub fn record_request(&self, queue_s: f64, exec_s: f64, total_s: f64) {
+        self.record_request_for(Priority::Interactive, queue_s, exec_s, total_s);
+    }
+
+    /// Record one served request in `priority`'s class.
+    pub fn record_request_for(&self, priority: Priority, queue_s: f64, exec_s: f64, total_s: f64) {
         let mut m = self.inner.lock().unwrap();
         m.queue.record(queue_s);
         m.exec.record(exec_s);
         m.total.record(total_s);
-        m.requests += 1;
+        m.classes[priority.index()].completed += 1;
     }
 
     /// Record one executed batch.
@@ -108,27 +164,61 @@ impl Metrics {
 
     /// Record a rejected (backpressured) submission.
     pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.add_rejected_for(Priority::Interactive, 1);
     }
 
     /// Add `n` rejected submissions at once (the pool dispatcher keeps
-    /// its rejection count in an atomic and folds it in at snapshot
+    /// its rejection counts in atomics and folds them in at snapshot
     /// time).
     pub fn add_rejected(&self, n: u64) {
-        self.inner.lock().unwrap().rejected += n;
+        self.add_rejected_for(Priority::Interactive, n);
+    }
+
+    /// Per-class form of [`Metrics::add_rejected`]; brown-out sheds land
+    /// here under [`Priority::Batch`].
+    pub fn add_rejected_for(&self, priority: Priority, n: u64) {
+        self.inner.lock().unwrap().classes[priority.index()].rejected += n;
     }
 
     /// Record a request dropped because its deadline had passed (a
     /// worker found it expired in the queue).
     pub fn record_expired(&self) {
-        self.inner.lock().unwrap().expired += 1;
+        self.add_expired_for(Priority::Interactive, 1);
+    }
+
+    /// Per-class form of [`Metrics::record_expired`].
+    pub fn record_expired_for(&self, priority: Priority) {
+        self.add_expired_for(priority, 1);
     }
 
     /// Add `n` expired drops at once (the dispatcher and the HTTP
     /// admission layer keep their pre-dispatch expiry counts in atomics
     /// and fold them in at snapshot time).
     pub fn add_expired(&self, n: u64) {
-        self.inner.lock().unwrap().expired += n;
+        self.add_expired_for(Priority::Interactive, n);
+    }
+
+    /// Per-class form of [`Metrics::add_expired`].
+    pub fn add_expired_for(&self, priority: Priority, n: u64) {
+        self.inner.lock().unwrap().classes[priority.index()].expired += n;
+    }
+
+    /// Record an admitted request that produced an execution error
+    /// instead of a response (runner `Err`, or a panicked worker's
+    /// request that could not be requeued). The fourth accounting class.
+    pub fn record_failed_for(&self, priority: Priority) {
+        self.inner.lock().unwrap().classes[priority.index()].failed += 1;
+    }
+
+    /// Record one supervised worker respawn and how long the recovery
+    /// took (panic caught → replacement runner installed).
+    pub fn record_restart(&self, recovery_seconds: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.restarts += 1;
+        m.restart_seconds_sum += recovery_seconds;
+        if recovery_seconds > m.restart_seconds_max {
+            m.restart_seconds_max = recovery_seconds;
+        }
     }
 
     /// Fold another sink's counts into this one: histograms merge
@@ -146,11 +236,19 @@ impl Metrics {
         m.queue.merge(&o.queue);
         m.exec.merge(&o.exec);
         m.total.merge(&o.total);
-        m.requests += o.requests;
         m.batches += o.batches;
-        m.rejected += o.rejected;
-        m.expired += o.expired;
         m.batch_size_sum += o.batch_size_sum;
+        for (mine, theirs) in m.classes.iter_mut().zip(o.classes.iter()) {
+            mine.completed += theirs.completed;
+            mine.rejected += theirs.rejected;
+            mine.failed += theirs.failed;
+            mine.expired += theirs.expired;
+        }
+        m.restarts += o.restarts;
+        m.restart_seconds_sum += o.restart_seconds_sum;
+        if o.restart_seconds_max > m.restart_seconds_max {
+            m.restart_seconds_max = o.restart_seconds_max;
+        }
         if o.started < m.started {
             m.started = o.started;
         }
@@ -159,18 +257,35 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let uptime = m.started.elapsed().as_secs_f64();
+        let requests = m.class_sum(|c| c.completed);
         MetricsSnapshot {
             uptime_seconds: uptime,
-            requests: m.requests,
+            requests,
             batches: m.batches,
-            rejected: m.rejected,
-            expired: m.expired,
+            rejected: m.class_sum(|c| c.rejected),
+            expired: m.class_sum(|c| c.expired),
+            failed: m.class_sum(|c| c.failed),
+            restarts: m.restarts,
+            restart_max_seconds: m.restart_seconds_max,
+            per_class: Priority::ALL
+                .iter()
+                .map(|&p| {
+                    let c = &m.classes[p.index()];
+                    ClassSnapshot {
+                        priority: p,
+                        completed: c.completed,
+                        rejected: c.rejected,
+                        failed: c.failed,
+                        expired: c.expired,
+                    }
+                })
+                .collect(),
             mean_batch_size: if m.batches > 0 {
                 m.batch_size_sum as f64 / m.batches as f64
             } else {
                 0.0
             },
-            throughput_rps: if uptime > 0.0 { m.requests as f64 / uptime } else { 0.0 },
+            throughput_rps: if uptime > 0.0 { requests as f64 / uptime } else { 0.0 },
             queue_p50: m.queue.quantile_upper_bound(0.50),
             queue_p99: m.queue.quantile_upper_bound(0.99),
             exec_p50: m.exec.quantile_upper_bound(0.50),
@@ -286,5 +401,66 @@ mod tests {
         assert_eq!(a.snapshot().requests, 4);
         assert_eq!(b.snapshot().rejected, 1);
         assert_eq!(b.snapshot().expired, 1);
+    }
+
+    #[test]
+    fn per_class_counts_split_and_sum_to_aggregate() {
+        let m = Metrics::new();
+        m.record_request_for(Priority::Interactive, 1e-4, 1e-3, 1.1e-3);
+        m.record_request_for(Priority::Interactive, 1e-4, 1e-3, 1.1e-3);
+        m.record_request_for(Priority::Batch, 1e-4, 1e-3, 1.1e-3);
+        m.add_rejected_for(Priority::Batch, 3);
+        m.record_expired_for(Priority::Interactive);
+        m.record_failed_for(Priority::Batch);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.failed, 1);
+        let [i, b] = [s.per_class[0], s.per_class[1]];
+        assert_eq!(i.priority, Priority::Interactive);
+        assert_eq!(b.priority, Priority::Batch);
+        assert_eq!((i.completed, i.rejected, i.failed, i.expired), (2, 0, 0, 1));
+        assert_eq!((b.completed, b.rejected, b.failed, b.expired), (1, 3, 1, 0));
+        assert_eq!(i.offered(), 3);
+        assert_eq!(b.offered(), 5);
+        // Aggregate view is exactly the class sum — they cannot drift.
+        assert_eq!(s.requests + s.rejected + s.failed + s.expired, i.offered() + b.offered());
+    }
+
+    #[test]
+    fn restarts_absorb_with_max_recovery() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_restart(0.002);
+        b.record_restart(0.010);
+        b.record_restart(0.001);
+        let agg = Metrics::new();
+        agg.absorb(&a);
+        agg.absorb(&b);
+        let s = agg.snapshot();
+        assert_eq!(s.restarts, 3);
+        assert!((s.restart_max_seconds - 0.010).abs() < 1e-12);
+        let fresh = Metrics::new().snapshot();
+        assert_eq!(fresh.restarts, 0);
+        assert_eq!(fresh.restart_max_seconds, 0.0);
+        assert_eq!(fresh.failed, 0);
+        assert_eq!(fresh.per_class.len(), PRIORITY_COUNT);
+    }
+
+    #[test]
+    fn legacy_aggregate_recorders_land_in_interactive() {
+        // The priority-blind entry points (used by single-class callers
+        // and pre-existing tests) must keep feeding the aggregate view
+        // via the Interactive class.
+        let m = Metrics::new();
+        m.record_request(1e-4, 1e-3, 1.1e-3);
+        m.record_rejected();
+        m.record_expired();
+        let s = m.snapshot();
+        assert_eq!(s.per_class[0].completed, 1);
+        assert_eq!(s.per_class[0].rejected, 1);
+        assert_eq!(s.per_class[0].expired, 1);
+        assert_eq!(s.per_class[1].offered(), 0);
     }
 }

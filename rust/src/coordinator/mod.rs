@@ -22,12 +22,19 @@
 //!   dispatcher admits each request to a bounded per-shard queue
 //!   (round-robin or least-loaded, rejecting only when every queue is
 //!   full, dropping already-expired deadlines before any queue sees
-//!   them), and each worker thread drains its queue → sheds expired
-//!   requests → forms batches →
-//!   runs them on its replicated runner → scatters replies. Replicas
-//!   share weights/algorithm choices (`Arc`) and own their mutable
-//!   buffers, so N workers serve concurrently with outputs
-//!   bit-identical to one.
+//!   them, shedding Batch-priority work under brown-out), and each
+//!   worker thread drains its queue → sheds expired requests → orders
+//!   Interactive before Batch → forms batches → runs them on its
+//!   replicated runner → scatters replies. Replicas share
+//!   weights/algorithm choices (`Arc`) and own their mutable buffers,
+//!   so N workers serve concurrently with outputs bit-identical to
+//!   one. Each shard runs under a panic supervisor that requeues its
+//!   unanswered requests (once) and respawns the worker from a
+//!   retained prototype.
+//! * [`supervise`] — deterministic fault injection: a seeded
+//!   [`FaultPlan`] carried by a [`FaultInjector`] runner wrapper makes
+//!   worker N panic or stall on request K, so the supervision layer is
+//!   testable (and benchmarkable) without real hardware misbehavior.
 //!
 //! The per-layer algorithm choice (the paper's §4.1 deployment story:
 //! "frameworks automatically select the best-performing convolution
@@ -41,19 +48,26 @@ pub mod plan;
 pub mod request;
 pub mod runner;
 pub mod server;
+pub mod supervise;
 
-pub use batcher::{decompose_batches, BatchPolicy};
+pub use batcher::{decompose_batches, order_by_priority, BatchPolicy};
 pub use loadgen::{
-    run_closed_loop, run_closed_loop_with_deadline, run_open_loop, LoadReport,
-    LoadSpec,
+    run_closed_loop, run_closed_loop_mixed, run_closed_loop_with_deadline,
+    run_open_loop, ClassReport, LoadReport, LoadSpec,
 };
-pub use metrics::{Metrics, MetricsSnapshot, SloBucket, SLO_BOUNDS_SECONDS};
+pub use metrics::{
+    ClassSnapshot, Metrics, MetricsSnapshot, SloBucket, SLO_BOUNDS_SECONDS,
+};
 pub use plan::{plan_network, plan_network_measured, LayerPlan, NetworkPlan};
-pub use request::{InferRequest, InferResponse, RequestId, ServeError};
+pub use request::{
+    InferRequest, InferResponse, Priority, RequestId, ServeError, PRIORITY_COUNT,
+};
 pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner, NetForwardRunner};
 pub use server::{
     PoolConfig, Server, ServerConfig, ServerHandle, ShardSelection, SubmitError,
+    DEFAULT_BROWNOUT,
 };
+pub use supervise::{Fault, FaultInjector, FaultPlan};
 
 #[cfg(feature = "pjrt")]
 pub use runner::{PjrtModelRunner, ADAPTIVE_SLACK};

@@ -6,12 +6,69 @@ use std::time::Instant;
 /// Monotonic request identifier.
 pub type RequestId = u64;
 
+/// Scheduling class of a request. Interactive traffic is the latency
+/// product; batch traffic is throughput filler that tolerates delay.
+/// Under overload the pool sheds Batch first (brown-out) so a saturated
+/// queue degrades the cheap class before it touches the expensive one.
+/// The four-way accounting (`completed + rejected + failed + expired ==
+/// offered`) holds per class, not just in aggregate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+/// Number of priority classes (sizes the per-class counter arrays).
+pub const PRIORITY_COUNT: usize = 2;
+
+impl Priority {
+    /// Both classes, in counter-array index order.
+    pub const ALL: [Priority; PRIORITY_COUNT] = [Priority::Interactive, Priority::Batch];
+
+    /// Stable index into per-class counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    /// Wire name (the HTTP `"priority"` field value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire name. Unknown values are an error (a typo must not
+    /// silently land in the default class).
+    pub fn parse(s: &str) -> Result<Priority, String> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(format!(
+                "unknown priority {other:?} (expected \"interactive\" or \"batch\")"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// One inference request: a single image in NCHW layout (C=3, H=W=32
 /// for MiniSqueezeNet), flattened.
 #[derive(Debug)]
 pub struct InferRequest {
     pub id: RequestId,
     pub pixels: Vec<f32>,
+    /// Scheduling class; see [`Priority`].
+    pub priority: Priority,
     pub enqueued: Instant,
     /// Client latency budget: after this instant the answer is useless
     /// to the caller. The dispatcher drops an already-expired request
@@ -88,6 +145,18 @@ mod tests {
             batch_size: 1,
         };
         assert_eq!(r.predicted_class(), 1);
+    }
+
+    #[test]
+    fn priority_roundtrips_and_rejects_typos() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()), Ok(p));
+        }
+        assert_eq!(Priority::ALL[Priority::Interactive.index()], Priority::Interactive);
+        assert_eq!(Priority::ALL[Priority::Batch.index()], Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert!(Priority::parse("Batch").is_err(), "wire names are lowercase");
+        assert!(Priority::parse("urgent").is_err());
     }
 
     #[test]

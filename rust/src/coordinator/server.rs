@@ -6,43 +6,69 @@
 //! module generalizes it to N workers for multi-core serving:
 //!
 //! * **Replication** — the pool is built from one runner plus
-//!   `workers - 1` calls to [`BatchRunner::replicate`]: weights,
-//!   algorithm choices and the backend are shared (`Arc`), every
-//!   mutable buffer (arena, workspace, output tensors) is per-worker,
-//!   so shards serve concurrently with zero steady-state allocation and
-//!   outputs bit-identical to the single-worker path.
+//!   [`BatchRunner::replicate`] calls: weights, algorithm choices and
+//!   the backend are shared (`Arc`), every mutable buffer (arena,
+//!   workspace, output tensors) is per-worker, so shards serve
+//!   concurrently with zero steady-state allocation and outputs
+//!   bit-identical to the single-worker path.
 //! * **Bounded admission** — every shard has its own bounded queue.
 //!   [`ServerHandle::submit_request`] picks a preferred shard
 //!   ([`ShardSelection`]: round-robin or least-loaded by in-flight
 //!   count), then sweeps the remaining shards before rejecting — a
-//!   request is refused only when *every* queue is full, so the pool
-//!   backpressures instead of growing memory without bound.
+//!   request is refused only when *every* live queue is full, so the
+//!   pool backpressures instead of growing memory without bound. A
+//!   dead shard (disconnected queue) is skipped, not treated as pool
+//!   shutdown.
 //! * **Deadlines** — a request may carry a client deadline. One that
 //!   has already expired is dropped *at the dispatcher*, before any
 //!   queue sees it; one that expires while queued is dropped by its
 //!   worker before execution. Both are counted as `expired` — a class
 //!   of its own, never folded into `rejected` (backpressure) or
 //!   `failed` (execution error).
+//! * **Priorities and brown-out** — every request carries a
+//!   [`Priority`]. Under overload the dispatcher sheds
+//!   [`Priority::Batch`] submissions once the aggregate in-flight
+//!   count crosses [`PoolConfig::brownout`] × total queue capacity
+//!   (counted `rejected` in the Batch class), so Interactive traffic
+//!   keeps the remaining headroom. Within a worker's window,
+//!   Interactive requests execute before Batch ones
+//!   ([`order_by_priority`]). The four-way accounting
+//!   (`completed + rejected + failed + expired == offered`) holds
+//!   **per class**.
+//! * **Supervision** — with [`PoolConfig::supervise`] (the default),
+//!   each shard's serve loop runs under `catch_unwind`. The loop's
+//!   request window lives *outside* the unwind boundary and a request
+//!   leaves it only by being answered, so after a panic the supervisor
+//!   still owns every unanswered request: it drains them (window +
+//!   queue) back through the dispatcher's shards — **requeue-once**;
+//!   a request that already survived one panic is answered `failed`
+//!   instead of risking a panic loop — then respawns the worker by
+//!   replicating the retained prototype (cheap: plans and weights are
+//!   `Arc`-shared) and records the restart in [`Metrics`]. A panic
+//!   never silently loses a request and never takes down the pool.
 //! * **Metrics** — each worker records into its own sink; the
 //!   aggregate view ([`ServerHandle::metrics`]) merges the per-worker
-//!   histograms and folds in the dispatcher's rejected and expired
-//!   counts. [`ServerHandle::worker_metrics`] exposes the per-shard
-//!   view.
+//!   histograms and folds in the dispatcher's per-class rejected and
+//!   expired counts. [`ServerHandle::worker_metrics`] exposes the
+//!   per-shard view, including restart counts.
 //!
 //! Whether a deployment serves artifacts, one conv layer, or a whole
 //! network is still a [`BatchRunner`] choice, not a different server.
 
 use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::coordinator::batcher::{decompose_batches, BatchPolicy};
+use crate::coordinator::batcher::{decompose_batches, order_by_priority, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::{InferRequest, InferResponse, ServeError};
+use crate::coordinator::request::{
+    InferRequest, InferResponse, Priority, ServeError, PRIORITY_COUNT,
+};
 use crate::coordinator::runner::BatchRunner;
 
 /// How the dispatcher picks a preferred shard for each submission.
@@ -55,8 +81,13 @@ pub enum ShardSelection {
     LeastLoaded,
 }
 
-/// Worker-pool shape: how many shards and how they are selected. The
-/// per-shard queue depth comes from [`BatchPolicy::queue_capacity`].
+/// Default brown-out threshold: shed Batch-priority submissions once
+/// aggregate in-flight reaches 75% of total queue capacity.
+pub const DEFAULT_BROWNOUT: f64 = 0.75;
+
+/// Worker-pool shape: how many shards, how they are selected, and how
+/// the pool degrades. The per-shard queue depth comes from
+/// [`BatchPolicy::queue_capacity`].
 #[derive(Debug, Clone, Copy)]
 pub struct PoolConfig {
     /// Worker threads, each with its own replicated runner (must be at
@@ -64,11 +95,29 @@ pub struct PoolConfig {
     /// [`BatchRunner::replicate`]).
     pub workers: usize,
     pub selection: ShardSelection,
+    /// Run each shard under a panic supervisor that requeues the
+    /// shard's unanswered requests and respawns the worker from a
+    /// retained prototype. Respawn requires [`BatchRunner::replicate`];
+    /// a supervised single-worker pool on a non-replicable runner still
+    /// requeues (to itself) but cannot respawn.
+    pub supervise: bool,
+    /// Brown-out threshold as a fraction of total queue capacity:
+    /// while aggregate in-flight ≥ `brownout × workers ×
+    /// queue_capacity`, Batch-priority submissions are shed (counted
+    /// `rejected` in the Batch class). `None` disables priority-aware
+    /// shedding — all classes then share the blanket
+    /// [`SubmitError::AllQueuesFull`] backpressure.
+    pub brownout: Option<f64>,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        PoolConfig { workers: 1, selection: ShardSelection::LeastLoaded }
+        PoolConfig {
+            workers: 1,
+            selection: ShardSelection::LeastLoaded,
+            supervise: true,
+            brownout: Some(DEFAULT_BROWNOUT),
+        }
     }
 }
 
@@ -93,7 +142,12 @@ pub enum SubmitError {
     /// Every bounded worker queue was full (backpressure); counted as
     /// `rejected`.
     AllQueuesFull { workers: usize, queue_depth: usize },
-    /// The pool has shut down.
+    /// A Batch-priority submission was shed because the pool is in
+    /// brown-out (aggregate in-flight over the threshold); counted as
+    /// `rejected` in the Batch class. Interactive submissions are
+    /// never shed this way.
+    Shed { depth: usize, capacity: usize },
+    /// The pool has shut down (every shard queue is disconnected).
     Shutdown,
 }
 
@@ -107,6 +161,11 @@ impl fmt::Display for SubmitError {
             SubmitError::AllQueuesFull { workers, queue_depth } => write!(
                 f,
                 "all {workers} worker queue(s) full ({queue_depth} deep each)"
+            ),
+            SubmitError::Shed { depth, capacity } => write!(
+                f,
+                "batch-priority request shed: pool browned out \
+                 ({depth}/{capacity} aggregate queue slots in flight)"
             ),
             SubmitError::Shutdown => write!(f, "server is shut down"),
         }
@@ -151,9 +210,14 @@ impl Default for ServerConfig {
 struct QueuedRequest {
     req: InferRequest,
     resp: mpsc::Sender<Result<InferResponse, ServeError>>,
+    /// Times a panicked shard has already requeued this request. The
+    /// requeue-once rule: at 1, the next panic answers `failed` instead
+    /// of requeueing again, bounding a poisoned request to two worker
+    /// crashes.
+    attempts: u8,
 }
 
-/// One worker shard as the dispatcher sees it.
+/// One worker shard as the dispatcher (and the supervisors) see it.
 struct Shard {
     tx: SyncSender<QueuedRequest>,
     metrics: Arc<Metrics>,
@@ -166,6 +230,9 @@ pub struct Server {
     handle: ServerHandle,
     workers: Vec<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
+    /// Worker threads whose join reported a panic (only possible
+    /// outside supervision — a supervised shard catches its panics).
+    panicked_joins: u64,
 }
 
 /// Cheap cloneable client handle; doubles as the dispatcher (shard
@@ -178,13 +245,18 @@ pub struct ServerHandle {
     /// Round-robin cursor (shared across handle clones so concurrent
     /// clients keep rotating instead of all starting at shard 0).
     rr: Arc<AtomicUsize>,
-    /// Submissions rejected because every shard queue was full.
-    rejected: Arc<AtomicU64>,
-    /// Submissions dropped before dispatch because the client deadline
-    /// had already passed (includes drops noted by admission layers via
-    /// [`ServerHandle::note_expired`]).
-    expired: Arc<AtomicU64>,
+    /// Per-class submissions rejected by the dispatcher (queue-full
+    /// backpressure, plus brown-out sheds in the Batch slot).
+    rejected: Arc<[AtomicU64; PRIORITY_COUNT]>,
+    /// Per-class submissions dropped before dispatch because the client
+    /// deadline had already passed (includes drops noted by admission
+    /// layers via [`ServerHandle::note_expired_for`]).
+    expired: Arc<[AtomicU64; PRIORITY_COUNT]>,
     next_id: Arc<AtomicU64>,
+    /// Shards currently able to serve (decremented when a worker dies
+    /// without a supervisor, or a supervisor cannot respawn).
+    live: Arc<AtomicUsize>,
+    brownout: Option<f64>,
     queue_depth: usize,
     image_elems: usize,
     classes: usize,
@@ -193,14 +265,22 @@ pub struct ServerHandle {
 impl Server {
     /// Start a sharded worker pool on an explicit runner (the general
     /// entry point; the convenience constructors below build the
-    /// runner). The runner becomes worker 0; workers `1..N` run
-    /// replicas from [`BatchRunner::replicate`].
+    /// runner). Workers run replicas from [`BatchRunner::replicate`];
+    /// under supervision (the default) the original runner is retained
+    /// as the respawn prototype, so a panicked shard can be rebuilt
+    /// from the same `Arc`-shared plans.
     pub fn start_pool(
         runner: Box<dyn BatchRunner>,
         policy: BatchPolicy,
         pool: PoolConfig,
     ) -> Result<Server> {
         ensure!(pool.workers >= 1, "pool needs at least one worker");
+        if let Some(frac) = pool.brownout {
+            ensure!(
+                frac.is_finite() && frac > 0.0,
+                "brown-out threshold must be a positive fraction, got {frac}"
+            );
+        }
         let sizes = runner.batch_sizes();
         if !sizes.contains(&1) {
             bail!("runner must support batch size 1 (got {sizes:?})");
@@ -208,47 +288,96 @@ impl Server {
         let image_elems = runner.item_in_elems();
         let classes = runner.item_out_elems();
 
-        // Replicate before spawning anything: a runner that cannot
-        // replicate fails the whole start, not worker 3 of 4.
-        let mut runners = Vec::with_capacity(pool.workers);
-        for _ in 1..pool.workers {
-            runners.push(runner.replicate()?);
-        }
-        runners.insert(0, runner);
+        // Build the per-worker runners before spawning anything: a
+        // runner that cannot replicate fails the whole start, not
+        // worker 3 of 4. Under supervision the original stays behind as
+        // the respawn prototype; a supervised single-worker pool on a
+        // non-replicable runner degrades to requeue-without-respawn.
+        let mut respawn_proto: Option<Mutex<Box<dyn BatchRunner>>> = None;
+        let runners: Vec<Box<dyn BatchRunner>> = if pool.supervise {
+            match runner.replicate() {
+                Ok(first) => {
+                    let mut v = Vec::with_capacity(pool.workers);
+                    v.push(first);
+                    for _ in 1..pool.workers {
+                        v.push(runner.replicate()?);
+                    }
+                    respawn_proto = Some(Mutex::new(runner));
+                    v
+                }
+                Err(_) if pool.workers == 1 => vec![runner],
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "a supervised pool of {} workers requires a replicable runner",
+                        pool.workers
+                    )))
+                }
+            }
+        } else {
+            let mut v = Vec::with_capacity(pool.workers);
+            for _ in 1..pool.workers {
+                v.push(runner.replicate()?);
+            }
+            v.insert(0, runner);
+            v
+        };
+        let respawn = Arc::new(respawn_proto);
 
+        // Channels and shard records first, threads second: supervisors
+        // need the complete shard table to redistribute a panicked
+        // shard's requests across the pool.
         let shutdown = Arc::new(AtomicBool::new(false));
-        let mut shards = Vec::with_capacity(pool.workers);
-        let mut workers = Vec::with_capacity(pool.workers);
-        for (i, r) in runners.into_iter().enumerate() {
-            let metrics = Arc::new(Metrics::new());
-            let inflight = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(pool.workers));
+        let mut shard_vec = Vec::with_capacity(pool.workers);
+        let mut rxs = Vec::with_capacity(pool.workers);
+        for _ in 0..pool.workers {
             let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(policy.queue_capacity);
-            let worker = {
-                let metrics = metrics.clone();
-                let inflight = inflight.clone();
+            shard_vec.push(Shard {
+                tx,
+                metrics: Arc::new(Metrics::new()),
+                inflight: Arc::new(AtomicUsize::new(0)),
+            });
+            rxs.push(rx);
+        }
+        let shards = Arc::new(shard_vec);
+
+        let mut workers = Vec::with_capacity(pool.workers);
+        for (i, (rx, r)) in rxs.into_iter().zip(runners).enumerate() {
+            let builder = std::thread::Builder::new().name(format!("cuconv-worker-{i}"));
+            let worker = if pool.supervise {
+                let shards = shards.clone();
                 let shutdown = shutdown.clone();
-                std::thread::Builder::new()
-                    .name(format!("cuconv-worker-{i}"))
-                    .spawn(move || {
-                        worker_loop(rx, r, classes, policy, metrics, inflight, shutdown)
-                    })?
+                let live = live.clone();
+                let respawn = respawn.clone();
+                builder.spawn(move || {
+                    supervise_shard(i, rx, r, classes, policy, shards, shutdown, live, respawn)
+                })?
+            } else {
+                let metrics = shards[i].metrics.clone();
+                let inflight = shards[i].inflight.clone();
+                let shutdown = shutdown.clone();
+                let live = live.clone();
+                builder.spawn(move || {
+                    unsupervised_shard(i, rx, r, classes, policy, metrics, inflight, shutdown, live)
+                })?
             };
-            shards.push(Shard { tx, metrics, inflight });
             workers.push(worker);
         }
 
         let handle = ServerHandle {
-            shards: Arc::new(shards),
+            shards,
             selection: pool.selection,
             rr: Arc::new(AtomicUsize::new(0)),
-            rejected: Arc::new(AtomicU64::new(0)),
-            expired: Arc::new(AtomicU64::new(0)),
+            rejected: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            expired: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
             next_id: Arc::new(AtomicU64::new(1)),
+            live,
+            brownout: pool.brownout,
             queue_depth: policy.queue_capacity,
             image_elems,
             classes,
         };
-        Ok(Server { handle, workers, shutdown })
+        Ok(Server { handle, workers, shutdown, panicked_joins: 0 })
     }
 
     /// Single-worker convenience form of [`Server::start_pool`].
@@ -326,12 +455,34 @@ impl Server {
         self.handle.workers()
     }
 
-    /// Stop every worker (pending queues are drained with errors).
+    /// Shards currently able to serve (equals [`Server::workers`] for a
+    /// healthy pool; lower when a shard died and could not respawn).
+    pub fn live_workers(&self) -> usize {
+        self.handle.live_workers()
+    }
+
+    /// Stop every worker (pending queues are drained with errors). A
+    /// join that reports a panicked thread is counted and logged —
+    /// never silently swallowed (see [`Server::panicked_joins`]).
     pub fn shutdown(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         for w in self.workers.drain(..) {
-            let _ = w.join();
+            if w.join().is_err() {
+                self.panicked_joins += 1;
+                eprintln!(
+                    "cuconv: worker thread terminated by panic \
+                     ({} panicked join(s) at shutdown)",
+                    self.panicked_joins
+                );
+            }
         }
+    }
+
+    /// Worker threads that had died panicked by the time they were
+    /// joined (nonzero only without supervision; a supervised shard
+    /// catches its panics and exits cleanly).
+    pub fn panicked_joins(&self) -> u64 {
+        self.panicked_joins
     }
 }
 
@@ -342,17 +493,31 @@ impl Drop for Server {
 }
 
 impl ServerHandle {
-    /// Submit one image with an optional client deadline; returns a
-    /// receiver for the reply. An already-expired deadline is dropped
-    /// here — before any worker queue sees it — and counted as
-    /// `expired`. Otherwise the preferred shard comes from the
-    /// selection policy; if its bounded queue is full the remaining
-    /// shards are tried in order, and the submission is rejected
-    /// (backpressure) only when every queue is full.
+    /// Submit one Interactive-priority image with an optional client
+    /// deadline (see [`ServerHandle::submit_prioritized`]).
     pub fn submit_request(
         &self,
         pixels: Vec<f32>,
         deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<InferResponse, ServeError>>, SubmitError> {
+        self.submit_prioritized(pixels, deadline, Priority::Interactive)
+    }
+
+    /// Submit one image with an optional client deadline and an
+    /// explicit priority class; returns a receiver for the reply. An
+    /// already-expired deadline is dropped here — before any worker
+    /// queue sees it — and counted as `expired` in the request's
+    /// class. A Batch submission is shed while the pool is in
+    /// brown-out. Otherwise the preferred shard comes from the
+    /// selection policy; if its bounded queue is full the remaining
+    /// shards are tried in order (a dead shard's disconnected queue is
+    /// skipped), and the submission is rejected (backpressure) only
+    /// when no live queue has room.
+    pub fn submit_prioritized(
+        &self,
+        pixels: Vec<f32>,
+        deadline: Option<Instant>,
+        priority: Priority,
     ) -> Result<Receiver<Result<InferResponse, ServeError>>, SubmitError> {
         if pixels.len() != self.image_elems {
             return Err(SubmitError::BadInput(format!(
@@ -366,15 +531,26 @@ impl ServerHandle {
         // single worker cycle.
         if let Some(d) = deadline {
             if Instant::now() >= d {
-                self.expired.fetch_add(1, Ordering::Relaxed);
+                self.expired[priority.index()].fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::Expired);
             }
+        }
+        // Brown-out: shed the Batch class while aggregate depth is over
+        // the threshold, so Interactive traffic keeps the remaining
+        // queue headroom instead of splitting it with deferrable work.
+        if priority == Priority::Batch && self.browned_out() {
+            self.rejected[priority.index()].fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Shed {
+                depth: self.aggregate_inflight(),
+                capacity: self.shards.len() * self.queue_depth,
+            });
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = mpsc::channel();
         let mut queued = QueuedRequest {
-            req: InferRequest { id, pixels, enqueued: Instant::now(), deadline },
+            req: InferRequest { id, pixels, priority, enqueued: Instant::now(), deadline },
             resp: resp_tx,
+            attempts: 0,
         };
         let n = self.shards.len();
         let preferred = match self.selection {
@@ -387,6 +563,7 @@ impl ServerHandle {
                 .map(|(i, _)| i)
                 .unwrap_or(0),
         };
+        let mut disconnected = 0;
         for k in 0..n {
             let shard = &self.shards[(preferred + k) % n];
             // Count the request in *before* the send: the worker only
@@ -401,13 +578,19 @@ impl ServerHandle {
                     shard.inflight.fetch_sub(1, Ordering::Relaxed);
                     queued = q;
                 }
-                Err(TrySendError::Disconnected(_)) => {
+                // Disconnected: this shard is dead, but the pool may
+                // not be — keep sweeping the live shards.
+                Err(TrySendError::Disconnected(q)) => {
                     shard.inflight.fetch_sub(1, Ordering::Relaxed);
-                    return Err(SubmitError::Shutdown);
+                    disconnected += 1;
+                    queued = q;
                 }
             }
         }
-        self.rejected.fetch_add(1, Ordering::Relaxed);
+        if disconnected == n {
+            return Err(SubmitError::Shutdown);
+        }
+        self.rejected[priority.index()].fetch_add(1, Ordering::Relaxed);
         Err(SubmitError::AllQueuesFull {
             workers: n,
             queue_depth: self.queue_depth,
@@ -431,26 +614,35 @@ impl ServerHandle {
             .map_err(|e| anyhow!(e))
     }
 
+    /// Count one expired Interactive request that an admission layer
+    /// dropped before submission (see
+    /// [`ServerHandle::note_expired_for`]).
+    pub fn note_expired(&self) {
+        self.note_expired_for(Priority::Interactive);
+    }
+
     /// Count one expired request that an admission layer (e.g. the HTTP
     /// front door) dropped before it could even build a submission —
     /// lazy field extraction rejects a dead-on-arrival deadline before
     /// decoding the payload, so there are no pixels to submit. Folding
-    /// it in here keeps the aggregate accounting invariant
+    /// it in here keeps the per-class accounting invariant
     /// (`completed + rejected + failed + expired == offered`) true at
     /// the server scope too.
-    pub fn note_expired(&self) {
-        self.expired.fetch_add(1, Ordering::Relaxed);
+    pub fn note_expired_for(&self, priority: Priority) {
+        self.expired[priority.index()].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Aggregate metrics over every worker (plus dispatcher rejections
-    /// and expiry drops).
+    /// and expiry drops, per class).
     pub fn metrics(&self) -> MetricsSnapshot {
         let agg = Metrics::new();
         for shard in self.shards.iter() {
             agg.absorb(&shard.metrics);
         }
-        agg.add_rejected(self.rejected.load(Ordering::Relaxed));
-        agg.add_expired(self.expired.load(Ordering::Relaxed));
+        for p in Priority::ALL {
+            agg.add_rejected_for(p, self.rejected[p.index()].load(Ordering::Relaxed));
+            agg.add_expired_for(p, self.expired[p.index()].load(Ordering::Relaxed));
+        }
         agg.snapshot()
     }
 
@@ -466,6 +658,28 @@ impl ServerHandle {
         self.shards.len()
     }
 
+    /// Shards currently able to serve. Less than [`workers`] means a
+    /// worker died and could not be respawned — the health endpoint
+    /// reports the pool degraded.
+    ///
+    /// [`workers`]: ServerHandle::workers
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Sum of every shard's in-flight (queued + executing) count.
+    pub fn aggregate_inflight(&self) -> usize {
+        self.shards.iter().map(|s| s.inflight.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Whether the pool is currently shedding Batch-priority traffic
+    /// (aggregate in-flight at or over the brown-out threshold).
+    pub fn browned_out(&self) -> bool {
+        let Some(frac) = self.brownout else { return false };
+        let capacity = self.shards.len() * self.queue_depth;
+        (self.aggregate_inflight() as f64) >= frac * capacity as f64
+    }
+
     pub fn image_elems(&self) -> usize {
         self.image_elems
     }
@@ -475,10 +689,166 @@ impl ServerHandle {
     }
 }
 
-/// One worker thread's body: window its queue, shed expired requests,
-/// batch, execute on its replicated runner, scatter replies — PR 3's
-/// router loop, now one shard of N with deadline enforcement.
-fn worker_loop(
+/// Best-effort text of a caught panic payload.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Answer one unanswerable request as `failed` and account for it.
+fn fail_pending(q: QueuedRequest, reason: &str, metrics: &Metrics, inflight: &AtomicUsize) {
+    metrics.record_failed_for(q.req.priority);
+    let _ = q.resp.send(Err(ServeError::Failed(reason.to_string())));
+    inflight.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Requeue a panicked shard's unanswered requests across the pool.
+/// Each request gets **one** requeue: other shards are tried first,
+/// the panicked shard's own (about-to-respawn) queue last; a request
+/// that already survived a panic, or that no queue can absorb, is
+/// answered `failed` — counted, never silently lost.
+fn redistribute(window: &mut Vec<QueuedRequest>, me: usize, shards: &[Shard]) {
+    let n = shards.len();
+    let pending: Vec<QueuedRequest> = window.drain(..).collect();
+    'next: for mut q in pending {
+        if q.attempts >= 1 {
+            fail_pending(
+                q,
+                "worker panicked again after requeue",
+                &shards[me].metrics,
+                &shards[me].inflight,
+            );
+            continue;
+        }
+        q.attempts += 1;
+        for k in 1..=n {
+            let j = (me + k) % n;
+            // In-flight accounting moves with the request; its slot on
+            // shard `me` is released only once shard `j` accepts it.
+            if j != me {
+                shards[j].inflight.fetch_add(1, Ordering::Relaxed);
+            }
+            match shards[j].tx.try_send(q) {
+                Ok(()) => {
+                    if j != me {
+                        shards[me].inflight.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    continue 'next;
+                }
+                Err(TrySendError::Full(back)) | Err(TrySendError::Disconnected(back)) => {
+                    if j != me {
+                        shards[j].inflight.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    q = back;
+                }
+            }
+        }
+        fail_pending(
+            q,
+            "no shard could absorb the requeued request",
+            &shards[me].metrics,
+            &shards[me].inflight,
+        );
+    }
+}
+
+/// Supervisor body for shard `me`: run the serve loop under
+/// `catch_unwind`; on panic, pull every unanswered request this shard
+/// owns (the surviving window plus the queued backlog) back out,
+/// redistribute it (requeue-once), respawn the worker from the
+/// prototype, and record the restart. Returns when the serve loop exits
+/// cleanly (shutdown) or the shard dies unrecoverably.
+#[allow(clippy::too_many_arguments)]
+fn supervise_shard(
+    me: usize,
+    rx: Receiver<QueuedRequest>,
+    mut runner: Box<dyn BatchRunner>,
+    classes: usize,
+    policy: BatchPolicy,
+    shards: Arc<Vec<Shard>>,
+    shutdown: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    respawn: Arc<Option<Mutex<Box<dyn BatchRunner>>>>,
+) {
+    let metrics = shards[me].metrics.clone();
+    let inflight = shards[me].inflight.clone();
+    // The window lives with the supervisor, outside the unwind
+    // boundary: a request leaves it only by being answered, so a panic
+    // mid-execution leaves every unanswered request recoverable here.
+    let mut window: Vec<QueuedRequest> = Vec::new();
+    loop {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(
+                &rx,
+                runner.as_mut(),
+                &mut window,
+                classes,
+                policy,
+                &metrics,
+                &inflight,
+                &shutdown,
+            )
+        }));
+        let panic = match result {
+            Ok(()) => return,
+            Err(p) => p,
+        };
+        let recovery_started = Instant::now();
+        while let Ok(q) = rx.try_recv() {
+            window.push(q);
+        }
+        eprintln!(
+            "cuconv-worker-{me}: panicked ({}); redistributing {} unanswered \
+             request(s) and respawning",
+            panic_message(&panic),
+            window.len()
+        );
+        redistribute(&mut window, me, &shards);
+        let replacement = respawn.as_ref().as_ref().and_then(|proto| {
+            proto
+                .lock()
+                .unwrap()
+                .replicate()
+                .map_err(|e| eprintln!("cuconv-worker-{me}: respawn failed: {e:#}"))
+                .ok()
+        });
+        match replacement {
+            Some(r) => {
+                runner = r;
+                metrics.record_restart(recovery_started.elapsed().as_secs_f64());
+            }
+            None => {
+                // Unrecoverable: release the shard. Fail any stragglers
+                // that raced into the queue, then drop the receiver so
+                // the dispatcher sees this shard disconnected and
+                // sweeps past it.
+                live.fetch_sub(1, Ordering::SeqCst);
+                eprintln!(
+                    "cuconv-worker-{me}: no replacement runner; shard is dead \
+                     (pool degraded)"
+                );
+                while let Ok(q) = rx.try_recv() {
+                    fail_pending(q, "worker dead (respawn unavailable)", &metrics, &inflight);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Unsupervised shard body (PR-4 behavior, minus the silent loss): the
+/// serve loop still runs under `catch_unwind` so a panic can be
+/// *accounted* — pending requests are answered `failed`, the live
+/// count drops, and the panic is re-raised so the thread dies panicked
+/// and `Server::shutdown` sees a panicked join.
+#[allow(clippy::too_many_arguments)]
+fn unsupervised_shard(
+    me: usize,
     rx: Receiver<QueuedRequest>,
     mut runner: Box<dyn BatchRunner>,
     classes: usize,
@@ -486,11 +856,62 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+) {
+    let mut window: Vec<QueuedRequest> = Vec::new();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        worker_loop(
+            &rx,
+            runner.as_mut(),
+            &mut window,
+            classes,
+            policy,
+            &metrics,
+            &inflight,
+            &shutdown,
+        )
+    }));
+    if let Err(panic) = result {
+        live.fetch_sub(1, Ordering::SeqCst);
+        eprintln!(
+            "cuconv-worker-{me}: panicked without supervision ({}); failing \
+             its pending requests",
+            panic_message(&panic)
+        );
+        for q in window.drain(..) {
+            fail_pending(q, "worker panicked (unsupervised)", &metrics, &inflight);
+        }
+        while let Ok(q) = rx.try_recv() {
+            fail_pending(q, "worker panicked (unsupervised)", &metrics, &inflight);
+        }
+        resume_unwind(panic);
+    }
+}
+
+/// One worker's serve loop: window its queue, shed expired requests,
+/// order Interactive before Batch, execute greedy sub-batches on the
+/// replicated runner, scatter replies — PR 3's router loop, now one
+/// shard of N with deadline enforcement and priority ordering.
+///
+/// The `window` is caller-owned and requests leave it **only by being
+/// answered**: a sub-batch stays in the window while the runner
+/// executes it and is drained only afterwards. That ownership rule is
+/// what makes panic recovery lossless — whatever a panic interrupts is
+/// still in the window (or the channel) for the supervisor to requeue.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: &Receiver<QueuedRequest>,
+    runner: &mut dyn BatchRunner,
+    window: &mut Vec<QueuedRequest>,
+    classes: usize,
+    policy: BatchPolicy,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+    shutdown: &AtomicBool,
 ) {
     let sizes = runner.batch_sizes();
     let image_elems = runner.item_in_elems();
 
-    let mut window: Vec<QueuedRequest> = Vec::new();
     loop {
         // Fill the window: block briefly for the first request, then
         // keep draining until the policy closes the window.
@@ -522,14 +943,14 @@ fn worker_loop(
         // Shed requests whose deadline passed while they waited in the
         // queue: answering them would waste a batch slot on work the
         // client has already abandoned. Each is answered `Expired` and
-        // counted — never silently dropped.
+        // counted in its class — never silently dropped.
         let now = Instant::now();
         let mut i = 0;
         while i < window.len() {
             let dead = window[i].req.deadline.is_some_and(|d| now >= d);
             if dead {
                 let q = window.remove(i);
-                metrics.record_expired();
+                metrics.record_expired_for(q.req.priority);
                 let _ = q.resp.send(Err(ServeError::Expired));
                 inflight.fetch_sub(1, Ordering::Relaxed);
             } else {
@@ -537,19 +958,25 @@ fn worker_loop(
             }
         }
 
+        // Interactive requests run in the front (largest, earliest)
+        // sub-batches; stable, so FIFO holds within each class and
+        // single-class traffic is untouched.
+        order_by_priority(window, |q| q.req.priority);
+
         // Execute the window as greedy sub-batches, largest first.
         let batch_started = Instant::now();
         for chunk_size in decompose_batches(window.len(), &sizes) {
-            let chunk: Vec<QueuedRequest> = window.drain(..chunk_size).collect();
             metrics.record_batch(chunk_size);
-            // Gather pixels into one NCHW batch buffer.
+            // Gather pixels into one NCHW batch buffer. The chunk stays
+            // in the window until answered (see the ownership rule
+            // above).
             let mut batch_input = Vec::with_capacity(chunk_size * image_elems);
-            for q in &chunk {
+            for q in &window[..chunk_size] {
                 batch_input.extend_from_slice(&q.req.pixels);
             }
             match runner.run(chunk_size, batch_input) {
                 Ok(out) => {
-                    for (i, q) in chunk.into_iter().enumerate() {
+                    for (i, q) in window.drain(..chunk_size).enumerate() {
                         let total = q.req.enqueued.elapsed().as_secs_f64();
                         let queue_s =
                             (batch_started - q.req.enqueued).as_secs_f64().max(0.0);
@@ -561,13 +988,21 @@ fn worker_loop(
                             total_seconds: total,
                             batch_size: chunk_size,
                         };
-                        metrics.record_request(queue_s, out.exec_seconds, total);
+                        metrics.record_request_for(
+                            q.req.priority,
+                            queue_s,
+                            out.exec_seconds,
+                            total,
+                        );
                         let _ = q.resp.send(Ok(resp));
                     }
                 }
                 Err(e) => {
+                    // A runner error is the `failed` class — counted
+                    // per request, per class, and answered.
                     let msg = format!("{e}");
-                    for q in chunk {
+                    for q in window.drain(..chunk_size) {
+                        metrics.record_failed_for(q.req.priority);
                         let _ = q.resp.send(Err(ServeError::Failed(msg.clone())));
                     }
                 }

@@ -1,0 +1,315 @@
+//! Deterministic fault injection for the worker pool.
+//!
+//! Recovery code that only runs when hardware actually misbehaves is
+//! untested code. This module makes worker failure a *plannable input*:
+//! a [`FaultPlan`] names exactly which worker misbehaves on which
+//! request (panic, or stall for a fixed duration), and a
+//! [`FaultInjector`] — an ordinary [`BatchRunner`] wrapper — carries
+//! the plan into the pool through the same `replicate()` seam the
+//! shards themselves use. The supervision layer in
+//! [`server`](crate::coordinator::server) never knows it is being
+//! tested: it sees a runner that panics, exactly as a real defect
+//! would look.
+//!
+//! Determinism comes from three rules:
+//!
+//! 1. A plan is either written out explicitly or generated from a seed
+//!    via [`FaultPlan::random`] (xoshiro from [`crate::util::rng`]) —
+//!    same seed, same plan, always.
+//! 2. Worker identities are assigned in **replication order**: the
+//!    injector built by [`FaultInjector::new`] is the pool prototype
+//!    (it never serves), and the i-th replica taken from it is worker
+//!    `i`. [`Server::start_pool`](crate::coordinator::server::Server)
+//!    replicates all N workers from the prototype in index order, so
+//!    plan worker indices line up with pool shard indices.
+//! 3. Every fault fires **once**. The fired set is shared across all
+//!    replicas (an `Arc`), so a respawned worker or a requeued request
+//!    cannot re-trigger a spent fault — which is what makes "zero lost
+//!    requests after recovery" an assertable property rather than a
+//!    race.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::runner::{BatchOutput, BatchRunner};
+use crate::util::rng::Rng;
+
+/// One planned misbehavior: `worker` acts up when its cumulative served
+/// item count reaches `request` (0-based, counted per worker replica).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// The worker panics before executing the batch containing the
+    /// request — the supervisor must requeue the batch and respawn.
+    Panic { worker: usize, request: u64 },
+    /// The worker sleeps `millis` before executing the batch — queued
+    /// requests behind it age (and expire if deadlined), and
+    /// least-loaded dispatch steers new traffic away.
+    Stall { worker: usize, request: u64, millis: u64 },
+}
+
+impl Fault {
+    fn worker(&self) -> usize {
+        match *self {
+            Fault::Panic { worker, .. } | Fault::Stall { worker, .. } => worker,
+        }
+    }
+
+    fn request(&self) -> u64 {
+        match *self {
+            Fault::Panic { request, .. } | Fault::Stall { request, .. } => request,
+        }
+    }
+}
+
+/// A complete, deterministic fault schedule for one pool run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// An explicit schedule.
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan { faults }
+    }
+
+    /// A seeded schedule: `count` faults spread over `workers` workers,
+    /// each firing within the first `horizon` requests a worker serves.
+    /// Roughly half panics, half stalls of 1–20 ms. Same arguments ⇒
+    /// identical plan (the property the chaos bench and the recovery
+    /// property tests rest on).
+    pub fn random(seed: u64, workers: usize, count: usize, horizon: u64) -> FaultPlan {
+        assert!(workers > 0, "fault plan needs at least one worker");
+        assert!(horizon > 0, "fault plan needs a positive request horizon");
+        let mut rng = Rng::new(seed);
+        let faults = (0..count)
+            .map(|_| {
+                let worker = rng.below(workers as u64) as usize;
+                let request = rng.below(horizon);
+                if rng.next_f64() < 0.5 {
+                    Fault::Panic { worker, request }
+                } else {
+                    Fault::Stall { worker, request, millis: 1 + rng.below(20) }
+                }
+            })
+            .collect();
+        FaultPlan { faults }
+    }
+}
+
+/// Shared state of one injection campaign: which faults already fired,
+/// and the next worker index to hand out on replication.
+struct Campaign {
+    plan: FaultPlan,
+    fired: Mutex<Vec<bool>>,
+    next_worker: AtomicUsize,
+}
+
+/// Marker worker index for the pool prototype (never matches a fault).
+const PROTOTYPE: usize = usize::MAX;
+
+/// A [`BatchRunner`] wrapper that executes a [`FaultPlan`].
+///
+/// Build one with [`FaultInjector::new`] around the pool's prototype
+/// runner and hand it to `Server::start_pool` with supervision on; each
+/// replica the pool takes becomes the next worker in plan order. For
+/// unit tests that want a specific identity without a pool,
+/// [`FaultInjector::for_worker`] pins one directly.
+pub struct FaultInjector {
+    inner: Box<dyn BatchRunner>,
+    campaign: Arc<Campaign>,
+    worker: usize,
+    /// Items this replica has served (the fault trigger counter).
+    served: u64,
+}
+
+impl FaultInjector {
+    /// Wrap `inner` as the pool prototype carrying `plan`. The
+    /// prototype itself never fires faults; replicas do.
+    pub fn new(inner: Box<dyn BatchRunner>, plan: FaultPlan) -> FaultInjector {
+        let fired = vec![false; plan.faults.len()];
+        FaultInjector {
+            inner,
+            campaign: Arc::new(Campaign {
+                plan,
+                fired: Mutex::new(fired),
+                next_worker: AtomicUsize::new(0),
+            }),
+            worker: PROTOTYPE,
+            served: 0,
+        }
+    }
+
+    /// Wrap `inner` as worker `worker` directly (test hook; bypasses
+    /// replication-order identity assignment).
+    pub fn for_worker(
+        inner: Box<dyn BatchRunner>,
+        plan: FaultPlan,
+        worker: usize,
+    ) -> FaultInjector {
+        let mut injector = FaultInjector::new(inner, plan);
+        injector.worker = worker;
+        injector
+    }
+
+    /// The worker identity this replica carries (`usize::MAX` for the
+    /// prototype).
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Faults from the plan that have already fired (indices into
+    /// `plan.faults`).
+    pub fn fired(&self) -> Vec<usize> {
+        let fired = self.campaign.fired.lock().unwrap();
+        fired.iter().enumerate().filter_map(|(i, &f)| f.then_some(i)).collect()
+    }
+
+    /// Claim the first unfired fault for this worker covering the item
+    /// range `[served, served + batch)`, marking it fired.
+    fn claim_fault(&self, batch: usize) -> Option<Fault> {
+        let range = self.served..self.served + batch as u64;
+        let mut fired = self.campaign.fired.lock().unwrap();
+        for (i, fault) in self.campaign.plan.faults.iter().enumerate() {
+            if fired[i] || fault.worker() != self.worker || !range.contains(&fault.request()) {
+                continue;
+            }
+            fired[i] = true;
+            return Some(*fault);
+        }
+        None
+    }
+}
+
+impl BatchRunner for FaultInjector {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+
+    fn item_in_elems(&self) -> usize {
+        self.inner.item_in_elems()
+    }
+
+    fn item_out_elems(&self) -> usize {
+        self.inner.item_out_elems()
+    }
+
+    fn run(&mut self, batch: usize, input: Vec<f32>) -> Result<BatchOutput> {
+        if let Some(fault) = self.claim_fault(batch) {
+            match fault {
+                Fault::Panic { worker, request } => {
+                    // Count the items as seen so a (hypothetical) reuse
+                    // of this replica does not re-enter the same range.
+                    self.served += batch as u64;
+                    panic!("injected fault: worker {worker} panics on request {request}");
+                }
+                Fault::Stall { millis, .. } => {
+                    std::thread::sleep(Duration::from_millis(millis));
+                }
+            }
+        }
+        self.served += batch as u64;
+        self.inner.run(batch, input)
+    }
+
+    fn replicate(&self) -> Result<Box<dyn BatchRunner>> {
+        let inner = self.inner.replicate()?;
+        let worker = self.campaign.next_worker.fetch_add(1, Ordering::SeqCst);
+        Ok(Box::new(FaultInjector {
+            inner,
+            campaign: self.campaign.clone(),
+            worker,
+            served: 0,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Minimal deterministic runner: doubles every element.
+    struct Doubler;
+
+    impl BatchRunner for Doubler {
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1, 2, 4]
+        }
+        fn item_in_elems(&self) -> usize {
+            2
+        }
+        fn item_out_elems(&self) -> usize {
+            2
+        }
+        fn run(&mut self, _batch: usize, input: Vec<f32>) -> Result<BatchOutput> {
+            Ok(BatchOutput {
+                data: input.iter().map(|x| x * 2.0).collect(),
+                exec_seconds: 0.0,
+            })
+        }
+        fn replicate(&self) -> Result<Box<dyn BatchRunner>> {
+            Ok(Box::new(Doubler))
+        }
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let a = FaultPlan::random(0xFA11, 4, 6, 100);
+        let b = FaultPlan::random(0xFA11, 4, 6, 100);
+        assert_eq!(a, b, "same seed must produce the identical plan");
+        assert_eq!(a.faults.len(), 6);
+        let c = FaultPlan::random(0xFA12, 4, 6, 100);
+        assert_ne!(a, c, "different seeds should diverge");
+        for f in &a.faults {
+            assert!(f.worker() < 4);
+            assert!(f.request() < 100);
+        }
+    }
+
+    #[test]
+    fn panic_fires_once_at_the_planned_request() {
+        let plan = FaultPlan::new(vec![Fault::Panic { worker: 0, request: 2 }]);
+        let proto = FaultInjector::new(Box::new(Doubler), plan);
+        let mut w0 = proto.replicate().unwrap();
+        // Items 0..2 pass.
+        assert!(w0.run(2, vec![0.0; 4]).is_ok());
+        // Item 2 is inside the next batch: the injected panic fires.
+        let hit = catch_unwind(AssertUnwindSafe(|| w0.run(2, vec![0.0; 4])));
+        assert!(hit.is_err(), "planned panic must fire");
+        // The fault is spent: the same range served again passes.
+        assert!(w0.run(2, vec![0.0; 4]).is_ok());
+        assert_eq!(proto.fired(), vec![0]);
+    }
+
+    #[test]
+    fn worker_identity_follows_replication_order_and_prototype_is_inert() {
+        let plan = FaultPlan::new(vec![Fault::Panic { worker: 1, request: 0 }]);
+        let mut proto = FaultInjector::new(Box::new(Doubler), plan);
+        // The prototype never matches a fault, even at request 0.
+        assert!(proto.run(1, vec![0.0; 2]).is_ok());
+        let mut r0 = proto.replicate().unwrap();
+        let mut r1 = proto.replicate().unwrap();
+        // Worker 0 is clean; worker 1 carries the fault.
+        assert!(r0.run(1, vec![0.0; 2]).is_ok());
+        let hit = catch_unwind(AssertUnwindSafe(|| r1.run(1, vec![0.0; 2])));
+        assert!(hit.is_err(), "fault must land on replica #1");
+    }
+
+    #[test]
+    fn stall_delays_but_answers_correctly() {
+        let plan = FaultPlan::new(vec![Fault::Stall { worker: 7, request: 0, millis: 30 }]);
+        let mut w = FaultInjector::for_worker(Box::new(Doubler), plan, 7);
+        let t0 = std::time::Instant::now();
+        let out = w.run(1, vec![1.5, -2.0]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25), "stall must delay execution");
+        assert_eq!(out.data, vec![3.0, -4.0], "stall must not corrupt the answer");
+        // Spent: the next call is fast.
+        let t1 = std::time::Instant::now();
+        w.run(1, vec![0.0; 2]).unwrap();
+        assert!(t1.elapsed() < Duration::from_millis(25));
+    }
+}

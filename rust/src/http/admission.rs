@@ -1,5 +1,5 @@
 //! Admission control for the HTTP front door: per-tenant token-bucket
-//! rate limiting.
+//! rate limiting, priority-aware.
 //!
 //! The bucket is the classic leaky-refill shape: a tenant accrues
 //! `rps` tokens per second up to a `burst` cap, and each admitted
@@ -10,23 +10,40 @@
 //! refill arithmetic is testable with a simulated clock; the
 //! [`TenantLimiter`] wrapper supplies `Instant::now()` on the serving
 //! path.
+//!
+//! Priority awareness is a *reserve*: a Batch-class request needs the
+//! bucket to hold `1 + batch_reserve` tokens, an Interactive one just
+//! `1`. Under pressure the bottom `batch_reserve` tokens of every
+//! bucket are therefore spendable only by Interactive traffic — the
+//! cheap class starves first, by construction, and admitting a Batch
+//! request always implies the same bucket state would have admitted an
+//! Interactive one (the monotonicity property test below).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::coordinator::request::{Priority, PRIORITY_COUNT};
+
 /// A rate-limit policy: sustained `rps` requests/second with bursts of
-/// up to `burst` back-to-back requests from a full bucket.
+/// up to `burst` back-to-back requests from a full bucket, keeping the
+/// bottom `batch_reserve` tokens for Interactive traffic only.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RateLimit {
     pub rps: f64,
     pub burst: f64,
+    /// Tokens a Batch-class request must leave behind: it is admitted
+    /// only while the bucket holds at least `1 + batch_reserve`.
+    /// Defaults to half the burst in [`RateLimit::new`].
+    pub batch_reserve: f64,
 }
 
 impl RateLimit {
     /// Validated constructor: both parameters must be positive and
     /// finite (a zero-rps limit would admit nothing forever; use no
-    /// limiter for "unlimited").
+    /// limiter for "unlimited"). The Batch reserve defaults to half
+    /// the burst; override with [`RateLimit::with_batch_reserve`].
     pub fn new(rps: f64, burst: f64) -> Result<RateLimit, String> {
         if !(rps.is_finite() && rps > 0.0) {
             return Err(format!("rate-limit rps must be positive, got {rps}"));
@@ -34,7 +51,24 @@ impl RateLimit {
         if !(burst.is_finite() && burst >= 1.0) {
             return Err(format!("rate-limit burst must be >= 1, got {burst}"));
         }
-        Ok(RateLimit { rps, burst })
+        Ok(RateLimit { rps, burst, batch_reserve: burst / 2.0 })
+    }
+
+    /// Same policy with an explicit Batch reserve. Zero disables the
+    /// priority distinction; the reserve must leave at least one
+    /// spendable token under the burst cap or Batch traffic could
+    /// never be admitted at all.
+    pub fn with_batch_reserve(self, reserve: f64) -> Result<RateLimit, String> {
+        if !(reserve.is_finite() && reserve >= 0.0) {
+            return Err(format!("batch reserve must be >= 0, got {reserve}"));
+        }
+        if reserve > self.burst - 1.0 {
+            return Err(format!(
+                "batch reserve {reserve} leaves no admissible token under burst {}",
+                self.burst
+            ));
+        }
+        Ok(RateLimit { batch_reserve: reserve, ..self })
     }
 }
 
@@ -54,14 +88,33 @@ impl TokenBucket {
     }
 
     /// Refill for the time elapsed since the last call, then try to
-    /// spend one token. `now` earlier than the last observed instant is
-    /// treated as zero elapsed time (`duration_since` saturates), so a
-    /// racing caller can never mint negative time into tokens.
+    /// spend one token at Interactive priority. `now` earlier than the
+    /// last observed instant is treated as zero elapsed time
+    /// (`duration_since` saturates), so a racing caller can never mint
+    /// negative time into tokens.
     pub fn try_take_at(&mut self, limit: &RateLimit, now: Instant) -> bool {
+        self.try_take_class(limit, Priority::Interactive, now)
+    }
+
+    /// Class-aware take: an Interactive request spends from any
+    /// positive balance; a Batch request is admitted only while the
+    /// bucket holds at least `1 + batch_reserve`, so the bottom of the
+    /// bucket is reserved for the latency class. Both spend exactly
+    /// one token when admitted.
+    pub fn try_take_class(
+        &mut self,
+        limit: &RateLimit,
+        priority: Priority,
+        now: Instant,
+    ) -> bool {
         let dt = now.duration_since(self.last).as_secs_f64();
         self.last = now;
         self.tokens = (self.tokens + dt * limit.rps).min(limit.burst);
-        if self.tokens >= 1.0 {
+        let need = match priority {
+            Priority::Interactive => 1.0,
+            Priority::Batch => 1.0 + limit.batch_reserve,
+        };
+        if self.tokens >= need {
             self.tokens -= 1.0;
             true
         } else {
@@ -81,26 +134,70 @@ impl TokenBucket {
 pub struct TenantLimiter {
     limit: Option<RateLimit>,
     buckets: Mutex<HashMap<String, TokenBucket>>,
+    /// Per-class admitted/refused tallies across all tenants (indexed
+    /// by [`Priority::index`]), for the `/metrics` endpoint.
+    admitted: [AtomicU64; PRIORITY_COUNT],
+    refused: [AtomicU64; PRIORITY_COUNT],
 }
 
 impl TenantLimiter {
     pub fn new(limit: Option<RateLimit>) -> TenantLimiter {
-        TenantLimiter { limit, buckets: Mutex::new(HashMap::new()) }
+        TenantLimiter {
+            limit,
+            buckets: Mutex::new(HashMap::new()),
+            admitted: std::array::from_fn(|_| AtomicU64::new(0)),
+            refused: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
     }
 
-    /// Admit or refuse one request from `tenant` at wall-clock now.
+    /// Admit or refuse one Interactive request from `tenant` at
+    /// wall-clock now.
     pub fn admit(&self, tenant: &str) -> bool {
         self.admit_at(tenant, Instant::now())
     }
 
-    /// Clock-injected admission (the testable core).
+    /// Clock-injected Interactive admission.
     pub fn admit_at(&self, tenant: &str, now: Instant) -> bool {
-        let Some(limit) = &self.limit else { return true };
-        let mut buckets = self.buckets.lock().unwrap();
-        let bucket = buckets
-            .entry(tenant.to_string())
-            .or_insert_with(|| TokenBucket::full(limit, now));
-        bucket.try_take_at(limit, now)
+        self.admit_prioritized_at(tenant, Priority::Interactive, now)
+    }
+
+    /// Admit or refuse one request of the given class at wall-clock
+    /// now.
+    pub fn admit_prioritized(&self, tenant: &str, priority: Priority) -> bool {
+        self.admit_prioritized_at(tenant, priority, Instant::now())
+    }
+
+    /// Clock-injected class-aware admission (the testable core).
+    pub fn admit_prioritized_at(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        now: Instant,
+    ) -> bool {
+        let admitted = match &self.limit {
+            None => true,
+            Some(limit) => {
+                let mut buckets = self.buckets.lock().unwrap();
+                let bucket = buckets
+                    .entry(tenant.to_string())
+                    .or_insert_with(|| TokenBucket::full(limit, now));
+                bucket.try_take_class(limit, priority, now)
+            }
+        };
+        let slot = if admitted { &self.admitted } else { &self.refused };
+        slot[priority.index()].fetch_add(1, Ordering::Relaxed);
+        admitted
+    }
+
+    /// Requests of `priority` this limiter has admitted.
+    pub fn admitted_for(&self, priority: Priority) -> u64 {
+        self.admitted[priority.index()].load(Ordering::Relaxed)
+    }
+
+    /// Requests of `priority` this limiter has refused (HTTP 429s of
+    /// the rate-limit kind).
+    pub fn refused_for(&self, priority: Priority) -> u64 {
+        self.refused[priority.index()].load(Ordering::Relaxed)
     }
 
     /// Number of tenants with bucket state (metrics hook).
@@ -216,5 +313,109 @@ mod tests {
         assert!(RateLimit::new(f64::NAN, 4.0).is_err());
         assert!(RateLimit::new(10.0, 0.5).is_err());
         assert!(RateLimit::new(10.0, 1.0).is_ok());
+        // Reserve validation: non-negative, finite, and leaving at
+        // least one admissible token under the burst cap.
+        let limit = RateLimit::new(10.0, 4.0).unwrap();
+        assert_eq!(limit.batch_reserve, 2.0, "default reserve is half the burst");
+        assert!(limit.with_batch_reserve(0.0).is_ok());
+        assert!(limit.with_batch_reserve(3.0).is_ok());
+        assert!(limit.with_batch_reserve(3.5).is_err());
+        assert!(limit.with_batch_reserve(-1.0).is_err());
+        assert!(limit.with_batch_reserve(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn batch_reserve_starves_batch_first() {
+        // burst 4, reserve 2: from a full bucket, Batch can spend the
+        // top 2 tokens; the bottom 2 are Interactive-only.
+        let limit =
+            RateLimit::new(10.0, 4.0).unwrap().with_batch_reserve(2.0).unwrap();
+        let t0 = Instant::now();
+        let mut b = TokenBucket::full(&limit, t0);
+        assert!(b.try_take_class(&limit, Priority::Batch, t0));
+        assert!(b.try_take_class(&limit, Priority::Batch, t0));
+        // Bucket now holds 2 = the reserve: Batch is refused…
+        assert!(!b.try_take_class(&limit, Priority::Batch, t0));
+        // …while Interactive still spends the reserved bottom.
+        assert!(b.try_take_class(&limit, Priority::Interactive, t0));
+        assert!(b.try_take_class(&limit, Priority::Interactive, t0));
+        assert!(!b.try_take_class(&limit, Priority::Interactive, t0));
+    }
+
+    #[test]
+    fn prop_batch_admission_implies_interactive_admission() {
+        use crate::util::prop::{assert_prop, Config, PairOf, UsizeIn, VecOf};
+
+        // Over random policies and arbitrary interleaved (class, gap)
+        // schedules under a simulated clock: whenever a Batch request
+        // is admitted, the same bucket state would have admitted an
+        // Interactive one — the reserve can only demote the cheap
+        // class, never promote it past the expensive one.
+        let schedule = VecOf {
+            // (0 = Interactive, 1 = Batch; gap before the request in ms)
+            elem: PairOf(UsizeIn { lo: 0, hi: 1 }, UsizeIn { lo: 0, hi: 300 }),
+            min_len: 1,
+            max_len: 40,
+        };
+        let gen = PairOf(UsizeIn { lo: 0, hi: 2 }, schedule);
+        assert_prop(Config { cases: 128, ..Config::default() }, &gen, |(policy, steps)| {
+            let limit = match *policy {
+                0 => RateLimit::new(5.0, 2.0).unwrap(),
+                1 => RateLimit::new(50.0, 8.0).unwrap(),
+                _ => RateLimit::new(1.0, 6.0).unwrap().with_batch_reserve(5.0).unwrap(),
+            };
+            let t0 = Instant::now();
+            let mut bucket = TokenBucket::full(&limit, t0);
+            let mut now = t0;
+            for &(class, gap_ms) in steps {
+                now += std::time::Duration::from_millis(gap_ms as u64);
+                if class == 1 {
+                    // TokenBucket is Copy: probe the counterfactual on
+                    // a clone of the exact pre-request state.
+                    let mut probe = bucket;
+                    let batch_ok = bucket.try_take_class(&limit, Priority::Batch, now);
+                    let interactive_ok =
+                        probe.try_take_class(&limit, Priority::Interactive, now);
+                    if batch_ok && !interactive_ok {
+                        return Err(format!(
+                            "Batch admitted where Interactive would be refused \
+                             (tokens {:.3})",
+                            probe.tokens()
+                        ));
+                    }
+                } else {
+                    bucket.try_take_class(&limit, Priority::Interactive, now);
+                }
+                if bucket.tokens() < 0.0 {
+                    return Err("tokens went negative".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn limiter_counts_per_class() {
+        let limiter = TenantLimiter::new(Some(
+            RateLimit::new(1.0, 3.0).unwrap().with_batch_reserve(2.0).unwrap(),
+        ));
+        let t0 = Instant::now();
+        // Full bucket (3 tokens): one Batch passes (3 >= 1+2), the next
+        // is refused (2 < 3); Interactive drains the reserve.
+        assert!(limiter.admit_prioritized_at("t", Priority::Batch, t0));
+        assert!(!limiter.admit_prioritized_at("t", Priority::Batch, t0));
+        assert!(limiter.admit_prioritized_at("t", Priority::Interactive, t0));
+        assert!(limiter.admit_prioritized_at("t", Priority::Interactive, t0));
+        assert!(!limiter.admit_prioritized_at("t", Priority::Interactive, t0));
+        assert_eq!(limiter.admitted_for(Priority::Batch), 1);
+        assert_eq!(limiter.refused_for(Priority::Batch), 1);
+        assert_eq!(limiter.admitted_for(Priority::Interactive), 2);
+        assert_eq!(limiter.refused_for(Priority::Interactive), 1);
+        // The Interactive-only entry points land in the Interactive
+        // class.
+        let open = TenantLimiter::new(None);
+        assert!(open.admit("t"));
+        assert_eq!(open.admitted_for(Priority::Interactive), 1);
+        assert_eq!(open.admitted_for(Priority::Batch), 0);
     }
 }

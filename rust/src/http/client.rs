@@ -14,8 +14,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::loadgen::{fold_outcomes, per_thread_share, Outcome};
-use crate::coordinator::LoadReport;
+use crate::coordinator::loadgen::{
+    fold_class_outcomes, fold_outcomes, per_thread_share, Outcome,
+};
+use crate::coordinator::{ClassReport, LoadReport, Priority};
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
 
@@ -80,6 +82,7 @@ pub fn infer_body(
     batch: usize,
     deadline_ms: Option<u64>,
     tenant: Option<&str>,
+    priority: Option<Priority>,
     payload: &[f32],
 ) -> String {
     let mut s = String::with_capacity(64 + payload.len() * 10);
@@ -89,6 +92,9 @@ pub fn infer_body(
     }
     if let Some(t) = tenant {
         s.push_str(&format!(", \"tenant\": \"{t}\""));
+    }
+    if let Some(p) = priority {
+        s.push_str(&format!(", \"priority\": \"{p}\""));
     }
     s.push_str(", \"payload\": [");
     for (i, v) in payload.iter().enumerate() {
@@ -151,8 +157,14 @@ pub fn run_closed_loop_http(
                     for _ in 0..n {
                         let mut img = vec![0.0f32; image_elems];
                         rng.fill_uniform(&mut img, -1.0, 1.0);
-                        let body =
-                            infer_body(model, 1, deadline_ms, Some("loadgen"), &img);
+                        let body = infer_body(
+                            model,
+                            1,
+                            deadline_ms,
+                            Some("loadgen"),
+                            None,
+                            &img,
+                        );
                         let req_started = Instant::now();
                         let result = match client.as_mut() {
                             Some(c) => c.post_json("/v1/infer", &body),
@@ -183,6 +195,78 @@ pub fn run_closed_loop_http(
     fold_outcomes(per_thread, wall, f64::NAN)
 }
 
+/// Mixed-priority closed-loop load over real sockets: like
+/// [`run_closed_loop_http`], but each request is independently Batch
+/// with probability `batch_fraction` (seeded), carries its class on the
+/// wire, and is accounted into its class's [`LoadReport`]. The driver
+/// behind the chaos bench's shed curves.
+#[allow(clippy::too_many_arguments)]
+pub fn run_closed_loop_http_mixed(
+    addr: impl ToSocketAddrs + Clone + Send + Sync,
+    model: &str,
+    image_elems: usize,
+    requests: usize,
+    threads: usize,
+    seed: u64,
+    deadline_ms: Option<u64>,
+    batch_fraction: f64,
+) -> ClassReport {
+    let threads = threads.max(1);
+    let started = Instant::now();
+    let per_thread: Vec<Vec<(Priority, Outcome)>> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let addr = addr.clone();
+                let n = per_thread_share(requests, threads, t);
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ t as u64);
+                    let mut outcomes = Vec::with_capacity(n);
+                    let mut client = HttpClient::connect(addr.clone()).ok();
+                    for _ in 0..n {
+                        let mut img = vec![0.0f32; image_elems];
+                        rng.fill_uniform(&mut img, -1.0, 1.0);
+                        let priority = if rng.next_f64() < batch_fraction {
+                            Priority::Batch
+                        } else {
+                            Priority::Interactive
+                        };
+                        let body = infer_body(
+                            model,
+                            1,
+                            deadline_ms,
+                            Some("loadgen"),
+                            Some(priority),
+                            &img,
+                        );
+                        let req_started = Instant::now();
+                        let result = match client.as_mut() {
+                            Some(c) => c.post_json("/v1/infer", &body),
+                            None => Err(anyhow!("not connected")),
+                        };
+                        let outcome = match result {
+                            Ok((200, _)) => {
+                                Outcome::Completed(req_started.elapsed().as_secs_f64())
+                            }
+                            Ok((429 | 503, _)) => Outcome::Rejected,
+                            Ok((504, _)) => Outcome::Expired,
+                            Ok(_) => Outcome::Failed,
+                            Err(_) => {
+                                client = HttpClient::connect(addr.clone()).ok();
+                                Outcome::Failed
+                            }
+                        };
+                        outcomes.push((priority, outcome));
+                    }
+                    outcomes
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = started.elapsed().as_secs_f64();
+    fold_class_outcomes(per_thread, wall, f64::NAN)
+}
+
 /// Block until `GET /healthz` answers 200 or the timeout elapses —
 /// lets a driver start hammering the instant the acceptor is up.
 pub fn wait_healthy(addr: impl ToSocketAddrs + Clone, timeout: Duration) -> Result<()> {
@@ -206,12 +290,22 @@ mod tests {
 
     #[test]
     fn infer_body_orders_hot_fields_before_payload() {
-        let body = infer_body("sq", 2, Some(25), Some("t0"), &[1.5, -0.25]);
+        let body = infer_body(
+            "sq",
+            2,
+            Some(25),
+            Some("t0"),
+            Some(Priority::Batch),
+            &[1.5, -0.25],
+        );
         let m = body.find("\"model\"").unwrap();
         let d = body.find("\"deadline_ms\"").unwrap();
         let t = body.find("\"tenant\"").unwrap();
+        let pr = body.find("\"priority\"").unwrap();
         let p = body.find("\"payload\"").unwrap();
-        assert!(m < d && d < t && t < p, "payload must come last: {body}");
+        assert!(m < d && d < t && t < pr && pr < p, "payload must come last: {body}");
+        let v = parse(&body).unwrap();
+        assert_eq!(v.get("priority").unwrap().as_str().unwrap(), "batch");
         // And it is real JSON the strict parser accepts.
         let v = parse(&body).unwrap();
         assert_eq!(v.get("batch").unwrap().as_usize().unwrap(), 2);
@@ -223,7 +317,7 @@ mod tests {
         // Awkward values: subnormal-ish, repeating binary fractions,
         // and a value with no short decimal form.
         let vals: [f32; 5] = [0.1, -3.3333333, 1.0e-7, 123456.78, -0.0];
-        let body = infer_body("m", 1, None, None, &vals);
+        let body = infer_body("m", 1, None, None, None, &vals);
         let v = parse(&body).unwrap();
         let parsed: Vec<f32> = v
             .get("payload")

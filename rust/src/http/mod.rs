@@ -13,11 +13,14 @@
 //! Endpoints:
 //!
 //! * `POST /v1/infer` — `{"model", "batch"?, "deadline_ms"?, "tenant"?,
-//!   "payload"}` → `{"ids", "predicted", "logits", "total_ms", ...}`.
+//!   "priority"?, "payload"}` → `{"ids", "predicted", "logits",
+//!   "total_ms", ...}`.
 //! * `GET /v1/models` — what is being served, with shapes and limits.
 //! * `GET /metrics` — the aggregate [`MetricsSnapshot`]
-//!   (latency quantiles, four-class request accounting, SLO buckets).
-//! * `GET /healthz` — liveness.
+//!   (latency quantiles, four-class request accounting per priority
+//!   class, restart counts, SLO buckets).
+//! * `GET /healthz` — honest health: 200 `"ok"` only while every worker
+//!   is live and the pool is not browned out, else 503 `"degraded"`.
 //!
 //! Submodule map: [`parser`] (bounded head/body reading + lazy JSON),
 //! [`admission`] (per-tenant token buckets), [`router`] (the pure
@@ -36,7 +39,8 @@ pub mod router;
 
 pub use admission::{RateLimit, TenantLimiter, TokenBucket};
 pub use client::{
-    infer_body, logits_of, run_closed_loop_http, wait_healthy, HttpClient,
+    infer_body, logits_of, run_closed_loop_http, run_closed_loop_http_mixed,
+    wait_healthy, HttpClient,
 };
 pub use listener::{HttpConfig, HttpServer};
 pub use responses::Response;

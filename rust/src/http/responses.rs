@@ -55,7 +55,14 @@ pub struct Response {
 impl Response {
     /// A 200 with the given JSON value as body.
     pub fn ok(body: &Json) -> Response {
-        Response { status: 200, body: body.to_string_compact(), close: false }
+        Response::json(200, body)
+    }
+
+    /// An arbitrary status with a JSON body — for structured non-200
+    /// answers that are richer than the two-field error shape (e.g. the
+    /// degraded health report).
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response { status, body: body.to_string_compact(), close: false }
     }
 
     /// An error response with the canonical two-field body.

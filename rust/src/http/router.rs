@@ -7,22 +7,30 @@
 //! The `/v1/infer` pipeline runs its checks in strict cheapest-first
 //! order over lazily-scanned field spans:
 //!
-//! 1. lazy-scan the body for the five hot fields (spans only);
+//! 1. lazy-scan the body for the six hot fields (spans only);
 //! 2. model routing (404 before anything else is looked at);
-//! 3. tenant rate limit (429 — an over-limit tenant costs the server a
-//!    hash lookup, not a payload decode);
-//! 4. deadline check (504 — a dead-on-arrival request is counted
-//!    `expired` via [`ServerHandle::note_expired`] and turned away
+//! 3. priority parse (400 on an unknown class — a typo must not
+//!    silently land in a default class);
+//! 4. tenant rate limit (429 — an over-limit tenant costs the server a
+//!    hash lookup, not a payload decode; Batch-class requests need the
+//!    bucket above its reserve);
+//! 5. deadline check (504 — a dead-on-arrival request is counted
+//!    `expired` via [`ServerHandle::note_expired_for`] and turned away
 //!    **before its payload is decoded**);
-//! 5. batch/payload validation (400) — only now are pixels
+//! 6. batch/payload validation (400) — only now are pixels
 //!    materialized;
-//! 6. dispatch to the shard pool, mapping [`SubmitError`] and
-//!    [`ServeError`] onto the status/class table in
-//!    [`responses`](super::responses).
+//! 7. dispatch to the shard pool, mapping [`SubmitError`] (including
+//!    brown-out sheds) and [`ServeError`] onto the status/class table
+//!    in [`responses`](super::responses).
+//!
+//! `GET /healthz` is honest: it answers 200 `"ok"` only while every
+//! worker is live and the pool is not browned out; otherwise 503 with
+//! `"status": "degraded"` and the reason fields, so an external
+//! balancer can drain a limping instance.
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{ServeError, ServerHandle, SubmitError};
+use crate::coordinator::{Priority, ServeError, ServerHandle, SubmitError};
 use crate::util::json::Json;
 
 use super::admission::TenantLimiter;
@@ -63,11 +71,21 @@ pub fn handle_request(state: &AppState, head: &RequestHead, body: &[u8]) -> Resp
 }
 
 fn healthz(state: &AppState) -> Response {
-    Response::ok(&Json::obj(vec![
-        ("status", Json::str("ok")),
+    let workers = state.handle.workers();
+    let live = state.handle.live_workers();
+    let browned_out = state.handle.browned_out();
+    let degraded = live < workers || browned_out;
+    let body = Json::obj(vec![
+        ("status", Json::str(if degraded { "degraded" } else { "ok" })),
         ("uptime_seconds", Json::num(state.started.elapsed().as_secs_f64())),
-        ("workers", Json::num(state.handle.workers() as f64)),
-    ]))
+        ("workers", Json::num(workers as f64)),
+        ("live_workers", Json::num(live as f64)),
+        ("browned_out", Json::Bool(browned_out)),
+    ]);
+    // 503 on degradation so status-only health checkers (load
+    // balancers, the CI smoke) drain the instance without parsing the
+    // body.
+    Response::json(if degraded { 503 } else { 200 }, &body)
 }
 
 fn models(state: &AppState) -> Response {
@@ -91,6 +109,37 @@ fn metrics(state: &AppState) -> Response {
         ("batches", Json::num(s.batches as f64)),
         ("rejected", Json::num(s.rejected as f64)),
         ("expired", Json::num(s.expired as f64)),
+        ("failed", Json::num(s.failed as f64)),
+        ("restarts", Json::num(s.restarts as f64)),
+        ("restart_max_ms", ms(s.restart_max_seconds)),
+        ("workers", Json::num(state.handle.workers() as f64)),
+        ("live_workers", Json::num(state.handle.live_workers() as f64)),
+        ("browned_out", Json::Bool(state.handle.browned_out())),
+        (
+            "per_class",
+            Json::arr(
+                s.per_class
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("priority", Json::str(c.priority.as_str())),
+                            ("completed", Json::num(c.completed as f64)),
+                            ("rejected", Json::num(c.rejected as f64)),
+                            ("failed", Json::num(c.failed as f64)),
+                            ("expired", Json::num(c.expired as f64)),
+                            (
+                                "limiter_admitted",
+                                Json::num(state.limiter.admitted_for(c.priority) as f64),
+                            ),
+                            (
+                                "limiter_refused",
+                                Json::num(state.limiter.refused_for(c.priority) as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("mean_batch_size", Json::num(s.mean_batch_size)),
         ("throughput_rps", Json::num(s.throughput_rps)),
         ("queue_p50_ms", ms(s.queue_p50)),
@@ -123,14 +172,15 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
 
     // 1. One lazy pass for the hot-field spans; the payload bytes are
     //    located but not decoded.
-    let spans =
-        match lazy_scan(body, &["model", "batch", "deadline_ms", "tenant", "payload"])
-        {
-            Ok(s) => s,
-            Err(e) => return Response::error(400, &e),
-        };
-    let [model_span, batch_span, deadline_span, tenant_span, payload_span] =
-        match <[_; 5]>::try_from(spans) {
+    let spans = match lazy_scan(
+        body,
+        &["model", "batch", "deadline_ms", "tenant", "priority", "payload"],
+    ) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &e),
+    };
+    let [model_span, batch_span, deadline_span, tenant_span, priority_span, payload_span] =
+        match <[_; 6]>::try_from(spans) {
             Ok(a) => a,
             Err(_) => unreachable!("lazy_scan returns one span per key"),
         };
@@ -150,7 +200,21 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
         );
     }
 
-    // 3. Tenant rate limit.
+    // 3. Priority class (strict: an unknown class is a 400, not a
+    //    silent default).
+    let priority = match &priority_span {
+        Some(s) => match span_str(body, s) {
+            Ok(p) => match Priority::parse(&p) {
+                Ok(p) => p,
+                Err(e) => return Response::error(400, &format!("priority: {e}")),
+            },
+            Err(e) => return Response::error(400, &format!("priority: {e}")),
+        },
+        None => Priority::default(),
+    };
+
+    // 4. Tenant rate limit, class-aware: a Batch request is admitted
+    //    only while the tenant's bucket sits above its reserve.
     let tenant = match &tenant_span {
         Some(s) => match span_str(body, s) {
             Ok(t) => t,
@@ -158,13 +222,17 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
         },
         None => DEFAULT_TENANT.to_string(),
     };
-    if !state.limiter.admit(&tenant) {
-        return Response::error(429, &format!("tenant '{tenant}' over rate limit"));
+    if !state.limiter.admit_prioritized(&tenant, priority) {
+        return Response::error(
+            429,
+            &format!("tenant '{tenant}' over rate limit ({priority} class)"),
+        );
     }
 
-    // 4. Deadline — checked before the payload is decoded, so a
+    // 5. Deadline — checked before the payload is decoded, so a
     //    dead-on-arrival request costs the server nothing but this
-    //    header scan. It still counts as `expired` server-side.
+    //    header scan. It still counts as `expired` server-side, in its
+    //    class.
     let deadline = match &deadline_span {
         Some(s) => match span_u64(body, s) {
             Ok(ms) => Some(arrival + Duration::from_millis(ms)),
@@ -174,12 +242,12 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
     };
     if let Some(d) = deadline {
         if Instant::now() >= d {
-            state.handle.note_expired();
+            state.handle.note_expired_for(priority);
             return Response::error(504, "deadline already passed at admission");
         }
     }
 
-    // 5. Batch and payload validation — the first point that touches
+    // 6. Batch and payload validation — the first point that touches
     //    the bulk of the body.
     let batch = match &batch_span {
         Some(s) => match span_u64(body, s) {
@@ -213,11 +281,11 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
         );
     }
 
-    // 6. Dispatch each image to the shard pool, then gather replies.
+    // 7. Dispatch each image to the shard pool, then gather replies.
     let mut receivers = Vec::with_capacity(batch);
     for i in 0..batch {
         let pixels = payload[i * image_elems..(i + 1) * image_elems].to_vec();
-        match state.handle.submit_request(pixels, deadline) {
+        match state.handle.submit_prioritized(pixels, deadline, priority) {
             Ok(rx) => receivers.push(rx),
             // Receivers already submitted are dropped here; their
             // workers' replies land on closed channels, which is fine —
@@ -225,7 +293,7 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
             Err(SubmitError::Expired) => {
                 return Response::error(504, "deadline passed at dispatch")
             }
-            Err(e @ SubmitError::AllQueuesFull { .. }) => {
+            Err(e @ (SubmitError::AllQueuesFull { .. } | SubmitError::Shed { .. })) => {
                 return Response::error(429, &e.to_string())
             }
             Err(SubmitError::Shutdown) => {

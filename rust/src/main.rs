@@ -20,11 +20,16 @@
 //!                                       bounded queue per shard)
 //! cuconv serve-http <network> [--port P] [--workers W] [--queue-depth D]
 //!                   [--rate-limit RPS] [--burst B] [--deadline-ms MS]
-//!                   [--drive N] [--clients C]
+//!                   [--drive N] [--clients C] [--batch-share F]
+//!                   [--fault-panic W:K] [--fault-stall W:K:MS]
 //!                                       HTTP/JSON front door over the
 //!                                       shard pool; --drive N runs a
 //!                                       self-contained socket smoke +
-//!                                       closed loop and exits
+//!                                       closed loop and exits.
+//!                                       --fault-* inject deterministic
+//!                                       worker faults (panic/stall) to
+//!                                       exercise supervision; with
+//!                                       --drive, recovery is asserted
 //! cuconv validate                       validate AOT artifacts end to end
 //! ```
 //!
@@ -44,12 +49,12 @@ use cuconv::algo::{autotune, TimingSource};
 use cuconv::backend::{algo_find, algo_get, Backend, ConvDescriptor, CpuRefBackend};
 use cuconv::conv::{ConvSpec, FilterSize};
 use cuconv::coordinator::{
-    plan_network, plan_network_measured, run_closed_loop, BatchPolicy, PoolConfig, Server,
-    ShardSelection,
+    plan_network, plan_network_measured, run_closed_loop, BatchPolicy, Fault,
+    FaultInjector, FaultPlan, PoolConfig, Server, ShardSelection,
 };
 use cuconv::http::{
-    logits_of, run_closed_loop_http, wait_healthy, AppState, HttpClient, HttpConfig,
-    HttpServer, RateLimit, TenantLimiter,
+    logits_of, run_closed_loop_http, run_closed_loop_http_mixed, wait_healthy,
+    AppState, HttpClient, HttpConfig, HttpServer, RateLimit, TenantLimiter,
 };
 use cuconv::report::{self, figures, tables};
 use cuconv::util::rng::Rng;
@@ -72,6 +77,12 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(|s| s.as_str())
+}
+
+/// Parse a `W:K` worker/request pair (the `--fault-panic` flag).
+fn parse_worker_request(v: &str) -> Option<(usize, u64)> {
+    let (w, k) = v.split_once(':')?;
+    Some((w.parse().ok()?, k.parse().ok()?))
 }
 
 fn parse_network(arg: Option<&str>) -> Result<Network> {
@@ -237,6 +248,7 @@ fn run(args: &[String]) -> Result<()> {
                 } else {
                     ShardSelection::LeastLoaded
                 },
+                ..PoolConfig::default()
             };
             if let Some(label) = opt(args, "--conv") {
                 let spec = ConvSpec::from_table_label(label)
@@ -538,6 +550,41 @@ fn serve_http(args: &[String]) -> Result<()> {
     let drive: Option<usize> = opt(args, "--drive").map(|v| v.parse()).transpose()?;
     let clients: usize =
         opt(args, "--clients").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let batch_share: f64 =
+        opt(args, "--batch-share").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+    if !(0.0..=1.0).contains(&batch_share) {
+        bail!("--batch-share must be in [0, 1], got {batch_share}");
+    }
+
+    // Deterministic fault injection: worker W misbehaves on the K-th
+    // item it serves. The supervised pool must recover — with --drive,
+    // recovery is asserted, not just hoped for.
+    let mut faults = Vec::new();
+    if let Some(v) = opt(args, "--fault-panic") {
+        let (w, k) = parse_worker_request(v)
+            .ok_or_else(|| anyhow!("--fault-panic wants W:K, got '{v}'"))?;
+        if w >= workers {
+            bail!("--fault-panic worker {w} does not exist (pool has {workers})");
+        }
+        faults.push(Fault::Panic { worker: w, request: k });
+    }
+    if let Some(v) = opt(args, "--fault-stall") {
+        let parts: Vec<&str> = v.split(':').collect();
+        let parsed = match parts.as_slice() {
+            [w, k, ms] => match (w.parse(), k.parse(), ms.parse()) {
+                (Ok(w), Ok(k), Ok(ms)) => Some((w, k, ms)),
+                _ => None,
+            },
+            _ => None,
+        };
+        let (w, k, ms): (usize, u64, u64) =
+            parsed.ok_or_else(|| anyhow!("--fault-stall wants W:K:MS, got '{v}'"))?;
+        if w >= workers {
+            bail!("--fault-stall worker {w} does not exist (pool has {workers})");
+        }
+        faults.push(Fault::Stall { worker: w, request: k, millis: ms });
+    }
+    let expects_restart = faults.iter().any(|f| matches!(f, Fault::Panic { .. }));
 
     let policy = BatchPolicy {
         max_batch: 4,
@@ -549,13 +596,24 @@ fn serve_http(args: &[String]) -> Result<()> {
     println!(
         "compiling {model} for batch sizes [1, 2, 4] x {workers} worker(s) ..."
     );
-    let server = Server::start_net(
-        Box::new(CpuRefBackend::new()),
-        &graph,
-        &[1, 2, 4],
-        policy,
-        PoolConfig::with_workers(workers),
-    )?;
+    let server = if faults.is_empty() {
+        Server::start_net(
+            Box::new(CpuRefBackend::new()),
+            &graph,
+            &[1, 2, 4],
+            policy,
+            PoolConfig::with_workers(workers),
+        )?
+    } else {
+        println!("fault plan armed: {faults:?}");
+        let runner = cuconv::coordinator::NetForwardRunner::new(
+            Box::new(CpuRefBackend::new()),
+            &graph,
+            &[1, 2, 4],
+        )?;
+        let injector = FaultInjector::new(Box::new(runner), FaultPlan::new(faults));
+        Server::start_pool(Box::new(injector), policy, PoolConfig::with_workers(workers))?
+    };
     let handle = server.handle();
     let image_elems = handle.image_elems();
     let state = AppState {
@@ -600,7 +658,7 @@ fn serve_http(args: &[String]) -> Result<()> {
     let mut rng = Rng::new(0x5E12);
     let mut img = vec![0.0f32; image_elems];
     rng.fill_uniform(&mut img, -1.0, 1.0);
-    let canonical = cuconv::http::infer_body(&model, 1, None, Some("smoke"), &img);
+    let canonical = cuconv::http::infer_body(&model, 1, None, Some("smoke"), None, &img);
     let (st, body) = c.post_json("/v1/infer", &canonical)?;
     if st != 200 {
         bail!("POST /v1/infer smoke failed: status {st}, body {body}");
@@ -617,33 +675,92 @@ fn serve_http(args: &[String]) -> Result<()> {
     println!("smoke OK: /v1/models and /v1/infer answer 200 with well-formed JSON");
 
     println!("driving {requests} requests from {clients} socket client(s) ...");
-    let report =
-        run_closed_loop_http(addr, &model, image_elems, requests, clients, 0xD22, None);
+    let failed = if batch_share > 0.0 {
+        let cr = run_closed_loop_http_mixed(
+            addr,
+            &model,
+            image_elems,
+            requests,
+            clients,
+            0xD22,
+            None,
+            batch_share,
+        );
+        for (name, r) in [("interactive", &cr.interactive), ("batch", &cr.batch)] {
+            println!(
+                "{name}: offered={} completed={} rejected={} failed={} expired={}",
+                r.offered(),
+                r.completed,
+                r.rejected,
+                r.failed,
+                r.expired
+            );
+        }
+        cr.interactive.failed + cr.batch.failed
+    } else {
+        let report = run_closed_loop_http(
+            addr,
+            &model,
+            image_elems,
+            requests,
+            clients,
+            0xD22,
+            None,
+        );
+        println!(
+            "offered={} completed={} rejected={} failed={} expired={} \
+             throughput={:.1} rps",
+            report.offered(),
+            report.completed,
+            report.rejected,
+            report.failed,
+            report.expired,
+            report.achieved_rps
+        );
+        report.failed
+    };
     let m = server.metrics();
     println!(
-        "offered={} completed={} rejected={} failed={} expired={} throughput={:.1} rps",
-        report.offered(),
-        report.completed,
-        report.rejected,
-        report.failed,
-        report.expired,
-        report.achieved_rps
-    );
-    println!(
         "server: requests={} batches={} mean_batch={:.2} latency p50<={:.2}ms \
-         p99<={:.2}ms",
+         p99<={:.2}ms restarts={}",
         m.requests,
         m.batches,
         m.mean_batch_size,
         m.total_p50 * 1e3,
-        m.total_p99 * 1e3
+        m.total_p99 * 1e3,
+        m.restarts
     );
     for b in &m.slo {
         println!("  slo: <= {:6.1} ms: {}", b.le_seconds * 1e3, b.count);
     }
+
+    // Fault-injected drives must end with the pool fully recovered: the
+    // planned panic fired, the worker was respawned, and the health
+    // endpoint answers 200 again.
+    if expects_restart {
+        if m.restarts < 1 {
+            http.shutdown();
+            bail!("fault plan included a panic but the pool recorded no restart");
+        }
+        if server.live_workers() != server.workers() {
+            http.shutdown();
+            bail!(
+                "pool not restored after faults: {}/{} workers live",
+                server.live_workers(),
+                server.workers()
+            );
+        }
+        wait_healthy(addr, Duration::from_secs(5))?;
+        println!(
+            "recovery OK: {} restart(s), {}/{} workers live, healthz 200",
+            m.restarts,
+            server.live_workers(),
+            server.workers()
+        );
+    }
     http.shutdown();
-    if report.failed > 0 {
-        bail!("{} request(s) failed during the drive", report.failed);
+    if failed > 0 {
+        bail!("{failed} request(s) failed during the drive");
     }
     Ok(())
 }

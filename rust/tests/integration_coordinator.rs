@@ -224,7 +224,7 @@ fn pool_round_robin_spreads_requests_across_workers() {
     };
     let pool = conv_pool(
         policy,
-        PoolConfig { workers: 4, selection: ShardSelection::RoundRobin },
+        PoolConfig { workers: 4, selection: ShardSelection::RoundRobin, ..PoolConfig::default() },
     );
     let h = pool.handle();
     let mut rng = Rng::new(11);
@@ -330,6 +330,253 @@ fn conv_server_shutdown_is_clean() {
     server.shutdown();
     // Further submissions fail cleanly.
     assert!(h.infer(image(&mut rng, h.image_elems())).is_err());
+}
+
+/// Worker supervision, priority-aware shedding, and the fault-injection
+/// harness — the chaos contract at integration scope.
+mod fault_tolerance {
+    use super::*;
+    use anyhow::Result;
+    use cuconv::coordinator::{
+        run_closed_loop_mixed, BatchOutput, BatchRunner, ConvBackendRunner, Fault,
+        FaultInjector, FaultPlan, Priority, Server, ServerHandle,
+    };
+    use cuconv::util::prop::{assert_prop, Config, PairOf, UsizeIn};
+
+    /// The faulted pools in this module plan batch sizes 1/2/4 (not the
+    /// outer `conv_pool`'s 1/2/4/8) so a reference pool built here is
+    /// plan-for-plan identical to the pool under fault injection.
+    fn faultable_runner() -> ConvBackendRunner {
+        ConvBackendRunner::new(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(8, 1, 3, 4, 4),
+            None,
+            &[1, 2, 4],
+        )
+        .unwrap()
+    }
+
+    fn faulted_pool(plan: FaultPlan, workers: usize) -> Server {
+        let faulty = FaultInjector::new(Box::new(faultable_runner()), plan);
+        Server::start_pool(
+            Box::new(faulty),
+            BatchPolicy::default(),
+            PoolConfig::with_workers(workers),
+        )
+        .unwrap()
+    }
+
+    /// Client-side offered must equal the server's four-way accounting
+    /// for every priority class — the zero-lost contract.
+    fn assert_zero_lost(
+        report: &cuconv::coordinator::ClassReport,
+        m: &cuconv::coordinator::MetricsSnapshot,
+    ) {
+        for snap in &m.per_class {
+            let r = report.class(snap.priority);
+            assert_eq!(
+                r.offered() as u64,
+                snap.offered(),
+                "{}: client offered {} but server accounted {} \
+                 (completed {} rejected {} failed {} expired {})",
+                snap.priority,
+                r.offered(),
+                snap.offered(),
+                snap.completed,
+                snap.rejected,
+                snap.failed,
+                snap.expired,
+            );
+        }
+    }
+
+    /// One seeded probe served at batch 1 through `h`, bitwise.
+    fn probe_bits(h: &ServerHandle, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        let img = image(&mut rng, h.image_elems());
+        h.infer(img).unwrap().logits.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn supervised_pool_recovers_from_injected_panic() {
+        let plan = FaultPlan::new(vec![Fault::Panic { worker: 0, request: 2 }]);
+        let server = faulted_pool(plan, 2);
+
+        let report =
+            run_closed_loop_mixed(&server.handle(), 32, 4, 0xFA11_5EED, None, 0.5);
+        let m = server.metrics();
+
+        assert_eq!(m.restarts, 1, "the panicked shard must be respawned exactly once");
+        assert_eq!(
+            m.failed, 0,
+            "the panicked shard's queue must be requeued, not failed"
+        );
+        assert_eq!(report.completed(), 32, "every request must still complete");
+        assert_zero_lost(&report, &m);
+        assert_eq!(
+            server.live_workers(),
+            server.workers(),
+            "the pool must be back to full strength"
+        );
+        assert!(m.restart_max_seconds >= 0.0 && m.restart_max_seconds.is_finite());
+
+        // Post-recovery numerics: bit-identical to a never-faulted
+        // single-worker pool.
+        let reference = Server::start_pool(
+            Box::new(faultable_runner()),
+            BatchPolicy::default(),
+            PoolConfig::with_workers(1),
+        )
+        .unwrap();
+        for seed in [7u64, 8, 9] {
+            assert_eq!(
+                probe_bits(&server.handle(), seed),
+                probe_bits(&reference.handle(), seed),
+                "seed {seed}: recovered pool diverged from the unfaulted reference"
+            );
+        }
+    }
+
+    #[test]
+    fn stall_is_survived_without_a_restart() {
+        let plan =
+            FaultPlan::new(vec![Fault::Stall { worker: 0, request: 1, millis: 30 }]);
+        let server = faulted_pool(plan, 2);
+        let report =
+            run_closed_loop_mixed(&server.handle(), 24, 4, 0x57A1_1u64, None, 0.5);
+        let m = server.metrics();
+        assert_eq!(m.restarts, 0, "a stall is not a crash");
+        assert_eq!(report.completed(), 24);
+        assert_zero_lost(&report, &m);
+    }
+
+    /// A runner whose first execution panics — for exercising the
+    /// *unsupervised* path and the shutdown join accounting.
+    struct Exploder;
+
+    impl BatchRunner for Exploder {
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn item_in_elems(&self) -> usize {
+            2
+        }
+        fn item_out_elems(&self) -> usize {
+            2
+        }
+        fn run(&mut self, _batch: usize, _input: Vec<f32>) -> Result<BatchOutput> {
+            panic!("exploder: always panics");
+        }
+    }
+
+    #[test]
+    fn unsupervised_panic_is_answered_and_counted_at_shutdown() {
+        // Regression for the silent `let _ = w.join()` swallow: a
+        // worker that dies unsupervised must (1) answer its in-flight
+        // requests with an error instead of dropping them, (2) show up
+        // in live_workers, and (3) be counted as a panicked join at
+        // shutdown rather than ignored.
+        let mut server = Server::start_pool(
+            Box::new(Exploder),
+            BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(1), queue_capacity: 4 },
+            PoolConfig { workers: 1, supervise: false, ..PoolConfig::default() },
+        )
+        .unwrap();
+        let h = server.handle();
+
+        let first = h.infer(vec![0.0; 2]);
+        assert!(first.is_err(), "a panicked worker must answer with an error, not hang");
+        let err = format!("{}", first.unwrap_err());
+        assert!(
+            err.contains("panic"),
+            "the error should say the worker panicked, got: {err}"
+        );
+        assert_eq!(server.live_workers(), 0, "the dead worker must leave the live count");
+        assert!(h.infer(vec![0.0; 2]).is_err(), "a dead pool must reject, not hang");
+
+        let m = server.metrics();
+        assert_eq!(m.failed, 1, "the in-flight request must be accounted as failed");
+
+        server.shutdown();
+        assert_eq!(
+            server.panicked_joins(),
+            1,
+            "shutdown must surface the panicked join instead of swallowing it"
+        );
+    }
+
+    #[test]
+    fn prop_accounting_holds_under_any_fault_schedule() {
+        // For any seeded panic/stall schedule: every class's accounting
+        // identity holds on both sides of the wire, nothing is served
+        // twice, and the pool still answers bit-identically to an
+        // unfaulted single-worker reference afterwards.
+        let gen = PairOf(UsizeIn { lo: 0, hi: 1_000_000 }, UsizeIn { lo: 2, hi: 3 });
+        let config = Config { cases: 5, seed: 0xFA57_C0DE, max_shrink_steps: 10 };
+        assert_prop(config, &gen, |&(seed, workers)| {
+            let plan = FaultPlan::random(seed as u64, workers, 3, 16);
+            let panics = plan
+                .faults
+                .iter()
+                .filter(|f| matches!(f, Fault::Panic { .. }))
+                .count() as u64;
+            let server = faulted_pool(plan, workers);
+            let report = run_closed_loop_mixed(
+                &server.handle(),
+                24,
+                4,
+                seed as u64 ^ 0xD1CE,
+                None,
+                0.5,
+            );
+            let m = server.metrics();
+
+            let mut completed_total = 0u64;
+            for p in Priority::ALL {
+                let r = report.class(p);
+                if r.offered() != r.completed + r.rejected + r.failed + r.expired {
+                    return Err(format!("{p}: client four-way accounting broken"));
+                }
+                let snap = m
+                    .per_class
+                    .iter()
+                    .find(|s| s.priority == p)
+                    .ok_or_else(|| format!("{p}: missing server class row"))?;
+                if snap.offered() != r.offered() as u64 {
+                    return Err(format!(
+                        "{p}: lost requests — client offered {} vs server {}",
+                        r.offered(),
+                        snap.offered()
+                    ));
+                }
+                completed_total += snap.completed;
+            }
+            if m.requests != completed_total {
+                return Err(format!(
+                    "double-serve: {} served vs {} completed",
+                    m.requests, completed_total
+                ));
+            }
+            if m.restarts > panics {
+                return Err(format!(
+                    "{} restarts from only {panics} planned panics",
+                    m.restarts
+                ));
+            }
+
+            let reference = Server::start_pool(
+                Box::new(faultable_runner()),
+                BatchPolicy::default(),
+                PoolConfig::with_workers(1),
+            )
+            .unwrap();
+            if probe_bits(&server.handle(), 0xB17) != probe_bits(&reference.handle(), 0xB17)
+            {
+                return Err("post-schedule output diverged from reference".to_string());
+            }
+            Ok(())
+        });
+    }
 }
 
 /// The AOT-model serving path (needs `--features pjrt` + artifacts).

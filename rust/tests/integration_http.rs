@@ -118,7 +118,7 @@ fn squeezenet_over_loopback_is_bit_identical_to_reference() {
     // One batch-2 request over the socket carrying both images.
     let mut payload = img0.clone();
     payload.extend_from_slice(&img1);
-    let body = infer_body(&fd.model, 2, None, Some("itest"), &payload);
+    let body = infer_body(&fd.model, 2, None, Some("itest"), None, &payload);
     let mut c = fd.client();
     let (status, resp) = c.post_json("/v1/infer", &body).expect("infer");
     assert_eq!(status, 200, "infer failed: {resp}");
@@ -149,7 +149,7 @@ fn dead_deadline_is_504_counted_expired_before_any_worker() {
     let img = fd.rand_image(7);
     let mut c = fd.client();
 
-    let body = infer_body(&fd.model, 1, Some(0), Some("t"), &img);
+    let body = infer_body(&fd.model, 1, Some(0), Some("t"), None, &img);
     let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");
     assert_eq!(status, 504, "zero deadline budget must be a gateway timeout");
     assert_eq!(class_of(&resp), "expired");
@@ -159,7 +159,7 @@ fn dead_deadline_is_504_counted_expired_before_any_worker() {
     assert_eq!(m.rejected, 0, "expired is its own class, not a rejection");
 
     // A generous deadline on the same connection still completes.
-    let body = infer_body(&fd.model, 1, Some(30_000), Some("t"), &img);
+    let body = infer_body(&fd.model, 1, Some(30_000), Some("t"), None, &img);
     let (status, _) = c.post_json("/v1/infer", &body).expect("exchange");
     assert_eq!(status, 200);
     assert_eq!(fd.server.metrics().requests, 1);
@@ -179,14 +179,14 @@ fn rate_limited_tenant_gets_429_others_unaffected() {
     let img = fd.rand_image(8);
     let mut c = fd.client();
 
-    let body_a = infer_body(&fd.model, 1, None, Some("team-a"), &img);
+    let body_a = infer_body(&fd.model, 1, None, Some("team-a"), None, &img);
     let (status, _) = c.post_json("/v1/infer", &body_a).expect("first");
     assert_eq!(status, 200, "a fresh tenant's first request passes");
     let (status, resp) = c.post_json("/v1/infer", &body_a).expect("second");
     assert_eq!(status, 429, "the bucket is empty");
     assert_eq!(class_of(&resp), "rejected");
 
-    let body_b = infer_body(&fd.model, 1, None, Some("team-b"), &img);
+    let body_b = infer_body(&fd.model, 1, None, Some("team-b"), None, &img);
     let (status, _) = c.post_json("/v1/infer", &body_b).expect("other tenant");
     assert_eq!(status, 200, "tenant isolation: team-b has its own bucket");
 
@@ -225,7 +225,7 @@ fn healthz_models_and_metrics_answer_over_one_connection() {
 
     // Serve one request, then read it back out of /metrics.
     let img = fd.rand_image(9);
-    let body = infer_body(&fd.model, 1, None, None, &img);
+    let body = infer_body(&fd.model, 1, None, None, None, &img);
     let (status, _) = c.post_json("/v1/infer", &body).expect("infer");
     assert_eq!(status, 200);
     let (status, body) = c.get("/metrics").expect("metrics");
@@ -269,10 +269,10 @@ fn malformed_requests_get_400s_and_never_wedge_the_server() {
         (r#"{"payload": [1.0]}"#.to_string(), 400),
         (format!(r#"{{"model": "{}"}}"#, fd.model), 400),
         // Unknown model routes 404.
-        (infer_body("no-such-model", 1, None, None, &img), 404),
+        (infer_body("no-such-model", 1, None, None, None, &img), 404),
         // Wrong payload size, zero batch, over-max batch.
-        (infer_body(&fd.model, 1, None, None, &img[..img.len() - 1]), 400),
-        (infer_body(&fd.model, 0, None, None, &img), 400),
+        (infer_body(&fd.model, 1, None, None, None, &img[..img.len() - 1]), 400),
+        (infer_body(&fd.model, 0, None, None, None, &img), 400),
         (format!(
             r#"{{"model": "{}", "batch": 99, "payload": [1.0]}}"#,
             fd.model
@@ -290,11 +290,128 @@ fn malformed_requests_get_400s_and_never_wedge_the_server() {
     }
 
     // The same keep-alive connection still serves a valid request.
-    let body = infer_body(&fd.model, 1, None, None, &img);
+    let body = infer_body(&fd.model, 1, None, None, None, &img);
     let (status, _) = c.post_json("/v1/infer", &body).expect("valid after garbage");
     assert_eq!(status, 200);
     let m = fd.server.metrics();
     assert_eq!(m.requests, 1, "only the valid request reached the pool");
+}
+
+/// A `"priority": "batch"` tag rides the wire into the dispatcher and
+/// lands in the Batch accounting class, visible in /metrics per_class;
+/// an unknown tag is a 400 before any admission cost.
+#[test]
+fn priority_tag_roundtrips_into_per_class_metrics() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let img = fd.rand_image(12);
+    let mut c = fd.client();
+
+    let body = infer_body(
+        &fd.model,
+        1,
+        None,
+        None,
+        Some(cuconv::coordinator::Priority::Batch),
+        &img,
+    );
+    let (status, _) = c.post_json("/v1/infer", &body).expect("batch infer");
+    assert_eq!(status, 200);
+
+    let (status, body) = c.get("/metrics").expect("metrics");
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    let classes = v.get("per_class").unwrap().as_arr().unwrap();
+    let completed_of = |name: &str| {
+        classes
+            .iter()
+            .find(|r| r.get("priority").unwrap().as_str().unwrap() == name)
+            .unwrap_or_else(|| panic!("missing class row {name}"))
+            .get("completed")
+            .unwrap()
+            .as_usize()
+            .unwrap()
+    };
+    assert_eq!(completed_of("batch"), 1, "the request must count in its own class");
+    assert_eq!(completed_of("interactive"), 0);
+
+    // An unknown priority is a shape error, refused before admission.
+    let bad = format!(
+        r#"{{"model": "{}", "priority": "urgent", "payload": [1.0]}}"#,
+        fd.model
+    );
+    let (status, resp) = c.post_json("/v1/infer", &bad).expect("bad priority");
+    assert_eq!(status, 400);
+    assert_eq!(class_of(&resp), "invalid");
+    assert!(resp.contains("priority"), "the error must name the field: {resp}");
+    assert_eq!(fd.server.metrics().requests, 1, "the bad request never dispatched");
+}
+
+/// Honest health: once a worker is dead (here: an unsupervised pool
+/// whose runner panics), `GET /healthz` must stop saying 200 "ok" and
+/// answer 503 "degraded" with the live-worker count.
+#[test]
+fn healthz_degrades_to_503_when_a_worker_dies() {
+    use anyhow::Result;
+    use cuconv::coordinator::{BatchOutput, BatchRunner};
+
+    struct Exploder;
+    impl BatchRunner for Exploder {
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn item_in_elems(&self) -> usize {
+            2
+        }
+        fn item_out_elems(&self) -> usize {
+            2
+        }
+        fn run(&mut self, _batch: usize, _input: Vec<f32>) -> Result<BatchOutput> {
+            panic!("exploder: always panics");
+        }
+        fn replicate(&self) -> Result<Box<dyn BatchRunner>> {
+            Ok(Box::new(Exploder))
+        }
+    }
+
+    let server = Server::start_pool(
+        Box::new(Exploder),
+        BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::from_millis(1),
+            queue_capacity: 4,
+        },
+        PoolConfig { workers: 2, supervise: false, ..PoolConfig::default() },
+    )
+    .expect("pool");
+    let handle = server.handle();
+    let http = HttpServer::start(
+        AppState {
+            handle: handle.clone(),
+            model: "exploding".to_string(),
+            max_batch: 1,
+            limiter: TenantLimiter::new(None),
+            default_deadline: None,
+            started: Instant::now(),
+        },
+        HttpConfig::default(),
+    )
+    .expect("http server");
+    wait_healthy(http.addr(), Duration::from_secs(5)).expect("healthy while intact");
+
+    let mut c = HttpClient::connect(http.addr()).expect("connect");
+    let (status, body) = c.get("/healthz").expect("healthz");
+    assert_eq!(status, 200, "all workers live: {body}");
+
+    // Kill one worker through the dispatcher; the panic is answered as
+    // an error, and health must degrade immediately after.
+    assert!(handle.infer(vec![0.0; 2]).is_err(), "the panicking worker errors");
+    let (status, body) = c.get("/healthz").expect("healthz after panic");
+    assert_eq!(status, 503, "a dead worker must fail health: {body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "degraded");
+    assert_eq!(v.get("workers").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(v.get("live_workers").unwrap().as_usize().unwrap(), 1);
 }
 
 /// Oversized bodies are refused with 413 before any buffering, and the
@@ -310,7 +427,7 @@ fn oversized_body_is_413_and_server_survives() {
         HttpConfig { max_body_bytes: 1024, ..HttpConfig::default() },
     );
     let img = fd.rand_image(11);
-    let body = infer_body(&fd.model, 1, None, None, &img); // > 1 KiB of text
+    let body = infer_body(&fd.model, 1, None, None, None, &img); // > 1 KiB of text
     assert!(body.len() > 1024, "test body must exceed the configured cap");
     let mut c = fd.client();
     let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");

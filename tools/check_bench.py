@@ -226,11 +226,139 @@ def check_http(path: str, doc: dict) -> None:
         nonneg_count(path, doc, key, "top level")
 
 
+def nonneg_number(path: str, row: dict, key: str, where: str) -> None:
+    v = row.get(key)
+    if (
+        not isinstance(v, (int, float))
+        or isinstance(v, bool)
+        or not math.isfinite(v)
+        or v < 0
+    ):
+        problem(path, f"{where}: '{key}' is {v!r}, expected a finite number >= 0")
+
+
+def check_chaos(path: str, doc: dict) -> None:
+    """The chaos contract: every scenario accounts every request in
+    exactly one of the four classes per priority with zero lost, panic
+    recovery actually happened somewhere with a finite recovery time,
+    every pool ends restored, and the recovered pool's outputs are
+    bit-identical to the unfaulted reference."""
+    classes = ("completed", "rejected", "failed", "expired")
+    priorities = {"interactive", "batch"}
+    scenarios = non_empty_rows(path, doc, "scenarios")
+    names = [s.get("scenario") for s in scenarios]
+    if len(set(names)) != len(names):
+        problem(path, f"duplicate scenario names: {names}")
+    any_restart = False
+    for s in scenarios:
+        where = f"scenarios[{s.get('scenario')!r}]"
+        if not s.get("scenario"):
+            problem(path, f"{where}: missing 'scenario' label")
+        for key in ("workers", "requests"):
+            finite_positive(path, s, key, where)
+        nonneg_count(path, s, "restarts", where)
+        restarts = s.get("restarts")
+        if isinstance(restarts, int) and restarts > 0:
+            any_restart = True
+        rec = s.get("recovery_max_ms")
+        if (
+            not isinstance(rec, (int, float))
+            or isinstance(rec, bool)
+            or not math.isfinite(rec)
+            or rec < 0
+        ):
+            problem(path, f"{where}: recovery_max_ms {rec!r} is not a finite time")
+        elif isinstance(restarts, int) and restarts > 0 and rec >= 600_000:
+            problem(
+                path,
+                f"{where}: recovery_max_ms {rec!r} is not a plausible measurement",
+            )
+        if s.get("pool_restored") is not True:
+            problem(path, f"{where}: 'pool_restored' is {s.get('pool_restored')!r}")
+        if s.get("lost") != 0:
+            problem(
+                path,
+                f"{where}: 'lost' is {s.get('lost')!r} — the zero-lost "
+                "contract is broken",
+            )
+        rows = s.get("classes")
+        if not isinstance(rows, list) or not rows:
+            problem(path, f"{where}: 'classes' missing or empty")
+            rows = []
+        seen = [r.get("priority") for r in rows if isinstance(r, dict)]
+        if rows and set(seen) != priorities:
+            problem(
+                path,
+                f"{where}: classes cover {sorted(set(seen))}, "
+                f"expected exactly {sorted(priorities)}",
+            )
+        for r in rows:
+            if not isinstance(r, dict):
+                problem(path, f"{where}: non-object class row")
+                continue
+            cw = f"{where}.classes[{r.get('priority')!r}]"
+            nonneg_count(path, r, "offered", cw)
+            for key in classes:
+                nonneg_count(path, r, key, cw)
+            if all(isinstance(r.get(k), int) for k in ("offered",) + classes):
+                total = sum(r[k] for k in classes)
+                if total != r["offered"]:
+                    problem(
+                        path,
+                        f"{cw}: completed+rejected+failed+expired = {total} "
+                        f"!= offered {r['offered']}",
+                    )
+            if r.get("lost") != 0:
+                problem(path, f"{cw}: 'lost' is {r.get('lost')!r}, must be 0")
+        curve = s.get("shed_curve")
+        if curve is not None:
+            if not isinstance(curve, list) or not curve:
+                problem(path, f"{where}: 'shed_curve' present but empty")
+                curve = []
+            for p in curve:
+                if not isinstance(p, dict):
+                    problem(path, f"{where}: non-object shed_curve point")
+                    continue
+                pw = f"{where}.shed_curve[clients={p.get('clients')!r}]"
+                finite_positive(path, p, "clients", pw)
+                for cls in ("interactive", "batch"):
+                    nonneg_count(path, p, f"{cls}_offered", pw)
+                    nonneg_count(path, p, f"{cls}_rejected", pw)
+                    frac = p.get(f"{cls}_rejected_frac")
+                    if (
+                        not isinstance(frac, (int, float))
+                        or isinstance(frac, bool)
+                        or not math.isfinite(frac)
+                        or not 0.0 <= float(frac) <= 1.0
+                    ):
+                        problem(
+                            path,
+                            f"{pw}: {cls}_rejected_frac {frac!r} outside [0, 1]",
+                        )
+                    off, rej = p.get(f"{cls}_offered"), p.get(f"{cls}_rejected")
+                    if isinstance(off, int) and isinstance(rej, int) and rej > off:
+                        problem(path, f"{pw}: {cls} rejected {rej} > offered {off}")
+    if scenarios and not any_restart:
+        problem(
+            path,
+            "no scenario recorded a restart — panic recovery was never exercised",
+        )
+    if doc.get("post_recovery_bit_identical") is not True:
+        problem(
+            path,
+            f"'post_recovery_bit_identical' is "
+            f"{doc.get('post_recovery_bit_identical')!r}",
+        )
+    if doc.get("pool_restored") is not True:
+        problem(path, f"'pool_restored' is {doc.get('pool_restored')!r}")
+
+
 CHECKERS = {
     "hotpath_micro": check_hotpath,
     "e2e_forward": check_e2e,
     "serve_scaling": check_serve,
     "http_serving": check_http,
+    "chaos_serving": check_chaos,
 }
 
 

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Self-test for tools/check_bench.py against known-good and mutated
+chaos reports.
+
+The chaos checker is itself part of the fault-tolerance contract: if it
+silently accepted a report with lost requests or a skipped recovery,
+the CI gate would be decorative. This script runs the checker on the
+committed good fixture (must pass) and on a battery of single-field
+mutations (each must fail, with the violation attributed to the right
+field).
+
+Usage:
+    python3 tools/test_check_bench.py
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CHECKER = os.path.join(HERE, "check_bench.py")
+GOOD = os.path.join(HERE, "fixtures", "BENCH_chaos_good.json")
+
+
+def run_checker(doc: dict, tmpdir: str) -> tuple[int, str]:
+    path = os.path.join(tmpdir, "BENCH_chaos.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f)
+    proc = subprocess.run(
+        [sys.executable, CHECKER, path],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def mutations() -> list[tuple[str, object, str]]:
+    """(name, mutator, expected-substring-in-output) triples. Each
+    mutator edits a deep copy of the good document in place."""
+
+    def wrong_tag(d):
+        d["bench"] = "chaos_srving"
+
+    def scenario_lost(d):
+        d["scenarios"][0]["lost"] = 2
+
+    def class_lost(d):
+        d["scenarios"][0]["classes"][1]["lost"] = 1
+
+    def broken_accounting(d):
+        d["scenarios"][1]["classes"][0]["completed"] -= 1
+
+    def no_restarts(d):
+        for s in d["scenarios"]:
+            s["restarts"] = 0
+
+    def bits_diverged(d):
+        d["post_recovery_bit_identical"] = False
+
+    def pool_not_restored(d):
+        d["scenarios"][0]["pool_restored"] = False
+
+    def recovery_nan(d):
+        # The JSON writer emits null for NaN/Inf — must be rejected.
+        d["scenarios"][0]["recovery_max_ms"] = None
+
+    def frac_out_of_range(d):
+        d["scenarios"][2]["shed_curve"][1]["batch_rejected_frac"] = 1.5
+
+    def rejected_exceeds_offered(d):
+        d["scenarios"][2]["shed_curve"][2]["batch_rejected"] = 99
+
+    def missing_class(d):
+        d["scenarios"][0]["classes"] = d["scenarios"][0]["classes"][:1]
+
+    def no_scenarios(d):
+        d["scenarios"] = []
+
+    def duplicate_scenarios(d):
+        d["scenarios"][1]["scenario"] = d["scenarios"][0]["scenario"]
+
+    def negative_count(d):
+        d["scenarios"][2]["classes"][1]["rejected"] = -3
+
+    return [
+        ("wrong bench tag", wrong_tag, "unknown bench tag"),
+        ("scenario-level lost", scenario_lost, "zero-lost"),
+        ("class-level lost", class_lost, "'lost'"),
+        ("broken four-way accounting", broken_accounting, "offered"),
+        ("no scenario restarted", no_restarts, "never exercised"),
+        ("bit-identity flag false", bits_diverged, "post_recovery_bit_identical"),
+        ("pool not restored", pool_not_restored, "pool_restored"),
+        ("recovery time is null", recovery_nan, "recovery_max_ms"),
+        ("shed frac out of range", frac_out_of_range, "outside [0, 1]"),
+        ("rejected exceeds offered", rejected_exceeds_offered, "> offered"),
+        ("a priority class vanished", missing_class, "expected exactly"),
+        ("empty scenario list", no_scenarios, "missing or empty"),
+        ("duplicate scenario names", duplicate_scenarios, "duplicate"),
+        ("negative count", negative_count, "count >= 0"),
+    ]
+
+
+def main() -> int:
+    with open(GOOD, encoding="utf-8") as f:
+        good = json.load(f)
+
+    failures: list[str] = []
+    with tempfile.TemporaryDirectory() as tmpdir:
+        rc, out = run_checker(good, tmpdir)
+        if rc != 0:
+            failures.append(f"good fixture rejected (rc={rc}):\n{out}")
+
+        for name, mutate, expect in mutations():
+            doc = copy.deepcopy(good)
+            mutate(doc)
+            rc, out = run_checker(doc, tmpdir)
+            if rc == 0:
+                failures.append(f"mutation '{name}' was not caught")
+            elif expect not in out:
+                failures.append(
+                    f"mutation '{name}' failed for the wrong reason "
+                    f"(wanted {expect!r} in output):\n{out}"
+                )
+
+    if failures:
+        print(f"test_check_bench: {len(failures)} failure(s):")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    print(f"test_check_bench: good fixture + {len(mutations())} mutations OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
