@@ -247,6 +247,59 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // 9) The tune cache: measured planning (timing every candidate
+    //    algorithm and tile) is a one-time, per-machine cost. Compile
+    //    once with measured choices — filling the cache as a side
+    //    effect — save the profile, load it back as a second process
+    //    would (`cuconv tune` / `--tune-cache` are the CLI form), and
+    //    re-plan. Warm start is provable: the process-global
+    //    measurement counter must not move at all.
+    {
+        use cuconv::net::{AlgoChoice, GraphBuilder, NetPlanner};
+        use cuconv::tunecache::{measurement_count, TuneCache};
+        use std::sync::Arc;
+
+        let demo = {
+            let mut b = GraphBuilder::new("tune-demo", 3, 16, 16);
+            let c1 = b.conv_same("c1", b.input(), 8, 3);
+            let c2 = b.conv_same("c2", c1, 8, 3);
+            let g = b.global_avg_pool("gap", c2);
+            let fc = b.linear("fc", g, 4, false);
+            b.softmax("sm", fc);
+            b.finish()
+        };
+        let tuned_planner = |cache: &Arc<TuneCache>| {
+            NetPlanner::new(Box::new(
+                CpuRefBackend::new()
+                    .with_measured_tiles(1)
+                    .with_tune_cache(cache.clone()),
+            ))
+            .with_choice(AlgoChoice::Measured { iters: 1 })
+            .with_tune_cache(cache.clone())
+        };
+
+        let cache = Arc::new(TuneCache::new());
+        let before = measurement_count();
+        tuned_planner(&cache).compile(&demo, 1)?;
+        let cold = measurement_count() - before;
+        let path = std::env::temp_dir()
+            .join(format!("cuconv_quickstart_tune_{}.json", std::process::id()));
+        cache.save(&path)?;
+
+        let warm_cache = Arc::new(TuneCache::load(&path));
+        let before = measurement_count();
+        tuned_planner(&warm_cache).compile(&demo, 1)?;
+        let warm = measurement_count() - before;
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(warm, 0, "a covering cache must plan without measuring");
+        println!(
+            "tune cache: cold planning ran {cold} timing measurements; warm \
+             planning from the saved profile ({} entries, {} hits) ran {warm}",
+            warm_cache.len(),
+            warm_cache.hits(),
+        );
+    }
+
     println!("quickstart OK");
     Ok(())
 }

@@ -1,0 +1,148 @@
+//! Bench: persistent tune-cache warm start — the cost of whole-network
+//! measured planning cold (every algorithm candidate and cuConv tile
+//! timed on this host) vs warm (every decision replayed from a saved
+//! `tune_cache.json`), on SqueezeNet for batch sizes [1, 2, 4].
+//!
+//! The warm pass is asserted, not just timed: zero timing measurements
+//! (the process-global `tunecache::measurement_count` must not move),
+//! zero cache misses, identical algorithm and tile choices to the cold
+//! plan, and a bit-identical save → load → save round trip.
+//!
+//! Results land in `BENCH_tune.json` at the repository root; CI gates
+//! on them via `tools/check_bench.py` (including the `--baseline`
+//! geomean comparison against `tools/baselines/BENCH_tune.json`).
+//! `CUCONV_BENCH_TUNE_ITERS` overrides the measured iterations per
+//! candidate (default 1 — keep the cold sweep CI-sized).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cuconv::backend::CpuRefBackend;
+use cuconv::net::{network_graph, AlgoChoice, NetPlan, NetPlanner};
+use cuconv::tunecache::{measurement_count, TuneCache};
+use cuconv::util::json::Json;
+use cuconv::zoo::Network;
+
+/// Every decision a compile made, as comparable strings: the algorithm
+/// pinned per conv node and the register tile of each packed cuConv
+/// plan, per batch size.
+fn choices_of(plans: &[(usize, NetPlan)]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (batch, plan) in plans {
+        for (name, algo) in plan.conv_algorithms() {
+            out.push(format!("{batch}:{name}:{}", algo.name()));
+        }
+        for id in 0..plan.graph().len() {
+            if let Some(tile) = plan.conv_plan(id).and_then(|p| {
+                p.packed_filters().map(|packed| packed.tile().label())
+            }) {
+                out.push(format!("{batch}:node{id}:tile:{tile}"));
+            }
+        }
+    }
+    out
+}
+
+fn planner_with(cache: &Arc<TuneCache>, iters: usize) -> NetPlanner {
+    let backend = CpuRefBackend::new()
+        .with_measured_tiles(iters)
+        .with_tune_cache(cache.clone());
+    NetPlanner::new(Box::new(backend))
+        .with_choice(AlgoChoice::Measured { iters })
+        .with_tune_cache(cache.clone())
+}
+
+fn main() {
+    let iters: usize = std::env::var("CUCONV_BENCH_TUNE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let net = Network::SqueezeNet;
+    let sizes = [1usize, 2, 4];
+    let graph = network_graph(net);
+
+    // Cold: measured planning with an empty cache; every candidate is
+    // timed and every decision recorded.
+    let cold_cache = Arc::new(TuneCache::new());
+    let before = measurement_count();
+    let t0 = Instant::now();
+    let cold_plans = planner_with(&cold_cache, iters)
+        .compile_for_sizes(&graph, &sizes)
+        .expect("cold compile");
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cold_measurements = measurement_count() - before;
+    assert!(cold_measurements > 0, "cold measured planning must measure");
+    assert!(!cold_cache.is_empty(), "cold planning must record decisions");
+
+    // Persist and reload — the cross-process boundary under test.
+    let path = std::env::temp_dir()
+        .join(format!("cuconv_bench_tune_{}.json", std::process::id()));
+    cold_cache.save(&path).expect("save tune cache");
+    let saved = std::fs::read_to_string(&path).expect("read saved cache");
+    let warm_cache = Arc::new(TuneCache::load(&path));
+    assert_eq!(warm_cache.degraded(), 0, "fresh file must load cleanly");
+    assert_eq!(warm_cache.len(), cold_cache.len());
+
+    // Warm: identical planner configuration, loaded cache. The whole
+    // compile must replay from the file — zero timed runs, zero misses.
+    let before = measurement_count();
+    let t0 = Instant::now();
+    let warm_plans = planner_with(&warm_cache, iters)
+        .compile_for_sizes(&graph, &sizes)
+        .expect("warm compile");
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let warm_measurements = measurement_count() - before;
+    assert_eq!(warm_measurements, 0, "warm planning must measure nothing");
+    assert_eq!(warm_cache.misses(), 0, "warm planning must not miss");
+    assert!(warm_cache.hits() > 0);
+
+    let cold_choices = choices_of(&cold_plans);
+    let warm_choices = choices_of(&warm_plans);
+    let choices_identical = cold_choices == warm_choices;
+    assert!(choices_identical, "warm plan must replay the cold choices");
+
+    // A warm plan mutates nothing: saving the reloaded cache again must
+    // reproduce the file byte for byte.
+    let resaved = warm_cache.to_json().to_string_pretty() + "\n";
+    let roundtrip_bit_identical = resaved == saved;
+    assert!(roundtrip_bit_identical, "save -> load -> warm plan -> save must round-trip");
+    std::fs::remove_file(&path).ok();
+
+    println!(
+        "tune_cache: {} x batches {sizes:?}, {iters} iter(s) per candidate",
+        graph.name
+    );
+    println!(
+        "cold plan: {cold_ms:8.1} ms  ({cold_measurements} timed candidates, {} entries)",
+        cold_cache.len()
+    );
+    println!(
+        "warm plan: {warm_ms:8.1} ms  ({warm_measurements} timed candidates, {} hits, {} misses)",
+        warm_cache.hits(),
+        warm_cache.misses()
+    );
+    println!("speedup:   {:8.1} x", cold_ms / warm_ms);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("tune_cache")),
+        ("network", Json::str(graph.name.clone())),
+        ("batch_sizes", Json::arr(sizes.iter().map(|&b| Json::num(b as f64)).collect())),
+        ("iters", Json::num(iters as f64)),
+        ("cold_plan_ms", Json::num(cold_ms)),
+        ("warm_plan_ms", Json::num(warm_ms)),
+        ("speedup", Json::num(cold_ms / warm_ms)),
+        ("cold_measurements", Json::num(cold_measurements as f64)),
+        ("warm_measurements", Json::num(warm_measurements as f64)),
+        ("warm_hits", Json::num(warm_cache.hits() as f64)),
+        ("warm_misses", Json::num(warm_cache.misses() as f64)),
+        ("entries", Json::num(warm_cache.len() as f64)),
+        ("choices_identical", Json::Bool(choices_identical)),
+        ("roundtrip_bit_identical", Json::Bool(roundtrip_bit_identical)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_tune.json");
+    match std::fs::write(path, report.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\n(could not write {path}: {e})"),
+    }
+    println!("tune_cache bench OK (warm start measured nothing)");
+}

@@ -32,11 +32,12 @@ use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::backend::plan::PlanImpl;
 use crate::backend::{Backend, ConvDescriptor, ConvPlan, Support, Workspace};
 use crate::conv::{ConvSpec, F32_BYTES};
-use crate::cpuref::cuconv::{conv_tiled_into, find_tile};
+use crate::cpuref::cuconv::{conv_tiled_into, find_tile_timed};
 use crate::cpuref::gemm::default_threads;
 use crate::cpuref::pack::{PackedFilters, TileShape};
 use crate::cpuref::CpuImpl;
 use crate::tensor::Tensor;
+use crate::tunecache::TuneCache;
 
 /// How [`CpuRefBackend`] picks the register-tile shape when packing
 /// filters for the tiled cuConv microkernel
@@ -46,7 +47,8 @@ pub enum TileChoice {
     /// [`TileShape::heuristic`] — instant, the planning default.
     #[default]
     Heuristic,
-    /// [`find_tile`] with this many timed iterations per candidate —
+    /// [`find_tile`](crate::cpuref::cuconv::find_tile) with this many
+    /// timed iterations per candidate —
     /// the `cudnnFind` analogue at tile granularity, cached per spec so
     /// a fleet planning many batch sizes measures each shape once.
     Measured { iters: usize },
@@ -76,6 +78,10 @@ pub struct CpuRefBackend {
     /// packing.
     #[allow(clippy::type_complexity)]
     pack_cache: Mutex<HashMap<(usize, TileShape), (Weak<Tensor>, Weak<PackedFilters>)>>,
+    /// Persistent tune cache, when attached ([`CpuRefBackend::with_tune_cache`]):
+    /// measured tile picks are looked up here before timing and recorded
+    /// here after, so they survive the process.
+    tune_cache: Option<Arc<TuneCache>>,
 }
 
 impl CpuRefBackend {
@@ -91,6 +97,17 @@ impl CpuRefBackend {
     /// serve one shape.
     pub fn with_measured_tiles(mut self, iters: usize) -> CpuRefBackend {
         self.tile_choice = TileChoice::Measured { iters: iters.max(1) };
+        self
+    }
+
+    /// Attach a persistent [`TuneCache`]: measured tile picks consult
+    /// the cache before running the timing sweep (a hit measures
+    /// nothing) and record fresh measurements into it (so
+    /// [`TuneCache::save`] persists them). Share the same `Arc` with a
+    /// [`NetPlanner`](crate::net::NetPlanner) so algorithm rankings and
+    /// tile picks land in one file.
+    pub fn with_tune_cache(mut self, cache: Arc<TuneCache>) -> CpuRefBackend {
+        self.tune_cache = Some(cache);
         self
     }
 
@@ -120,13 +137,25 @@ impl CpuRefBackend {
                 if let Some(&t) = self.tiles.lock().unwrap().get(&key) {
                     return t;
                 }
+                // Persistent cache next: a hit replays a prior process's
+                // measurement (zero bench_fn calls) and seeds the local
+                // map so later plans skip even the cache lock traffic.
+                if let Some(cache) = &self.tune_cache {
+                    if let Some(t) = cache.lookup_tile(&key) {
+                        return *self.tiles.lock().unwrap().entry(key).or_insert(t);
+                    }
+                }
                 // Measure outside the lock (find_tile runs real convs);
                 // insert-if-absent so concurrent planners of the same
                 // shape converge on ONE pick — a racing thread's
                 // duplicate measurement is wasted, but every plan (and
                 // therefore the pack cache) sees the same tile.
-                let t = find_tile(&key, iters);
-                *self.tiles.lock().unwrap().entry(key).or_insert(t)
+                let (t, p50_us) = find_tile_timed(&key, iters);
+                let t = *self.tiles.lock().unwrap().entry(key).or_insert(t);
+                if let Some(cache) = &self.tune_cache {
+                    cache.record_tile(&key, t, p50_us);
+                }
+                t
             }
         }
     }
@@ -558,6 +587,34 @@ mod tests {
             p1.packed_filters().unwrap(),
             p4.packed_filters().unwrap()
         ));
+    }
+
+    #[test]
+    fn tune_cache_warm_tile_pick_measures_nothing() {
+        let spec = ConvSpec::paper(8, 1, 3, 8, 4);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let mut rng = Rng::new(7);
+        let filters = std::sync::Arc::new(Tensor::random(
+            spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+        ));
+        // Cold backend: measures, records into the cache.
+        let cache = std::sync::Arc::new(TuneCache::new());
+        let cold = CpuRefBackend::new().with_measured_tiles(1).with_tune_cache(cache.clone());
+        let p1 = cold.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        let tile = p1.packed_filters().unwrap().tile();
+        assert_eq!(cache.misses(), 1, "cold pick must miss the cache first");
+        // Fresh backend, same cache: the warm plan replays the pick
+        // with zero timing measurements.
+        let warm = CpuRefBackend::new().with_measured_tiles(1).with_tune_cache(cache.clone());
+        let before = crate::tunecache::measurement_count();
+        let p2 = warm.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        assert_eq!(
+            crate::tunecache::measurement_count(),
+            before,
+            "a tile-cache hit must perform zero timing measurements"
+        );
+        assert_eq!(p2.packed_filters().unwrap().tile(), tile);
+        assert_eq!(cache.hits(), 1);
     }
 
     #[test]

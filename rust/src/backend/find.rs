@@ -1,6 +1,8 @@
 //! The cuDNN-style algorithm choosers, resolved against a backend:
-//! [`algo_get`] (heuristic, no timing) and [`algo_find`] (exhaustive,
-//! timed on the backend that will actually serve the plan).
+//! [`algo_get`] (heuristic, no timing), [`algo_find`] (exhaustive,
+//! timed on the backend that will actually serve the plan), and
+//! [`algo_find_cached`] (the persistent-cache front of `algo_find` — a
+//! hit replays a prior ranking with zero `bench_fn` calls).
 
 use anyhow::{anyhow, Result};
 
@@ -9,6 +11,7 @@ use crate::algo::{
 };
 use crate::backend::{Backend, ConvDescriptor, Workspace};
 use crate::tensor::Tensor;
+use crate::tunecache::TuneCache;
 use crate::util::rng::Rng;
 use crate::util::timer::{bench_fn, black_box, BenchOpts};
 
@@ -74,6 +77,7 @@ pub fn algo_find(
                 Err(_) => failed = true,
             }
         });
+        crate::tunecache::note_measurements(1);
         if failed {
             continue;
         }
@@ -85,6 +89,30 @@ pub fn algo_find(
     }
     entries.sort_by(|a, b| a.score_us.partial_cmp(&b.score_us).unwrap());
     AutotuneResult { spec, source: TimingSource::BackendMeasured, entries }
+}
+
+/// [`algo_find`] fronted by the persistent [`TuneCache`]: a cache hit
+/// replays the recorded ranking (same ordering, same scores, **zero**
+/// timed executions); a miss runs the full measured search and records
+/// the result so the next process hits. The warm-start contract the
+/// tunecache tests assert — `measurement_count` must not move across a
+/// hit — holds because this function touches no benchmark machinery on
+/// the hit path.
+pub fn algo_find_cached(
+    backend: &dyn Backend,
+    desc: &ConvDescriptor,
+    iters: usize,
+    cache: &TuneCache,
+) -> AutotuneResult {
+    let spec = *desc.spec();
+    if let Some(entries) = cache.lookup_algos(&spec) {
+        return AutotuneResult { spec, source: TimingSource::BackendMeasured, entries };
+    }
+    let result = algo_find(backend, desc, iters);
+    if !result.entries.is_empty() {
+        cache.record_algos(&spec, &result.entries);
+    }
+    result
 }
 
 #[cfg(test)]
@@ -213,5 +241,44 @@ mod tests {
         let desc = ConvDescriptor::new(ConvSpec::paper(7, 1, 1, 4, 4)).unwrap();
         let r = algo_find(&BrokenBackend, &desc, 1);
         assert!(r.entries.is_empty(), "failing executes must be skipped");
+    }
+
+    #[test]
+    fn algo_find_cached_hit_measures_nothing_and_replays_the_ranking() {
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        let desc = ConvDescriptor::new(spec).unwrap();
+        let cache = crate::tunecache::TuneCache::new();
+
+        let before = crate::tunecache::measurement_count();
+        let cold = algo_find_cached(&backend, &desc, 1, &cache);
+        assert!(!cold.entries.is_empty());
+        assert!(
+            crate::tunecache::measurement_count() > before,
+            "cold search must measure"
+        );
+        assert_eq!(cache.misses(), 1);
+
+        let warm_before = crate::tunecache::measurement_count();
+        let warm = algo_find_cached(&backend, &desc, 1, &cache);
+        assert_eq!(
+            crate::tunecache::measurement_count(),
+            warm_before,
+            "a cache hit must perform zero timing measurements"
+        );
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(warm.entries, cold.entries, "replayed ranking must be identical");
+        assert_eq!(warm.source, TimingSource::BackendMeasured);
+    }
+
+    #[test]
+    fn algo_find_cached_records_nothing_for_an_empty_search() {
+        // BrokenBackend yields no entries; caching an empty ranking
+        // would poison every later process into "zero algorithms".
+        let desc = ConvDescriptor::new(ConvSpec::paper(7, 1, 1, 4, 4)).unwrap();
+        let cache = crate::tunecache::TuneCache::new();
+        let r = algo_find_cached(&BrokenBackend, &desc, 1, &cache);
+        assert!(r.entries.is_empty());
+        assert_eq!(cache.len(), 0, "empty results must not be recorded");
     }
 }

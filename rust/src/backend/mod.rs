@@ -45,7 +45,7 @@ mod pjrt;
 
 pub use cpu::{CpuRefBackend, TileChoice};
 pub use descriptor::ConvDescriptor;
-pub use find::{algo_find, algo_get};
+pub use find::{algo_find, algo_find_cached, algo_get};
 pub use plan::{ConvPlan, Workspace};
 
 #[cfg(feature = "pjrt")]

@@ -265,10 +265,25 @@ impl NetForwardRunner {
         graph: &crate::net::NetGraph,
         batch_sizes: &[usize],
     ) -> Result<NetForwardRunner> {
+        NetForwardRunner::with_planner(
+            crate::net::NetPlanner::new(backend),
+            graph,
+            batch_sizes,
+        )
+    }
+
+    /// As [`NetForwardRunner::new`], with a caller-configured planner —
+    /// the hook for measured algorithm choice and an attached
+    /// [`TuneCache`](crate::tunecache::TuneCache) (`--tune-cache`),
+    /// where a warm cache compiles the whole pool with zero timed runs.
+    pub fn with_planner(
+        planner: crate::net::NetPlanner,
+        graph: &crate::net::NetGraph,
+        batch_sizes: &[usize],
+    ) -> Result<NetForwardRunner> {
         if !batch_sizes.contains(&1) {
             bail!("batch sizes must include 1 (got {batch_sizes:?})");
         }
-        let planner = crate::net::NetPlanner::new(backend);
         let plans = planner.compile_for_sizes(graph, batch_sizes)?;
         let (item_in, item_out) = {
             let p1 = &plans[0].1;

@@ -426,6 +426,25 @@ impl Server {
         Server::start_pool(Box::new(runner), policy, pool)
     }
 
+    /// As [`Server::start_net`], compiling through a caller-configured
+    /// [`NetPlanner`](crate::net::NetPlanner) — the `--tune-cache`
+    /// serving path, where a warm persistent cache makes pool startup
+    /// measurement-free.
+    pub fn start_net_planned(
+        planner: crate::net::NetPlanner,
+        graph: &crate::net::NetGraph,
+        batch_sizes: &[usize],
+        policy: BatchPolicy,
+        pool: PoolConfig,
+    ) -> Result<Server> {
+        let runner = crate::coordinator::runner::NetForwardRunner::with_planner(
+            planner,
+            graph,
+            batch_sizes,
+        )?;
+        Server::start_pool(Box::new(runner), policy, pool)
+    }
+
     /// Start serving `config.model` from the artifact manifest (AOT
     /// model executables through PJRT).
     #[cfg(feature = "pjrt")]

@@ -492,6 +492,14 @@ fn tile_strip<const MR: usize, const NR: usize>(
 /// tile shape never changes outputs (bit-identical accumulation order),
 /// so this is pure performance tuning.
 pub fn find_tile(spec: &ConvSpec, iters: usize) -> TileShape {
+    find_tile_timed(spec, iters).0
+}
+
+/// [`find_tile`] with the winner's measured p50 (in µs) alongside, so
+/// the persistent cache ([`crate::tunecache`]) can store the timing
+/// next to the decision. Each timed candidate is counted via
+/// [`crate::tunecache::note_measurements`] — the warm-start proof.
+pub fn find_tile_timed(spec: &ConvSpec, iters: usize) -> (TileShape, f64) {
     use crate::util::timer::{bench_fn, black_box, BenchOpts};
     let mut rng = crate::util::rng::Rng::new(0x711E);
     let input = Tensor::random(spec.n, spec.c, spec.h, spec.w, &mut rng, -1.0, 1.0);
@@ -506,11 +514,12 @@ pub fn find_tile(spec: &ConvSpec, iters: usize) -> TileShape {
             conv_tiled_into(spec, &input, &packed, threads, &mut out);
             black_box(out.first().copied());
         });
+        crate::tunecache::note_measurements(1);
         if s.p50 < best.1 {
             best = (tile, s.p50);
         }
     }
-    best.0
+    (best.0, best.1 * 1e6)
 }
 
 #[cfg(test)]

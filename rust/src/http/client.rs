@@ -49,15 +49,44 @@ impl HttpClient {
 
     /// POST a JSON `body` to `path`; returns `(status, body)`.
     pub fn post_json(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
+        let (status, body, _) = self.post_json_traced(path, body, None)?;
+        Ok((status, body))
+    }
+
+    /// POST with an optional client-chosen `X-Request-Id`; also returns
+    /// the id the server echoed (or minted) on the response, so callers
+    /// can correlate — and assert — end to end.
+    pub fn post_json_traced(
+        &mut self,
+        path: &str,
+        body: &str,
+        request_id: Option<&str>,
+    ) -> Result<(u16, String, Option<String>)> {
         write!(
             self.writer,
             "POST {path} HTTP/1.1\r\nHost: cuconv\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+             Content-Length: {}\r\nConnection: keep-alive\r\n",
             body.len()
         )?;
+        if let Some(id) = request_id {
+            write!(self.writer, "X-Request-Id: {id}\r\n")?;
+        }
+        self.writer.write_all(b"\r\n")?;
         self.writer.write_all(body.as_bytes())?;
         self.writer.flush()?;
-        self.read_response()
+        let head = self
+            .reader
+            .read_head()?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        let (status, len) =
+            parse_response_head(&head).map_err(|e| anyhow!("bad response: {e}"))?;
+        let echoed = response_request_id(&head);
+        let body = self.reader.read_body(len)?;
+        Ok((
+            status,
+            String::from_utf8(body).context("response body UTF-8")?,
+            echoed,
+        ))
     }
 
     fn read_response(&mut self) -> Result<(u16, String)> {
@@ -70,6 +99,20 @@ impl HttpClient {
         let body = self.reader.read_body(len)?;
         Ok((status, String::from_utf8(body).context("response body UTF-8")?))
     }
+}
+
+/// Pull the `X-Request-Id` header out of a raw response head.
+fn response_request_id(head: &str) -> Option<String> {
+    for line in head.lines().skip(1) {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if name.trim().eq_ignore_ascii_case("x-request-id") {
+            let v = value.trim();
+            if !v.is_empty() {
+                return Some(v.to_string());
+            }
+        }
+    }
+    None
 }
 
 /// Build a `/v1/infer` request body. Hot fields come first and the

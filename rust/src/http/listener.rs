@@ -16,7 +16,7 @@
 
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -26,6 +26,18 @@ use anyhow::{Context, Result};
 use super::parser::{parse_request_head, HttpReader};
 use super::responses::Response;
 use super::router::{handle_request, AppState};
+
+/// Process-wide counter behind [`mint_request_id`].
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a correlation id (`req-<hex>`) for a request that arrived
+/// without an `X-Request-Id` header — or never got far enough to have
+/// headers at all (pre-parse refusals, over-budget 503s). Every
+/// response the front door writes carries one, so any client-visible
+/// outcome can be joined against the server log.
+fn mint_request_id() -> String {
+    format!("req-{:08x}", NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed))
+}
 
 /// Front-door configuration (the [`AppState`] carries the routing and
 /// admission policy; this is the socket side).
@@ -141,6 +153,7 @@ fn accept_loop(
             let mut s = stream;
             let _ = Response::error(503, "connection limit reached")
                 .with_close(true)
+                .with_request_id(mint_request_id())
                 .write_to(&mut s);
             continue;
         }
@@ -214,6 +227,7 @@ fn connection_loop(
                 // drop the connection (framing is unrecoverable).
                 let _ = Response::error(400, &e.to_string())
                     .with_close(true)
+                    .with_request_id(mint_request_id())
                     .write_to(&mut writer);
                 return Ok(());
             }
@@ -224,10 +238,15 @@ fn connection_loop(
             Err(e) => {
                 let _ = Response::error(400, &e)
                     .with_close(true)
+                    .with_request_id(mint_request_id())
                     .write_to(&mut writer);
                 return Ok(());
             }
         };
+        // Echo the client's id when it sent one, mint one otherwise;
+        // either way every response from here on carries it.
+        let request_id =
+            head.request_id.clone().unwrap_or_else(mint_request_id);
         if head.content_length > cfg.max_body_bytes {
             // Refuse without reading the body; the unread bytes make
             // the framing unrecoverable, so close.
@@ -239,6 +258,7 @@ fn connection_loop(
                 ),
             )
             .with_close(true)
+            .with_request_id(request_id)
             .write_to(&mut writer);
             return Ok(());
         }
@@ -247,7 +267,9 @@ fn connection_loop(
         }
         let body = read_body_patiently(&mut reader, head.content_length, shutdown)?;
         let close = head.close || shutdown.load(Ordering::SeqCst);
-        let resp = handle_request(state, &head, &body).with_close(close);
+        let resp = handle_request(state, &head, &body)
+            .with_close(close)
+            .with_request_id(request_id);
         resp.write_to(&mut writer)?;
         if close {
             return Ok(());

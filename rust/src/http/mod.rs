@@ -22,6 +22,11 @@
 //! * `GET /healthz` — honest health: 200 `"ok"` only while every worker
 //!   is live and the pool is not browned out, else 503 `"degraded"`.
 //!
+//! Every response carries an `X-Request-Id` correlation header — the
+//! client's own id echoed back when it sent one, a server-minted
+//! `req-<hex>` otherwise — including error responses and the refusals
+//! written before a request head ever parsed.
+//!
 //! Submodule map: [`parser`] (bounded head/body reading + lazy JSON),
 //! [`admission`] (per-tenant token buckets), [`router`] (the pure
 //! request→response pipeline), [`responses`] (status/class table and

@@ -194,8 +194,14 @@ impl<'a> Scan<'a> {
 
 /// Decode a scanned string-value span into its text (full unescaping,
 /// via the strict parser — the span is tiny, e.g. a tenant name).
+///
+/// The span comes from [`Scan::value_span`], which for strings covers
+/// the value *including* both quotes — slice it exactly as scanned. A
+/// widened slice (`start - 1..end + 1`) would drag in a neighbouring
+/// byte on each side (and read out of bounds when a non-string value
+/// ends flush at the end of the body, e.g. `"model":1` at EOF).
 pub fn span_str(body: &[u8], span: &Span) -> Result<String, String> {
-    let raw = std::str::from_utf8(&body[span.start.saturating_sub(1)..span.end + 1])
+    let raw = std::str::from_utf8(&body[span.clone()])
         .map_err(|_| "string field is not UTF-8".to_string())?;
     match crate::util::json::parse(raw) {
         Ok(crate::util::json::Json::Str(s)) => Ok(s),
@@ -281,6 +287,10 @@ pub struct RequestHead {
     /// Client sent `Expect: 100-continue` and is waiting for the
     /// interim response before transmitting the body.
     pub expect_continue: bool,
+    /// Client-supplied `X-Request-Id` (trimmed, first occurrence). The
+    /// server echoes it on the response — including error responses —
+    /// and stamps it into logs; absent, the listener mints one.
+    pub request_id: Option<String>,
 }
 
 /// Parse a request head (request line + headers, no trailing blank
@@ -303,6 +313,7 @@ pub fn parse_request_head(head: &str) -> Result<RequestHead, String> {
     let mut content_length = 0usize;
     let mut close = !http11;
     let mut expect_continue = false;
+    let mut request_id: Option<String> = None;
     for line in lines {
         let Some((name, value)) = line.split_once(':') else {
             return Err(format!("malformed header line '{line}'"));
@@ -326,10 +337,23 @@ pub fn parse_request_head(head: &str) -> Result<RequestHead, String> {
             "expect" => {
                 expect_continue = value.eq_ignore_ascii_case("100-continue");
             }
+            "x-request-id" => {
+                if request_id.is_none() && !value.is_empty() {
+                    request_id = Some(value.to_string());
+                }
+            }
             _ => {}
         }
     }
-    Ok(RequestHead { method, path, http11, content_length, close, expect_continue })
+    Ok(RequestHead {
+        method,
+        path,
+        http11,
+        content_length,
+        close,
+        expect_continue,
+        request_id,
+    })
 }
 
 /// Parse a response head (status line + headers) — the client half.
@@ -466,6 +490,32 @@ mod tests {
     }
 
     #[test]
+    fn span_str_handles_number_value_flush_at_eof() {
+        // Regression: a non-string value whose span ends exactly at the
+        // end of the body (`"model":1` with no closing brace — lazy_scan
+        // never looks past the last requested key, so this is reachable
+        // from the wire). span_str used to widen the slice by one byte
+        // on each side and panicked with an out-of-bounds index here; it
+        // must instead return a type error.
+        let body = br#"{"batch":1,"deadline_ms":1,"tenant":"t","payload":[],"model":1"#;
+        let spans = lazy_scan(
+            body,
+            &["model", "batch", "deadline_ms", "tenant", "payload"],
+        )
+        .unwrap();
+        let model = spans[0].as_ref().unwrap();
+        assert_eq!(model.end, body.len(), "span must end flush at EOF");
+        let err = span_str(body, model).unwrap_err();
+        assert!(err.contains("expected a JSON string"), "got: {err}");
+        // A string value flush at EOF decodes fine.
+        let body = br#"{"batch":1,"model":"sq""#;
+        let spans = lazy_scan(body, &["model", "batch"]).unwrap();
+        let model = spans[0].as_ref().unwrap();
+        assert_eq!(model.end, body.len());
+        assert_eq!(span_str(body, model).unwrap(), "sq");
+    }
+
+    #[test]
     fn lazy_scan_reports_missing_fields_as_none() {
         let body = br#"{"model": "x", "payload": []}"#;
         let spans =
@@ -550,6 +600,20 @@ mod tests {
         assert_eq!(h.content_length, 12);
         assert!(h.close);
         assert!(!h.expect_continue);
+        assert!(h.request_id.is_none());
+
+        let h = parse_request_head(
+            "POST /v1/infer HTTP/1.1\r\nX-Request-ID:  abc-123 \r\n\
+             x-request-id: second",
+        )
+        .unwrap();
+        assert_eq!(
+            h.request_id.as_deref(),
+            Some("abc-123"),
+            "trimmed, case-insensitive, first occurrence wins"
+        );
+        let h = parse_request_head("GET / HTTP/1.1\r\nX-Request-Id:").unwrap();
+        assert!(h.request_id.is_none(), "empty id is treated as absent");
 
         let h = parse_request_head("GET /healthz HTTP/1.1").unwrap();
         assert_eq!(h.content_length, 0);

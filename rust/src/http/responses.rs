@@ -50,6 +50,11 @@ pub struct Response {
     pub status: u16,
     pub body: String,
     pub close: bool,
+    /// Request correlation id, echoed as an `X-Request-Id` response
+    /// header on every response shape — 200s, error bodies, and the
+    /// listener's pre-parse refusals alike — so a client log line and a
+    /// server log line can be joined on it.
+    pub request_id: Option<String>,
 }
 
 impl Response {
@@ -62,7 +67,12 @@ impl Response {
     /// answers that are richer than the two-field error shape (e.g. the
     /// degraded health report).
     pub fn json(status: u16, body: &Json) -> Response {
-        Response { status, body: body.to_string_compact(), close: false }
+        Response {
+            status,
+            body: body.to_string_compact(),
+            close: false,
+            request_id: None,
+        }
     }
 
     /// An error response with the canonical two-field body.
@@ -71,11 +81,22 @@ impl Response {
             ("error", Json::str(msg)),
             ("class", Json::str(class_of(status))),
         ]);
-        Response { status, body: body.to_string_compact(), close: false }
+        Response {
+            status,
+            body: body.to_string_compact(),
+            close: false,
+            request_id: None,
+        }
     }
 
     pub fn with_close(mut self, close: bool) -> Response {
         self.close = close;
+        self
+    }
+
+    /// Attach the correlation id echoed as `X-Request-Id`.
+    pub fn with_request_id(mut self, id: impl Into<String>) -> Response {
+        self.request_id = Some(id.into());
         self
     }
 
@@ -84,12 +105,22 @@ impl Response {
         write!(
             w,
             "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: {}\r\n\r\n",
+             Content-Length: {}\r\nConnection: {}\r\n",
             self.status,
             reason(self.status),
             self.body.len(),
             if self.close { "close" } else { "keep-alive" },
         )?;
+        if let Some(id) = &self.request_id {
+            // The id either came off the wire as a header value (so it
+            // holds no CR/LF) or was minted by the listener; strip
+            // control bytes anyway so a response head can never be
+            // split by a hostile id.
+            let clean: String =
+                id.chars().filter(|c| !c.is_control()).collect();
+            write!(w, "X-Request-Id: {clean}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.write_all(self.body.as_bytes())?;
         w.flush()
     }
@@ -110,6 +141,36 @@ mod tests {
             "tenant \"team-a\" over rate limit",
             "quotes in messages must survive the JSON roundtrip"
         );
+    }
+
+    #[test]
+    fn request_id_is_echoed_on_success_and_error_heads() {
+        for resp in [
+            Response::ok(&Json::obj(vec![("ok", Json::Bool(true))])),
+            Response::error(400, "bad body"),
+        ] {
+            let mut wire: Vec<u8> = Vec::new();
+            resp.with_request_id("req-0000002a").write_to(&mut wire).unwrap();
+            let text = String::from_utf8(wire).unwrap();
+            let (head, _) = text.split_once("\r\n\r\n").unwrap();
+            assert!(
+                head.contains("X-Request-Id: req-0000002a"),
+                "id missing from head: {head}"
+            );
+        }
+        // No id attached → no header emitted.
+        let mut wire: Vec<u8> = Vec::new();
+        Response::error(500, "boom").write_to(&mut wire).unwrap();
+        assert!(!String::from_utf8(wire).unwrap().contains("X-Request-Id"));
+        // A hostile id cannot split the head.
+        let mut wire: Vec<u8> = Vec::new();
+        Response::error(400, "x")
+            .with_request_id("a\r\nInjected: yes")
+            .write_to(&mut wire)
+            .unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.contains("X-Request-Id: aInjected: yes"));
+        assert!(!text.contains("\r\nInjected"));
     }
 
     #[test]

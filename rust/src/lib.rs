@@ -18,8 +18,10 @@
 //!   input-to-logits execution of the five zoo CNNs), a serving
 //!   coordinator with dynamic batching, an HTTP/JSON front door
 //!   ([`http`]: admission control, deadlines, SLO metrics over plain
-//!   TCP), and the bench harness that regenerates every table and
-//!   figure of the paper's evaluation.
+//!   TCP), a persistent autotune cache ([`tunecache`]: tuned decisions
+//!   survive process restarts, warm-started planners measure nothing),
+//!   and the bench harness that regenerates every table and figure of
+//!   the paper's evaluation.
 //!
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only and the `cuconv` binary is self-contained afterwards.
@@ -43,6 +45,7 @@ pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod tensor;
+pub mod tunecache;
 pub mod util;
 pub mod zoo;
 

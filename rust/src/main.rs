@@ -11,16 +11,29 @@
 //! cuconv plan <network> [--batch B] [--measure]
 //!                                       per-layer algorithm plan
 //! cuconv forward <network> [--batch N] [--cpu] [--measure]
+//!                [--tune-cache PATH [--assert-warm]]
 //!                                       whole-network forward pass with a
-//!                                       per-layer time/algorithm breakdown
+//!                                       per-layer time/algorithm breakdown;
+//!                                       --tune-cache replays a saved tune
+//!                                       profile (--assert-warm fails unless
+//!                                       planning measured nothing)
+//! cuconv tune <network> [--out PATH] [--iters N]
+//!                                       measure algorithm rankings + cuConv
+//!                                       tile picks for batch sizes 1/2/4
+//!                                       and write a persistent tune cache
+//!                                       (default tune_cache.json) that
+//!                                       forward/serve-bench/serve-http
+//!                                       load via --tune-cache
 //! cuconv serve-bench [--requests N] [--workers W] [--queue-depth D]
 //!                    [--round-robin] [--conv HW-N-K-M-C | --net NETWORK]
+//!                    [--tune-cache PATH]
 //!                                       end-to-end serving benchmark
 //!                                       (W worker shards, D-deep
 //!                                       bounded queue per shard)
 //! cuconv serve-http <network> [--port P] [--workers W] [--queue-depth D]
 //!                   [--rate-limit RPS] [--burst B] [--deadline-ms MS]
 //!                   [--drive N] [--clients C] [--batch-share F]
+//!                   [--tune-cache PATH]
 //!                   [--fault-panic W:K] [--fault-stall W:K:MS]
 //!                                       HTTP/JSON front door over the
 //!                                       shard pool; --drive N runs a
@@ -41,6 +54,7 @@
 //! (`clap` is not in the offline vendor set; argument parsing is a thin
 //! hand-rolled matcher.)
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -57,6 +71,7 @@ use cuconv::http::{
     AppState, HttpClient, HttpConfig, HttpServer, RateLimit, TenantLimiter,
 };
 use cuconv::report::{self, figures, tables};
+use cuconv::tunecache::TuneCache;
 use cuconv::util::rng::Rng;
 use cuconv::zoo::Network;
 
@@ -232,7 +247,16 @@ fn run(args: &[String]) -> Result<()> {
             // the per-conv choice from the heuristic `algo_get` to the
             // timed `algo_find` (slow at compile time).
             let _ = flag(args, "--cpu");
-            forward_network(net, batch, flag(args, "--measure"))?;
+            forward_network(
+                net,
+                batch,
+                flag(args, "--measure"),
+                opt(args, "--tune-cache"),
+                flag(args, "--assert-warm"),
+            )?;
+        }
+        "tune" => {
+            tune(args)?;
         }
         "serve-bench" => {
             let requests: usize =
@@ -255,7 +279,13 @@ fn run(args: &[String]) -> Result<()> {
                     .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
                 serve_bench_conv(spec, requests, pool, queue_depth)?;
             } else if let Some(name) = opt(args, "--net") {
-                serve_bench_net(parse_network(Some(name))?, requests, pool, queue_depth)?;
+                serve_bench_net(
+                    parse_network(Some(name))?,
+                    requests,
+                    pool,
+                    queue_depth,
+                    opt(args, "--tune-cache"),
+                )?;
             } else {
                 serve_bench_model(requests, pool, queue_depth)?;
             }
@@ -270,44 +300,167 @@ fn run(args: &[String]) -> Result<()> {
             println!("cuconv {} — see README.md", cuconv::VERSION);
             println!(
                 "commands: census registry tables figures sweep autotune plan \
-                 forward serve-bench serve-http validate"
+                 forward tune serve-bench serve-http validate"
             );
             println!(
                 "  forward <net> [--batch N] [--cpu] [--measure]  whole-network \
                  forward pass (cpuref backend) with a per-layer breakdown"
+            );
+            println!(
+                "  tune <net> [--out PATH] [--iters N]  measure algorithm + tile \
+                 choices and write a persistent tune cache; replay it with \
+                 --tune-cache PATH on forward/serve-bench/serve-http \
+                 (forward also takes --assert-warm)"
             );
         }
     }
     Ok(())
 }
 
+/// Measured iterations for tuning paths (`tune`, `--measure`,
+/// `--tune-cache` misses) — one value so the cache is filled and
+/// consulted by identically configured planners.
+const TUNE_ITERS: usize = 2;
+
+/// Load a `--tune-cache PATH` file and build the measured planner that
+/// consults it: algorithm rankings and cuConv tile picks replay from
+/// the file (zero timed runs on a full hit), and misses are measured
+/// and recorded in memory so callers may re-save.
+fn cached_planner(path: &str) -> (cuconv::net::NetPlanner, Arc<TuneCache>) {
+    use cuconv::net::{AlgoChoice, NetPlanner};
+
+    let cache = Arc::new(TuneCache::load(path));
+    println!(
+        "tune cache {path}: {} entries loaded, {} degradation(s)",
+        cache.len(),
+        cache.degraded()
+    );
+    let backend = CpuRefBackend::new()
+        .with_measured_tiles(TUNE_ITERS)
+        .with_tune_cache(cache.clone());
+    let planner = NetPlanner::new(Box::new(backend))
+        .with_choice(AlgoChoice::Measured { iters: TUNE_ITERS })
+        .with_tune_cache(cache.clone());
+    (planner, cache)
+}
+
+/// The `tune` command: run the measured planning sweep for batch sizes
+/// [1, 2, 4] once, and persist every decision (algorithm rankings,
+/// tile picks, timings) so later processes plan warm.
+fn tune(args: &[String]) -> Result<()> {
+    use cuconv::net::{network_graph, AlgoChoice, NetPlanner};
+    use std::time::Instant;
+
+    let net = parse_network(args.get(1).map(|s| s.as_str()))?;
+    let out = opt(args, "--out").unwrap_or("tune_cache.json");
+    let iters: usize =
+        opt(args, "--iters").map(|v| v.parse()).transpose()?.unwrap_or(TUNE_ITERS);
+    let graph = network_graph(net);
+    let cache = Arc::new(TuneCache::new());
+    let backend = CpuRefBackend::new()
+        .with_measured_tiles(iters)
+        .with_tune_cache(cache.clone());
+    let planner = NetPlanner::new(Box::new(backend))
+        .with_choice(AlgoChoice::Measured { iters })
+        .with_tune_cache(cache.clone());
+    println!(
+        "tuning {} ({} nodes) for batch sizes [1, 2, 4] on cpuref ({iters} \
+         measured iters per candidate) ...",
+        graph.name,
+        graph.len()
+    );
+    let before = cuconv::tunecache::measurement_count();
+    let t0 = Instant::now();
+    let _plans = planner.compile_for_sizes(&graph, &[1, 2, 4])?;
+    let measured = cuconv::tunecache::measurement_count() - before;
+    cache
+        .save(out)
+        .map_err(|e| anyhow!("writing tune cache to {out}: {e}"))?;
+    println!(
+        "tuned {} in {:.2} s: {} spec entries, {measured} timed candidates; wrote {out}",
+        graph.name,
+        t0.elapsed().as_secs_f64(),
+        cache.len()
+    );
+    println!(
+        "warm start: pass --tune-cache {out} to forward/serve-bench/serve-http \
+         to replay these choices without re-measuring"
+    );
+    Ok(())
+}
+
 /// Run one whole-network forward pass on the CPU reference backend and
 /// print the per-layer time/algorithm breakdown (the `forward` command).
-fn forward_network(net: Network, batch: usize, measure: bool) -> Result<()> {
+fn forward_network(
+    net: Network,
+    batch: usize,
+    measure: bool,
+    tune_cache: Option<&str>,
+    assert_warm: bool,
+) -> Result<()> {
     use cuconv::net::{input_hw, network_graph, AlgoChoice, NetPlanner};
 
+    if assert_warm && tune_cache.is_none() {
+        bail!("--assert-warm needs --tune-cache PATH");
+    }
     let graph = network_graph(net);
     let hw = input_hw(net);
     // `--measure` also upgrades the cuConv register-tile choice from
     // the closed-form heuristic to the timed per-shape ranking (both
-    // picks end up pinned in the compiled plan).
-    let backend = if measure {
-        CpuRefBackend::new().with_measured_tiles(2)
-    } else {
-        CpuRefBackend::new()
+    // picks end up pinned in the compiled plan); `--tune-cache` runs
+    // the same measured planning fronted by the persistent cache.
+    let (planner, cache) = match tune_cache {
+        Some(path) => {
+            let (planner, cache) = cached_planner(path);
+            (planner, Some(cache))
+        }
+        None => {
+            let backend = if measure {
+                CpuRefBackend::new().with_measured_tiles(TUNE_ITERS)
+            } else {
+                CpuRefBackend::new()
+            };
+            let planner = NetPlanner::new(Box::new(backend)).with_choice(if measure {
+                AlgoChoice::Measured { iters: TUNE_ITERS }
+            } else {
+                AlgoChoice::Heuristic
+            });
+            (planner, None)
+        }
     };
-    let planner = NetPlanner::new(Box::new(backend)).with_choice(if measure {
-        AlgoChoice::Measured { iters: 2 }
-    } else {
-        AlgoChoice::Heuristic
-    });
     println!(
         "compiling {} ({} nodes, {hw}x{hw} input) at batch {batch} on cpuref{} ...",
         graph.name,
         graph.len(),
-        if measure { " (measured per-layer algo_find + tile find)" } else { "" }
+        if cache.is_some() {
+            " (measured planning through the tune cache)"
+        } else if measure {
+            " (measured per-layer algo_find + tile find)"
+        } else {
+            ""
+        }
     );
+    let before = cuconv::tunecache::measurement_count();
     let mut plan = planner.compile(&graph, batch)?;
+    if let Some(cache) = &cache {
+        let planned = cuconv::tunecache::measurement_count() - before;
+        println!(
+            "planning: {} cache hit(s), {} miss(es), {planned} timing measurement(s)",
+            cache.hits(),
+            cache.misses()
+        );
+        if assert_warm {
+            if planned > 0 {
+                bail!(
+                    "--assert-warm: planning performed {planned} timing \
+                     measurement(s); the tune cache does not cover {} at \
+                     batch {batch}",
+                    graph.name
+                );
+            }
+            println!("warm start OK: zero measurements during planning");
+        }
+    }
     let mut rng = Rng::new(0xF0A11);
     let mut input = vec![0.0f32; plan.input_elems()];
     rng.fill_uniform(&mut input, -1.0, 1.0);
@@ -368,6 +521,7 @@ fn serve_bench_net(
     requests: usize,
     pool: PoolConfig,
     queue_depth: Option<usize>,
+    tune_cache: Option<&str>,
 ) -> Result<()> {
     use cuconv::net::network_graph;
 
@@ -381,13 +535,28 @@ fn serve_bench_net(
         "compiling {} for batch sizes [1, 2, 4] x {} worker(s) ...",
         graph.name, pool.workers
     );
-    let server = Server::start_net(
-        Box::new(CpuRefBackend::new()),
-        &graph,
-        &[1, 2, 4],
-        policy,
-        pool,
-    )?;
+    let server = match tune_cache {
+        Some(path) => {
+            let (planner, cache) = cached_planner(path);
+            let before = cuconv::tunecache::measurement_count();
+            let server =
+                Server::start_net_planned(planner, &graph, &[1, 2, 4], policy, pool)?;
+            println!(
+                "planning: {} cache hit(s), {} miss(es), {} timing measurement(s)",
+                cache.hits(),
+                cache.misses(),
+                cuconv::tunecache::measurement_count() - before
+            );
+            server
+        }
+        None => Server::start_net(
+            Box::new(CpuRefBackend::new()),
+            &graph,
+            &[1, 2, 4],
+            policy,
+            pool,
+        )?,
+    };
     let clients = (2 * pool.workers).max(4);
     println!(
         "serving {} end-to-end through the cpuref backend ({} requests, {} client \
@@ -596,21 +765,56 @@ fn serve_http(args: &[String]) -> Result<()> {
     println!(
         "compiling {model} for batch sizes [1, 2, 4] x {workers} worker(s) ..."
     );
+    let tune_cache = opt(args, "--tune-cache");
     let server = if faults.is_empty() {
-        Server::start_net(
-            Box::new(CpuRefBackend::new()),
-            &graph,
-            &[1, 2, 4],
-            policy,
-            PoolConfig::with_workers(workers),
-        )?
+        match tune_cache {
+            Some(path) => {
+                let (planner, cache) = cached_planner(path);
+                let server = Server::start_net_planned(
+                    planner,
+                    &graph,
+                    &[1, 2, 4],
+                    policy,
+                    PoolConfig::with_workers(workers),
+                )?;
+                println!(
+                    "planning: {} cache hit(s), {} miss(es)",
+                    cache.hits(),
+                    cache.misses()
+                );
+                server
+            }
+            None => Server::start_net(
+                Box::new(CpuRefBackend::new()),
+                &graph,
+                &[1, 2, 4],
+                policy,
+                PoolConfig::with_workers(workers),
+            )?,
+        }
     } else {
         println!("fault plan armed: {faults:?}");
-        let runner = cuconv::coordinator::NetForwardRunner::new(
-            Box::new(CpuRefBackend::new()),
-            &graph,
-            &[1, 2, 4],
-        )?;
+        let runner = match tune_cache {
+            Some(path) => {
+                let (planner, cache) = cached_planner(path);
+                let runner = cuconv::coordinator::NetForwardRunner::with_planner(
+                    planner,
+                    &graph,
+                    &[1, 2, 4],
+                )?;
+                println!(
+                    "planning: {} cache hit(s), {} miss(es)",
+                    cache.hits(),
+                    cache.misses()
+                );
+                runner
+            }
+            None => cuconv::coordinator::NetForwardRunner::new(
+                Box::new(CpuRefBackend::new()),
+                &graph,
+                &[1, 2, 4],
+            )?,
+        };
         let injector = FaultInjector::new(Box::new(runner), FaultPlan::new(faults));
         Server::start_pool(Box::new(injector), policy, PoolConfig::with_workers(workers))?
     };
@@ -659,9 +863,16 @@ fn serve_http(args: &[String]) -> Result<()> {
     let mut img = vec![0.0f32; image_elems];
     rng.fill_uniform(&mut img, -1.0, 1.0);
     let canonical = cuconv::http::infer_body(&model, 1, None, Some("smoke"), None, &img);
-    let (st, body) = c.post_json("/v1/infer", &canonical)?;
+    let (st, body, echoed) =
+        c.post_json_traced("/v1/infer", &canonical, Some("smoke-0001"))?;
     if st != 200 {
         bail!("POST /v1/infer smoke failed: status {st}, body {body}");
+    }
+    match echoed.as_deref() {
+        Some("smoke-0001") => {}
+        other => bail!(
+            "X-Request-Id echo broken: sent 'smoke-0001', response carried {other:?}"
+        ),
     }
     let rows = logits_of(&body)?;
     if rows.len() != 1 || rows[0].len() != handle.classes() {
@@ -672,7 +883,10 @@ fn serve_http(args: &[String]) -> Result<()> {
             handle.classes()
         );
     }
-    println!("smoke OK: /v1/models and /v1/infer answer 200 with well-formed JSON");
+    println!(
+        "smoke OK: /v1/models and /v1/infer answer 200 with well-formed JSON \
+         (request id smoke-0001 echoed)"
+    );
 
     println!("driving {requests} requests from {clients} socket client(s) ...");
     let failed = if batch_share > 0.0 {

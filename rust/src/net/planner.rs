@@ -33,13 +33,16 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::algo::Algorithm;
-use crate::backend::{algo_find, algo_get, Backend, ConvDescriptor, ConvPlan, Workspace};
+use crate::algo::{Algorithm, AutotuneResult};
+use crate::backend::{
+    algo_find, algo_find_cached, algo_get, Backend, ConvDescriptor, ConvPlan, Workspace,
+};
 use crate::conv::{ConvSpec, F32_BYTES};
 use crate::net::graph::{FeatShape, NetGraph, NodeId, Op};
 use crate::net::ops;
 use crate::net::ops::LinearWeights;
 use crate::tensor::Tensor;
+use crate::tunecache::TuneCache;
 use crate::util::rng::Rng;
 
 /// How the planner picks each conv node's algorithm.
@@ -95,16 +98,40 @@ fn conv_spec(
 pub struct NetPlanner {
     backend: Box<dyn Backend>,
     choice: AlgoChoice,
+    /// Persistent tune cache, when attached: [`AlgoChoice::Measured`]
+    /// searches consult it before timing (a hit replays a recorded
+    /// ranking with zero measurements) and record fresh rankings into
+    /// it — `compile_for_sizes` over a cached network becomes a pure
+    /// replay of the whole profile.
+    tune_cache: Option<Arc<TuneCache>>,
 }
 
 impl NetPlanner {
     pub fn new(backend: Box<dyn Backend>) -> NetPlanner {
-        NetPlanner { backend, choice: AlgoChoice::Heuristic }
+        NetPlanner { backend, choice: AlgoChoice::Heuristic, tune_cache: None }
     }
 
     pub fn with_choice(mut self, choice: AlgoChoice) -> NetPlanner {
         self.choice = choice;
         self
+    }
+
+    /// Attach a persistent [`TuneCache`] for measured algorithm
+    /// searches. Share the same `Arc` with the backend's
+    /// [`with_tune_cache`](crate::backend::CpuRefBackend::with_tune_cache)
+    /// so tile picks land in the same file.
+    pub fn with_tune_cache(mut self, cache: Arc<TuneCache>) -> NetPlanner {
+        self.tune_cache = Some(cache);
+        self
+    }
+
+    /// [`algo_find`], routed through the tune cache when one is
+    /// attached.
+    fn find(&self, desc: &ConvDescriptor, iters: usize) -> AutotuneResult {
+        match &self.tune_cache {
+            Some(cache) => algo_find_cached(self.backend.as_ref(), desc, iters, cache),
+            None => algo_find(self.backend.as_ref(), desc, iters),
+        }
     }
 
     /// The backend plans compiled by this planner execute on.
@@ -154,11 +181,9 @@ impl NetPlanner {
                 // supports at the base size.
                 let mut candidates = match self.choice {
                     AlgoChoice::Heuristic => Vec::new(),
-                    AlgoChoice::Measured { iters } => algo_find(backend, &desc, iters)
-                        .entries
-                        .iter()
-                        .map(|e| e.algo)
-                        .collect(),
+                    AlgoChoice::Measured { iters } => {
+                        self.find(&desc, iters).entries.iter().map(|e| e.algo).collect()
+                    }
                 };
                 candidates.push(algo_get(backend, &desc)?);
                 candidates.extend(backend.supported_algorithms(&base));
@@ -224,7 +249,7 @@ impl NetPlanner {
                         None => match self.choice {
                             AlgoChoice::Heuristic => algo_get(backend, &desc)?,
                             AlgoChoice::Measured { iters } => {
-                                match algo_find(backend, &desc, iters).best() {
+                                match self.find(&desc, iters).best() {
                                     Some(e) => e.algo,
                                     None => algo_get(backend, &desc)?,
                                 }
@@ -1102,6 +1127,80 @@ mod tests {
         assert_eq!(probs.len(), 4);
         assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         assert_eq!(plan.conv_algorithms().len(), 1);
+    }
+
+    /// The warm-start property: a measured compile recorded into a
+    /// [`TuneCache`], round-tripped through save → load (real bytes,
+    /// bit-identical), must replay the **exact** cold-plan `Algorithm`
+    /// and `TileShape` choices with zero timing measurements.
+    #[test]
+    fn tune_cache_warm_plan_replays_cold_choices_with_zero_measurements() {
+        let mut gb = GraphBuilder::new("tune", 3, 8, 8);
+        let c1 = gb.conv_same("c1", gb.input(), 8, 3);
+        let c2 = gb.conv_same("c2", c1, 4, 1);
+        let g = gb.global_avg_pool("gap", c2);
+        let fc = gb.linear("fc", g, 4, false);
+        gb.softmax("sm", fc);
+        let graph = gb.finish();
+
+        let compile = |cache: Arc<TuneCache>| {
+            let backend =
+                CpuRefBackend::new().with_measured_tiles(1).with_tune_cache(cache.clone());
+            let planner = NetPlanner::new(Box::new(backend))
+                .with_choice(AlgoChoice::Measured { iters: 1 })
+                .with_tune_cache(cache);
+            planner.compile_for_sizes(&graph, &[1, 2]).unwrap()
+        };
+        let tiles_of = |plans: &[(usize, NetPlan)]| -> Vec<Option<_>> {
+            plans[0]
+                .1
+                .graph()
+                .nodes()
+                .iter()
+                .enumerate()
+                .map(|(id, _)| {
+                    plans[0].1.conv_plan(id).and_then(|p| {
+                        p.packed_filters().map(|pk| pk.tile())
+                    })
+                })
+                .collect()
+        };
+
+        // Cold: measure everything, record into the cache.
+        let cold_cache = Arc::new(TuneCache::new());
+        let before_cold = crate::tunecache::measurement_count();
+        let cold_plans = compile(cold_cache.clone());
+        assert!(
+            crate::tunecache::measurement_count() > before_cold,
+            "cold compile must measure"
+        );
+        let cold_algos = cold_plans[0].1.conv_algorithms();
+        let cold_tiles = tiles_of(&cold_plans);
+
+        // Round-trip through real file bytes.
+        let path = std::env::temp_dir()
+            .join(format!("cuconv_planner_tunecache_{}.json", std::process::id()));
+        cold_cache.save(&path).unwrap();
+        let warm_cache = Arc::new(TuneCache::load(&path));
+        assert_eq!(warm_cache.degraded(), 0);
+        assert_eq!(
+            warm_cache.to_json().to_string_pretty(),
+            cold_cache.to_json().to_string_pretty(),
+            "save -> load must be bit-identical"
+        );
+        std::fs::remove_file(&path).ok();
+
+        // Warm: zero measurements, identical choices.
+        let before_warm = crate::tunecache::measurement_count();
+        let warm_plans = compile(warm_cache.clone());
+        assert_eq!(
+            crate::tunecache::measurement_count(),
+            before_warm,
+            "warm compile with a populated cache must measure nothing"
+        );
+        assert!(warm_cache.hits() > 0);
+        assert_eq!(warm_plans[0].1.conv_algorithms(), cold_algos);
+        assert_eq!(tiles_of(&warm_plans), cold_tiles);
     }
 
     #[test]

@@ -1,0 +1,587 @@
+//! Persistent autotune/plan cache: tuned decisions (`algo_find`
+//! rankings, `find_tile` winners, measured timings) serialized to a
+//! versioned on-disk JSON file so a server restart replays yesterday's
+//! measurements instead of re-paying the sweep.
+//!
+//! cuDNN's central lesson is that expensive algorithm decisions are
+//! made once at plan time and amortized across every call; this module
+//! extends the amortization across *processes*. The file is keyed by a
+//! device fingerprint (effective thread count — which already folds the
+//! `CUCONV_CPU_THREADS` override — plus the crate version and a cache
+//! schema version). Any mismatch, truncation, or unknown key degrades
+//! to re-tuning: load never panics and never errors, it just returns a
+//! cache that misses (logging and counting each degradation).
+//!
+//! Determinism contract: [`TuneCache::to_json`] emits entries sorted by
+//! spec and the JSON writer emits sorted keys, so a freshly tuned run
+//! round-trips **bit-identically** through save → load → save.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::algo::{Algorithm, AutotuneEntry};
+use crate::conv::ConvSpec;
+use crate::cpuref::gemm::default_threads;
+use crate::cpuref::pack::TileShape;
+use crate::util::json::{self, Json};
+
+/// On-disk format version. Bump on any incompatible layout change; a
+/// loader seeing a different version discards the file (counted as a
+/// degradation) rather than guessing.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Process-global count of timing measurements (one per candidate put
+/// through a timed benchmark loop by `algo_find` or `find_tile`). The
+/// warm-start proof: planning against a populated cache must leave this
+/// counter untouched.
+static MEASUREMENTS: AtomicUsize = AtomicUsize::new(0);
+
+/// Record `n` timing measurements. Called by the measuring paths
+/// (`algo_find` per timed algorithm candidate, `find_tile` per tile
+/// candidate); never by cache hits.
+pub fn note_measurements(n: usize) {
+    MEASUREMENTS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total timing measurements this process has performed. Tests and the
+/// CI warm-start smoke assert a **zero delta** across a warm plan.
+pub fn measurement_count() -> usize {
+    MEASUREMENTS.load(Ordering::Relaxed)
+}
+
+/// The device identity a cache file is valid for. Tuned timings are
+/// meaningless on a different machine shape, so a fingerprint mismatch
+/// discards the file wholesale.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// Effective worker thread count ([`default_threads`]), which
+    /// already folds in the `CUCONV_CPU_THREADS` env override and the
+    /// programmatic override — the knob that most changes measured
+    /// timings on this substrate.
+    pub threads: usize,
+    /// Crate version the file was written by; tuning heuristics and
+    /// kernels move between releases.
+    pub crate_version: String,
+}
+
+impl Fingerprint {
+    /// The fingerprint of this process, right now.
+    pub fn current() -> Fingerprint {
+        Fingerprint { threads: default_threads(), crate_version: crate::VERSION.to_string() }
+    }
+}
+
+/// Cached tuning decisions for one [`ConvSpec`].
+#[derive(Debug, Clone, Default, PartialEq)]
+struct Entry {
+    /// `algo_find` ranking: (algorithm, score in µs, workspace bytes),
+    /// best first.
+    algos: Option<Vec<(Algorithm, f64, usize)>>,
+    /// `find_tile` winner and its measured p50 in µs.
+    tile: Option<(TileShape, f64)>,
+}
+
+/// The persistent autotune cache. Thread-safe; share one behind an
+/// `Arc` between a [`CpuRefBackend`](crate::backend::CpuRefBackend)
+/// and a [`NetPlanner`](crate::net::NetPlanner) so tile and algorithm
+/// decisions land in the same file.
+#[derive(Debug)]
+pub struct TuneCache {
+    fingerprint: Fingerprint,
+    entries: Mutex<HashMap<ConvSpec, Entry>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    degraded: AtomicUsize,
+}
+
+impl Default for TuneCache {
+    fn default() -> TuneCache {
+        TuneCache::new()
+    }
+}
+
+impl TuneCache {
+    /// An empty cache stamped with the current process fingerprint.
+    pub fn new() -> TuneCache {
+        TuneCache {
+            fingerprint: Fingerprint::current(),
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            degraded: AtomicUsize::new(0),
+        }
+    }
+
+    /// Load a cache from `path`. **Never fails**: an unreadable file,
+    /// corrupt or truncated JSON, a schema/crate-version or fingerprint
+    /// mismatch all log one line, count a degradation, and return an
+    /// empty cache (so every lookup misses and the caller re-tunes).
+    /// Individually malformed entries are skipped, keeping the rest.
+    pub fn load(path: impl AsRef<Path>) -> TuneCache {
+        let path = path.as_ref();
+        let cache = TuneCache::new();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("tunecache: cannot read {}: {e}; starting cold", path.display());
+                cache.degraded.fetch_add(1, Ordering::Relaxed);
+                return cache;
+            }
+        };
+        let doc = match json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("tunecache: {}: {e}; starting cold", path.display());
+                cache.degraded.fetch_add(1, Ordering::Relaxed);
+                return cache;
+            }
+        };
+        cache.absorb(&doc, &path.display().to_string());
+        cache
+    }
+
+    /// Rebuild state from a parsed document (the load path after I/O
+    /// and parsing; exposed for round-trip tests). Returns `self`
+    /// unchanged-but-empty on any header mismatch.
+    fn absorb(&self, doc: &Json, origin: &str) {
+        let degrade = |msg: &str| {
+            eprintln!("tunecache: {origin}: {msg}; starting cold");
+            self.degraded.fetch_add(1, Ordering::Relaxed);
+        };
+        match doc.get("schema_version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == SCHEMA_VERSION => {}
+            v => return degrade(&format!(
+                "schema_version {v:?} != supported {SCHEMA_VERSION}"
+            )),
+        }
+        match doc.get("crate_version").and_then(Json::as_str) {
+            Some(v) if v == self.fingerprint.crate_version => {}
+            v => return degrade(&format!(
+                "crate_version {v:?} != running {}",
+                self.fingerprint.crate_version
+            )),
+        }
+        match doc.get("fingerprint").and_then(|f| f.get("threads")).and_then(Json::as_usize) {
+            Some(t) if t == self.fingerprint.threads => {}
+            t => return degrade(&format!(
+                "fingerprint threads {t:?} != current {}",
+                self.fingerprint.threads
+            )),
+        }
+        let Some(rows) = doc.get("entries").and_then(Json::as_arr) else {
+            return degrade("'entries' missing or not an array");
+        };
+        let mut map = self.entries.lock().unwrap();
+        for row in rows {
+            match parse_entry(row) {
+                Some((spec, entry)) => {
+                    map.insert(spec, entry);
+                }
+                None => {
+                    eprintln!("tunecache: {origin}: skipping malformed entry");
+                    self.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Build a cache from an in-memory document (round-trip testing).
+    pub fn from_json(doc: &Json) -> TuneCache {
+        let cache = TuneCache::new();
+        cache.absorb(doc, "<memory>");
+        cache
+    }
+
+    /// Serialize every entry, sorted by spec for a deterministic byte
+    /// stream (the JSON writer already sorts object keys).
+    pub fn to_json(&self) -> Json {
+        let map = self.entries.lock().unwrap();
+        let mut specs: Vec<&ConvSpec> = map.keys().collect();
+        specs.sort_by_key(|s| {
+            (s.n, s.c, s.h, s.w, s.m, s.kh, s.kw, s.stride, s.pad_h, s.pad_w)
+        });
+        let rows = specs
+            .iter()
+            .map(|spec| {
+                let entry = &map[*spec];
+                let mut pairs = vec![("spec", spec_json(spec))];
+                if let Some(algos) = &entry.algos {
+                    pairs.push((
+                        "algos",
+                        Json::arr(
+                            algos
+                                .iter()
+                                .map(|(a, score, ws)| {
+                                    Json::obj(vec![
+                                        ("algo", Json::str(a.name())),
+                                        ("score_us", Json::num(*score)),
+                                        ("workspace_bytes", Json::num(*ws as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                if let Some((tile, p50)) = &entry.tile {
+                    pairs.push((
+                        "tile",
+                        Json::obj(vec![
+                            ("mr", Json::num(tile.mr() as f64)),
+                            ("nr", Json::num(tile.nr() as f64)),
+                            ("p50_us", Json::num(*p50)),
+                        ]),
+                    ));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("crate_version", Json::str(&self.fingerprint.crate_version)),
+            (
+                "fingerprint",
+                Json::obj(vec![("threads", Json::num(self.fingerprint.threads as f64))]),
+            ),
+            ("entries", Json::arr(rows)),
+        ])
+    }
+
+    /// Write the cache to `path` (pretty-printed, trailing newline).
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+    }
+
+    /// Cached `algo_find` ranking for `spec`, if present (counts a hit
+    /// or a miss).
+    pub fn lookup_algos(&self, spec: &ConvSpec) -> Option<Vec<AutotuneEntry>> {
+        let found = self.entries.lock().unwrap().get(spec).and_then(|e| e.algos.clone());
+        match found {
+            Some(rows) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(
+                    rows.into_iter()
+                        .map(|(algo, score_us, workspace_bytes)| AutotuneEntry {
+                            algo,
+                            score_us,
+                            workspace_bytes,
+                        })
+                        .collect(),
+                )
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a freshly measured `algo_find` ranking for `spec`.
+    pub fn record_algos(&self, spec: &ConvSpec, entries: &[AutotuneEntry]) {
+        let rows = entries.iter().map(|e| (e.algo, e.score_us, e.workspace_bytes)).collect();
+        self.entries.lock().unwrap().entry(*spec).or_default().algos = Some(rows);
+    }
+
+    /// Cached `find_tile` winner for `spec`, if present (counts a hit
+    /// or a miss).
+    pub fn lookup_tile(&self, spec: &ConvSpec) -> Option<TileShape> {
+        let found = self.entries.lock().unwrap().get(spec).and_then(|e| e.tile);
+        match found {
+            Some((tile, _)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(tile)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a freshly measured tile winner for `spec`.
+    pub fn record_tile(&self, spec: &ConvSpec, tile: TileShape, p50_us: f64) {
+        self.entries.lock().unwrap().entry(*spec).or_default().tile = Some((tile, p50_us));
+    }
+
+    /// Number of specs with at least one cached decision.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that fell through to measurement.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Degradations survived (unreadable/corrupt file, version or
+    /// fingerprint mismatch, malformed entries skipped).
+    pub fn degraded(&self) -> usize {
+        self.degraded.load(Ordering::Relaxed)
+    }
+}
+
+fn spec_json(spec: &ConvSpec) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(spec.n as f64)),
+        ("c", Json::num(spec.c as f64)),
+        ("h", Json::num(spec.h as f64)),
+        ("w", Json::num(spec.w as f64)),
+        ("m", Json::num(spec.m as f64)),
+        ("kh", Json::num(spec.kh as f64)),
+        ("kw", Json::num(spec.kw as f64)),
+        ("stride", Json::num(spec.stride as f64)),
+        ("pad_h", Json::num(spec.pad_h as f64)),
+        ("pad_w", Json::num(spec.pad_w as f64)),
+    ])
+}
+
+fn parse_spec(doc: &Json) -> Option<ConvSpec> {
+    let field = |k: &str| doc.get(k).and_then(Json::as_usize);
+    let spec = ConvSpec {
+        n: field("n")?,
+        c: field("c")?,
+        h: field("h")?,
+        w: field("w")?,
+        m: field("m")?,
+        kh: field("kh")?,
+        kw: field("kw")?,
+        stride: field("stride")?,
+        pad_h: field("pad_h")?,
+        pad_w: field("pad_w")?,
+    };
+    spec.is_valid().then_some(spec)
+}
+
+fn parse_entry(row: &Json) -> Option<(ConvSpec, Entry)> {
+    let spec = parse_spec(row.get("spec")?)?;
+    let mut entry = Entry::default();
+    if let Some(rows) = row.get("algos") {
+        let rows = rows.as_arr()?;
+        let mut algos = Vec::with_capacity(rows.len());
+        for r in rows {
+            let algo = Algorithm::from_name(r.get("algo")?.as_str()?)?;
+            let score = r.get("score_us")?.as_f64()?;
+            if !score.is_finite() || score < 0.0 {
+                return None;
+            }
+            let ws = r.get("workspace_bytes")?.as_usize()?;
+            algos.push((algo, score, ws));
+        }
+        entry.algos = Some(algos);
+    }
+    if let Some(t) = row.get("tile") {
+        let tile = TileShape::of(t.get("mr")?.as_usize()?, t.get("nr")?.as_usize()?)?;
+        let p50 = t.get("p50_us")?.as_f64()?;
+        if !p50.is_finite() || p50 < 0.0 {
+            return None;
+        }
+        entry.tile = Some((tile, p50));
+    }
+    if entry.algos.is_none() && entry.tile.is_none() {
+        return None;
+    }
+    Some((spec, entry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AutotuneEntry;
+
+    fn populated() -> TuneCache {
+        let cache = TuneCache::new();
+        let s1 = ConvSpec::paper(7, 1, 1, 32, 832);
+        let s2 = ConvSpec::paper(14, 2, 3, 64, 64);
+        cache.record_algos(
+            &s1,
+            &[
+                AutotuneEntry {
+                    algo: Algorithm::CuConv,
+                    score_us: 12.5,
+                    workspace_bytes: 0,
+                },
+                AutotuneEntry {
+                    algo: Algorithm::Direct,
+                    score_us: 31.0,
+                    workspace_bytes: 0,
+                },
+            ],
+        );
+        cache.record_tile(&s1.with_batch(1), TileShape::of(4, 8).unwrap(), 9.75);
+        cache.record_algos(
+            &s2,
+            &[AutotuneEntry {
+                algo: Algorithm::GemmExplicit,
+                score_us: 44.0,
+                workspace_bytes: 1024,
+            }],
+        );
+        cache
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let cache = populated();
+        let first = cache.to_json().to_string_pretty() + "\n";
+        let reloaded = TuneCache::from_json(&json::parse(&first).unwrap());
+        assert_eq!(reloaded.degraded(), 0, "clean file must load cleanly");
+        assert_eq!(reloaded.len(), cache.len());
+        let second = reloaded.to_json().to_string_pretty() + "\n";
+        assert_eq!(first, second, "save -> load -> save must be bit-identical");
+    }
+
+    #[test]
+    fn lookups_count_hits_and_misses() {
+        let cache = populated();
+        let s1 = ConvSpec::paper(7, 1, 1, 32, 832);
+        let ranked = cache.lookup_algos(&s1).expect("recorded ranking");
+        assert_eq!(ranked[0].algo, Algorithm::CuConv);
+        assert_eq!(ranked[0].score_us, 12.5);
+        assert!(cache.lookup_tile(&s1.with_batch(1)).is_some());
+        assert!(cache.lookup_algos(&ConvSpec::paper(3, 1, 1, 4, 4)).is_none());
+        assert!(cache.lookup_tile(&s1).is_none(), "tile keyed at batch 1 only");
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn save_and_load_through_a_real_file() {
+        let cache = populated();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("cuconv_tunecache_test_{}.json", std::process::id()));
+        cache.save(&path).unwrap();
+        let loaded = TuneCache::load(&path);
+        assert_eq!(loaded.degraded(), 0);
+        assert_eq!(loaded.len(), cache.len());
+        assert_eq!(
+            loaded.to_json().to_string_pretty(),
+            cache.to_json().to_string_pretty()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_degrades_to_cold() {
+        let loaded = TuneCache::load("/nonexistent/tunecache.json");
+        assert!(loaded.is_empty());
+        assert_eq!(loaded.degraded(), 1);
+        // And the cold cache still misses (counted), never panics.
+        assert!(loaded.lookup_algos(&ConvSpec::paper(7, 1, 1, 32, 832)).is_none());
+        assert_eq!(loaded.misses(), 1);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_json_degrade_to_cold() {
+        let good = populated().to_json().to_string_pretty();
+        for text in ["{not json", &good[..good.len() / 2], "", "[1, 2, 3]"] {
+            let doc = json::parse(text);
+            let cache = match doc {
+                Ok(d) => TuneCache::from_json(&d),
+                Err(_) => {
+                    // The load path counts the parse failure; emulate it.
+                    let c = TuneCache::new();
+                    c.degraded.fetch_add(1, Ordering::Relaxed);
+                    c
+                }
+            };
+            assert!(cache.is_empty(), "malformed input {text:?} must yield a cold cache");
+            assert!(cache.degraded() > 0, "degradation must be counted for {text:?}");
+        }
+    }
+
+    #[test]
+    fn schema_version_bump_discards_the_file() {
+        let mut doc = populated().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema_version".into(), Json::num(SCHEMA_VERSION as f64 + 1.0));
+        }
+        let cache = TuneCache::from_json(&doc);
+        assert!(cache.is_empty());
+        assert_eq!(cache.degraded(), 1);
+    }
+
+    #[test]
+    fn crate_version_mismatch_discards_the_file() {
+        let mut doc = populated().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("crate_version".into(), Json::str("0.0.0-other"));
+        }
+        let cache = TuneCache::from_json(&doc);
+        assert!(cache.is_empty());
+        assert_eq!(cache.degraded(), 1);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_discards_the_file() {
+        let mut doc = populated().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert(
+                "fingerprint".into(),
+                Json::obj(vec![("threads", Json::num(default_threads() as f64 + 7.0))]),
+            );
+        }
+        let cache = TuneCache::from_json(&doc);
+        assert!(cache.is_empty());
+        assert_eq!(cache.degraded(), 1);
+        // A subsequent lookup is a counted miss — the re-tune path.
+        assert!(cache.lookup_tile(&ConvSpec::paper(7, 1, 1, 32, 832)).is_none());
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn unknown_algo_or_tile_skips_only_that_entry() {
+        let mut doc = populated().to_json();
+        if let Json::Obj(map) = &mut doc {
+            let Some(Json::Arr(rows)) = map.get_mut("entries") else { panic!() };
+            let n = rows.len();
+            // Poison the first entry's algorithm name and append an
+            // entry with an impossible tile; both must be skipped while
+            // the rest survive.
+            if let Json::Obj(row) = &mut rows[0] {
+                if let Some(Json::Arr(algos)) = row.get_mut("algos") {
+                    if let Json::Obj(a) = &mut algos[0] {
+                        a.insert("algo".into(), Json::str("quantum_conv"));
+                    }
+                }
+            }
+            let mut bad_tile = rows[n - 1].clone();
+            if let Json::Obj(row) = &mut bad_tile {
+                if let Json::Obj(spec) = row.get_mut("spec").unwrap() {
+                    spec.insert("h".into(), Json::num(999.0));
+                    spec.insert("w".into(), Json::num(999.0));
+                }
+                row.insert(
+                    "tile".into(),
+                    Json::obj(vec![
+                        ("mr", Json::num(3.0)),
+                        ("nr", Json::num(7.0)),
+                        ("p50_us", Json::num(1.0)),
+                    ]),
+                );
+            }
+            rows.push(bad_tile);
+        }
+        let cache = TuneCache::from_json(&doc);
+        assert_eq!(cache.degraded(), 2, "two malformed entries skipped");
+        assert!(!cache.is_empty(), "well-formed entries must survive");
+        // The poisoned spec's ranking is gone -> miss, re-tune.
+        assert!(cache.lookup_algos(&ConvSpec::paper(7, 1, 1, 32, 832)).is_none());
+    }
+
+    #[test]
+    fn measurement_counter_accumulates() {
+        let before = measurement_count();
+        note_measurements(3);
+        assert_eq!(measurement_count() - before, 3);
+    }
+}

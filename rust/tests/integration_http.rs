@@ -414,6 +414,44 @@ fn healthz_degrades_to_503_when_a_worker_dies() {
     assert_eq!(v.get("live_workers").unwrap().as_usize().unwrap(), 1);
 }
 
+/// Request correlation ids over the real socket: a client-supplied
+/// `X-Request-Id` is echoed on both success and error responses, and a
+/// request without one gets a server-minted `req-<hex>` id — no
+/// response leaves the front door unlabelled.
+#[test]
+fn request_ids_echo_on_success_and_error_and_are_minted_when_absent() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let img = fd.rand_image(13);
+    let mut c = fd.client();
+
+    // Client-chosen id, happy path.
+    let body = infer_body(&fd.model, 1, None, None, None, &img);
+    let (status, _, echoed) = c
+        .post_json_traced("/v1/infer", &body, Some("trace-42"))
+        .expect("infer");
+    assert_eq!(status, 200);
+    assert_eq!(echoed.as_deref(), Some("trace-42"), "200s must echo the id");
+
+    // Same id on an error response (unparseable body → 400).
+    let (status, _, echoed) = c
+        .post_json_traced("/v1/infer", "NOT JSON", Some("trace-43"))
+        .expect("bad infer");
+    assert_eq!(status, 400);
+    assert_eq!(
+        echoed.as_deref(),
+        Some("trace-43"),
+        "error responses must carry the id too"
+    );
+
+    // No id sent → the server mints one.
+    let (status, _, minted) =
+        c.post_json_traced("/v1/infer", &body, None).expect("infer sans id");
+    assert_eq!(status, 200);
+    let minted = minted.expect("server must mint an id when the client sends none");
+    assert!(minted.starts_with("req-"), "minted id shape: {minted}");
+}
+
 /// Oversized bodies are refused with 413 before any buffering, and the
 /// server stays healthy for new connections.
 #[test]

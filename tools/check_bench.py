@@ -17,6 +17,15 @@ Checks per file:
 
 Usage:
     python3 tools/check_bench.py BENCH_hotpath.json BENCH_e2e.json ...
+    python3 tools/check_bench.py --baseline DIR BENCH_tune.json ...
+
+With ``--baseline DIR``, each report is additionally compared against
+the committed baseline of the same file name in DIR (see
+tools/baselines/): machine-independent relative metrics are extracted
+from the report, divided by the baseline's recorded values, and the
+geometric mean of those ratios must stay within the baseline's
+``tolerance`` factor. A regressed geomean, a missing baseline file, or
+a malformed tolerance each fail the run.
 
 Exits non-zero listing every violation (not just the first).
 """
@@ -25,6 +34,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import sys
 
 PROBLEMS: list[str] = []
@@ -353,16 +363,161 @@ def check_chaos(path: str, doc: dict) -> None:
         problem(path, f"'pool_restored' is {doc.get('pool_restored')!r}")
 
 
+def check_tune(path: str, doc: dict) -> None:
+    """The warm-start contract: a warm plan must be cheaper than the
+    cold one it replays, measure nothing, miss nothing, and reproduce
+    the cold choices through a bit-identical file round trip."""
+    if not doc.get("network"):
+        problem(path, "missing 'network'")
+    for key in ("cold_plan_ms", "warm_plan_ms", "speedup"):
+        finite_positive(path, doc, key, "top level")
+    cold, warm = doc.get("cold_plan_ms"), doc.get("warm_plan_ms")
+    if (
+        isinstance(cold, (int, float))
+        and isinstance(warm, (int, float))
+        and not isinstance(cold, bool)
+        and not isinstance(warm, bool)
+        and not warm < cold
+    ):
+        problem(
+            path,
+            f"warm plan ({warm!r} ms) is not faster than cold ({cold!r} ms) — "
+            "the cache bought nothing",
+        )
+    # Cold planning must actually have measured; warm planning must not
+    # have measured or missed at all — that is the whole point.
+    finite_positive(path, doc, "cold_measurements", "top level")
+    nonneg_count(path, doc, "warm_measurements", "top level")
+    if doc.get("warm_measurements") != 0:
+        problem(
+            path,
+            f"'warm_measurements' is {doc.get('warm_measurements')!r} — "
+            "the warm plan ran timing measurements",
+        )
+    finite_positive(path, doc, "warm_hits", "top level")
+    nonneg_count(path, doc, "warm_misses", "top level")
+    if doc.get("warm_misses") != 0:
+        problem(
+            path,
+            f"'warm_misses' is {doc.get('warm_misses')!r} — warm planning "
+            "fell through the cache",
+        )
+    finite_positive(path, doc, "entries", "top level")
+    for key in ("choices_identical", "roundtrip_bit_identical"):
+        if doc.get(key) is not True:
+            problem(path, f"'{key}' is {doc.get(key)!r}")
+
+
 CHECKERS = {
     "hotpath_micro": check_hotpath,
     "e2e_forward": check_e2e,
     "serve_scaling": check_serve,
     "http_serving": check_http,
     "chaos_serving": check_chaos,
+    "tune_cache": check_tune,
 }
 
 
-def check_file(path: str) -> None:
+def tune_baseline_metrics(doc: dict) -> dict:
+    """Machine-independent relative metrics of a tune_cache report: the
+    warm/cold plan-time ratio (absolute times vary with the runner; the
+    ratio is the cache's value and regresses when warm planning starts
+    re-measuring)."""
+    cold, warm = doc.get("cold_plan_ms"), doc.get("warm_plan_ms")
+    if (
+        isinstance(cold, (int, float))
+        and isinstance(warm, (int, float))
+        and not isinstance(cold, bool)
+        and not isinstance(warm, bool)
+        and cold > 0
+    ):
+        return {"warm_over_cold": float(warm) / float(cold)}
+    return {}
+
+
+BASELINE_METRICS = {
+    "tune_cache": tune_baseline_metrics,
+}
+
+
+def compare_baseline(path: str, doc: dict, baseline_dir: str) -> None:
+    """Gate `doc` against the committed baseline of the same file name:
+    geomean(current metric / baseline metric) must not exceed the
+    baseline's tolerance factor."""
+    bench = doc.get("bench")
+    extract = BASELINE_METRICS.get(bench)
+    if extract is None:
+        problem(path, f"bench tag {bench!r} has no baseline metric extractor")
+        return
+    bpath = os.path.join(baseline_dir, os.path.basename(path))
+    try:
+        with open(bpath, encoding="utf-8") as f:
+            base = json.load(f)
+    except OSError:
+        problem(path, f"no baseline at {bpath} — commit one to gate this bench")
+        return
+    except json.JSONDecodeError as e:
+        problem(path, f"baseline {bpath} is invalid JSON: {e}")
+        return
+    if not isinstance(base, dict):
+        problem(path, f"baseline {bpath}: top level is not an object")
+        return
+    if base.get("bench") != bench:
+        problem(
+            path,
+            f"baseline {bpath}: bench tag {base.get('bench')!r} != {bench!r}",
+        )
+        return
+    tol = base.get("tolerance")
+    if (
+        not isinstance(tol, (int, float))
+        or isinstance(tol, bool)
+        or not math.isfinite(tol)
+        or tol <= 0
+    ):
+        problem(
+            path,
+            f"baseline {bpath}: tolerance {tol!r} is not a finite positive factor",
+        )
+        return
+    base_metrics = base.get("metrics")
+    if not isinstance(base_metrics, dict) or not base_metrics:
+        problem(path, f"baseline {bpath}: 'metrics' missing or empty")
+        return
+    current = extract(doc)
+    ratios = []
+    for key in sorted(base_metrics):
+        bval = base_metrics[key]
+        if (
+            not isinstance(bval, (int, float))
+            or isinstance(bval, bool)
+            or not math.isfinite(bval)
+            or bval <= 0
+        ):
+            problem(
+                path,
+                f"baseline {bpath}: metric '{key}' = {bval!r} "
+                "is not finite and positive",
+            )
+            return
+        cval = current.get(key)
+        if cval is None:
+            problem(path, f"report lacks baseline metric '{key}'")
+            return
+        if not math.isfinite(cval) or cval <= 0:
+            problem(path, f"metric '{key}' = {cval!r} is not finite and positive")
+            return
+        ratios.append(cval / bval)
+    geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    if geomean > tol:
+        problem(
+            path,
+            f"geomean regression vs {bpath}: current/baseline = {geomean:.3f}x "
+            f"exceeds tolerance {tol:.3f}x over {sorted(base_metrics)}",
+        )
+
+
+def check_file(path: str, baseline_dir: str | None = None) -> None:
     try:
         with open(path, encoding="utf-8") as f:
             doc = json.load(f)
@@ -381,20 +536,31 @@ def check_file(path: str) -> None:
         problem(path, f"unknown bench tag {bench!r} (expected {sorted(CHECKERS)})")
         return
     checker(path, doc)
+    if baseline_dir is not None:
+        compare_baseline(path, doc, baseline_dir)
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) < 2:
+    args = argv[1:]
+    baseline_dir = None
+    if args and args[0] == "--baseline":
+        if len(args) < 2:
+            print(__doc__)
+            return 2
+        baseline_dir = args[1]
+        args = args[2:]
+    if not args:
         print(__doc__)
         return 2
-    for path in argv[1:]:
-        check_file(path)
+    for path in args:
+        check_file(path, baseline_dir)
     if PROBLEMS:
         print(f"check_bench: {len(PROBLEMS)} problem(s):")
         for p in PROBLEMS:
             print(f"  FAIL {p}")
         return 1
-    print(f"check_bench: {len(argv) - 1} report(s) OK")
+    suffix = f" (baseline-gated against {baseline_dir})" if baseline_dir else ""
+    print(f"check_bench: {len(args)} report(s) OK{suffix}")
     return 0
 
 

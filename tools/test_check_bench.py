@@ -1,13 +1,16 @@
 #!/usr/bin/env python3
 """Self-test for tools/check_bench.py against known-good and mutated
-chaos reports.
+chaos and tune reports, plus the --baseline perf-regression gate.
 
-The chaos checker is itself part of the fault-tolerance contract: if it
-silently accepted a report with lost requests or a skipped recovery,
-the CI gate would be decorative. This script runs the checker on the
-committed good fixture (must pass) and on a battery of single-field
-mutations (each must fail, with the violation attributed to the right
-field).
+The checkers are themselves part of the CI contract: if one silently
+accepted a report with lost requests, a skipped recovery, or a warm
+plan that secretly re-measured, the gate would be decorative. This
+script runs the checker on the committed good fixtures (must pass), on
+a battery of single-field mutations (each must fail, with the
+violation attributed to the right field), and exercises the baseline
+gate: a healthy report passes against the committed baseline, while a
+synthetically regressed report, a missing baseline file, and a
+malformed tolerance each fail with the right message.
 
 Usage:
     python3 tools/test_check_bench.py
@@ -25,14 +28,25 @@ import tempfile
 HERE = os.path.dirname(os.path.abspath(__file__))
 CHECKER = os.path.join(HERE, "check_bench.py")
 GOOD = os.path.join(HERE, "fixtures", "BENCH_chaos_good.json")
+TUNE_GOOD = os.path.join(HERE, "fixtures", "BENCH_tune_good.json")
+BASELINES = os.path.join(HERE, "baselines")
 
 
-def run_checker(doc: dict, tmpdir: str) -> tuple[int, str]:
-    path = os.path.join(tmpdir, "BENCH_chaos.json")
+def run_checker(
+    doc: dict,
+    tmpdir: str,
+    name: str = "BENCH_chaos.json",
+    baseline_dir: str | None = None,
+) -> tuple[int, str]:
+    path = os.path.join(tmpdir, name)
     with open(path, "w", encoding="utf-8") as f:
         json.dump(doc, f)
+    cmd = [sys.executable, CHECKER]
+    if baseline_dir is not None:
+        cmd += ["--baseline", baseline_dir]
+    cmd.append(path)
     proc = subprocess.run(
-        [sys.executable, CHECKER, path],
+        cmd,
         capture_output=True,
         text=True,
         check=False,
@@ -106,15 +120,117 @@ def mutations() -> list[tuple[str, object, str]]:
     ]
 
 
+def tune_mutations() -> list[tuple[str, object, str]]:
+    """Mutations of the good tune_cache report; each must fail the
+    warm-start contract check with the right attribution."""
+
+    def warm_not_faster(d):
+        d["warm_plan_ms"] = d["cold_plan_ms"] * 2
+
+    def warm_measured(d):
+        d["warm_measurements"] = 7
+
+    def warm_missed(d):
+        d["warm_misses"] = 3
+
+    def cold_never_measured(d):
+        d["cold_measurements"] = 0
+
+    def no_entries(d):
+        d["entries"] = 0
+
+    def choices_diverged(d):
+        d["choices_identical"] = False
+
+    def roundtrip_broken(d):
+        d["roundtrip_bit_identical"] = False
+
+    def cold_time_null(d):
+        # The JSON writer emits null for NaN/Inf — must be rejected.
+        d["cold_plan_ms"] = None
+
+    return [
+        ("warm plan not faster than cold", warm_not_faster, "not faster"),
+        ("warm plan measured", warm_measured, "warm_measurements"),
+        ("warm plan fell through the cache", warm_missed, "warm_misses"),
+        ("cold plan never measured", cold_never_measured, "cold_measurements"),
+        ("empty cache", no_entries, "entries"),
+        ("choices diverged", choices_diverged, "choices_identical"),
+        ("round trip broken", roundtrip_broken, "roundtrip_bit_identical"),
+        ("cold time is null", cold_time_null, "cold_plan_ms"),
+    ]
+
+
+def baseline_gate_failures(tune_good: dict, tmpdir: str) -> list[str]:
+    """Exercise --baseline: healthy report passes; a regressed report,
+    a missing baseline, and a malformed tolerance each fail."""
+    failures: list[str] = []
+
+    rc, out = run_checker(
+        tune_good, tmpdir, name="BENCH_tune.json", baseline_dir=BASELINES
+    )
+    if rc != 0:
+        failures.append(f"good report rejected by committed baseline (rc={rc}):\n{out}")
+
+    # A 10x slower warm plan is still faster than cold (passing the
+    # plain checks) but blows the baseline's warm/cold tolerance — the
+    # geomean gate must be what catches it.
+    slow = copy.deepcopy(tune_good)
+    slow["warm_plan_ms"] = tune_good["warm_plan_ms"] * 10
+    rc, out = run_checker(slow, tmpdir, name="BENCH_tune.json", baseline_dir=BASELINES)
+    if rc == 0:
+        failures.append("regressed report passed the baseline gate")
+    elif "geomean" not in out:
+        failures.append(
+            f"regressed report failed for the wrong reason (wanted 'geomean'):\n{out}"
+        )
+
+    empty_dir = os.path.join(tmpdir, "no_baselines")
+    os.makedirs(empty_dir, exist_ok=True)
+    rc, out = run_checker(
+        tune_good, tmpdir, name="BENCH_tune.json", baseline_dir=empty_dir
+    )
+    if rc == 0:
+        failures.append("missing baseline file was not caught")
+    elif "no baseline" not in out:
+        failures.append(
+            f"missing baseline failed for the wrong reason (wanted 'no baseline'):\n{out}"
+        )
+
+    bad_dir = os.path.join(tmpdir, "bad_baselines")
+    os.makedirs(bad_dir, exist_ok=True)
+    with open(os.path.join(bad_dir, "BENCH_tune.json"), "w", encoding="utf-8") as f:
+        json.dump(
+            {"bench": "tune_cache", "tolerance": "fast", "metrics": {"warm_over_cold": 0.25}},
+            f,
+        )
+    rc, out = run_checker(
+        tune_good, tmpdir, name="BENCH_tune.json", baseline_dir=bad_dir
+    )
+    if rc == 0:
+        failures.append("malformed baseline tolerance was not caught")
+    elif "tolerance" not in out:
+        failures.append(
+            f"malformed tolerance failed for the wrong reason (wanted 'tolerance'):\n{out}"
+        )
+
+    return failures
+
+
 def main() -> int:
     with open(GOOD, encoding="utf-8") as f:
         good = json.load(f)
+    with open(TUNE_GOOD, encoding="utf-8") as f:
+        tune_good = json.load(f)
 
     failures: list[str] = []
     with tempfile.TemporaryDirectory() as tmpdir:
         rc, out = run_checker(good, tmpdir)
         if rc != 0:
-            failures.append(f"good fixture rejected (rc={rc}):\n{out}")
+            failures.append(f"good chaos fixture rejected (rc={rc}):\n{out}")
+        rc, out = run_checker(tune_good, tmpdir, name="BENCH_tune.json")
+        if rc != 0:
+            failures.append(f"good tune fixture rejected (rc={rc}):\n{out}")
 
         for name, mutate, expect in mutations():
             doc = copy.deepcopy(good)
@@ -128,12 +244,29 @@ def main() -> int:
                     f"(wanted {expect!r} in output):\n{out}"
                 )
 
+        for name, mutate, expect in tune_mutations():
+            doc = copy.deepcopy(tune_good)
+            mutate(doc)
+            rc, out = run_checker(doc, tmpdir, name="BENCH_tune.json")
+            if rc == 0:
+                failures.append(f"tune mutation '{name}' was not caught")
+            elif expect not in out:
+                failures.append(
+                    f"tune mutation '{name}' failed for the wrong reason "
+                    f"(wanted {expect!r} in output):\n{out}"
+                )
+
+        failures.extend(baseline_gate_failures(tune_good, tmpdir))
+
     if failures:
         print(f"test_check_bench: {len(failures)} failure(s):")
         for f_ in failures:
             print(f"  FAIL {f_}")
         return 1
-    print(f"test_check_bench: good fixture + {len(mutations())} mutations OK")
+    print(
+        f"test_check_bench: 2 good fixtures + "
+        f"{len(mutations()) + len(tune_mutations())} mutations + baseline gate OK"
+    )
     return 0
 
 
