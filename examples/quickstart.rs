@@ -11,7 +11,9 @@
 //! (batch 1) through the net engine's graph → plan → forward lifecycle,
 //! then the same network served over a real loopback socket through the
 //! HTTP/JSON front door (lazy-scan admission → shard pool → JSON
-//! logits).
+//! logits), and finally the blocked NCHWc layout: a whole-net forward
+//! on channel-blocked activations through the explicit-SIMD
+//! microkernel, bit-identical to the plain-layout pass.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (PJRT path: `make artifacts && cargo run --release --features pjrt \
@@ -160,20 +162,15 @@ fn main() -> anyhow::Result<()> {
     //    shard dispatch → inference → JSON logits; `GET /metrics` shows
     //    the four-class accounting and SLO buckets the front door keeps.
     {
-        use cuconv::coordinator::{BatchPolicy, PoolConfig, Server};
+        use cuconv::coordinator::ServerBuilder;
         use cuconv::http::{
             infer_body, logits_of, wait_healthy, AppState, HttpClient, HttpConfig,
             HttpServer, TenantLimiter,
         };
         use std::time::{Duration, Instant};
 
-        let server = Server::start_net(
-            Box::new(CpuRefBackend::new()),
-            &graph,
-            &[1],
-            BatchPolicy::default(),
-            PoolConfig::default(),
-        )?;
+        let server =
+            ServerBuilder::net(Box::new(CpuRefBackend::new()), &graph, &[1]).start()?;
         let http = HttpServer::start(
             AppState {
                 handle: server.handle(),
@@ -210,8 +207,8 @@ fn main() -> anyhow::Result<()> {
     //    nothing lost — the four-class accounting proves it.
     {
         use cuconv::coordinator::{
-            run_closed_loop_mixed, BatchPolicy, ConvBackendRunner, Fault,
-            FaultInjector, FaultPlan, PoolConfig, Priority, Server,
+            run_closed_loop_mixed, ConvBackendRunner, Fault, FaultInjector,
+            FaultPlan, PoolConfig, Priority, ServerBuilder,
         };
 
         let runner = ConvBackendRunner::new(
@@ -221,11 +218,12 @@ fn main() -> anyhow::Result<()> {
             &[1, 2, 4],
         )?;
         let plan = FaultPlan::new(vec![Fault::Panic { worker: 0, request: 0 }]);
-        let server = Server::start_pool(
-            Box::new(FaultInjector::new(Box::new(runner), plan)),
-            BatchPolicy::default(),
-            PoolConfig::with_workers(2),
-        )?;
+        let server = ServerBuilder::runner(Box::new(FaultInjector::new(
+            Box::new(runner),
+            plan,
+        )))
+        .pool(PoolConfig::with_workers(2))
+        .start()?;
         // Half the requests are tagged "batch" priority — the tag rides
         // through dispatch, ordering, and the recovery path alike.
         let report = run_closed_loop_mixed(&server.handle(), 16, 4, 7, None, 0.5);
@@ -297,6 +295,58 @@ fn main() -> anyhow::Result<()> {
              planning from the saved profile ({} entries, {} hits) ran {warm}",
             warm_cache.len(),
             warm_cache.hits(),
+        );
+    }
+
+    // 10) The blocked NCHWc layout: ask the planner for
+    //     `LayoutPolicy::Nchwc` and it rewrites the graph so every conv
+    //     runs the explicit-SIMD blocked microkernel on channel-blocked
+    //     activations — one layout convert at ingress, one at egress,
+    //     zero in between — while the logits stay bit-identical to the
+    //     plain NCHW forward (`--layout nchwc` is the CLI form).
+    {
+        use cuconv::backend::LayoutPolicy;
+        use cuconv::cpuref::simd;
+        use cuconv::net::{GraphBuilder, NetPlanner};
+
+        // Channel counts off the 8-lane block size (5, 12, 10) so the
+        // zero-padded tail lanes flow through the whole network.
+        let demo = {
+            let mut b = GraphBuilder::new("layout-demo", 5, 7, 7);
+            let c1 = b.conv_same("c1", b.input(), 12, 3);
+            let c2 = b.conv_same("c2", c1, 10, 1);
+            let g = b.global_avg_pool("gap", c2);
+            let fc = b.linear("fc", g, 4, false);
+            b.softmax("sm", fc);
+            b.finish()
+        };
+
+        let plain_p = NetPlanner::new(Box::new(CpuRefBackend::new()));
+        let blocked_p = NetPlanner::new(Box::new(
+            CpuRefBackend::new().with_layout(LayoutPolicy::Nchwc),
+        ))
+        .with_layout(LayoutPolicy::Nchwc);
+        let mut plain = plain_p.compile(&demo, 1)?;
+        let mut blocked = blocked_p.compile(&demo, 1)?;
+        assert_eq!(
+            blocked.convert_count(),
+            2,
+            "a conv chain must block end to end: one ingress + one egress convert"
+        );
+
+        let input: Vec<f32> = {
+            let mut rng = Rng::new(0xB10C);
+            (0..plain.input_elems()).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+        };
+        let want = plain.forward(plain_p.backend(), &input)?;
+        let got = blocked.forward(blocked_p.backend(), &input)?;
+        assert_eq!(got, want, "blocked forward must be bit-identical to plain");
+        println!(
+            "blocked layout ({} microkernel): NCHWc forward with {} layout \
+             converts, conv workspace {} B, logits bit-identical to NCHW",
+            simd::active_level().name(),
+            blocked.convert_count(),
+            blocked.max_conv_workspace_bytes(),
         );
     }
 

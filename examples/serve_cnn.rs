@@ -13,7 +13,7 @@
 
 use std::time::Instant;
 
-use cuconv::coordinator::Server;
+use cuconv::coordinator::{Server, ServerBuilder};
 use cuconv::util::rng::Rng;
 
 const CLIENT_THREADS: usize = 8;
@@ -138,14 +138,14 @@ fn start_server() -> anyhow::Result<Server> {
         queue_capacity: 512,
     };
     let t0 = Instant::now();
-    let server = Server::start_conv(
+    let server = ServerBuilder::conv(
         Box::new(CpuRefBackend::new()),
         spec,
-        None,
         &[1, 2, 4, 8],
-        policy,
-        PoolConfig::with_workers(2),
-    )?;
+    )
+    .policy(policy)
+    .pool(PoolConfig::with_workers(2))
+    .start()?;
     println!(
         "server up in {:.2}s (plans created for batch sizes 1,2,4,8 on 2 worker shards)\n",
         t0.elapsed().as_secs_f64()

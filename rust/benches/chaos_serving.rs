@@ -35,7 +35,7 @@ use cuconv::backend::CpuRefBackend;
 use cuconv::coordinator::{
     run_closed_loop_mixed, BatchPolicy, ClassReport, ConvBackendRunner, Fault,
     FaultInjector, FaultPlan, MetricsSnapshot, PoolConfig, Priority, Server,
-    ShardSelection,
+    ServerBuilder, ShardSelection,
 };
 use cuconv::conv::ConvSpec;
 use cuconv::util::json::Json;
@@ -97,12 +97,10 @@ fn scenario_panic_recovery(requests: usize) -> (Json, Server) {
         Fault::Stall { worker: 1, request: 3, millis: 120 },
     ]);
     let faulty = FaultInjector::new(Box::new(bench_runner()), plan);
-    let server = Server::start_pool(
-        Box::new(faulty),
-        BatchPolicy::default(),
-        PoolConfig::with_workers(3),
-    )
-    .expect("start supervised 3-worker pool");
+    let server = ServerBuilder::runner(Box::new(faulty))
+        .pool(PoolConfig::with_workers(3))
+        .start()
+        .expect("start supervised 3-worker pool");
 
     let report =
         run_closed_loop_mixed(&server.handle(), requests, 6, 0xC5A0_5EED, None, 0.4);
@@ -148,16 +146,14 @@ fn scenario_stall_deadline(requests: usize) -> Json {
     let plan =
         FaultPlan::new(vec![Fault::Stall { worker: 0, request: 2, millis: 150 }]);
     let faulty = FaultInjector::new(Box::new(bench_runner()), plan);
-    let mut server = Server::start_pool(
-        Box::new(faulty),
-        BatchPolicy::default(),
-        PoolConfig {
+    let mut server = ServerBuilder::runner(Box::new(faulty))
+        .pool(PoolConfig {
             workers: 2,
             selection: ShardSelection::RoundRobin,
             ..PoolConfig::default()
-        },
-    )
-    .expect("start supervised 2-worker pool");
+        })
+        .start()
+        .expect("start supervised 2-worker pool");
 
     let report = run_closed_loop_mixed(
         &server.handle(),
@@ -216,12 +212,11 @@ fn scenario_brownout(requests: usize) -> Json {
             max_delay: Duration::from_micros(500),
             queue_capacity: 4,
         };
-        let mut server = Server::start_pool(
-            Box::new(bench_runner()),
-            policy,
-            PoolConfig { workers: 1, brownout: Some(0.5), ..PoolConfig::default() },
-        )
-        .expect("start brown-out pool");
+        let mut server = ServerBuilder::runner(Box::new(bench_runner()))
+            .policy(policy)
+            .pool(PoolConfig { workers: 1, brownout: Some(0.5), ..PoolConfig::default() })
+            .start()
+            .expect("start brown-out pool");
 
         let report = run_closed_loop_mixed(
             &server.handle(),
@@ -297,14 +292,13 @@ fn scenario_brownout(requests: usize) -> Json {
 /// single-worker pool. Probes go one at a time so both pools serve at
 /// batch 1 and the comparison isolates recovery, not batching.
 fn assert_bit_identical(recovered: &Server) -> bool {
-    let mut reference = Server::start_conv(
+    let mut reference = ServerBuilder::conv(
         Box::new(CpuRefBackend::new()),
         bench_spec(),
-        None,
         &[1, 2, 4],
-        BatchPolicy::default(),
-        PoolConfig::with_workers(1),
     )
+    .pool(PoolConfig::with_workers(1))
+    .start()
     .expect("start unfaulted reference pool");
 
     let elems = recovered.handle().image_elems();

@@ -60,19 +60,14 @@ fn start(policy: BatchPolicy, adaptive: bool) -> Option<Server> {
 fn start(policy: BatchPolicy, _adaptive: bool) -> Option<Server> {
     use cuconv::backend::CpuRefBackend;
     use cuconv::conv::ConvSpec;
-    use cuconv::coordinator::PoolConfig;
+    use cuconv::coordinator::ServerBuilder;
 
     let spec = ConvSpec::paper(7, 1, 1, 32, 832);
     Some(
-        Server::start_conv(
-            Box::new(CpuRefBackend::new()),
-            spec,
-            None,
-            &[1, 2, 4, 8],
-            policy,
-            PoolConfig::default(),
-        )
-        .expect("server"),
+        ServerBuilder::conv(Box::new(CpuRefBackend::new()), spec, &[1, 2, 4, 8])
+            .policy(policy)
+            .start()
+            .expect("server"),
     )
 }
 

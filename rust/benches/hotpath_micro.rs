@@ -8,6 +8,11 @@
 //! * the register-tiled packed-weights microkernel vs the untiled fused
 //!   kernel on the common 3×3 zoo configs (geomean speedup; tiled
 //!   outputs asserted bit-identical to the naive oracle)
+//! * the blocked NCHWc explicit-SIMD microkernel vs the register-tiled
+//!   NCHW kernel on the same configs (geomean speedup, plus the
+//!   inverted `tiled_over_blocked` metric the CI `--baseline` gate
+//!   checks; blocked outputs asserted bit-identical to the naive
+//!   oracle after unpacking)
 //! * the MR×NR tile-shape sweep on a representative 3×3 config
 //! * batch gather (request pixels → batch buffer)
 //! * JSON manifest parse
@@ -172,6 +177,88 @@ fn main() {
     let tiled_geomean = (log_speedup_sum / tiled_rows.len() as f64).exp();
     println!("  geomean tiled-vs-fused speedup: {tiled_geomean:.2}x");
 
+    // --- blocked NCHWc explicit-SIMD microkernel vs the register-tiled
+    //     NCHW kernel, same configs, both through plan_with_filters +
+    //     execute_into. The input is packed to the blocked carrier
+    //     outside the timed loop (the whole-net steady state, where
+    //     activations stay blocked between layers); blocked output is
+    //     unpacked and asserted bit-identical to the naive oracle. ---
+    let simd_level = cuconv::cpuref::simd::active_level();
+    println!("\ncuconv tiled(NCHW) vs blocked(NCHWc, {}):", simd_level.name());
+    let mut blocked_rows = Vec::new();
+    let mut log_blocked_sum = 0.0f64;
+    for label in ["14-1-3-64-64", "7-1-3-384-192", "28-1-3-64-32", "9-2-3-16-8"] {
+        use cuconv::backend::TensorLayout;
+        use cuconv::cpuref::pack::{blocked_channels, nchw_to_nchwc, nchwc_to_nchw};
+
+        let spec = ConvSpec::from_table_label(label).unwrap();
+        let (input, filters) = io(&spec, 5);
+        let filters = std::sync::Arc::new(filters);
+        let [n, m, oh, ow] = spec.output_shape();
+
+        let tiled_plan = backend
+            .plan_with_filters(
+                &ConvDescriptor::new(spec).unwrap(),
+                cuconv::algo::Algorithm::CuConv,
+                &filters,
+            )
+            .unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(n, m, oh, ow);
+        let tiled = bench_fn(opts, || {
+            backend.execute_into(&tiled_plan, &input, &filters, &mut ws, &mut out).unwrap();
+            black_box(out.data().first().copied());
+        });
+
+        let blocked_desc =
+            ConvDescriptor::new(spec).unwrap().with_layout(TensorLayout::Nchwc);
+        let blocked_plan = backend
+            .plan_with_filters(&blocked_desc, cuconv::algo::Algorithm::CuConv, &filters)
+            .unwrap();
+        assert_eq!(blocked_plan.workspace_bytes(), 0, "blocked plans are workspace-free");
+        let cb = blocked_channels(spec.c);
+        let mut bin = Tensor::zeros(spec.n, cb, spec.h, spec.w);
+        nchw_to_nchwc(spec.n, spec.c, spec.h, spec.w, input.data(), bin.data_mut());
+        let mut bout = Tensor::zeros(n, blocked_channels(m), oh, ow);
+        backend.execute_into(&blocked_plan, &bin, &filters, &mut ws, &mut bout).unwrap();
+        let mut unpacked = Tensor::zeros(n, m, oh, ow);
+        nchwc_to_nchw(n, m, oh, ow, bout.data(), unpacked.data_mut());
+        let oracle = cuconv::cpuref::naive::conv_naive(&spec, &input, &filters);
+        assert_eq!(
+            unpacked.max_abs_diff(&oracle),
+            0.0,
+            "blocked kernel not bit-identical to the naive oracle on {label}"
+        );
+        let blocked = bench_fn(opts, || {
+            backend.execute_into(&blocked_plan, &bin, &filters, &mut ws, &mut bout).unwrap();
+            black_box(bout.data().first().copied());
+        });
+
+        let speedup = tiled.p50 / blocked.p50;
+        log_blocked_sum += speedup.ln();
+        println!(
+            "  {label:16}  tiled p50 {}  blocked p50 {}  ({speedup:.2}x, bit-exact)",
+            fmt_seconds(tiled.p50),
+            fmt_seconds(blocked.p50),
+        );
+        blocked_rows.push(Json::obj(vec![
+            ("config", Json::str(label)),
+            ("tiled_p50_us", Json::num(tiled.p50 * 1e6)),
+            ("blocked_p50_us", Json::num(blocked.p50 * 1e6)),
+            ("speedup", Json::num(speedup)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    let blocked_geomean = (log_blocked_sum / blocked_rows.len() as f64).exp();
+    // The CI baseline gate is lower-is-better, so the gated metric is
+    // the inverse ratio: tiled time over blocked time's reciprocal —
+    // 1.0 means parity, above ~1.0 means the blocked path regressed.
+    let tiled_over_blocked = 1.0 / blocked_geomean;
+    println!(
+        "  geomean blocked-vs-tiled speedup: {blocked_geomean:.2}x \
+         (gated tiled_over_blocked = {tiled_over_blocked:.3})"
+    );
+
     // --- MR x NR tile-shape sweep (the find_tile candidate set) on a
     //     representative 3x3 config, bare-kernel timing with the pack
     //     done outside the timed loop (the plan-time contract) ---
@@ -204,6 +291,10 @@ fn main() {
         ("cuconv_staged_vs_fused", Json::arr(cuconv_rows)),
         ("cuconv_tiled_vs_fused", Json::arr(tiled_rows)),
         ("tiled_geomean_speedup", Json::num(tiled_geomean)),
+        ("simd_level", Json::str(simd_level.name())),
+        ("cuconv_blocked_vs_tiled", Json::arr(blocked_rows)),
+        ("blocked_geomean_speedup", Json::num(blocked_geomean)),
+        ("tiled_over_blocked", Json::num(tiled_over_blocked)),
         ("tile_sweep", Json::arr(sweep_rows)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

@@ -2,7 +2,7 @@
 //! wire-path throughput/latency versus client concurrency, plus the
 //! deadline-shedding path.
 //!
-//! A shard pool serves a whole network ([`Server::start_net`]) behind
+//! A shard pool serves a whole network ([`ServerBuilder::net`]) behind
 //! the [`HttpServer`]; the socket load generator
 //! ([`run_closed_loop_http`]) drives it closed-loop through real TCP
 //! connections, so every point pays for JSON encode, lazy-scan
@@ -25,7 +25,7 @@
 use std::time::{Duration, Instant};
 
 use cuconv::backend::CpuRefBackend;
-use cuconv::coordinator::{BatchPolicy, PoolConfig, Server};
+use cuconv::coordinator::{BatchPolicy, PoolConfig, ServerBuilder};
 use cuconv::http::{
     run_closed_loop_http, wait_healthy, AppState, HttpConfig, HttpServer,
     TenantLimiter,
@@ -65,18 +65,15 @@ fn main() {
          {requests} requests per point",
         graph.name
     );
-    let server = Server::start_net(
-        Box::new(CpuRefBackend::new()),
-        &graph,
-        &[1, 2, 4],
-        BatchPolicy {
+    let server = ServerBuilder::net(Box::new(CpuRefBackend::new()), &graph, &[1, 2, 4])
+        .policy(BatchPolicy {
             max_batch: 4,
             max_delay: Duration::from_millis(5),
             queue_capacity: 256,
-        },
-        PoolConfig::with_workers(workers),
-    )
-    .expect("server");
+        })
+        .pool(PoolConfig::with_workers(workers))
+        .start()
+        .expect("server");
     let handle = server.handle();
     let image_elems = handle.image_elems();
     let mut http = HttpServer::start(

@@ -2,7 +2,7 @@
 //! workers-vs-throughput curve for the sharded coordinator.
 //!
 //! For each worker count the same network is served through
-//! [`Server::start_net`] with replicated `NetPlan`s (shared weights,
+//! [`ServerBuilder::net`] with replicated `NetPlan`s (shared weights,
 //! per-worker arenas/workspaces) and driven closed-loop by
 //! `2 × workers` clients. To keep total convolution fan-out constant
 //! while worker-level parallelism varies, each configuration caps the
@@ -21,7 +21,7 @@
 use std::time::Duration;
 
 use cuconv::backend::CpuRefBackend;
-use cuconv::coordinator::{run_closed_loop, BatchPolicy, PoolConfig, Server};
+use cuconv::coordinator::{run_closed_loop, BatchPolicy, PoolConfig, ServerBuilder};
 use cuconv::net::network_graph;
 use cuconv::util::json::Json;
 use cuconv::zoo::Network;
@@ -67,14 +67,11 @@ fn main() {
             max_delay: Duration::from_millis(5),
             queue_capacity: 256,
         };
-        let server = Server::start_net(
-            Box::new(CpuRefBackend::new()),
-            &graph,
-            &[1, 2, 4],
-            policy,
-            PoolConfig::with_workers(workers),
-        )
-        .expect("server");
+        let server = ServerBuilder::net(Box::new(CpuRefBackend::new()), &graph, &[1, 2, 4])
+            .policy(policy)
+            .pool(PoolConfig::with_workers(workers))
+            .start()
+            .expect("server");
         let clients = 2 * workers;
         // Warmup (first-touch paging of each replica's arena), then the
         // timed run.

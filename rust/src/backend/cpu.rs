@@ -30,11 +30,14 @@ use anyhow::{bail, ensure, Result};
 
 use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::backend::plan::PlanImpl;
-use crate::backend::{Backend, ConvDescriptor, ConvPlan, Support, Workspace};
+use crate::backend::{
+    Backend, ConvDescriptor, ConvPlan, LayoutPolicy, Support, TensorLayout, Workspace,
+};
 use crate::conv::{ConvSpec, F32_BYTES};
-use crate::cpuref::cuconv::{conv_tiled_into, find_tile_timed};
+use crate::cpuref::cuconv::{conv_nchwc_into, conv_tiled_into, find_tile_timed};
 use crate::cpuref::gemm::default_threads;
-use crate::cpuref::pack::{PackedFilters, TileShape};
+use crate::cpuref::pack::{nchwc_tile, PackedFilters, TileShape};
+use crate::cpuref::simd;
 use crate::cpuref::CpuImpl;
 use crate::tensor::Tensor;
 use crate::tunecache::TuneCache;
@@ -82,6 +85,10 @@ pub struct CpuRefBackend {
     /// measured tile picks are looked up here before timing and recorded
     /// here after, so they survive the process.
     tune_cache: Option<Arc<TuneCache>>,
+    /// Layout policy ([`CpuRefBackend::with_layout`]): `Nchw` withdraws
+    /// NCHWc support ([`Backend::supports_layout`]), so layout-aware
+    /// planners keep everything plain.
+    layout_policy: LayoutPolicy,
 }
 
 impl CpuRefBackend {
@@ -109,6 +116,23 @@ impl CpuRefBackend {
     pub fn with_tune_cache(mut self, cache: Arc<TuneCache>) -> CpuRefBackend {
         self.tune_cache = Some(cache);
         self
+    }
+
+    /// Set the activation-layout policy — the same builder surface as
+    /// tile and tune-cache choice. [`LayoutPolicy::Nchw`] makes
+    /// [`Backend::supports_layout`] refuse NCHWc, so a layout-aware
+    /// planner ([`NetPlanner::with_layout`](crate::net::NetPlanner::with_layout))
+    /// plans everything plain; `Auto`/`Nchwc` keep blocked planning
+    /// available (which of the two drives *lowering* is the planner's
+    /// business — the backend only answers capability).
+    pub fn with_layout(mut self, policy: LayoutPolicy) -> CpuRefBackend {
+        self.layout_policy = policy;
+        self
+    }
+
+    /// The configured layout policy.
+    pub fn layout_policy(&self) -> LayoutPolicy {
+        self.layout_policy
     }
 
     /// Plans created so far (each [`Backend::plan`] call increments it;
@@ -222,6 +246,51 @@ impl CpuRefBackend {
         Self::impl_for(algo).scratch_elems(spec).saturating_mul(F32_BYTES)
     }
 
+    /// Plan a blocked-layout conv: NCHWc is cuConv-only (the explicit
+    /// SIMD microkernel is the whole point of the layout), always packs
+    /// with the [`nchwc_tile`] panel shape (`MR = CHANNEL_BLOCK`), and
+    /// needs zero workspace. Reached through
+    /// [`Backend::plan_with_filters`] on a descriptor carrying
+    /// [`TensorLayout::Nchwc`] — plain [`Backend::plan`] refuses, since
+    /// a blocked plan without plan-owned packed weights cannot execute.
+    fn plan_nchwc(
+        &self,
+        desc: &ConvDescriptor,
+        algo: Algorithm,
+        filters: &Arc<Tensor>,
+    ) -> Result<ConvPlan> {
+        let spec = desc.spec();
+        ensure!(
+            self.supports_layout(TensorLayout::Nchwc),
+            "cpuref layout policy '{}' disables NCHWc planning",
+            self.layout_policy
+        );
+        ensure!(
+            algo == Algorithm::CuConv,
+            "NCHWc layout supports the cuConv algorithm only (got {algo})"
+        );
+        if let Support::Unsupported(reason) = self.capabilities(spec, algo) {
+            bail!("cpuref cannot plan {algo} for {spec}: {reason}");
+        }
+        ensure!(
+            filters.shape() == spec.filter_shape(),
+            "filter shape {:?} does not match plan {:?} ({spec})",
+            filters.shape(),
+            spec.filter_shape(),
+        );
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        let packed = self.packed_for(filters, nchwc_tile());
+        Ok(ConvPlan::new(
+            self.name(),
+            *spec,
+            algo,
+            PlanImpl::CpuRef { imp: CpuImpl::CuConvFused, packed: None },
+        )
+        .with_layout(TensorLayout::Nchwc)
+        .with_workspace_bytes(0)
+        .with_packed(packed))
+    }
+
     /// A plan running the clear-loop oracle ([`CpuImpl::Naive`]) —
     /// the ground truth every other backend/algorithm is tested against.
     pub fn reference_plan(&self, desc: &ConvDescriptor) -> ConvPlan {
@@ -263,8 +332,21 @@ impl Backend for CpuRefBackend {
         Support::Supported
     }
 
+    fn supports_layout(&self, layout: TensorLayout) -> bool {
+        match layout {
+            TensorLayout::Nchw => true,
+            TensorLayout::Nchwc => self.layout_policy != LayoutPolicy::Nchw,
+        }
+    }
+
     fn plan(&self, desc: &ConvDescriptor, algo: Algorithm) -> Result<ConvPlan> {
         let spec = desc.spec();
+        if desc.layout() == TensorLayout::Nchwc {
+            bail!(
+                "NCHWc planning requires plan_with_filters: the blocked microkernel \
+                 runs on plan-owned packed weights"
+            );
+        }
         if let Support::Unsupported(reason) = self.capabilities(spec, algo) {
             bail!("cpuref cannot plan {algo} for {spec}: {reason}");
         }
@@ -293,6 +375,9 @@ impl Backend for CpuRefBackend {
         algo: Algorithm,
         filters: &Arc<Tensor>,
     ) -> Result<ConvPlan> {
+        if desc.layout() == TensorLayout::Nchwc {
+            return self.plan_nchwc(desc, algo, filters);
+        }
         let plan = self.plan(desc, algo)?;
         if algo != Algorithm::CuConv {
             return Ok(plan);
@@ -321,6 +406,30 @@ impl Backend for CpuRefBackend {
         };
         plan.check_args(input, filters)?;
         plan.check_out(out)?;
+        // Blocked plans run the explicit-SIMD NCHWc microkernel on the
+        // plan-owned packing, dispatching on the active SIMD level
+        // (CUCONV_FORCE_SCALAR demotes; both bodies are bit-identical).
+        // There is no unpacked fallback here: the input is blocked, so
+        // foreign filters are a hard error, never silently slow/wrong.
+        if plan.layout == TensorLayout::Nchwc {
+            let Some(p) = packed else {
+                bail!("NCHWc plan without packed weights (not created via plan_with_filters?)");
+            };
+            ensure!(
+                p.matches(filters),
+                "NCHWc plan executed with different filters than it was packed for"
+            );
+            conv_nchwc_into(
+                &plan.spec,
+                input.data(),
+                p,
+                default_threads(),
+                simd::active_level(),
+                out.data_mut(),
+            );
+            self.packed_executes.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
         // Packed-weights fast path: plans created with the layer's
         // filters serve the register-tiled microkernel, zero scratch.
         // Only taken when the caller passed the exact tensor the plan
@@ -615,6 +724,80 @@ mod tests {
         );
         assert_eq!(p2.packed_filters().unwrap().tile(), tile);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn nchwc_plan_executes_bit_identical_to_oracle_with_zero_workspace() {
+        use crate::cpuref::pack::{blocked_channels, pack_nchwc, unpack_nchwc};
+        let backend = CpuRefBackend::new();
+        assert!(backend.supports_layout(TensorLayout::Nchw));
+        assert!(backend.supports_layout(TensorLayout::Nchwc), "Auto policy must allow blocked");
+        let spec = ConvSpec::paper(9, 2, 3, 5, 3); // C=3, M=5: tails both sides
+        let desc = ConvDescriptor::new(spec).unwrap().with_layout(TensorLayout::Nchwc);
+        let (input, filters) = io(&spec, 0xB10C);
+        let filters = Arc::new(filters);
+        let plan = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        assert_eq!(plan.layout(), TensorLayout::Nchwc);
+        assert_eq!(plan.workspace_bytes(), 0);
+        assert_eq!(plan.packed_filters().unwrap().tile(), crate::cpuref::pack::nchwc_tile());
+        assert_eq!(
+            plan.input_carrier_shape(),
+            [spec.n, blocked_channels(spec.c), spec.h, spec.w]
+        );
+        // Execute on the blocked carrier; unpack and compare bit-exact.
+        let xblk = pack_nchwc(&input);
+        let mut ws = Workspace::new();
+        let oblk = backend.execute(&plan, &xblk, &filters, &mut ws).unwrap();
+        assert_eq!(backend.packed_execute_count(), 1);
+        assert_eq!(ws.high_water_bytes(), 0, "blocked path must not touch the workspace");
+        let got = unpack_nchwc(&oblk, spec.m);
+        let want = conv_naive(&spec, &input, &filters);
+        assert_eq!(got.max_abs_diff(&want), 0.0, "blocked path must be bit-exact");
+        // A plain NCHW input against the blocked plan is a shape error.
+        let mut out = oblk.clone();
+        assert!(backend.execute_into(&plan, &input, &filters, &mut ws, &mut out).is_err());
+    }
+
+    #[test]
+    fn nchwc_planning_is_gated_and_cuconv_only() {
+        let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+        let desc = ConvDescriptor::new(spec).unwrap().with_layout(TensorLayout::Nchwc);
+        let mut rng = Rng::new(8);
+        let filters = Arc::new(Tensor::random(
+            spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0,
+        ));
+        let backend = CpuRefBackend::new();
+        // plan() has no filters to pack — must refuse, not mis-plan.
+        assert!(backend.plan(&desc, Algorithm::CuConv).is_err());
+        // Blocked is cuConv-only.
+        assert!(backend.plan_with_filters(&desc, Algorithm::Direct, &filters).is_err());
+        // An Nchw policy withdraws blocked support entirely.
+        let plain = CpuRefBackend::new().with_layout(LayoutPolicy::Nchw);
+        assert!(!plain.supports_layout(TensorLayout::Nchwc));
+        assert!(plain.plan_with_filters(&desc, Algorithm::CuConv, &filters).is_err());
+        // And Nchwc policy keeps it available.
+        let forced = CpuRefBackend::new().with_layout(LayoutPolicy::Nchwc);
+        assert!(forced.supports_layout(TensorLayout::Nchwc));
+        assert!(forced.plan_with_filters(&desc, Algorithm::CuConv, &filters).is_ok());
+    }
+
+    #[test]
+    fn nchwc_foreign_filters_are_a_hard_error_not_a_fallback() {
+        use crate::cpuref::pack::pack_nchwc;
+        // The blocked input cannot feed the unpacked kernel, so unlike
+        // the NCHW tiled path there is no fallback: wrong weights fail.
+        let backend = CpuRefBackend::new();
+        let spec = ConvSpec::paper(8, 1, 3, 4, 2);
+        let desc = ConvDescriptor::new(spec).unwrap().with_layout(TensorLayout::Nchwc);
+        let (input, filters) = io(&spec, 0xFE);
+        let filters = Arc::new(filters);
+        let plan = backend.plan_with_filters(&desc, Algorithm::CuConv, &filters).unwrap();
+        let mut rng = Rng::new(100);
+        let other = Tensor::random(spec.m, spec.c, spec.kh, spec.kw, &mut rng, -1.0, 1.0);
+        let xblk = pack_nchwc(&input);
+        let mut ws = Workspace::new();
+        assert!(backend.execute(&plan, &xblk, &other, &mut ws).is_err());
+        assert_eq!(backend.packed_execute_count(), 0);
     }
 
     #[test]

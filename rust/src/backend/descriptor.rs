@@ -1,6 +1,9 @@
 //! [`ConvDescriptor`]: a validated convolution problem description, the
 //! entry point of the descriptor → plan → execute lifecycle (the
-//! `cudnnConvolutionDescriptor` analogue).
+//! `cudnnConvolutionDescriptor` analogue) — plus [`TensorLayout`], the
+//! activation-layout half of the problem description (the
+//! `cudnnTensorFormat` analogue), and [`LayoutPolicy`], the
+//! planner/backend-level knob for choosing one.
 
 use std::fmt;
 
@@ -9,6 +12,83 @@ use anyhow::{bail, Result};
 use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
 use crate::conv::ConvSpec;
 
+/// How a layer's activations are laid out in memory — part of the
+/// problem description, not a kernel-internal trick, exactly as cuDNN
+/// makes `NCHW` vs `NCHW_VECT_C` part of the tensor descriptor.
+///
+/// Blocked tensors travel in a plain [`Tensor`](crate::tensor::Tensor)
+/// carrier of shape `[N, blocked_channels(C), H, W]` whose data is in
+/// NCHWc order (see [`crate::cpuref::pack::nchw_to_nchwc`]); the true
+/// channel count rides with the spec/shape metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TensorLayout {
+    /// Plain row-major `[N, C, H, W]` — the interchange layout every
+    /// backend accepts.
+    #[default]
+    Nchw,
+    /// Channel-blocked `[N, C/c, H, W, c]` panels
+    /// (`c =` [`CHANNEL_BLOCK`](crate::cpuref::pack::CHANNEL_BLOCK)),
+    /// the explicit-SIMD microkernel's native layout.
+    Nchwc,
+}
+
+impl TensorLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TensorLayout::Nchw => "nchw",
+            TensorLayout::Nchwc => "nchwc",
+        }
+    }
+}
+
+impl fmt::Display for TensorLayout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How a planner/backend picks per-conv layouts — the builder-surface
+/// sibling of algorithm and tile choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LayoutPolicy {
+    /// Run blocked wherever it wins: convs whose chosen algorithm is
+    /// cuConv (and whose backend supports NCHWc) go blocked, everything
+    /// else stays NCHW. The planning default.
+    #[default]
+    Auto,
+    /// Plain NCHW everywhere — disables the blocked path entirely.
+    Nchw,
+    /// Blocked everywhere possible: forces cuConv + NCHWc on every conv
+    /// the backend can run blocked.
+    Nchwc,
+}
+
+impl LayoutPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayoutPolicy::Auto => "auto",
+            LayoutPolicy::Nchw => "nchw",
+            LayoutPolicy::Nchwc => "nchwc",
+        }
+    }
+
+    /// Parse a CLI `--layout` value.
+    pub fn parse(s: &str) -> Result<LayoutPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(LayoutPolicy::Auto),
+            "nchw" => Ok(LayoutPolicy::Nchw),
+            "nchwc" => Ok(LayoutPolicy::Nchwc),
+            other => bail!("unknown layout policy '{other}' (expected auto|nchw|nchwc)"),
+        }
+    }
+}
+
+impl fmt::Display for LayoutPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// A validated [`ConvSpec`] with the registry-level queries a caller
 /// needs before planning: which algorithms are available at all, and how
 /// much workspace each needs (the `cudnnGetConvolutionForwardWorkspaceSize`
@@ -16,20 +96,39 @@ use crate::conv::ConvSpec;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvDescriptor {
     spec: ConvSpec,
+    /// Activation layout the plan must consume and produce. `Nchw`
+    /// unless [`ConvDescriptor::with_layout`] says otherwise, so every
+    /// pre-layout call site keeps its meaning.
+    layout: TensorLayout,
 }
 
 impl ConvDescriptor {
     /// Build a descriptor, rejecting geometrically invalid specs (zero
-    /// dims, filter larger than the padded input).
+    /// dims, filter larger than the padded input). Layout starts as
+    /// [`TensorLayout::Nchw`]; see [`ConvDescriptor::with_layout`].
     pub fn new(spec: ConvSpec) -> Result<ConvDescriptor> {
         if !spec.is_valid() {
             bail!("invalid convolution spec {spec}");
         }
-        Ok(ConvDescriptor { spec })
+        Ok(ConvDescriptor { spec, layout: TensorLayout::Nchw })
+    }
+
+    /// The same problem with its activations in `layout` — input and
+    /// output both: mixed-layout convs don't exist, a
+    /// [`Layout::Convert`](crate::net::Op::LayoutConvert) edge does the
+    /// switching.
+    pub fn with_layout(mut self, layout: TensorLayout) -> ConvDescriptor {
+        self.layout = layout;
+        self
     }
 
     pub fn spec(&self) -> &ConvSpec {
         &self.spec
+    }
+
+    /// The activation layout this problem's plan will consume/produce.
+    pub fn layout(&self) -> TensorLayout {
+        self.layout
     }
 
     /// Workspace bytes `algo` needs for this problem (registry model).
@@ -86,6 +185,27 @@ mod tests {
         let big = ConvDescriptor::new(ConvSpec::paper(224, 256, 3, 64, 64)).unwrap();
         assert!(!big.fits_workspace_cap(Algorithm::Fft));
         assert!(!big.registry_algorithms().contains(&Algorithm::Fft));
+    }
+
+    #[test]
+    fn layout_defaults_to_nchw_and_rides_the_descriptor() {
+        let d = ConvDescriptor::new(ConvSpec::paper(7, 1, 3, 4, 4)).unwrap();
+        assert_eq!(d.layout(), TensorLayout::Nchw);
+        let b = d.with_layout(TensorLayout::Nchwc);
+        assert_eq!(b.layout(), TensorLayout::Nchwc);
+        assert_eq!(b.spec(), d.spec(), "layout must not disturb the spec");
+        assert_ne!(d, b, "layout is part of descriptor identity");
+    }
+
+    #[test]
+    fn layout_policy_parses_cli_values() {
+        assert_eq!(LayoutPolicy::parse("auto").unwrap(), LayoutPolicy::Auto);
+        assert_eq!(LayoutPolicy::parse(" NCHW ").unwrap(), LayoutPolicy::Nchw);
+        assert_eq!(LayoutPolicy::parse("nchwc").unwrap(), LayoutPolicy::Nchwc);
+        assert!(LayoutPolicy::parse("blocked").is_err());
+        assert_eq!(LayoutPolicy::default(), LayoutPolicy::Auto);
+        assert_eq!(TensorLayout::default(), TensorLayout::Nchw);
+        assert_eq!(format!("{} {}", TensorLayout::Nchwc, LayoutPolicy::Auto), "nchwc auto");
     }
 
     #[test]

@@ -44,7 +44,7 @@ mod plan;
 mod pjrt;
 
 pub use cpu::{CpuRefBackend, TileChoice};
-pub use descriptor::ConvDescriptor;
+pub use descriptor::{ConvDescriptor, LayoutPolicy, TensorLayout};
 pub use find::{algo_find, algo_find_cached, algo_get};
 pub use plan::{ConvPlan, Workspace};
 
@@ -110,6 +110,15 @@ pub trait Backend: Send + Sync {
     /// with [`Backend::plan`]: a supported pair must plan successfully.
     fn capabilities(&self, spec: &ConvSpec, algo: Algorithm) -> Support;
 
+    /// Whether this backend can plan convs whose activations live in
+    /// `layout`. Every backend accepts plain NCHW; backends with a
+    /// blocked substrate path (the CPU backend's NCHWc microkernel)
+    /// override this, and the net planner's layout pass asks it before
+    /// lowering a conv to blocked form.
+    fn supports_layout(&self, layout: TensorLayout) -> bool {
+        layout == TensorLayout::Nchw
+    }
+
     /// One-time preparation for (descriptor, algorithm): path selection,
     /// artifact lookup, compilation. The returned plan is reused across
     /// many [`Backend::execute`] calls without repeating that work.
@@ -155,7 +164,9 @@ pub trait Backend: Send + Sync {
     ) -> Result<()>;
 
     /// As [`Backend::execute_into`], allocating a fresh output tensor —
-    /// the convenience form for one-shot callers and tests.
+    /// the convenience form for one-shot callers and tests. The tensor
+    /// has the plan's **carrier** shape: channel-padded for blocked
+    /// plans ([`ConvPlan::output_carrier_shape`]).
     fn execute(
         &self,
         plan: &ConvPlan,
@@ -163,7 +174,7 @@ pub trait Backend: Send + Sync {
         filters: &Tensor,
         workspace: &mut Workspace,
     ) -> Result<Tensor> {
-        let [n, m, oh, ow] = plan.spec().output_shape();
+        let [n, m, oh, ow] = plan.output_carrier_shape();
         let mut out = Tensor::zeros(n, m, oh, ow);
         self.execute_into(plan, input, filters, workspace, &mut out)?;
         Ok(out)

@@ -7,8 +7,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::algo::{Algorithm, WORKSPACE_CAP_BYTES};
+use crate::backend::TensorLayout;
 use crate::conv::{ConvSpec, F32_BYTES};
-use crate::cpuref::pack::PackedFilters;
+use crate::cpuref::pack::{blocked_channels, PackedFilters};
 use crate::cpuref::{CpuImpl, Scratch};
 use crate::util::align::AlignedF32Buf;
 
@@ -42,6 +43,7 @@ pub struct ConvPlan {
     pub(crate) backend: &'static str,
     pub(crate) spec: ConvSpec,
     pub(crate) algo: Algorithm,
+    pub(crate) layout: TensorLayout,
     pub(crate) workspace_bytes: usize,
     pub(crate) inner: PlanImpl,
 }
@@ -53,7 +55,21 @@ impl ConvPlan {
         algo: Algorithm,
         inner: PlanImpl,
     ) -> ConvPlan {
-        ConvPlan { backend, spec, algo, workspace_bytes: algo.workspace_bytes(&spec), inner }
+        ConvPlan {
+            backend,
+            spec,
+            algo,
+            layout: TensorLayout::Nchw,
+            workspace_bytes: algo.workspace_bytes(&spec),
+            inner,
+        }
+    }
+
+    /// Stamp the activation layout this plan consumes/produces
+    /// (descriptor-driven; [`TensorLayout::Nchw`] unless set).
+    pub(crate) fn with_layout(mut self, layout: TensorLayout) -> ConvPlan {
+        self.layout = layout;
+        self
     }
 
     /// Override the workspace requirement stamped on this plan. Backends
@@ -91,6 +107,31 @@ impl ConvPlan {
         self.algo
     }
 
+    /// Activation layout this plan consumes and produces.
+    pub fn layout(&self) -> TensorLayout {
+        self.layout
+    }
+
+    /// Carrier shape of this plan's input tensor: the spec's input shape
+    /// in NCHW, the channel-padded blocked carrier in NCHWc.
+    pub fn input_carrier_shape(&self) -> [usize; 4] {
+        let [n, c, h, w] = self.spec.input_shape();
+        match self.layout {
+            TensorLayout::Nchw => [n, c, h, w],
+            TensorLayout::Nchwc => [n, blocked_channels(c), h, w],
+        }
+    }
+
+    /// Carrier shape of this plan's output tensor (see
+    /// [`ConvPlan::input_carrier_shape`]).
+    pub fn output_carrier_shape(&self) -> [usize; 4] {
+        let [n, m, oh, ow] = self.spec.output_shape();
+        match self.layout {
+            TensorLayout::Nchw => [n, m, oh, ow],
+            TensorLayout::Nchwc => [n, blocked_channels(m), oh, ow],
+        }
+    }
+
     /// Workspace bytes [`Backend::execute`](super::Backend::execute)
     /// will request from the caller's [`Workspace`].
     pub fn workspace_bytes(&self) -> usize {
@@ -126,17 +167,22 @@ impl ConvPlan {
         self
     }
 
-    /// Check that `input`/`filters` match this plan's geometry.
+    /// Check that `input`/`filters` match this plan's geometry — the
+    /// input against the layout's carrier shape (blocked plans expect
+    /// the channel-padded carrier), the filters always against the plain
+    /// `[M, C, Kh, Kw]` shape (weights are packed plan-side, never
+    /// caller-blocked).
     pub(crate) fn check_args(
         &self,
         input: &crate::tensor::Tensor,
         filters: &crate::tensor::Tensor,
     ) -> Result<()> {
-        if input.shape() != self.spec.input_shape() {
+        if input.shape() != self.input_carrier_shape() {
             bail!(
-                "input shape {:?} does not match plan {:?} ({})",
+                "input shape {:?} does not match {} plan {:?} ({})",
                 input.shape(),
-                self.spec.input_shape(),
+                self.layout,
+                self.input_carrier_shape(),
                 self.spec
             );
         }
@@ -155,11 +201,12 @@ impl ConvPlan {
     /// geometry (the `execute_into` target) — shared by every backend
     /// so the validation cannot drift between implementations.
     pub(crate) fn check_out(&self, out: &crate::tensor::Tensor) -> Result<()> {
-        if out.shape() != self.spec.output_shape() {
+        if out.shape() != self.output_carrier_shape() {
             bail!(
-                "output shape {:?} does not match plan {:?} ({})",
+                "output shape {:?} does not match {} plan {:?} ({})",
                 out.shape(),
-                self.spec.output_shape(),
+                self.layout,
+                self.output_carrier_shape(),
                 self.spec
             );
         }

@@ -378,7 +378,7 @@ mod tests {
     fn closed_loop_accounting_separates_rejection_from_completion() {
         use crate::backend::CpuRefBackend;
         use crate::conv::ConvSpec;
-        use crate::coordinator::{BatchPolicy, PoolConfig, Server};
+        use crate::coordinator::{BatchPolicy, ServerBuilder};
 
         // A deliberately tiny pool: one worker, queue depth 1, batch 1,
         // flooded by 8 clients — backpressure is expected, and every
@@ -388,14 +388,13 @@ mod tests {
             max_delay: Duration::from_millis(1),
             queue_capacity: 1,
         };
-        let server = Server::start_conv(
+        let server = ServerBuilder::conv(
             Box::new(CpuRefBackend::new()),
             ConvSpec::paper(8, 1, 3, 4, 4),
-            None,
             &[1],
-            policy,
-            PoolConfig::default(),
         )
+        .policy(policy)
+        .start()
         .unwrap();
         let report = run_closed_loop(&server.handle(), 40, 8, 7);
         let m = server.metrics();
@@ -417,16 +416,14 @@ mod tests {
     fn closed_loop_with_dead_deadline_expires_everything() {
         use crate::backend::CpuRefBackend;
         use crate::conv::ConvSpec;
-        use crate::coordinator::{BatchPolicy, PoolConfig, Server};
+        use crate::coordinator::ServerBuilder;
 
-        let server = Server::start_conv(
+        let server = ServerBuilder::conv(
             Box::new(CpuRefBackend::new()),
             ConvSpec::paper(8, 1, 3, 4, 4),
-            None,
             &[1],
-            BatchPolicy::default(),
-            PoolConfig::default(),
         )
+        .start()
         .unwrap();
         // A zero budget is dead on arrival: the dispatcher must drop
         // every request before a worker sees it.
@@ -461,16 +458,14 @@ mod tests {
     fn mixed_priorities_account_per_class() {
         use crate::backend::CpuRefBackend;
         use crate::conv::ConvSpec;
-        use crate::coordinator::{BatchPolicy, PoolConfig, Server};
+        use crate::coordinator::ServerBuilder;
 
-        let server = Server::start_conv(
+        let server = ServerBuilder::conv(
             Box::new(CpuRefBackend::new()),
             ConvSpec::paper(8, 1, 3, 4, 4),
-            None,
             &[1],
-            BatchPolicy::default(),
-            PoolConfig::default(),
         )
+        .start()
         .unwrap();
         let report = run_closed_loop_mixed(&server.handle(), 24, 3, 11, None, 0.5);
         assert_eq!(report.offered(), 24, "both classes together cover every request");

@@ -64,8 +64,8 @@ pub use request::{
 };
 pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner, NetForwardRunner};
 pub use server::{
-    PoolConfig, Server, ServerConfig, ServerHandle, ShardSelection, SubmitError,
-    DEFAULT_BROWNOUT,
+    PoolConfig, Server, ServerBuilder, ServerConfig, ServerHandle,
+    ShardSelection, SubmitError, DEFAULT_BROWNOUT,
 };
 pub use supervise::{Fault, FaultInjector, FaultPlan};
 

@@ -53,7 +53,10 @@
 //!   per-shard view, including restart counts.
 //!
 //! Whether a deployment serves artifacts, one conv layer, or a whole
-//! network is still a [`BatchRunner`] choice, not a different server.
+//! network is still a [`BatchRunner`] choice, not a different server:
+//! every deployment is configured through [`ServerBuilder`] (source ×
+//! policy × pool), and only the builder reaches the `start_pool`
+//! primitive underneath.
 
 use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -207,6 +210,182 @@ impl Default for ServerConfig {
     }
 }
 
+/// Where a [`ServerBuilder`] gets its [`BatchRunner`]. Deferred until
+/// [`ServerBuilder::start`] so plan compilation (the expensive part of
+/// the conv/net sources) happens once, with the final configuration.
+enum RunnerSource {
+    /// An explicit, caller-built runner.
+    Runner(Box<dyn BatchRunner>),
+    /// One convolution layer through a pluggable backend.
+    Conv {
+        backend: Box<dyn crate::backend::Backend>,
+        spec: crate::conv::ConvSpec,
+        algo: Option<crate::algo::Algorithm>,
+        batch_sizes: Vec<usize>,
+    },
+    /// A whole network, compiled per batch size — either on a plain
+    /// backend or through a caller-configured planner (the
+    /// `--tune-cache` path, where a warm persistent cache makes pool
+    /// startup measurement-free).
+    Net {
+        planner: Option<crate::net::NetPlanner>,
+        backend: Option<Box<dyn crate::backend::Backend>>,
+        graph: crate::net::NetGraph,
+        batch_sizes: Vec<usize>,
+    },
+}
+
+/// The one way in: every server — explicit runner, single conv layer,
+/// or whole network — is configured and started through this builder.
+///
+/// ```text
+/// ServerBuilder::net(Box::new(CpuRefBackend::new()), &graph, &[1, 2, 4])
+///     .policy(policy)
+///     .pool(PoolConfig::with_workers(2))
+///     .start()?
+/// ```
+///
+/// The four source constructors ([`runner`](ServerBuilder::runner),
+/// [`conv`](ServerBuilder::conv), [`net`](ServerBuilder::net),
+/// [`net_planned`](ServerBuilder::net_planned)) pick *what* is served;
+/// [`policy`](ServerBuilder::policy) and [`pool`](ServerBuilder::pool)
+/// configure *how* (defaults: [`BatchPolicy::default`],
+/// [`PoolConfig::default`] — one supervised worker). [`start`]
+/// (ServerBuilder::start) builds the runner and hands it to the private
+/// `start_pool` primitive — the only call site that primitive has, so
+/// the replication/supervision/admission invariants documented there
+/// hold for every server in the crate.
+pub struct ServerBuilder {
+    source: RunnerSource,
+    policy: BatchPolicy,
+    pool: PoolConfig,
+}
+
+impl ServerBuilder {
+    fn from_source(source: RunnerSource) -> ServerBuilder {
+        ServerBuilder {
+            source,
+            policy: BatchPolicy::default(),
+            pool: PoolConfig::default(),
+        }
+    }
+
+    /// Serve an explicit, caller-built runner (fault injectors, custom
+    /// [`BatchRunner`] impls, AOT model runners).
+    pub fn runner(runner: Box<dyn BatchRunner>) -> ServerBuilder {
+        ServerBuilder::from_source(RunnerSource::Runner(runner))
+    }
+
+    /// Serve one convolution layer through a pluggable backend — the
+    /// artifact-free serving path. `batch_sizes` are the plan
+    /// granularities; the algorithm is auto-selected unless pinned with
+    /// [`ServerBuilder::algo`].
+    pub fn conv(
+        backend: Box<dyn crate::backend::Backend>,
+        spec: crate::conv::ConvSpec,
+        batch_sizes: &[usize],
+    ) -> ServerBuilder {
+        ServerBuilder::from_source(RunnerSource::Conv {
+            backend,
+            spec,
+            algo: None,
+            batch_sizes: batch_sizes.to_vec(),
+        })
+    }
+
+    /// Serve a whole network (a [`NetGraph`](crate::net::NetGraph)
+    /// compiled per batch size) through a pluggable backend — the
+    /// network-scope sibling of [`ServerBuilder::conv`].
+    pub fn net(
+        backend: Box<dyn crate::backend::Backend>,
+        graph: &crate::net::NetGraph,
+        batch_sizes: &[usize],
+    ) -> ServerBuilder {
+        ServerBuilder::from_source(RunnerSource::Net {
+            planner: None,
+            backend: Some(backend),
+            graph: graph.clone(),
+            batch_sizes: batch_sizes.to_vec(),
+        })
+    }
+
+    /// As [`ServerBuilder::net`], compiling through a caller-configured
+    /// [`NetPlanner`](crate::net::NetPlanner) — the way to serve with a
+    /// persistent tune cache, a measured algorithm choice, or a
+    /// non-default [`LayoutPolicy`](crate::backend::LayoutPolicy).
+    pub fn net_planned(
+        planner: crate::net::NetPlanner,
+        graph: &crate::net::NetGraph,
+        batch_sizes: &[usize],
+    ) -> ServerBuilder {
+        ServerBuilder::from_source(RunnerSource::Net {
+            planner: Some(planner),
+            backend: None,
+            graph: graph.clone(),
+            batch_sizes: batch_sizes.to_vec(),
+        })
+    }
+
+    /// Pin the convolution algorithm (only meaningful for a
+    /// [`ServerBuilder::conv`] source; ignored by the others, whose
+    /// per-layer choice belongs to the planner).
+    pub fn algo(mut self, algo: crate::algo::Algorithm) -> ServerBuilder {
+        if let RunnerSource::Conv { algo: slot, .. } = &mut self.source {
+            *slot = Some(algo);
+        }
+        self
+    }
+
+    /// Batching policy (window size/deadline, per-shard queue depth).
+    pub fn policy(mut self, policy: BatchPolicy) -> ServerBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Worker-pool shape (shard count, selection, supervision,
+    /// brown-out).
+    pub fn pool(mut self, pool: PoolConfig) -> ServerBuilder {
+        self.pool = pool;
+        self
+    }
+
+    /// Build the runner (compiling plans for the conv/net sources) and
+    /// start the sharded worker pool.
+    pub fn start(self) -> Result<Server> {
+        let runner: Box<dyn BatchRunner> = match self.source {
+            RunnerSource::Runner(r) => r,
+            RunnerSource::Conv { backend, spec, algo, batch_sizes } => {
+                Box::new(crate::coordinator::runner::ConvBackendRunner::new(
+                    backend,
+                    spec,
+                    algo,
+                    &batch_sizes,
+                )?)
+            }
+            RunnerSource::Net { planner, backend, graph, batch_sizes } => {
+                match (planner, backend) {
+                    (Some(p), _) => {
+                        Box::new(crate::coordinator::runner::NetForwardRunner::with_planner(
+                            p,
+                            &graph,
+                            &batch_sizes,
+                        )?)
+                    }
+                    (None, Some(b)) => {
+                        Box::new(crate::coordinator::runner::NetForwardRunner::new(
+                            b,
+                            &graph,
+                            &batch_sizes,
+                        )?)
+                    }
+                    (None, None) => unreachable!("net source always carries a planner or backend"),
+                }
+            }
+        };
+        Server::start_pool(runner, self.policy, self.pool)
+    }
+}
+
 struct QueuedRequest {
     req: InferRequest,
     resp: mpsc::Sender<Result<InferResponse, ServeError>>,
@@ -263,13 +442,15 @@ pub struct ServerHandle {
 }
 
 impl Server {
-    /// Start a sharded worker pool on an explicit runner (the general
-    /// entry point; the convenience constructors below build the
-    /// runner). Workers run replicas from [`BatchRunner::replicate`];
-    /// under supervision (the default) the original runner is retained
-    /// as the respawn prototype, so a panicked shard can be rebuilt
-    /// from the same `Arc`-shared plans.
-    pub fn start_pool(
+    /// Start a sharded worker pool on a built runner — the single
+    /// primitive every server goes through, reached only from
+    /// [`ServerBuilder::start`] (callers configure a [`ServerBuilder`];
+    /// this stays private so the builder is the one way in). Workers
+    /// run replicas from [`BatchRunner::replicate`]; under supervision
+    /// (the default) the original runner is retained as the respawn
+    /// prototype, so a panicked shard can be rebuilt from the same
+    /// `Arc`-shared plans.
+    fn start_pool(
         runner: Box<dyn BatchRunner>,
         policy: BatchPolicy,
         pool: PoolConfig,
@@ -380,78 +561,16 @@ impl Server {
         Ok(Server { handle, workers, shutdown, panicked_joins: 0 })
     }
 
-    /// Single-worker convenience form of [`Server::start_pool`].
-    pub fn start_with_runner(
-        runner: Box<dyn BatchRunner>,
-        policy: BatchPolicy,
-    ) -> Result<Server> {
-        Server::start_pool(runner, policy, PoolConfig::default())
-    }
-
-    /// Serve one convolution layer through a pluggable backend — the
-    /// artifact-free serving path (and, with `PjrtBackend`, the
-    /// kernel-serving path). `batch_sizes` are the plan granularities.
-    pub fn start_conv(
-        backend: Box<dyn crate::backend::Backend>,
-        spec: crate::conv::ConvSpec,
-        algo: Option<crate::algo::Algorithm>,
-        batch_sizes: &[usize],
-        policy: BatchPolicy,
-        pool: PoolConfig,
-    ) -> Result<Server> {
-        let runner = crate::coordinator::runner::ConvBackendRunner::new(
-            backend,
-            spec,
-            algo,
-            batch_sizes,
-        )?;
-        Server::start_pool(Box::new(runner), policy, pool)
-    }
-
-    /// Serve a whole network (a [`NetGraph`](crate::net::NetGraph)
-    /// compiled per batch size) through a pluggable backend — the
-    /// network-scope sibling of [`Server::start_conv`].
-    pub fn start_net(
-        backend: Box<dyn crate::backend::Backend>,
-        graph: &crate::net::NetGraph,
-        batch_sizes: &[usize],
-        policy: BatchPolicy,
-        pool: PoolConfig,
-    ) -> Result<Server> {
-        let runner = crate::coordinator::runner::NetForwardRunner::new(
-            backend,
-            graph,
-            batch_sizes,
-        )?;
-        Server::start_pool(Box::new(runner), policy, pool)
-    }
-
-    /// As [`Server::start_net`], compiling through a caller-configured
-    /// [`NetPlanner`](crate::net::NetPlanner) — the `--tune-cache`
-    /// serving path, where a warm persistent cache makes pool startup
-    /// measurement-free.
-    pub fn start_net_planned(
-        planner: crate::net::NetPlanner,
-        graph: &crate::net::NetGraph,
-        batch_sizes: &[usize],
-        policy: BatchPolicy,
-        pool: PoolConfig,
-    ) -> Result<Server> {
-        let runner = crate::coordinator::runner::NetForwardRunner::with_planner(
-            planner,
-            graph,
-            batch_sizes,
-        )?;
-        Server::start_pool(Box::new(runner), policy, pool)
-    }
-
     /// Start serving `config.model` from the artifact manifest (AOT
     /// model executables through PJRT).
     #[cfg(feature = "pjrt")]
     pub fn start(manifest: crate::runtime::Manifest, config: ServerConfig) -> Result<Server> {
         let runner =
             crate::coordinator::runner::PjrtModelRunner::new(manifest, &config)?;
-        Server::start_pool(Box::new(runner), config.policy, config.pool)
+        ServerBuilder::runner(Box::new(runner))
+            .policy(config.policy)
+            .pool(config.pool)
+            .start()
     }
 
     pub fn handle(&self) -> ServerHandle {

@@ -19,7 +19,8 @@
 //! 2. Worker identities are assigned in **replication order**: the
 //!    injector built by [`FaultInjector::new`] is the pool prototype
 //!    (it never serves), and the i-th replica taken from it is worker
-//!    `i`. [`Server::start_pool`](crate::coordinator::server::Server)
+//!    `i`. The pool (started through
+//!    [`ServerBuilder`](crate::coordinator::server::ServerBuilder))
 //!    replicates all N workers from the prototype in index order, so
 //!    plan worker indices line up with pool shard indices.
 //! 3. Every fault fires **once**. The fired set is shared across all
@@ -114,7 +115,7 @@ const PROTOTYPE: usize = usize::MAX;
 /// A [`BatchRunner`] wrapper that executes a [`FaultPlan`].
 ///
 /// Build one with [`FaultInjector::new`] around the pool's prototype
-/// runner and hand it to `Server::start_pool` with supervision on; each
+/// runner and hand it to `ServerBuilder::runner` with supervision on; each
 /// replica the pool takes becomes the next worker in plan order. For
 /// unit tests that want a specific identity without a pool,
 /// [`FaultInjector::for_worker`] pins one directly.

@@ -43,9 +43,29 @@
 //! `(n, m-block)` output blocks on the uneven-band splitter
 //! ([`par_chunks_by`]).
 
+//! **Blocked (NCHWc)** ([`conv_nchwc_into`]): the explicit-SIMD
+//! microkernel over channel-blocked activations. Input and output live
+//! in NCHWc panels (`[N][C/c][H][W][c]`, `c =`
+//! [`CHANNEL_BLOCK`](crate::cpuref::pack::CHANNEL_BLOCK)), so one
+//! 8-wide vector covers the output-channel block of a pixel and every
+//! load/store in the inner loop is contiguous — the plan-time layout
+//! amortization of the paper applied to activations, not just weights.
+//! The kernel vectorizes over **output** channels: the 8 filters of a
+//! block share each broadcast input scalar, so there is no horizontal
+//! reduction and the per-lane arithmetic is exactly the scalar
+//! mul-then-add of the oracle. Taps walk `(cb, cc, ky, kx)` — i.e. the
+//! oracle's `(c, ky, kx)` order — and the wide op is a separate
+//! multiply + add ([`crate::cpuref::simd::avx2::mul_add`]), so outputs stay
+//! **bit-identical** to `conv_naive` on both the AVX2 and the scalar
+//! body ([`SimdLevel`] dispatch, `CUCONV_FORCE_SCALAR` override).
+
 use crate::conv::ConvSpec;
 use crate::cpuref::gemm::{default_threads, par_chunks, par_chunks_by};
-use crate::cpuref::pack::{PackedFilters, TileShape};
+use crate::cpuref::pack::{
+    blocked_channels, nchwc_elems, nchwc_tile, pack_nchwc, unpack_nchwc, PackedFilters,
+    TileShape, CHANNEL_BLOCK,
+};
+use crate::cpuref::simd::SimdLevel;
 use crate::cpuref::{check_shapes, ox_range, Scratch};
 use crate::tensor::Tensor;
 
@@ -522,6 +542,199 @@ pub fn find_tile_timed(spec: &ConvSpec, iters: usize) -> (TileShape, f64) {
     (best.0, best.1 * 1e6)
 }
 
+/// Output pixels per accumulator strip in the NCHWc kernel: 8 pixels ×
+/// 8 output channels = 64 f32 of live accumulator, 8 `__m256` registers
+/// on the wide path — half the register file, leaving room for the
+/// broadcast input and the weight vector.
+const NCHWC_NR: usize = 8;
+
+/// The blocked-layout cuConv kernel: activations in NCHWc panels
+/// (packed by [`pack_nchwc`]/[`nchw_to_nchwc`](crate::cpuref::pack::nchw_to_nchwc)),
+/// weights in [`PackedFilters`] panels with the [`nchwc_tile`] shape
+/// (`MR = CHANNEL_BLOCK`), output written as NCHWc with `M` rounded up
+/// to the block (tail lanes come out 0 from the zero-padded panel
+/// rows). Dispatches on `level`: the AVX2 body and the scalar body are
+/// line-for-line twins, pinned bit-identical by the test sweep.
+///
+/// `out.len()` must be `nchwc_elems(n, m, oh, ow)`; every element is
+/// overwritten (dirty buffers are fine).
+pub fn conv_nchwc_into(
+    spec: &ConvSpec,
+    xblk: &[f32],
+    packed: &PackedFilters,
+    threads: usize,
+    level: SimdLevel,
+    out: &mut [f32],
+) {
+    assert!(spec.is_valid(), "invalid conv spec: {spec:?}");
+    assert!(packed.matches_spec(spec), "packed filters do not match spec");
+    assert_eq!(packed.tile(), nchwc_tile(), "NCHWc kernel needs the {} tile", nchwc_tile());
+    assert_eq!(
+        xblk.len(),
+        nchwc_elems(spec.n, spec.c, spec.h, spec.w),
+        "blocked input length mismatch"
+    );
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mblocks = packed.blocks();
+    assert_eq!(out.len(), nchwc_elems(spec.n, spec.m, oh, ow), "blocked output length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 {
+        assert_eq!(
+            crate::cpuref::simd::hardware_level(),
+            SimdLevel::Avx2,
+            "Avx2 dispatch requested on a CPU without AVX2"
+        );
+    }
+    let image = nchwc_elems(1, spec.c, spec.h, spec.w);
+    let plane = oh * ow * CHANNEL_BLOCK;
+    // One work item per (image, output-channel block) plane, split on
+    // the uniform band splitter like the fused kernel.
+    par_chunks(out, plane, spec.n * mblocks, threads, |start, band| {
+        for (off, out_plane) in band.chunks_mut(plane).enumerate() {
+            let p = start + off;
+            let xs = &xblk[(p / mblocks) * image..][..image];
+            let panel = packed.panel(p % mblocks);
+            match level {
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx2 => unsafe { nchwc_plane_avx2(spec, xs, panel, out_plane) },
+                _ => nchwc_plane_scalar(spec, xs, panel, out_plane),
+            }
+        }
+    });
+}
+
+/// Scalar body: one output plane (`OH × OW × CHANNEL_BLOCK`) for one
+/// (image, filter-block) pair. The reference the AVX2 body mirrors —
+/// `acc[j]` here is lane-for-lane the `__m256` accumulator there.
+fn nchwc_plane_scalar(spec: &ConvSpec, xs: &[f32], panel: &[f32], out: &mut [f32]) {
+    let l = CHANNEL_BLOCK;
+    let cblocks = blocked_channels(spec.c) / l;
+    let taps = spec.kh * spec.kw;
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    for oy in 0..oh {
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let len = NCHWC_NR.min(ow - ox0);
+            let mut acc = [[0.0f32; CHANNEL_BLOCK]; NCHWC_NR];
+            for cb in 0..cblocks {
+                let x_cb = cb * spec.h * spec.w * l;
+                // Real channels only: padded tail lanes of the input are
+                // zero, but skipping them keeps the tap walk exactly the
+                // oracle's `c` ascending loop (bit-identity by identical
+                // operand sequence, not just by adding zeros).
+                for cc in 0..l.min(spec.c - cb * l) {
+                    let f_c = ((cb * l + cc) * taps) * l;
+                    for ky in 0..spec.kh {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
+                        if iy < 0 || iy >= spec.h as isize {
+                            continue;
+                        }
+                        let x_row = x_cb + iy as usize * spec.w * l;
+                        for kx in 0..spec.kw {
+                            let (lo, hi) = ox_range(spec, kx);
+                            let j0 = lo.saturating_sub(ox0);
+                            let j1 = if hi > ox0 { (hi - ox0).min(len) } else { 0 };
+                            if j0 >= j1 {
+                                continue;
+                            }
+                            let w8 = &panel[f_c + (ky * spec.kw + kx) * l..][..l];
+                            for (j, accj) in acc.iter_mut().enumerate().take(j1).skip(j0) {
+                                let ix = (ox0 + j) * spec.stride + kx - spec.pad_w;
+                                let x = xs[x_row + ix * l + cc];
+                                for (a, &wr) in accj.iter_mut().zip(w8) {
+                                    *a += wr * x;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for (j, accj) in acc.iter().enumerate().take(len) {
+                let o = (oy * ow + ox0 + j) * l;
+                out[o..o + l].copy_from_slice(accj);
+            }
+            ox0 += NCHWC_NR;
+        }
+    }
+}
+
+/// AVX2 body: identical loop structure to [`nchwc_plane_scalar`] with
+/// the 8-lane accumulators held in `__m256` registers. Keep the two in
+/// lockstep — the bit-identity sweep pins them to each other and to the
+/// oracle.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (checked by
+/// [`conv_nchwc_into`] at dispatch).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn nchwc_plane_avx2(spec: &ConvSpec, xs: &[f32], panel: &[f32], out: &mut [f32]) {
+    use crate::cpuref::simd::avx2 as v;
+    let l = CHANNEL_BLOCK;
+    let cblocks = blocked_channels(spec.c) / l;
+    let taps = spec.kh * spec.kw;
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    for oy in 0..oh {
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let len = NCHWC_NR.min(ow - ox0);
+            let mut acc = unsafe { [v::zero(); NCHWC_NR] };
+            for cb in 0..cblocks {
+                let x_cb = cb * spec.h * spec.w * l;
+                for cc in 0..l.min(spec.c - cb * l) {
+                    let f_c = ((cb * l + cc) * taps) * l;
+                    for ky in 0..spec.kh {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad_h as isize;
+                        if iy < 0 || iy >= spec.h as isize {
+                            continue;
+                        }
+                        let x_row = x_cb + iy as usize * spec.w * l;
+                        for kx in 0..spec.kw {
+                            let (lo, hi) = ox_range(spec, kx);
+                            let j0 = lo.saturating_sub(ox0);
+                            let j1 = if hi > ox0 { (hi - ox0).min(len) } else { 0 };
+                            if j0 >= j1 {
+                                continue;
+                            }
+                            let w8 = unsafe { v::load8(&panel[f_c + (ky * spec.kw + kx) * l..]) };
+                            for (j, accj) in acc.iter_mut().enumerate().take(j1).skip(j0) {
+                                let ix = (ox0 + j) * spec.stride + kx - spec.pad_w;
+                                let x = xs[x_row + ix * l + cc];
+                                unsafe { *accj = v::mul_add(*accj, w8, v::splat(x)) };
+                            }
+                        }
+                    }
+                }
+            }
+            for (j, accj) in acc.iter().enumerate().take(len) {
+                let o = (oy * ow + ox0 + j) * l;
+                unsafe { v::store8(&mut out[o..o + l], *accj) };
+            }
+            ox0 += NCHWC_NR;
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`conv_nchwc_into`]: packs the
+/// input and filters, runs blocked, unpacks back to plain NCHW. The
+/// plan-owned path ([`CpuRefBackend`](crate::backend::CpuRefBackend))
+/// does the packing once at plan time instead.
+pub fn conv_nchwc(
+    spec: &ConvSpec,
+    input: &Tensor,
+    filters: &Tensor,
+    level: SimdLevel,
+    threads: usize,
+) -> Tensor {
+    check_shapes(spec, input, filters);
+    let packed = PackedFilters::pack(filters, nchwc_tile());
+    let xblk = pack_nchwc(input);
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let mut oblk = Tensor::zeros(spec.n, blocked_channels(spec.m), oh, ow);
+    conv_nchwc_into(spec, xblk.data(), &packed, threads, level, oblk.data_mut());
+    unpack_nchwc(&oblk, spec.m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -703,5 +916,146 @@ mod tests {
         conv_fused_into(&spec, &input, &filters, 2, &mut out);
         let got = Tensor::from_vec(spec.n, spec.m, spec.out_h(), spec.out_w(), out);
         assert!(got.rel_l2_error(&want) < 1e-5);
+    }
+
+    /// The levels this machine can actually run: always Scalar, plus
+    /// Avx2 when the hardware has it. Tests dispatch explicitly so the
+    /// scalar body is exercised even on AVX2 machines.
+    fn nchwc_levels() -> Vec<SimdLevel> {
+        let mut levels = vec![SimdLevel::Scalar];
+        if crate::cpuref::simd::hardware_level() == SimdLevel::Avx2 {
+            levels.push(SimdLevel::Avx2);
+        }
+        levels
+    }
+
+    /// The blocked kernel must agree with the clear-loop oracle **bit
+    /// for bit** on both microkernel bodies, across strides 1/2/4,
+    /// asymmetric padding, 1×1, 11×11/s4, C % 8 ≠ 0 channel tails
+    /// (including multi-block C) and M % 8 ≠ 0 filter tails.
+    #[test]
+    fn nchwc_matches_oracle_bit_exactly_across_sweep() {
+        let specs = [
+            ConvSpec::paper(7, 1, 1, 8, 16), // 1x1, full blocks
+            ConvSpec::paper(9, 2, 3, 5, 3),  // C=3, M=5: tails both sides
+            ConvSpec::paper(7, 1, 5, 6, 5),  // 5x5, C=5/M=6 tails
+            ConvSpec::paper(14, 1, 3, 12, 9), // C=9: two blocks w/ tail
+            ConvSpec { stride: 2, pad_h: 0, pad_w: 0, ..ConvSpec::paper(11, 1, 3, 4, 2) },
+            ConvSpec { pad_h: 2, pad_w: 1, ..ConvSpec::paper(6, 1, 3, 3, 2) }, // asym pad
+            ConvSpec { stride: 2, ..ConvSpec::paper(9, 1, 5, 2, 3) },
+            // AlexNet conv1 shrunk: 11x11 stride-4 unpadded.
+            ConvSpec {
+                n: 1, c: 3, h: 27, w: 27, m: 5, kh: 11, kw: 11,
+                stride: 4, pad_h: 0, pad_w: 0,
+            },
+        ];
+        for (i, spec) in specs.iter().enumerate() {
+            let (input, filters) = io(spec, 0x30 + i as u64);
+            let oracle = conv_naive(spec, &input, &filters);
+            for level in nchwc_levels() {
+                for threads in [1, 4] {
+                    let got = conv_nchwc(spec, &input, &filters, level, threads);
+                    assert_eq!(
+                        got.max_abs_diff(&oracle),
+                        0.0,
+                        "nchwc {level} ({threads}t) not bit-identical on {spec}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Seeded random-spec property sweep: the stress version of the
+    /// hand-picked sweep, pushing stride/pad/kernel/C/M combinations
+    /// (biased toward block boundaries) through both bodies.
+    #[test]
+    fn nchwc_random_specs_stay_bit_identical_to_oracle() {
+        let mut rng = Rng::new(0x2C11);
+        let levels = nchwc_levels();
+        for case in 0..20 {
+            let spec = ConvSpec {
+                n: rng.range(1, 2),
+                c: rng.range(1, 18),
+                h: rng.range(3, 12),
+                w: rng.range(3, 12),
+                m: rng.range(1, 18),
+                kh: rng.range(1, 4),
+                kw: rng.range(1, 4),
+                stride: rng.range(1, 3),
+                pad_h: rng.range(0, 2),
+                pad_w: rng.range(0, 2),
+            };
+            if !spec.is_valid() {
+                continue; // kernel larger than padded input — skip
+            }
+            let (input, filters) = io(&spec, 0x4000 + case);
+            let oracle = conv_naive(&spec, &input, &filters);
+            for &level in &levels {
+                let got = conv_nchwc(&spec, &input, &filters, level, 2);
+                assert_eq!(
+                    got.max_abs_diff(&oracle),
+                    0.0,
+                    "nchwc {level} not bit-identical on random case {case}: {spec}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nchwc_parallel_split_matches_oracle_above_cutoff() {
+        // 10x10 output x 8 lanes = 800 f32 per plane, 2 images x 2
+        // blocks x ... — push total above the 8192 par cutoff so
+        // threads=4 actually splits into bands.
+        let spec = ConvSpec::paper(32, 2, 3, 10, 5);
+        assert!(nchwc_elems(spec.n, spec.m, spec.out_h(), spec.out_w()) >= 8 * 1024);
+        let (input, filters) = io(&spec, 0xB10C);
+        let want = conv_naive(&spec, &input, &filters);
+        for level in nchwc_levels() {
+            let got = conv_nchwc(&spec, &input, &filters, level, 4);
+            assert_eq!(got.max_abs_diff(&want), 0.0, "nchwc {level} parallel");
+        }
+    }
+
+    #[test]
+    fn nchwc_overwrites_a_dirty_output_buffer_and_zeroes_m_tail() {
+        let spec = ConvSpec::paper(6, 1, 3, 3, 2); // M=3: 5 padded lanes
+        let (input, filters) = io(&spec, 0xD1B7);
+        let want = conv_naive(&spec, &input, &filters);
+        let packed = PackedFilters::pack(&filters, nchwc_tile());
+        let xblk = pack_nchwc(&input);
+        let (oh, ow) = (spec.out_h(), spec.out_w());
+        let mut out = vec![f32::NAN; nchwc_elems(spec.n, spec.m, oh, ow)];
+        for level in nchwc_levels() {
+            out.fill(f32::NAN);
+            conv_nchwc_into(&spec, xblk.data(), &packed, 2, level, &mut out);
+            // Every element overwritten — including the M-tail lanes,
+            // which must come out exactly 0 (zero panel rows), so the
+            // blocked buffer can be reused without scrubbing.
+            assert!(out.iter().all(|v| v.is_finite()), "{level}: NaN survived");
+            let oblk = Tensor::from_vec(spec.n, blocked_channels(spec.m), oh, ow, out.clone());
+            let got = unpack_nchwc(&oblk, spec.m);
+            assert_eq!(got.max_abs_diff(&want), 0.0, "{level}");
+            for p in 0..oh * ow {
+                for lane in spec.m..CHANNEL_BLOCK {
+                    assert_eq!(out[p * CHANNEL_BLOCK + lane], 0.0, "{level}: tail lane");
+                }
+            }
+        }
+    }
+
+    /// `CUCONV_FORCE_SCALAR` demotes [`crate::cpuref::simd::active_level`]
+    /// — and whichever body that picks, outputs are the same bits, so
+    /// the override can never change results (only which loop ran).
+    #[test]
+    fn nchwc_force_scalar_override_keeps_results_bit_identical() {
+        let spec = ConvSpec::paper(8, 1, 3, 9, 6);
+        let (input, filters) = io(&spec, 0xF5);
+        let want = conv_naive(&spec, &input, &filters);
+        std::env::set_var("CUCONV_FORCE_SCALAR", "1");
+        let level = crate::cpuref::simd::active_level();
+        assert_eq!(level, SimdLevel::Scalar);
+        let got = conv_nchwc(&spec, &input, &filters, level, 2);
+        std::env::remove_var("CUCONV_FORCE_SCALAR");
+        assert_eq!(got.max_abs_diff(&want), 0.0);
     }
 }

@@ -38,6 +38,7 @@ pub mod gemm;
 pub mod im2col;
 pub mod naive;
 pub mod pack;
+pub mod simd;
 pub mod winograd;
 
 use crate::conv::ConvSpec;

@@ -217,6 +217,111 @@ impl PackedFilters {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The blocked NCHWc activation layout.
+//
+// The activation-side twin of `PackedFilters`: channels are grouped into
+// blocks of `CHANNEL_BLOCK`, and the block index becomes the innermost
+// (contiguous) axis:
+//
+// ```text
+// blocked[(((n·CB + cb)·H + y)·W + x)·c + cc] = plain[n, cb·c + cc, y, x]
+// ```
+//
+// i.e. `[N][C/c][H][W][c]` with `c = CHANNEL_BLOCK = 8` — one cache-line
+// half per pixel per block, so the NCHWc microkernel's 8-wide loads and
+// stores are always contiguous. The channel tail (`C % c ≠ 0`) is
+// zero-padded; consumers that care about true `C` (unpacking, bias
+// epilogues) take it as a parameter. Like filter packing, the NCHW →
+// NCHWc transform is amortized at **plan** time (net-graph
+// `LayoutConvert` nodes placed by the planner), never inside a kernel.
+
+/// Channel-block width of the NCHWc layout — equal to the SIMD lane
+/// count, so one block is one vector.
+pub const CHANNEL_BLOCK: usize = crate::cpuref::simd::LANES;
+
+/// `C` rounded up to a whole number of channel blocks.
+pub fn blocked_channels(c: usize) -> usize {
+    c.div_ceil(CHANNEL_BLOCK) * CHANNEL_BLOCK
+}
+
+/// Element count of an `[n, c, h, w]` activation in blocked layout
+/// (channel tail zero-padded).
+pub fn nchwc_elems(n: usize, c: usize, h: usize, w: usize) -> usize {
+    n * blocked_channels(c) * h * w
+}
+
+/// The one `TileShape` the NCHWc microkernel accepts: 8 filters × 8
+/// pixels, so each tap's filter block is exactly one vector.
+pub fn nchwc_tile() -> TileShape {
+    TileShape::of(CHANNEL_BLOCK, CHANNEL_BLOCK).expect("8x8 is a candidate tile")
+}
+
+/// NCHW → NCHWc. `src` is `n·c·h·w` plain f32s; `dst` is
+/// [`nchwc_elems`]`(n, c, h, w)` f32s, fully overwritten (padded tail
+/// channels zeroed).
+pub fn nchw_to_nchwc(n: usize, c: usize, h: usize, w: usize, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), n * c * h * w, "nchw_to_nchwc source mismatch");
+    assert_eq!(dst.len(), nchwc_elems(n, c, h, w), "nchw_to_nchwc dest mismatch");
+    let l = CHANNEL_BLOCK;
+    let cblocks = blocked_channels(c) / l;
+    let plane = h * w;
+    if c % l != 0 {
+        dst.fill(0.0); // only the tail lanes need it, but zeroing is cheap
+    }
+    for ni in 0..n {
+        for ci in 0..c {
+            let (cb, cc) = (ci / l, ci % l);
+            let s = (ni * c + ci) * plane;
+            let d = (ni * cblocks + cb) * plane * l + cc;
+            for p in 0..plane {
+                dst[d + p * l] = src[s + p];
+            }
+        }
+    }
+}
+
+/// NCHWc → NCHW, the inverse of [`nchw_to_nchwc`] (padded tail lanes
+/// are discarded). `c` is the **true** channel count.
+pub fn nchwc_to_nchw(n: usize, c: usize, h: usize, w: usize, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), nchwc_elems(n, c, h, w), "nchwc_to_nchw source mismatch");
+    assert_eq!(dst.len(), n * c * h * w, "nchwc_to_nchw dest mismatch");
+    let l = CHANNEL_BLOCK;
+    let cblocks = blocked_channels(c) / l;
+    let plane = h * w;
+    for ni in 0..n {
+        for ci in 0..c {
+            let (cb, cc) = (ci / l, ci % l);
+            let s = (ni * cblocks + cb) * plane * l + cc;
+            let d = (ni * c + ci) * plane;
+            for p in 0..plane {
+                dst[d + p] = src[s + p * l];
+            }
+        }
+    }
+}
+
+/// Pack a plain NCHW tensor into a blocked carrier [`Tensor`] of shape
+/// `[n, blocked_channels(c), h, w]` whose data is in NCHWc order. The
+/// carrier's `c` field holds the **padded** channel count; the true `C`
+/// travels with the spec/shape metadata of whoever asked for blocking.
+pub fn pack_nchwc(src: &Tensor) -> Tensor {
+    let [n, c, h, w] = src.shape();
+    let mut data = vec![0.0f32; nchwc_elems(n, c, h, w)];
+    nchw_to_nchwc(n, c, h, w, src.data(), &mut data);
+    Tensor::from_vec(n, blocked_channels(c), h, w, data)
+}
+
+/// Unpack a blocked carrier tensor (true channel count `c`) back to a
+/// plain NCHW tensor — the inverse of [`pack_nchwc`].
+pub fn unpack_nchwc(src: &Tensor, c: usize) -> Tensor {
+    let [n, cpad, h, w] = src.shape();
+    assert_eq!(cpad, blocked_channels(c), "carrier is not blocked for c={c}");
+    let mut out = Tensor::zeros(n, c, h, w);
+    nchwc_to_nchw(n, c, h, w, src.data(), out.data_mut());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,5 +409,54 @@ mod tests {
         // packing (ABA safety).
         drop(filters);
         assert!(!p.matches(&clone));
+    }
+
+    #[test]
+    fn nchwc_roundtrips_and_zero_pads_the_tail() {
+        let mut rng = Rng::new(0xB10C);
+        // Channel counts around the block width: tail, exact, multiple.
+        for c in [1usize, 3, 7, 8, 9, 16, 19] {
+            let (n, h, w) = (2usize, 3usize, 5usize);
+            let t = Tensor::random(n, c, h, w, &mut rng, -1.0, 1.0);
+            let blocked = pack_nchwc(&t);
+            assert_eq!(blocked.shape(), [n, blocked_channels(c), h, w]);
+            assert_eq!(blocked.len(), nchwc_elems(n, c, h, w));
+            // Every source value lands at its blocked offset...
+            let l = CHANNEL_BLOCK;
+            let cblocks = blocked_channels(c) / l;
+            for ni in 0..n {
+                for ci in 0..c {
+                    for y in 0..h {
+                        for x in 0..w {
+                            let off = (((ni * cblocks + ci / l) * h + y) * w + x) * l
+                                + ci % l;
+                            assert_eq!(blocked.data()[off], t.at(ni, ci, y, x));
+                        }
+                    }
+                }
+            }
+            // ...tail lanes are zero...
+            for ni in 0..n {
+                for ci in c..blocked_channels(c) {
+                    for p in 0..h * w {
+                        let off = (ni * cblocks + ci / l) * h * w * l + p * l + ci % l;
+                        assert_eq!(blocked.data()[off], 0.0, "tail lane {ci} not zero");
+                    }
+                }
+            }
+            // ...and unpacking recovers the original bits.
+            let back = unpack_nchwc(&blocked, c);
+            assert_eq!(back, t, "c={c} roundtrip");
+        }
+    }
+
+    #[test]
+    fn nchwc_tile_is_the_8x8_candidate() {
+        let t = nchwc_tile();
+        assert_eq!((t.mr(), t.nr()), (CHANNEL_BLOCK, CHANNEL_BLOCK));
+        assert_eq!(blocked_channels(1), CHANNEL_BLOCK);
+        assert_eq!(blocked_channels(8), 8);
+        assert_eq!(blocked_channels(9), 16);
+        assert_eq!(nchwc_elems(2, 3, 4, 5), 2 * 8 * 4 * 5);
     }
 }

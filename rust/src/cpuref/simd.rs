@@ -1,0 +1,207 @@
+//! Explicit-SIMD primitives for the blocked NCHWc microkernel.
+//!
+//! The tiled cuConv kernel ([`crate::cpuref::cuconv::conv_tiled_into`])
+//! leans on autovectorization; the blocked NCHWc path spells its inner
+//! loop out as 8-wide AVX2 ops behind **runtime** feature detection, so
+//! one binary serves every x86-64 and falls back to a scalar kernel with
+//! the same accumulation order everywhere else.
+//!
+//! Two invariants matter more than raw speed:
+//!
+//! * **No fused multiply-add.** [`avx2::mul_add`] is a separate
+//!   `_mm256_mul_ps` + `_mm256_add_ps`, *not* `_mm256_fmadd_ps`: FMA's
+//!   single rounding would produce different bits than the scalar
+//!   mul-then-add the [`conv_naive`](crate::cpuref::naive::conv_naive)
+//!   oracle performs, and the whole fast-path test story is
+//!   `max_abs_diff == 0.0` against that oracle. (Rust never
+//!   FP-contracts explicit intrinsics, so the pair stays unfused.)
+//! * **A testable scalar fallback.** `CUCONV_FORCE_SCALAR=1` disables
+//!   the SIMD path at dispatch time (read per call, so tests and a CI
+//!   job can flip it without ordering hazards), keeping the scalar
+//!   kernel exercised on machines that would otherwise always take the
+//!   AVX2 path.
+
+/// f32 lanes of the wide path — and the channel-block width `c` of the
+/// NCHWc layout (one vector = one channel block).
+pub const LANES: usize = 8;
+
+/// Which microkernel body the NCHWc conv dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loops, bit-identical to the wide path.
+    Scalar,
+    /// 8-wide AVX2 (x86-64 only, runtime-detected).
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// True when `CUCONV_FORCE_SCALAR` is set to a truthy value. Read on
+/// every call (no caching): the override is a test/CI knob, and caching
+/// it would make the first caller's environment win for the whole
+/// process — a classic test-order race.
+pub fn force_scalar() -> bool {
+    matches!(
+        std::env::var("CUCONV_FORCE_SCALAR").ok().as_deref().map(str::trim),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+/// The widest level this CPU supports, ignoring the env override.
+/// Detection result is cached (the CPUID answer cannot change).
+pub fn hardware_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        if *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2")) {
+            return SimdLevel::Avx2;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// The level kernels should dispatch on right now: the hardware level,
+/// unless `CUCONV_FORCE_SCALAR` demotes it to [`SimdLevel::Scalar`].
+pub fn active_level() -> SimdLevel {
+    if force_scalar() {
+        SimdLevel::Scalar
+    } else {
+        hardware_level()
+    }
+}
+
+/// 8-wide AVX2 wrappers. Every function is `unsafe`: the caller must
+/// guarantee AVX2 is available (dispatch through
+/// [`hardware_level`]/[`active_level`]). They are `#[inline]` so that a
+/// `#[target_feature(enable = "avx2")]` kernel inlines them and the
+/// compiler emits real 256-bit instructions.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use core::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+
+    /// An 8-lane f32 vector.
+    pub type F32x8 = __m256;
+
+    /// All-zero vector.
+    #[inline]
+    pub unsafe fn zero() -> F32x8 {
+        unsafe { _mm256_setzero_ps() }
+    }
+
+    /// Load 8 f32s (unaligned: packed panels only guarantee 32-byte
+    /// alignment on every other tap row).
+    #[inline]
+    pub unsafe fn load8(src: &[f32]) -> F32x8 {
+        debug_assert!(src.len() >= super::LANES);
+        unsafe { _mm256_loadu_ps(src.as_ptr()) }
+    }
+
+    /// Broadcast one f32 to all lanes.
+    #[inline]
+    pub unsafe fn splat(v: f32) -> F32x8 {
+        unsafe { _mm256_set1_ps(v) }
+    }
+
+    /// `acc + w·x` with **separately rounded** multiply and add — the
+    /// lane-wise twin of the scalar `acc + w * x`, deliberately not an
+    /// FMA (single rounding would break bit-identity to the oracle).
+    #[inline]
+    pub unsafe fn mul_add(acc: F32x8, w: F32x8, x: F32x8) -> F32x8 {
+        unsafe { _mm256_add_ps(acc, _mm256_mul_ps(w, x)) }
+    }
+
+    /// Store 8 f32s (unaligned).
+    #[inline]
+    pub unsafe fn store8(dst: &mut [f32], v: F32x8) {
+        debug_assert!(dst.len() >= super::LANES);
+        unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), v) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardware_level_is_stable_and_portable() {
+        // Whatever the machine, two calls agree (cached), and the value
+        // is one of the two dispatchable levels.
+        let l = hardware_level();
+        assert_eq!(l, hardware_level());
+        assert!(matches!(l, SimdLevel::Scalar | SimdLevel::Avx2));
+        assert!(!l.name().is_empty());
+    }
+
+    #[test]
+    fn force_scalar_env_demotes_active_level() {
+        // Safe to mutate here: force_scalar re-reads the env per call,
+        // and any kernel racing this test is bit-identical either way.
+        std::env::set_var("CUCONV_FORCE_SCALAR", "1");
+        assert!(force_scalar());
+        assert_eq!(active_level(), SimdLevel::Scalar);
+        std::env::set_var("CUCONV_FORCE_SCALAR", "0");
+        assert!(!force_scalar());
+        std::env::remove_var("CUCONV_FORCE_SCALAR");
+        assert!(!force_scalar());
+        assert_eq!(active_level(), hardware_level());
+    }
+
+    /// The wide mul_add must produce the same bits as scalar
+    /// mul-then-add in every lane — this is the property the whole
+    /// NCHWc bit-identity story rests on (i.e. it fails if someone
+    /// "optimizes" mul_add into a fused FMA).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn wide_mul_add_bits_match_scalar() {
+        if hardware_level() != SimdLevel::Avx2 {
+            return; // nothing to compare on this machine
+        }
+        // The wide ops only codegen correctly inside an AVX2-enabled
+        // function (same discipline the kernel follows).
+        #[target_feature(enable = "avx2")]
+        unsafe fn wide(acc: &[f32], w: &[f32], x: &[f32], got: &mut [f32]) {
+            unsafe {
+                let v = avx2::mul_add(avx2::load8(acc), avx2::load8(w), avx2::load8(x));
+                avx2::store8(got, v);
+            }
+        }
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x51D5);
+        let mut acc = vec![0.0f32; LANES];
+        let mut w = vec![0.0f32; LANES];
+        let mut x = vec![0.0f32; LANES];
+        for _ in 0..100 {
+            rng.fill_uniform(&mut acc, -3.0, 3.0);
+            rng.fill_uniform(&mut w, -3.0, 3.0);
+            rng.fill_uniform(&mut x, -3.0, 3.0);
+            let mut got = vec![0.0f32; LANES];
+            unsafe { wide(&acc, &w, &x, &mut got) };
+            for i in 0..LANES {
+                let want = acc[i] + w[i] * x[i];
+                assert_eq!(
+                    got[i].to_bits(),
+                    want.to_bits(),
+                    "lane {i}: {} vs {}",
+                    got[i],
+                    want
+                );
+            }
+        }
+    }
+}

@@ -60,11 +60,13 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use cuconv::algo::{autotune, TimingSource};
-use cuconv::backend::{algo_find, algo_get, Backend, ConvDescriptor, CpuRefBackend};
+use cuconv::backend::{
+    algo_find, algo_get, Backend, ConvDescriptor, CpuRefBackend, LayoutPolicy,
+};
 use cuconv::conv::{ConvSpec, FilterSize};
 use cuconv::coordinator::{
     plan_network, plan_network_measured, run_closed_loop, BatchPolicy, Fault,
-    FaultInjector, FaultPlan, PoolConfig, Server, ShardSelection,
+    FaultInjector, FaultPlan, PoolConfig, Server, ServerBuilder, ShardSelection,
 };
 use cuconv::http::{
     logits_of, run_closed_loop_http, run_closed_loop_http_mixed, wait_healthy,
@@ -110,6 +112,16 @@ fn parse_network(arg: Option<&str>) -> Result<Network> {
         other => bail!(
             "unknown network {other:?} (expected googlenet|squeezenet|alexnet|resnet50|vgg19)"
         ),
+    }
+}
+
+/// Parse `--layout auto|nchw|nchwc` — the activation-layout policy
+/// handed to the layout-aware planner/backend (default `auto`: blocked
+/// NCHWc wherever the chosen algorithm is cuConv).
+fn parse_layout(args: &[String]) -> Result<LayoutPolicy> {
+    match opt(args, "--layout") {
+        Some(v) => LayoutPolicy::parse(v),
+        None => Ok(LayoutPolicy::default()),
     }
 }
 
@@ -253,6 +265,7 @@ fn run(args: &[String]) -> Result<()> {
                 flag(args, "--measure"),
                 opt(args, "--tune-cache"),
                 flag(args, "--assert-warm"),
+                parse_layout(args)?,
             )?;
         }
         "tune" => {
@@ -274,10 +287,11 @@ fn run(args: &[String]) -> Result<()> {
                 },
                 ..PoolConfig::default()
             };
+            let layout = parse_layout(args)?;
             if let Some(label) = opt(args, "--conv") {
                 let spec = ConvSpec::from_table_label(label)
                     .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
-                serve_bench_conv(spec, requests, pool, queue_depth)?;
+                serve_bench_conv(spec, requests, pool, queue_depth, layout)?;
             } else if let Some(name) = opt(args, "--net") {
                 serve_bench_net(
                     parse_network(Some(name))?,
@@ -285,6 +299,7 @@ fn run(args: &[String]) -> Result<()> {
                     pool,
                     queue_depth,
                     opt(args, "--tune-cache"),
+                    layout,
                 )?;
             } else {
                 serve_bench_model(requests, pool, queue_depth)?;
@@ -307,6 +322,11 @@ fn run(args: &[String]) -> Result<()> {
                  forward pass (cpuref backend) with a per-layer breakdown"
             );
             println!(
+                "  --layout auto|nchw|nchwc  activation-layout policy for \
+                 forward/tune/serve-bench/serve-http (auto: blocked NCHWc \
+                 wherever cuConv is chosen)"
+            );
+            println!(
                 "  tune <net> [--out PATH] [--iters N]  measure algorithm + tile \
                  choices and write a persistent tune cache; replay it with \
                  --tune-cache PATH on forward/serve-bench/serve-http \
@@ -326,7 +346,10 @@ const TUNE_ITERS: usize = 2;
 /// consults it: algorithm rankings and cuConv tile picks replay from
 /// the file (zero timed runs on a full hit), and misses are measured
 /// and recorded in memory so callers may re-save.
-fn cached_planner(path: &str) -> (cuconv::net::NetPlanner, Arc<TuneCache>) {
+fn cached_planner(
+    path: &str,
+    layout: LayoutPolicy,
+) -> (cuconv::net::NetPlanner, Arc<TuneCache>) {
     use cuconv::net::{AlgoChoice, NetPlanner};
 
     let cache = Arc::new(TuneCache::load(path));
@@ -337,10 +360,12 @@ fn cached_planner(path: &str) -> (cuconv::net::NetPlanner, Arc<TuneCache>) {
     );
     let backend = CpuRefBackend::new()
         .with_measured_tiles(TUNE_ITERS)
-        .with_tune_cache(cache.clone());
+        .with_tune_cache(cache.clone())
+        .with_layout(layout);
     let planner = NetPlanner::new(Box::new(backend))
         .with_choice(AlgoChoice::Measured { iters: TUNE_ITERS })
-        .with_tune_cache(cache.clone());
+        .with_tune_cache(cache.clone())
+        .with_layout(layout);
     (planner, cache)
 }
 
@@ -355,14 +380,17 @@ fn tune(args: &[String]) -> Result<()> {
     let out = opt(args, "--out").unwrap_or("tune_cache.json");
     let iters: usize =
         opt(args, "--iters").map(|v| v.parse()).transpose()?.unwrap_or(TUNE_ITERS);
+    let layout = parse_layout(args)?;
     let graph = network_graph(net);
     let cache = Arc::new(TuneCache::new());
     let backend = CpuRefBackend::new()
         .with_measured_tiles(iters)
-        .with_tune_cache(cache.clone());
+        .with_tune_cache(cache.clone())
+        .with_layout(layout);
     let planner = NetPlanner::new(Box::new(backend))
         .with_choice(AlgoChoice::Measured { iters })
-        .with_tune_cache(cache.clone());
+        .with_tune_cache(cache.clone())
+        .with_layout(layout);
     println!(
         "tuning {} ({} nodes) for batch sizes [1, 2, 4] on cpuref ({iters} \
          measured iters per candidate) ...",
@@ -397,6 +425,7 @@ fn forward_network(
     measure: bool,
     tune_cache: Option<&str>,
     assert_warm: bool,
+    layout: LayoutPolicy,
 ) -> Result<()> {
     use cuconv::net::{input_hw, network_graph, AlgoChoice, NetPlanner};
 
@@ -411,7 +440,7 @@ fn forward_network(
     // the same measured planning fronted by the persistent cache.
     let (planner, cache) = match tune_cache {
         Some(path) => {
-            let (planner, cache) = cached_planner(path);
+            let (planner, cache) = cached_planner(path, layout);
             (planner, Some(cache))
         }
         None => {
@@ -419,12 +448,15 @@ fn forward_network(
                 CpuRefBackend::new().with_measured_tiles(TUNE_ITERS)
             } else {
                 CpuRefBackend::new()
-            };
-            let planner = NetPlanner::new(Box::new(backend)).with_choice(if measure {
-                AlgoChoice::Measured { iters: TUNE_ITERS }
-            } else {
-                AlgoChoice::Heuristic
-            });
+            }
+            .with_layout(layout);
+            let planner = NetPlanner::new(Box::new(backend))
+                .with_choice(if measure {
+                    AlgoChoice::Measured { iters: TUNE_ITERS }
+                } else {
+                    AlgoChoice::Heuristic
+                })
+                .with_layout(layout);
             (planner, None)
         }
     };
@@ -522,8 +554,9 @@ fn serve_bench_net(
     pool: PoolConfig,
     queue_depth: Option<usize>,
     tune_cache: Option<&str>,
+    layout: LayoutPolicy,
 ) -> Result<()> {
-    use cuconv::net::network_graph;
+    use cuconv::net::{network_graph, NetPlanner};
 
     let policy = BatchPolicy {
         max_batch: 4,
@@ -537,10 +570,12 @@ fn serve_bench_net(
     );
     let server = match tune_cache {
         Some(path) => {
-            let (planner, cache) = cached_planner(path);
+            let (planner, cache) = cached_planner(path, layout);
             let before = cuconv::tunecache::measurement_count();
-            let server =
-                Server::start_net_planned(planner, &graph, &[1, 2, 4], policy, pool)?;
+            let server = ServerBuilder::net_planned(planner, &graph, &[1, 2, 4])
+                .policy(policy)
+                .pool(pool)
+                .start()?;
             println!(
                 "planning: {} cache hit(s), {} miss(es), {} timing measurement(s)",
                 cache.hits(),
@@ -549,13 +584,15 @@ fn serve_bench_net(
             );
             server
         }
-        None => Server::start_net(
-            Box::new(CpuRefBackend::new()),
+        None => ServerBuilder::net_planned(
+            NetPlanner::new(Box::new(CpuRefBackend::new().with_layout(layout)))
+                .with_layout(layout),
             &graph,
             &[1, 2, 4],
-            policy,
-            pool,
-        )?,
+        )
+        .policy(policy)
+        .pool(pool)
+        .start()?,
     };
     let clients = (2 * pool.workers).max(4);
     println!(
@@ -573,20 +610,21 @@ fn serve_bench_conv(
     requests: usize,
     pool: PoolConfig,
     queue_depth: Option<usize>,
+    layout: LayoutPolicy,
 ) -> Result<()> {
     let policy = BatchPolicy {
         max_batch: 8,
         max_delay: Duration::from_millis(5),
         queue_capacity: queue_depth.unwrap_or(512),
     };
-    let server = Server::start_conv(
-        Box::new(CpuRefBackend::new()),
+    let server = ServerBuilder::conv(
+        Box::new(CpuRefBackend::new().with_layout(layout)),
         spec,
-        None,
         &[1, 2, 4, 8],
-        policy,
-        pool,
-    )?;
+    )
+    .policy(policy)
+    .pool(pool)
+    .start()?;
     let clients = (2 * pool.workers).max(8);
     println!(
         "serving conv {} through the cpuref backend ({} requests, {} client \
@@ -692,7 +730,7 @@ fn drive_and_report(server: &Server, requests: usize, threads: usize) -> Result<
 /// killed or (`--drive N`) run a self-contained socket smoke + closed
 /// loop and exit.
 fn serve_http(args: &[String]) -> Result<()> {
-    use cuconv::net::network_graph;
+    use cuconv::net::{network_graph, NetPlanner};
     use std::time::Instant;
 
     let net = parse_network(args.get(1).map(|s| s.as_str()))?;
@@ -766,17 +804,15 @@ fn serve_http(args: &[String]) -> Result<()> {
         "compiling {model} for batch sizes [1, 2, 4] x {workers} worker(s) ..."
     );
     let tune_cache = opt(args, "--tune-cache");
+    let layout = parse_layout(args)?;
     let server = if faults.is_empty() {
         match tune_cache {
             Some(path) => {
-                let (planner, cache) = cached_planner(path);
-                let server = Server::start_net_planned(
-                    planner,
-                    &graph,
-                    &[1, 2, 4],
-                    policy,
-                    PoolConfig::with_workers(workers),
-                )?;
+                let (planner, cache) = cached_planner(path, layout);
+                let server = ServerBuilder::net_planned(planner, &graph, &[1, 2, 4])
+                    .policy(policy)
+                    .pool(PoolConfig::with_workers(workers))
+                    .start()?;
                 println!(
                     "planning: {} cache hit(s), {} miss(es)",
                     cache.hits(),
@@ -784,19 +820,21 @@ fn serve_http(args: &[String]) -> Result<()> {
                 );
                 server
             }
-            None => Server::start_net(
-                Box::new(CpuRefBackend::new()),
+            None => ServerBuilder::net_planned(
+                NetPlanner::new(Box::new(CpuRefBackend::new().with_layout(layout)))
+                    .with_layout(layout),
                 &graph,
                 &[1, 2, 4],
-                policy,
-                PoolConfig::with_workers(workers),
-            )?,
+            )
+            .policy(policy)
+            .pool(PoolConfig::with_workers(workers))
+            .start()?,
         }
     } else {
         println!("fault plan armed: {faults:?}");
         let runner = match tune_cache {
             Some(path) => {
-                let (planner, cache) = cached_planner(path);
+                let (planner, cache) = cached_planner(path, layout);
                 let runner = cuconv::coordinator::NetForwardRunner::with_planner(
                     planner,
                     &graph,
@@ -809,14 +847,18 @@ fn serve_http(args: &[String]) -> Result<()> {
                 );
                 runner
             }
-            None => cuconv::coordinator::NetForwardRunner::new(
-                Box::new(CpuRefBackend::new()),
+            None => cuconv::coordinator::NetForwardRunner::with_planner(
+                NetPlanner::new(Box::new(CpuRefBackend::new().with_layout(layout)))
+                    .with_layout(layout),
                 &graph,
                 &[1, 2, 4],
             )?,
         };
         let injector = FaultInjector::new(Box::new(runner), FaultPlan::new(faults));
-        Server::start_pool(Box::new(injector), policy, PoolConfig::with_workers(workers))?
+        ServerBuilder::runner(Box::new(injector))
+            .policy(policy)
+            .pool(PoolConfig::with_workers(workers))
+            .start()?
     };
     let handle = server.handle();
     let image_elems = handle.image_elems();

@@ -19,6 +19,8 @@ use std::fmt;
 
 use anyhow::{bail, Result};
 
+use crate::backend::TensorLayout;
+
 /// Per-item feature-map shape (the batch dimension lives in the plan).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FeatShape {
@@ -101,6 +103,14 @@ pub enum Op {
     Linear { out: usize, relu: bool },
     /// Softmax over the class axis; requires a `c×1×1` input.
     Softmax,
+    /// Activation-layout conversion (NCHW ↔ NCHWc): repack the producer's
+    /// value into `to`. Shape-wise the identity — the *logical* shape is
+    /// unchanged, only the carrier changes (blocked carriers pad C up to
+    /// the channel block; the planner sizes arena slots accordingly).
+    /// Inserted by the planner's layout pass so a blocked region runs
+    /// end-to-end with converts only at its boundary; back-to-back
+    /// convert pairs are elided there.
+    LayoutConvert { to: TensorLayout },
 }
 
 impl Op {
@@ -115,6 +125,7 @@ impl Op {
             Op::ResidualAdd { .. } => "residual",
             Op::Linear { .. } => "linear",
             Op::Softmax => "softmax",
+            Op::LayoutConvert { .. } => "convert",
         }
     }
 }
@@ -138,6 +149,14 @@ pub struct NetGraph {
 }
 
 impl NetGraph {
+    /// Assemble a graph from pre-built nodes — the planner's layout
+    /// rewrite constructs its lowered graph through this. The caller is
+    /// responsible for topological order; run
+    /// [`NetGraph::infer_shapes`] to validate.
+    pub(crate) fn from_parts(name: impl Into<String>, nodes: Vec<Node>) -> NetGraph {
+        NetGraph { name: name.into(), nodes }
+    }
+
     pub fn nodes(&self) -> &[Node] {
         &self.nodes
     }
@@ -267,6 +286,12 @@ fn infer_node(node: &Node, id: NodeId, shapes: &[FeatShape]) -> Result<FeatShape
                 bail!("softmax needs a cx1x1 input, got {x}");
             }
             Ok(x)
+        }
+        Op::LayoutConvert { .. } => {
+            // Logical identity: the layout rides the edge, not the
+            // FeatShape (carrier padding is a planner/arena concern).
+            arity(1)?;
+            Ok(shapes[node.inputs[0]])
         }
     }
 }
@@ -497,5 +522,20 @@ mod tests {
             Op::Conv { m: 1, k: 1, stride: 1, pad: 0, relu: true }.kind(),
             "conv"
         );
+        assert_eq!(Op::LayoutConvert { to: TensorLayout::Nchwc }.kind(), "convert");
+    }
+
+    #[test]
+    fn layout_convert_is_a_shape_identity() {
+        let mut b = GraphBuilder::new("t", 3, 8, 8);
+        let c1 = b.conv_same("c1", b.input(), 5, 3);
+        let blk = b
+            .add("c1.to_nchwc", Op::LayoutConvert { to: TensorLayout::Nchwc }, vec![c1])
+            .unwrap();
+        assert_eq!(b.shape(blk), b.shape(c1), "convert must not change the logical shape");
+        // Arity is enforced.
+        assert!(b
+            .add("bad", Op::LayoutConvert { to: TensorLayout::Nchw }, vec![c1, blk])
+            .is_err());
     }
 }

@@ -19,8 +19,12 @@
 //! * [`ops`] — allocation-free CPU kernels for the non-conv operators.
 //! * [`planner`] — [`NetPlanner`] compiles a graph for any
 //!   [`Backend`](crate::backend::Backend): per-conv algorithm choice
-//!   (`algo_get`/`algo_find`), liveness analysis, an activation arena
-//!   whose slots ping-pong across the DAG, and one shared conv
+//!   (`algo_get`/`algo_find`), a layout-lowering pass that runs cuConv
+//!   nodes on blocked NCHWc activations (inserting and eliding
+//!   [`Op::LayoutConvert`] edges under a
+//!   [`LayoutPolicy`](crate::backend::LayoutPolicy)), liveness
+//!   analysis, an activation arena whose slots ping-pong across the
+//!   DAG, and one shared conv
 //!   [`Workspace`](crate::backend::Workspace) sized to the maximum
 //!   per-layer footprint. The steady-state [`NetPlan::forward_into`]
 //!   allocates no buffers — PR 2's per-conv contract at network scope.

@@ -30,6 +30,39 @@ pub fn bias_relu_inplace(out: &mut [f32], m: usize, plane: usize, bias: &[f32], 
     }
 }
 
+/// The convolution epilogue on a **blocked NCHWc** activation (the
+/// carrier is `[n][M/c][h·w][c]`, `c =`
+/// [`CHANNEL_BLOCK`](crate::cpuref::pack::CHANNEL_BLOCK)): per-channel
+/// bias + optional ReLU, applied lane-wise. Channel-tail padding lanes
+/// (`m % c != 0`) are left untouched — they are zero by the blocked
+/// kernel's contract and must stay zero, not pick up a bias.
+/// Element-for-element the arithmetic is identical to
+/// [`bias_relu_inplace`] on the plain layout, so blocked and plain
+/// forwards stay bit-identical.
+pub fn bias_relu_nchwc_inplace(
+    out: &mut [f32],
+    m: usize,
+    plane: usize,
+    bias: &[f32],
+    relu: bool,
+) {
+    use crate::cpuref::pack::{blocked_channels, CHANNEL_BLOCK};
+    assert_eq!(bias.len(), m, "bias/channel mismatch");
+    let l = CHANNEL_BLOCK;
+    let mblocks = blocked_channels(m) / l;
+    assert_eq!(out.len() % (mblocks * plane * l).max(1), 0, "output not whole items");
+    for (i, chunk) in out.chunks_exact_mut(plane * l).enumerate() {
+        let base = (i % mblocks) * l;
+        let lanes = l.min(m - base);
+        for px in chunk.chunks_exact_mut(l) {
+            for (lane, v) in px.iter_mut().take(lanes).enumerate() {
+                let b = bias[base + lane];
+                *v = if relu { (*v + b).max(0.0) } else { *v + b };
+            }
+        }
+    }
+}
+
 /// Max pooling over `k×k` windows (NEG_INFINITY-initialized, so padding
 /// cells never win).
 pub fn max_pool_into(input: &[f32], n: usize, shape: FeatShape, p: Pool2d, out: &mut [f32]) {
@@ -297,6 +330,47 @@ mod tests {
         let mut out = vec![1.0, -1.0];
         bias_relu_inplace(&mut out, 2, 1, &[1.0, 1.0], false);
         assert_eq!(out, vec![2.0, 0.0]);
+    }
+
+    /// The blocked epilogue is the plain epilogue viewed through the
+    /// NCHWc packing, bit for bit, and never touches channel-tail
+    /// padding lanes (m % CHANNEL_BLOCK != 0 exercises the tail).
+    #[test]
+    fn blocked_bias_relu_matches_plain_through_the_packing() {
+        use crate::cpuref::pack::{nchw_to_nchwc, nchwc_elems, nchwc_to_nchw};
+        let mut rng = Rng::new(0xB1A5);
+        for &(n, m, h, w, relu) in &[
+            (2usize, 5usize, 3usize, 4usize, true),
+            (1, 8, 2, 2, false),
+            (3, 11, 1, 3, true),
+        ] {
+            let plane = h * w;
+            let mut plain = rand(&mut rng, n * m * plane);
+            let mut bias = vec![0.0f32; m];
+            rng.fill_uniform(&mut bias, -0.5, 0.5);
+            let mut blocked = vec![0.0f32; nchwc_elems(n, m, h, w)];
+            nchw_to_nchwc(n, m, h, w, &plain, &mut blocked);
+
+            bias_relu_inplace(&mut plain, m, plane, &bias, relu);
+            bias_relu_nchwc_inplace(&mut blocked, m, plane, &bias, relu);
+
+            let mut back = vec![0.0f32; n * m * plane];
+            nchwc_to_nchw(n, m, h, w, &blocked, &mut back);
+            assert_eq!(back, plain, "n={n} m={m} relu={relu}");
+            // Padding lanes stayed exactly zero.
+            let l = crate::cpuref::pack::CHANNEL_BLOCK;
+            let mblocks = blocked.len() / (n * plane * l);
+            for (i, chunk) in blocked.chunks_exact(plane * l).enumerate() {
+                let base = (i % mblocks) * l;
+                for px in chunk.chunks_exact(l) {
+                    for (lane, &v) in px.iter().enumerate() {
+                        if base + lane >= m {
+                            assert_eq!(v, 0.0, "padding lane picked up bias");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

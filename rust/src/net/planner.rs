@@ -19,6 +19,13 @@
 //!   ping-pongs between two slots; inception/residual branches hold as
 //!   many slots as values are simultaneously live. All slots are
 //!   allocated to their high-water size at compile time.
+//! * **Layout lowering** — after algorithms are chosen, a layout pass
+//!   under the planner's [`LayoutPolicy`] rewrites the graph so convs
+//!   running the cuConv algorithm consume and produce blocked NCHWc
+//!   activations: [`Op::LayoutConvert`] edges are inserted only where
+//!   the layout actually changes and back-to-back pairs are elided, so
+//!   a chain of blocked convs runs blocked end to end with one ingress
+//!   and one egress convert and none interior.
 //! * **One shared workspace** — conv scratch comes from a single
 //!   [`Workspace`] pre-grown to the *maximum* per-layer requirement
 //!   (layers run sequentially, so the workspace ping-pongs too), still
@@ -28,6 +35,7 @@
 //! buffer is the caller's output slice: activations live in the arena,
 //! conv scratch in the workspace, weights in the plan.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -35,10 +43,12 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::algo::{Algorithm, AutotuneResult};
 use crate::backend::{
-    algo_find, algo_find_cached, algo_get, Backend, ConvDescriptor, ConvPlan, Workspace,
+    algo_find, algo_find_cached, algo_get, Backend, ConvDescriptor, ConvPlan, LayoutPolicy,
+    TensorLayout, Workspace,
 };
 use crate::conv::{ConvSpec, F32_BYTES};
-use crate::net::graph::{FeatShape, NetGraph, NodeId, Op};
+use crate::cpuref::pack::{blocked_channels, nchw_to_nchwc, nchwc_to_nchw};
+use crate::net::graph::{FeatShape, NetGraph, Node, NodeId, Op};
 use crate::net::ops;
 use crate::net::ops::LinearWeights;
 use crate::tensor::Tensor;
@@ -94,10 +104,23 @@ fn conv_spec(
     }
 }
 
+/// Per-item element count of a value's in-memory **carrier** (what an
+/// arena slot must hold): plain values store `c·h·w`, blocked values
+/// the channel-padded `blocked_channels(c)·h·w`.
+fn carrier_elems(shape: FeatShape, layout: TensorLayout) -> usize {
+    match layout {
+        TensorLayout::Nchw => shape.elems(),
+        TensorLayout::Nchwc => blocked_channels(shape.c) * shape.h * shape.w,
+    }
+}
+
 /// Compiles graphs against one backend.
 pub struct NetPlanner {
     backend: Box<dyn Backend>,
     choice: AlgoChoice,
+    /// Activation-layout policy for the lowering pass (see
+    /// [`NetPlanner::with_layout`]).
+    layout: LayoutPolicy,
     /// Persistent tune cache, when attached: [`AlgoChoice::Measured`]
     /// searches consult it before timing (a hit replays a recorded
     /// ranking with zero measurements) and record fresh rankings into
@@ -108,12 +131,34 @@ pub struct NetPlanner {
 
 impl NetPlanner {
     pub fn new(backend: Box<dyn Backend>) -> NetPlanner {
-        NetPlanner { backend, choice: AlgoChoice::Heuristic, tune_cache: None }
+        NetPlanner {
+            backend,
+            choice: AlgoChoice::Heuristic,
+            layout: LayoutPolicy::default(),
+            tune_cache: None,
+        }
     }
 
     pub fn with_choice(mut self, choice: AlgoChoice) -> NetPlanner {
         self.choice = choice;
         self
+    }
+
+    /// Set the activation-layout policy the compile-time lowering pass
+    /// follows. The default, [`LayoutPolicy::Auto`], runs a conv on
+    /// blocked NCHWc activations exactly when its chosen algorithm is
+    /// cuConv and the backend supports the layout;
+    /// [`LayoutPolicy::Nchwc`] forces cuConv + blocked on every conv
+    /// the backend can run that way; [`LayoutPolicy::Nchw`] disables
+    /// the blocked path entirely (pre-layout plans, bit for bit).
+    pub fn with_layout(mut self, layout: LayoutPolicy) -> NetPlanner {
+        self.layout = layout;
+        self
+    }
+
+    /// The activation-layout policy this planner lowers under.
+    pub fn layout_policy(&self) -> LayoutPolicy {
+        self.layout
     }
 
     /// Attach a persistent [`TuneCache`] for measured algorithm
@@ -143,11 +188,38 @@ impl NetPlanner {
         self.backend
     }
 
+    /// The planner's per-conv algorithm choice, always made on a plain
+    /// NCHW descriptor — layout lowering runs *after* this, so
+    /// tune-cache keys and measured rankings are identical whatever the
+    /// layout policy (a warm cache replays the same choices, then the
+    /// same lowering).
+    fn choose(&self, desc: &ConvDescriptor) -> Result<Algorithm> {
+        match self.choice {
+            AlgoChoice::Heuristic => algo_get(self.backend.as_ref(), desc),
+            AlgoChoice::Measured { iters } => match self.find(desc, iters).best() {
+                Some(e) => Ok(e.algo),
+                None => algo_get(self.backend.as_ref(), desc),
+            },
+        }
+    }
+
     /// Compile `graph` at a fixed batch size: type-check, choose a
-    /// per-conv algorithm, materialize seeded weights, run liveness
+    /// per-conv algorithm, lower layouts under the planner's
+    /// [`LayoutPolicy`], materialize seeded weights, run liveness
     /// analysis and allocate the activation arena + shared workspace.
     pub fn compile(&self, graph: &NetGraph, batch: usize) -> Result<NetPlan> {
-        self.compile_inner(graph, batch, None, None)
+        ensure!(batch >= 1, "batch must be at least 1");
+        let shapes = graph.infer_shapes()?;
+        let mut algos: Vec<Option<Algorithm>> = vec![None; graph.len()];
+        for (id, node) in graph.nodes().iter().enumerate() {
+            if let Op::Conv { m, k, stride, pad, .. } = &node.op {
+                let spec =
+                    conv_spec(shapes[node.inputs[0]], *m, *k, *stride, *pad, batch);
+                algos[id] = Some(self.choose(&ConvDescriptor::new(spec)?)?);
+            }
+        }
+        let lowered = self.lower(graph, &shapes, algos, &[batch])?;
+        self.compile_lowered(&lowered, batch, None)
     }
 
     /// Compile one plan per batch size with a **single** algorithm per
@@ -205,29 +277,158 @@ impl NetPlanner {
                 pins[id] = Some(algo);
             }
         }
-        // One shared weight set across every batch size.
-        let params = draw_params(graph, &shapes);
+        // Lower layouts once (the pass sees every batch size, so a conv
+        // goes blocked only if cuConv runs at all of them), then share
+        // one weight set across every batch size. Convert nodes draw no
+        // parameters, so the lowered graph's seeded weight stream is
+        // identical to the original's.
+        let lowered = self.lower(graph, &shapes, pins, &sizes)?;
+        let params = draw_params(&lowered.graph, &lowered.shapes);
         sizes
             .iter()
             .map(|&b| {
-                self.compile_inner(graph, b, Some(&pins), Some(&params)).map(|p| (b, p))
+                self.compile_lowered(&lowered, b, Some(&params)).map(|p| (b, p))
             })
             .collect()
     }
 
-    fn compile_inner(
+    /// The layout pass: decide which convs run blocked (NCHWc) under
+    /// the planner's [`LayoutPolicy`], then rewrite the graph so every
+    /// blocked conv consumes and produces blocked values.
+    /// [`Op::LayoutConvert`] edges are emitted only where the layout
+    /// actually changes, cached per `(value, layout)` so a value is
+    /// converted at most once per direction, and a convert back to a
+    /// value's own layout resolves to the value itself — back-to-back
+    /// pairs are elided by construction, so a chain of blocked convs
+    /// runs with one ingress and one egress convert and none interior.
+    ///
+    /// Algorithm choice happens *before* this pass, on plain NCHW
+    /// descriptors; under [`LayoutPolicy::Auto`] a conv goes blocked
+    /// exactly when that choice picked cuConv (the backend permitting),
+    /// and [`LayoutPolicy::Nchwc`] overrides the choice to cuConv
+    /// wherever the backend can run it at every batch size in `sizes`.
+    fn lower(
         &self,
         graph: &NetGraph,
+        shapes: &[FeatShape],
+        mut algos: Vec<Option<Algorithm>>,
+        sizes: &[usize],
+    ) -> Result<Lowered> {
+        let backend = self.backend.as_ref();
+        let mut blocked = vec![false; graph.len()];
+        if self.layout != LayoutPolicy::Nchw
+            && backend.supports_layout(TensorLayout::Nchwc)
+        {
+            for (id, node) in graph.nodes().iter().enumerate() {
+                let Op::Conv { m, k, stride, pad, .. } = &node.op else { continue };
+                let cuconv_everywhere = sizes.iter().all(|&b| {
+                    let spec =
+                        conv_spec(shapes[node.inputs[0]], *m, *k, *stride, *pad, b);
+                    backend.capabilities(&spec, Algorithm::CuConv).is_supported()
+                });
+                if !cuconv_everywhere {
+                    continue;
+                }
+                match self.layout {
+                    LayoutPolicy::Auto => {
+                        blocked[id] = algos[id] == Some(Algorithm::CuConv);
+                    }
+                    LayoutPolicy::Nchwc => {
+                        algos[id] = Some(Algorithm::CuConv);
+                        blocked[id] = true;
+                    }
+                    LayoutPolicy::Nchw => unreachable!("guarded above"),
+                }
+            }
+        }
+        let has_convert =
+            graph.nodes().iter().any(|n| matches!(n.op, Op::LayoutConvert { .. }));
+        if !has_convert && !blocked.iter().any(|&b| b) {
+            // Nothing to rewrite: pre-layout plans, node ids unchanged.
+            return Ok(Lowered {
+                graph: graph.clone(),
+                shapes: shapes.to_vec(),
+                layouts: vec![TensorLayout::Nchw; graph.len()],
+                algos,
+            });
+        }
+
+        let mut rw = Rewrite {
+            nodes: Vec::with_capacity(graph.len() + 4),
+            layouts: Vec::with_capacity(graph.len() + 4),
+            algos: Vec::with_capacity(graph.len() + 4),
+            converted: HashMap::new(),
+        };
+        // Original node id -> lowered id of its value (in the layout
+        // the lowered producer emits).
+        let mut map: Vec<NodeId> = Vec::with_capacity(graph.len());
+        for (id, node) in graph.nodes().iter().enumerate() {
+            let lowered = match &node.op {
+                // A pre-existing convert collapses onto the requested
+                // value — reusing a cached conversion or the original
+                // value itself (pair elision). Under the Nchw policy
+                // explicit blocked requests are rewritten away.
+                Op::LayoutConvert { to } => {
+                    let want = match self.layout {
+                        LayoutPolicy::Nchw => TensorLayout::Nchw,
+                        _ => *to,
+                    };
+                    rw.value_in(map[node.inputs[0]], want)
+                }
+                _ => {
+                    let want = if blocked[id] {
+                        TensorLayout::Nchwc
+                    } else {
+                        TensorLayout::Nchw
+                    };
+                    let inputs: Vec<NodeId> = node
+                        .inputs
+                        .iter()
+                        .map(|&s| rw.value_in(map[s], want))
+                        .collect();
+                    rw.emit(
+                        Node { name: node.name.clone(), op: node.op.clone(), inputs },
+                        want,
+                        algos[id],
+                    )
+                }
+            };
+            map.push(lowered);
+        }
+        // Egress: the network output is plain NCHW at the graph tail.
+        let out = rw.value_in(map[graph.output_id()], TensorLayout::Nchw);
+        if out + 1 != rw.nodes.len() {
+            // Rare: the output collapsed onto an interior value (the
+            // original graph ended in a redundant convert). The output
+            // must be the last node, so materialize a copy-through.
+            let name = format!("{}.out", rw.nodes[out].name);
+            rw.emit(
+                Node {
+                    name,
+                    op: Op::LayoutConvert { to: TensorLayout::Nchw },
+                    inputs: vec![out],
+                },
+                TensorLayout::Nchw,
+                None,
+            );
+        }
+        let graph = NetGraph::from_parts(graph.name.clone(), rw.nodes);
+        let shapes = graph.infer_shapes()?;
+        Ok(Lowered { graph, shapes, layouts: rw.layouts, algos: rw.algos })
+    }
+
+    fn compile_lowered(
+        &self,
+        lowered: &Lowered,
         batch: usize,
-        pins: Option<&[Option<Algorithm>]>,
         shared_params: Option<&[NodeParams]>,
     ) -> Result<NetPlan> {
         ensure!(batch >= 1, "batch must be at least 1");
-        let shapes = graph.infer_shapes()?;
+        let Lowered { graph, shapes, layouts, algos } = lowered;
         let backend = self.backend.as_ref();
         let params = match shared_params {
             Some(p) => p.to_vec(), // clones Arcs, not weights
-            None => draw_params(graph, &shapes),
+            None => draw_params(graph, shapes),
         };
 
         // Per-node resources: conv plans + the seeded weights (weight
@@ -243,19 +444,13 @@ impl NetPlanner {
                 ) => {
                     let x = shapes[node.inputs[0]];
                     let spec = conv_spec(x, *m, *k, *stride, *pad, batch);
-                    let desc = ConvDescriptor::new(spec)?;
-                    let algo = match pins.and_then(|p| p[id]) {
-                        Some(pinned) => pinned,
-                        None => match self.choice {
-                            AlgoChoice::Heuristic => algo_get(backend, &desc)?,
-                            AlgoChoice::Measured { iters } => {
-                                match self.find(&desc, iters).best() {
-                                    Some(e) => e.algo,
-                                    None => algo_get(backend, &desc)?,
-                                }
-                            }
-                        },
-                    };
+                    let desc = ConvDescriptor::new(spec)?.with_layout(layouts[id]);
+                    let algo = algos[id].ok_or_else(|| {
+                        anyhow!(
+                            "conv node '{}' reached compile without an algorithm",
+                            node.name
+                        )
+                    })?;
                     // Plan with the node's weights: the backend derives
                     // plan-owned state (packed tiled-cuConv panels) once
                     // here — and because the weights are Arc-shared
@@ -295,7 +490,7 @@ impl NetPlanner {
                     free.push(slot_of[v]);
                 }
             }
-            let need = batch * shapes[id].elems();
+            let need = batch * carrier_elems(shapes[id], layouts[id]);
             // Best fit: the smallest free slot that already holds
             // `need`; otherwise the largest free slot (grows the least).
             let pick = free
@@ -325,7 +520,8 @@ impl NetPlanner {
 
         Ok(NetPlan {
             graph: graph.clone(),
-            shapes,
+            shapes: shapes.clone(),
+            layouts: layouts.clone(),
             batch,
             backend_name: backend.name(),
             steps,
@@ -336,6 +532,66 @@ impl NetPlanner {
             workspace,
             node_seconds: vec![0.0; graph.len()],
         })
+    }
+}
+
+/// A graph after the layout pass: [`Op::LayoutConvert`] nodes inserted
+/// around blocked convs (back-to-back pairs elided), with the carried
+/// layout and pinned algorithm of every lowered node.
+struct Lowered {
+    graph: NetGraph,
+    shapes: Vec<FeatShape>,
+    layouts: Vec<TensorLayout>,
+    algos: Vec<Option<Algorithm>>,
+}
+
+/// Working state of the layout rewrite in [`NetPlanner::lower`].
+struct Rewrite {
+    nodes: Vec<Node>,
+    /// Layout of each lowered node's output value.
+    layouts: Vec<TensorLayout>,
+    /// Pinned algorithm of each lowered node (conv nodes only).
+    algos: Vec<Option<Algorithm>>,
+    /// `(lowered value, layout)` -> lowered id holding that value in
+    /// that layout; both directions are recorded, which is what elides
+    /// convert round-trips.
+    converted: HashMap<(NodeId, TensorLayout), NodeId>,
+}
+
+impl Rewrite {
+    fn emit(
+        &mut self,
+        node: Node,
+        layout: TensorLayout,
+        algo: Option<Algorithm>,
+    ) -> NodeId {
+        self.nodes.push(node);
+        self.layouts.push(layout);
+        self.algos.push(algo);
+        self.nodes.len() - 1
+    }
+
+    /// The lowered id of `src`'s value in `want` layout, emitting a
+    /// cached convert node only when the layouts actually differ.
+    fn value_in(&mut self, src: NodeId, want: TensorLayout) -> NodeId {
+        if self.layouts[src] == want {
+            return src;
+        }
+        if let Some(&id) = self.converted.get(&(src, want)) {
+            return id;
+        }
+        let name = format!("{}.{}", self.nodes[src].name, want);
+        let from = self.layouts[src];
+        let id = self.emit(
+            Node { name, op: Op::LayoutConvert { to: want }, inputs: vec![src] },
+            want,
+            None,
+        );
+        self.converted.insert((src, want), id);
+        // Converting the new value back to the source's layout is the
+        // source itself — the reverse edge that elides round-trips.
+        self.converted.insert((id, from), src);
+        id
     }
 }
 
@@ -415,6 +671,9 @@ pub struct LayerReport {
 pub struct NetPlan {
     graph: NetGraph,
     shapes: Vec<FeatShape>,
+    /// Activation layout of each node's output value (aligned with
+    /// `graph` node ids; the lowering pass decided these).
+    layouts: Vec<TensorLayout>,
     batch: usize,
     backend_name: &'static str,
     steps: Vec<StepRes>,
@@ -477,6 +736,32 @@ impl NetPlan {
     /// [`Workspace::high_water_bytes`], [`Workspace::capacity_bytes`]).
     pub fn workspace(&self) -> &Workspace {
         &self.workspace
+    }
+
+    /// Activation layout of every node's output value, aligned with
+    /// [`NetPlan::graph`] node ids (the lowered graph's, when the
+    /// layout pass rewrote it).
+    pub fn node_layouts(&self) -> &[TensorLayout] {
+        &self.layouts
+    }
+
+    /// Number of `Layout::Convert` nodes the layout pass left in the
+    /// graph — elision telemetry: a fully blocked chain has exactly one
+    /// ingress and one egress convert, a plain plan zero.
+    pub fn convert_count(&self) -> usize {
+        self.graph
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::LayoutConvert { .. }))
+            .count()
+    }
+
+    /// Id of the node named `name` in this plan's (possibly lowered)
+    /// graph. Builder names survive the layout rewrite unchanged;
+    /// inserted converts get dotted suffixes, so lookups by original
+    /// layer name stay unambiguous.
+    pub fn node_id(&self, name: &str) -> Option<NodeId> {
+        self.graph.nodes().iter().position(|n| n.name == name)
     }
 
     /// The algorithm planned for each conv node, in execution order.
@@ -573,6 +858,7 @@ impl NetPlan {
         NetPlan {
             graph: self.graph.clone(),
             shapes: self.shapes.clone(),
+            layouts: self.layouts.clone(),
             batch: self.batch,
             backend_name: self.backend_name,
             steps: self.steps.clone(),
@@ -614,7 +900,7 @@ impl NetPlan {
         for id in 0..self.graph.len() {
             let started = Instant::now();
             let so = self.slot_of[id];
-            let need = n * self.shapes[id].elems();
+            let need = n * carrier_elems(self.shapes[id], self.layouts[id]);
             // Take the output slot out of the arena; `resize` stays
             // within the compile-time capacity (no reallocation).
             let mut buf = std::mem::take(&mut self.slots[so]);
@@ -627,6 +913,15 @@ impl NetPlan {
                     let src = node.inputs[0];
                     let xs = self.shapes[src];
                     let os = self.shapes[id];
+                    // Carrier channel counts: blocked values travel in
+                    // channel-padded tensors (the lowering pass keeps a
+                    // conv's input and output layouts equal).
+                    let xc = match self.layouts[src] {
+                        TensorLayout::Nchw => xs.c,
+                        TensorLayout::Nchwc => blocked_channels(xs.c),
+                    };
+                    let blocked = self.layouts[id] == TensorLayout::Nchwc;
+                    let yc = if blocked { blocked_channels(os.c) } else { os.c };
                     // Move the input slot's buffer into a Tensor for
                     // the backend call (and back) — both moves are
                     // O(1), no copy. Input and output slots are
@@ -634,12 +929,12 @@ impl NetPlan {
                     let si = self.slot_of[src];
                     let x = Tensor::from_vec(
                         n,
-                        xs.c,
+                        xc,
                         xs.h,
                         xs.w,
                         std::mem::take(&mut self.slots[si]),
                     );
-                    let mut y = Tensor::from_vec(n, os.c, os.h, os.w, buf);
+                    let mut y = Tensor::from_vec(n, yc, os.h, os.w, buf);
                     let result = backend
                         .execute_into(plan, &x, filters, &mut self.workspace, &mut y);
                     self.slots[si] = x.into_vec();
@@ -653,7 +948,26 @@ impl NetPlan {
                         return Err(e.context(format!("conv node '{}' failed", node.name)));
                     }
                     let os_plane = os.h * os.w;
-                    ops::bias_relu_inplace(&mut buf, os.c, os_plane, bias, *relu);
+                    if blocked {
+                        ops::bias_relu_nchwc_inplace(&mut buf, os.c, os_plane, bias, *relu);
+                    } else {
+                        ops::bias_relu_inplace(&mut buf, os.c, os_plane, bias, *relu);
+                    }
+                }
+                (Op::LayoutConvert { .. }, _) => {
+                    let src = node.inputs[0];
+                    let xs = self.shapes[src];
+                    let sbuf = &self.slots[self.slot_of[src]];
+                    match (self.layouts[src], self.layouts[id]) {
+                        (TensorLayout::Nchw, TensorLayout::Nchwc) => {
+                            nchw_to_nchwc(n, xs.c, xs.h, xs.w, sbuf, &mut buf);
+                        }
+                        (TensorLayout::Nchwc, TensorLayout::Nchw) => {
+                            nchwc_to_nchw(n, xs.c, xs.h, xs.w, sbuf, &mut buf);
+                        }
+                        // Copy-through (the lowering tail's output pin).
+                        _ => buf.copy_from_slice(sbuf),
+                    }
                 }
                 (Op::MaxPool(p), _) => {
                     let src = node.inputs[0];
@@ -752,18 +1066,40 @@ impl NetPlan {
         for id in 0..self.graph.len() {
             let node = self.graph.node(id);
             let os = self.shapes[id];
-            let mut buf = vec![0.0f32; n * os.elems()];
+            let mut buf = vec![0.0f32; n * carrier_elems(os, self.layouts[id])];
             match (&node.op, &self.steps[id]) {
                 (Op::Input(_), _) => buf.copy_from_slice(input),
                 (Op::Conv { relu, .. }, StepRes::Conv { plan, filters, bias }) => {
                     let src = node.inputs[0];
                     let xs = self.shapes[src];
-                    let x =
-                        Tensor::from_vec(n, xs.c, xs.h, xs.w, values[src].clone());
-                    let mut y = Tensor::from_vec(n, os.c, os.h, os.w, buf);
+                    let xc = match self.layouts[src] {
+                        TensorLayout::Nchw => xs.c,
+                        TensorLayout::Nchwc => blocked_channels(xs.c),
+                    };
+                    let blocked = self.layouts[id] == TensorLayout::Nchwc;
+                    let yc = if blocked { blocked_channels(os.c) } else { os.c };
+                    let x = Tensor::from_vec(n, xc, xs.h, xs.w, values[src].clone());
+                    let mut y = Tensor::from_vec(n, yc, os.h, os.w, buf);
                     backend.execute_into(plan, &x, filters, &mut self.workspace, &mut y)?;
                     buf = y.into_vec();
-                    ops::bias_relu_inplace(&mut buf, os.c, os.h * os.w, bias, *relu);
+                    if blocked {
+                        ops::bias_relu_nchwc_inplace(&mut buf, os.c, os.h * os.w, bias, *relu);
+                    } else {
+                        ops::bias_relu_inplace(&mut buf, os.c, os.h * os.w, bias, *relu);
+                    }
+                }
+                (Op::LayoutConvert { .. }, _) => {
+                    let src = node.inputs[0];
+                    let xs = self.shapes[src];
+                    match (self.layouts[src], self.layouts[id]) {
+                        (TensorLayout::Nchw, TensorLayout::Nchwc) => {
+                            nchw_to_nchwc(n, xs.c, xs.h, xs.w, &values[src], &mut buf);
+                        }
+                        (TensorLayout::Nchwc, TensorLayout::Nchw) => {
+                            nchwc_to_nchw(n, xs.c, xs.h, xs.w, &values[src], &mut buf);
+                        }
+                        _ => buf.copy_from_slice(&values[src]),
+                    }
                 }
                 (Op::MaxPool(p), _) => {
                     let src = node.inputs[0];
@@ -854,14 +1190,14 @@ mod tests {
         // Single conv (bias + ReLU epilogue) against conv_naive with a
         // hand-applied epilogue, via the exposed seeded parameters.
         let mut b = GraphBuilder::new("one-conv", 3, 9, 9);
-        let c = b.conv("c", b.input(), 5, 3, 2, 1); // stride-2, padded
+        let _c = b.conv("c", b.input(), 5, 3, 2, 1); // stride-2, padded
         let graph = b.finish();
         let p = planner();
         let mut plan = p.compile(&graph, 2).unwrap();
         let input = rand_input(&plan, 7);
         let got = plan.forward(p.backend(), &input).unwrap();
 
-        let (filters, bias) = plan.conv_params(c).unwrap();
+        let (filters, bias) = plan.conv_params(plan.node_id("c").unwrap()).unwrap();
         let spec = ConvSpec {
             n: 2, c: 3, h: 9, w: 9, m: 5, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1,
         };
@@ -967,7 +1303,7 @@ mod tests {
         assert_eq!(plan1.conv_algorithms(), plan2.conv_algorithms());
         // The per-size plans share one weight set (Arc), not copies —
         // same allocation, not merely equal values.
-        let stem = 1; // first conv node of every_op_graph
+        let stem = plan1.node_id("stem").unwrap();
         let (f1, _) = plan1.conv_params(stem).unwrap();
         let (f2, _) = plan2.conv_params(stem).unwrap();
         assert!(std::ptr::eq(f1, f2), "weights duplicated across batch sizes");
@@ -994,7 +1330,10 @@ mod tests {
     /// the same `Arc`, not equal copies.
     #[test]
     fn packed_weights_are_shared_across_sizes_and_replicas() {
-        let p = planner();
+        // Nchw policy keeps the conv on the *tiled* packed path (the
+        // register-tile panels this test pins); blocked-panel sharing
+        // is asserted by `blocked_panels_are_shared_like_tiled_ones`.
+        let p = planner().with_layout(LayoutPolicy::Nchw);
         // A batch-1 small 1×1 conv pins cuConv across sizes (heuristic
         // region), which is the algorithm that owns packed weights.
         let mut gb = GraphBuilder::new("pack", 16, 7, 7);
@@ -1035,7 +1374,7 @@ mod tests {
         let mut replica = plan.replicate();
         // Shared: the weight allocations themselves and the algorithm
         // choices (not merely equal values).
-        let stem = 1; // first conv node of every_op_graph
+        let stem = plan.node_id("stem").unwrap();
         let (f0, _) = plan.conv_params(stem).unwrap();
         let (f1, _) = replica.conv_params(stem).unwrap();
         assert!(std::ptr::eq(f0, f1), "replicate must share weights via Arc");
@@ -1258,5 +1597,186 @@ mod tests {
         assert!(report.iter().filter(|l| l.kind == "conv").count() == 4);
         assert!(plan.total_seconds() > 0.0);
         assert!(plan.conv_seconds() <= plan.total_seconds());
+    }
+
+    #[test]
+    fn layout_pass_elides_interior_converts_on_a_conv_chain() {
+        let mut b = GraphBuilder::new("chain", 3, 10, 10);
+        let c1 = b.conv_same("c1", b.input(), 8, 3);
+        let _ = b.conv_same("c2", c1, 8, 3);
+        let graph = b.finish();
+        let p = planner().with_layout(LayoutPolicy::Nchwc);
+        let mut plan = p.compile(&graph, 1).unwrap();
+        // Exactly one ingress + one egress convert, zero interior:
+        // input -> to-blocked -> c1 -> c2 -> to-plain.
+        assert_eq!(
+            plan.convert_count(),
+            2,
+            "graph: {:?}",
+            plan.graph().nodes().iter().map(|n| n.name.as_str()).collect::<Vec<_>>()
+        );
+        let g = plan.graph();
+        for (id, node) in g.nodes().iter().enumerate() {
+            match &node.op {
+                Op::LayoutConvert { .. } => assert!(
+                    !matches!(g.node(node.inputs[0]).op, Op::LayoutConvert { .. }),
+                    "back-to-back converts survived elision"
+                ),
+                Op::Conv { .. } => {
+                    assert_eq!(plan.node_layouts()[id], TensorLayout::Nchwc);
+                    assert_eq!(plan.node_layouts()[node.inputs[0]], TensorLayout::Nchwc);
+                }
+                _ => {}
+            }
+        }
+        let (c1, c2) = (plan.node_id("c1").unwrap(), plan.node_id("c2").unwrap());
+        assert_eq!(g.node(c2).inputs, vec![c1], "conv->conv edge must be direct");
+        // And it runs, bit-identical to the fresh-buffer reference.
+        let input = rand_input(&plan, 0xE11D);
+        let want = plan.forward_reference(p.backend(), &input).unwrap();
+        let got = plan.forward(p.backend(), &input).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn blocked_plan_is_bit_identical_to_the_plain_cuconv_plan() {
+        // Every conv sits in the cuConv heuristic region (batch 1, tiny
+        // spatial dims), so the Nchw-policy plan runs tiled cuConv and
+        // the Nchwc-policy plan runs the blocked microkernel — both are
+        // bit-identical to conv_naive, hence to each other, end to end.
+        // Channel counts are deliberately not block multiples (5, 12,
+        // 10) so padded-lane tails flow through a whole network.
+        let mut gb = GraphBuilder::new("bitnet", 5, 7, 7);
+        let c1 = gb.conv_same("c1", gb.input(), 12, 3);
+        let c2 = gb.conv_same("c2", c1, 10, 1);
+        let g2 = gb.global_avg_pool("gap", c2);
+        let fc = gb.linear("fc", g2, 6, false);
+        gb.softmax("sm", fc);
+        let graph = gb.finish();
+
+        let plain_p = planner().with_layout(LayoutPolicy::Nchw);
+        let blocked_p = planner().with_layout(LayoutPolicy::Nchwc);
+        let mut plain = plain_p.compile(&graph, 1).unwrap();
+        let mut blocked = blocked_p.compile(&graph, 1).unwrap();
+        for plan in [&plain, &blocked] {
+            assert!(
+                plan.conv_algorithms().iter().all(|(_, a)| *a == Algorithm::CuConv),
+                "test premise: every conv must run cuConv, got {:?}",
+                plan.conv_algorithms()
+            );
+        }
+        assert_eq!(plain.convert_count(), 0);
+        assert_eq!(blocked.convert_count(), 2, "one ingress + one egress");
+        assert_eq!(
+            blocked.node_layouts()[blocked.node_id("c1").unwrap()],
+            TensorLayout::Nchwc
+        );
+
+        let input = rand_input(&plain, 0xB10C);
+        let want = plain.forward(plain_p.backend(), &input).unwrap();
+        let got = blocked.forward(blocked_p.backend(), &input).unwrap();
+        assert_eq!(got, want, "blocked whole-net forward is not bit-identical");
+        let reference = blocked.forward_reference(blocked_p.backend(), &input).unwrap();
+        assert_eq!(reference, want);
+    }
+
+    #[test]
+    fn blocked_execution_is_allocation_flat_with_zero_conv_workspace() {
+        let p = planner().with_layout(LayoutPolicy::Nchwc);
+        let mut plan = p.compile(&every_op_graph(), 2).unwrap();
+        assert!(plan.convert_count() > 0, "premise: the lowering blockified convs");
+        // Every conv runs the workspace-free blocked microkernel.
+        assert_eq!(plan.max_conv_workspace_bytes(), 0);
+        let input = rand_input(&plan, 0xF1A7);
+        let want = plan.forward_reference(p.backend(), &input).unwrap();
+        let _ = plan.forward(p.backend(), &input).unwrap();
+        let arena = plan.arena_capacity_bytes();
+        let ws_cap = plan.workspace().capacity_bytes();
+        for _ in 0..20 {
+            let got = plan.forward(p.backend(), &input).unwrap();
+            assert_eq!(got, want, "dirty-arena blocked forward diverged");
+            assert_eq!(plan.arena_capacity_bytes(), arena, "arena grew");
+            assert_eq!(plan.workspace().capacity_bytes(), ws_cap, "workspace grew");
+            assert_eq!(
+                plan.workspace().high_water_bytes(),
+                0,
+                "a blocked conv touched the workspace"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_panels_are_shared_like_tiled_ones() {
+        let mut gb = GraphBuilder::new("bpack", 16, 7, 7);
+        let c = gb.conv_same("c", gb.input(), 32, 1);
+        let g = gb.global_avg_pool("gap", c);
+        let fc = gb.linear("fc", g, 4, false);
+        gb.softmax("sm", fc);
+        let graph = gb.finish();
+        let p = planner().with_layout(LayoutPolicy::Nchwc);
+        let plans = p.compile_for_sizes(&graph, &[1, 2]).unwrap();
+        let (_, plan1) = &plans[0];
+        let (_, plan2) = &plans[1];
+        let c = plan1.node_id("c").unwrap();
+        let cp = plan1.conv_plan(c).unwrap();
+        assert_eq!(cp.algo(), Algorithm::CuConv);
+        assert_eq!(cp.layout(), TensorLayout::Nchwc);
+        let pk1 = cp.packed_filters().expect("blocked plan must own packed panels");
+        assert_eq!(pk1.tile(), crate::cpuref::pack::nchwc_tile());
+        let pk2 = plan2.conv_plan(c).unwrap().packed_filters().unwrap();
+        assert!(Arc::ptr_eq(pk1, pk2), "blocked packing duplicated across sizes");
+        let replica = plan1.replicate();
+        let pkr = replica.conv_plan(c).unwrap().packed_filters().unwrap();
+        assert!(Arc::ptr_eq(pk1, pkr), "replicate must share the blocked packing");
+    }
+
+    #[test]
+    fn nchw_policy_compiles_the_pre_layout_plan() {
+        let graph = every_op_graph();
+        let p = planner().with_layout(LayoutPolicy::Nchw);
+        let plan = p.compile(&graph, 1).unwrap();
+        assert_eq!(plan.graph().len(), graph.len(), "Nchw policy must not rewrite");
+        assert_eq!(plan.convert_count(), 0);
+        assert!(plan.node_layouts().iter().all(|&l| l == TensorLayout::Nchw));
+    }
+
+    #[test]
+    fn authored_convert_round_trips_collapse_to_the_source() {
+        // A hand-built graph ending in a redundant blocked round-trip:
+        // the pass elides the pair, pins the output as the last node
+        // via a copy-through, and the forward is the identity.
+        let shape = FeatShape::new(3, 4, 4);
+        let graph = NetGraph::from_parts(
+            "roundtrip",
+            vec![
+                Node { name: "in".into(), op: Op::Input(shape), inputs: vec![] },
+                Node {
+                    name: "blk".into(),
+                    op: Op::LayoutConvert { to: TensorLayout::Nchwc },
+                    inputs: vec![0],
+                },
+                Node {
+                    name: "back".into(),
+                    op: Op::LayoutConvert { to: TensorLayout::Nchw },
+                    inputs: vec![1],
+                },
+            ],
+        );
+        let p = planner();
+        let mut plan = p.compile(&graph, 1).unwrap();
+        let input = rand_input(&plan, 0x1D);
+        let got = plan.forward(p.backend(), &input).unwrap();
+        assert_eq!(got, input, "a convert round-trip must be the identity");
+        // The blocked round-trip was elided: no surviving convert reads
+        // a blocked value.
+        for node in plan.graph().nodes() {
+            if matches!(node.op, Op::LayoutConvert { .. }) {
+                assert_ne!(
+                    plan.node_layouts()[node.inputs[0]],
+                    TensorLayout::Nchwc,
+                    "the blocked round-trip was not elided"
+                );
+            }
+        }
     }
 }

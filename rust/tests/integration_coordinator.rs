@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use cuconv::backend::CpuRefBackend;
 use cuconv::conv::ConvSpec;
-use cuconv::coordinator::{BatchPolicy, PoolConfig, Server, ShardSelection};
+use cuconv::coordinator::{BatchPolicy, PoolConfig, Server, ServerBuilder, ShardSelection};
 use cuconv::util::rng::Rng;
 
 fn image(rng: &mut Rng, elems: usize) -> Vec<f32> {
@@ -22,15 +22,11 @@ fn image(rng: &mut Rng, elems: usize) -> Vec<f32> {
 /// artifacts.
 fn conv_pool(policy: BatchPolicy, pool: PoolConfig) -> Server {
     let spec = ConvSpec::paper(8, 1, 3, 4, 4);
-    Server::start_conv(
-        Box::new(CpuRefBackend::new()),
-        spec,
-        None,
-        &[1, 2, 4, 8],
-        policy,
-        pool,
-    )
-    .unwrap()
+    ServerBuilder::conv(Box::new(CpuRefBackend::new()), spec, &[1, 2, 4, 8])
+        .policy(policy)
+        .pool(pool)
+        .start()
+        .unwrap()
 }
 
 /// Single-worker convenience used by the pre-pool tests.
@@ -293,22 +289,16 @@ fn net_pool_matches_single_worker_bit_for_bit() {
         max_delay: Duration::from_millis(5),
         queue_capacity: 32,
     };
-    let single = Server::start_net(
-        Box::new(CpuRefBackend::new()),
-        &graph,
-        &[1, 2, 4],
-        policy,
-        PoolConfig::with_workers(1),
-    )
-    .unwrap();
-    let pool = Server::start_net(
-        Box::new(CpuRefBackend::new()),
-        &graph,
-        &[1, 2, 4],
-        policy,
-        PoolConfig::with_workers(3),
-    )
-    .unwrap();
+    let single = ServerBuilder::net(Box::new(CpuRefBackend::new()), &graph, &[1, 2, 4])
+        .policy(policy)
+        .pool(PoolConfig::with_workers(1))
+        .start()
+        .unwrap();
+    let pool = ServerBuilder::net(Box::new(CpuRefBackend::new()), &graph, &[1, 2, 4])
+        .policy(policy)
+        .pool(PoolConfig::with_workers(3))
+        .start()
+        .unwrap();
     let h1 = single.handle();
     let h3 = pool.handle();
     let mut rng = Rng::new(42);
@@ -358,12 +348,10 @@ mod fault_tolerance {
 
     fn faulted_pool(plan: FaultPlan, workers: usize) -> Server {
         let faulty = FaultInjector::new(Box::new(faultable_runner()), plan);
-        Server::start_pool(
-            Box::new(faulty),
-            BatchPolicy::default(),
-            PoolConfig::with_workers(workers),
-        )
-        .unwrap()
+        ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig::with_workers(workers))
+            .start()
+            .unwrap()
     }
 
     /// Client-side offered must equal the server's four-way accounting
@@ -422,12 +410,10 @@ mod fault_tolerance {
 
         // Post-recovery numerics: bit-identical to a never-faulted
         // single-worker pool.
-        let reference = Server::start_pool(
-            Box::new(faultable_runner()),
-            BatchPolicy::default(),
-            PoolConfig::with_workers(1),
-        )
-        .unwrap();
+        let reference = ServerBuilder::runner(Box::new(faultable_runner()))
+            .pool(PoolConfig::with_workers(1))
+            .start()
+            .unwrap();
         for seed in [7u64, 8, 9] {
             assert_eq!(
                 probe_bits(&server.handle(), seed),
@@ -476,12 +462,15 @@ mod fault_tolerance {
         // requests with an error instead of dropping them, (2) show up
         // in live_workers, and (3) be counted as a panicked join at
         // shutdown rather than ignored.
-        let mut server = Server::start_pool(
-            Box::new(Exploder),
-            BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(1), queue_capacity: 4 },
-            PoolConfig { workers: 1, supervise: false, ..PoolConfig::default() },
-        )
-        .unwrap();
+        let mut server = ServerBuilder::runner(Box::new(Exploder))
+            .policy(BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::from_millis(1),
+                queue_capacity: 4,
+            })
+            .pool(PoolConfig { workers: 1, supervise: false, ..PoolConfig::default() })
+            .start()
+            .unwrap();
         let h = server.handle();
 
         let first = h.infer(vec![0.0; 2]);
@@ -564,12 +553,10 @@ mod fault_tolerance {
                 ));
             }
 
-            let reference = Server::start_pool(
-                Box::new(faultable_runner()),
-                BatchPolicy::default(),
-                PoolConfig::with_workers(1),
-            )
-            .unwrap();
+            let reference = ServerBuilder::runner(Box::new(faultable_runner()))
+                .pool(PoolConfig::with_workers(1))
+                .start()
+                .unwrap();
             if probe_bits(&server.handle(), 0xB17) != probe_bits(&reference.handle(), 0xB17)
             {
                 return Err("post-schedule output diverged from reference".to_string());

@@ -6,7 +6,7 @@
 use std::time::{Duration, Instant};
 
 use cuconv::backend::CpuRefBackend;
-use cuconv::coordinator::{BatchPolicy, PoolConfig, Server};
+use cuconv::coordinator::{BatchPolicy, PoolConfig, Server, ServerBuilder};
 use cuconv::http::{
     infer_body, logits_of, wait_healthy, AppState, HttpClient, HttpConfig,
     HttpServer, RateLimit, TenantLimiter,
@@ -45,18 +45,15 @@ impl FrontDoor {
         default_deadline: Option<Duration>,
         http_cfg: HttpConfig,
     ) -> FrontDoor {
-        let server = Server::start_net(
-            Box::new(CpuRefBackend::new()),
-            graph,
-            batch_sizes,
-            BatchPolicy {
+        let server = ServerBuilder::net(Box::new(CpuRefBackend::new()), graph, batch_sizes)
+            .policy(BatchPolicy {
                 max_batch: *batch_sizes.iter().max().unwrap(),
                 max_delay: Duration::from_millis(5),
                 queue_capacity: 64,
-            },
-            PoolConfig::with_workers(1),
-        )
-        .expect("pool");
+            })
+            .pool(PoolConfig::with_workers(1))
+            .start()
+            .expect("pool");
         let handle = server.handle();
         let image_elems = handle.image_elems();
         let http = HttpServer::start(
@@ -374,16 +371,15 @@ fn healthz_degrades_to_503_when_a_worker_dies() {
         }
     }
 
-    let server = Server::start_pool(
-        Box::new(Exploder),
-        BatchPolicy {
+    let server = ServerBuilder::runner(Box::new(Exploder))
+        .policy(BatchPolicy {
             max_batch: 1,
             max_delay: Duration::from_millis(1),
             queue_capacity: 4,
-        },
-        PoolConfig { workers: 2, supervise: false, ..PoolConfig::default() },
-    )
-    .expect("pool");
+        })
+        .pool(PoolConfig { workers: 2, supervise: false, ..PoolConfig::default() })
+        .start()
+        .expect("pool");
     let handle = server.handle();
     let http = HttpServer::start(
         AppState {

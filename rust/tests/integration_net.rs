@@ -145,7 +145,15 @@ fn arena_reuses_memory_and_preserves_numerics_on_a_real_network() {
         plan.arena_capacity_bytes(),
         naive_bytes
     );
-    assert!(plan.slot_count() < graph.len() / 4, "slots: {}", plan.slot_count());
+    // Measured against the plan's own (possibly layout-lowered) graph:
+    // inserted converts add nodes, and liveness must still fold them
+    // into a handful of reused slots.
+    assert!(
+        plan.slot_count() < plan.graph().len() / 4,
+        "slots: {} of {} nodes",
+        plan.slot_count(),
+        plan.graph().len()
+    );
 
     let mut rng = Rng::new(123);
     let mut image = vec![0.0f32; plan.input_elems()];

@@ -114,6 +114,42 @@ def check_hotpath(path: str, doc: dict) -> None:
         if not row.get("tile"):
             problem(path, f"{where}: missing 'tile'")
         finite_positive(path, row, "p50_us", where)
+    # Blocked NCHWc layout vs the tiled NCHW kernel: the bench asserts
+    # bit-identity against conv_naive before timing, so a false here
+    # means the assertion was bypassed. The report also records which
+    # SIMD level actually ran (scalar results are valid but a CI run
+    # silently losing AVX2 should be visible in the artifact).
+    if not isinstance(doc.get("simd_level"), str) or not doc.get("simd_level"):
+        problem(path, f"'simd_level' is {doc.get('simd_level')!r}, expected a name")
+    for row in non_empty_rows(path, doc, "cuconv_blocked_vs_tiled"):
+        where = f"cuconv_blocked_vs_tiled[{row.get('config')!r}]"
+        if not row.get("config"):
+            problem(path, f"{where}: missing 'config'")
+        for key in ("tiled_p50_us", "blocked_p50_us", "speedup"):
+            finite_positive(path, row, key, where)
+        if row.get("bit_identical") is not True:
+            problem(path, f"{where}: 'bit_identical' is {row.get('bit_identical')!r}")
+    finite_positive(path, doc, "blocked_geomean_speedup", "top level")
+    # The inverted form feeds the --baseline gate (lower is better, so
+    # a blocked-layout slowdown raises it past the tolerance).
+    finite_positive(path, doc, "tiled_over_blocked", "top level")
+    geo = doc.get("blocked_geomean_speedup")
+    inv = doc.get("tiled_over_blocked")
+    if (
+        isinstance(geo, (int, float))
+        and isinstance(inv, (int, float))
+        and not isinstance(geo, bool)
+        and not isinstance(inv, bool)
+        and math.isfinite(geo)
+        and math.isfinite(inv)
+        and geo > 0
+        and abs(inv * geo - 1.0) > 1e-9
+    ):
+        problem(
+            path,
+            f"'tiled_over_blocked' = {inv!r} is not the inverse of "
+            f"'blocked_geomean_speedup' = {geo!r}",
+        )
 
 
 def check_e2e(path: str, doc: dict) -> None:
@@ -435,8 +471,21 @@ def tune_baseline_metrics(doc: dict) -> dict:
     return {}
 
 
+def hotpath_baseline_metrics(doc: dict) -> dict:
+    """Machine-independent relative metric of a hotpath_micro report:
+    the tiled/blocked runtime ratio (inverse of the blocked-layout
+    geomean speedup, so lower is better and a blocked regression raises
+    it). Absolute microseconds vary with the runner; the ratio is the
+    layout's value."""
+    v = doc.get("tiled_over_blocked")
+    if isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v) and v > 0:
+        return {"tiled_over_blocked": float(v)}
+    return {}
+
+
 BASELINE_METRICS = {
     "tune_cache": tune_baseline_metrics,
+    "hotpath_micro": hotpath_baseline_metrics,
 }
 
 

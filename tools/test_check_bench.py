@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Self-test for tools/check_bench.py against known-good and mutated
-chaos and tune reports, plus the --baseline perf-regression gate.
+chaos, tune, and hotpath reports, plus the --baseline perf gates.
 
 The checkers are themselves part of the CI contract: if one silently
 accepted a report with lost requests, a skipped recovery, or a warm
@@ -29,6 +29,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 CHECKER = os.path.join(HERE, "check_bench.py")
 GOOD = os.path.join(HERE, "fixtures", "BENCH_chaos_good.json")
 TUNE_GOOD = os.path.join(HERE, "fixtures", "BENCH_tune_good.json")
+HOTPATH_GOOD = os.path.join(HERE, "fixtures", "BENCH_hotpath_good.json")
 BASELINES = os.path.join(HERE, "baselines")
 
 
@@ -161,6 +162,49 @@ def tune_mutations() -> list[tuple[str, object, str]]:
     ]
 
 
+def hotpath_mutations() -> list[tuple[str, object, str]]:
+    """Mutations of the good hotpath_micro report; each must fail the
+    blocked-layout contract check with the right attribution."""
+
+    def blocked_bits_diverged(d):
+        d["cuconv_blocked_vs_tiled"][1]["bit_identical"] = False
+
+    def blocked_time_null(d):
+        # The JSON writer emits null for NaN/Inf — must be rejected.
+        d["cuconv_blocked_vs_tiled"][0]["blocked_p50_us"] = None
+
+    def no_blocked_rows(d):
+        d["cuconv_blocked_vs_tiled"] = []
+
+    def blocked_row_unlabeled(d):
+        del d["cuconv_blocked_vs_tiled"][0]["config"]
+
+    def simd_level_missing(d):
+        del d["simd_level"]
+
+    def inverse_broken(d):
+        # Someone edits one geomean field and forgets its twin: the
+        # baseline metric would silently gate on a stale number.
+        d["tiled_over_blocked"] = d["tiled_over_blocked"] * 2
+
+    def inverse_null(d):
+        d["tiled_over_blocked"] = None
+
+    def sweep_truncated(d):
+        d["tile_sweep"] = d["tile_sweep"][:2]
+
+    return [
+        ("blocked bit-identity false", blocked_bits_diverged, "bit_identical"),
+        ("blocked time is null", blocked_time_null, "blocked_p50_us"),
+        ("no blocked rows", no_blocked_rows, "missing or empty"),
+        ("blocked row unlabeled", blocked_row_unlabeled, "missing 'config'"),
+        ("simd level missing", simd_level_missing, "simd_level"),
+        ("geomean/inverse mismatch", inverse_broken, "not the inverse"),
+        ("inverse is null", inverse_null, "tiled_over_blocked"),
+        ("tile sweep truncated", sweep_truncated, "candidate set"),
+    ]
+
+
 def baseline_gate_failures(tune_good: dict, tmpdir: str) -> list[str]:
     """Exercise --baseline: healthy report passes; a regressed report,
     a missing baseline, and a malformed tolerance each fail."""
@@ -217,11 +261,46 @@ def baseline_gate_failures(tune_good: dict, tmpdir: str) -> list[str]:
     return failures
 
 
+def hotpath_baseline_failures(hotpath_good: dict, tmpdir: str) -> list[str]:
+    """Exercise the hotpath baseline: the good report passes against
+    the committed baseline, a blocked-layout slowdown fails the
+    geomean gate."""
+    failures: list[str] = []
+
+    rc, out = run_checker(
+        hotpath_good, tmpdir, name="BENCH_hotpath.json", baseline_dir=BASELINES
+    )
+    if rc != 0:
+        failures.append(
+            f"good hotpath report rejected by committed baseline (rc={rc}):\n{out}"
+        )
+
+    # Blocked 10x slower: both geomean fields move together (keeping
+    # the plain inverse check green), so only the baseline gate can
+    # catch the regression.
+    slow = copy.deepcopy(hotpath_good)
+    slow["tiled_over_blocked"] = hotpath_good["tiled_over_blocked"] * 10
+    slow["blocked_geomean_speedup"] = hotpath_good["blocked_geomean_speedup"] / 10
+    rc, out = run_checker(
+        slow, tmpdir, name="BENCH_hotpath.json", baseline_dir=BASELINES
+    )
+    if rc == 0:
+        failures.append("regressed hotpath report passed the baseline gate")
+    elif "geomean" not in out:
+        failures.append(
+            f"regressed hotpath failed for the wrong reason (wanted 'geomean'):\n{out}"
+        )
+
+    return failures
+
+
 def main() -> int:
     with open(GOOD, encoding="utf-8") as f:
         good = json.load(f)
     with open(TUNE_GOOD, encoding="utf-8") as f:
         tune_good = json.load(f)
+    with open(HOTPATH_GOOD, encoding="utf-8") as f:
+        hotpath_good = json.load(f)
 
     failures: list[str] = []
     with tempfile.TemporaryDirectory() as tmpdir:
@@ -231,6 +310,9 @@ def main() -> int:
         rc, out = run_checker(tune_good, tmpdir, name="BENCH_tune.json")
         if rc != 0:
             failures.append(f"good tune fixture rejected (rc={rc}):\n{out}")
+        rc, out = run_checker(hotpath_good, tmpdir, name="BENCH_hotpath.json")
+        if rc != 0:
+            failures.append(f"good hotpath fixture rejected (rc={rc}):\n{out}")
 
         for name, mutate, expect in mutations():
             doc = copy.deepcopy(good)
@@ -256,16 +338,30 @@ def main() -> int:
                     f"(wanted {expect!r} in output):\n{out}"
                 )
 
+        for name, mutate, expect in hotpath_mutations():
+            doc = copy.deepcopy(hotpath_good)
+            mutate(doc)
+            rc, out = run_checker(doc, tmpdir, name="BENCH_hotpath.json")
+            if rc == 0:
+                failures.append(f"hotpath mutation '{name}' was not caught")
+            elif expect not in out:
+                failures.append(
+                    f"hotpath mutation '{name}' failed for the wrong reason "
+                    f"(wanted {expect!r} in output):\n{out}"
+                )
+
         failures.extend(baseline_gate_failures(tune_good, tmpdir))
+        failures.extend(hotpath_baseline_failures(hotpath_good, tmpdir))
 
     if failures:
         print(f"test_check_bench: {len(failures)} failure(s):")
         for f_ in failures:
             print(f"  FAIL {f_}")
         return 1
+    n_mut = len(mutations()) + len(tune_mutations()) + len(hotpath_mutations())
     print(
-        f"test_check_bench: 2 good fixtures + "
-        f"{len(mutations()) + len(tune_mutations())} mutations + baseline gate OK"
+        f"test_check_bench: 3 good fixtures + "
+        f"{n_mut} mutations + baseline gates OK"
     )
     return 0
 
