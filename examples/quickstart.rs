@@ -11,9 +11,12 @@
 //! (batch 1) through the net engine's graph → plan → forward lifecycle,
 //! then the same network served over a real loopback socket through the
 //! HTTP/JSON front door (lazy-scan admission → shard pool → JSON
-//! logits), and finally the blocked NCHWc layout: a whole-net forward
-//! on channel-blocked activations through the explicit-SIMD
-//! microkernel, bit-identical to the plain-layout pass.
+//! logits), the fault-tolerance story (a supervised pool surviving an
+//! injected panic, then the watchdog fencing and evicting a *wedged*
+//! worker with zero double-serve), and finally the blocked NCHWc
+//! layout: a whole-net forward on channel-blocked activations through
+//! the explicit-SIMD microkernel, bit-identical to the plain-layout
+//! pass.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (PJRT path: `make artifacts && cargo run --release --features pjrt \
@@ -245,7 +248,73 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 9) The tune cache: measured planning (timing every candidate
+    // 9) The watchdog: a panic is loud, but a *wedged* worker never
+    //    returns to the supervisor at all. Here worker 0 hangs 400 ms on
+    //    its first request against a 40 ms stall budget: the watchdog
+    //    thread notices the overdue heartbeat, fences the shard
+    //    (bumping its generation token), requeues the hung request onto
+    //    the sibling, and respawns a replacement. When the hung
+    //    incarnation finally wakes, the fence makes it discard its own
+    //    late answer — counted, never double-served.
+    {
+        use cuconv::coordinator::{
+            ConvBackendRunner, Fault, FaultInjector, FaultPlan, PoolConfig,
+            ServerBuilder, ShardSelection,
+        };
+        use std::time::{Duration, Instant};
+
+        let runner = ConvBackendRunner::new(
+            Box::new(CpuRefBackend::new()),
+            ConvSpec::paper(8, 1, 3, 4, 4),
+            None,
+            &[1, 2, 4],
+        )?;
+        let plan =
+            FaultPlan::new(vec![Fault::Stall { worker: 0, request: 0, millis: 400 }]);
+        let server = ServerBuilder::runner(Box::new(FaultInjector::new(
+            Box::new(runner),
+            plan,
+        )))
+        .pool(PoolConfig {
+            workers: 2,
+            selection: ShardSelection::RoundRobin,
+            stall_budget: Duration::from_millis(40),
+            ..PoolConfig::default()
+        })
+        .start()?;
+
+        let h = server.handle();
+        let elems = h.image_elems();
+        let submitted = Instant::now();
+        // This request lands on the hanging worker; it must still be
+        // answered — by the sibling, after the eviction.
+        let resp = h.infer(vec![0.25f32; elems])?;
+        let answered = submitted.elapsed();
+        assert_eq!(resp.logits.len(), h.classes());
+
+        // The fenced discard lands when the hung incarnation wakes.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.metrics().fenced_discards < 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let m = server.metrics();
+        assert!(m.stalled_evictions >= 1, "the hung worker must be evicted");
+        assert!(m.fenced_discards >= 1, "its late answer must be discarded");
+        assert_eq!(server.live_workers(), server.workers());
+        println!(
+            "watchdog: worker 0 hung 400 ms vs a 40 ms budget; evicted + \
+             fenced ({} eviction(s), {} discarded late answer(s)), the request \
+             was answered by the sibling in {:.0} ms, pool back to {}/{} \
+             workers",
+            m.stalled_evictions,
+            m.fenced_discards,
+            answered.as_secs_f64() * 1e3,
+            server.live_workers(),
+            server.workers(),
+        );
+    }
+
+    // 10) The tune cache: measured planning (timing every candidate
     //    algorithm and tile) is a one-time, per-machine cost. Compile
     //    once with measured choices — filling the cache as a side
     //    effect — save the profile, load it back as a second process
@@ -298,7 +367,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 10) The blocked NCHWc layout: ask the planner for
+    // 11) The blocked NCHWc layout: ask the planner for
     //     `LayoutPolicy::Nchwc` and it rewrites the graph so every conv
     //     runs the explicit-SIMD blocked microkernel on channel-blocked
     //     activations — one layout convert at ingress, one at egress,

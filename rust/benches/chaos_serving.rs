@@ -19,6 +19,18 @@
 //!    brown-out threshold, swept over client counts. Batch requests
 //!    are shed first (the shed curve lands in the report); Interactive
 //!    keeps completing under overload.
+//! 4. **stall-eviction** — a worker hung far past the watchdog's stall
+//!    budget (400 ms stall vs a 40 ms budget). The watchdog must fence
+//!    and evict it within the budget's order of magnitude (the measured
+//!    `eviction_latency_ms` lands in the report), requeue its window,
+//!    respawn a replacement, and discard the hung incarnation's late
+//!    completion (`fenced_discards`) — zero lost, zero double-served,
+//!    and the recovered pool is probed bit-identical to an unfaulted
+//!    single-worker reference.
+//! 5. **soak** — a seeded wall-clock loop (`CUCONV_BENCH_SOAK_SECONDS`,
+//!    default 5) of rounds, each a fresh supervised pool under a mixed
+//!    panic + evictable-stall campaign, asserting per-class accounting
+//!    closure, zero lost, and full-strength recovery *every round*.
 //!
 //! After scenario 1 the recovered pool answers a seeded probe set and
 //! the logits are compared bit-for-bit against a fresh unfaulted
@@ -27,15 +39,16 @@
 //! Results land in `BENCH_chaos.json` at the repository root
 //! (validated in CI by `tools/check_bench.py`). Environment knobs:
 //! `CUCONV_BENCH_CHAOS_REQUESTS` (default 64 per scenario, floor 32 so
-//! every planned fault fires).
+//! every planned fault fires) and `CUCONV_BENCH_SOAK_SECONDS` (soak
+//! wall budget, floor 1).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use cuconv::backend::CpuRefBackend;
 use cuconv::coordinator::{
     run_closed_loop_mixed, BatchPolicy, ClassReport, ConvBackendRunner, Fault,
     FaultInjector, FaultPlan, MetricsSnapshot, PoolConfig, Priority, Server,
-    ServerBuilder, ShardSelection,
+    ServerBuilder, ShardSelection, PRIORITY_COUNT,
 };
 use cuconv::conv::ConvSpec;
 use cuconv::util::json::Json;
@@ -287,6 +300,273 @@ fn scenario_brownout(requests: usize) -> Json {
     ])
 }
 
+/// The watchdog stall budget every eviction scenario runs under: small
+/// enough that a bench round is fast, large enough that an honest
+/// (non-stalled) conv batch can never trip it.
+const STALL_BUDGET: Duration = Duration::from_millis(40);
+
+/// Block until `probe()` is true or the timeout elapses.
+fn wait_until(timeout: Duration, mut probe: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if probe() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Scenario 4: a worker hung far past the stall budget. Phase one
+/// measures the eviction: a single request lands on the stalled
+/// round-robin shard, and the time from submission to the watchdog's
+/// `stalled_evictions` tick is the eviction latency (the request itself
+/// must still complete, answered by its requeued copy). Phase two
+/// drives the recovered pool with the mixed closed loop and takes the
+/// per-class zero-lost accounting. Returns the report row and the
+/// recovered pool for the bit-identity probe.
+fn scenario_stall_eviction(requests: usize) -> (Json, Server) {
+    // Worker 0 hangs on the very first item it serves, 10x past the
+    // budget — unambiguously a stall to evict, not a slow batch.
+    let stall_ms = 400u64;
+    let plan =
+        FaultPlan::new(vec![Fault::Stall { worker: 0, request: 0, millis: stall_ms }]);
+    let faulty = FaultInjector::new(Box::new(bench_runner()), plan);
+    let server = ServerBuilder::runner(Box::new(faulty))
+        .pool(PoolConfig {
+            workers: 2,
+            selection: ShardSelection::RoundRobin,
+            stall_budget: STALL_BUDGET,
+            ..PoolConfig::default()
+        })
+        .start()
+        .expect("start supervised 2-worker pool with a 40 ms stall budget");
+    let handle = server.handle();
+
+    // Phase one: one probe request onto shard 0 (round-robin from a
+    // fresh pool), which immediately hangs. The watchdog must notice.
+    let elems = handle.image_elems();
+    let submitted = Instant::now();
+    let probe_handle = handle.clone();
+    let probe = std::thread::spawn(move || probe_handle.infer(vec![0.25f32; elems]));
+    let evicted = wait_until(Duration::from_secs(5), || {
+        server.metrics().stalled_evictions >= 1
+    });
+    let eviction_latency = submitted.elapsed();
+    assert!(evicted, "watchdog never evicted a worker hung 10x past the stall budget");
+    let first = probe.join().expect("probe thread");
+    assert!(
+        first.is_ok(),
+        "the stalled request must be requeued and answered, got {first:?}"
+    );
+    assert!(
+        eviction_latency >= STALL_BUDGET,
+        "eviction at {eviction_latency:?} cannot precede the {STALL_BUDGET:?} budget"
+    );
+    assert!(
+        eviction_latency < Duration::from_millis(stall_ms),
+        "eviction took {eviction_latency:?} — the watchdog should fire well before \
+         the {stall_ms} ms stall ends on its own"
+    );
+
+    // The hung incarnation wakes at ~400 ms, finishes its batch, and
+    // hits the fence: its late completion must be discarded, counted,
+    // and never double-served.
+    let discarded = wait_until(Duration::from_secs(5), || {
+        server.metrics().fenced_discards >= 1
+    });
+    assert!(discarded, "the evicted worker's late completion was never fenced off");
+    // Snapshot after phase one, so phase two's accounting can be
+    // compared client-vs-server without the probe skewing a class.
+    let base = server.metrics();
+
+    // Phase two: mixed load on the recovered pool — full accounting,
+    // nothing lost, pool back at strength.
+    let report =
+        run_closed_loop_mixed(&server.handle(), requests, 6, 0xE71C_7ED, None, 0.4);
+    let m = server.metrics();
+    assert!(m.stalled_evictions >= 1);
+    assert!(
+        m.restarts >= m.stalled_evictions,
+        "every eviction must respawn a replacement ({} restarts < {} evictions)",
+        m.restarts,
+        m.stalled_evictions
+    );
+    assert_eq!(
+        server.live_workers(),
+        server.workers(),
+        "the watchdog must restore the pool to full strength"
+    );
+    for p in Priority::ALL {
+        let r = report.class(p);
+        assert_eq!(r.failed, 0, "{p}: eviction requeues, it must not fail requests");
+        assert_eq!(r.expired, 0, "{p}: no deadline was set");
+    }
+    assert_eq!(
+        report.completed(),
+        requests,
+        "every offered request must complete on the recovered pool"
+    );
+    // No double-serve: the server completed exactly the client's
+    // completions plus phase one's single probe.
+    assert_eq!(
+        m.requests,
+        report.completed() as u64 + base.requests,
+        "server completions must equal client completions + the probe — a surplus \
+         means a fenced batch was served twice"
+    );
+
+    // Phase two's delta view of the per-class counters: subtract the
+    // phase-one probe so client and server accounting line up.
+    let mut delta = m.clone();
+    for (d, b) in delta.per_class.iter_mut().zip(base.per_class.iter()) {
+        d.completed -= b.completed;
+        d.rejected -= b.rejected;
+        d.failed -= b.failed;
+        d.expired -= b.expired;
+    }
+    let (classes, lost) = class_rows("stall-eviction", &report, &delta);
+    let row = Json::obj(vec![
+        ("scenario", Json::str("stall-eviction")),
+        ("workers", Json::num(server.workers() as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("stall_budget_ms", Json::num(STALL_BUDGET.as_secs_f64() * 1e3)),
+        ("eviction_latency_ms", Json::num(eviction_latency.as_secs_f64() * 1e3)),
+        ("stalled_evictions", Json::num(m.stalled_evictions as f64)),
+        ("fenced_discards", Json::num(m.fenced_discards as f64)),
+        ("restarts", Json::num(m.restarts as f64)),
+        ("recovery_max_ms", Json::num(m.restart_max_seconds * 1e3)),
+        ("pool_restored", Json::Bool(server.live_workers() == server.workers())),
+        ("lost", Json::num(lost as f64)),
+        ("classes", Json::arr(classes)),
+    ]);
+    (row, server)
+}
+
+/// Scenario 5: the seeded long-soak. Wall-clock rounds, each a fresh
+/// supervised pool under a deterministic mixed campaign of panics and
+/// *evictable* stalls (every planned stall is 5–9x the 40 ms budget),
+/// driven closed-loop with varying volume/threads per round. Every
+/// round asserts zero-lost per class and a full-strength pool before
+/// the next begins; totals accumulate into one report row whose
+/// accounting must close exactly.
+fn scenario_soak(soak_seconds: u64) -> Json {
+    let workers = 3usize;
+    let seed = 0x50AC_5EED_u64;
+    let wall_deadline = Instant::now() + Duration::from_secs(soak_seconds);
+    let started = Instant::now();
+    let mut rounds = 0u64;
+    // Per-class accumulators in Priority::ALL order.
+    let mut offered = [0u64; PRIORITY_COUNT];
+    let mut completed = [0u64; PRIORITY_COUNT];
+    let mut rejected = [0u64; PRIORITY_COUNT];
+    let mut failed = [0u64; PRIORITY_COUNT];
+    let mut expired = [0u64; PRIORITY_COUNT];
+    let (mut evictions, mut discards, mut restarts) = (0u64, 0u64, 0u64);
+    let mut recovery_max_ms = 0.0f64;
+
+    while Instant::now() < wall_deadline || rounds == 0 {
+        let round_seed = seed ^ rounds.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let requests = 64 + ((round_seed >> 4) % 4) as usize * 32; // 64..160
+        let threads = 4 + ((round_seed >> 16) % 3) as usize; // 4..6
+        let fault_count = 2 + ((round_seed >> 24) % 3) as usize; // 2..4
+        let mut plan = FaultPlan::random_with_stalls(
+            round_seed,
+            workers,
+            fault_count,
+            (requests / 2) as u64,
+            (200, 350),
+        );
+        // Guarantee at least one evictable stall per round, so the
+        // watchdog is exercised even when the random draw is all
+        // panics.
+        plan.faults.push(Fault::Stall { worker: 0, request: 2, millis: 250 });
+
+        let faulty = FaultInjector::new(Box::new(bench_runner()), plan);
+        let mut server = ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig {
+                workers,
+                stall_budget: STALL_BUDGET,
+                ..PoolConfig::default()
+            })
+            .start()
+            .expect("start soak round pool");
+
+        let report =
+            run_closed_loop_mixed(&server.handle(), requests, threads, round_seed, None, 0.3);
+        let m = server.metrics();
+
+        // Round contracts: accounting closes per class (class_rows
+        // asserts lost == 0), the pool ends at full strength, and the
+        // round made real progress.
+        let (_, lost) = class_rows("soak", &report, &m);
+        assert_eq!(lost, 0);
+        assert_eq!(
+            server.live_workers(),
+            server.workers(),
+            "soak round {rounds}: pool must end at full strength"
+        );
+        assert!(
+            report.completed() > 0,
+            "soak round {rounds}: no request completed"
+        );
+        for (i, &p) in Priority::ALL.iter().enumerate() {
+            let r = report.class(p);
+            offered[i] += r.offered() as u64;
+            completed[i] += r.completed as u64;
+            rejected[i] += r.rejected as u64;
+            failed[i] += r.failed as u64;
+            expired[i] += r.expired as u64;
+        }
+        evictions += m.stalled_evictions;
+        discards += m.fenced_discards;
+        restarts += m.restarts;
+        recovery_max_ms = recovery_max_ms.max(m.restart_max_seconds * 1e3);
+        server.shutdown();
+        rounds += 1;
+    }
+
+    assert!(
+        evictions >= 1,
+        "every soak round plans an evictable stall; zero evictions over {rounds} \
+         round(s) means the watchdog never ran"
+    );
+    assert!(restarts >= evictions, "each eviction must respawn a replacement");
+
+    let classes: Vec<Json> = Priority::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            Json::obj(vec![
+                ("priority", Json::str(p.as_str())),
+                ("offered", Json::num(offered[i] as f64)),
+                ("completed", Json::num(completed[i] as f64)),
+                ("rejected", Json::num(rejected[i] as f64)),
+                ("failed", Json::num(failed[i] as f64)),
+                ("expired", Json::num(expired[i] as f64)),
+                ("lost", Json::num(0.0)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::str("soak")),
+        ("workers", Json::num(workers as f64)),
+        ("requests", Json::num(offered.iter().sum::<u64>() as f64)),
+        ("soak_seconds", Json::num(started.elapsed().as_secs_f64())),
+        ("rounds", Json::num(rounds as f64)),
+        ("stall_budget_ms", Json::num(STALL_BUDGET.as_secs_f64() * 1e3)),
+        ("stalled_evictions", Json::num(evictions as f64)),
+        ("fenced_discards", Json::num(discards as f64)),
+        ("restarts", Json::num(restarts as f64)),
+        ("recovery_max_ms", Json::num(recovery_max_ms)),
+        ("pool_restored", Json::Bool(true)),
+        ("lost", Json::num(0.0)),
+        ("classes", Json::arr(classes)),
+    ])
+}
+
 /// Post-recovery numerics: the recovered 3-worker pool must answer a
 /// seeded probe set bit-identically to a fresh, never-faulted
 /// single-worker pool. Probes go one at a time so both pools serve at
@@ -339,19 +619,35 @@ fn main() {
     println!("chaos_serving: scenario overload-brownout (1 worker, 4-slot queue)");
     let brownout_row = scenario_brownout(requests);
 
+    println!("chaos_serving: scenario stall-eviction (400 ms hang vs 40 ms budget)");
+    let (eviction_row, mut evicted_pool) = scenario_stall_eviction(requests);
+    println!("chaos_serving: probing evicted-and-recovered pool for bit-identity");
+    let eviction_bit_identical = assert_bit_identical(&evicted_pool);
+    evicted_pool.shutdown();
+
+    let soak_seconds = env_usize("CUCONV_BENCH_SOAK_SECONDS", 5).max(1) as u64;
+    println!("chaos_serving: scenario soak ({soak_seconds}s of seeded panic+stall rounds)");
+    let soak_row = scenario_soak(soak_seconds);
+
     let report = Json::obj(vec![
         ("bench", Json::str("chaos_serving")),
         ("backend", Json::str("cpuref")),
         ("requests", Json::num(requests as f64)),
-        ("post_recovery_bit_identical", Json::Bool(bit_identical)),
+        ("post_recovery_bit_identical", Json::Bool(bit_identical && eviction_bit_identical)),
         ("pool_restored", Json::Bool(pool_restored)),
-        ("scenarios", Json::arr(vec![panic_row, stall_row, brownout_row])),
+        (
+            "scenarios",
+            Json::arr(vec![panic_row, stall_row, brownout_row, eviction_row, soak_row]),
+        ),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chaos.json");
     match std::fs::write(path, report.to_string_pretty() + "\n") {
         Ok(()) => println!("chaos_serving: wrote {path}"),
         Err(e) => panic!("chaos_serving: failed to write {path}: {e}"),
     }
-    assert!(bit_identical && pool_restored);
-    println!("chaos_serving: chaos contract holds (zero lost, pool restored, bits identical)");
+    assert!(bit_identical && eviction_bit_identical && pool_restored);
+    println!(
+        "chaos_serving: chaos contract holds (zero lost, zero double-served, \
+         pool restored, bits identical)"
+    );
 }

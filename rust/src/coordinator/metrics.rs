@@ -71,6 +71,8 @@ struct Inner {
     restarts: u64,
     restart_seconds_sum: f64,
     restart_seconds_max: f64,
+    stalled_evictions: u64,
+    fenced_discards: u64,
 }
 
 impl Inner {
@@ -100,6 +102,15 @@ pub struct MetricsSnapshot {
     /// Slowest single recovery (panic caught → replacement runner
     /// serving), seconds. Zero when `restarts` is zero.
     pub restart_max_seconds: f64,
+    /// Shards the watchdog fenced and evicted because their in-flight
+    /// batch exceeded the stall budget. Each eviction also records a
+    /// restart when a replacement could be spawned.
+    pub stalled_evictions: u64,
+    /// Late completions discarded at the fence: requests an evicted
+    /// incarnation finished computing after its generation was already
+    /// superseded. They were answered by their requeued copies — the
+    /// discard is what keeps no-double-serve true under eviction.
+    pub fenced_discards: u64,
     /// Four-way counts split by [`Priority`], in [`Priority::ALL`]
     /// order. Sums to the aggregate counters above.
     pub per_class: Vec<ClassSnapshot>,
@@ -137,6 +148,8 @@ impl Metrics {
                 restarts: 0,
                 restart_seconds_sum: 0.0,
                 restart_seconds_max: 0.0,
+                stalled_evictions: 0,
+                fenced_discards: 0,
             }),
         }
     }
@@ -221,6 +234,18 @@ impl Metrics {
         }
     }
 
+    /// Record one watchdog eviction: a shard whose in-flight batch
+    /// exceeded the stall budget was fenced and its work requeued.
+    pub fn record_stalled_eviction(&self) {
+        self.inner.lock().unwrap().stalled_evictions += 1;
+    }
+
+    /// Record `n` late completions discarded because their worker's
+    /// generation was fenced while the batch was in flight.
+    pub fn record_fenced_discards(&self, n: u64) {
+        self.inner.lock().unwrap().fenced_discards += n;
+    }
+
     /// Fold another sink's counts into this one: histograms merge
     /// bucket-wise, counters add, and the uptime origin becomes the
     /// earlier of the two. This is how a worker pool's aggregate view
@@ -249,6 +274,8 @@ impl Metrics {
         if o.restart_seconds_max > m.restart_seconds_max {
             m.restart_seconds_max = o.restart_seconds_max;
         }
+        m.stalled_evictions += o.stalled_evictions;
+        m.fenced_discards += o.fenced_discards;
         if o.started < m.started {
             m.started = o.started;
         }
@@ -267,6 +294,8 @@ impl Metrics {
             failed: m.class_sum(|c| c.failed),
             restarts: m.restarts,
             restart_max_seconds: m.restart_seconds_max,
+            stalled_evictions: m.stalled_evictions,
+            fenced_discards: m.fenced_discards,
             per_class: Priority::ALL
                 .iter()
                 .map(|&p| {
@@ -435,15 +464,23 @@ mod tests {
         a.record_restart(0.002);
         b.record_restart(0.010);
         b.record_restart(0.001);
+        a.record_stalled_eviction();
+        b.record_stalled_eviction();
+        a.record_fenced_discards(3);
+        b.record_fenced_discards(1);
         let agg = Metrics::new();
         agg.absorb(&a);
         agg.absorb(&b);
         let s = agg.snapshot();
         assert_eq!(s.restarts, 3);
         assert!((s.restart_max_seconds - 0.010).abs() < 1e-12);
+        assert_eq!(s.stalled_evictions, 2);
+        assert_eq!(s.fenced_discards, 4);
         let fresh = Metrics::new().snapshot();
         assert_eq!(fresh.restarts, 0);
         assert_eq!(fresh.restart_max_seconds, 0.0);
+        assert_eq!(fresh.stalled_evictions, 0);
+        assert_eq!(fresh.fenced_discards, 0);
         assert_eq!(fresh.failed, 0);
         assert_eq!(fresh.per_class.len(), PRIORITY_COUNT);
     }

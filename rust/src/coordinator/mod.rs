@@ -30,7 +30,17 @@
 //!   so N workers serve concurrently with outputs bit-identical to
 //!   one. Each shard runs under a panic supervisor that requeues its
 //!   unanswered requests (once) and respawns the worker from a
-//!   retained prototype.
+//!   retained prototype. A watchdog thread covers the silent half of
+//!   supervision: every worker publishes a heartbeat (batch start
+//!   time) into shared state, and a shard whose batch exceeds the
+//!   stall budget is fenced with a generation token, its unanswered
+//!   window requeued (once), and a replacement spawned — a late
+//!   completion from the fenced incarnation is discarded and counted
+//!   (`fenced_discards`) so no request is ever double-served.
+//!   `Server::shutdown` is a graceful, deadline-bounded drain: stop
+//!   admission, finish queued work up to the drain budget, then
+//!   hard-stop with bounded joins (a hung worker is counted
+//!   abandoned, never waited on unboundedly).
 //! * [`supervise`] — deterministic fault injection: a seeded
 //!   [`FaultPlan`] carried by a [`FaultInjector`] runner wrapper makes
 //!   worker N panic or stall on request K, so the supervision layer is
@@ -65,7 +75,8 @@ pub use request::{
 pub use runner::{BatchOutput, BatchRunner, ConvBackendRunner, NetForwardRunner};
 pub use server::{
     PoolConfig, Server, ServerBuilder, ServerConfig, ServerHandle,
-    ShardSelection, SubmitError, DEFAULT_BROWNOUT,
+    ShardSelection, SubmitError, DEFAULT_BROWNOUT, DEFAULT_DRAIN_BUDGET,
+    DEFAULT_STALL_BUDGET,
 };
 pub use supervise::{Fault, FaultInjector, FaultPlan};
 

@@ -46,6 +46,29 @@
 //!   replicating the retained prototype (cheap: plans and weights are
 //!   `Arc`-shared) and records the restart in [`Metrics`]. A panic
 //!   never silently loses a request and never takes down the pool.
+//! * **Watchdog and fencing** — a panic is loud; a *hang* is silent.
+//!   Every supervised shard publishes a heartbeat (a batch epoch plus
+//!   the start time of the chunk currently inside
+//!   [`BatchRunner::run`]) into shared state, and a watchdog thread
+//!   sweeps it: a shard whose chunk has exceeded
+//!   [`PoolConfig::stall_budget`] is **fenced** with a generation
+//!   token, its unanswered window and queued backlog are redistributed
+//!   under the same requeue-once rule, and a replacement worker is
+//!   spawned from the respawn prototype — the stall path converges on
+//!   the panic path's eviction machinery. The fence is what keeps
+//!   no-double-serve true under eviction: when the hung runner finally
+//!   returns, the old incarnation sees its generation is stale and
+//!   discards the late completion (counted as `fenced_discards`)
+//!   instead of answering requests another worker now owns.
+//! * **Graceful drain** — [`Server::shutdown`] is a deadline-bounded
+//!   drain, not an axe: admission closes first (new submissions get
+//!   [`SubmitError::Shutdown`]; `/healthz` reports `draining`), queued
+//!   and in-flight work finishes up to [`PoolConfig::drain_budget`]
+//!   (the watchdog keeps evicting stalls, so a hung worker cannot
+//!   wedge the drain), then workers are stopped and joined with a
+//!   bound — a thread that will not finish is counted
+//!   ([`Server::abandoned_joins`]) and detached, never waited on
+//!   forever.
 //! * **Metrics** — each worker records into its own sink; the
 //!   aggregate view ([`ServerHandle::metrics`]) merges the per-worker
 //!   histograms and folds in the dispatcher's per-class rejected and
@@ -63,7 +86,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
@@ -88,6 +111,18 @@ pub enum ShardSelection {
 /// aggregate in-flight reaches 75% of total queue capacity.
 pub const DEFAULT_BROWNOUT: f64 = 0.75;
 
+/// Default watchdog stall budget: a chunk that has been inside
+/// [`BatchRunner::run`] longer than this is treated as hung and its
+/// shard is evicted. Generous by design — a healthy batch on any
+/// supported shape finishes orders of magnitude faster, so only a
+/// genuinely wedged runner trips it.
+pub const DEFAULT_STALL_BUDGET: Duration = Duration::from_secs(5);
+
+/// Default graceful-drain budget for [`Server::shutdown`]: how long the
+/// pool may keep finishing queued + in-flight work after admission
+/// closes, before the hard stop.
+pub const DEFAULT_DRAIN_BUDGET: Duration = Duration::from_secs(5);
+
 /// Worker-pool shape: how many shards, how they are selected, and how
 /// the pool degrades. The per-shard queue depth comes from
 /// [`BatchPolicy::queue_capacity`].
@@ -111,6 +146,18 @@ pub struct PoolConfig {
     /// shedding — all classes then share the blanket
     /// [`SubmitError::AllQueuesFull`] backpressure.
     pub brownout: Option<f64>,
+    /// Watchdog stall budget: a supervised shard whose in-flight chunk
+    /// has been inside [`BatchRunner::run`] longer than this is fenced,
+    /// its unanswered requests requeued (requeue-once), and a
+    /// replacement spawned from the respawn prototype. The watchdog is
+    /// armed only when `supervise` is set and a respawn prototype
+    /// exists (a degraded single-worker pool on a non-replicable
+    /// runner has nowhere to requeue and nothing to respawn from).
+    pub stall_budget: Duration,
+    /// Graceful-drain budget for [`Server::shutdown`]: after admission
+    /// closes, queued + in-flight work may keep completing for up to
+    /// this long before the hard stop.
+    pub drain_budget: Duration,
 }
 
 impl Default for PoolConfig {
@@ -120,6 +167,8 @@ impl Default for PoolConfig {
             selection: ShardSelection::LeastLoaded,
             supervise: true,
             brownout: Some(DEFAULT_BROWNOUT),
+            stall_budget: DEFAULT_STALL_BUDGET,
+            drain_budget: DEFAULT_DRAIN_BUDGET,
         }
     }
 }
@@ -150,7 +199,10 @@ pub enum SubmitError {
     /// `rejected` in the Batch class. Interactive submissions are
     /// never shed this way.
     Shed { depth: usize, capacity: usize },
-    /// The pool has shut down (every shard queue is disconnected).
+    /// The pool is draining ([`Server::shutdown`] has closed admission)
+    /// or has shut down (every shard queue is disconnected); counted as
+    /// `rejected` in the request's class when refused at the drain
+    /// gate.
     Shutdown,
 }
 
@@ -404,14 +456,115 @@ struct Shard {
     inflight: Arc<AtomicUsize>,
 }
 
-/// The running server. Dropping it shuts the worker pool down.
+/// Per-shard state shared between the worker incarnation, its
+/// supervisor, and the watchdog: the heartbeat the worker publishes,
+/// the fence token that arbitrates eviction, and the window/queue
+/// handles an evictor needs to pull unanswered requests back out.
+struct WorkerShared {
+    /// The shard's receive half. The worker locks it to receive; an
+    /// evictor locks it to drain the backlog. `None` once the shard is
+    /// permanently dead — dropping the receiver is what makes the
+    /// dispatcher see the shard disconnected and sweep past it.
+    rx: Mutex<Option<Receiver<QueuedRequest>>>,
+    /// The in-progress window. A request leaves it only by being
+    /// answered (by the live incarnation, under this lock and a fence
+    /// check) or by eviction (by whoever wins the fence) — never both,
+    /// which is the no-double-serve property.
+    window: Mutex<Vec<QueuedRequest>>,
+    /// Batches started on this shard — a liveness heartbeat.
+    epoch: AtomicU64,
+    /// Microseconds since `origin`, plus one, when the current chunk
+    /// entered [`BatchRunner::run`]; zero while idle. The watchdog
+    /// measures the stall budget against this.
+    busy_since: AtomicU64,
+    /// Fence token. Each worker incarnation captures the value it was
+    /// spawned with; whoever CASes it forward (watchdog on a stall,
+    /// supervisor on a panic) owns that incarnation's eviction, and a
+    /// stale incarnation discards whatever its runner returns.
+    generation: AtomicU64,
+    /// Time base for `busy_since`.
+    origin: Instant,
+}
+
+enum RecvOutcome {
+    Got(QueuedRequest),
+    Timeout,
+    Disconnected,
+}
+
+/// Why a worker incarnation's serve loop returned.
+enum LoopExit {
+    /// Shutdown flag observed with an empty window.
+    Shutdown,
+    /// The dispatcher side of the queue is gone.
+    Disconnected,
+    /// This incarnation was fenced — another thread owns its requests
+    /// and its replacement; exit without touching anything.
+    Fenced,
+}
+
+impl WorkerShared {
+    fn now_micros(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64 + 1
+    }
+
+    fn fenced(&self, my_gen: u64) -> bool {
+        self.generation.load(Ordering::SeqCst) != my_gen
+    }
+
+    /// Advance the fence from `from_gen`. Returns false when someone
+    /// already evicted that incarnation. Callers hold the window lock,
+    /// so fence-then-drain is atomic against the incarnation's own
+    /// fence-check-then-answer.
+    fn fence(&self, from_gen: u64) -> bool {
+        self.generation
+            .compare_exchange(from_gen, from_gen + 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+
+    /// Receive with a timeout through the shared handle.
+    fn recv(&self, timeout: Duration) -> RecvOutcome {
+        let guard = self.rx.lock().unwrap();
+        let Some(rx) = guard.as_ref() else { return RecvOutcome::Disconnected };
+        match rx.recv_timeout(timeout) {
+            Ok(q) => RecvOutcome::Got(q),
+            Err(RecvTimeoutError::Timeout) => RecvOutcome::Timeout,
+            Err(RecvTimeoutError::Disconnected) => RecvOutcome::Disconnected,
+        }
+    }
+
+    /// Drain the queued backlog into `pending` (evictors only).
+    fn drain_rx(&self, pending: &mut Vec<QueuedRequest>) {
+        if let Some(rx) = self.rx.lock().unwrap().as_ref() {
+            while let Ok(q) = rx.try_recv() {
+                pending.push(q);
+            }
+        }
+    }
+}
+
+/// The running server. Dropping it shuts the worker pool down
+/// (gracefully — see [`Server::shutdown`]).
 pub struct Server {
     handle: ServerHandle,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Replacement workers the watchdog spawned after evictions.
+    extra_workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    watchdog: Option<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    drain_budget: Duration,
+    /// Bound on how long shutdown polls an unfinished thread before
+    /// abandoning its join (covers a healthy worker's recv timeout).
+    join_grace: Duration,
+    /// Guards against draining twice (explicit shutdown + Drop).
+    drained: bool,
     /// Worker threads whose join reported a panic (only possible
     /// outside supervision — a supervised shard catches its panics).
     panicked_joins: u64,
+    /// Threads still running when the shutdown deadline passed: their
+    /// joins were counted and abandoned, never waited on unboundedly.
+    abandoned_joins: u64,
 }
 
 /// Cheap cloneable client handle; doubles as the dispatcher (shard
@@ -435,6 +588,10 @@ pub struct ServerHandle {
     /// Shards currently able to serve (decremented when a worker dies
     /// without a supervisor, or a supervisor cannot respawn).
     live: Arc<AtomicUsize>,
+    /// Set by [`Server::shutdown`] at the start of the graceful drain:
+    /// new submissions are refused with [`SubmitError::Shutdown`] while
+    /// queued and in-flight work keeps completing.
+    draining: Arc<AtomicBool>,
     brownout: Option<f64>,
     queue_depth: usize,
     image_elems: usize,
@@ -504,13 +661,21 @@ impl Server {
         };
         let respawn = Arc::new(respawn_proto);
 
-        // Channels and shard records first, threads second: supervisors
-        // need the complete shard table to redistribute a panicked
-        // shard's requests across the pool.
+        ensure!(
+            pool.stall_budget > Duration::ZERO,
+            "stall budget must be positive"
+        );
+
+        // Channels, shard records, and per-shard shared state first,
+        // threads second: supervisors need the complete shard table to
+        // redistribute an evicted shard's requests across the pool, and
+        // the watchdog needs every shard's heartbeat.
         let shutdown = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let live = Arc::new(AtomicUsize::new(pool.workers));
+        let origin = Instant::now();
         let mut shard_vec = Vec::with_capacity(pool.workers);
-        let mut rxs = Vec::with_capacity(pool.workers);
+        let mut shared_vec = Vec::with_capacity(pool.workers);
         for _ in 0..pool.workers {
             let (tx, rx) = mpsc::sync_channel::<QueuedRequest>(policy.queue_capacity);
             shard_vec.push(Shard {
@@ -518,20 +683,29 @@ impl Server {
                 metrics: Arc::new(Metrics::new()),
                 inflight: Arc::new(AtomicUsize::new(0)),
             });
-            rxs.push(rx);
+            shared_vec.push(Arc::new(WorkerShared {
+                rx: Mutex::new(Some(rx)),
+                window: Mutex::new(Vec::new()),
+                epoch: AtomicU64::new(0),
+                busy_since: AtomicU64::new(0),
+                generation: AtomicU64::new(0),
+                origin,
+            }));
         }
         let shards = Arc::new(shard_vec);
+        let shared = Arc::new(shared_vec);
 
         let mut workers = Vec::with_capacity(pool.workers);
-        for (i, (rx, r)) in rxs.into_iter().zip(runners).enumerate() {
+        for (i, r) in runners.into_iter().enumerate() {
             let builder = std::thread::Builder::new().name(format!("cuconv-worker-{i}"));
+            let sh = shared[i].clone();
             let worker = if pool.supervise {
                 let shards = shards.clone();
                 let shutdown = shutdown.clone();
                 let live = live.clone();
                 let respawn = respawn.clone();
                 builder.spawn(move || {
-                    supervise_shard(i, rx, r, classes, policy, shards, shutdown, live, respawn)
+                    supervise_shard(i, sh, r, 0, classes, policy, shards, shutdown, live, respawn)
                 })?
             } else {
                 let metrics = shards[i].metrics.clone();
@@ -539,11 +713,36 @@ impl Server {
                 let shutdown = shutdown.clone();
                 let live = live.clone();
                 builder.spawn(move || {
-                    unsupervised_shard(i, rx, r, classes, policy, metrics, inflight, shutdown, live)
+                    unsupervised_shard(i, sh, r, classes, policy, metrics, inflight, shutdown, live)
                 })?
             };
             workers.push(worker);
         }
+
+        // The watchdog: armed only for a supervised pool that can
+        // actually respawn — eviction without a replacement source
+        // would trade a hung shard for a dead one.
+        let extra_workers = Arc::new(Mutex::new(Vec::new()));
+        let watchdog = if pool.supervise && respawn.is_some() {
+            let ctx = WatchdogCtx {
+                shards: shards.clone(),
+                shared,
+                respawn,
+                shutdown: shutdown.clone(),
+                live: live.clone(),
+                extra_workers: extra_workers.clone(),
+                classes,
+                policy,
+                stall_budget: pool.stall_budget,
+            };
+            Some(
+                std::thread::Builder::new()
+                    .name("cuconv-watchdog".to_string())
+                    .spawn(move || watchdog_loop(ctx))?,
+            )
+        } else {
+            None
+        };
 
         let handle = ServerHandle {
             shards,
@@ -553,12 +752,25 @@ impl Server {
             expired: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
             next_id: Arc::new(AtomicU64::new(1)),
             live,
+            draining: draining.clone(),
             brownout: pool.brownout,
             queue_depth: policy.queue_capacity,
             image_elems,
             classes,
         };
-        Ok(Server { handle, workers, shutdown, panicked_joins: 0 })
+        Ok(Server {
+            handle,
+            workers,
+            extra_workers,
+            watchdog,
+            shutdown,
+            draining,
+            drain_budget: pool.drain_budget,
+            join_grace: Duration::from_secs(1).max(policy.max_delay * 2),
+            drained: false,
+            panicked_joins: 0,
+            abandoned_joins: 0,
+        })
     }
 
     /// Start serving `config.model` from the artifact manifest (AOT
@@ -599,20 +811,66 @@ impl Server {
         self.handle.live_workers()
     }
 
-    /// Stop every worker (pending queues are drained with errors). A
-    /// join that reports a panicked thread is counted and logged —
-    /// never silently swallowed (see [`Server::panicked_joins`]).
+    /// Graceful, deadline-bounded drain. Phase 1: close admission (new
+    /// submissions get [`SubmitError::Shutdown`], `/healthz` reports
+    /// `draining`) and let the pool finish queued + in-flight work for
+    /// up to [`PoolConfig::drain_budget`] — the watchdog keeps running,
+    /// so a stalled worker is evicted and its work finished elsewhere
+    /// instead of wedging the drain. Phase 2: hard stop — workers exit
+    /// once their window is empty and are joined with a bound; a
+    /// thread that will not finish (a runner hung past every budget)
+    /// has its join counted ([`Server::abandoned_joins`]) and
+    /// abandoned, never waited on unboundedly. Panicked joins are
+    /// counted and logged — never silently swallowed.
     pub fn shutdown(&mut self) {
+        if self.drained {
+            return;
+        }
+        self.drained = true;
+        self.draining.store(true, Ordering::SeqCst);
+        let drain_deadline = Instant::now() + self.drain_budget;
+        while self.handle.aggregate_inflight() > 0 && Instant::now() < drain_deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
         self.shutdown.store(true, Ordering::SeqCst);
-        for w in self.workers.drain(..) {
-            if w.join().is_err() {
-                self.panicked_joins += 1;
-                eprintln!(
-                    "cuconv: worker thread terminated by panic \
-                     ({} panicked join(s) at shutdown)",
-                    self.panicked_joins
-                );
-            }
+        // Join the watchdog first (it exits within one sweep of the
+        // flag): after this, no new replacement workers can appear.
+        if let Some(w) = self.watchdog.take() {
+            let deadline = Instant::now() + self.join_grace;
+            self.join_bounded(w, deadline, "watchdog");
+        }
+        let mut pending: Vec<std::thread::JoinHandle<()>> = self.workers.drain(..).collect();
+        pending.extend(self.extra_workers.lock().unwrap().drain(..));
+        let join_deadline = Instant::now() + self.join_grace;
+        for w in pending {
+            self.join_bounded(w, join_deadline, "worker");
+        }
+    }
+
+    /// Join `w`, polling until `deadline`; past it the join is counted
+    /// as abandoned and the handle dropped (the thread detaches — a
+    /// hung runner cannot be cancelled from outside, and the fence
+    /// already discards whatever it eventually returns).
+    fn join_bounded(&mut self, w: std::thread::JoinHandle<()>, deadline: Instant, what: &str) {
+        while !w.is_finished() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if !w.is_finished() {
+            self.abandoned_joins += 1;
+            eprintln!(
+                "cuconv: {what} thread still running at the shutdown deadline; \
+                 abandoning its join ({} abandoned)",
+                self.abandoned_joins
+            );
+            return;
+        }
+        if w.join().is_err() {
+            self.panicked_joins += 1;
+            eprintln!(
+                "cuconv: {what} thread terminated by panic \
+                 ({} panicked join(s) at shutdown)",
+                self.panicked_joins
+            );
         }
     }
 
@@ -621,6 +879,13 @@ impl Server {
     /// catches its panics and exits cleanly).
     pub fn panicked_joins(&self) -> u64 {
         self.panicked_joins
+    }
+
+    /// Threads still running when the shutdown join deadline passed:
+    /// counted and detached instead of blocking shutdown forever.
+    /// Nonzero means a runner was hung past every budget.
+    pub fn abandoned_joins(&self) -> u64 {
+        self.abandoned_joins
     }
 }
 
@@ -657,6 +922,13 @@ impl ServerHandle {
         deadline: Option<Instant>,
         priority: Priority,
     ) -> Result<Receiver<Result<InferResponse, ServeError>>, SubmitError> {
+        // Drain gate: once shutdown begins, nothing new is admitted —
+        // counted `rejected` in its class so the four-way accounting
+        // stays closed for clients racing a drain.
+        if self.draining.load(Ordering::SeqCst) {
+            self.rejected[priority.index()].fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Shutdown);
+        }
         if pixels.len() != self.image_elems {
             return Err(SubmitError::BadInput(format!(
                 "image has {} elems, expected {}",
@@ -805,6 +1077,13 @@ impl ServerHandle {
         self.live.load(Ordering::SeqCst)
     }
 
+    /// Whether the pool is draining: [`Server::shutdown`] has closed
+    /// admission but queued + in-flight work is still completing. The
+    /// health endpoint reports this as its own (non-error) state.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
     /// Sum of every shard's in-flight (queued + executing) count.
     pub fn aggregate_inflight(&self) -> usize {
         self.shards.iter().map(|s| s.inflight.load(Ordering::Relaxed)).sum()
@@ -895,17 +1174,55 @@ fn redistribute(window: &mut Vec<QueuedRequest>, me: usize, shards: &[Shard]) {
     }
 }
 
+/// Release a permanently dead shard: drop the live count, fail any
+/// stragglers still queued, then drop the receiver so the dispatcher
+/// sees this shard disconnected and sweeps past it.
+fn release_shard(
+    me: usize,
+    shared: &WorkerShared,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+    live: &AtomicUsize,
+) {
+    live.fetch_sub(1, Ordering::SeqCst);
+    eprintln!("cuconv-worker-{me}: no replacement runner; shard is dead (pool degraded)");
+    let rx = shared.rx.lock().unwrap().take();
+    if let Some(rx) = rx {
+        while let Ok(q) = rx.try_recv() {
+            fail_pending(q, "worker dead (respawn unavailable)", metrics, inflight);
+        }
+    }
+}
+
+/// Replicate a replacement runner from the shared prototype.
+fn replicate_replacement(
+    me: usize,
+    respawn: &Arc<Option<Mutex<Box<dyn BatchRunner>>>>,
+) -> Option<Box<dyn BatchRunner>> {
+    respawn.as_ref().as_ref().and_then(|proto| {
+        proto
+            .lock()
+            .unwrap()
+            .replicate()
+            .map_err(|e| eprintln!("cuconv-worker-{me}: respawn failed: {e:#}"))
+            .ok()
+    })
+}
+
 /// Supervisor body for shard `me`: run the serve loop under
-/// `catch_unwind`; on panic, pull every unanswered request this shard
-/// owns (the surviving window plus the queued backlog) back out,
-/// redistribute it (requeue-once), respawn the worker from the
-/// prototype, and record the restart. Returns when the serve loop exits
-/// cleanly (shutdown) or the shard dies unrecoverably.
+/// `catch_unwind`; on panic, win the fence (or cede to the watchdog if
+/// it evicted this incarnation first), pull every unanswered request
+/// this shard owns (the surviving window plus the queued backlog) back
+/// out, redistribute it (requeue-once), respawn the worker from the
+/// prototype, and record the restart. Returns when the serve loop
+/// exits cleanly (shutdown), the incarnation is fenced (the watchdog
+/// owns recovery), or the shard dies unrecoverably.
 #[allow(clippy::too_many_arguments)]
 fn supervise_shard(
     me: usize,
-    rx: Receiver<QueuedRequest>,
+    shared: Arc<WorkerShared>,
     mut runner: Box<dyn BatchRunner>,
+    start_gen: u64,
     classes: usize,
     policy: BatchPolicy,
     shards: Arc<Vec<Shard>>,
@@ -915,16 +1232,13 @@ fn supervise_shard(
 ) {
     let metrics = shards[me].metrics.clone();
     let inflight = shards[me].inflight.clone();
-    // The window lives with the supervisor, outside the unwind
-    // boundary: a request leaves it only by being answered, so a panic
-    // mid-execution leaves every unanswered request recoverable here.
-    let mut window: Vec<QueuedRequest> = Vec::new();
+    let mut my_gen = start_gen;
     loop {
         let result = catch_unwind(AssertUnwindSafe(|| {
             worker_loop(
-                &rx,
+                &shared,
                 runner.as_mut(),
-                &mut window,
+                my_gen,
                 classes,
                 policy,
                 &metrics,
@@ -933,48 +1247,144 @@ fn supervise_shard(
             )
         }));
         let panic = match result {
-            Ok(()) => return,
+            // Fenced: the watchdog already requeued this incarnation's
+            // requests and spawned its replacement — exit silently.
+            Ok(LoopExit::Fenced) => return,
+            Ok(LoopExit::Shutdown) | Ok(LoopExit::Disconnected) => return,
             Err(p) => p,
         };
+        // Win the fence under the window lock — the same arbitration
+        // the watchdog uses, so panic and stall recovery cannot both
+        // claim one incarnation's requests.
+        let mut pending: Vec<QueuedRequest> = {
+            let mut w = shared.window.lock().unwrap();
+            if !shared.fence(my_gen) {
+                return; // the watchdog evicted us mid-panic
+            }
+            shared.busy_since.store(0, Ordering::SeqCst);
+            w.drain(..).collect()
+        };
+        my_gen += 1;
         let recovery_started = Instant::now();
-        while let Ok(q) = rx.try_recv() {
-            window.push(q);
-        }
+        shared.drain_rx(&mut pending);
         eprintln!(
             "cuconv-worker-{me}: panicked ({}); redistributing {} unanswered \
              request(s) and respawning",
             panic_message(&panic),
-            window.len()
+            pending.len()
         );
-        redistribute(&mut window, me, &shards);
-        let replacement = respawn.as_ref().as_ref().and_then(|proto| {
-            proto
-                .lock()
-                .unwrap()
-                .replicate()
-                .map_err(|e| eprintln!("cuconv-worker-{me}: respawn failed: {e:#}"))
-                .ok()
-        });
-        match replacement {
+        redistribute(&mut pending, me, &shards);
+        match replicate_replacement(me, &respawn) {
             Some(r) => {
                 runner = r;
                 metrics.record_restart(recovery_started.elapsed().as_secs_f64());
             }
             None => {
-                // Unrecoverable: release the shard. Fail any stragglers
-                // that raced into the queue, then drop the receiver so
-                // the dispatcher sees this shard disconnected and
-                // sweeps past it.
-                live.fetch_sub(1, Ordering::SeqCst);
-                eprintln!(
-                    "cuconv-worker-{me}: no replacement runner; shard is dead \
-                     (pool degraded)"
-                );
-                while let Ok(q) = rx.try_recv() {
-                    fail_pending(q, "worker dead (respawn unavailable)", &metrics, &inflight);
-                }
+                release_shard(me, &shared, &metrics, &inflight, &live);
                 return;
             }
+        }
+    }
+}
+
+/// Watchdog context — everything needed to detect a stalled shard,
+/// evict it, and spawn its replacement.
+struct WatchdogCtx {
+    shards: Arc<Vec<Shard>>,
+    shared: Arc<Vec<Arc<WorkerShared>>>,
+    respawn: Arc<Option<Mutex<Box<dyn BatchRunner>>>>,
+    shutdown: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    extra_workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    classes: usize,
+    policy: BatchPolicy,
+    stall_budget: Duration,
+}
+
+/// The watchdog: sweep every shard's heartbeat a few times per stall
+/// budget; a shard whose in-flight chunk has exceeded the budget is
+/// fenced and evicted. Runs until the hard-stop flag — including
+/// through a graceful drain, where evicting a stall is precisely what
+/// lets the drain finish inside its own budget.
+fn watchdog_loop(ctx: WatchdogCtx) {
+    let sweep = (ctx.stall_budget / 4)
+        .clamp(Duration::from_millis(1), Duration::from_millis(25));
+    let budget_micros = ctx.stall_budget.as_micros() as u64;
+    while !ctx.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(sweep);
+        for me in 0..ctx.shared.len() {
+            let busy = ctx.shared[me].busy_since.load(Ordering::SeqCst);
+            if busy == 0 {
+                continue;
+            }
+            let elapsed = ctx.shared[me].now_micros().saturating_sub(busy);
+            if elapsed > budget_micros {
+                evict_stalled(&ctx, me, elapsed);
+            }
+        }
+    }
+}
+
+/// Evict the stalled incarnation of shard `me`: fence it, requeue its
+/// unanswered window + backlog (requeue-once), count the eviction, and
+/// spawn a replacement worker from the prototype. The late completion
+/// the hung runner eventually produces is discarded by the fence check
+/// inside `worker_loop` — counted, never double-served.
+fn evict_stalled(ctx: &WatchdogCtx, me: usize, elapsed_micros: u64) {
+    let sh = &ctx.shared[me];
+    let metrics = &ctx.shards[me].metrics;
+    let inflight = &ctx.shards[me].inflight;
+    let recovery_started = Instant::now();
+    let mut pending: Vec<QueuedRequest> = {
+        let mut w = sh.window.lock().unwrap();
+        // Re-check under the lock: the chunk may have just completed,
+        // or a panic supervisor may have already claimed this
+        // incarnation.
+        if sh.busy_since.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let gen = sh.generation.load(Ordering::SeqCst);
+        if !sh.fence(gen) {
+            return;
+        }
+        sh.busy_since.store(0, Ordering::SeqCst);
+        w.drain(..).collect()
+    };
+    sh.drain_rx(&mut pending);
+    metrics.record_stalled_eviction();
+    eprintln!(
+        "cuconv-watchdog: worker {me} stalled ({} ms in-batch > {} ms budget); \
+         evicting {} unanswered request(s) and respawning",
+        elapsed_micros / 1000,
+        ctx.stall_budget.as_millis(),
+        pending.len()
+    );
+    redistribute(&mut pending, me, &ctx.shards);
+    let Some(r) = replicate_replacement(me, &ctx.respawn) else {
+        release_shard(me, sh, metrics, inflight, &ctx.live);
+        return;
+    };
+    let new_gen = sh.generation.load(Ordering::SeqCst);
+    let builder =
+        std::thread::Builder::new().name(format!("cuconv-worker-{me}-g{new_gen}"));
+    let sh2 = sh.clone();
+    let shards = ctx.shards.clone();
+    let shutdown = ctx.shutdown.clone();
+    let live = ctx.live.clone();
+    let respawn = ctx.respawn.clone();
+    let (classes, policy) = (ctx.classes, ctx.policy);
+    match builder.spawn(move || {
+        supervise_shard(
+            me, sh2, r, new_gen, classes, policy, shards, shutdown, live, respawn,
+        )
+    }) {
+        Ok(handle) => {
+            ctx.extra_workers.lock().unwrap().push(handle);
+            metrics.record_restart(recovery_started.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("cuconv-watchdog: could not spawn replacement for worker {me}: {e}");
+            release_shard(me, sh, metrics, inflight, &ctx.live);
         }
     }
 }
@@ -987,7 +1397,7 @@ fn supervise_shard(
 #[allow(clippy::too_many_arguments)]
 fn unsupervised_shard(
     me: usize,
-    rx: Receiver<QueuedRequest>,
+    shared: Arc<WorkerShared>,
     mut runner: Box<dyn BatchRunner>,
     classes: usize,
     policy: BatchPolicy,
@@ -996,12 +1406,11 @@ fn unsupervised_shard(
     shutdown: Arc<AtomicBool>,
     live: Arc<AtomicUsize>,
 ) {
-    let mut window: Vec<QueuedRequest> = Vec::new();
     let result = catch_unwind(AssertUnwindSafe(|| {
         worker_loop(
-            &rx,
+            &shared,
             runner.as_mut(),
-            &mut window,
+            0,
             classes,
             policy,
             &metrics,
@@ -1016,11 +1425,15 @@ fn unsupervised_shard(
              its pending requests",
             panic_message(&panic)
         );
-        for q in window.drain(..) {
+        let pending: Vec<QueuedRequest> = shared.window.lock().unwrap().drain(..).collect();
+        for q in pending {
             fail_pending(q, "worker panicked (unsupervised)", &metrics, &inflight);
         }
-        while let Ok(q) = rx.try_recv() {
-            fail_pending(q, "worker panicked (unsupervised)", &metrics, &inflight);
+        let rx = shared.rx.lock().unwrap().take();
+        if let Some(rx) = rx {
+            while let Ok(q) = rx.try_recv() {
+                fail_pending(q, "worker panicked (unsupervised)", &metrics, &inflight);
+            }
         }
         resume_unwind(panic);
     }
@@ -1029,92 +1442,138 @@ fn unsupervised_shard(
 /// One worker's serve loop: window its queue, shed expired requests,
 /// order Interactive before Batch, execute greedy sub-batches on the
 /// replicated runner, scatter replies — PR 3's router loop, now one
-/// shard of N with deadline enforcement and priority ordering.
+/// shard of N with deadline enforcement, priority ordering, and a
+/// heartbeat the watchdog reads.
 ///
-/// The `window` is caller-owned and requests leave it **only by being
-/// answered**: a sub-batch stays in the window while the runner
-/// executes it and is drained only afterwards. That ownership rule is
-/// what makes panic recovery lossless — whatever a panic interrupts is
-/// still in the window (or the channel) for the supervisor to requeue.
+/// The window lives in [`WorkerShared`] and requests leave it **only by
+/// being answered or evicted**: a sub-batch stays in the window while
+/// the runner executes it and is drained only afterwards, under the
+/// window lock and a fence check. That ownership rule is what makes
+/// both panic and stall recovery lossless — whatever interrupts the
+/// incarnation, every unanswered request is still in the window (or the
+/// channel) for the evictor to requeue. A fenced incarnation discards
+/// its late completion (counted) and exits without touching the window,
+/// which now belongs to its replacement.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    rx: &Receiver<QueuedRequest>,
+    shared: &WorkerShared,
     runner: &mut dyn BatchRunner,
-    window: &mut Vec<QueuedRequest>,
+    my_gen: u64,
     classes: usize,
     policy: BatchPolicy,
     metrics: &Metrics,
     inflight: &AtomicUsize,
     shutdown: &AtomicBool,
-) {
+) -> LoopExit {
     let sizes = runner.batch_sizes();
     let image_elems = runner.item_in_elems();
 
     loop {
+        if shared.fenced(my_gen) {
+            return LoopExit::Fenced;
+        }
         // Fill the window: block briefly for the first request, then
         // keep draining until the policy closes the window.
-        if window.is_empty() {
-            match rx.recv_timeout(policy.max_delay) {
-                Ok(q) => window.push(q),
-                Err(RecvTimeoutError::Timeout) => {
+        if shared.window.lock().unwrap().is_empty() {
+            match shared.recv(policy.max_delay) {
+                RecvOutcome::Got(q) => shared.window.lock().unwrap().push(q),
+                RecvOutcome::Timeout => {
                     if shutdown.load(Ordering::SeqCst) {
-                        return;
+                        return LoopExit::Shutdown;
                     }
                     continue;
                 }
-                Err(RecvTimeoutError::Disconnected) => return,
+                RecvOutcome::Disconnected => return LoopExit::Disconnected,
             }
         }
-        let window_open = window[0].req.enqueued;
-        while window.len() < policy.max_batch {
+        let window_open = match shared.window.lock().unwrap().first() {
+            Some(q) => q.req.enqueued,
+            // Evicted under us; the loop-top fence check exits.
+            None => continue,
+        };
+        while shared.window.lock().unwrap().len() < policy.max_batch {
             let elapsed = window_open.elapsed();
             if elapsed >= policy.max_delay {
                 break;
             }
-            match rx.recv_timeout(policy.max_delay - elapsed) {
-                Ok(q) => window.push(q),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            match shared.recv(policy.max_delay - elapsed) {
+                RecvOutcome::Got(q) => shared.window.lock().unwrap().push(q),
+                RecvOutcome::Timeout | RecvOutcome::Disconnected => break,
             }
         }
 
-        // Shed requests whose deadline passed while they waited in the
-        // queue: answering them would waste a batch slot on work the
-        // client has already abandoned. Each is answered `Expired` and
-        // counted in its class — never silently dropped.
-        let now = Instant::now();
-        let mut i = 0;
-        while i < window.len() {
-            let dead = window[i].req.deadline.is_some_and(|d| now >= d);
-            if dead {
-                let q = window.remove(i);
-                metrics.record_expired_for(q.req.priority);
-                let _ = q.resp.send(Err(ServeError::Expired));
-                inflight.fetch_sub(1, Ordering::Relaxed);
-            } else {
-                i += 1;
+        {
+            // Shed requests whose deadline passed while they waited in
+            // the queue: answering them would waste a batch slot on
+            // work the client has already abandoned. Each is answered
+            // `Expired` and counted in its class — never silently
+            // dropped.
+            let now = Instant::now();
+            let mut w = shared.window.lock().unwrap();
+            let mut i = 0;
+            while i < w.len() {
+                let dead = w[i].req.deadline.is_some_and(|d| now >= d);
+                if dead {
+                    let q = w.remove(i);
+                    metrics.record_expired_for(q.req.priority);
+                    let _ = q.resp.send(Err(ServeError::Expired));
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                } else {
+                    i += 1;
+                }
             }
-        }
 
-        // Interactive requests run in the front (largest, earliest)
-        // sub-batches; stable, so FIFO holds within each class and
-        // single-class traffic is untouched.
-        order_by_priority(window, |q| q.req.priority);
+            // Interactive requests run in the front (largest, earliest)
+            // sub-batches; stable, so FIFO holds within each class and
+            // single-class traffic is untouched.
+            order_by_priority(w.as_mut_slice(), |q| q.req.priority);
+        }
 
         // Execute the window as greedy sub-batches, largest first.
         let batch_started = Instant::now();
-        for chunk_size in decompose_batches(window.len(), &sizes) {
+        let window_len = shared.window.lock().unwrap().len();
+        for chunk_size in decompose_batches(window_len, &sizes) {
             metrics.record_batch(chunk_size);
             // Gather pixels into one NCHW batch buffer. The chunk stays
             // in the window until answered (see the ownership rule
             // above).
-            let mut batch_input = Vec::with_capacity(chunk_size * image_elems);
-            for q in &window[..chunk_size] {
-                batch_input.extend_from_slice(&q.req.pixels);
-            }
-            match runner.run(chunk_size, batch_input) {
+            let batch_input = {
+                let w = shared.window.lock().unwrap();
+                if shared.fenced(my_gen) || w.len() < chunk_size {
+                    return LoopExit::Fenced;
+                }
+                let mut buf = Vec::with_capacity(chunk_size * image_elems);
+                for q in &w[..chunk_size] {
+                    buf.extend_from_slice(&q.req.pixels);
+                }
+                buf
+            };
+            // Heartbeat: the watchdog measures the stall budget from
+            // here — `run` is the only place a worker can hang while
+            // holding requests.
+            shared.epoch.fetch_add(1, Ordering::Relaxed);
+            shared.busy_since.store(shared.now_micros(), Ordering::SeqCst);
+            let result = runner.run(chunk_size, batch_input);
+            // Claim the chunk under the window lock, where the fence
+            // check and the drain are atomic against a concurrent
+            // eviction. A fenced incarnation's requests were already
+            // requeued elsewhere: answering them here would
+            // double-serve, so the late completion is discarded and
+            // counted instead.
+            let chunk: Vec<QueuedRequest> = {
+                let mut w = shared.window.lock().unwrap();
+                if shared.fenced(my_gen) {
+                    if result.is_ok() {
+                        metrics.record_fenced_discards(chunk_size as u64);
+                    }
+                    return LoopExit::Fenced;
+                }
+                shared.busy_since.store(0, Ordering::SeqCst);
+                w.drain(..chunk_size).collect()
+            };
+            match result {
                 Ok(out) => {
-                    for (i, q) in window.drain(..chunk_size).enumerate() {
+                    for (i, q) in chunk.into_iter().enumerate() {
                         let total = q.req.enqueued.elapsed().as_secs_f64();
                         let queue_s =
                             (batch_started - q.req.enqueued).as_secs_f64().max(0.0);
@@ -1139,7 +1598,7 @@ fn worker_loop(
                     // A runner error is the `failed` class — counted
                     // per request, per class, and answered.
                     let msg = format!("{e}");
-                    for q in window.drain(..chunk_size) {
+                    for q in chunk {
                         metrics.record_failed_for(q.req.priority);
                         let _ = q.resp.send(Err(ServeError::Failed(msg.clone())));
                     }
@@ -1149,8 +1608,8 @@ fn worker_loop(
             inflight.fetch_sub(chunk_size, Ordering::Relaxed);
         }
 
-        if shutdown.load(Ordering::SeqCst) && window.is_empty() {
-            return;
+        if shutdown.load(Ordering::SeqCst) && shared.window.lock().unwrap().is_empty() {
+            return LoopExit::Shutdown;
         }
     }
 }

@@ -99,6 +99,36 @@ impl FaultPlan {
             .collect();
         FaultPlan { faults }
     }
+
+    /// Like [`FaultPlan::random`], but stall durations are drawn from
+    /// `stall_ms` (inclusive range) instead of the fixed 1–20 ms. The
+    /// soak harness uses this to plan stalls *longer than the watchdog
+    /// budget*, so evictions — not just slow batches — are exercised.
+    pub fn random_with_stalls(
+        seed: u64,
+        workers: usize,
+        count: usize,
+        horizon: u64,
+        stall_ms: (u64, u64),
+    ) -> FaultPlan {
+        assert!(workers > 0, "fault plan needs at least one worker");
+        assert!(horizon > 0, "fault plan needs a positive request horizon");
+        let (lo, hi) = stall_ms;
+        assert!(lo >= 1 && hi >= lo, "stall range must be 1 <= lo <= hi");
+        let mut rng = Rng::new(seed);
+        let faults = (0..count)
+            .map(|_| {
+                let worker = rng.below(workers as u64) as usize;
+                let request = rng.below(horizon);
+                if rng.next_f64() < 0.5 {
+                    Fault::Panic { worker, request }
+                } else {
+                    Fault::Stall { worker, request, millis: lo + rng.below(hi - lo + 1) }
+                }
+            })
+            .collect();
+        FaultPlan { faults }
+    }
 }
 
 /// Shared state of one injection campaign: which faults already fired,
@@ -269,6 +299,23 @@ mod tests {
             assert!(f.worker() < 4);
             assert!(f.request() < 100);
         }
+    }
+
+    #[test]
+    fn stall_range_plans_are_deterministic_and_bounded() {
+        let a = FaultPlan::random_with_stalls(0x50A4, 3, 12, 200, (250, 400));
+        let b = FaultPlan::random_with_stalls(0x50A4, 3, 12, 200, (250, 400));
+        assert_eq!(a, b, "same seed must produce the identical plan");
+        let mut stalls = 0;
+        for f in &a.faults {
+            assert!(f.worker() < 3);
+            assert!(f.request() < 200);
+            if let Fault::Stall { millis, .. } = *f {
+                stalls += 1;
+                assert!((250..=400).contains(&millis), "stall {millis}ms outside range");
+            }
+        }
+        assert!(stalls > 0, "a 12-fault plan should draw at least one stall");
     }
 
     #[test]

@@ -126,6 +126,24 @@ impl TokenBucket {
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
+
+    /// Advisory whole-seconds wait until this bucket could admit a
+    /// request of `priority`, from its *current* (already refilled)
+    /// balance: `ceil((need − tokens) / rps)`, clamped to [1, 3600].
+    /// Meant to be read right after a refused take, where the deficit
+    /// is positive by construction; an already-admissible bucket
+    /// reports the 1-second floor.
+    pub fn retry_after_seconds(&self, limit: &RateLimit, priority: Priority) -> u64 {
+        let need = match priority {
+            Priority::Interactive => 1.0,
+            Priority::Batch => 1.0 + limit.batch_reserve,
+        };
+        let deficit = need - self.tokens;
+        if deficit <= 0.0 {
+            return 1;
+        }
+        (deficit / limit.rps).ceil().clamp(1.0, 3600.0) as u64
+    }
 }
 
 /// Thread-safe per-tenant limiter. `None` policy means unlimited — the
@@ -174,19 +192,44 @@ impl TenantLimiter {
         priority: Priority,
         now: Instant,
     ) -> bool {
-        let admitted = match &self.limit {
-            None => true,
+        self.admit_prioritized_hinted_at(tenant, priority, now).is_ok()
+    }
+
+    /// Class-aware admission returning a backoff hint on refusal:
+    /// `Err(seconds)` is the refused bucket's advisory `Retry-After`,
+    /// derived from its refill rate and current deficit.
+    pub fn admit_prioritized_hinted(
+        &self,
+        tenant: &str,
+        priority: Priority,
+    ) -> Result<(), u64> {
+        self.admit_prioritized_hinted_at(tenant, priority, Instant::now())
+    }
+
+    /// Clock-injected core of [`TenantLimiter::admit_prioritized_hinted`].
+    pub fn admit_prioritized_hinted_at(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        now: Instant,
+    ) -> Result<(), u64> {
+        let outcome = match &self.limit {
+            None => Ok(()),
             Some(limit) => {
                 let mut buckets = self.buckets.lock().unwrap();
                 let bucket = buckets
                     .entry(tenant.to_string())
                     .or_insert_with(|| TokenBucket::full(limit, now));
-                bucket.try_take_class(limit, priority, now)
+                if bucket.try_take_class(limit, priority, now) {
+                    Ok(())
+                } else {
+                    Err(bucket.retry_after_seconds(limit, priority))
+                }
             }
         };
-        let slot = if admitted { &self.admitted } else { &self.refused };
+        let slot = if outcome.is_ok() { &self.admitted } else { &self.refused };
         slot[priority.index()].fetch_add(1, Ordering::Relaxed);
-        admitted
+        outcome
     }
 
     /// Requests of `priority` this limiter has admitted.
@@ -392,6 +435,45 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn retry_hint_tracks_refill_deficit() {
+        // 2 rps, burst 1: an empty bucket needs 0.5 s for one token →
+        // hint ceil(0.5) = 1. At 0.25 rps the same deficit needs 4 s.
+        let t0 = Instant::now();
+        let fast = RateLimit::new(2.0, 1.0).unwrap();
+        let mut b = TokenBucket::full(&fast, t0);
+        assert!(b.try_take_at(&fast, t0));
+        assert!(!b.try_take_at(&fast, t0));
+        assert_eq!(b.retry_after_seconds(&fast, Priority::Interactive), 1);
+
+        let slow = RateLimit::new(0.25, 1.0).unwrap();
+        let mut b = TokenBucket::full(&slow, t0);
+        assert!(b.try_take_at(&slow, t0));
+        assert_eq!(b.retry_after_seconds(&slow, Priority::Interactive), 4);
+        // Batch must also cover the reserve, so its hint is never
+        // smaller than Interactive's.
+        let reserved =
+            RateLimit::new(0.5, 4.0).unwrap().with_batch_reserve(2.0).unwrap();
+        let mut b = TokenBucket::full(&reserved, t0);
+        for _ in 0..4 {
+            b.try_take_class(&reserved, Priority::Interactive, t0);
+        }
+        let batch = b.retry_after_seconds(&reserved, Priority::Batch);
+        let interactive = b.retry_after_seconds(&reserved, Priority::Interactive);
+        assert!(batch >= interactive, "batch hint {batch} < interactive {interactive}");
+        assert_eq!(interactive, 2); // deficit 1 token at 0.5 rps
+        assert_eq!(batch, 6); // deficit 3 tokens at 0.5 rps
+
+        // The hinted limiter surfaces the same number through Err.
+        let limiter = TenantLimiter::new(Some(slow));
+        assert!(limiter.admit_prioritized_hinted_at("t", Priority::Interactive, t0).is_ok());
+        assert_eq!(
+            limiter.admit_prioritized_hinted_at("t", Priority::Interactive, t0),
+            Err(4)
+        );
+        assert_eq!(limiter.refused_for(Priority::Interactive), 1);
     }
 
     #[test]

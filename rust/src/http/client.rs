@@ -62,6 +62,28 @@ impl HttpClient {
         body: &str,
         request_id: Option<&str>,
     ) -> Result<(u16, String, Option<String>)> {
+        let (status, body, echoed, _) = self.post_json_full(path, body, request_id)?;
+        Ok((status, body, echoed))
+    }
+
+    /// POST returning the server's `Retry-After` advice (whole seconds)
+    /// alongside the status and body — `None` on responses without the
+    /// header. The retrying load generator reads refusals through this.
+    pub fn post_json_advised(
+        &mut self,
+        path: &str,
+        body: &str,
+    ) -> Result<(u16, String, Option<u64>)> {
+        let (status, body, _, retry_after) = self.post_json_full(path, body, None)?;
+        Ok((status, body, retry_after))
+    }
+
+    fn post_json_full(
+        &mut self,
+        path: &str,
+        body: &str,
+        request_id: Option<&str>,
+    ) -> Result<(u16, String, Option<String>, Option<u64>)> {
         write!(
             self.writer,
             "POST {path} HTTP/1.1\r\nHost: cuconv\r\nContent-Type: application/json\r\n\
@@ -81,11 +103,13 @@ impl HttpClient {
         let (status, len) =
             parse_response_head(&head).map_err(|e| anyhow!("bad response: {e}"))?;
         let echoed = response_request_id(&head);
+        let retry_after = response_retry_after(&head);
         let body = self.reader.read_body(len)?;
         Ok((
             status,
             String::from_utf8(body).context("response body UTF-8")?,
             echoed,
+            retry_after,
         ))
     }
 
@@ -113,6 +137,54 @@ fn response_request_id(head: &str) -> Option<String> {
         }
     }
     None
+}
+
+/// Pull the `Retry-After` header (whole seconds) out of a raw response
+/// head; a malformed value is ignored rather than failing the exchange.
+fn response_retry_after(head: &str) -> Option<u64> {
+    for line in head.lines().skip(1) {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if name.trim().eq_ignore_ascii_case("retry-after") {
+            return value.trim().parse::<u64>().ok();
+        }
+    }
+    None
+}
+
+/// Bounded, jittered client-side retry of refused requests — **off by
+/// default** everywhere; the soak load generator opts in so a refusal
+/// storm during an eviction window turns into delayed completions
+/// instead of a cliff of `rejected`.
+///
+/// On a 429/503 the client waits the server's `Retry-After` advice
+/// (floor 1 s when the header is missing), capped at `max_wait` so a
+/// soak keeps offering load on its own timescale, jittered uniformly
+/// into `[wait/2, wait]` so a thundering herd of refused clients does
+/// not re-arrive in lockstep — then retries, at most `max_retries`
+/// times. The request still counts as offered exactly once; only its
+/// final outcome is accounted.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: usize,
+    /// Upper bound on a single backoff sleep.
+    pub max_wait: Duration,
+}
+
+impl RetryPolicy {
+    /// `max_retries` bounded retries with a 250 ms wait cap — the soak
+    /// loadgen shape.
+    pub fn new(max_retries: usize) -> RetryPolicy {
+        RetryPolicy { max_retries, max_wait: Duration::from_millis(250) }
+    }
+
+    /// The sleep before the next retry, honoring the server's advice
+    /// under this policy's cap, with deterministic jitter drawn from
+    /// `rng`.
+    fn backoff(&self, advised_seconds: Option<u64>, rng: &mut Rng) -> Duration {
+        let advised = Duration::from_secs(advised_seconds.unwrap_or(1).max(1));
+        let wait = advised.min(self.max_wait);
+        wait.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
 }
 
 /// Build a `/v1/infer` request body. Hot fields come first and the
@@ -243,6 +315,12 @@ pub fn run_closed_loop_http(
 /// with probability `batch_fraction` (seeded), carries its class on the
 /// wire, and is accounted into its class's [`LoadReport`]. The driver
 /// behind the chaos bench's shed curves.
+///
+/// `retry` is the opt-in refusal retry: `None` (the default everywhere
+/// but the soak) takes the first answer as the outcome; `Some(policy)`
+/// re-submits a 429/503 after the server-advised, jittered backoff, up
+/// to the policy's bound. A request is offered — and accounted — once
+/// either way.
 #[allow(clippy::too_many_arguments)]
 pub fn run_closed_loop_http_mixed(
     addr: impl ToSocketAddrs + Clone + Send + Sync,
@@ -253,6 +331,7 @@ pub fn run_closed_loop_http_mixed(
     seed: u64,
     deadline_ms: Option<u64>,
     batch_fraction: f64,
+    retry: Option<RetryPolicy>,
 ) -> ClassReport {
     let threads = threads.max(1);
     let started = Instant::now();
@@ -282,21 +361,35 @@ pub fn run_closed_loop_http_mixed(
                             &img,
                         );
                         let req_started = Instant::now();
-                        let result = match client.as_mut() {
-                            Some(c) => c.post_json("/v1/infer", &body),
-                            None => Err(anyhow!("not connected")),
-                        };
-                        let outcome = match result {
-                            Ok((200, _)) => {
-                                Outcome::Completed(req_started.elapsed().as_secs_f64())
-                            }
-                            Ok((429 | 503, _)) => Outcome::Rejected,
-                            Ok((504, _)) => Outcome::Expired,
-                            Ok(_) => Outcome::Failed,
-                            Err(_) => {
-                                client = HttpClient::connect(addr.clone()).ok();
-                                Outcome::Failed
-                            }
+                        let mut attempts = 0usize;
+                        let outcome = loop {
+                            let result = match client.as_mut() {
+                                Some(c) => c.post_json_advised("/v1/infer", &body),
+                                None => Err(anyhow!("not connected")),
+                            };
+                            break match result {
+                                Ok((200, _, _)) => Outcome::Completed(
+                                    req_started.elapsed().as_secs_f64(),
+                                ),
+                                Ok((429 | 503, _, advised)) => {
+                                    if let Some(policy) = retry {
+                                        if attempts < policy.max_retries {
+                                            attempts += 1;
+                                            std::thread::sleep(
+                                                policy.backoff(advised, &mut rng),
+                                            );
+                                            continue;
+                                        }
+                                    }
+                                    Outcome::Rejected
+                                }
+                                Ok((504, _, _)) => Outcome::Expired,
+                                Ok(_) => Outcome::Failed,
+                                Err(_) => {
+                                    client = HttpClient::connect(addr.clone()).ok();
+                                    Outcome::Failed
+                                }
+                            };
                         };
                         outcomes.push((priority, outcome));
                     }
@@ -372,6 +465,37 @@ mod tests {
             .collect();
         for (a, b) in vals.iter().zip(&parsed) {
             assert_eq!(a.to_bits(), b.to_bits(), "{a} round-tripped to {b}");
+        }
+    }
+
+    #[test]
+    fn retry_after_header_is_scanned_case_insensitively() {
+        let head = "HTTP/1.1 429 Too Many Requests\r\nContent-Length: 2\r\n\
+                    retry-after: 7\r\nX-Request-Id: req-1";
+        assert_eq!(response_retry_after(head), Some(7));
+        let no_header = "HTTP/1.1 200 OK\r\nContent-Length: 2";
+        assert_eq!(response_retry_after(no_header), None);
+        // An HTTP-date (or any non-integer) value is ignored, not fatal.
+        let date = "HTTP/1.1 503 x\r\nRetry-After: Fri, 01 Jan 2027 00:00:00 GMT";
+        assert_eq!(response_retry_after(date), None);
+    }
+
+    #[test]
+    fn retry_backoff_honors_advice_under_the_cap() {
+        let policy = RetryPolicy::new(3);
+        let mut rng = Rng::new(42);
+        for advised in [None, Some(0), Some(1), Some(60)] {
+            for _ in 0..50 {
+                let wait = policy.backoff(advised, &mut rng);
+                // Advice is capped at max_wait, jitter stays in
+                // [wait/2, wait], and the floor is half of 250 ms or of
+                // the (clamped) one-second advice — never zero.
+                assert!(wait <= policy.max_wait, "{wait:?} over cap ({advised:?})");
+                assert!(
+                    wait >= policy.max_wait.mul_f64(0.5),
+                    "{wait:?} under jitter floor ({advised:?})"
+                );
+            }
         }
     }
 

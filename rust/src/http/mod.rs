@@ -20,12 +20,19 @@
 //!   (latency quantiles, four-class request accounting per priority
 //!   class, restart counts, SLO buckets).
 //! * `GET /healthz` — honest health: 200 `"ok"` only while every worker
-//!   is live and the pool is not browned out, else 503 `"degraded"`.
+//!   is live and the pool is not browned out, else 503 `"degraded"` —
+//!   except a gracefully draining pool, which stays 200 with
+//!   `"draining"` (healthy, finishing its queue). Watchdog counters
+//!   (`stalled_evictions`, `fenced_discards`) ride both `/healthz` and
+//!   `/metrics`.
 //!
 //! Every response carries an `X-Request-Id` correlation header — the
 //! client's own id echoed back when it sent one, a server-minted
 //! `req-<hex>` otherwise — including error responses and the refusals
-//! written before a request head ever parsed.
+//! written before a request head ever parsed. Refusals that clear on
+//! their own (429/503) also carry a `Retry-After` advice header, and
+//! the client side can opt into a bounded, jittered retry honoring it
+//! ([`client::RetryPolicy`] — off by default).
 //!
 //! Submodule map: [`parser`] (bounded head/body reading + lazy JSON),
 //! [`admission`] (per-tenant token buckets), [`router`] (the pure
@@ -45,7 +52,7 @@ pub mod router;
 pub use admission::{RateLimit, TenantLimiter, TokenBucket};
 pub use client::{
     infer_body, logits_of, run_closed_loop_http, run_closed_loop_http_mixed,
-    wait_healthy, HttpClient,
+    wait_healthy, HttpClient, RetryPolicy,
 };
 pub use listener::{HttpConfig, HttpServer};
 pub use responses::Response;

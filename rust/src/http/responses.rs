@@ -55,6 +55,11 @@ pub struct Response {
     /// listener's pre-parse refusals alike — so a client log line and a
     /// server log line can be joined on it.
     pub request_id: Option<String>,
+    /// Advisory backoff in whole seconds, emitted as a `Retry-After`
+    /// header on 429/503 refusals. Derived from the refusing token
+    /// bucket's refill rate (rate limit) or fixed at 1 s for transient
+    /// dispatch-level refusals (queues full, brown-out, draining).
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
@@ -72,6 +77,7 @@ impl Response {
             body: body.to_string_compact(),
             close: false,
             request_id: None,
+            retry_after: None,
         }
     }
 
@@ -86,6 +92,7 @@ impl Response {
             body: body.to_string_compact(),
             close: false,
             request_id: None,
+            retry_after: None,
         }
     }
 
@@ -97,6 +104,13 @@ impl Response {
     /// Attach the correlation id echoed as `X-Request-Id`.
     pub fn with_request_id(mut self, id: impl Into<String>) -> Response {
         self.request_id = Some(id.into());
+        self
+    }
+
+    /// Attach an advisory `Retry-After: <seconds>` header (clamped to
+    /// at least 1 so a client never busy-loops on a zero hint).
+    pub fn with_retry_after(mut self, seconds: u64) -> Response {
+        self.retry_after = Some(seconds.max(1));
         self
     }
 
@@ -119,6 +133,9 @@ impl Response {
             let clean: String =
                 id.chars().filter(|c| !c.is_control()).collect();
             write!(w, "X-Request-Id: {clean}\r\n")?;
+        }
+        if let Some(seconds) = self.retry_after {
+            write!(w, "Retry-After: {seconds}\r\n")?;
         }
         w.write_all(b"\r\n")?;
         w.write_all(self.body.as_bytes())?;
@@ -171,6 +188,27 @@ mod tests {
         let text = String::from_utf8(wire).unwrap();
         assert!(text.contains("X-Request-Id: aInjected: yes"));
         assert!(!text.contains("\r\nInjected"));
+    }
+
+    #[test]
+    fn retry_after_header_is_emitted_and_clamped() {
+        let mut wire: Vec<u8> = Vec::new();
+        Response::error(429, "over rate limit")
+            .with_retry_after(3)
+            .write_to(&mut wire)
+            .unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        let (head, _) = text.split_once("\r\n\r\n").unwrap();
+        assert!(head.contains("Retry-After: 3"), "hint missing from head: {head}");
+
+        // A zero hint is clamped to 1 so clients never busy-loop.
+        let clamped = Response::error(503, "draining").with_retry_after(0);
+        assert_eq!(clamped.retry_after, Some(1));
+
+        // No hint attached → no header emitted.
+        let mut wire: Vec<u8> = Vec::new();
+        Response::error(429, "over rate limit").write_to(&mut wire).unwrap();
+        assert!(!String::from_utf8(wire).unwrap().contains("Retry-After"));
     }
 
     #[test]

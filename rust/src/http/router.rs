@@ -18,15 +18,25 @@
 //!    `expired` via [`ServerHandle::note_expired_for`] and turned away
 //!    **before its payload is decoded**);
 //! 6. batch/payload validation (400) — only now are pixels
-//!    materialized;
+//!    materialized, and every pixel must be finite (a NaN/Inf payload
+//!    is refused as `invalid` instead of poisoning the net);
 //! 7. dispatch to the shard pool, mapping [`SubmitError`] (including
 //!    brown-out sheds) and [`ServeError`] onto the status/class table
 //!    in [`responses`](super::responses).
 //!
+//! Refusals that will clear on their own carry a `Retry-After` header:
+//! a rate-limit 429's hint comes from the refusing bucket's refill
+//! deficit, while transient dispatch refusals (queues full, brown-out
+//! shed, draining) hint a flat 1 s.
+//!
 //! `GET /healthz` is honest: it answers 200 `"ok"` only while every
 //! worker is live and the pool is not browned out; otherwise 503 with
 //! `"status": "degraded"` and the reason fields, so an external
-//! balancer can drain a limping instance.
+//! balancer can drain a limping instance. Graceful shutdown is the
+//! exception: a pool mid-drain reports 200 with `"status": "draining"`
+//! — the instance is healthy and finishing its queue, and a balancer
+//! should stop *sending* (the `draining` field) without declaring it
+//! dead.
 
 use std::time::{Duration, Instant};
 
@@ -74,18 +84,34 @@ fn healthz(state: &AppState) -> Response {
     let workers = state.handle.workers();
     let live = state.handle.live_workers();
     let browned_out = state.handle.browned_out();
+    let draining = state.handle.draining();
     let degraded = live < workers || browned_out;
+    // A draining pool is *healthy* — it is finishing its queue by
+    // design, not limping — so drain status wins over degradation and
+    // stays non-503. A balancer reads `draining` to stop sending; a
+    // status-only checker keeps seeing 200 until the process exits.
+    let status = if draining {
+        "draining"
+    } else if degraded {
+        "degraded"
+    } else {
+        "ok"
+    };
+    let m = state.handle.metrics();
     let body = Json::obj(vec![
-        ("status", Json::str(if degraded { "degraded" } else { "ok" })),
+        ("status", Json::str(status)),
         ("uptime_seconds", Json::num(state.started.elapsed().as_secs_f64())),
         ("workers", Json::num(workers as f64)),
         ("live_workers", Json::num(live as f64)),
         ("browned_out", Json::Bool(browned_out)),
+        ("draining", Json::Bool(draining)),
+        ("stalled_evictions", Json::num(m.stalled_evictions as f64)),
+        ("fenced_discards", Json::num(m.fenced_discards as f64)),
     ]);
     // 503 on degradation so status-only health checkers (load
     // balancers, the CI smoke) drain the instance without parsing the
     // body.
-    Response::json(if degraded { 503 } else { 200 }, &body)
+    Response::json(if degraded && !draining { 503 } else { 200 }, &body)
 }
 
 fn models(state: &AppState) -> Response {
@@ -112,9 +138,12 @@ fn metrics(state: &AppState) -> Response {
         ("failed", Json::num(s.failed as f64)),
         ("restarts", Json::num(s.restarts as f64)),
         ("restart_max_ms", ms(s.restart_max_seconds)),
+        ("stalled_evictions", Json::num(s.stalled_evictions as f64)),
+        ("fenced_discards", Json::num(s.fenced_discards as f64)),
         ("workers", Json::num(state.handle.workers() as f64)),
         ("live_workers", Json::num(state.handle.live_workers() as f64)),
         ("browned_out", Json::Bool(state.handle.browned_out())),
+        ("draining", Json::Bool(state.handle.draining())),
         (
             "per_class",
             Json::arr(
@@ -222,11 +251,12 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
         },
         None => DEFAULT_TENANT.to_string(),
     };
-    if !state.limiter.admit_prioritized(&tenant, priority) {
+    if let Err(hint) = state.limiter.admit_prioritized_hinted(&tenant, priority) {
         return Response::error(
             429,
             &format!("tenant '{tenant}' over rate limit ({priority} class)"),
-        );
+        )
+        .with_retry_after(hint);
     }
 
     // 5. Deadline — checked before the payload is decoded, so a
@@ -280,6 +310,15 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
             ),
         );
     }
+    if let Some(i) = first_nonfinite(&payload) {
+        // Belt and braces over the parser's own literal checks: no
+        // NaN/Inf pixel may reach the net, where it would poison every
+        // activation it touches and come back as garbage logits.
+        return Response::error(
+            400,
+            &format!("payload element {i} is not finite ({})", payload[i]),
+        );
+    }
 
     // 7. Dispatch each image to the shard pool, then gather replies.
     let mut receivers = Vec::with_capacity(batch);
@@ -294,10 +333,13 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
                 return Response::error(504, "deadline passed at dispatch")
             }
             Err(e @ (SubmitError::AllQueuesFull { .. } | SubmitError::Shed { .. })) => {
-                return Response::error(429, &e.to_string())
+                // Queue pressure and brown-outs clear on the batching
+                // timescale; one second is the honest coarse hint.
+                return Response::error(429, &e.to_string()).with_retry_after(1)
             }
             Err(SubmitError::Shutdown) => {
                 return Response::error(503, "server is shutting down")
+                    .with_retry_after(1)
             }
             Err(SubmitError::BadInput(msg)) => return Response::error(400, &msg),
         }
@@ -343,6 +385,11 @@ fn infer(state: &AppState, body: &[u8]) -> Response {
     ]))
 }
 
+/// Index of the first non-finite (NaN or ±Inf) element, if any.
+fn first_nonfinite(payload: &[f32]) -> Option<usize> {
+    payload.iter().position(|v| !v.is_finite())
+}
+
 fn argmax(logits: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in logits.iter().enumerate() {
@@ -362,5 +409,14 @@ mod tests {
         assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
         assert_eq!(argmax(&[3.0]), 0);
         assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn nonfinite_pixels_are_located() {
+        assert_eq!(first_nonfinite(&[0.0, 1.5, -2.0]), None);
+        assert_eq!(first_nonfinite(&[0.0, f32::NAN, f32::NAN]), Some(1));
+        assert_eq!(first_nonfinite(&[f32::INFINITY]), Some(0));
+        assert_eq!(first_nonfinite(&[1.0, f32::NEG_INFINITY]), Some(1));
+        assert_eq!(first_nonfinite(&[]), None);
     }
 }

@@ -27,13 +27,22 @@
 //! cuconv serve-bench [--requests N] [--workers W] [--queue-depth D]
 //!                    [--round-robin] [--conv HW-N-K-M-C | --net NETWORK]
 //!                    [--tune-cache PATH]
+//!                    [--soak-seconds N [--seed S]]
 //!                                       end-to-end serving benchmark
 //!                                       (W worker shards, D-deep
-//!                                       bounded queue per shard)
+//!                                       bounded queue per shard);
+//!                                       --soak-seconds runs a seeded
+//!                                       wall-clock chaos soak instead:
+//!                                       round after round of fresh
+//!                                       supervised pools under panics +
+//!                                       watchdog-evictable stalls,
+//!                                       asserting zero-lost accounting
+//!                                       and full-strength recovery
+//!                                       every round
 //! cuconv serve-http <network> [--port P] [--workers W] [--queue-depth D]
 //!                   [--rate-limit RPS] [--burst B] [--deadline-ms MS]
 //!                   [--drive N] [--clients C] [--batch-share F]
-//!                   [--tune-cache PATH]
+//!                   [--retry-max R] [--tune-cache PATH]
 //!                   [--fault-panic W:K] [--fault-stall W:K:MS]
 //!                                       HTTP/JSON front door over the
 //!                                       shard pool; --drive N runs a
@@ -42,7 +51,10 @@
 //!                                       --fault-* inject deterministic
 //!                                       worker faults (panic/stall) to
 //!                                       exercise supervision; with
-//!                                       --drive, recovery is asserted
+//!                                       --drive, recovery is asserted;
+//!                                       --retry-max lets the driver
+//!                                       retry 429/503 refusals up to R
+//!                                       times, honoring Retry-After
 //! cuconv validate                       validate AOT artifacts end to end
 //! ```
 //!
@@ -70,7 +82,8 @@ use cuconv::coordinator::{
 };
 use cuconv::http::{
     logits_of, run_closed_loop_http, run_closed_loop_http_mixed, wait_healthy,
-    AppState, HttpClient, HttpConfig, HttpServer, RateLimit, TenantLimiter,
+    AppState, HttpClient, HttpConfig, HttpServer, RateLimit, RetryPolicy,
+    TenantLimiter,
 };
 use cuconv::report::{self, figures, tables};
 use cuconv::tunecache::TuneCache;
@@ -288,7 +301,14 @@ fn run(args: &[String]) -> Result<()> {
                 ..PoolConfig::default()
             };
             let layout = parse_layout(args)?;
-            if let Some(label) = opt(args, "--conv") {
+            if let Some(seconds) = opt(args, "--soak-seconds") {
+                let seconds: u64 = seconds.parse()?;
+                let seed: u64 = opt(args, "--seed")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(0x50AC);
+                serve_soak(seconds, workers.max(3), seed)?;
+            } else if let Some(label) = opt(args, "--conv") {
                 let spec = ConvSpec::from_table_label(label)
                     .ok_or_else(|| anyhow!("bad config label '{label}'"))?;
                 serve_bench_conv(spec, requests, pool, queue_depth, layout)?;
@@ -331,6 +351,16 @@ fn run(args: &[String]) -> Result<()> {
                  choices and write a persistent tune cache; replay it with \
                  --tune-cache PATH on forward/serve-bench/serve-http \
                  (forward also takes --assert-warm)"
+            );
+            println!(
+                "  serve-bench --soak-seconds N [--seed S] [--workers W]  seeded \
+                 wall-clock chaos soak: fresh supervised pools under panics + \
+                 watchdog-evictable stalls, asserting zero-lost accounting and \
+                 full-strength recovery every round"
+            );
+            println!(
+                "  serve-http ... [--retry-max R]  let the --drive loadgen retry \
+                 429/503 refusals up to R times, honoring Retry-After advice"
             );
         }
     }
@@ -725,6 +755,148 @@ fn drive_and_report(server: &Server, requests: usize, threads: usize) -> Result<
     Ok(())
 }
 
+/// The `serve-bench --soak-seconds N` mode: a seeded wall-clock chaos
+/// soak. Each round starts a fresh supervised pool over the cpuref conv
+/// runner behind a deterministic mixed panic + stall campaign — every
+/// planned stall is 5–9x the 40 ms watchdog budget, so rounds exercise
+/// *eviction*, not just slow batches — drives a mixed-priority closed
+/// loop, and asserts the serving contracts before the next round:
+/// per-class accounting closes exactly on both sides of the API,
+/// nothing is lost, and the pool ends at full strength. The wall clock,
+/// not a round count, ends the soak; totals are printed and the exit
+/// code surfaces any violated contract.
+fn serve_soak(seconds: u64, workers: usize, seed: u64) -> Result<()> {
+    use cuconv::coordinator::{
+        run_closed_loop_mixed, ConvBackendRunner, Priority, PRIORITY_COUNT,
+    };
+    use std::time::Instant;
+
+    const STALL_BUDGET: Duration = Duration::from_millis(40);
+    let spec = ConvSpec::paper(8, 1, 3, 4, 4);
+    let runner = || {
+        ConvBackendRunner::new(Box::new(CpuRefBackend::new()), spec, None, &[1, 2, 4])
+            .expect("plan cpuref conv runner")
+    };
+    println!(
+        "soak: {seconds}s wall budget, {workers} workers, stall budget \
+         {STALL_BUDGET:?}, seed {seed:#x}"
+    );
+    let wall_deadline = Instant::now() + Duration::from_secs(seconds);
+    let started = Instant::now();
+    let mut rounds = 0u64;
+    let mut offered = [0u64; PRIORITY_COUNT];
+    let mut completed = [0u64; PRIORITY_COUNT];
+    let mut rejected = [0u64; PRIORITY_COUNT];
+    let mut failed = [0u64; PRIORITY_COUNT];
+    let mut expired = [0u64; PRIORITY_COUNT];
+    let (mut evictions, mut discards, mut restarts) = (0u64, 0u64, 0u64);
+
+    while Instant::now() < wall_deadline || rounds == 0 {
+        let round_seed = seed ^ rounds.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let requests = 64 + ((round_seed >> 4) % 4) as usize * 32; // 64..160
+        let threads = 4 + ((round_seed >> 16) % 3) as usize; // 4..6
+        let fault_count = 2 + ((round_seed >> 24) % 3) as usize; // 2..4
+        let mut plan = FaultPlan::random_with_stalls(
+            round_seed,
+            workers,
+            fault_count,
+            (requests / 2) as u64,
+            (200, 350),
+        );
+        // At least one evictable stall per round, even when the random
+        // draw is all panics.
+        plan.faults.push(Fault::Stall { worker: 0, request: 2, millis: 250 });
+
+        let faulty = FaultInjector::new(Box::new(runner()), plan);
+        let mut server = ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig { workers, stall_budget: STALL_BUDGET, ..PoolConfig::default() })
+            .start()?;
+        let report = run_closed_loop_mixed(
+            &server.handle(),
+            requests,
+            threads,
+            round_seed,
+            None,
+            0.3,
+        );
+        let m = server.metrics();
+
+        // Round contracts.
+        for p in Priority::ALL {
+            let r = report.class(p);
+            let snap = m
+                .per_class
+                .iter()
+                .find(|c| c.priority == p)
+                .expect("snapshot covers every class");
+            if r.offered() as u64 != snap.offered() {
+                bail!(
+                    "soak round {rounds}/{p}: client offered {} but the server \
+                     accounted {} — request(s) lost",
+                    r.offered(),
+                    snap.offered()
+                );
+            }
+        }
+        if server.live_workers() != server.workers() {
+            bail!(
+                "soak round {rounds}: pool ended at {}/{} workers",
+                server.live_workers(),
+                server.workers()
+            );
+        }
+        if report.completed() == 0 {
+            bail!("soak round {rounds}: no request completed");
+        }
+        for (i, &p) in Priority::ALL.iter().enumerate() {
+            let r = report.class(p);
+            offered[i] += r.offered() as u64;
+            completed[i] += r.completed as u64;
+            rejected[i] += r.rejected as u64;
+            failed[i] += r.failed as u64;
+            expired[i] += r.expired as u64;
+        }
+        evictions += m.stalled_evictions;
+        discards += m.fenced_discards;
+        restarts += m.restarts;
+        server.shutdown();
+        rounds += 1;
+        println!(
+            "round {rounds}: {requests} requests x {threads} threads, \
+             {} eviction(s), {} restart(s), {} fenced discard(s)",
+            m.stalled_evictions, m.restarts, m.fenced_discards
+        );
+    }
+
+    println!(
+        "soak done: {rounds} round(s) in {:.1}s — offered={} completed={} \
+         rejected={} failed={} expired={} | evictions={evictions} \
+         restarts={restarts} fenced_discards={discards}",
+        started.elapsed().as_secs_f64(),
+        offered.iter().sum::<u64>(),
+        completed.iter().sum::<u64>(),
+        rejected.iter().sum::<u64>(),
+        failed.iter().sum::<u64>(),
+        expired.iter().sum::<u64>(),
+    );
+    if evictions < 1 {
+        bail!("every soak round plans an evictable stall, yet nothing was evicted");
+    }
+    if restarts < evictions {
+        bail!("{restarts} restart(s) < {evictions} eviction(s): a replacement is missing");
+    }
+    let total_offered: u64 = offered.iter().sum();
+    let total_accounted: u64 = completed.iter().sum::<u64>()
+        + rejected.iter().sum::<u64>()
+        + failed.iter().sum::<u64>()
+        + expired.iter().sum::<u64>();
+    if total_offered != total_accounted {
+        bail!("accounting does not close: offered {total_offered} != accounted {total_accounted}");
+    }
+    println!("soak contracts hold: zero lost, accounting closed, full-strength recovery");
+    Ok(())
+}
+
 /// The `serve-http` command: compile a network, start the shard pool,
 /// put the HTTP/JSON front door in front of it, and either serve until
 /// killed or (`--drive N`) run a self-contained socket smoke + closed
@@ -762,6 +934,12 @@ fn serve_http(args: &[String]) -> Result<()> {
     if !(0.0..=1.0).contains(&batch_share) {
         bail!("--batch-share must be in [0, 1], got {batch_share}");
     }
+    // Opt-in client retry: refused requests (429/503) are re-submitted
+    // after the server's jittered Retry-After advice, at most N times.
+    let retry: Option<RetryPolicy> = opt(args, "--retry-max")
+        .map(|v| v.parse::<usize>())
+        .transpose()?
+        .map(RetryPolicy::new);
 
     // Deterministic fault injection: worker W misbehaves on the K-th
     // item it serves. The supervised pool must recover — with --drive,
@@ -931,7 +1109,9 @@ fn serve_http(args: &[String]) -> Result<()> {
     );
 
     println!("driving {requests} requests from {clients} socket client(s) ...");
-    let failed = if batch_share > 0.0 {
+    // The mixed driver is also the retrying driver; a --retry-max run
+    // with no batch share still goes through it (at fraction 0).
+    let failed = if batch_share > 0.0 || retry.is_some() {
         let cr = run_closed_loop_http_mixed(
             addr,
             &model,
@@ -941,6 +1121,7 @@ fn serve_http(args: &[String]) -> Result<()> {
             0xD22,
             None,
             batch_share,
+            retry,
         );
         for (name, r) in [("interactive", &cr.interactive), ("batch", &cr.batch)] {
             println!(

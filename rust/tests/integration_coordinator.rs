@@ -329,7 +329,7 @@ mod fault_tolerance {
     use anyhow::Result;
     use cuconv::coordinator::{
         run_closed_loop_mixed, BatchOutput, BatchRunner, ConvBackendRunner, Fault,
-        FaultInjector, FaultPlan, Priority, Server, ServerHandle,
+        FaultInjector, FaultPlan, Priority, Server, ServerHandle, SubmitError,
     };
     use cuconv::util::prop::{assert_prop, Config, PairOf, UsizeIn};
 
@@ -563,6 +563,205 @@ mod fault_tolerance {
             }
             Ok(())
         });
+    }
+
+    /// Poll `probe` every 2 ms until it holds or `timeout` passes.
+    fn wait_until(timeout: Duration, mut probe: impl FnMut() -> bool) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if probe() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        probe()
+    }
+
+    #[test]
+    fn stalled_worker_is_evicted_fenced_and_pool_recovers() {
+        // A worker hung 8x past the stall budget is a stall to evict,
+        // not a slow batch: the watchdog fences it, requeues its work,
+        // and respawns a replacement; its late completion is discarded
+        // and counted, never double-served.
+        let plan =
+            FaultPlan::new(vec![Fault::Stall { worker: 0, request: 0, millis: 400 }]);
+        let faulty = FaultInjector::new(Box::new(faultable_runner()), plan);
+        let server = ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig {
+                workers: 2,
+                selection: ShardSelection::RoundRobin,
+                stall_budget: Duration::from_millis(50),
+                ..PoolConfig::default()
+            })
+            .start()
+            .unwrap();
+
+        let report =
+            run_closed_loop_mixed(&server.handle(), 24, 4, 0xE71C_7ED, None, 0.5);
+        let m = server.metrics();
+
+        assert!(
+            m.stalled_evictions >= 1,
+            "the watchdog must evict the hung worker ({} evictions)",
+            m.stalled_evictions
+        );
+        assert!(
+            m.restarts >= m.stalled_evictions,
+            "every eviction must respawn a replacement"
+        );
+        assert_eq!(
+            report.completed(),
+            24,
+            "the stalled request must be requeued and answered, not dropped"
+        );
+        assert_zero_lost(&report, &m);
+        assert_eq!(
+            server.live_workers(),
+            server.workers(),
+            "the pool must be back to full strength after the eviction"
+        );
+
+        // The hung incarnation wakes at ~400 ms and hits the fence: its
+        // late completion must be discarded and counted.
+        assert!(
+            wait_until(Duration::from_secs(5), || {
+                server.metrics().fenced_discards >= 1
+            }),
+            "the evicted worker's late completion was never fenced off"
+        );
+
+        // Post-eviction numerics: bit-identical to a never-faulted pool.
+        let reference = ServerBuilder::runner(Box::new(faultable_runner()))
+            .pool(PoolConfig::with_workers(1))
+            .start()
+            .unwrap();
+        for seed in [17u64, 18] {
+            assert_eq!(
+                probe_bits(&server.handle(), seed),
+                probe_bits(&reference.handle(), seed),
+                "seed {seed}: recovered pool diverged from the unfaulted reference"
+            );
+        }
+    }
+
+    #[test]
+    fn short_stall_under_budget_is_not_evicted() {
+        // A batch merely slower than usual must ride out: no eviction,
+        // no restart, no fenced discard.
+        let plan =
+            FaultPlan::new(vec![Fault::Stall { worker: 0, request: 1, millis: 40 }]);
+        let faulty = FaultInjector::new(Box::new(faultable_runner()), plan);
+        let server = ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig {
+                workers: 2,
+                stall_budget: Duration::from_millis(500),
+                ..PoolConfig::default()
+            })
+            .start()
+            .unwrap();
+        let report =
+            run_closed_loop_mixed(&server.handle(), 24, 4, 0x510_57A1, None, 0.5);
+        let m = server.metrics();
+        assert_eq!(m.stalled_evictions, 0, "a 40 ms stall is under the 500 ms budget");
+        assert_eq!(m.restarts, 0, "nothing to respawn");
+        assert_eq!(m.fenced_discards, 0, "nothing was fenced");
+        assert_eq!(report.completed(), 24);
+        assert_zero_lost(&report, &m);
+    }
+
+    #[test]
+    fn shutdown_during_stall_is_bounded_and_counts_the_hung_join() {
+        // Drain with a worker hung past every budget: shutdown must
+        // return within drain budget + join grace — never wait
+        // unboundedly — and surface the abandoned join in the count.
+        let plan =
+            FaultPlan::new(vec![Fault::Stall { worker: 0, request: 0, millis: 2_000 }]);
+        let faulty = FaultInjector::new(Box::new(faultable_runner()), plan);
+        let mut server = ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig {
+                workers: 1,
+                drain_budget: Duration::from_millis(100),
+                ..PoolConfig::default()
+            })
+            .start()
+            .unwrap();
+        let h = server.handle();
+
+        // Park one request on the worker; the injected stall hangs it
+        // for 2 s — well past the 100 ms drain budget and the 1 s join
+        // grace, but under the default 5 s stall budget (no eviction:
+        // this is the drain path, not the watchdog path).
+        let elems = h.image_elems();
+        let probe = std::thread::spawn(move || h.infer(vec![0.1f32; elems]));
+        assert!(
+            wait_until(Duration::from_secs(2), || {
+                server.handle().aggregate_inflight() > 0
+            }),
+            "the probe request never reached the worker"
+        );
+
+        let started = std::time::Instant::now();
+        server.shutdown();
+        let elapsed = started.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(3),
+            "shutdown took {elapsed:?} — it must be bounded, not wait out a 2 s hang"
+        );
+        assert_eq!(
+            server.abandoned_joins(),
+            1,
+            "the hung worker's join must be counted as abandoned, not waited on"
+        );
+        // The detached thread wakes at ~2 s and exits on its own; the
+        // probe's reply (whatever it is) must arrive rather than hang.
+        let _ = probe.join().expect("probe thread");
+    }
+
+    #[test]
+    fn draining_rejects_new_submissions() {
+        // While the drain window is open (admission closed, queued work
+        // finishing), new submissions must get `SubmitError::Shutdown`
+        // — and be counted rejected — not sneak into the pool.
+        let plan =
+            FaultPlan::new(vec![Fault::Stall { worker: 0, request: 0, millis: 600 }]);
+        let faulty = FaultInjector::new(Box::new(faultable_runner()), plan);
+        let mut server = ServerBuilder::runner(Box::new(faulty))
+            .pool(PoolConfig {
+                workers: 1,
+                drain_budget: Duration::from_millis(400),
+                ..PoolConfig::default()
+            })
+            .start()
+            .unwrap();
+        let h = server.handle();
+        let elems = h.image_elems();
+        let probe_h = server.handle();
+        let probe = std::thread::spawn(move || probe_h.infer(vec![0.2f32; elems]));
+        assert!(
+            wait_until(Duration::from_secs(2), || h.aggregate_inflight() > 0),
+            "the probe request never reached the worker"
+        );
+
+        // Submit from a side thread the moment draining flips on; the
+        // 600 ms stall holds the drain window open past the check.
+        let checker_h = server.handle();
+        let checker = std::thread::spawn(move || {
+            if !wait_until(Duration::from_secs(2), || checker_h.draining()) {
+                return Err("draining never became visible".to_string());
+            }
+            let elems = checker_h.image_elems();
+            match checker_h.submit_request(vec![0.3f32; elems], None) {
+                Err(SubmitError::Shutdown) => Ok(()),
+                other => Err(format!(
+                    "expected Err(Shutdown) during drain, got {:?}",
+                    other.map(|_| "Ok(receiver)")
+                )),
+            }
+        });
+        server.shutdown();
+        checker.join().expect("checker thread").unwrap();
+        let _ = probe.join().expect("probe thread");
+        assert!(server.handle().draining(), "draining stays visible after shutdown");
     }
 }
 

@@ -473,3 +473,118 @@ fn oversized_body_is_413_and_server_survives() {
     let (status, _) = c2.get("/healthz").expect("fresh connection");
     assert_eq!(status, 200);
 }
+
+/// A non-finite pixel is refused with 400 class "invalid" *naming the
+/// offending element*, before any worker sees it. JSON cannot spell
+/// `NaN`, so the wire-level vehicle is an overflowing literal (`1e999`
+/// parses to +Inf) — the NaN case itself is covered by the router's
+/// unit test on the same check.
+#[test]
+fn nonfinite_payload_is_400_invalid_and_never_dispatched() {
+    let graph = tiny_graph();
+    let fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let mut c = fd.client();
+
+    let mut parts = vec!["0.5".to_string(); fd.image_elems];
+    parts[3] = "1e999".to_string(); // +Inf after parsing
+    let body = format!(
+        r#"{{"model": "{}", "payload": [{}]}}"#,
+        fd.model,
+        parts.join(",")
+    );
+    let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");
+    assert_eq!(status, 400, "an infinite pixel must be refused: {resp}");
+    assert_eq!(class_of(&resp), "invalid");
+    assert!(
+        resp.contains("finite") && resp.contains("element 3"),
+        "the error must say which element is not finite: {resp}"
+    );
+
+    parts[3] = "-1e999".to_string(); // -Inf too
+    let body = format!(
+        r#"{{"model": "{}", "payload": [{}]}}"#,
+        fd.model,
+        parts.join(",")
+    );
+    let (status, resp) = c.post_json("/v1/infer", &body).expect("exchange");
+    assert_eq!(status, 400);
+    assert_eq!(class_of(&resp), "invalid");
+
+    assert_eq!(
+        fd.server.metrics().requests,
+        0,
+        "a non-finite payload must never reach a worker"
+    );
+
+    // Finite payloads on the same connection still serve.
+    let img = fd.rand_image(14);
+    let ok = infer_body(&fd.model, 1, None, None, None, &img);
+    let (status, _) = c.post_json("/v1/infer", &ok).expect("valid after garbage");
+    assert_eq!(status, 200);
+}
+
+/// A 429 refusal carries `Retry-After` advice derived from the bucket's
+/// actual refill deficit — parseable by the client into whole seconds —
+/// and the advised wait is at least one second (clamped, never zero).
+#[test]
+fn rate_limit_429_carries_retry_after_advice() {
+    let graph = tiny_graph();
+    // One token, refilling at 0.5 rps: the second request must wait
+    // ~2 s for a whole token, so the advice is ceil(2) = 2.
+    let limit = RateLimit::new(0.5, 1.0).unwrap();
+    let fd =
+        FrontDoor::start(&graph, &[1, 2], Some(limit), None, HttpConfig::default());
+    let img = fd.rand_image(15);
+    let mut c = fd.client();
+
+    let body = infer_body(&fd.model, 1, None, Some("team-a"), None, &img);
+    let (status, _, advised) =
+        c.post_json_advised("/v1/infer", &body).expect("first");
+    assert_eq!(status, 200);
+    assert_eq!(advised, None, "success responses carry no Retry-After");
+
+    let (status, resp, advised) =
+        c.post_json_advised("/v1/infer", &body).expect("second");
+    assert_eq!(status, 429, "the bucket is empty: {resp}");
+    assert_eq!(class_of(&resp), "rejected");
+    let advised = advised.expect("429 must carry Retry-After advice");
+    assert!(
+        (1..=3).contains(&advised),
+        "advice must track the ~2 s refill deficit, got {advised}"
+    );
+}
+
+/// The watchdog counters and the draining flag ride both observability
+/// endpoints, and a drained pool reports `draining` as a *healthy*
+/// (non-503) state — a balancer reads the flag, a status-only checker
+/// keeps seeing 200.
+#[test]
+fn healthz_and_metrics_surface_watchdog_counters_and_draining() {
+    let graph = tiny_graph();
+    let mut fd = FrontDoor::start(&graph, &[1, 2], None, None, HttpConfig::default());
+    let mut c = fd.client();
+
+    let (status, body) = c.get("/healthz").expect("healthz");
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(v.get("draining").unwrap().as_bool().unwrap(), false);
+    assert_eq!(v.get("stalled_evictions").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("fenced_discards").unwrap().as_usize().unwrap(), 0);
+
+    let (status, body) = c.get("/metrics").expect("metrics");
+    assert_eq!(status, 200);
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("stalled_evictions").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("fenced_discards").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("draining").unwrap().as_bool().unwrap(), false);
+
+    // Drain the pool (idle: completes immediately); health must flip to
+    // "draining" while staying 200 — draining is not degradation.
+    fd.server.shutdown();
+    let (status, body) = c.get("/healthz").expect("healthz while draining");
+    assert_eq!(status, 200, "draining is a healthy state, not an error: {body}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "draining");
+    assert_eq!(v.get("draining").unwrap().as_bool().unwrap(), true);
+}

@@ -283,12 +283,101 @@ def nonneg_number(path: str, row: dict, key: str, where: str) -> None:
         problem(path, f"{where}: '{key}' is {v!r}, expected a finite number >= 0")
 
 
+def check_watchdog_scenario(path: str, s: dict, where: str) -> None:
+    """Shared checks for the two watchdog scenarios (``stall-eviction``
+    and ``soak``): the stall budget is a real duration, at least one
+    hung worker was actually evicted, every eviction respawned a
+    replacement, and the fenced-discard counter is a sane count.
+    ``stall-eviction`` additionally bounds the measured eviction
+    latency: at or after the budget (the watchdog must not fire early)
+    but within 50x of it (later than that and the 'detection' was just
+    the stall ending on its own). ``soak`` additionally requires at
+    least one completed round and a positive measured wall-clock."""
+    finite_positive(path, s, "stall_budget_ms", where)
+    budget = s.get("stall_budget_ms")
+    evictions = s.get("stalled_evictions")
+    if not isinstance(evictions, int) or isinstance(evictions, bool) or evictions < 1:
+        problem(
+            path,
+            f"{where}: 'stalled_evictions' is {evictions!r} — the watchdog "
+            "never evicted a hung worker",
+        )
+    restarts = s.get("restarts")
+    if (
+        isinstance(evictions, int)
+        and isinstance(restarts, int)
+        and restarts < evictions
+    ):
+        problem(
+            path,
+            f"{where}: {restarts} restart(s) < {evictions} eviction(s) — "
+            "an evicted worker was never replaced",
+        )
+    nonneg_count(path, s, "fenced_discards", where)
+    if s.get("scenario") == "stall-eviction":
+        finite_positive(path, s, "eviction_latency_ms", where)
+        lat = s.get("eviction_latency_ms")
+        if (
+            isinstance(lat, (int, float))
+            and isinstance(budget, (int, float))
+            and not isinstance(lat, bool)
+            and not isinstance(budget, bool)
+            and math.isfinite(lat)
+            and math.isfinite(budget)
+            and budget > 0
+        ):
+            if lat < budget:
+                problem(
+                    path,
+                    f"{where}: eviction_latency_ms {lat!r} precedes the "
+                    f"stall budget {budget!r} — the watchdog fired early",
+                )
+            elif lat > 50 * budget:
+                problem(
+                    path,
+                    f"{where}: eviction_latency_ms {lat!r} is over 50x the "
+                    f"stall budget {budget!r} — not a plausible detection",
+                )
+        discards = s.get("fenced_discards")
+        requests = s.get("requests")
+        if (
+            isinstance(discards, int)
+            and isinstance(requests, int)
+            and discards > requests
+        ):
+            problem(
+                path,
+                f"{where}: fenced_discards {discards} > requests {requests}",
+            )
+        if isinstance(discards, int) and discards < 1:
+            problem(
+                path,
+                f"{where}: 'fenced_discards' is 0 — the evicted worker's "
+                "late completion was never fenced off",
+            )
+    if s.get("scenario") == "soak":
+        rounds = s.get("rounds")
+        if not isinstance(rounds, int) or isinstance(rounds, bool) or rounds < 1:
+            problem(
+                path,
+                f"{where}: 'rounds' is {rounds!r}, expected a count >= 1",
+            )
+        finite_positive(path, s, "soak_seconds", where)
+
+
 def check_chaos(path: str, doc: dict) -> None:
     """The chaos contract: every scenario accounts every request in
     exactly one of the four classes per priority with zero lost, panic
     recovery actually happened somewhere with a finite recovery time,
     every pool ends restored, and the recovered pool's outputs are
-    bit-identical to the unfaulted reference."""
+    bit-identical to the unfaulted reference.
+
+    Two scenarios are *required by name*: ``stall-eviction`` (the
+    watchdog evicted a hung worker inside a plausible latency window —
+    at or after the stall budget, but not absurdly later — with a
+    replacement respawned per eviction and the late completion fenced
+    off) and ``soak`` (a wall-clock loop of seeded chaos rounds whose
+    accumulated accounting still closes exactly)."""
     classes = ("completed", "rejected", "failed", "expired")
     priorities = {"interactive", "batch"}
     scenarios = non_empty_rows(path, doc, "scenarios")
@@ -384,11 +473,20 @@ def check_chaos(path: str, doc: dict) -> None:
                     off, rej = p.get(f"{cls}_offered"), p.get(f"{cls}_rejected")
                     if isinstance(off, int) and isinstance(rej, int) and rej > off:
                         problem(path, f"{pw}: {cls} rejected {rej} > offered {off}")
+        if s.get("scenario") in ("stall-eviction", "soak"):
+            check_watchdog_scenario(path, s, where)
     if scenarios and not any_restart:
         problem(
             path,
             "no scenario recorded a restart — panic recovery was never exercised",
         )
+    for required in ("stall-eviction", "soak"):
+        if scenarios and required not in names:
+            problem(
+                path,
+                f"no '{required}' scenario — the watchdog contract was "
+                "never exercised",
+            )
     if doc.get("post_recovery_bit_identical") is not True:
         problem(
             path,

@@ -103,6 +103,44 @@ def mutations() -> list[tuple[str, object, str]]:
     def negative_count(d):
         d["scenarios"][2]["classes"][1]["rejected"] = -3
 
+    # Watchdog scenarios: fixture index 3 is stall-eviction, 4 is soak.
+    def no_eviction(d):
+        d["scenarios"][3]["stalled_evictions"] = 0
+
+    def eviction_before_budget(d):
+        d["scenarios"][3]["eviction_latency_ms"] = 10
+
+    def eviction_too_slow(d):
+        d["scenarios"][3]["eviction_latency_ms"] = 2500
+
+    def stall_budget_null(d):
+        # The JSON writer emits null for NaN/Inf — must be rejected.
+        d["scenarios"][3]["stall_budget_ms"] = None
+
+    def fenced_negative(d):
+        d["scenarios"][3]["fenced_discards"] = -1
+
+    def fenced_zero(d):
+        d["scenarios"][3]["fenced_discards"] = 0
+
+    def fenced_exceeds_requests(d):
+        d["scenarios"][3]["fenced_discards"] = 999
+
+    def restarts_below_evictions(d):
+        d["scenarios"][4]["restarts"] = 2
+
+    def missing_eviction_scenario(d):
+        del d["scenarios"][3]
+
+    def missing_soak_scenario(d):
+        del d["scenarios"][4]
+
+    def soak_rounds_zero(d):
+        d["scenarios"][4]["rounds"] = 0
+
+    def soak_wall_clock_zero(d):
+        d["scenarios"][4]["soak_seconds"] = 0
+
     return [
         ("wrong bench tag", wrong_tag, "unknown bench tag"),
         ("scenario-level lost", scenario_lost, "zero-lost"),
@@ -118,6 +156,26 @@ def mutations() -> list[tuple[str, object, str]]:
         ("empty scenario list", no_scenarios, "missing or empty"),
         ("duplicate scenario names", duplicate_scenarios, "duplicate"),
         ("negative count", negative_count, "count >= 0"),
+        ("hung worker never evicted", no_eviction, "never evicted"),
+        ("eviction before the budget", eviction_before_budget, "fired early"),
+        ("eviction implausibly slow", eviction_too_slow, "50x"),
+        ("stall budget is null", stall_budget_null, "stall_budget_ms"),
+        ("negative fenced discards", fenced_negative, "count >= 0"),
+        ("late completion never fenced", fenced_zero, "never fenced"),
+        ("discards exceed requests", fenced_exceeds_requests, "> requests"),
+        (
+            "eviction without replacement",
+            restarts_below_evictions,
+            "never replaced",
+        ),
+        (
+            "stall-eviction scenario missing",
+            missing_eviction_scenario,
+            "no 'stall-eviction' scenario",
+        ),
+        ("soak scenario missing", missing_soak_scenario, "no 'soak' scenario"),
+        ("soak with zero rounds", soak_rounds_zero, "'rounds'"),
+        ("soak wall clock is zero", soak_wall_clock_zero, "soak_seconds"),
     ]
 
 
